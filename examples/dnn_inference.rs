@@ -1,0 +1,111 @@
+//! DNN inference on the MaxEVA stack, two ways:
+//!
+//! 1. **Real numerics** — run a 3-layer MLP forward pass through the AOT
+//!    `mlp_fp32` artifact (every GEMM inside is the L1 Pallas tile
+//!    kernel) and verify against a host reference.
+//! 2. **Device-time estimate** — the paper's §V-B4 estimate: the CHARM
+//!    MLP throughput on the 13×4×6 design vs the CHARM baseline.
+//!
+//!     make artifacts && cargo run --release --example dnn_inference
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::DesignConfig;
+use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::report::evaluate::evaluate_config;
+use maxeva::report::paper;
+use maxeva::runtime::{default_artifacts_dir, Runtime};
+use maxeva::sim::engine::SimConfig;
+use maxeva::tiling::mlp::{charm_mlp, estimate_mlp};
+use maxeva::util::prng::XorShift64;
+
+fn rand_vec(n: usize, rng: &mut XorShift64, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32 * scale).collect()
+}
+
+fn relu(v: Vec<f32>) -> Vec<f32> {
+    v.into_iter().map(|x| x.max(0.0)).collect()
+}
+
+fn main() {
+    // ---- Part 1: real numerics through the artifact ----
+    println!("[1] MLP forward pass through the AOT artifact (mlp_fp32)");
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
+    match rt.load_named(&default_artifacts_dir(), "mlp_fp32") {
+        Ok(exe) => {
+            let mut rng = XorShift64::new(77);
+            // MLP_DIMS = 128 → 256 → 256 → 64, batch 64 (python/compile/model.py).
+            let x = rand_vec(64 * 128, &mut rng, 0.3);
+            let w1 = rand_vec(128 * 256, &mut rng, 0.1);
+            let w2 = rand_vec(256 * 256, &mut rng, 0.1);
+            let w3 = rand_vec(256 * 64, &mut rng, 0.1);
+            let t0 = std::time::Instant::now();
+            let out = exe
+                .run_f32(&[
+                    (x.as_slice(), &[64, 128]),
+                    (w1.as_slice(), &[128, 256]),
+                    (w2.as_slice(), &[256, 256]),
+                    (w3.as_slice(), &[256, 64]),
+                ])
+                .expect("mlp artifact must run");
+            let wall = t0.elapsed();
+            // Host reference.
+            let h1 = relu(matmul_ref_f32(&x, &w1, 64, 128, 256));
+            let h2 = relu(matmul_ref_f32(&h1, &w2, 64, 256, 256));
+            let want = matmul_ref_f32(&h2, &w3, 64, 256, 64);
+            let max_err = out
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!(
+                "    output {}x{}, wall {:.2} ms, max abs err vs host ref {max_err:.2e}",
+                64,
+                64,
+                wall.as_secs_f64() * 1e3
+            );
+        }
+        Err(e) => {
+            println!("    SKIPPED: {e} (run `make artifacts`)");
+        }
+    }
+
+    // ---- Part 2: the paper's §V-B4 estimate ----
+    println!("\n[2] §V-B4 full-DNN estimate on the 13x4x6 design");
+    let dev = AieDevice::vc1902();
+    let d = DesignConfig::flagship(Precision::Fp32);
+    let r = evaluate_config(&dev, d.x, d.y, d.z, d.pattern, Precision::Fp32, &SimConfig::default())
+        .expect("flagship evaluates");
+    let est = estimate_mlp(
+        &charm_mlp(),
+        &d.candidate(),
+        &d.kernel(),
+        r.sim.period_cycles,
+        dev.freq_hz,
+    );
+    println!(
+        "    MaxEVA : {:.2} GFLOPs   (paper: {:.2})",
+        est.ops_per_sec / 1e9,
+        paper::MLP_MAXEVA_GFLOPS
+    );
+    println!(
+        "    CHARM  : {:.2} GFLOPs   (scaled to 1.25 GHz from [19])",
+        paper::MLP_CHARM_GFLOPS
+    );
+    println!(
+        "    gain   : {:.2}x          (paper: 1.29x)",
+        est.ops_per_sec / 1e9 / paper::MLP_CHARM_GFLOPS
+    );
+    println!(
+        "    layers : {} GEMMs, {:.1} GFLOP total, {:.2} ms device time",
+        charm_mlp().len(),
+        est.total_ops / 1e9,
+        est.time_s * 1e3
+    );
+}

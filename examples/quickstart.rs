@@ -1,0 +1,68 @@
+//! Quickstart: optimize, place, route, simulate and power-model the
+//! paper's flagship design in ~30 lines of API use.
+//!
+//!     cargo run --release --example quickstart
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::optimizer::array::optimize_array;
+use maxeva::optimizer::single_kernel::{optimize_single_kernel, top_ranked};
+use maxeva::report::evaluate::evaluate_config;
+use maxeva::sim::engine::SimConfig;
+
+fn main() {
+    // 1. The device: VC1902 on the VCK190 board (or describe your own).
+    let dev = AieDevice::vc1902();
+    println!(
+        "device: {} — {} AIE cores @ {:.2} GHz, peak {:.0} TOPs int8",
+        dev.name,
+        dev.total_cores(),
+        dev.freq_hz / 1e9,
+        dev.peak_ops_per_sec(Precision::Int8) / 1e12
+    );
+
+    // 2. Single-kernel DSE (paper eq. 3–6): for int8 exactly one tile
+    //    size survives all constraints.
+    let kernels = optimize_single_kernel(&dev, Precision::Int8, 0.95);
+    let best = top_ranked(&kernels)[0].kernel;
+    println!(
+        "int8 kernel: {}x{}x{} — {} cycles, {:.2}% efficiency",
+        best.m,
+        best.k,
+        best.n,
+        best.latency_cycles(),
+        best.efficiency() * 100.0
+    );
+
+    // 3. Array-level DSE (eq. 7–9): maximize MatMul kernels.
+    let arrays = optimize_array(&dev, None);
+    println!(
+        "array DSE: best candidate {} with {} kernels (fails PnR!), runner-up 13x4x6",
+        arrays[0].label(),
+        arrays[0].matmul_kernels()
+    );
+
+    // 4. Full pipeline on the flagship 13×4×6 (pattern P1).
+    for prec in Precision::all() {
+        let r = evaluate_config(
+            &dev,
+            13,
+            4,
+            6,
+            maxeva::placement::pattern::Pattern::P1,
+            prec,
+            &SimConfig::default(),
+        )
+        .expect("flagship must evaluate");
+        println!(
+            "{prec}: {:.2} {} @ {:.2} W → {:.2} {}/W ({} cores, {} DMA banks)",
+            r.throughput_table_units(),
+            prec.ops_unit(),
+            r.power.total_w(),
+            r.energy_eff_table_units(),
+            prec.ops_unit(),
+            r.total_cores,
+            r.dma_banks,
+        );
+    }
+}

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels: the single-AIE MatMul tile kernel and the
+adder-tree reduction kernel, plus pure-jnp oracles in :mod:`ref`.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute, while interpret-mode
+lowers to plain HLO that both pytest (here) and the Rust runtime (via the
+AOT artifacts) can run. See DESIGN.md §Hardware-Adaptation for the
+AIE → TPU/Pallas mapping.
+"""
+
+from .matmul_tile import array_matmul, matmul_tile, TileConfig  # noqa: F401
+from .add_tree import add_tree  # noqa: F401

@@ -1,0 +1,34 @@
+"""The adder-tree reduction kernel (L1).
+
+One AIE core runs the whole ``Y−1``-adder tree *sequentially* (paper
+§IV-B, Fig. 5). The Pallas analog reduces a stacked ``(Y, M, N)`` array of
+partial products over its leading axis with a sequential grid — the same
+left-to-right association as the hardware tree, so fp32 results are
+bit-identical to the fused array kernel's accumulation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _add_kernel(p_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # One Add kernel invocation: o += partial[y].
+    o_ref[...] += p_ref[0]
+
+
+def add_tree(partials):
+    """Reduce ``partials (Y, M, N)`` to ``(M, N)`` sequentially over Y."""
+    y, m, n = partials.shape
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(y,),
+        in_specs=[pl.BlockSpec((1, m, n), lambda yi: (yi, 0, 0))],
+        out_specs=pl.BlockSpec((m, n), lambda yi: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), partials.dtype),
+        interpret=True,
+    )(partials)

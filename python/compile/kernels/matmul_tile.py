@@ -1,0 +1,130 @@
+"""The single-AIE MatMul kernel (L1) and the whole-array MatMul (grid of
+tiles + on-chip reduction) as Pallas kernels.
+
+AIE → Pallas mapping (DESIGN.md §Hardware-Adaptation):
+
+* one AIE core's ``M×K×N`` MatMul kernel  → one Pallas grid step computing
+  an ``(M, K) @ (K, N)`` block with ``jnp.dot`` (MXU-shaped, with
+  ``preferred_element_type`` mirroring the AIE's 32-bit accumulators);
+* the 32 KB tile memory double buffers       → VMEM blocks via ``BlockSpec``
+  (the Pallas pipeline overlaps HBM↔VMEM transfers with compute exactly
+  like the AIE ping-pong buffers overlap stream transfers with MACs);
+* circuit-switched broadcast of ``A_{x,y}`` / ``B_{y,z}``  → ``index_map``
+  re-reading the same block across grid steps;
+* the per-group adder tree (sequential adds on one core) → the sequential
+  accumulation over the ``y`` grid dimension (identical reduction order).
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """Single-kernel tile size — the (M, K, N) of paper §IV-A."""
+
+    m: int
+    k: int
+    n: int
+
+    @staticmethod
+    def paper(precision: str) -> "TileConfig":
+        """The paper's Table-I kernels."""
+        if precision == "int8":
+            return TileConfig(32, 128, 32)
+        if precision == "fp32":
+            return TileConfig(32, 32, 32)
+        raise ValueError(f"unknown precision {precision!r}")
+
+    def buffer_bytes(self, precision: str) -> int:
+        """eq. (6) LHS: single-buffered A + B + C footprint."""
+        in_sz = 1 if precision == "int8" else 4
+        return self.m * self.k * in_sz + self.k * self.n * in_sz + self.m * self.n * 4
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    """AIE accumulator: int8 MACs accumulate in int32, fp32 in fp32."""
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: the single-AIE MatMul kernel body.
+
+    Accumulates over the ``y`` grid axis in sequence — the same
+    left-to-right order as the paper's adder tree (matters for fp32
+    bit-exactness against :func:`ref.array_matmul_ref`).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = _acc_dtype(a.dtype)
+    o_ref[...] += jnp.dot(
+        a.astype(acc), b.astype(acc), preferred_element_type=acc
+    )
+
+
+def matmul_tile(a, b, tile: TileConfig | None = None):
+    """Single-tile MatMul: ``a (M, K) @ b (K, N)`` on one grid step.
+
+    This is the L1 kernel in isolation (one AIE core); used by the kernel
+    tests and the ``tile_*`` artifacts.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    tile = tile or TileConfig(m, k, n)
+    assert (m, k, n) == (tile.m, tile.k, tile.n), "single tile must match config"
+    return array_matmul(a, b, tile)
+
+
+def array_matmul(a, b, tile: TileConfig):
+    """Whole-array MatMul ``(X·M, Y·K) @ (Y·K, Z·N)`` (paper Fig. 4).
+
+    Grid is ``(X, Z, Y)``; ``A`` blocks are re-read (broadcast) across the
+    ``z`` axis and ``B`` blocks across the ``x`` axis; the ``y`` axis is the
+    on-chip reduction (the adder tree).
+    """
+    xm, yk = a.shape
+    yk2, zn = b.shape
+    assert yk == yk2, f"inner dims mismatch: {yk} vs {yk2}"
+    for (name, dim, t) in (("X·M", xm, tile.m), ("Y·K", yk, tile.k), ("Z·N", zn, tile.n)):
+        assert dim % t == 0, f"{name}={dim} not a multiple of tile {t}"
+    x, y, z = xm // tile.m, yk // tile.k, zn // tile.n
+    acc = _acc_dtype(a.dtype)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(x, z, y),
+        in_specs=[
+            # A_{x,y}: broadcast across z (index_map ignores zi).
+            pl.BlockSpec((tile.m, tile.k), lambda xi, zi, yi: (xi, yi)),
+            # B_{y,z}: broadcast across x (index_map ignores xi).
+            pl.BlockSpec((tile.k, tile.n), lambda xi, zi, yi: (yi, zi)),
+        ],
+        out_specs=pl.BlockSpec((tile.m, tile.n), lambda xi, zi, yi: (xi, zi)),
+        out_shape=jax.ShapeDtypeStruct((x * tile.m, z * tile.n), acc),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def matmul_padded(a, b, tile_m: int, tile_k: int, tile_n: int):
+    """Convenience: pad arbitrary shapes up to tile multiples, run the
+    array kernel, slice back. Used by the MLP model (L2)."""
+    m, k = a.shape
+    _, n = b.shape
+    pm = -m % tile_m
+    pk = -k % tile_k
+    pn = -n % tile_n
+    a_p = jnp.pad(a, ((0, pm), (0, pk)))
+    b_p = jnp.pad(b, ((0, pk), (0, pn)))
+    out = array_matmul(a_p, b_p, TileConfig(tile_m, tile_k, tile_n))
+    return out[:m, :n]

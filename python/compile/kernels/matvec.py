@@ -1,0 +1,50 @@
+"""GEMV (Matrix-Vector) Pallas kernel — the L1 side of the future-work
+extension (§V-B4). Mirrors the Rust `tiling::matvec` model: X row-tiles ×
+Y reduction tiles, the vector broadcast across X.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_dtype(dtype):
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def _gemv_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = _acc_dtype(a.dtype)
+    # (M, K) @ (K,) accumulated over the y grid axis.
+    o_ref[...] += jnp.dot(a.astype(acc), b.astype(acc), preferred_element_type=acc)
+
+
+def array_matvec(a, b, tile_m: int, tile_k: int):
+    """Whole-array GEMV ``(X·M, Y·K) @ (Y·K,)`` with on-chip Y-reduction.
+
+    Grid ``(X, Y)``: the vector block ``b_y`` is broadcast across the X
+    axis (index_map ignores ``xi``), mirroring the circuit-switched
+    broadcast; the Y axis is the sequential adder-tree reduction.
+    """
+    xm, yk = a.shape
+    (yk2,) = b.shape
+    assert yk == yk2
+    assert xm % tile_m == 0 and yk % tile_k == 0
+    x, y = xm // tile_m, yk // tile_k
+    acc = _acc_dtype(a.dtype)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=(x, y),
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda xi, yi: (xi, yi)),
+            pl.BlockSpec((tile_k,), lambda xi, yi: (yi,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda xi, yi: (xi,)),
+        out_shape=jax.ShapeDtypeStruct((xm,), acc),
+        interpret=True,
+    )(a, b)

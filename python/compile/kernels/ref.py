@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+(exactly for integer dtypes, to tight tolerance for fp32).
+"""
+
+import jax.numpy as jnp
+
+
+def _acc_dtype(dtype):
+    return jnp.int32 if jnp.issubdtype(dtype, jnp.integer) else jnp.float32
+
+
+def matmul_ref(a, b):
+    """Plain matmul with AIE accumulation semantics (int8 → int32)."""
+    acc = _acc_dtype(a.dtype)
+    return jnp.matmul(a.astype(acc), b.astype(acc))
+
+
+def array_matmul_ref(a, b, tile_m: int, tile_k: int, tile_n: int):
+    """Tiled matmul with the *exact* reduction order of the AIE mapping:
+    per (x, z) output tile, partial products are accumulated sequentially
+    over y (the adder-tree left fold). Bit-exact oracle for
+    :func:`..matmul_tile.array_matmul` in fp32.
+    """
+    xm, yk = a.shape
+    _, zn = b.shape
+    x, y, z = xm // tile_m, yk // tile_k, zn // tile_n
+    acc = _acc_dtype(a.dtype)
+    out = jnp.zeros((xm, zn), dtype=acc)
+    for xi in range(x):
+        for zi in range(z):
+            c = jnp.zeros((tile_m, tile_n), dtype=acc)
+            for yi in range(y):
+                a_blk = a[xi * tile_m:(xi + 1) * tile_m, yi * tile_k:(yi + 1) * tile_k]
+                b_blk = b[yi * tile_k:(yi + 1) * tile_k, zi * tile_n:(zi + 1) * tile_n]
+                c = c + jnp.dot(
+                    a_blk.astype(acc), b_blk.astype(acc), preferred_element_type=acc
+                )
+            out = out.at[
+                xi * tile_m:(xi + 1) * tile_m, zi * tile_n:(zi + 1) * tile_n
+            ].set(c)
+    return out
+
+
+def add_tree_ref(partials):
+    """Sequential left-fold over the leading axis (the adder tree)."""
+    out = jnp.zeros_like(partials[0])
+    for i in range(partials.shape[0]):
+        out = out + partials[i]
+    return out
+
+
+def mlp_ref(x, weights):
+    """Reference MLP forward: relu between layers, none after the last."""
+    h = x
+    for i, w in enumerate(weights):
+        h = matmul_ref(h, w)
+        if i + 1 < len(weights):
+            h = jnp.maximum(h, 0.0)
+    return h

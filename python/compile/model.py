@@ -1,0 +1,86 @@
+"""Layer-2 JAX model: the whole-array MatMul designs and a small MLP,
+built on the L1 Pallas kernels. Lowered once by :mod:`compile.aot`;
+never imported at runtime.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.matmul_tile import TileConfig, array_matmul, matmul_padded
+
+
+@dataclass(frozen=True)
+class ArrayDesign:
+    """A MaxEVA array mapping: (X, Y, Z) groups of (M, K, N) tiles.
+
+    Mirrors the Rust `DesignConfig` (rust/src/config/schema.rs); the AOT
+    artifact names are derived identically on both sides.
+    """
+
+    precision: str  # "fp32" | "int8"
+    x: int
+    y: int
+    z: int
+    tile: TileConfig
+
+    @staticmethod
+    def flagship(precision: str) -> "ArrayDesign":
+        """The paper's highest-throughput design: 13×4×6 (Tables II/III)."""
+        return ArrayDesign(precision, 13, 4, 6, TileConfig.paper(precision))
+
+    @property
+    def native(self) -> tuple[int, int, int]:
+        """Native whole-array MatMul size (paper §V-B4: 416×128×192 fp32,
+        416×512×192 int8 for 13×4×6)."""
+        return (self.x * self.tile.m, self.y * self.tile.k, self.z * self.tile.n)
+
+    @property
+    def artifact_name(self) -> str:
+        return f"array_{self.precision}_{self.x}x{self.y}x{self.z}"
+
+    def check_memory_constraint(self, budget_bytes: int = 14 * 1024) -> None:
+        """eq. (6): double-buffered tile buffers must fit the AIE memory."""
+        used = self.tile.buffer_bytes(self.precision)
+        if used > budget_bytes:
+            raise ValueError(
+                f"tile {self.tile} needs {used} B > {budget_bytes} B budget (eq. 6)"
+            )
+
+
+def array_matmul_fp32(a, b, design: ArrayDesign):
+    """fp32 whole-array MatMul (the L2 graph of one design)."""
+    assert design.precision == "fp32"
+    design.check_memory_constraint()
+    return (array_matmul(a, b, design.tile),)
+
+
+def array_matmul_int8(a_i32, b_i32, design: ArrayDesign):
+    """int8 whole-array MatMul with an i32 wire format.
+
+    The Rust `xla` crate has no i8 literal constructor, so the artifact
+    accepts int32 operands (int8-range values), casts to int8 at the edge
+    — preserving the kernel's int8×int8→int32 semantics — and returns the
+    int32 accumulator output.
+    """
+    assert design.precision == "int8"
+    design.check_memory_constraint()
+    a8 = a_i32.astype(jnp.int8)
+    b8 = b_i32.astype(jnp.int8)
+    return (array_matmul(a8, b8, design.tile),)
+
+
+# --- A small MLP (the dnn_inference example's numeric payload) ---
+
+MLP_DIMS = (128, 256, 256, 64)  # input → hidden → hidden → output
+
+
+def mlp_fp32(x, w1, w2, w3):
+    """3-layer relu MLP; every GEMM runs through the Pallas array kernel
+    (32×32×32 tiles, the paper's fp32 kernel)."""
+    t = TileConfig.paper("fp32")
+    h = matmul_padded(x, w1, t.m, t.k, t.n)
+    h = jnp.maximum(h, 0.0)
+    h = matmul_padded(h, w2, t.m, t.k, t.n)
+    h = jnp.maximum(h, 0.0)
+    return (matmul_padded(h, w3, t.m, t.k, t.n),)

@@ -1,0 +1,164 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal of the compile path: exact equality
+for integer dtypes, tight allclose for fp32, plus hypothesis sweeps over
+shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.add_tree import add_tree
+from compile.kernels.matmul_tile import TileConfig, array_matmul, matmul_tile
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_f32(shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def rand_i8(shape):
+    return RNG.integers(-128, 128, shape, dtype=np.int8)
+
+
+class TestPaperKernels:
+    """The two Table-I kernels at their exact paper sizes."""
+
+    def test_fp32_32x32x32_matches_ref(self):
+        t = TileConfig.paper("fp32")
+        a, b = rand_f32((t.m, t.k)), rand_f32((t.k, t.n))
+        out = matmul_tile(jnp.asarray(a), jnp.asarray(b), t)
+        np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-6)
+
+    def test_int8_32x128x32_exact(self):
+        t = TileConfig.paper("int8")
+        a, b = rand_i8((t.m, t.k)), rand_i8((t.k, t.n))
+        out = matmul_tile(jnp.asarray(a), jnp.asarray(b), t)
+        want = a.astype(np.int32) @ b.astype(np.int32)
+        assert out.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_int8_accumulator_does_not_overflow_in_8_bits(self):
+        # Worst case |sum| = 128·128·128 = 2^21 ≪ 2^31: int32 must hold it.
+        t = TileConfig.paper("int8")
+        a = np.full((t.m, t.k), -128, dtype=np.int8)
+        b = np.full((t.k, t.n), -128, dtype=np.int8)
+        out = np.asarray(matmul_tile(jnp.asarray(a), jnp.asarray(b), t))
+        assert out.max() == 128 * 128 * 128
+
+    def test_paper_tile_memory_constraint(self):
+        # eq. (6): both paper kernels occupy exactly 12 KB < 14 KB.
+        assert TileConfig.paper("fp32").buffer_bytes("fp32") == 12 * 1024
+        assert TileConfig.paper("int8").buffer_bytes("int8") == 12 * 1024
+
+
+class TestArrayMatmul:
+    """The whole-array kernel (Fig. 4 mapping) vs its oracle."""
+
+    @pytest.mark.parametrize("x,y,z", [(1, 1, 1), (2, 3, 2), (13, 4, 6)])
+    def test_fp32_matches_adder_tree_order_exactly(self, x, y, z):
+        # The pallas accumulation must be BIT-IDENTICAL to the sequential
+        # adder-tree fold (same reduction order).
+        t = TileConfig(8, 8, 8)  # small tile for speed
+        a = rand_f32((x * t.m, y * t.k))
+        b = rand_f32((y * t.k, z * t.n))
+        out = array_matmul(jnp.asarray(a), jnp.asarray(b), t)
+        want = ref.array_matmul_ref(jnp.asarray(a), jnp.asarray(b), t.m, t.k, t.n)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @pytest.mark.parametrize("x,y,z", [(2, 2, 2), (3, 4, 2)])
+    def test_int8_matches_plain_matmul_exactly(self, x, y, z):
+        t = TileConfig(16, 32, 16)
+        a = rand_i8((x * t.m, y * t.k))
+        b = rand_i8((y * t.k, z * t.n))
+        out = array_matmul(jnp.asarray(a), jnp.asarray(b), t)
+        want = a.astype(np.int32) @ b.astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_fp32_close_to_unordered_matmul(self):
+        # Different reduction order than jnp.matmul → allclose, not equal.
+        t = TileConfig(32, 32, 32)
+        a = rand_f32((64, 128))
+        b = rand_f32((128, 64))
+        out = array_matmul(jnp.asarray(a), jnp.asarray(b), t)
+        np.testing.assert_allclose(np.asarray(out), a @ b, atol=1e-3, rtol=1e-4)
+
+    def test_flagship_native_sizes(self):
+        # §V-B4: 13×4×6 computes 416×128×192 (fp32), 416×512×192 (int8).
+        from compile.model import ArrayDesign
+
+        assert ArrayDesign.flagship("fp32").native == (416, 128, 192)
+        assert ArrayDesign.flagship("int8").native == (416, 512, 192)
+
+    def test_rejects_non_multiple_shapes(self):
+        t = TileConfig(32, 32, 32)
+        with pytest.raises(AssertionError):
+            array_matmul(jnp.zeros((33, 32)), jnp.zeros((32, 32)), t)
+
+
+class TestAddTree:
+    def test_matches_sequential_fold_fp32(self):
+        p = rand_f32((4, 32, 32))
+        out = add_tree(jnp.asarray(p))
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref.add_tree_ref(jnp.asarray(p)))
+        )
+
+    def test_matches_sum_int32(self):
+        p = RNG.integers(-1000, 1000, (3, 16, 16)).astype(np.int32)
+        out = add_tree(jnp.asarray(p))
+        np.testing.assert_array_equal(np.asarray(out), p.sum(axis=0))
+
+    def test_single_partial_identity(self):
+        p = rand_f32((1, 8, 8))
+        np.testing.assert_array_equal(np.asarray(add_tree(jnp.asarray(p))), p[0])
+
+
+# --- hypothesis sweeps (shapes × dtypes), as required for L1 ---
+
+tile_dims = st.sampled_from([4, 8, 16, 32])
+grid_dims = st.integers(min_value=1, max_value=3)
+
+
+class TestHypothesisSweeps:
+    @settings(max_examples=20, deadline=None)
+    @given(m=tile_dims, k=tile_dims, n=tile_dims, x=grid_dims, y=grid_dims, z=grid_dims)
+    def test_fp32_any_shape_matches_oracle(self, m, k, n, x, y, z):
+        t = TileConfig(m, k, n)
+        rng = np.random.default_rng(m * k * n + x + y + z)
+        a = rng.standard_normal((x * m, y * k)).astype(np.float32)
+        b = rng.standard_normal((y * k, z * n)).astype(np.float32)
+        out = array_matmul(jnp.asarray(a), jnp.asarray(b), t)
+        want = ref.array_matmul_ref(jnp.asarray(a), jnp.asarray(b), m, k, n)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=tile_dims, k=tile_dims, n=tile_dims, y=grid_dims)
+    def test_int8_any_shape_exact(self, m, k, n, y):
+        t = TileConfig(m, k, n)
+        rng = np.random.default_rng(m + 17 * k + 31 * n + y)
+        a = rng.integers(-128, 128, (m, y * k), dtype=np.int8)
+        b = rng.integers(-128, 128, (y * k, n), dtype=np.int8)
+        out = array_matmul(jnp.asarray(a), jnp.asarray(b), t)
+        want = a.astype(np.int32) @ b.astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(out), want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        y=st.integers(min_value=1, max_value=6),
+        dtype=st.sampled_from([np.float32, np.int32]),
+    )
+    def test_add_tree_any_depth_dtype(self, y, dtype):
+        rng = np.random.default_rng(y)
+        if dtype == np.float32:
+            p = rng.standard_normal((y, 8, 16)).astype(dtype)
+        else:
+            p = rng.integers(-99, 99, (y, 8, 16)).astype(dtype)
+        out = add_tree(jnp.asarray(p))
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref.add_tree_ref(jnp.asarray(p)))
+        )

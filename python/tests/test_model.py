@@ -1,0 +1,89 @@
+"""L2 model correctness: array designs and the MLP vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.matmul_tile import TileConfig
+from compile.model import (
+    MLP_DIMS,
+    ArrayDesign,
+    array_matmul_fp32,
+    array_matmul_int8,
+    mlp_fp32,
+)
+
+RNG = np.random.default_rng(7)
+
+
+class TestArrayDesign:
+    def test_flagship_configs(self):
+        d = ArrayDesign.flagship("fp32")
+        assert (d.x, d.y, d.z) == (13, 4, 6)
+        assert d.tile == TileConfig(32, 32, 32)
+        assert d.artifact_name == "array_fp32_13x4x6"
+        d8 = ArrayDesign.flagship("int8")
+        assert d8.tile == TileConfig(32, 128, 32)
+        assert d8.artifact_name == "array_int8_13x4x6"
+
+    def test_memory_constraint_enforced(self):
+        # A tile violating eq. (6) must be rejected at build time.
+        bad = ArrayDesign("fp32", 1, 1, 1, TileConfig(64, 64, 64))
+        with pytest.raises(ValueError, match="eq. 6"):
+            bad.check_memory_constraint()
+
+    def test_paper_tiles_pass_constraint(self):
+        ArrayDesign.flagship("fp32").check_memory_constraint()
+        ArrayDesign.flagship("int8").check_memory_constraint()
+
+
+class TestArrayModels:
+    def test_fp32_small_design_matches_oracle(self):
+        d = ArrayDesign("fp32", 2, 3, 2, TileConfig(8, 8, 8))
+        a = RNG.standard_normal((16, 24)).astype(np.float32)
+        b = RNG.standard_normal((24, 16)).astype(np.float32)
+        (out,) = array_matmul_fp32(jnp.asarray(a), jnp.asarray(b), d)
+        want = ref.array_matmul_ref(jnp.asarray(a), jnp.asarray(b), 8, 8, 8)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_int8_i32_wire_format_is_exact(self):
+        # i32-in → int8 cast → int32 out must equal direct int8 matmul.
+        d = ArrayDesign("int8", 1, 2, 1, TileConfig(16, 32, 16))
+        a8 = RNG.integers(-128, 128, (16, 64), dtype=np.int8)
+        b8 = RNG.integers(-128, 128, (64, 16), dtype=np.int8)
+        (out,) = array_matmul_int8(
+            jnp.asarray(a8, dtype=jnp.int32), jnp.asarray(b8, dtype=jnp.int32), d
+        )
+        want = a8.astype(np.int32) @ b8.astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_int8_wire_cast_truncates_like_int8(self):
+        # Values outside int8 range must wrap exactly as an int8 cast
+        # (defines the wire contract for the Rust side).
+        d = ArrayDesign("int8", 1, 1, 1, TileConfig(4, 4, 4))
+        a = np.full((4, 4), 130, dtype=np.int32)  # == -126 as int8
+        b = np.eye(4, dtype=np.int32)
+        (out,) = array_matmul_int8(jnp.asarray(a), jnp.asarray(b), d)
+        assert int(np.asarray(out)[0, 0]) == -126
+
+
+class TestMlp:
+    def test_mlp_matches_reference(self):
+        d0, d1, d2, d3 = MLP_DIMS
+        x = RNG.standard_normal((64, d0)).astype(np.float32) * 0.3
+        w1 = RNG.standard_normal((d0, d1)).astype(np.float32) * 0.1
+        w2 = RNG.standard_normal((d1, d2)).astype(np.float32) * 0.1
+        w3 = RNG.standard_normal((d2, d3)).astype(np.float32) * 0.1
+        (out,) = mlp_fp32(*map(jnp.asarray, (x, w1, w2, w3)))
+        want = ref.mlp_ref(jnp.asarray(x), [jnp.asarray(w) for w in (w1, w2, w3)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_mlp_output_shape(self):
+        d0, _, _, d3 = MLP_DIMS
+        x = jnp.zeros((64, d0))
+        w1 = jnp.zeros((MLP_DIMS[0], MLP_DIMS[1]))
+        w2 = jnp.zeros((MLP_DIMS[1], MLP_DIMS[2]))
+        w3 = jnp.zeros((MLP_DIMS[2], MLP_DIMS[3]))
+        (out,) = mlp_fp32(x, w1, w2, w3)
+        assert out.shape == (64, d3)

@@ -1,0 +1,39 @@
+//! Shared harness for the benchmark binaries (criterion is unavailable
+//! offline; this provides warmup + repeated timing + stats).
+
+use std::time::Instant;
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs;
+/// returns (mean_s, stddev_s, min_s).
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len().max(1) as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    (mean, var.sqrt(), min)
+}
+
+/// Print one benchmark line in a uniform format.
+pub fn report(name: &str, mean_s: f64, stddev_s: f64) {
+    if mean_s < 1e-3 {
+        println!("{name:<44} {:>10.1} µs ± {:>6.1} µs", mean_s * 1e6, stddev_s * 1e6);
+    } else if mean_s < 1.0 {
+        println!("{name:<44} {:>10.2} ms ± {:>6.2} ms", mean_s * 1e3, stddev_s * 1e3);
+    } else {
+        println!("{name:<44} {:>10.3} s  ± {:>6.3} s", mean_s, stddev_s);
+    }
+}
+
+/// Section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,95 @@
+//! Bench: end-to-end serving throughput/latency through the whole stack
+//! (coordinator → device thread → PJRT artifact). Reports wall-clock
+//! (CPU emulation) and device-time (VCK190-equivalent) numbers
+//! separately — never conflated.
+//!
+//! Needs `make artifacts`. Skips gracefully when missing.
+//!
+//!     cargo bench --bench e2e_serving
+
+mod common;
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{DesignConfig, ServeConfig};
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::runtime::{artifacts_available, default_artifacts_dir};
+use maxeva::util::prng::XorShift64;
+use maxeva::workloads::MatMulRequest;
+
+fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
+}
+
+fn main() {
+    if !artifacts_available(&default_artifacts_dir()) {
+        println!("SKIP: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    let mut server = MatMulServer::start(&cfg).expect("server start");
+    println!(
+        "e2e serving bench — design 13x4x6 fp32, native {:?}, period {:.0} cyc",
+        server.native(),
+        0.0
+    );
+
+    let mut rng = XorShift64::new(1);
+
+    common::banner("single native tile (416x128x192)");
+    let (m, k, n) = (416u64, 128u64, 192u64);
+    let a = rand_vec((m * k) as usize, &mut rng);
+    let b = rand_vec((k * n) as usize, &mut rng);
+    let mut id = 0u64;
+    let (mean, sd, min) = common::time_it(2, 8, || {
+        id += 1;
+        std::hint::black_box(
+            server
+                .execute(MatMulRequest { id, m, k, n }, a.clone(), b.clone())
+                .unwrap(),
+        );
+    });
+    common::report("native tile request (wall)", mean, sd);
+    let tile_ops = 2.0 * (m * k * n) as f64;
+    println!(
+        "  wall throughput {:.2} GFLOPs (CPU emulation, best {:.2}); device-time \
+         throughput is the simulator's {:.0} GFLOPs",
+        tile_ops / mean / 1e9,
+        tile_ops / min / 1e9,
+        5442.0
+    );
+
+    common::banner("batched 512^3 requests (4-way)");
+    let size = 512u64;
+    let batch: Vec<_> = (0..4)
+        .map(|i| {
+            let a = rand_vec((size * size) as usize, &mut rng);
+            let b = rand_vec((size * size) as usize, &mut rng);
+            (MatMulRequest { id: 100 + i, m: size, k: size, n: size }, a, b)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let outs = server.run_batch(batch).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let ops = 4.0 * 2.0 * (size as f64).powi(3);
+    println!(
+        "4 × {size}^3: wall {:.2} s → {:.2} GFLOPs emulated; outputs {}",
+        wall,
+        ops / wall / 1e9,
+        outs.len()
+    );
+
+    let stats = server.stats();
+    println!("\n==== cumulative serving stats ====");
+    println!("requests         : {}", stats.requests);
+    println!("tile invocations : {}", stats.invocations);
+    println!("mean latency     : {:.1} ms (wall)", stats.mean_latency_ms);
+    println!("p99 latency      : {:.1} ms (wall)", stats.p99_latency_ms);
+    println!("device time      : {:.3} ms (VCK190-equivalent)", stats.device_time_s * 1e3);
+    println!(
+        "device throughput: {:.1} GFLOPs (VCK190-equivalent; gap to 5442 peak = request \
+         padding, cf. Fig. 8)",
+        stats.device_ops_per_sec / 1e9
+    );
+    server.shutdown();
+}

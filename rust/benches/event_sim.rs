@@ -1,0 +1,88 @@
+//! Bench: the full-array event-driven simulator — cross-validation
+//! against the group-pipeline model and its own performance profile
+//! (the L3 §Perf target).
+//!
+//!     cargo bench --bench event_sim
+
+mod common;
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::kernels::matmul::MatMulKernel;
+use maxeva::optimizer::array::ArrayCandidate;
+use maxeva::placement::placer::place_design;
+use maxeva::report::evaluate::paper_configs;
+use maxeva::report::table::Table;
+use maxeva::sim::engine::{simulate_design, SimConfig};
+use maxeva::sim::event::simulate_events;
+
+fn main() {
+    let dev = AieDevice::vc1902();
+
+    common::banner("cross-validation: event sim vs group-pipeline model");
+    let mut t = Table::new(vec![
+        "config", "precision", "model period", "event period", "Δ", "fill (cyc)", "events",
+    ]);
+    for (x, y, z, pat) in paper_configs() {
+        for prec in Precision::all() {
+            let pd = place_design(
+                &dev,
+                ArrayCandidate::new(x, y, z),
+                pat,
+                MatMulKernel::paper_kernel(prec),
+            )
+            .unwrap();
+            let fast = simulate_design(&dev, &pd, &SimConfig::default());
+            let ev = simulate_events(&dev, &pd, 64, 7, 0.005);
+            t.row(vec![
+                format!("{x}x{y}x{z}"),
+                prec.to_string(),
+                format!("{:.1}", fast.period_cycles),
+                format!("{:.1}", ev.period_cycles),
+                format!(
+                    "{:+.2}%",
+                    (ev.period_cycles / fast.period_cycles - 1.0) * 100.0
+                ),
+                format!("{:.0}", ev.fill_cycles),
+                ev.events.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    common::banner("transient analysis (13x4x6 fp32)");
+    let pd = place_design(
+        &dev,
+        ArrayCandidate::new(13, 4, 6),
+        maxeva::placement::pattern::Pattern::P1,
+        MatMulKernel::paper_kernel(Precision::Fp32),
+    )
+    .unwrap();
+    for iters in [16, 32, 64, 128] {
+        let ev = simulate_events(&dev, &pd, iters, 7, 0.005);
+        println!(
+            "iters {iters:>4}: total {:.2} GFLOPs vs steady {:.2} GFLOPs \
+             (fill amortization {:.1}%)",
+            ev.ops_per_sec_total / 1e9,
+            ev.ops_per_sec_steady / 1e9,
+            ev.ops_per_sec_total / ev.ops_per_sec_steady * 100.0
+        );
+    }
+
+    common::banner("event-sim performance (L3 §Perf target)");
+    for iters in [32usize, 64] {
+        let (m, s, _) = common::time_it(2, 8, || {
+            std::hint::black_box(simulate_events(&dev, &pd, iters, 7, 0.005));
+        });
+        common::report(&format!("event sim, 78 groups × {iters} iters"), m, s);
+        let ev = simulate_events(&dev, &pd, iters, 7, 0.005);
+        println!(
+            "    {:.1} M events/s",
+            ev.events as f64 / m / 1e6
+        );
+    }
+    let (m, s, _) = common::time_it(2, 8, || {
+        std::hint::black_box(simulate_design(&dev, &pd, &SimConfig::default()));
+    });
+    common::report("group-pipeline model (reference)", m, s);
+}

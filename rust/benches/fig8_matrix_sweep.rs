@@ -1,0 +1,72 @@
+//! Bench: regenerate paper **Fig. 8** — throughput of the 13×4×6 design
+//! under varying square matrix sizes (both precisions), assuming
+//! stall-free PL tiling exactly as the paper does.
+//!
+//!     cargo bench --bench fig8_matrix_sweep
+
+mod common;
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::DesignConfig;
+use maxeva::report::evaluate::evaluate_config;
+use maxeva::report::table::Table;
+use maxeva::sim::engine::SimConfig;
+use maxeva::tiling::padding::TiledWorkload;
+use maxeva::workloads::square_sweep;
+
+fn main() {
+    let dev = AieDevice::vc1902();
+    println!("Fig. 8 — throughput vs square matrix size (13x4x6 design)");
+
+    for prec in Precision::all() {
+        let d = DesignConfig::flagship(prec);
+        let r = evaluate_config(&dev, d.x, d.y, d.z, d.pattern, prec, &SimConfig::default())
+            .unwrap();
+        let native = maxeva::tiling::padding::native_size(&d.candidate(), &d.kernel());
+        println!(
+            "\n{prec}: native {}x{}x{}, design peak {:.2} {}",
+            native.0,
+            native.1,
+            native.2,
+            r.throughput_table_units(),
+            prec.ops_unit()
+        );
+        let mut t = Table::new(vec![
+            "size", "grid (m,k,n)", "invocations", "useful ratio", "throughput", "% of design peak",
+        ]);
+        let mut series = Vec::new();
+        for s in square_sweep(256, 16384) {
+            let w = TiledWorkload::new(s, s, s, &d.candidate(), &d.kernel());
+            let (gm, gk, gn) = w.grid();
+            let thr = w.effective_ops_per_sec(r.ops_per_sec);
+            series.push(w.useful_ratio());
+            t.row(vec![
+                s.to_string(),
+                format!("{gm},{gk},{gn}"),
+                w.invocations().to_string(),
+                format!("{:.4}", w.useful_ratio()),
+                match prec {
+                    Precision::Fp32 | Precision::Bf16 => format!("{:.1} GFLOPs", thr / 1e9),
+                    Precision::Int8 | Precision::Int16 => format!("{:.2} TOPs", thr / 1e12),
+                },
+                format!("{:.1}%", w.useful_ratio() * 100.0),
+            ]);
+        }
+        print!("{}", t.render());
+        // The paper's qualitative claim: near-peak for ≥ ~2K matrices.
+        let at2k = series[3];
+        println!("≥2K sizes at ≥{:.1}% of peak (paper: 'almost peak performance')", at2k * 100.0);
+    }
+
+    common::banner("tiling-model timing");
+    let d = DesignConfig::flagship(Precision::Fp32);
+    let (m, s, _) = common::time_it(5, 50, || {
+        for sz in square_sweep(256, 16384) {
+            std::hint::black_box(
+                TiledWorkload::new(sz, sz, sz, &d.candidate(), &d.kernel()).useful_ratio(),
+            );
+        }
+    });
+    common::report("full sweep (7 sizes, both models)", m, s);
+}

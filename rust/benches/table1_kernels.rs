@@ -1,0 +1,104 @@
+//! Bench: regenerate paper **Table I** (single AIE kernel results) and
+//! time the kernel/optimizer models.
+//!
+//!     cargo bench --bench table1_kernels
+
+mod common;
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::kernels::add::AddKernel;
+use maxeva::kernels::matmul::MatMulKernel;
+use maxeva::optimizer::single_kernel::optimize_single_kernel;
+use maxeva::report::paper;
+use maxeva::report::table::Table;
+
+fn main() {
+    println!("Table I — single AI Engine kernel results (model vs paper)");
+    let mut t = Table::new(vec![
+        "Kernel type",
+        "size",
+        "latency(cyc)",
+        "paper",
+        "thr(MACs/cyc)",
+        "paper",
+        "efficiency",
+        "paper",
+        "rel.latency",
+    ]);
+    let mm8 = MatMulKernel::paper_kernel(Precision::Int8);
+    let a8 = AddKernel::new(32, 32, Precision::Int8);
+    let mm32 = MatMulKernel::paper_kernel(Precision::Fp32);
+    let a32 = AddKernel::new(32, 32, Precision::Fp32);
+    let p = paper::table1();
+
+    t.row(vec![
+        "MatMul int8".into(),
+        "32x128x32".into(),
+        mm8.latency_cycles().to_string(),
+        p[0].latency_cyc.to_string(),
+        format!("{:.2}", mm8.throughput_macs_per_cycle()),
+        format!("{:.2}", p[0].throughput_macs_per_cyc),
+        format!("{:.2}%", mm8.efficiency() * 100.0),
+        format!("{:.2}%", p[0].efficiency * 100.0),
+        "1x".into(),
+    ]);
+    t.row(vec![
+        "Add int32".into(),
+        "32x32".into(),
+        a8.latency_cycles().to_string(),
+        p[1].latency_cyc.to_string(),
+        format!("{:.2}", a8.throughput_ops_per_cycle()),
+        format!("{:.2}", p[1].throughput_macs_per_cyc),
+        format!("{:.2}%", a8.efficiency() * 100.0),
+        format!("{:.2}%", p[1].efficiency * 100.0),
+        format!("{:.2}x", a8.latency_cycles() as f64 / mm8.latency_cycles() as f64),
+    ]);
+    t.row(vec![
+        "MatMul fp32 [19,34]".into(),
+        "32x32x32".into(),
+        mm32.latency_cycles().to_string(),
+        p[2].latency_cyc.to_string(),
+        format!("{:.2}", mm32.throughput_macs_per_cycle()),
+        format!("{:.2}", p[2].throughput_macs_per_cyc),
+        format!("{:.2}%", mm32.efficiency() * 100.0),
+        format!("{:.2}%", p[2].efficiency * 100.0),
+        "1x".into(),
+    ]);
+    t.row(vec![
+        "Add fp32".into(),
+        "32x32".into(),
+        a32.latency_cycles().to_string(),
+        p[3].latency_cyc.to_string(),
+        format!("{:.2}", a32.throughput_ops_per_cycle()),
+        format!("{:.2}", p[3].throughput_macs_per_cyc),
+        format!("{:.2}%", a32.efficiency() * 100.0),
+        format!("{:.2}%", p[3].efficiency * 100.0),
+        format!("{:.2}x", a32.latency_cycles() as f64 / mm32.latency_cycles() as f64),
+    ]);
+    print!("{}", t.render());
+
+    // §V-A DSE claims: int8 uniqueness, fp32 tie at 32768 MACs.
+    let dev = AieDevice::vc1902();
+    let i8c = optimize_single_kernel(&dev, Precision::Int8, 0.95);
+    let f32c = optimize_single_kernel(&dev, Precision::Fp32, 0.95);
+    println!(
+        "\nDSE check: int8 feasible points = {} (paper: exactly one, 32x128x32)",
+        i8c.len()
+    );
+    println!(
+        "DSE check: fp32 top tier all at {} MACs across {} points (paper: ties at 32768)",
+        f32c[0].macs,
+        f32c.iter().filter(|c| c.macs == f32c[0].macs).count()
+    );
+
+    common::banner("model timing");
+    let (m, s, _) = common::time_it(3, 20, || {
+        std::hint::black_box(optimize_single_kernel(&dev, Precision::Int8, 0.95));
+    });
+    common::report("single-kernel IP search (int8)", m, s);
+    let (m, s, _) = common::time_it(3, 20, || {
+        std::hint::black_box(optimize_single_kernel(&dev, Precision::Fp32, 0.95));
+    });
+    common::report("single-kernel IP search (fp32)", m, s);
+}

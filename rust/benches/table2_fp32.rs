@@ -1,0 +1,94 @@
+//! Bench: regenerate paper **Table II** (fp32 MaxEVA configurations vs
+//! CHARM) through the full place→route→simulate→power pipeline, and time
+//! the pipeline stages.
+//!
+//!     cargo bench --bench table2_fp32
+
+mod common;
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::charm::CharmDesign;
+use maxeva::report::evaluate::{evaluate_config, paper_configs};
+use maxeva::report::paper;
+use maxeva::report::table::{pct, Table};
+use maxeva::sim::engine::SimConfig;
+
+fn main() {
+    let dev = AieDevice::vc1902();
+    let prec = Precision::Fp32;
+    println!("Table II — MaxEVA fp32 configurations vs CHARM (measured vs paper)");
+
+    let mut t = Table::new(vec![
+        "Cfg (pat.)", "MatMul", "cores", "banks", "DMA", "PLIOs",
+        "GFLOPs", "paper", "Δthr",
+        "P(W)", "paper", "GFLOPs/W", "paper", "Δee",
+    ]);
+    for ((x, y, z, pat), p) in paper_configs().iter().zip(&paper::table2_fp32()) {
+        let r = evaluate_config(&dev, *x, *y, *z, *pat, prec, &SimConfig::default()).unwrap();
+        t.row(vec![
+            r.label.clone(),
+            r.matmul_kernels.to_string(),
+            format!("{} ({:.1}%)", r.total_cores, r.core_util * 100.0),
+            format!("{} ({:.1}%)", r.memory_banks, r.bank_util * 100.0),
+            r.dma_banks.to_string(),
+            format!("{} ({:.1}%)", r.plios, r.plio_util * 100.0),
+            format!("{:.2}", r.throughput_table_units()),
+            format!("{:.2}", p.throughput_gops),
+            pct(paper::rel_delta(r.throughput_table_units(), p.throughput_gops)),
+            format!("{:.2}", r.power.total_w()),
+            format!("{:.2}", p.power_w.unwrap()),
+            format!("{:.2}", r.energy_eff_table_units()),
+            format!("{:.2}", p.energy_eff.unwrap()),
+            pct(paper::rel_delta(r.energy_eff_table_units(), p.energy_eff.unwrap())),
+        ]);
+    }
+    let charm = CharmDesign::for_precision(prec);
+    let cr = charm.simulate(&dev);
+    let cp = charm.power(&dev);
+    let cpaper = paper::charm_row(prec);
+    t.row(vec![
+        "CHARM [19,34]".into(),
+        charm.kernels.to_string(),
+        format!("{} ({:.1}%)", charm.kernels, charm.core_utilization(&dev) * 100.0),
+        format!("{} ({:.1}%)", charm.memory_banks, charm.memory_banks as f64 / 32.0),
+        "0".into(),
+        format!("{} ({:.1}%)", charm.plios, charm.plio_utilization(&dev) * 100.0),
+        format!("{:.2}", cr.ops_per_sec / 1e9),
+        format!("{:.2}", cpaper.throughput_gops),
+        pct(paper::rel_delta(cr.ops_per_sec / 1e9, cpaper.throughput_gops)),
+        format!("{:.2}", cp.total_w()),
+        format!("{:.2}", cpaper.power_w.unwrap()),
+        format!("{:.2}", cp.energy_efficiency(cr.ops_per_sec) / 1e9),
+        format!("{:.2}", cpaper.energy_eff.unwrap()),
+        pct(paper::rel_delta(
+            cp.energy_efficiency(cr.ops_per_sec) / 1e9,
+            cpaper.energy_eff.unwrap(),
+        )),
+    ]);
+    print!("{}", t.render());
+
+    let flag = evaluate_config(
+        &dev, 13, 4, 6, maxeva::placement::pattern::Pattern::P1, prec, &SimConfig::default(),
+    )
+    .unwrap();
+    println!(
+        "\nheadline: +{:.1}% throughput, +{:.1}% energy efficiency over CHARM \
+         (paper: +20.8% / +20.4%)",
+        (flag.ops_per_sec / cr.ops_per_sec - 1.0) * 100.0,
+        (flag.energy_eff_table_units() / (cp.energy_efficiency(cr.ops_per_sec) / 1e9) - 1.0)
+            * 100.0
+    );
+
+    common::banner("pipeline timing (13x4x6 fp32)");
+    let (m, s, _) = common::time_it(2, 10, || {
+        std::hint::black_box(
+            evaluate_config(
+                &dev, 13, 4, 6, maxeva::placement::pattern::Pattern::P1, prec,
+                &SimConfig::default(),
+            )
+            .unwrap(),
+        );
+    });
+    common::report("full evaluate (place+route+sim+power)", m, s);
+}

@@ -1,0 +1,93 @@
+//! Bench: regenerate paper **Table III** (int8 MaxEVA configurations vs
+//! CHARM).
+//!
+//!     cargo bench --bench table3_int8
+
+mod common;
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::charm::CharmDesign;
+use maxeva::report::evaluate::{evaluate_config, paper_configs};
+use maxeva::report::paper;
+use maxeva::report::table::{pct, Table};
+use maxeva::sim::engine::SimConfig;
+
+fn main() {
+    let dev = AieDevice::vc1902();
+    let prec = Precision::Int8;
+    println!("Table III — MaxEVA int8 configurations vs CHARM (measured vs paper)");
+
+    let mut t = Table::new(vec![
+        "Cfg (pat.)", "MatMul", "cores", "banks", "DMA", "PLIOs",
+        "TOPs", "paper", "Δthr", "P(W)", "paper", "TOPs/W", "paper",
+    ]);
+    for ((x, y, z, pat), p) in paper_configs().iter().zip(&paper::table3_int8()) {
+        let r = evaluate_config(&dev, *x, *y, *z, *pat, prec, &SimConfig::default()).unwrap();
+        let paper_tops = p.throughput_gops / 1000.0;
+        t.row(vec![
+            r.label.clone(),
+            r.matmul_kernels.to_string(),
+            format!("{} ({:.1}%)", r.total_cores, r.core_util * 100.0),
+            format!("{} ({:.1}%)", r.memory_banks, r.bank_util * 100.0),
+            r.dma_banks.to_string(),
+            format!("{} ({:.1}%)", r.plios, r.plio_util * 100.0),
+            format!("{:.2}", r.throughput_table_units()),
+            format!("{paper_tops:.2}"),
+            pct(paper::rel_delta(r.throughput_table_units(), paper_tops)),
+            format!("{:.2}", r.power.total_w()),
+            format!("{:.2}", p.power_w.unwrap()),
+            format!("{:.3}", r.energy_eff_table_units()),
+            format!("{:.3}", p.energy_eff.unwrap()),
+        ]);
+    }
+    let charm = CharmDesign::for_precision(prec);
+    let cr = charm.simulate(&dev);
+    let cpaper = paper::charm_row(prec);
+    t.row(vec![
+        "CHARM [19,34]".into(),
+        charm.kernels.to_string(),
+        format!("{} ({:.1}%)", charm.kernels, charm.core_utilization(&dev) * 100.0),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+        format!("{:.2}", cr.ops_per_sec / 1e12),
+        format!("{:.2}", cpaper.throughput_gops / 1000.0),
+        pct(paper::rel_delta(cr.ops_per_sec / 1e9, cpaper.throughput_gops)),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+    ]);
+    print!("{}", t.render());
+    println!("(CHARM int8 is closed-source: throughput is the authors' published 28.15 TOPs");
+    println!(" @1 GHz scaled to 1.25 GHz, exactly as the paper's §V-B2 comparison; power n/a.)");
+
+    let flag = evaluate_config(
+        &dev, 13, 4, 6, maxeva::placement::pattern::Pattern::P1, prec, &SimConfig::default(),
+    )
+    .unwrap();
+    println!(
+        "\nheadline: {:.2}x throughput over CHARM (paper: 2.19x); best EE {:.3} TOPs/W \
+         at 10x3x10 (paper: 1.161)",
+        flag.ops_per_sec / cr.ops_per_sec,
+        evaluate_config(
+            &dev, 10, 3, 10, maxeva::placement::pattern::Pattern::P2, prec,
+            &SimConfig::default()
+        )
+        .unwrap()
+        .energy_eff_table_units()
+    );
+
+    common::banner("pipeline timing (13x4x6 int8)");
+    let (m, s, _) = common::time_it(2, 10, || {
+        std::hint::black_box(
+            evaluate_config(
+                &dev, 13, 4, 6, maxeva::placement::pattern::Pattern::P1, prec,
+                &SimConfig::default(),
+            )
+            .unwrap(),
+        );
+    });
+    common::report("full evaluate (place+route+sim+power)", m, s);
+}

@@ -1,0 +1,234 @@
+//! Versal AIE device description.
+//!
+//! All constants for the VC1902 come from the sources the paper cites:
+//! AM009 (AIE architecture manual), DS957 (interface-tile counts), UG1366
+//! (VCK190 board). The model is generic: any Versal AIE device can be
+//! described by constructing an [`AieDevice`] directly.
+
+use crate::arch::precision::Precision;
+
+/// Static description of one Versal AIE array device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AieDevice {
+    /// Device name, e.g. "VC1902".
+    pub name: String,
+    /// Number of AIE tile rows (VC1902: 8).
+    pub rows: usize,
+    /// Number of AIE tile columns (VC1902: 50).
+    pub cols: usize,
+    /// Data memory per tile, in bytes (32 KB).
+    pub data_mem_bytes: u64,
+    /// Number of data-memory banks per tile (8 × 4 KB).
+    pub banks_per_tile: u64,
+    /// Program memory per tile, in bytes (16 KB).
+    pub prog_mem_bytes: u64,
+    /// Number of AIE-PL interface tiles on the last row (VC1902: 39).
+    pub aie_pl_tiles: usize,
+    /// Available input PLIOs (PL → AIE array). VC1902: 78.
+    pub plio_in: usize,
+    /// Available output PLIOs (AIE array → PL). VC1902: 117.
+    pub plio_out: usize,
+    /// AIE clock frequency in Hz (VCK190 max: 1.25 GHz).
+    pub freq_hz: f64,
+    /// PL clock frequency in Hz (recommended: 312.5 MHz).
+    pub pl_freq_hz: f64,
+    /// Stream / PLIO bandwidth in bytes per AIE cycle (AM009: 4 B/cyc).
+    pub bw_io_bytes_per_cycle: u64,
+    /// Memory banks reserved per active tile for system use (stack, heap).
+    pub system_banks: u64,
+    /// Effective AXI4-Stream switch capacity: max concurrent
+    /// circuit-switched streams per tile-to-tile direction. This is the
+    /// *routable* channel count the PnR tool can realize per direction
+    /// (calibrated so every design the paper reports as routable routes,
+    /// with ~10% headroom; the hard feasibility cliff the paper reports —
+    /// 10×4×8 failing — is reproduced by the DMA/slack rule in
+    /// `routing::router`, not by raw channel exhaustion).
+    pub switch_capacity_per_dir: u32,
+}
+
+impl AieDevice {
+    /// The VC1902 device of the VCK190 evaluation board — the paper's
+    /// demonstration target.
+    pub fn vc1902() -> Self {
+        AieDevice {
+            name: "VC1902".to_string(),
+            rows: 8,
+            cols: 50,
+            data_mem_bytes: 32 * 1024,
+            banks_per_tile: 8,
+            prog_mem_bytes: 16 * 1024,
+            aie_pl_tiles: 39,
+            plio_in: 78,
+            plio_out: 117,
+            freq_hz: 1.25e9,
+            pl_freq_hz: 312.5e6,
+            bw_io_bytes_per_cycle: 4,
+            system_banks: 1,
+            switch_capacity_per_dir: 12,
+        }
+    }
+
+    /// A hypothetical smaller device (half the VC1902 array) used by tests
+    /// to exercise generalization to other Versal parts.
+    pub fn half_vc1902() -> Self {
+        AieDevice {
+            name: "VC1902-half".to_string(),
+            rows: 8,
+            cols: 25,
+            aie_pl_tiles: 19,
+            plio_in: 38,
+            plio_out: 57,
+            ..Self::vc1902()
+        }
+    }
+
+    /// The VC1802 — the smaller Versal AI Core part (DS950: 300 AIE
+    /// tiles as 6 rows × 50 columns, proportionally fewer interface
+    /// tiles). Demonstrates the paper's "generalizable to any Versal AIE
+    /// device" claim on a real second part.
+    pub fn vc1802() -> Self {
+        AieDevice {
+            name: "VC1802".to_string(),
+            rows: 6,
+            cols: 50,
+            aie_pl_tiles: 39,
+            plio_in: 78,
+            plio_out: 117,
+            ..Self::vc1902()
+        }
+    }
+
+    /// The VC2802 (Versal AI Edge/Core next-gen class): a larger array
+    /// used to study how the MaxEVA constraints shift when cores grow
+    /// faster than PLIOs. Parameters are representative, not a datasheet
+    /// transcription (the AIE-ML tile architecture differs; we model the
+    /// same AIE1-style tile scaled up — see DESIGN.md §7).
+    pub fn vc2802_like() -> Self {
+        AieDevice {
+            name: "VC2802-like".to_string(),
+            rows: 8,
+            cols: 38,
+            aie_pl_tiles: 30,
+            plio_in: 60,
+            plio_out: 90,
+            ..Self::vc1902()
+        }
+    }
+
+    /// Look up a device preset by name.
+    pub fn by_name(name: &str) -> Option<AieDevice> {
+        match name {
+            "VC1902" => Some(Self::vc1902()),
+            "VC1902-half" => Some(Self::half_vc1902()),
+            "VC1802" => Some(Self::vc1802()),
+            "VC2802-like" => Some(Self::vc2802_like()),
+            _ => None,
+        }
+    }
+
+    /// Total number of AIE cores in the array.
+    pub fn total_cores(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Total number of data-memory banks in the array.
+    pub fn total_banks(&self) -> u64 {
+        (self.total_cores() as u64) * self.banks_per_tile
+    }
+
+    /// Bytes per memory bank.
+    pub fn bank_bytes(&self) -> u64 {
+        self.data_mem_bytes / self.banks_per_tile
+    }
+
+    /// User-usable bytes for kernel buffers on one tile after reserving
+    /// system banks (paper: 32 KB − 4 KB = 28 KB).
+    pub fn user_mem_bytes(&self) -> u64 {
+        self.data_mem_bytes - self.system_banks * self.bank_bytes()
+    }
+
+    /// The single-kernel buffer budget from eq. (6): because all MatMul
+    /// buffers are double-buffered, each logical buffer set may use at most
+    /// half of the user memory (paper: 14 KB).
+    pub fn single_buffer_budget_bytes(&self) -> u64 {
+        self.user_mem_bytes() / 2
+    }
+
+    /// Peak throughput of the whole array in ops/s for `prec`
+    /// (2 ops per MAC), assuming every core runs MatMul at peak.
+    pub fn peak_ops_per_sec(&self, prec: Precision) -> f64 {
+        self.total_cores() as f64 * prec.peak_macs_per_cycle() as f64 * 2.0 * self.freq_hz
+    }
+
+    /// Total PLIOs (inputs + outputs) — used for the utilization column of
+    /// Tables II/III.
+    pub fn total_plios(&self) -> usize {
+        self.plio_in + self.plio_out
+    }
+
+    /// PLIO width in bits required for AIE/PL rate matching: the PL runs at
+    /// `pl_freq_hz`, the AIE stream moves 32 bits/cycle at `freq_hz`, so the
+    /// PL-side width must be `32 * freq/pl_freq` bits (paper §V: 128).
+    pub fn plio_width_bits(&self) -> u32 {
+        (32.0 * self.freq_hz / self.pl_freq_hz).round() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vc1902_matches_paper_constants() {
+        let d = AieDevice::vc1902();
+        assert_eq!(d.total_cores(), 400);
+        assert_eq!(d.total_banks(), 3200);
+        assert_eq!(d.bank_bytes(), 4096);
+        assert_eq!(d.user_mem_bytes(), 28 * 1024);
+        assert_eq!(d.single_buffer_budget_bytes(), 14 * 1024);
+        assert_eq!(d.plio_in, 78);
+        assert_eq!(d.plio_out, 117);
+        assert_eq!(d.total_plios(), 195);
+    }
+
+    #[test]
+    fn vc1902_peak_throughput_matches_wp506() {
+        // Paper intro: 400 cores @1.25GHz = 8 TFLOPs fp32, 128 TOPs int8.
+        let d = AieDevice::vc1902();
+        assert!((d.peak_ops_per_sec(Precision::Fp32) - 8e12).abs() < 1e6);
+        assert!((d.peak_ops_per_sec(Precision::Int8) - 128e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn plio_rate_matching_width_is_128_bits() {
+        // Paper §V: PLIO width 128 bits matches 1.25GHz AIE to 312.5MHz PL.
+        assert_eq!(AieDevice::vc1902().plio_width_bits(), 128);
+    }
+
+    #[test]
+    fn generic_device_scales() {
+        let d = AieDevice::half_vc1902();
+        assert_eq!(d.total_cores(), 200);
+        assert_eq!(d.total_plios(), 95);
+    }
+
+    #[test]
+    fn device_presets_by_name() {
+        for name in ["VC1902", "VC1902-half", "VC1802", "VC2802-like"] {
+            let d = AieDevice::by_name(name).unwrap();
+            assert_eq!(d.name, name);
+            assert!(d.total_cores() > 0);
+        }
+        assert!(AieDevice::by_name("XCVU9P").is_none());
+    }
+
+    #[test]
+    fn vc1802_is_6x50() {
+        let d = AieDevice::vc1802();
+        assert_eq!(d.total_cores(), 300);
+        // Peak scales with the array: 300/400 of the VC1902.
+        let ratio = d.peak_ops_per_sec(Precision::Int8)
+            / AieDevice::vc1902().peak_ops_per_sec(Precision::Int8);
+        assert!((ratio - 0.75).abs() < 1e-12);
+    }
+}

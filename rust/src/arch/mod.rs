@@ -1,0 +1,3 @@
+pub mod device;
+pub mod precision;
+pub mod topology;

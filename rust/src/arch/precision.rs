@@ -1,0 +1,124 @@
+//! Numeric precisions supported by the AIE vector datapath, with the
+//! constants the MaxEVA analytical model depends on (paper §IV-C).
+
+use std::fmt;
+
+/// Data precision of a MatMul design.
+///
+/// The paper targets the two most common DL precisions:
+/// * `Int8`  — 8-bit integer inputs with 32-bit integer accumulation.
+/// * `Fp32`  — IEEE 32-bit floating point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// int8 inputs, int32 accumulation/output (paper §IV-C1).
+    Int8,
+    /// IEEE fp32 throughout.
+    Fp32,
+    /// int16 inputs, int32 accumulation — EXTENSION (not evaluated by the
+    /// paper; AM009 lists 32 MACs/cyc).
+    Int16,
+    /// bfloat16 inputs, fp32 accumulation — EXTENSION (AM009: 16 MACs/cyc).
+    Bf16,
+}
+
+impl Precision {
+    /// Peak MACs per cycle of one AIE vector processor (AM009):
+    /// 128 for int8, 8 for fp32.
+    pub fn peak_macs_per_cycle(self) -> u64 {
+        match self {
+            Precision::Int8 => 128,
+            Precision::Fp32 => 8,
+            Precision::Int16 => 32,
+            Precision::Bf16 => 16,
+        }
+    }
+
+    /// Size in bytes of one *input* element (operand `a` or `b`).
+    pub fn sizeof_input(self) -> u64 {
+        match self {
+            Precision::Int8 => 1,
+            Precision::Fp32 => 4,
+            Precision::Int16 | Precision::Bf16 => 2,
+        }
+    }
+
+    /// Size in bytes of one *output* element (operand `c`).
+    ///
+    /// int8 MatMuls accumulate in 32 bits, so the output element is
+    /// 4 bytes in both precisions — this asymmetry is what makes the
+    /// int8 constraint eq. (5) bind on `K`.
+    pub fn sizeof_output(self) -> u64 {
+        4
+    }
+
+    /// Human-readable unit for throughput in this precision as used in the
+    /// paper's tables (GFLOPs for fp32, TOPs for int8).
+    pub fn ops_unit(self) -> &'static str {
+        match self {
+            Precision::Int8 | Precision::Int16 => "TOPs",
+            Precision::Fp32 | Precision::Bf16 => "GFLOPs",
+        }
+    }
+
+    /// The precisions the paper evaluates (Tables I–III).
+    pub fn all() -> [Precision; 2] {
+        [Precision::Int8, Precision::Fp32]
+    }
+
+    /// All precisions including the int16/bf16 extensions (model
+    /// constants for these are engineering estimates, not
+    /// paper-calibrated — see DESIGN.md §7).
+    pub fn extended() -> [Precision; 4] {
+        [Precision::Int8, Precision::Int16, Precision::Bf16, Precision::Fp32]
+    }
+
+    /// Parse from a CLI string ("int8" / "fp32", case-insensitive).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "int8" | "i8" => Some(Precision::Int8),
+            "fp32" | "f32" | "float32" => Some(Precision::Fp32),
+            "int16" | "i16" => Some(Precision::Int16),
+            "bf16" | "bfloat16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Precision::Int8 => write!(f, "int8"),
+            Precision::Fp32 => write!(f, "fp32"),
+            Precision::Int16 => write!(f, "int16"),
+            Precision::Bf16 => write!(f, "bf16"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_macs_match_am009() {
+        assert_eq!(Precision::Int8.peak_macs_per_cycle(), 128);
+        assert_eq!(Precision::Fp32.peak_macs_per_cycle(), 8);
+    }
+
+    #[test]
+    fn int8_accumulates_in_32_bits() {
+        assert_eq!(Precision::Int8.sizeof_input(), 1);
+        assert_eq!(Precision::Int8.sizeof_output(), 4);
+        assert_eq!(Precision::Fp32.sizeof_input(), 4);
+        assert_eq!(Precision::Fp32.sizeof_output(), 4);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in Precision::all() {
+            assert_eq!(Precision::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp64"), None);
+        assert_eq!(Precision::parse("bf16"), Some(Precision::Bf16));
+    }
+}

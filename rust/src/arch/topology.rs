@@ -1,0 +1,164 @@
+//! AIE array topology: tile coordinates and the direct memory-sharing
+//! neighbor rules of the checkerboarded array (paper §III-B, Fig. 2).
+//!
+//! Each AIE core can always access the memory module of its north and
+//! south neighbors. East/west access alternates with the row parity:
+//! cores in **even** rows access the module to their **west**, cores in
+//! **odd** rows access the module to their **east** (the memory module is
+//! physically placed on alternating sides). A core also accesses its own
+//! tile's module, for a total reach of up to 128 KB.
+
+use crate::arch::device::AieDevice;
+
+/// Coordinate of one AIE tile: `row` 0 is the bottom row (adjacent to the
+/// interface tiles), `col` 0 is the leftmost column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Coord {
+    pub fn new(row: usize, col: usize) -> Self {
+        Coord { row, col }
+    }
+
+    /// Flat index into a row-major array of tiles.
+    pub fn index(&self, dev: &AieDevice) -> usize {
+        self.row * dev.cols + self.col
+    }
+}
+
+/// Which memory modules the core at `c` can access *directly* (no DMA),
+/// including its own. Order: own, north, south, east/west (row-parity).
+pub fn direct_mem_neighbors(c: Coord, dev: &AieDevice) -> Vec<Coord> {
+    let mut v = vec![c];
+    if c.row + 1 < dev.rows {
+        v.push(Coord::new(c.row + 1, c.col));
+    }
+    if c.row > 0 {
+        v.push(Coord::new(c.row - 1, c.col));
+    }
+    if c.row % 2 == 0 {
+        // Even row: west module.
+        if c.col > 0 {
+            v.push(Coord::new(c.row, c.col - 1));
+        }
+    } else {
+        // Odd row: east module.
+        if c.col + 1 < dev.cols {
+            v.push(Coord::new(c.row, c.col + 1));
+        }
+    }
+    v
+}
+
+/// True if core `core` can directly access the memory module of tile `mem`
+/// (the relation is *not* symmetric in the east/west direction).
+pub fn can_access(core: Coord, mem: Coord, dev: &AieDevice) -> bool {
+    direct_mem_neighbors(core, dev).contains(&mem)
+}
+
+/// True if cores `a` and `b` share at least one directly-accessible memory
+/// module — the condition for DMA-free communication between them.
+pub fn share_memory(a: Coord, b: Coord, dev: &AieDevice) -> bool {
+    let na = direct_mem_neighbors(a, dev);
+    direct_mem_neighbors(b, dev).iter().any(|m| na.contains(m))
+}
+
+/// Manhattan distance between tiles (used by the router for hop counts).
+pub fn manhattan(a: Coord, b: Coord) -> usize {
+    a.row.abs_diff(b.row) + a.col.abs_diff(b.col)
+}
+
+/// Columns that host an AIE-PL interface tile.
+///
+/// On the VC1902 only 39 of the 50 columns have PL interface tiles (DS957);
+/// we model them as evenly spread across the array, which is how the
+/// physical device arranges them (the NoC columns take the remainder).
+pub fn interface_columns(dev: &AieDevice) -> Vec<usize> {
+    let n = dev.aie_pl_tiles.min(dev.cols);
+    if n == 0 {
+        return vec![];
+    }
+    // Evenly spaced selection of n columns out of dev.cols.
+    (0..n)
+        .map(|i| (i * dev.cols + dev.cols / 2) / n.max(1))
+        .map(|c| c.min(dev.cols - 1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    #[test]
+    fn even_row_accesses_west() {
+        let d = dev();
+        let c = Coord::new(2, 10);
+        assert!(can_access(c, Coord::new(2, 9), &d)); // west
+        assert!(!can_access(c, Coord::new(2, 11), &d)); // not east
+        assert!(can_access(c, Coord::new(3, 10), &d)); // north
+        assert!(can_access(c, Coord::new(1, 10), &d)); // south
+        assert!(can_access(c, c, &d)); // own
+    }
+
+    #[test]
+    fn odd_row_accesses_east() {
+        let d = dev();
+        let c = Coord::new(3, 10);
+        assert!(can_access(c, Coord::new(3, 11), &d)); // east
+        assert!(!can_access(c, Coord::new(3, 9), &d)); // not west
+    }
+
+    #[test]
+    fn edges_have_fewer_neighbors() {
+        let d = dev();
+        // Bottom-left corner, even row: no south, no west.
+        assert_eq!(direct_mem_neighbors(Coord::new(0, 0), &d).len(), 2); // own + north
+        // Top-right corner, odd row: no north, no east.
+        assert_eq!(direct_mem_neighbors(Coord::new(7, 49), &d).len(), 2); // own + south
+        // Interior tile reaches 4 modules = 128KB total.
+        assert_eq!(direct_mem_neighbors(Coord::new(4, 25), &d).len(), 4);
+    }
+
+    #[test]
+    fn vertical_neighbors_share_memory() {
+        let d = dev();
+        assert!(share_memory(Coord::new(1, 5), Coord::new(2, 5), &d));
+        // Two cores two rows apart share the module in between.
+        assert!(share_memory(Coord::new(1, 5), Coord::new(3, 5), &d));
+        // Far-away cores do not.
+        assert!(!share_memory(Coord::new(0, 0), Coord::new(7, 49), &d));
+    }
+
+    #[test]
+    fn east_west_sharing_follows_parity() {
+        let d = dev();
+        // Row 2 (even) core at col 6 reaches module (2,5); row 2 core at
+        // col 5 owns module (2,5): they share it.
+        assert!(share_memory(Coord::new(2, 6), Coord::new(2, 5), &d));
+        // Odd row: (3,5) reaches east module (3,6).
+        assert!(share_memory(Coord::new(3, 5), Coord::new(3, 6), &d));
+    }
+
+    #[test]
+    fn interface_columns_count_and_range() {
+        let d = dev();
+        let cols = interface_columns(&d);
+        assert_eq!(cols.len(), 39);
+        assert!(cols.iter().all(|&c| c < 50));
+        // Strictly increasing (distinct columns).
+        assert!(cols.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(manhattan(Coord::new(0, 0), Coord::new(3, 4)), 7);
+        assert_eq!(manhattan(Coord::new(2, 2), Coord::new(2, 2)), 0);
+    }
+}

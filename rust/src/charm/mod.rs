@@ -1,0 +1,191 @@
+//! The CHARM baseline [Zhuang et al., FPGA'23 + DAC'23] — the
+//! state-of-the-art MaxEVA compares against (Tables II/III bottom rows).
+//!
+//! CHARM maps MatMul onto the AIE array with an all-MatMul design: no
+//! on-array reduction, packet-switched input sharing, and far fewer PLIOs
+//! (80, i.e. 41% utilization), which becomes the performance bottleneck
+//! MaxEVA removes. For int8, CHARM only routes 192 of 400 cores (48%)
+//! because of routing congestion [34].
+//!
+//! The fp32 design is modelled from the open-source CHARM architecture
+//! (8×6×8 = 384 kernels of 32×32×32); the paper simulates it under the
+//! same no-PL/no-DRAM assumptions, measuring 4504.46 GFLOPs. The int8
+//! numbers are the authors' published 28.15 TOPs @1GHz, frequency-scaled
+//! to 1.25 GHz (35.19 TOPs) exactly as the paper does (§V-B2).
+
+use crate::arch::device::AieDevice;
+use crate::arch::precision::Precision;
+use crate::kernels::matmul::MatMulKernel;
+use crate::power::{estimate_power_all_matmul, PowerEstimate};
+
+/// Packet-switch sharing degree of CHARM's input streams: four kernels
+/// share one physical PLIO via dynamically-headed packets (the mechanism
+/// MaxEVA replaces with circuit-switched broadcast).
+pub const PKT_SHARE: u64 = 4;
+
+/// Per-packet header + reconfiguration overhead cycles (packet switching
+/// has non-deterministic latency; this is the mean service penalty,
+/// calibrated so the fp32 model reproduces the measured 4504.46 GFLOPs).
+pub const PKT_OVERHEAD_CYC: f64 = 722.0;
+
+/// The CHARM design point for a precision.
+#[derive(Debug, Clone)]
+pub struct CharmDesign {
+    pub prec: Precision,
+    pub kernel: MatMulKernel,
+    /// MatMul kernels (= AIE cores; CHARM runs no Add kernels).
+    pub kernels: u64,
+    /// Total PLIOs used.
+    pub plios: u64,
+    /// Memory banks used (fp32: measured by the paper's re-simulation).
+    pub memory_banks: u64,
+}
+
+/// CHARM simulation output (mirror of [`crate::sim::SimResult`] fields
+/// used in the tables).
+#[derive(Debug, Clone, Copy)]
+pub struct CharmResult {
+    pub period_cycles: f64,
+    pub ops_per_sec: f64,
+    pub efficiency: f64,
+}
+
+impl CharmDesign {
+    pub fn for_precision(prec: Precision) -> Self {
+        match prec {
+            // 8×6×8 architecture of the open-source fp32 CHARM.
+            Precision::Fp32 => CharmDesign {
+                prec,
+                kernel: MatMulKernel::new(32, 32, 32, prec),
+                kernels: 384,
+                plios: 80,
+                memory_banks: 3086,
+            },
+            // No CHARM baseline exists for the extension precisions.
+            Precision::Int16 | Precision::Bf16 => {
+                panic!("CHARM published only fp32/int8 designs (extension precisions have no baseline)")
+            }
+            // int8: 192 cores only (routing congestion, [34]).
+            Precision::Int8 => CharmDesign {
+                prec,
+                kernel: MatMulKernel::new(32, 128, 32, prec),
+                kernels: 192,
+                plios: 80,
+                memory_banks: 1552, // not published; scaled ~8 banks/core
+            },
+        }
+    }
+
+    /// Core utilization vs the device.
+    pub fn core_utilization(&self, dev: &AieDevice) -> f64 {
+        self.kernels as f64 / dev.total_cores() as f64
+    }
+
+    /// PLIO utilization vs the device (paper: 41% for fp32).
+    pub fn plio_utilization(&self, dev: &AieDevice) -> f64 {
+        self.plios as f64 / dev.total_plios() as f64
+    }
+
+    /// Simulate the CHARM design.
+    ///
+    /// * fp32: input delivery is packet-switched with `PKT_SHARE`-way
+    ///   sharing, so each kernel's per-iteration input service serializes
+    ///   behind its sharers' A/B packets plus per-packet overhead — the
+    ///   PLIO bottleneck MaxEVA removes (the paper measures CHARM's
+    ///   open-source fp32 design in its own harness; our packet model is
+    ///   calibrated to that measurement, 4504.46 GFLOPs).
+    /// * int8: CHARM int8 is closed-source; exactly like the paper
+    ///   (§V-B2), the comparison point is the authors' published
+    ///   28.15 TOPs @1 GHz frequency-scaled to 1.25 GHz, from which the
+    ///   per-kernel period is derived.
+    pub fn simulate(&self, dev: &AieDevice) -> CharmResult {
+        let kernel_cyc = self.kernel.latency_cycles() as f64;
+        let period = match self.prec {
+            Precision::Int16 | Precision::Bf16 => unreachable!("no CHARM baseline"),
+            Precision::Fp32 => {
+                let (a_cyc, _b, _c) = self.kernel.io_cycles(dev);
+                let input_service = PKT_SHARE as f64 * (a_cyc as f64 + PKT_OVERHEAD_CYC);
+                kernel_cyc.max(input_service)
+            }
+            Precision::Int8 => {
+                // Published 28.15 TOPs @1GHz, 192 kernels: derive cycles.
+                let pub_ops_at_1ghz = 28.15e12;
+                let ops = 2.0 * self.kernels as f64 * self.kernel.macs() as f64;
+                ops / pub_ops_at_1ghz * 1e9
+            }
+        };
+        let ops = 2.0 * self.kernels as f64 * self.kernel.macs() as f64;
+        let ops_per_sec = ops / (period / dev.freq_hz);
+        CharmResult {
+            period_cycles: period,
+            ops_per_sec,
+            efficiency: ops_per_sec / dev.peak_ops_per_sec(self.prec),
+        }
+    }
+
+    /// Power estimate (fp32 only in the paper; int8 power was not
+    /// publishable because CHARM int8 is closed-source — we still expose
+    /// the model's estimate, flagged in the report).
+    pub fn power(&self, dev: &AieDevice) -> PowerEstimate {
+        let r = self.simulate(dev);
+        estimate_power_all_matmul(self.prec, self.kernels, self.memory_banks, r.efficiency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    #[test]
+    fn charm_fp32_matches_paper_measurement() {
+        // Paper Table II: CHARM fp32 4504.46 GFLOPs (±1%).
+        let r = CharmDesign::for_precision(Precision::Fp32).simulate(&dev());
+        let gflops = r.ops_per_sec / 1e9;
+        assert!(
+            (gflops - 4504.46).abs() / 4504.46 < 0.01,
+            "measured {gflops:.2}"
+        );
+    }
+
+    #[test]
+    fn charm_int8_matches_scaled_publication() {
+        // Paper Table III: CHARM int8 35.19 TOPs (28.15 @1GHz × 1.25).
+        let r = CharmDesign::for_precision(Precision::Int8).simulate(&dev());
+        let tops = r.ops_per_sec / 1e12;
+        assert!((tops - 35.19).abs() / 35.19 < 0.02, "measured {tops:.2}");
+    }
+
+    #[test]
+    fn charm_plio_utilization_41_percent() {
+        let c = CharmDesign::for_precision(Precision::Fp32);
+        assert!((c.plio_utilization(&dev()) - 0.41).abs() < 0.005);
+    }
+
+    #[test]
+    fn charm_int8_uses_48_percent_cores() {
+        let c = CharmDesign::for_precision(Precision::Int8);
+        assert!((c.core_utilization(&dev()) - 0.48).abs() < 1e-9);
+    }
+
+    #[test]
+    fn charm_fp32_power_matches_paper() {
+        // Paper: CHARM core 26.95 W, memory 16.74 W, total 43.69 W (±3%).
+        let p = CharmDesign::for_precision(Precision::Fp32).power(&dev());
+        assert!((p.core_w - 26.95).abs() / 26.95 < 0.01, "{}", p.core_w);
+        assert!((p.memory_w - 16.74).abs() / 16.74 < 0.03, "{}", p.memory_w);
+        assert!((p.total_w() - 43.69).abs() / 43.69 < 0.02, "{}", p.total_w());
+    }
+
+    #[test]
+    fn charm_energy_efficiency_fp32() {
+        // Paper: 103.10 GFLOPs/W (±3%).
+        let c = CharmDesign::for_precision(Precision::Fp32);
+        let r = c.simulate(&dev());
+        let ee = c.power(&dev()).energy_efficiency(r.ops_per_sec) / 1e9;
+        assert!((ee - 103.10).abs() / 103.10 < 0.03, "{ee}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Configuration system: typed schemas serialized to/from JSON files
+//! (dependency-free; see [`json`]).
+
+pub mod json;
+pub mod schema;
+
+pub use json::{Json, JsonError};
+pub use schema::{DesignConfig, RunConfig, ServeConfig};

@@ -1,0 +1,315 @@
+//! Typed configuration schemas for the launcher and benches.
+
+use crate::arch::device::AieDevice;
+use crate::arch::precision::Precision;
+use crate::config::json::Json;
+use crate::kernels::matmul::MatMulKernel;
+use crate::optimizer::array::ArrayCandidate;
+use crate::placement::pattern::Pattern;
+use crate::sim::engine::SimConfig;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(#[from] crate::config::json::JsonError),
+    #[error("missing field '{0}'")]
+    Missing(&'static str),
+    #[error("invalid value for '{0}': {1}")]
+    Invalid(&'static str, String),
+}
+
+/// A complete design configuration: device + precision + mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignConfig {
+    pub device: String,
+    pub precision: Precision,
+    pub x: u64,
+    pub y: u64,
+    pub z: u64,
+    pub pattern: Pattern,
+    /// Single-kernel tile size (defaults to the paper kernel for the
+    /// precision when omitted).
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+}
+
+impl DesignConfig {
+    /// The paper's flagship configuration for a precision
+    /// (13×4×6, pattern P1 — Tables II/III row 1).
+    pub fn flagship(precision: Precision) -> Self {
+        let k = MatMulKernel::paper_kernel(precision);
+        DesignConfig {
+            device: "VC1902".into(),
+            precision,
+            x: 13,
+            y: 4,
+            z: 6,
+            pattern: Pattern::P1,
+            m: k.m,
+            k: k.k,
+            n: k.n,
+        }
+    }
+
+    pub fn device(&self) -> Result<AieDevice, ConfigError> {
+        AieDevice::by_name(&self.device)
+            .ok_or_else(|| ConfigError::Invalid("device", self.device.clone()))
+    }
+
+    pub fn candidate(&self) -> ArrayCandidate {
+        ArrayCandidate::new(self.x, self.y, self.z)
+    }
+
+    pub fn kernel(&self) -> MatMulKernel {
+        MatMulKernel::new(self.m, self.k, self.n, self.precision)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("device".into(), Json::Str(self.device.clone()));
+        o.insert("precision".into(), Json::Str(self.precision.to_string()));
+        o.insert("x".into(), Json::Num(self.x as f64));
+        o.insert("y".into(), Json::Num(self.y as f64));
+        o.insert("z".into(), Json::Num(self.z as f64));
+        o.insert("pattern".into(), Json::Str(self.pattern.to_string()));
+        o.insert("m".into(), Json::Num(self.m as f64));
+        o.insert("k".into(), Json::Num(self.k as f64));
+        o.insert("n".into(), Json::Num(self.n as f64));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let s = |f: &'static str| -> Result<&str, ConfigError> {
+            v.get(f).and_then(Json::as_str).ok_or(ConfigError::Missing(f))
+        };
+        let u = |f: &'static str| -> Result<u64, ConfigError> {
+            v.get(f).and_then(Json::as_u64).ok_or(ConfigError::Missing(f))
+        };
+        let precision = Precision::parse(s("precision")?)
+            .ok_or_else(|| ConfigError::Invalid("precision", s("precision").unwrap().into()))?;
+        let pattern = Pattern::parse(s("pattern")?)
+            .ok_or_else(|| ConfigError::Invalid("pattern", s("pattern").unwrap().into()))?;
+        let paper = MatMulKernel::paper_kernel(precision);
+        Ok(DesignConfig {
+            device: s("device").unwrap_or("VC1902").to_string(),
+            precision,
+            x: u("x")?,
+            y: u("y")?,
+            z: u("z")?,
+            pattern,
+            m: u("m").unwrap_or(paper.m),
+            k: u("k").unwrap_or(paper.k),
+            n: u("n").unwrap_or(paper.n),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ConfigError> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Simulation / run parameters attached to a design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub design: DesignConfig,
+    pub sim_iters: usize,
+    pub seed: u64,
+    pub jitter_amp: f64,
+}
+
+impl RunConfig {
+    pub fn new(design: DesignConfig) -> Self {
+        let d = SimConfig::default();
+        RunConfig {
+            design,
+            sim_iters: d.iters,
+            seed: d.seed,
+            jitter_amp: d.jitter_amp,
+        }
+    }
+
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            iters: self.sim_iters,
+            seed: self.seed,
+            jitter_amp: self.jitter_amp,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("design".into(), self.design.to_json());
+        o.insert("sim_iters".into(), Json::Num(self.sim_iters as f64));
+        o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert("jitter_amp".into(), Json::Num(self.jitter_amp));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let design =
+            DesignConfig::from_json(v.get("design").ok_or(ConfigError::Missing("design"))?)?;
+        let d = SimConfig::default();
+        Ok(RunConfig {
+            design,
+            sim_iters: v.get("sim_iters").and_then(Json::as_u64).unwrap_or(d.iters as u64)
+                as usize,
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(d.seed),
+            jitter_amp: v
+                .get("jitter_amp")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.jitter_amp),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), ConfigError> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Serving-layer configuration (the end-to-end coordinator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub design: DesignConfig,
+    /// Path to the AOT artifact directory.
+    pub artifacts_dir: String,
+    /// Worker threads executing tile jobs.
+    pub workers: usize,
+    /// Maximum queued requests before backpressure.
+    pub queue_depth: usize,
+}
+
+impl ServeConfig {
+    pub fn new(design: DesignConfig) -> Self {
+        ServeConfig {
+            design,
+            artifacts_dir: "artifacts".into(),
+            workers: 2,
+            queue_depth: 64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("design".into(), self.design.to_json());
+        o.insert("artifacts_dir".into(), Json::Str(self.artifacts_dir.clone()));
+        o.insert("workers".into(), Json::Num(self.workers as f64));
+        o.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let design =
+            DesignConfig::from_json(v.get("design").ok_or(ConfigError::Missing("design"))?)?;
+        Ok(ServeConfig {
+            design,
+            artifacts_dir: v
+                .get("artifacts_dir")
+                .and_then(Json::as_str)
+                .unwrap_or("artifacts")
+                .to_string(),
+            workers: v.get("workers").and_then(Json::as_u64).unwrap_or(2) as usize,
+            queue_depth: v.get("queue_depth").and_then(Json::as_u64).unwrap_or(64) as usize,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flagship_roundtrip() {
+        for p in Precision::all() {
+            let c = DesignConfig::flagship(p);
+            let j = c.to_json();
+            assert_eq!(DesignConfig::from_json(&j).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn flagship_matches_paper_row1() {
+        let c = DesignConfig::flagship(Precision::Int8);
+        assert_eq!((c.x, c.y, c.z), (13, 4, 6));
+        assert_eq!(c.pattern, Pattern::P1);
+        assert_eq!((c.m, c.k, c.n), (32, 128, 32));
+    }
+
+    #[test]
+    fn run_config_roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("maxeva_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        let rc = RunConfig::new(DesignConfig::flagship(Precision::Fp32));
+        rc.save(&path).unwrap();
+        let loaded = RunConfig::load(&path).unwrap();
+        assert_eq!(loaded, rc);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let v = Json::parse(r#"{"precision": "fp32"}"#).unwrap();
+        assert!(DesignConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn invalid_precision_error() {
+        let v = Json::parse(
+            r#"{"device":"VC1902","precision":"fp64","x":1,"y":3,"z":1,"pattern":"P2"}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            DesignConfig::from_json(&v),
+            Err(ConfigError::Invalid("precision", _))
+        ));
+    }
+
+    #[test]
+    fn kernel_defaults_to_paper_kernel() {
+        let v = Json::parse(
+            r#"{"device":"VC1902","precision":"int8","x":13,"y":4,"z":6,"pattern":"P1"}"#,
+        )
+        .unwrap();
+        let c = DesignConfig::from_json(&v).unwrap();
+        assert_eq!((c.m, c.k, c.n), (32, 128, 32));
+    }
+
+    #[test]
+    fn serve_config_defaults() {
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"}}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&v).unwrap();
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn unknown_device_rejected_at_instantiation() {
+        let mut c = DesignConfig::flagship(Precision::Fp32);
+        c.device = "VP9999".into();
+        assert!(c.device().is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! The device thread: owns the PJRT runtime (whose handles are not
+//! `Send`) and serves native-size tile jobs over a channel — the software
+//! stand-in for the AIE array device.
+//!
+//! Each invocation advances the simulated device clock by the design's
+//! steady-state iteration period, giving VCK190-equivalent device time.
+
+use crate::config::schema::DesignConfig;
+use crate::runtime::{artifacts_available, Runtime};
+use crate::sim::engine::{simulate_design, SimConfig};
+use crate::placement::placer::place_design;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A native-size f32 tile job: `a` is `nm×nk`, `b` is `nk×nn` row-major.
+pub struct TileJobF32 {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Job(TileJobF32),
+    Shutdown,
+}
+
+/// Handle to the running device thread.
+pub struct DeviceHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    /// Native design size (nm, nk, nn).
+    pub native: (u64, u64, u64),
+    /// Simulated device cycles consumed (fixed-point: whole cycles).
+    cycles: Arc<AtomicU64>,
+    /// Iteration period in cycles (diagnostics).
+    pub period_cycles: f64,
+    /// Device frequency.
+    pub freq_hz: f64,
+    /// Number of invocations served.
+    invocations: Arc<AtomicU64>,
+}
+
+impl DeviceHandle {
+    /// Submit one native tile job.
+    pub fn submit(&self, job: TileJobF32) -> Result<()> {
+        self.tx
+            .send(Msg::Job(job))
+            .map_err(|_| anyhow!("device thread gone"))
+    }
+
+    /// Convenience: execute one tile synchronously.
+    pub fn execute_tile(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(TileJobF32 { a, b, reply })?;
+        rx.recv().context("device reply channel closed")?
+    }
+
+    /// Simulated device time consumed so far, seconds.
+    pub fn device_time_s(&self) -> f64 {
+        self.cycles.load(Ordering::Relaxed) as f64 / self.freq_hz
+    }
+
+    /// Invocations served.
+    pub fn invocations(&self) -> u64 {
+        self.invocations.load(Ordering::Relaxed)
+    }
+
+    /// Stop the device thread and wait for it.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for DeviceHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Artifact name for a design (shared scheme with aot.py).
+pub fn artifact_name(design: &DesignConfig) -> String {
+    format!(
+        "array_{}_{}x{}x{}",
+        design.precision, design.x, design.y, design.z
+    )
+}
+
+/// Spawn the device thread for `design`, loading its artifact from
+/// `artifacts_dir`. Fails fast if the artifact is missing.
+pub fn spawn_device(artifacts_dir: PathBuf, design: DesignConfig) -> Result<DeviceHandle> {
+    if !artifacts_available(&artifacts_dir) {
+        return Err(anyhow!(
+            "artifacts not found in {} — run `make artifacts` first",
+            artifacts_dir.display()
+        ));
+    }
+    let dev = design.device()?;
+    let cand = design.candidate();
+    let kernel = design.kernel();
+    let native = (cand.x * kernel.m, cand.y * kernel.k, cand.z * kernel.n);
+
+    // Device-time model from the simulator.
+    let placed = place_design(&dev, cand, design.pattern, kernel)
+        .map_err(|e| anyhow!("placement failed: {e}"))?;
+    let sim = simulate_design(&dev, &placed, &SimConfig::default());
+    let period = sim.period_cycles;
+    let freq = dev.freq_hz;
+
+    let cycles = Arc::new(AtomicU64::new(0));
+    let invocations = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let name = artifact_name(&design);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+    let cycles_t = Arc::clone(&cycles);
+    let invocations_t = Arc::clone(&invocations);
+    let join = std::thread::Builder::new()
+        .name("maxeva-device".into())
+        .spawn(move || {
+            // PJRT handles are created inside the thread (not Send).
+            // §Perf: prefer the panel-scheduled `_fast` artifact (same
+            // Pallas kernel, coarsened BlockSpec — ~11× faster on CPU
+            // PJRT, identical reduction order; EXPERIMENTS.md §Perf).
+            let init = (|| -> Result<_> {
+                let rt = Runtime::cpu()?;
+                let fast = crate::runtime::artifact_path(&artifacts_dir, &format!("{name}_fast"));
+                let exe = if fast.exists() {
+                    rt.load(&fast)?
+                } else {
+                    rt.load_named(&artifacts_dir, &name)?
+                };
+                Ok((rt, exe))
+            })();
+            let exe = match init {
+                Ok((_rt, exe)) => {
+                    let _ = ready_tx.send(Ok(()));
+                    exe
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let (nm, nk, nn) = (native.0 as i64, native.1 as i64, native.2 as i64);
+            while let Ok(Msg::Job(job)) = rx.recv() {
+                let res = exe.run_f32(&[
+                    (job.a.as_slice(), &[nm, nk][..]),
+                    (job.b.as_slice(), &[nk, nn][..]),
+                ]);
+                cycles_t.fetch_add(period as u64, Ordering::Relaxed);
+                invocations_t.fetch_add(1, Ordering::Relaxed);
+                let _ = job.reply.send(res);
+            }
+        })
+        .context("spawning device thread")?;
+
+    // Wait for the artifact to compile (or fail).
+    ready_rx
+        .recv()
+        .context("device thread died during init")??;
+
+    Ok(DeviceHandle {
+        tx,
+        join: Some(join),
+        native,
+        cycles,
+        period_cycles: period,
+        freq_hz: freq,
+        invocations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+
+    #[test]
+    fn artifact_name_scheme() {
+        let d = DesignConfig::flagship(Precision::Fp32);
+        assert_eq!(artifact_name(&d), "array_fp32_13x4x6");
+        let d8 = DesignConfig::flagship(Precision::Int8);
+        assert_eq!(artifact_name(&d8), "array_int8_13x4x6");
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_without_artifacts() {
+        let dir = std::env::temp_dir().join("maxeva_no_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        match spawn_device(dir, DesignConfig::flagship(Precision::Fp32)) {
+            Err(err) => assert!(err.to_string().contains("make artifacts"), "{err}"),
+            Ok(_) => panic!("spawn must fail without artifacts"),
+        }
+    }
+
+    // Full execution tests live in rust/tests/runtime_artifacts.rs.
+}

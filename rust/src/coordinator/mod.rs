@@ -1,0 +1,25 @@
+//! The serving coordinator — the L3 runtime path.
+//!
+//! Arbitrary-size MatMul requests are padded and tiled to the design's
+//! native size ([`tiler`]), scheduled as tile jobs with round-robin
+//! dynamic batching across in-flight requests ([`server`]), and executed
+//! on the PJRT runtime by a dedicated device thread ([`device`]) — the
+//! software stand-in for the VCK190's AIE array. Python never runs here;
+//! the device thread executes the AOT artifacts produced once at build
+//! time.
+//!
+//! Device-time accounting: every artifact invocation advances the
+//! simulated device clock by the design's iteration period (from
+//! [`crate::sim`]), so the coordinator reports both wall-clock (CPU
+//! emulation) and device-time (VCK190-equivalent) throughput without
+//! conflating them.
+
+pub mod device;
+pub mod server;
+pub mod trace;
+pub mod stats;
+pub mod tiler;
+
+pub use device::{spawn_device, DeviceHandle};
+pub use server::{MatMulServer, ServerStats};
+pub use tiler::Tiler;

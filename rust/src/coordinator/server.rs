@@ -1,0 +1,173 @@
+//! The MatMul serving layer: request queue + dynamic tile batcher on top
+//! of the device thread.
+//!
+//! Requests of arbitrary `M×K×N` are decomposed into native-size tile
+//! jobs. The scheduler interleaves tiles of all in-flight requests
+//! round-robin ("dynamic batching" at tile granularity — the device never
+//! idles between requests, and small requests are not starved behind
+//! large ones), accumulates partial blocks, and completes requests in
+//! submission order per stream.
+
+use crate::config::schema::ServeConfig;
+use crate::coordinator::device::{spawn_device, DeviceHandle};
+use crate::coordinator::stats::{Completion, StatsAgg};
+use crate::coordinator::tiler::Tiler;
+use crate::workloads::MatMulRequest;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Serving statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub invocations: u64,
+    pub mean_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Device-time throughput (ops/s) over the whole stream.
+    pub device_ops_per_sec: f64,
+    /// Total simulated device time (s).
+    pub device_time_s: f64,
+    /// Total wall time (s) spent in `run_batch`.
+    pub wall_time_s: f64,
+}
+
+/// One in-flight request's state.
+struct InFlight {
+    req: MatMulRequest,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    /// Tile cursor: (im, ik, in) lexicographic.
+    cursor: u64,
+    total_tiles: u64,
+    started: Instant,
+    invocations: u64,
+    device_s0: f64,
+}
+
+/// The serving coordinator.
+pub struct MatMulServer {
+    device: DeviceHandle,
+    tiler: Tiler,
+    stats: StatsAgg,
+    wall_time_s: f64,
+}
+
+impl MatMulServer {
+    /// Start the server: spawns the device thread and compiles the
+    /// design's artifact.
+    pub fn start(cfg: &ServeConfig) -> Result<Self> {
+        let device = spawn_device(cfg.artifacts_dir.clone().into(), cfg.design.clone())?;
+        let tiler = Tiler::new(device.native);
+        Ok(MatMulServer {
+            device,
+            tiler,
+            stats: StatsAgg::default(),
+            wall_time_s: 0.0,
+        })
+    }
+
+    /// Native design size (nm, nk, nn).
+    pub fn native(&self) -> (u64, u64, u64) {
+        self.device.native
+    }
+
+    /// Execute one request synchronously (convenience path).
+    pub fn execute(&mut self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+        let mut out = self.run_batch(vec![(req, a, b)])?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Execute a batch of requests with round-robin tile interleaving.
+    /// Returns the outputs in request order.
+    pub fn run_batch(
+        &mut self,
+        batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let wall0 = Instant::now();
+        let mut flights: Vec<InFlight> = batch
+            .into_iter()
+            .map(|(req, a, b)| {
+                assert_eq!(a.len() as u64, req.m * req.k, "A shape mismatch");
+                assert_eq!(b.len() as u64, req.k * req.n, "B shape mismatch");
+                let (gm, gk, gn) = self.tiler.grid(req.m as usize, req.k as usize, req.n as usize);
+                InFlight {
+                    c: vec![0.0; (req.m * req.n) as usize],
+                    cursor: 0,
+                    total_tiles: (gm * gk * gn) as u64,
+                    started: Instant::now(),
+                    invocations: 0,
+                    device_s0: self.device.device_time_s(),
+                    req,
+                    a,
+                    b,
+                }
+            })
+            .collect();
+
+        let mut outputs: Vec<Option<Vec<f32>>> = (0..flights.len()).map(|_| None).collect();
+        // Round-robin over in-flight requests, one tile each per turn.
+        while flights.iter().any(|f| f.cursor < f.total_tiles) {
+            for (idx, f) in flights.iter_mut().enumerate() {
+                if f.cursor >= f.total_tiles {
+                    continue;
+                }
+                self.step_tile(f)?;
+                if f.cursor == f.total_tiles {
+                    // Completed.
+                    let wall = f.started.elapsed();
+                    self.stats.record(Completion {
+                        id: f.req.id,
+                        macs: f.req.macs(),
+                        wall,
+                        device_s: self.device.device_time_s() - f.device_s0,
+                        invocations: f.invocations,
+                    });
+                    outputs[idx] = Some(std::mem::take(&mut f.c));
+                }
+            }
+        }
+        self.wall_time_s += wall0.elapsed().as_secs_f64();
+        Ok(outputs.into_iter().map(|o| o.unwrap()).collect())
+    }
+
+    /// Execute the next tile of one in-flight request.
+    fn step_tile(&mut self, f: &mut InFlight) -> Result<()> {
+        let (m, k, n) = (f.req.m as usize, f.req.k as usize, f.req.n as usize);
+        let (_gm, gk, gn) = self.tiler.grid(m, k, n);
+        let cur = f.cursor as usize;
+        // Lexicographic (im, ik, in).
+        let im = cur / (gk * gn);
+        let ik = (cur / gn) % gk;
+        let inn = cur % gn;
+        let (nm, nk, nn) = (self.tiler.nm, self.tiler.nk, self.tiler.nn);
+        let ab = Tiler::extract_block(&f.a, m, k, im, ik, nm, nk);
+        let bb = Tiler::extract_block(&f.b, k, n, ik, inn, nk, nn);
+        let cb = self.device.execute_tile(ab, bb)?;
+        Tiler::accumulate_block(&mut f.c, m, n, im, inn, nm, nn, &cb);
+        f.cursor += 1;
+        f.invocations += 1;
+        Ok(())
+    }
+
+    /// Snapshot serving statistics.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            requests: self.stats.count(),
+            invocations: self.device.invocations(),
+            mean_latency_ms: self.stats.mean_latency_ms(),
+            p99_latency_ms: self.stats.p99_latency_ms(),
+            device_ops_per_sec: self.stats.device_ops_per_sec(),
+            device_time_s: self.device.device_time_s(),
+            wall_time_s: self.wall_time_s,
+        }
+    }
+
+    /// Shut the device thread down.
+    pub fn shutdown(self) {
+        self.device.shutdown();
+    }
+}
+
+// Integration tests (needing built artifacts) live in
+// rust/tests/serving_e2e.rs.

@@ -1,0 +1,100 @@
+//! Request/serving statistics.
+
+use crate::util::stats::{mean, percentile};
+use std::time::Duration;
+
+/// Completion record for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub id: u64,
+    pub macs: u64,
+    pub wall: Duration,
+    /// Device time consumed by this request's tiles (seconds).
+    pub device_s: f64,
+    /// Tile invocations issued.
+    pub invocations: u64,
+}
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct StatsAgg {
+    completions: Vec<Completion>,
+}
+
+impl StatsAgg {
+    pub fn record(&mut self, c: Completion) {
+        self.completions.push(c);
+    }
+
+    pub fn count(&self) -> usize {
+        self.completions.len()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.completions.iter().map(|c| c.macs).sum()
+    }
+
+    pub fn total_device_s(&self) -> f64 {
+        self.completions.iter().map(|c| c.device_s).sum()
+    }
+
+    pub fn wall_latencies_ms(&self) -> Vec<f64> {
+        self.completions
+            .iter()
+            .map(|c| c.wall.as_secs_f64() * 1e3)
+            .collect()
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        mean(&self.wall_latencies_ms())
+    }
+
+    pub fn p99_latency_ms(&self) -> f64 {
+        percentile(&self.wall_latencies_ms(), 99.0)
+    }
+
+    /// Device-time throughput in ops/s (2 ops per MAC): what the VCK190
+    /// would sustain on this request stream.
+    pub fn device_ops_per_sec(&self) -> f64 {
+        let t = self.total_device_s();
+        if t == 0.0 {
+            return 0.0;
+        }
+        2.0 * self.total_macs() as f64 / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut s = StatsAgg::default();
+        s.record(Completion {
+            id: 0,
+            macs: 1000,
+            wall: Duration::from_millis(10),
+            device_s: 1e-6,
+            invocations: 1,
+        });
+        s.record(Completion {
+            id: 1,
+            macs: 3000,
+            wall: Duration::from_millis(30),
+            device_s: 3e-6,
+            invocations: 3,
+        });
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.total_macs(), 4000);
+        assert!((s.mean_latency_ms() - 20.0).abs() < 1e-9);
+        assert!((s.device_ops_per_sec() - 2.0 * 4000.0 / 4e-6).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = StatsAgg::default();
+        assert_eq!(s.device_ops_per_sec(), 0.0);
+        assert_eq!(s.mean_latency_ms(), 0.0);
+    }
+}

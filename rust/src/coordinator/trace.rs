@@ -1,0 +1,194 @@
+//! Trace-driven, open-loop serving analysis in *device time*.
+//!
+//! The live coordinator ([`crate::coordinator::server`]) executes real
+//! numerics through PJRT; this module answers the capacity-planning
+//! question instead: given the calibrated device model, how does the
+//! VCK190 behave under a request *arrival process* — queueing delay,
+//! latency percentiles, utilization — without paying CPU emulation cost.
+//! (An M/D/1-style simulation: deterministic per-request service derived
+//! from the tiling model, stochastic arrivals.)
+
+use crate::tiling::padding::TiledWorkload;
+use crate::kernels::matmul::MatMulKernel;
+use crate::optimizer::array::ArrayCandidate;
+use crate::util::prng::XorShift64;
+use crate::util::stats::{mean, percentile};
+use crate::workloads::MatMulRequest;
+
+/// One simulated completion.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceCompletion {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+impl TraceCompletion {
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+    pub fn queueing_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+}
+
+/// Result of a trace replay.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub completions: Vec<TraceCompletion>,
+    /// Device busy fraction over the makespan.
+    pub utilization: f64,
+    /// Offered load: mean arrival work rate / device service rate.
+    pub offered_load: f64,
+}
+
+impl TraceReport {
+    pub fn mean_latency_ms(&self) -> f64 {
+        mean(&self.completions.iter().map(|c| c.latency_s() * 1e3).collect::<Vec<_>>())
+    }
+    pub fn p99_latency_ms(&self) -> f64 {
+        percentile(
+            &self.completions.iter().map(|c| c.latency_s() * 1e3).collect::<Vec<_>>(),
+            99.0,
+        )
+    }
+    pub fn mean_queueing_ms(&self) -> f64 {
+        mean(&self.completions.iter().map(|c| c.queueing_s() * 1e3).collect::<Vec<_>>())
+    }
+}
+
+/// Replay `requests` with Poisson arrivals at `rate_hz` through a device
+/// whose iteration period is `period_cycles` at `freq_hz`, FIFO service.
+pub fn replay_trace(
+    requests: &[MatMulRequest],
+    cand: &ArrayCandidate,
+    kernel: &MatMulKernel,
+    period_cycles: f64,
+    freq_hz: f64,
+    rate_hz: f64,
+    seed: u64,
+) -> TraceReport {
+    let mut rng = XorShift64::new(seed);
+    // Exponential inter-arrivals.
+    let mut t = 0.0;
+    let arrivals: Vec<f64> = requests
+        .iter()
+        .map(|_| {
+            let u: f64 = rng.next_f64().max(1e-12);
+            t += -u.ln() / rate_hz;
+            t
+        })
+        .collect();
+
+    let mut device_free = 0.0f64;
+    let mut busy = 0.0f64;
+    let mut completions = Vec::with_capacity(requests.len());
+    for (req, &arr) in requests.iter().zip(&arrivals) {
+        let w = TiledWorkload::new(req.m, req.k, req.n, cand, kernel);
+        let service = w.device_time_s(period_cycles, freq_hz);
+        let start = device_free.max(arr);
+        let finish = start + service;
+        device_free = finish;
+        busy += service;
+        completions.push(TraceCompletion {
+            id: req.id,
+            arrival_s: arr,
+            start_s: start,
+            finish_s: finish,
+        });
+    }
+    let makespan = completions.last().map(|c| c.finish_s).unwrap_or(0.0);
+    let total_arrival_span = arrivals.last().copied().unwrap_or(0.0).max(1e-12);
+    TraceReport {
+        utilization: if makespan > 0.0 { busy / makespan } else { 0.0 },
+        offered_load: busy / total_arrival_span,
+        completions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+    use crate::workloads::random_trace;
+
+    fn setup() -> (ArrayCandidate, MatMulKernel) {
+        (
+            ArrayCandidate::new(13, 4, 6),
+            MatMulKernel::paper_kernel(Precision::Fp32),
+        )
+    }
+
+    #[test]
+    fn low_load_has_no_queueing() {
+        let (cand, kernel) = setup();
+        let reqs = random_trace(50, 3);
+        // 1 request/s: service times are µs-scale → zero queueing.
+        let r = replay_trace(&reqs, &cand, &kernel, 4700.0, 1.25e9, 1.0, 9);
+        assert!(r.mean_queueing_ms() < 1e-3, "{}", r.mean_queueing_ms());
+        assert!(r.utilization < 0.01);
+    }
+
+    #[test]
+    fn overload_queues_grow() {
+        let (cand, kernel) = setup();
+        let reqs = random_trace(200, 3);
+        // Find a rate far above capacity: mean service of the trace.
+        let mean_service: f64 = reqs
+            .iter()
+            .map(|q| {
+                TiledWorkload::new(q.m, q.k, q.n, &cand, &kernel).device_time_s(4700.0, 1.25e9)
+            })
+            .sum::<f64>()
+            / reqs.len() as f64;
+        let rate = 3.0 / mean_service; // 3× overload
+        let r = replay_trace(&reqs, &cand, &kernel, 4700.0, 1.25e9, rate, 9);
+        assert!(r.offered_load > 1.5, "{}", r.offered_load);
+        assert!(r.utilization > 0.9);
+        // Latency dominated by queueing, and p99 >> mean.
+        assert!(r.mean_queueing_ms() > 0.5 * r.mean_latency_ms());
+        assert!(r.p99_latency_ms() > r.mean_latency_ms());
+    }
+
+    #[test]
+    fn latency_monotone_in_load() {
+        let (cand, kernel) = setup();
+        let reqs = random_trace(100, 5);
+        let mean_service: f64 = reqs
+            .iter()
+            .map(|q| {
+                TiledWorkload::new(q.m, q.k, q.n, &cand, &kernel).device_time_s(4700.0, 1.25e9)
+            })
+            .sum::<f64>()
+            / reqs.len() as f64;
+        let mut last = 0.0;
+        for load in [0.3, 0.7, 0.95] {
+            let r = replay_trace(&reqs, &cand, &kernel, 4700.0, 1.25e9, load / mean_service, 9);
+            assert!(
+                r.mean_latency_ms() >= last,
+                "latency must grow with load ({load})"
+            );
+            last = r.mean_latency_ms();
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cand, kernel) = setup();
+        let reqs = random_trace(20, 1);
+        let a = replay_trace(&reqs, &cand, &kernel, 4700.0, 1.25e9, 1000.0, 4);
+        let b = replay_trace(&reqs, &cand, &kernel, 4700.0, 1.25e9, 1000.0, 4);
+        assert_eq!(a.mean_latency_ms(), b.mean_latency_ms());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let (cand, kernel) = setup();
+        let reqs = random_trace(30, 2);
+        let r = replay_trace(&reqs, &cand, &kernel, 4700.0, 1.25e9, 1e6, 4);
+        for w in r.completions.windows(2) {
+            assert!(w[1].start_s >= w[0].finish_s - 1e-12);
+        }
+    }
+}

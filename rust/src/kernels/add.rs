@@ -1,0 +1,131 @@
+//! The Add (reduction) kernel model.
+//!
+//! One Add kernel computes `S (M×N) = P (M×N) + Q (M×N)` elementwise. A
+//! whole adder tree of `Y−1` Add kernels runs *sequentially* on a single
+//! AIE core (paper §IV-B, Fig. 5): only single buffers are needed between
+//! the adds, halving memory versus spreading the tree over cores, and the
+//! tree latency stays far below the MatMul latency so it never becomes the
+//! bottleneck.
+//!
+//! Calibration: the paper measures (Table I) 164 cycles for a 32×32 int32
+//! add and 167 for fp32 — efficiencies 78.05% / 76.65% against the 8-lane
+//! fp32-equivalent peak. We model `latency = elems / (8 · eff_add)` with
+//! `eff_add` fit per precision.
+
+use crate::arch::precision::Precision;
+
+/// Vector lanes used by the paper's efficiency accounting for Add kernels
+/// (both precisions evaluated against an 8-lane peak in Table I).
+const ADD_PEAK_LANES: f64 = 8.0;
+
+/// Calibrated Add-kernel efficiency (Table I).
+pub fn add_efficiency(prec: Precision) -> f64 {
+    match prec {
+        Precision::Int8 => 0.7805, // int32 accumulator adds
+        Precision::Fp32 => 0.7665,
+        // Extensions: midpoint estimate (accumulators are 32-bit either way).
+        Precision::Int16 | Precision::Bf16 => 0.7735,
+    }
+}
+
+/// A single Add kernel over an `M×N` tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddKernel {
+    pub m: u64,
+    pub n: u64,
+    /// Precision of the *design*; int8 designs reduce int32 partials.
+    pub prec: Precision,
+}
+
+impl AddKernel {
+    pub fn new(m: u64, n: u64, prec: Precision) -> Self {
+        AddKernel { m, n, prec }
+    }
+
+    /// Elements reduced per invocation.
+    pub fn elems(&self) -> u64 {
+        self.m * self.n
+    }
+
+    /// Modelled latency in cycles of one Add kernel invocation.
+    pub fn latency_cycles(&self) -> u64 {
+        (self.elems() as f64 / (ADD_PEAK_LANES * add_efficiency(self.prec))).round() as u64
+    }
+
+    /// Achieved ops (adds) per cycle.
+    pub fn throughput_ops_per_cycle(&self) -> f64 {
+        self.elems() as f64 / self.latency_cycles() as f64
+    }
+
+    /// Efficiency against the 8-lane peak (paper Table I definition).
+    pub fn efficiency(&self) -> f64 {
+        self.throughput_ops_per_cycle() / ADD_PEAK_LANES
+    }
+
+    /// Latency of the whole sequential adder tree reducing `y` partial
+    /// tiles (`y − 1` adds on one core).
+    pub fn tree_latency_cycles(&self, y: u64) -> u64 {
+        assert!(y >= 1);
+        (y - 1) * self.latency_cycles()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_add_int32() {
+        // Paper Table I: Add int32 32×32 → 164 cyc, 6.24 ops/cyc, 78.05%.
+        let a = AddKernel::new(32, 32, Precision::Int8);
+        assert_eq!(a.latency_cycles(), 164);
+        assert!((a.throughput_ops_per_cycle() - 6.24).abs() < 0.01);
+        assert!((a.efficiency() - 0.7805).abs() < 0.001);
+    }
+
+    #[test]
+    fn table1_add_fp32() {
+        // Paper Table I: Add fp32 32×32 → 167 cyc, 6.13 ops/cyc, 76.65%.
+        let a = AddKernel::new(32, 32, Precision::Fp32);
+        assert_eq!(a.latency_cycles(), 167);
+        assert!((a.throughput_ops_per_cycle() - 6.13).abs() < 0.01);
+        assert!((a.efficiency() - 0.7665).abs() < 0.002);
+    }
+
+    #[test]
+    fn tree_is_much_faster_than_matmul() {
+        // Paper §IV-B claim: whole adder tree latency < MatMul latency,
+        // for both precisions and Y ∈ {3, 4}.
+        use crate::kernels::matmul::MatMulKernel;
+        for p in Precision::all() {
+            let mm = MatMulKernel::paper_kernel(p);
+            let add = AddKernel::new(mm.m, mm.n, p);
+            for y in [3, 4] {
+                assert!(
+                    add.tree_latency_cycles(y) < mm.latency_cycles(),
+                    "adder tree must not bottleneck ({p}, Y={y})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relative_latency_ratios_match_table1() {
+        // Paper: Add/MatMul latency ratio 0.15× (int8), 0.04× (fp32) —
+        // the fp32 adder core idles much longer (power implications §V-B).
+        use crate::kernels::matmul::MatMulKernel;
+        let r8 = AddKernel::new(32, 32, Precision::Int8).latency_cycles() as f64
+            / MatMulKernel::paper_kernel(Precision::Int8).latency_cycles() as f64;
+        let r32 = AddKernel::new(32, 32, Precision::Fp32).latency_cycles() as f64
+            / MatMulKernel::paper_kernel(Precision::Fp32).latency_cycles() as f64;
+        assert!((r8 - 0.15).abs() < 0.01);
+        assert!((r32 - 0.04).abs() < 0.005);
+    }
+
+    #[test]
+    fn tree_latency_scales_linearly() {
+        let a = AddKernel::new(32, 32, Precision::Fp32);
+        assert_eq!(a.tree_latency_cycles(1), 0);
+        assert_eq!(a.tree_latency_cycles(4), 3 * a.latency_cycles());
+    }
+}

@@ -1,0 +1,196 @@
+//! The single-AIE MatMul kernel model.
+//!
+//! One MatMul kernel computes `C (M×N) += A (M×K) · B (K×N)` on one AIE
+//! core using the SIMD vector datapath. The paper's kernels are written in
+//! C/C++ with AIE APIs + pragmas (software pipelining, loop
+//! unrolling/flattening); the resulting latency is very close to the
+//! roofline `M·K·N / peak_MACs` plus a small pipeline overhead.
+//!
+//! Calibration (DESIGN.md §5): `latency = ideal · (1 + ovh_ratio)` with
+//! `ovh_ratio` fit on Table I — int8 32×128×32 measures 1075 cycles
+//! (ideal 1024 → 4.98%), fp32 32×32×32 measures 4329 (ideal 4096 → 5.69%).
+//! The fp32 kernel is CHARM's intrinsics kernel (the paper reuses it for a
+//! fair comparison), which explains the slightly different pipeline
+//! overhead versus the paper's own int8 kernel.
+
+use crate::arch::device::AieDevice;
+use crate::arch::precision::Precision;
+
+/// Pipeline overhead ratio fit on Table I (see module docs).
+pub fn overhead_ratio(prec: Precision) -> f64 {
+    match prec {
+        Precision::Int8 => 1075.0 / 1024.0 - 1.0, // 4.98%
+        Precision::Fp32 => 4329.0 / 4096.0 - 1.0, // 5.69%
+        // Extensions: no Table-I measurement exists; use the midpoint of
+        // the two measured overheads (engineering estimate).
+        Precision::Int16 | Precision::Bf16 => 0.0533,
+    }
+}
+
+/// A single-AIE MatMul kernel of tile size `M×K×N`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatMulKernel {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    pub prec: Precision,
+}
+
+impl MatMulKernel {
+    pub fn new(m: u64, k: u64, n: u64, prec: Precision) -> Self {
+        MatMulKernel { m, k, n, prec }
+    }
+
+    /// The paper's two demonstrated kernels (Table I).
+    pub fn paper_kernel(prec: Precision) -> Self {
+        match prec {
+            Precision::Int8 => MatMulKernel::new(32, 128, 32, prec),
+            Precision::Fp32 => MatMulKernel::new(32, 32, 32, prec),
+            // Extension winners of the same IP (eq. 3-6): 65536 MACs.
+            Precision::Int16 | Precision::Bf16 => MatMulKernel::new(32, 64, 32, prec),
+        }
+    }
+
+    /// Number of multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n
+    }
+
+    /// Ideal (roofline) latency in cycles: `MACs / peak_MACs`.
+    pub fn ideal_cycles(&self) -> u64 {
+        self.macs().div_ceil(self.prec.peak_macs_per_cycle())
+    }
+
+    /// Modelled kernel latency in cycles (calibrated, see module docs).
+    pub fn latency_cycles(&self) -> u64 {
+        let ideal = self.ideal_cycles() as f64;
+        (ideal * (1.0 + overhead_ratio(self.prec))).round() as u64
+    }
+
+    /// Achieved throughput in MACs/cycle.
+    pub fn throughput_macs_per_cycle(&self) -> f64 {
+        self.macs() as f64 / self.latency_cycles() as f64
+    }
+
+    /// Efficiency: achieved / peak throughput of the vector processor
+    /// (paper eq. (1) definition).
+    pub fn efficiency(&self) -> f64 {
+        self.throughput_macs_per_cycle() / self.prec.peak_macs_per_cycle() as f64
+    }
+
+    /// Bytes of the `A` input tile.
+    pub fn a_bytes(&self) -> u64 {
+        self.m * self.k * self.prec.sizeof_input()
+    }
+
+    /// Bytes of the `B` input tile.
+    pub fn b_bytes(&self) -> u64 {
+        self.k * self.n * self.prec.sizeof_input()
+    }
+
+    /// Bytes of the `C` output tile (int8 accumulates to int32).
+    pub fn c_bytes(&self) -> u64 {
+        self.m * self.n * self.prec.sizeof_output()
+    }
+
+    /// Single-buffered memory footprint (eq. 6 left-hand side).
+    pub fn buffer_bytes(&self) -> u64 {
+        self.a_bytes() + self.b_bytes() + self.c_bytes()
+    }
+
+    /// PLIO/stream transmission cycles for A / B / C at `bw` bytes/cycle
+    /// (eq. 2). Returns `(a_cyc, b_cyc, c_cyc)`.
+    pub fn io_cycles(&self, dev: &AieDevice) -> (u64, u64, u64) {
+        let bw = dev.bw_io_bytes_per_cycle;
+        (
+            self.a_bytes().div_ceil(bw),
+            self.b_bytes().div_ceil(bw),
+            self.c_bytes().div_ceil(bw),
+        )
+    }
+
+    /// True if no single I/O transfer is longer than the compute latency
+    /// (eq. 2) — the kernel is not I/O-bound under double buffering.
+    pub fn io_feasible(&self, dev: &AieDevice) -> bool {
+        let (a, b, c) = self.io_cycles(dev);
+        let lat = self.latency_cycles();
+        a <= lat && b <= lat && c <= lat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_int8_kernel() {
+        // Paper Table I: int8 32×128×32 → 1075 cyc, 121.93 MACs/cyc, 95.26%.
+        let k = MatMulKernel::paper_kernel(Precision::Int8);
+        assert_eq!(k.macs(), 131072);
+        assert_eq!(k.latency_cycles(), 1075);
+        assert!((k.throughput_macs_per_cycle() - 121.93).abs() < 0.05);
+        assert!((k.efficiency() - 0.9526).abs() < 0.001);
+    }
+
+    #[test]
+    fn table1_fp32_kernel() {
+        // Paper Table I: fp32 32×32×32 → 4329 cyc, 7.57 MACs/cyc, 94.70%.
+        let k = MatMulKernel::paper_kernel(Precision::Fp32);
+        assert_eq!(k.macs(), 32768);
+        assert_eq!(k.latency_cycles(), 4329);
+        assert!((k.throughput_macs_per_cycle() - 7.57).abs() < 0.01);
+        assert!((k.efficiency() - 0.9470).abs() < 0.001);
+    }
+
+    #[test]
+    fn io_cycles_eq2() {
+        let d = AieDevice::vc1902();
+        let k = MatMulKernel::paper_kernel(Precision::Int8);
+        // a: 32·128·1/4 = 1024; b: 128·32·1/4 = 1024; c: 32·32·4/4 = 1024.
+        assert_eq!(k.io_cycles(&d), (1024, 1024, 1024));
+        assert!(k.io_feasible(&d));
+
+        let f = MatMulKernel::paper_kernel(Precision::Fp32);
+        // a: 32·32·4/4 = 1024 etc.
+        assert_eq!(f.io_cycles(&d), (1024, 1024, 1024));
+        assert!(f.io_feasible(&d));
+    }
+
+    #[test]
+    fn buffer_bytes_fit_eq6() {
+        let d = AieDevice::vc1902();
+        // Both paper kernels fit the 14KB single-buffer budget.
+        for p in Precision::all() {
+            let k = MatMulKernel::paper_kernel(p);
+            assert!(k.buffer_bytes() <= d.single_buffer_budget_bytes());
+        }
+        // int8 32×128×32 uses exactly 12 KB.
+        assert_eq!(
+            MatMulKernel::paper_kernel(Precision::Int8).buffer_bytes(),
+            12 * 1024
+        );
+        // fp32 32×32×32 uses exactly 12 KB.
+        assert_eq!(
+            MatMulKernel::paper_kernel(Precision::Fp32).buffer_bytes(),
+            12 * 1024
+        );
+    }
+
+    #[test]
+    fn io_infeasible_when_k_too_small() {
+        // A skinny kernel (tiny M·K·N but large transfers relative to
+        // compute) becomes I/O-bound: e.g. int8 4×4×4 has latency ~1 cyc
+        // but c transfer 16 cyc.
+        let d = AieDevice::vc1902();
+        let k = MatMulKernel::new(4, 4, 4, Precision::Int8);
+        assert!(!k.io_feasible(&d));
+    }
+
+    #[test]
+    fn efficiency_monotone_in_reuse() {
+        // Larger tiles (more reuse) never lower modelled efficiency.
+        let small = MatMulKernel::new(8, 8, 8, Precision::Fp32);
+        let big = MatMulKernel::new(32, 32, 32, Precision::Fp32);
+        assert!(big.efficiency() >= small.efficiency() - 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Single-AIE kernel performance models (paper §V-A, Table I).
+//!
+//! The paper measures two kernel families with the AMD aiesimulator:
+//! the `M×K×N` MatMul kernel (one per AIE core) and the `M×N` Add kernel
+//! (a whole `Y−1`-adder tree runs sequentially on one core). We model
+//! their latency with a calibrated VLIW pipeline model — the calibration
+//! constants (one overhead ratio per kernel family and precision) are fit
+//! on Table I and documented in DESIGN.md §5.
+
+pub mod add;
+pub mod matmul;
+
+pub use add::AddKernel;
+pub use matmul::MatMulKernel;

@@ -1,0 +1,51 @@
+//! # MaxEVA — Maximizing the Efficiency of MatMul on Versal AI Engine
+//!
+//! Full-stack reproduction of Taka et al., "MaxEVA: Maximizing the Efficiency
+//! of Matrix Multiplication on Versal AI Engine" (2023).
+//!
+//! Because the paper targets AMD/Xilinx Versal VC1902 hardware (VCK190 board,
+//! Vitis 2022.1 toolchain), which is not available here, this crate implements
+//! the complete substrate in software:
+//!
+//! * [`arch`] — the Versal AIE array architecture model (tiles, memory banks,
+//!   interface tiles, neighbor-sharing rules).
+//! * [`kernels`] — calibrated latency/efficiency models for the single-AIE
+//!   MatMul and Add kernels (paper Table I).
+//! * [`optimizer`] — the MaxEVA analytical model: single-kernel (M,K,N) and
+//!   array-level (X,Y,Z) integer-programming exhaustive search (paper §IV-C).
+//! * [`placement`] — the P1/P2 kernel placement patterns and the
+//!   direct-memory-sharing placement strategy (paper §IV-D).
+//! * [`routing`] — the AXI4-Stream circuit-switched router with broadcast
+//!   trees and congestion detection.
+//! * [`sim`] — an event-driven cycle-approximate simulator of the placed
+//!   design (double buffering, PLIO bandwidth, DMA, adder trees).
+//! * [`power`] — an XPE-like power model (core active/idle + memory banks).
+//! * [`charm`] — the CHARM baseline [Zhuang et al., FPGA'23] mapping.
+//! * [`tiling`] — host-side tiling + zero-padding model for arbitrary matrix
+//!   sizes (paper Fig. 8) and full-DNN estimates.
+//! * [`coordinator`] — the serving layer: a request router / batcher that
+//!   tiles large MatMuls and dispatches tile jobs to the PJRT runtime.
+//! * [`runtime`] — loads the AOT-compiled JAX/Pallas HLO artifacts and
+//!   executes them on the PJRT CPU client (numerics path).
+//! * [`config`] — hand-rolled JSON config system (no external deps).
+//! * [`report`] — paper-table formatting and paper-vs-measured comparison.
+//! * [`workloads`] — workload generators (matrix sweeps, MLP, request traces).
+
+pub mod arch;
+pub mod charm;
+pub mod config;
+pub mod coordinator;
+pub mod kernels;
+pub mod optimizer;
+pub mod placement;
+pub mod power;
+pub mod report;
+pub mod routing;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod util;
+pub mod workloads;
+
+pub use arch::device::AieDevice;
+pub use arch::precision::Precision;

@@ -1,0 +1,499 @@
+//! `maxeva` — the MaxEVA launcher.
+//!
+//! Subcommands:
+//!   optimize  [--precision fp32|int8] [--eff-lb 0.95]   kernel + array DSE
+//!   evaluate  [--precision P] [--config cfg.json]       one table row
+//!   table1                                              paper Table I
+//!   table2                                              paper Table II (fp32)
+//!   table3                                              paper Table III (int8)
+//!   fig8      [--precision P]                           matrix-size sweep
+//!   mlp                                                 §V-B4 MLP estimate
+//!   serve     [--requests N] [--size S] [--config cfg]  end-to-end serving
+//!   info                                                device + artifact info
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::charm::CharmDesign;
+use maxeva::config::schema::{DesignConfig, ServeConfig};
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::kernels::add::AddKernel;
+use maxeva::kernels::matmul::MatMulKernel;
+use maxeva::optimizer::array::{optimize_array, top_tiers};
+use maxeva::optimizer::single_kernel::{optimize_single_kernel, top_ranked};
+use maxeva::placement::pattern::Pattern;
+use maxeva::report::evaluate::{evaluate_config, paper_configs};
+use maxeva::report::paper;
+use maxeva::report::table::{pct, Table};
+use maxeva::runtime::default_artifacts_dir;
+use maxeva::sim::engine::SimConfig;
+use maxeva::tiling::mlp::{charm_mlp, estimate_mlp};
+use maxeva::tiling::padding::TiledWorkload;
+use maxeva::workloads::{random_trace, square_sweep};
+
+/// Tiny argv parser: flags of the form `--key value`.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                let val = rest.get(i + 1).cloned().unwrap_or_default();
+                flags.push((key.to_string(), val));
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { cmd, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn precision(&self) -> Precision {
+        self.get("precision")
+            .and_then(Precision::parse)
+            .unwrap_or(Precision::Fp32)
+    }
+}
+
+fn main() {
+    let args = Args::parse();
+    let code = match args.cmd.as_str() {
+        "optimize" => cmd_optimize(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "table1" => cmd_table1(),
+        "table2" => cmd_table(Precision::Fp32),
+        "table3" => cmd_table(Precision::Int8),
+        "fig8" => cmd_fig8(&args),
+        "mlp" => cmd_mlp(),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprint!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+maxeva — MaxEVA (MatMul on Versal AI Engine) reproduction
+
+USAGE: maxeva <command> [--flag value ...]
+
+COMMANDS:
+  optimize   kernel (M,K,N) + array (X,Y,Z) design-space exploration
+  evaluate   place/route/simulate/power one configuration
+  table1     single-kernel results (paper Table I)
+  table2     fp32 full-array results vs CHARM (paper Table II)
+  table3     int8 full-array results vs CHARM (paper Table III)
+  fig8       throughput vs matrix size (paper Fig. 8)
+  mlp        MLP inference estimate (paper §V-B4)
+  serve      end-to-end serving through the PJRT runtime (needs artifacts)
+  info       device + artifact status
+
+FLAGS:
+  --precision fp32|int8     (default fp32)
+  --eff-lb <0..1>           kernel-efficiency lower bound (default 0.95)
+  --config <file.json>      design config (default: paper flagship 13x4x6)
+  --x/--y/--z <int>         explicit mapping for `evaluate`
+  --pattern P1|P2           placement pattern for `evaluate`
+  --requests <n>            serving requests (default 4)
+  --size <n>                serving request square size (default 512)
+";
+
+fn load_design(args: &Args) -> DesignConfig {
+    if let Some(path) = args.get("config") {
+        match DesignConfig::load(std::path::Path::new(path)) {
+            Ok(c) => return c,
+            Err(e) => {
+                eprintln!("failed to load {path}: {e}; using flagship defaults");
+            }
+        }
+    }
+    DesignConfig::flagship(args.precision())
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    let dev = AieDevice::vc1902();
+    let prec = args.precision();
+    let eff_lb: f64 = args.get("eff-lb").and_then(|s| s.parse().ok()).unwrap_or(0.95);
+
+    println!("== Single-kernel optimization (eq. 3–6), {prec}, eff_lb={eff_lb} ==");
+    let cands = optimize_single_kernel(&dev, prec, eff_lb);
+    let top = top_ranked(&cands);
+    let mut t = Table::new(vec!["M×K×N", "MACs", "latency(cyc)", "efficiency", "buffers(B)"]);
+    for c in top.iter().take(10) {
+        t.row(vec![
+            format!("{}x{}x{}", c.kernel.m, c.kernel.k, c.kernel.n),
+            format!("{}", c.macs),
+            format!("{}", c.kernel.latency_cycles()),
+            format!("{:.2}%", c.kernel.efficiency() * 100.0),
+            format!("{}", c.kernel.buffer_bytes()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("({} feasible points, {} top-ranked)\n", cands.len(), top.len());
+
+    println!("== Array optimization (eq. 7–9) ==");
+    let arr = optimize_array(&dev, None);
+    let mut t = Table::new(vec!["X×Y×Z", "kernels", "cores", "PLIO in", "PLIO out", "routes?"]);
+    for tier in top_tiers(&arr, 4) {
+        for c in tier.iter().take(4) {
+            let routable = Pattern::for_y(c.y)
+                .and_then(|p| {
+                    maxeva::placement::placer::place_design(
+                        &dev, *c, p, MatMulKernel::paper_kernel(prec),
+                    )
+                    .ok()
+                })
+                .map(|pd| maxeva::routing::router::route_design(&dev, &pd).is_ok());
+            t.row(vec![
+                c.label(),
+                format!("{}", c.matmul_kernels()),
+                format!("{}", c.total_cores()),
+                format!("{}", c.plio_in()),
+                format!("{}", c.plio_out()),
+                match routable {
+                    Some(true) => "yes".to_string(),
+                    Some(false) => "NO (PnR)".to_string(),
+                    None => "no pattern".to_string(),
+                },
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_evaluate(args: &Args) -> i32 {
+    let design = load_design(args);
+    let dev = match design.device() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let (x, y, z) = (
+        args.get("x").and_then(|s| s.parse().ok()).unwrap_or(design.x),
+        args.get("y").and_then(|s| s.parse().ok()).unwrap_or(design.y),
+        args.get("z").and_then(|s| s.parse().ok()).unwrap_or(design.z),
+    );
+    let pattern = args
+        .get("pattern")
+        .and_then(Pattern::parse)
+        .unwrap_or(design.pattern);
+    match evaluate_config(&dev, x, y, z, pattern, design.precision, &SimConfig::default()) {
+        Ok(r) => {
+            println!("config      : {} {} on {}", r.label, r.prec, dev.name);
+            println!(
+                "kernels     : {} MatMul + {} adder cores",
+                r.matmul_kernels,
+                r.total_cores - r.matmul_kernels
+            );
+            println!("cores       : {} ({:.1}%)", r.total_cores, r.core_util * 100.0);
+            println!(
+                "memory banks: {} ({:.1}%)  DMA banks: {}",
+                r.memory_banks,
+                r.bank_util * 100.0,
+                r.dma_banks
+            );
+            println!("PLIOs       : {} ({:.1}%)", r.plios, r.plio_util * 100.0);
+            println!("period      : {:.1} cycles", r.sim.period_cycles);
+            println!("throughput  : {:.2} {}", r.throughput_table_units(), r.prec.ops_unit());
+            println!(
+                "power       : {:.2} W (core {:.2} + mem {:.2})",
+                r.power.total_w(),
+                r.power.core_w,
+                r.power.memory_w
+            );
+            println!("energy eff. : {:.2} {}/W", r.energy_eff_table_units(), r.prec.ops_unit());
+            0
+        }
+        Err(e) => {
+            eprintln!("evaluation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_table1() -> i32 {
+    let mut t = Table::new(vec![
+        "Kernel", "Latency(cyc)", "paper", "Thr(MACs/cyc)", "paper", "Eff", "paper",
+    ]);
+    let mm8 = MatMulKernel::paper_kernel(Precision::Int8);
+    let mm32 = MatMulKernel::paper_kernel(Precision::Fp32);
+    let a8 = AddKernel::new(32, 32, Precision::Int8);
+    let a32 = AddKernel::new(32, 32, Precision::Fp32);
+    let rows: Vec<(String, u64, f64, f64)> = vec![
+        ("MatMul int8 32x128x32".into(), mm8.latency_cycles(), mm8.throughput_macs_per_cycle(), mm8.efficiency()),
+        ("Add int32 32x32".into(), a8.latency_cycles(), a8.throughput_ops_per_cycle(), a8.efficiency()),
+        ("MatMul fp32 32x32x32".into(), mm32.latency_cycles(), mm32.throughput_macs_per_cycle(), mm32.efficiency()),
+        ("Add fp32 32x32".into(), a32.latency_cycles(), a32.throughput_ops_per_cycle(), a32.efficiency()),
+    ];
+    for (r, p) in rows.iter().zip(paper::table1()) {
+        t.row(vec![
+            r.0.clone(),
+            format!("{}", r.1),
+            format!("{}", p.latency_cyc),
+            format!("{:.2}", r.2),
+            format!("{:.2}", p.throughput_macs_per_cyc),
+            format!("{:.2}%", r.3 * 100.0),
+            format!("{:.2}%", p.efficiency * 100.0),
+        ]);
+    }
+    println!("Table I — single AIE kernel results (measured vs paper)");
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_table(prec: Precision) -> i32 {
+    let dev = AieDevice::vc1902();
+    let paper_rows = match prec {
+        Precision::Fp32 => paper::table2_fp32(),
+        Precision::Int8 => paper::table3_int8(),
+        other => {
+            eprintln!("no paper table exists for {other} (extension precision)");
+            return 1;
+        }
+    };
+    let unit = prec.ops_unit();
+    println!(
+        "Table {} — MaxEVA configurations, {prec} (measured vs paper)",
+        if prec == Precision::Fp32 { "II" } else { "III" }
+    );
+    let thr_hdr = format!("Thr({unit})");
+    let mut t = Table::new(vec![
+        "Cfg", "kernels", "cores", "banks", "DMA", "PLIOs",
+        thr_hdr.as_str(), "paper", "Δ", "Power(W)", "paper", "EE", "paper",
+    ]);
+    for ((x, y, z, pat), p) in paper_configs().iter().zip(&paper_rows) {
+        let r = match evaluate_config(&dev, *x, *y, *z, *pat, prec, &SimConfig::default()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{x}x{y}x{z}: {e}");
+                continue;
+            }
+        };
+        let paper_thr = match prec {
+            Precision::Fp32 | Precision::Bf16 => p.throughput_gops,
+            Precision::Int8 | Precision::Int16 => p.throughput_gops / 1000.0,
+        };
+        t.row(vec![
+            r.label.clone(),
+            format!("{}", r.matmul_kernels),
+            format!("{} ({:.1}%)", r.total_cores, r.core_util * 100.0),
+            format!("{}", r.memory_banks),
+            format!("{}", r.dma_banks),
+            format!("{} ({:.1}%)", r.plios, r.plio_util * 100.0),
+            format!("{:.2}", r.throughput_table_units()),
+            format!("{paper_thr:.2}"),
+            pct(paper::rel_delta(r.throughput_table_units(), paper_thr)),
+            format!("{:.2}", r.power.total_w()),
+            p.power_w.map_or("—".into(), |w| format!("{w:.2}")),
+            format!("{:.2}", r.energy_eff_table_units()),
+            p.energy_eff.map_or("—".into(), |e| format!("{e:.2}")),
+        ]);
+    }
+    // CHARM baseline row.
+    let charm = CharmDesign::for_precision(prec);
+    let cr = charm.simulate(&dev);
+    let cp = charm.power(&dev);
+    let charm_paper = paper::charm_row(prec);
+    let thr = match prec {
+        Precision::Fp32 | Precision::Bf16 => cr.ops_per_sec / 1e9,
+        Precision::Int8 | Precision::Int16 => cr.ops_per_sec / 1e12,
+    };
+    let paper_thr = match prec {
+        Precision::Fp32 | Precision::Bf16 => charm_paper.throughput_gops,
+        Precision::Int8 | Precision::Int16 => charm_paper.throughput_gops / 1000.0,
+    };
+    let ee = match prec {
+        Precision::Fp32 | Precision::Bf16 => cp.energy_efficiency(cr.ops_per_sec) / 1e9,
+        Precision::Int8 | Precision::Int16 => cp.energy_efficiency(cr.ops_per_sec) / 1e12,
+    };
+    t.row(vec![
+        "CHARM [19,34]".to_string(),
+        format!("{}", charm.kernels),
+        format!("{} ({:.1}%)", charm.kernels, charm.core_utilization(&dev) * 100.0),
+        format!("{}", charm.memory_banks),
+        "0".to_string(),
+        format!("{} ({:.1}%)", charm.plios, charm.plio_utilization(&dev) * 100.0),
+        format!("{thr:.2}"),
+        format!("{paper_thr:.2}"),
+        pct(paper::rel_delta(thr, paper_thr)),
+        format!("{:.2}", cp.total_w()),
+        charm_paper.power_w.map_or("—".into(), |w| format!("{w:.2}")),
+        format!("{ee:.3}"),
+        charm_paper.energy_eff.map_or("—".into(), |e| format!("{e:.2}")),
+    ]);
+    print!("{}", t.render());
+    if prec == Precision::Int8 {
+        println!("note: CHARM int8 power is not published (closed source); EE column model-estimated.");
+    }
+    0
+}
+
+fn cmd_fig8(args: &Args) -> i32 {
+    let dev = AieDevice::vc1902();
+    let prec = args.precision();
+    let design = DesignConfig::flagship(prec);
+    let r = evaluate_config(
+        &dev, design.x, design.y, design.z, design.pattern, prec, &SimConfig::default(),
+    )
+    .unwrap();
+    println!("Fig. 8 — throughput vs square matrix size, 13x4x6 {prec}");
+    let thr_hdr = format!("throughput ({})", prec.ops_unit());
+    let mut t = Table::new(vec!["size", "invocations", "useful ratio", thr_hdr.as_str()]);
+    for s in square_sweep(256, 16384) {
+        let w = TiledWorkload::new(s, s, s, &design.candidate(), &design.kernel());
+        let thr = w.effective_ops_per_sec(r.ops_per_sec);
+        t.row(vec![
+            format!("{s}"),
+            format!("{}", w.invocations()),
+            format!("{:.4}", w.useful_ratio()),
+            match prec {
+                Precision::Fp32 | Precision::Bf16 => format!("{:.1}", thr / 1e9),
+                Precision::Int8 | Precision::Int16 => format!("{:.2}", thr / 1e12),
+            },
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_mlp() -> i32 {
+    let dev = AieDevice::vc1902();
+    let design = DesignConfig::flagship(Precision::Fp32);
+    let r = evaluate_config(
+        &dev, design.x, design.y, design.z, design.pattern, Precision::Fp32, &SimConfig::default(),
+    )
+    .unwrap();
+    let est = estimate_mlp(
+        &charm_mlp(),
+        &design.candidate(),
+        &design.kernel(),
+        r.sim.period_cycles,
+        dev.freq_hz,
+    );
+    println!("MLP inference estimate (paper §V-B4)");
+    println!(
+        "MaxEVA : {:.2} GFLOPs (paper {:.2}, Δ {})",
+        est.ops_per_sec / 1e9,
+        paper::MLP_MAXEVA_GFLOPS,
+        pct(paper::rel_delta(est.ops_per_sec / 1e9, paper::MLP_MAXEVA_GFLOPS))
+    );
+    println!("CHARM  : {:.2} GFLOPs (scaled from [19])", paper::MLP_CHARM_GFLOPS);
+    println!(
+        "gain   : {:.2}x (paper: 1.29x)",
+        est.ops_per_sec / 1e9 / paper::MLP_CHARM_GFLOPS
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let design = load_design(args);
+    let mut cfg = ServeConfig::new(design);
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    let n: usize = args.get("requests").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let size: u64 = args.get("size").and_then(|s| s.parse().ok()).unwrap_or(512);
+
+    let mut server = match MatMulServer::start(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
+    println!("device ready: native size {:?}", server.native());
+    let mut rng = maxeva::util::prng::XorShift64::new(99);
+    let reqs: Vec<_> = random_trace(n, 5)
+        .into_iter()
+        .map(|mut r| {
+            r.m = size;
+            r.k = size;
+            r.n = size;
+            r
+        })
+        .collect();
+    let batch: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let a: Vec<f32> =
+                (0..r.m * r.k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+            let b: Vec<f32> =
+                (0..r.k * r.n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+            (*r, a, b)
+        })
+        .collect();
+    match server.run_batch(batch) {
+        Ok(outs) => {
+            let stats = server.stats();
+            println!("served {} requests ({} tile invocations)", stats.requests, stats.invocations);
+            println!("mean latency : {:.1} ms (wall, CPU emulation)", stats.mean_latency_ms);
+            println!("device time  : {:.3} ms total", stats.device_time_s * 1e3);
+            println!(
+                "device thr   : {:.2} GFLOPs (VCK190-equivalent)",
+                stats.device_ops_per_sec / 1e9
+            );
+            let checksum: f32 = outs.iter().flat_map(|o| o.iter()).sum();
+            println!("checksum     : {checksum:.3}");
+            server.shutdown();
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    let dev = AieDevice::vc1902();
+    println!(
+        "device        : {} ({} rows x {} cols = {} AIE cores)",
+        dev.name, dev.rows, dev.cols, dev.total_cores()
+    );
+    println!(
+        "memory        : {} KB/tile, {} banks/tile, {} total banks",
+        dev.data_mem_bytes / 1024, dev.banks_per_tile, dev.total_banks()
+    );
+    println!(
+        "PLIOs         : {} in / {} out ({} interface tiles)",
+        dev.plio_in, dev.plio_out, dev.aie_pl_tiles
+    );
+    println!(
+        "clock         : {:.2} GHz AIE / {:.1} MHz PL (PLIO width {} bits)",
+        dev.freq_hz / 1e9, dev.pl_freq_hz / 1e6, dev.plio_width_bits()
+    );
+    println!(
+        "peak          : {:.1} TFLOPs fp32 / {:.1} TOPs int8",
+        dev.peak_ops_per_sec(Precision::Fp32) / 1e12,
+        dev.peak_ops_per_sec(Precision::Int8) / 1e12
+    );
+    let dir = default_artifacts_dir();
+    println!(
+        "artifacts     : {} ({})",
+        dir.display(),
+        if maxeva::runtime::artifacts_available(&dir) {
+            "present"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+    0
+}

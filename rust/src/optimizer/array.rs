@@ -1,0 +1,225 @@
+//! Array-level mapping optimization: the `X, Y, Z` integer program
+//! (paper §IV-C2, eq. 7–9).
+//!
+//! Maximize the number of MatMul kernels `X·Y·Z` subject to:
+//!
+//! * eq. 7: `X·Y·Z + X·Z ≤ AIE_cores`  (MatMul kernels + adder-tree cores)
+//! * eq. 8: `X·Y + Y·Z ≤ PLIO_in`      (broadcast inputs)
+//! * eq. 9: `X·Z ≤ PLIO_out`           (reduced outputs)
+//!
+//! Solved exhaustively; the paper reports multiple top-ranked points and
+//! then filters them through PnR feasibility (our [`crate::routing`]
+//! module reproduces that filter — e.g. 10×4×8 fails routing).
+
+use crate::arch::device::AieDevice;
+
+/// One feasible array mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayCandidate {
+    pub x: u64,
+    pub y: u64,
+    pub z: u64,
+}
+
+impl ArrayCandidate {
+    pub fn new(x: u64, y: u64, z: u64) -> Self {
+        ArrayCandidate { x, y, z }
+    }
+
+    /// Number of MatMul kernels (the objective).
+    pub fn matmul_kernels(&self) -> u64 {
+        self.x * self.y * self.z
+    }
+
+    /// Number of adder-tree cores (one per group).
+    pub fn adder_cores(&self) -> u64 {
+        self.x * self.z
+    }
+
+    /// Total AIE cores used (eq. 7 LHS).
+    pub fn total_cores(&self) -> u64 {
+        self.matmul_kernels() + self.adder_cores()
+    }
+
+    /// Input PLIOs used (eq. 8 LHS): `X·Y` A-streams + `Y·Z` B-streams.
+    pub fn plio_in(&self) -> u64 {
+        self.x * self.y + self.y * self.z
+    }
+
+    /// Output PLIOs used (eq. 9 LHS): one per group.
+    pub fn plio_out(&self) -> u64 {
+        self.x * self.z
+    }
+
+    /// Total PLIOs used (Tables II/III "PLIOs" column).
+    pub fn plios(&self) -> u64 {
+        self.plio_in() + self.plio_out()
+    }
+
+    /// Number of groups (each: Y MatMul kernels + 1 adder-tree core).
+    pub fn groups(&self) -> u64 {
+        self.x * self.z
+    }
+
+    /// Feasibility under eq. 7–9 for `dev`.
+    pub fn feasible(&self, dev: &AieDevice) -> bool {
+        self.total_cores() <= dev.total_cores() as u64
+            && self.plio_in() <= dev.plio_in as u64
+            && self.plio_out() <= dev.plio_out as u64
+    }
+
+    /// Paper-style label, e.g. "13x4x6".
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.x, self.y, self.z)
+    }
+}
+
+/// Exhaustively solve the array IP. Returns all feasible candidates sorted
+/// by (MatMul kernels desc, total cores asc, X desc) so ties prefer using
+/// fewer cores. `y_range` restricts Y (the paper places patterns only for
+/// Y ∈ {3,4} — pass `None` to search all Y).
+pub fn optimize_array(dev: &AieDevice, y_range: Option<(u64, u64)>) -> Vec<ArrayCandidate> {
+    let cores = dev.total_cores() as u64;
+    let (y_lo, y_hi) = y_range.unwrap_or((1, cores));
+    let mut out = Vec::new();
+    for y in y_lo..=y_hi.min(cores) {
+        // x·y ≤ plio_in gives a cheap bound on x; same for z.
+        for x in 1..=(dev.plio_in as u64 / y.max(1)).max(1) {
+            for z in 1..=(dev.plio_out as u64 / x.max(1)).max(1) {
+                let c = ArrayCandidate::new(x, y, z);
+                if c.feasible(dev) {
+                    out.push(c);
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        b.matmul_kernels()
+            .cmp(&a.matmul_kernels())
+            .then(a.total_cores().cmp(&b.total_cores()))
+            .then(b.x.cmp(&a.x))
+    });
+    out
+}
+
+/// Return the best `n` *distinct kernel-count* tiers (the paper examines
+/// the top-ranked design points tier by tier).
+pub fn top_tiers(cands: &[ArrayCandidate], n: usize) -> Vec<Vec<ArrayCandidate>> {
+    let mut tiers: Vec<Vec<ArrayCandidate>> = Vec::new();
+    for &c in cands {
+        let same_tier = tiers
+            .last()
+            .is_some_and(|t| t[0].matmul_kernels() == c.matmul_kernels());
+        if same_tier {
+            tiers.last_mut().unwrap().push(c);
+        } else if tiers.len() < n {
+            tiers.push(vec![c]);
+        } else {
+            break;
+        }
+    }
+    tiers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    #[test]
+    fn paper_configs_are_feasible_with_paper_counts() {
+        // All six Table II/III configurations, with their reported
+        // kernel counts, core counts and PLIO usage.
+        let rows: &[(u64, u64, u64, u64, u64, u64)] = &[
+            // (X, Y, Z, kernels, cores, plios)
+            (13, 4, 6, 312, 390, 154),
+            (10, 3, 10, 300, 400, 160),
+            (11, 4, 7, 308, 385, 149),
+            (11, 3, 9, 297, 396, 159),
+            (12, 4, 6, 288, 360, 144),
+            (12, 3, 8, 288, 384, 156),
+        ];
+        for &(x, y, z, kernels, cores, plios) in rows {
+            let c = ArrayCandidate::new(x, y, z);
+            assert!(c.feasible(&dev()), "{} must be feasible", c.label());
+            assert_eq!(c.matmul_kernels(), kernels, "{}", c.label());
+            assert_eq!(c.total_cores(), cores, "{}", c.label());
+            assert_eq!(c.plios(), plios, "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn global_optimum_is_10x4x8() {
+        // Paper §V-B1: 10×4×8 maximizes kernels (320, all 400 cores) but
+        // later fails PnR; the optimizer itself must rank it first.
+        let cands = optimize_array(&dev(), None);
+        let best = cands[0];
+        assert_eq!(best.matmul_kernels(), 320);
+        assert!(cands
+            .iter()
+            .take_while(|c| c.matmul_kernels() == 320)
+            .any(|c| (c.x, c.y, c.z) == (10, 4, 8)));
+    }
+
+    #[test]
+    fn second_tier_is_312_with_13x4x6() {
+        // Paper: the second top-ranked solution is 13×4×6 (312 kernels).
+        let cands = optimize_array(&dev(), None);
+        let tiers = top_tiers(&cands, 2);
+        assert_eq!(tiers[1][0].matmul_kernels(), 312);
+        assert!(tiers[1].iter().any(|c| (c.x, c.y, c.z) == (13, 4, 6)));
+    }
+
+    #[test]
+    fn top_solutions_have_y_3_or_4() {
+        // Paper §IV-D: placement patterns exist only for Y = 3, 4 because
+        // those dominate the top tiers.
+        let cands = optimize_array(&dev(), None);
+        for tier in top_tiers(&cands, 4) {
+            assert!(tier.iter().any(|c| c.y == 3 || c.y == 4));
+            // No tier in the top 4 is exclusively another Y.
+            assert!(tier.iter().all(|c| c.matmul_kernels() >= 297));
+        }
+    }
+
+    #[test]
+    fn all_results_satisfy_constraints() {
+        let d = dev();
+        for c in optimize_array(&d, None) {
+            assert!(c.total_cores() <= 400);
+            assert!(c.plio_in() <= 78);
+            assert!(c.plio_out() <= 117);
+        }
+    }
+
+    #[test]
+    fn y_range_filter_respected() {
+        let cands = optimize_array(&dev(), Some((3, 4)));
+        assert!(cands.iter().all(|c| c.y == 3 || c.y == 4));
+        assert!(!cands.is_empty());
+    }
+
+    #[test]
+    fn generalizes_to_smaller_device() {
+        // The model is device-generic (paper §IV: "generalizable to any
+        // Versal device").
+        let d = AieDevice::half_vc1902();
+        let cands = optimize_array(&d, None);
+        assert!(!cands.is_empty());
+        let best = cands[0];
+        assert!(best.total_cores() <= 200);
+        assert!(best.plio_in() <= 38);
+    }
+
+    #[test]
+    fn plio_accounting_formulas() {
+        let c = ArrayCandidate::new(13, 4, 6);
+        assert_eq!(c.plio_in(), 13 * 4 + 4 * 6); // 76
+        assert_eq!(c.plio_out(), 78);
+        assert_eq!(c.groups(), 78);
+        assert_eq!(c.adder_cores(), 78);
+    }
+}

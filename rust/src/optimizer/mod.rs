@@ -1,0 +1,19 @@
+//! The MaxEVA analytical optimization model (paper §IV-C).
+//!
+//! Two nested integer programs, both solved by exhaustive search exactly as
+//! in the paper (the search spaces are tiny once M,K,N are restricted to
+//! powers of two and the X,Y,Z constants are in the hundreds):
+//!
+//! * [`single_kernel`] — choose the tile size `M×K×N` of the single-AIE
+//!   MatMul kernel, maximizing MACs subject to the efficiency bound
+//!   (eq. 1), the I/O-bandwidth bounds (eq. 2–5) and the local-memory
+//!   bound (eq. 6).
+//! * [`array`] — choose the array mapping `X×Y×Z`, maximizing the number
+//!   of MatMul kernels `X·Y·Z` subject to the core-count bound (eq. 7)
+//!   and the PLIO bounds (eq. 8–9).
+
+pub mod array;
+pub mod single_kernel;
+
+pub use array::{optimize_array, ArrayCandidate};
+pub use single_kernel::{optimize_single_kernel, KernelCandidate};

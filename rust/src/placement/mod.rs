@@ -1,0 +1,27 @@
+//! AIE kernel placement (paper §IV-D, Figs. 6–7).
+//!
+//! Each *group* = `Y` MatMul kernels + one adder-tree core, placed so that
+//! every MatMul output buffer is reachable by the adder core through the
+//! direct memory-sharing fabric (no DMA) — possibly by placing the buffer
+//! in a neighboring tile's memory module (the trick of Fig. 6).
+//!
+//! Two whole-array patterns are provided:
+//! * **P1** (`Y = 4`): pairs of 5-core groups tiling 2-row bands; to fill
+//!   the full array a "T"-like shape is needed periodically, each costing
+//!   one DMA-connected MatMul output buffer (2 banks, double-buffered).
+//! * **P2** (`Y = 3`): 2×2-square groups, tiles the array exactly with
+//!   zero DMA.
+//!
+//! The exact Fig. 7 geometry is under-specified in the paper text; we
+//! reproduce its published accounting — `ceil(groups/9)` T-shapes for P1
+//! (18 DMA banks for 13×4×6 and 11×4×7, 16 for 12×4×6) — while keeping
+//! every placement coordinate-real and legality-checked against the
+//! even/odd-row sharing rules (see DESIGN.md §7).
+
+pub mod group;
+pub mod pattern;
+pub mod placer;
+
+pub use group::{GroupShape, PlacedGroup};
+pub use pattern::Pattern;
+pub use placer::{place_design, PlacedDesign, PlacementError};

@@ -1,0 +1,86 @@
+//! The two whole-array placement patterns of Fig. 7.
+
+use std::fmt;
+
+/// Placement pattern (paper Fig. 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// P1: for `Y = 4` groups (5 cores). Needs periodic "T"-like shapes to
+    /// fill the array; each T-shape costs one DMA-connected MatMul output
+    /// buffer.
+    P1,
+    /// P2: for `Y = 3` groups (4 cores, 2×2 squares). Tiles the array
+    /// exactly; never uses DMA.
+    P2,
+}
+
+impl Pattern {
+    /// The group fan-in `Y` this pattern is designed for.
+    pub fn y(self) -> u64 {
+        match self {
+            Pattern::P1 => 4,
+            Pattern::P2 => 3,
+        }
+    }
+
+    /// Cores per group (Y MatMul + 1 adder).
+    pub fn cores_per_group(self) -> usize {
+        self.y() as usize + 1
+    }
+
+    /// Pick the pattern matching a design's `Y` (paper proposes patterns
+    /// only for Y = 3, 4 — the top-ranked tiers).
+    pub fn for_y(y: u64) -> Option<Pattern> {
+        match y {
+            3 => Some(Pattern::P2),
+            4 => Some(Pattern::P1),
+            _ => None,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Pattern> {
+        match s.to_ascii_uppercase().as_str() {
+            "P1" => Some(Pattern::P1),
+            "P2" => Some(Pattern::P2),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Pattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Pattern::P1 => write!(f, "P1"),
+            Pattern::P2 => write!(f, "P2"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_y_mapping() {
+        assert_eq!(Pattern::P1.y(), 4);
+        assert_eq!(Pattern::P2.y(), 3);
+        assert_eq!(Pattern::P1.cores_per_group(), 5);
+        assert_eq!(Pattern::P2.cores_per_group(), 4);
+    }
+
+    #[test]
+    fn for_y_only_3_and_4() {
+        assert_eq!(Pattern::for_y(3), Some(Pattern::P2));
+        assert_eq!(Pattern::for_y(4), Some(Pattern::P1));
+        assert_eq!(Pattern::for_y(2), None);
+        assert_eq!(Pattern::for_y(5), None);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Pattern::P1, Pattern::P2] {
+            assert_eq!(Pattern::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(Pattern::parse("P3"), None);
+    }
+}

@@ -1,0 +1,164 @@
+//! End-to-end evaluation of one configuration: place → route → simulate →
+//! power, producing one row of Table II/III.
+
+use crate::arch::device::AieDevice;
+use crate::arch::precision::Precision;
+use crate::kernels::matmul::MatMulKernel;
+use crate::optimizer::array::ArrayCandidate;
+use crate::placement::pattern::Pattern;
+use crate::placement::placer::{place_design, PlacedDesign};
+use crate::power::{estimate_power, PowerEstimate};
+use crate::routing::router::{route_design, RouteReport};
+use crate::sim::engine::{simulate_design, SimConfig, SimResult};
+
+/// Errors from any stage of the pipeline.
+#[derive(Debug, thiserror::Error)]
+pub enum EvalError {
+    #[error("placement: {0}")]
+    Placement(#[from] crate::placement::placer::PlacementError),
+    #[error("routing: {0}")]
+    Routing(#[from] crate::routing::router::RoutingError),
+}
+
+/// One evaluated configuration — the full set of Table II/III columns.
+#[derive(Debug, Clone)]
+pub struct ConfigRow {
+    pub label: String,
+    pub pattern: Pattern,
+    pub prec: Precision,
+    pub matmul_kernels: u64,
+    pub total_cores: u64,
+    pub core_util: f64,
+    pub memory_banks: u64,
+    pub bank_util: f64,
+    pub dma_banks: u64,
+    pub plios: u64,
+    pub plio_util: f64,
+    /// ops/s (2 ops per MAC).
+    pub ops_per_sec: f64,
+    pub power: PowerEstimate,
+    pub route: RouteReport,
+    pub sim: SimResult,
+}
+
+impl ConfigRow {
+    /// Throughput in the paper's table unit (GFLOPs for fp32, TOPs int8).
+    pub fn throughput_table_units(&self) -> f64 {
+        match self.prec {
+            Precision::Fp32 | Precision::Bf16 => self.ops_per_sec / 1e9,
+            Precision::Int8 | Precision::Int16 => self.ops_per_sec / 1e12,
+        }
+    }
+
+    /// Throughput in GOPs regardless of precision (comparison key against
+    /// [`crate::report::paper::PaperRow::throughput_gops`]).
+    pub fn throughput_gops(&self) -> f64 {
+        self.ops_per_sec / 1e9
+    }
+
+    /// Energy efficiency in the paper's unit (GFLOPs/W or TOPs/W).
+    pub fn energy_eff_table_units(&self) -> f64 {
+        match self.prec {
+            Precision::Fp32 | Precision::Bf16 => {
+                self.power.energy_efficiency(self.ops_per_sec) / 1e9
+            }
+            Precision::Int8 | Precision::Int16 => {
+                self.power.energy_efficiency(self.ops_per_sec) / 1e12
+            }
+        }
+    }
+}
+
+/// Run the whole pipeline for `(x, y, z, pattern)` at `prec`.
+pub fn evaluate_config(
+    dev: &AieDevice,
+    x: u64,
+    y: u64,
+    z: u64,
+    pattern: Pattern,
+    prec: Precision,
+    sim_cfg: &SimConfig,
+) -> Result<ConfigRow, EvalError> {
+    let cand = ArrayCandidate::new(x, y, z);
+    let kernel = MatMulKernel::paper_kernel(prec);
+    let placed: PlacedDesign = place_design(dev, cand, pattern, kernel)?;
+    let route = route_design(dev, &placed)?;
+    let sim = simulate_design(dev, &placed, sim_cfg);
+    let power = estimate_power(dev, &placed, &sim);
+    Ok(ConfigRow {
+        label: format!("{}x{}x{} ({})", x, y, z, pattern),
+        pattern,
+        prec,
+        matmul_kernels: cand.matmul_kernels(),
+        total_cores: cand.total_cores(),
+        core_util: placed.core_utilization(dev),
+        memory_banks: placed.memory_banks,
+        bank_util: placed.bank_utilization(dev),
+        dma_banks: placed.dma_banks,
+        plios: cand.plios(),
+        plio_util: placed.plio_utilization(dev),
+        ops_per_sec: sim.ops_per_sec,
+        power,
+        route,
+        sim,
+    })
+}
+
+/// The six table configurations of the paper, in row order.
+pub fn paper_configs() -> [(u64, u64, u64, Pattern); 6] {
+    [
+        (13, 4, 6, Pattern::P1),
+        (10, 3, 10, Pattern::P2),
+        (11, 4, 7, Pattern::P1),
+        (11, 3, 9, Pattern::P2),
+        (12, 4, 6, Pattern::P1),
+        (12, 3, 8, Pattern::P2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluates_flagship_fp32() {
+        let dev = AieDevice::vc1902();
+        let r = evaluate_config(&dev, 13, 4, 6, Pattern::P1, Precision::Fp32, &SimConfig::default())
+            .unwrap();
+        assert_eq!(r.matmul_kernels, 312);
+        assert_eq!(r.dma_banks, 18);
+        assert!((r.plio_util - 0.79).abs() < 0.005);
+        assert!(r.throughput_table_units() > 5000.0);
+    }
+
+    #[test]
+    fn infeasible_config_errors() {
+        let dev = AieDevice::vc1902();
+        let err = evaluate_config(
+            &dev, 10, 4, 8, Pattern::P1, Precision::Fp32, &SimConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, EvalError::Routing(_)));
+    }
+
+    #[test]
+    fn all_paper_configs_evaluate_both_precisions() {
+        let dev = AieDevice::vc1902();
+        for (x, y, z, pat) in paper_configs() {
+            for prec in Precision::all() {
+                evaluate_config(&dev, x, y, z, pat, prec, &SimConfig::default())
+                    .unwrap_or_else(|e| panic!("{x}x{y}x{z} {prec}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn table_units_differ_by_precision() {
+        let dev = AieDevice::vc1902();
+        let f = evaluate_config(&dev, 12, 3, 8, Pattern::P2, Precision::Fp32, &SimConfig::default()).unwrap();
+        let i = evaluate_config(&dev, 12, 3, 8, Pattern::P2, Precision::Int8, &SimConfig::default()).unwrap();
+        // fp32 reported in GFLOPs (thousands), int8 in TOPs (tens).
+        assert!(f.throughput_table_units() > 1000.0);
+        assert!(i.throughput_table_units() < 100.0);
+    }
+}

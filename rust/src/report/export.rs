@@ -1,0 +1,108 @@
+//! Plot-ready data exporters: CSV and JSON series for every figure/table,
+//! written under `out/` by the benches (so the paper's plots can be
+//! regenerated with any plotting tool).
+
+use crate::config::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// A columnar data series (one figure/table worth of data).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        Series {
+            columns: columns.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) -> &mut Self {
+        assert_eq!(row.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(row);
+        self
+    }
+
+    /// Render as CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render as a JSON object {column: [values...]}.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            let col: Vec<Json> = self.rows.iter().map(|r| Json::Num(r[i])).collect();
+            obj.insert(c.clone(), Json::Arr(col));
+        }
+        Json::Obj(obj)
+    }
+
+    /// Write both `<stem>.csv` and `<stem>.json` into `dir`.
+    pub fn write(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.json")))?;
+        f.write_all(self.to_json().to_string_pretty().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Default export directory for bench data.
+pub fn default_out_dir() -> std::path::PathBuf {
+    std::env::var("MAXEVA_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("out"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_format() {
+        let mut s = Series::new(vec!["x", "y"]);
+        s.push(vec![1.0, 2.5]).push(vec![3.0, 4.0]);
+        assert_eq!(s.to_csv(), "x,y\n1,2.5\n3,4\n");
+    }
+
+    #[test]
+    fn json_columnar() {
+        let mut s = Series::new(vec!["a"]);
+        s.push(vec![1.0]).push(vec![2.0]);
+        let j = s.to_json();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        Series::new(vec!["a", "b"]).push(vec![1.0]);
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("maxeva_export_test");
+        let mut s = Series::new(vec!["size", "gflops"]);
+        s.push(vec![256.0, 2232.0]);
+        s.write(&dir, "fig8_test").unwrap();
+        assert!(dir.join("fig8_test.csv").exists());
+        assert!(dir.join("fig8_test.json").exists());
+        // Round-trip the JSON through the parser.
+        let text = std::fs::read_to_string(dir.join("fig8_test.json")).unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,14 @@
+//! Table rendering and paper-vs-measured comparison.
+//!
+//! [`paper`] embeds the published values of Tables I–III and the §V-B4
+//! estimates; [`table`] renders aligned text tables; [`evaluate`] runs the
+//! full pipeline (place → route → simulate → power) for one configuration
+//! and produces a table row directly comparable against the paper.
+
+pub mod evaluate;
+pub mod export;
+pub mod paper;
+pub mod table;
+
+pub use evaluate::{evaluate_config, ConfigRow};
+pub use table::Table;

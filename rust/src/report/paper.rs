@@ -1,0 +1,137 @@
+//! Published values from the paper, used by benches and integration tests
+//! to report paper-vs-measured deltas.
+
+use crate::arch::precision::Precision;
+use crate::placement::pattern::Pattern;
+
+/// One published row of Table II (fp32) or Table III (int8).
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub x: u64,
+    pub y: u64,
+    pub z: u64,
+    pub pattern: Pattern,
+    pub matmul_kernels: u64,
+    pub total_cores: u64,
+    pub memory_banks: u64,
+    pub dma_banks: u64,
+    pub plios: u64,
+    /// GFLOPs for fp32, GOPs (=TOPs·1000) for int8, so both fit one field.
+    pub throughput_gops: f64,
+    /// Total AIE power (W). `None` where the paper could not publish.
+    pub power_w: Option<f64>,
+    /// Energy efficiency: GFLOPs/W (fp32) or TOPs/W (int8).
+    pub energy_eff: Option<f64>,
+    /// AIE core power (W).
+    pub core_power_w: Option<f64>,
+    /// Memory power (W).
+    pub memory_power_w: Option<f64>,
+}
+
+/// Table II (fp32): the six MaxEVA configurations.
+pub fn table2_fp32() -> Vec<PaperRow> {
+    vec![
+        PaperRow { x: 13, y: 4, z: 6, pattern: Pattern::P1, matmul_kernels: 312, total_cores: 390, memory_banks: 3138, dma_banks: 18, plios: 154, throughput_gops: 5442.11, power_w: Some(43.83), energy_eff: Some(124.16), core_power_w: Some(25.62), memory_power_w: Some(18.21) },
+        PaperRow { x: 10, y: 3, z: 10, pattern: Pattern::P2, matmul_kernels: 300, total_cores: 400, memory_banks: 3190, dma_banks: 0, plios: 160, throughput_gops: 5405.33, power_w: Some(44.66), energy_eff: Some(121.03), core_power_w: Some(25.54), memory_power_w: Some(19.12) },
+        PaperRow { x: 11, y: 4, z: 7, pattern: Pattern::P1, matmul_kernels: 308, total_cores: 385, memory_banks: 3106, dma_banks: 18, plios: 149, throughput_gops: 5414.39, power_w: Some(44.01), energy_eff: Some(123.03), core_power_w: Some(25.36), memory_power_w: Some(18.65) },
+        PaperRow { x: 11, y: 3, z: 9, pattern: Pattern::P2, matmul_kernels: 297, total_cores: 396, memory_banks: 3176, dma_banks: 0, plios: 159, throughput_gops: 5382.27, power_w: Some(44.13), energy_eff: Some(121.96), core_power_w: Some(25.35), memory_power_w: Some(18.78) },
+        PaperRow { x: 12, y: 4, z: 6, pattern: Pattern::P1, matmul_kernels: 288, total_cores: 360, memory_banks: 2934, dma_banks: 16, plios: 144, throughput_gops: 5031.19, power_w: Some(40.68), energy_eff: Some(123.68), core_power_w: Some(23.77), memory_power_w: Some(16.91) },
+        PaperRow { x: 12, y: 3, z: 8, pattern: Pattern::P2, matmul_kernels: 288, total_cores: 384, memory_banks: 3092, dma_banks: 0, plios: 156, throughput_gops: 5225.05, power_w: Some(42.28), energy_eff: Some(123.58), core_power_w: Some(24.68), memory_power_w: Some(17.60) },
+    ]
+}
+
+/// Table III (int8): the six MaxEVA configurations (throughput in GOPs).
+pub fn table3_int8() -> Vec<PaperRow> {
+    vec![
+        PaperRow { x: 13, y: 4, z: 6, pattern: Pattern::P1, matmul_kernels: 312, total_cores: 390, memory_banks: 3112, dma_banks: 18, plios: 154, throughput_gops: 77010.0, power_w: Some(66.83), energy_eff: Some(1.152), core_power_w: Some(48.65), memory_power_w: Some(18.18) },
+        PaperRow { x: 10, y: 3, z: 10, pattern: Pattern::P2, matmul_kernels: 300, total_cores: 400, memory_banks: 3194, dma_banks: 0, plios: 160, throughput_gops: 76080.0, power_w: Some(65.52), energy_eff: Some(1.161), core_power_w: Some(47.44), memory_power_w: Some(19.08) },
+        PaperRow { x: 11, y: 4, z: 7, pattern: Pattern::P1, matmul_kernels: 308, total_cores: 385, memory_banks: 3096, dma_banks: 18, plios: 149, throughput_gops: 75670.0, power_w: Some(66.79), energy_eff: Some(1.133), core_power_w: Some(48.17), memory_power_w: Some(18.62) },
+        PaperRow { x: 11, y: 3, z: 9, pattern: Pattern::P2, matmul_kernels: 297, total_cores: 396, memory_banks: 3178, dma_banks: 0, plios: 159, throughput_gops: 74660.0, power_w: Some(65.83), energy_eff: Some(1.134), core_power_w: Some(47.04), memory_power_w: Some(18.79) },
+        PaperRow { x: 12, y: 4, z: 6, pattern: Pattern::P1, matmul_kernels: 288, total_cores: 360, memory_banks: 2918, dma_banks: 16, plios: 144, throughput_gops: 71250.0, power_w: Some(62.13), energy_eff: Some(1.147), core_power_w: Some(45.15), memory_power_w: Some(16.98) },
+        PaperRow { x: 12, y: 3, z: 8, pattern: Pattern::P2, matmul_kernels: 288, total_cores: 384, memory_banks: 3080, dma_banks: 0, plios: 156, throughput_gops: 72930.0, power_w: Some(63.24), energy_eff: Some(1.153), core_power_w: Some(45.71), memory_power_w: Some(17.53) },
+    ]
+}
+
+/// CHARM baseline rows (bottom rows of Tables II/III).
+pub fn charm_row(prec: Precision) -> PaperRow {
+    match prec {
+        Precision::Int16 | Precision::Bf16 => {
+            panic!("the paper publishes CHARM rows only for fp32/int8")
+        }
+        Precision::Fp32 => PaperRow {
+            x: 8, y: 6, z: 8, pattern: Pattern::P1, // pattern n/a; placeholder
+            matmul_kernels: 384, total_cores: 384, memory_banks: 3086,
+            dma_banks: 0, plios: 80, throughput_gops: 4504.46,
+            power_w: Some(43.69), energy_eff: Some(103.10),
+            core_power_w: Some(26.95), memory_power_w: Some(16.74),
+        },
+        Precision::Int8 => PaperRow {
+            x: 8, y: 3, z: 8, pattern: Pattern::P1,
+            matmul_kernels: 192, total_cores: 192, memory_banks: 0,
+            dma_banks: 0, plios: 0, throughput_gops: 35190.0,
+            power_w: None, energy_eff: None,
+            core_power_w: None, memory_power_w: None,
+        },
+    }
+}
+
+/// Table I published values.
+pub struct PaperKernelRow {
+    pub name: &'static str,
+    pub latency_cyc: u64,
+    pub throughput_macs_per_cyc: f64,
+    pub efficiency: f64,
+}
+
+pub fn table1() -> Vec<PaperKernelRow> {
+    vec![
+        PaperKernelRow { name: "MatMul int8 32x128x32", latency_cyc: 1075, throughput_macs_per_cyc: 121.93, efficiency: 0.9526 },
+        PaperKernelRow { name: "Add int32 32x32", latency_cyc: 164, throughput_macs_per_cyc: 6.24, efficiency: 0.7805 },
+        PaperKernelRow { name: "MatMul fp32 32x32x32", latency_cyc: 4329, throughput_macs_per_cyc: 7.57, efficiency: 0.9470 },
+        PaperKernelRow { name: "Add fp32 32x32", latency_cyc: 167, throughput_macs_per_cyc: 6.13, efficiency: 0.7665 },
+    ]
+}
+
+/// §V-B4 estimates.
+pub const MLP_MAXEVA_GFLOPS: f64 = 4735.94;
+pub const MLP_CHARM_GFLOPS: f64 = 3670.88;
+
+/// Relative delta (measured vs paper), as a signed fraction.
+pub fn rel_delta(measured: f64, paper: f64) -> f64 {
+    (measured - paper) / paper
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_six_rows() {
+        assert_eq!(table2_fp32().len(), 6);
+        assert_eq!(table3_int8().len(), 6);
+        assert_eq!(table1().len(), 4);
+    }
+
+    #[test]
+    fn headline_numbers_present() {
+        // 5442.11 GFLOPs and 77.01 TOPs are the abstract's headlines.
+        assert_eq!(table2_fp32()[0].throughput_gops, 5442.11);
+        assert_eq!(table3_int8()[0].throughput_gops, 77010.0);
+        assert_eq!(charm_row(Precision::Fp32).throughput_gops, 4504.46);
+    }
+
+    #[test]
+    fn headline_gains_match_paper_claims() {
+        // +20.8% fp32 and 2.19× int8 over CHARM.
+        let fp32_gain = table2_fp32()[0].throughput_gops / charm_row(Precision::Fp32).throughput_gops;
+        assert!((fp32_gain - 1.208).abs() < 0.001);
+        let int8_gain = table3_int8()[0].throughput_gops / charm_row(Precision::Int8).throughput_gops;
+        assert!((int8_gain - 2.19).abs() < 0.005);
+    }
+
+    #[test]
+    fn rel_delta_signs() {
+        assert!(rel_delta(101.0, 100.0) > 0.0);
+        assert!(rel_delta(99.0, 100.0) < 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Broadcast-tree construction for circuit-switched streams.
+//!
+//! A broadcast tree starts at an interface tile (row −1, modelled as a
+//! virtual row below row 0), runs a vertical trunk up the source column,
+//! and branches horizontally along each destination row (standard
+//! dimension-ordered routing, which is what the AIE router produces for
+//! column-trunk broadcasts). Circuit-switched broadcast duplicates the
+//! stream *at the switches*: a link carries one stream regardless of how
+//! many destinations lie behind it.
+
+use crate::arch::topology::Coord;
+use std::collections::HashSet;
+
+/// A directed inter-switch link. Rows are offset by +1 so the interface
+/// row is row 0 and AIE row r is switch row r+1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Link {
+    pub from: (usize, usize), // (switch_row, col)
+    pub to: (usize, usize),
+}
+
+/// A routed broadcast tree: the set of links it occupies.
+#[derive(Debug, Clone)]
+pub struct BroadcastTree {
+    pub source_col: usize,
+    pub dests: Vec<Coord>,
+    pub links: HashSet<Link>,
+}
+
+/// Switch-row of an AIE tile row.
+fn srow(aie_row: usize) -> usize {
+    aie_row + 1
+}
+
+/// Build the broadcast tree from interface column `source_col` to `dests`.
+pub fn broadcast_tree(source_col: usize, dests: &[Coord]) -> BroadcastTree {
+    let mut links = HashSet::new();
+    if !dests.is_empty() {
+        // Vertical trunk on the source column up to the highest dest row.
+        let top = dests.iter().map(|d| srow(d.row)).max().unwrap();
+        for r in 0..top {
+            links.insert(Link {
+                from: (r, source_col),
+                to: (r + 1, source_col),
+            });
+        }
+        // Horizontal branch along each destination row.
+        for d in dests {
+            let r = srow(d.row);
+            let (mut a, b) = (source_col, d.col);
+            while a != b {
+                let next = if a < b { a + 1 } else { a - 1 };
+                links.insert(Link {
+                    from: (r, a),
+                    to: (r, next),
+                });
+                a = next;
+            }
+        }
+    }
+    BroadcastTree {
+        source_col,
+        dests: dests.to_vec(),
+        links,
+    }
+}
+
+/// Build the (reverse) route from a source tile down to an interface
+/// column: horizontal on the tile's row, then vertical down.
+pub fn output_route(from: Coord, dest_col: usize) -> BroadcastTree {
+    let mut links = HashSet::new();
+    let r = srow(from.row);
+    let (mut a, b) = (from.col, dest_col);
+    while a != b {
+        let next = if a < b { a + 1 } else { a - 1 };
+        links.insert(Link {
+            from: (r, a),
+            to: (r, next),
+        });
+        a = next;
+    }
+    for row in (1..=r).rev() {
+        links.insert(Link {
+            from: (row, dest_col),
+            to: (row - 1, dest_col),
+        });
+    }
+    BroadcastTree {
+        source_col: dest_col,
+        dests: vec![from],
+        links,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_dest_tree_is_l_shaped() {
+        let t = broadcast_tree(3, &[Coord::new(2, 5)]);
+        // Trunk: 3 vertical links (srow 0→3); branch: 2 horizontal.
+        assert_eq!(t.links.len(), 3 + 2);
+    }
+
+    #[test]
+    fn broadcast_shares_trunk() {
+        // Two dests on the same column: trunk shared, no horizontal links.
+        let t = broadcast_tree(4, &[Coord::new(1, 4), Coord::new(3, 4)]);
+        assert_eq!(t.links.len(), 4); // vertical 0→4 only
+    }
+
+    #[test]
+    fn branches_left_and_right() {
+        let t = broadcast_tree(10, &[Coord::new(0, 8), Coord::new(0, 12)]);
+        // Trunk 0→1 (1 link) + 2 left + 2 right.
+        assert_eq!(t.links.len(), 1 + 2 + 2);
+    }
+
+    #[test]
+    fn empty_dests_empty_tree() {
+        let t = broadcast_tree(0, &[]);
+        assert!(t.links.is_empty());
+    }
+
+    #[test]
+    fn output_route_reaches_interface_row() {
+        let t = output_route(Coord::new(3, 7), 5);
+        // Horizontal 7→5 on srow 4 (2 links) + vertical 4→0 (4 links).
+        assert_eq!(t.links.len(), 2 + 4);
+        assert!(t.links.contains(&Link { from: (1, 5), to: (0, 5) }));
+    }
+}

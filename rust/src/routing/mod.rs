@@ -1,0 +1,16 @@
+//! Circuit-switched stream routing over the AXI4-Stream switch fabric
+//! (paper §III-B, §IV-B and the PnR-feasibility discussion of §V-B1).
+//!
+//! MaxEVA uses *only* circuit switching: every `A` and `B` input PLIO is
+//! broadcast to its destination MatMul tiles over statically configured
+//! switch routes, and every group output streams back to a PLIO. This
+//! module builds those broadcast trees, accounts per-link stream usage
+//! against the switch port capacities, and reports congestion — it is the
+//! stand-in for the AMD AIE PnR/router whose failure on `10×4×8` the
+//! paper reports.
+
+pub mod broadcast;
+pub mod router;
+
+pub use broadcast::{broadcast_tree, BroadcastTree};
+pub use router::{route_design, RouteReport, RoutingError};

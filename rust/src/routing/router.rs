@@ -1,0 +1,454 @@
+//! The design-level router: assigns PLIOs to interface columns, routes all
+//! broadcast trees and output streams with load-balanced L-routing,
+//! accounts link usage against per-direction switch capacities, and
+//! applies the PnR slack rule the paper reports (§V-B1: `10×4×8` fails —
+//! DMA routes plus 100% core utilization leave no routing slack).
+//!
+//! Route construction mimics the AMD router's behaviour at the level that
+//! matters for feasibility: every (stream, destination) pair is routed as
+//! an L (column-then-row or row-then-column), greedily choosing the
+//! variant with the lower maximum link load. Circuit-switched broadcast
+//! duplicates at switches, so links shared between destinations of the
+//! same stream are counted once.
+
+use crate::arch::device::AieDevice;
+use crate::arch::topology::{interface_columns, Coord};
+use crate::placement::placer::PlacedDesign;
+use crate::routing::broadcast::Link;
+// §Perf: per-link loads live in a flat dense array indexed by packed link
+// ids (grid position × direction) instead of a hash map, and per-stream
+// claimed-link sets are generation-stamped dense arrays — see
+// EXPERIMENTS.md §Perf for the step-by-step log. FxHash remains for the
+// small column-assignment map.
+use rustc_hash::FxHashMap as HashMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RoutingError {
+    #[error("link capacity exceeded on {count} links (max overuse {max_over} streams)")]
+    Congested { count: usize, max_over: u32 },
+    #[error(
+        "no routing slack: design uses DMA ({dma_banks} banks) with 100% core \
+         utilization (paper §V-B1: PnR fails on such designs)"
+    )]
+    NoSlack { dma_banks: u64 },
+    #[error("not enough interface columns: need {need}, have {have}")]
+    NotEnoughPlios { need: usize, have: usize },
+}
+
+/// Routing result: per-link usage statistics.
+#[derive(Debug, Clone)]
+pub struct RouteReport {
+    /// Number of distinct links used.
+    pub links_used: usize,
+    /// Maximum streams on any single link.
+    pub max_link_load: u32,
+    /// Mean streams per used link.
+    pub mean_link_load: f64,
+    /// Total streams routed (A inputs + B inputs + outputs + DMA hops).
+    pub streams: usize,
+}
+
+/// Per-direction link capacity (AM009 switch master ports): vertical
+/// links are the 6-wide north ports, horizontal links 4-wide.
+fn capacity(dev: &AieDevice, l: &Link) -> u32 {
+    let _ = l; // uniform effective capacity per direction (see AieDevice)
+    dev.switch_capacity_per_dir
+}
+
+/// Mutable routing state: link loads in a dense array.
+///
+/// Link id = ((switch_row · cols) + col) · 4 + direction, directions
+/// N/S/E/W — O(1) lookups, cache-friendly accumulation.
+struct Fabric<'d> {
+    dev: &'d AieDevice,
+    load: Vec<u32>,
+    rows: usize,
+    cols: usize,
+}
+
+/// Generation-stamped membership set over dense link ids: `clear()` is
+/// O(1) (bump the generation), insert/contains are single array slots.
+struct Marker {
+    stamp: Vec<u32>,
+    gen: u32,
+}
+
+impl Marker {
+    fn new(n: usize) -> Self {
+        Marker { stamp: vec![0; n], gen: 1 }
+    }
+    fn clear(&mut self) {
+        self.gen += 1;
+    }
+    fn contains(&self, id: usize) -> bool {
+        self.stamp[id] == self.gen
+    }
+    /// Returns true if newly inserted.
+    fn insert(&mut self, id: usize) -> bool {
+        if self.stamp[id] == self.gen {
+            false
+        } else {
+            self.stamp[id] = self.gen;
+            true
+        }
+    }
+}
+
+impl<'d> Fabric<'d> {
+    fn new(dev: &'d AieDevice) -> Self {
+        let rows = dev.rows + 1; // + interface switch row
+        let cols = dev.cols;
+        Fabric {
+            dev,
+            load: vec![0; rows * cols * 4],
+            rows,
+            cols,
+        }
+    }
+
+    /// Pack a directed link into its dense id.
+    #[allow(dead_code)]
+    fn link_id(&self, l: &Link) -> usize {
+        let (fr, fc) = l.from;
+        let (tr, tc) = l.to;
+        let dir = if tr > fr {
+            0 // north
+        } else if tr < fr {
+            1 // south
+        } else if tc > fc {
+            2 // east
+        } else {
+            3 // west
+        };
+        (fr * self.cols + fc) * 4 + dir
+    }
+
+    /// Unpack a dense id back into a link (diagnostics only).
+    fn id_link(&self, id: usize) -> Link {
+        let dir = id % 4;
+        let cell = id / 4;
+        let (r, c) = (cell / self.cols, cell % self.cols);
+        let to = match dir {
+            0 => (r + 1, c),
+            1 => (r - 1, c),
+            2 => (r, c + 1),
+            _ => (r, c - 1),
+        };
+        Link { from: (r, c), to }
+    }
+
+    /// Visit the dense link ids of an L path (`col_first` selects the
+    /// variant) without materializing a Vec — §Perf: the router's hot
+    /// inner loop (allocation-free costing).
+    fn walk_l<F: FnMut(usize)>(
+        &self,
+        src: (usize, usize),
+        dst: (usize, usize),
+        col_first: bool,
+        mut f: F,
+    ) {
+        let cols = self.cols;
+        let seg_v = |col: usize, r0: usize, r1: usize, f: &mut F| {
+            let (mut a, b) = (r0, r1);
+            while a != b {
+                let (next, dir) = if a < b { (a + 1, 0) } else { (a - 1, 1) };
+                f((a * cols + col) * 4 + dir);
+                a = next;
+            }
+        };
+        let seg_h = |row: usize, c0: usize, c1: usize, f: &mut F| {
+            let (mut a, b) = (c0, c1);
+            while a != b {
+                let (next, dir) = if a < b { (a + 1, 2) } else { (a - 1, 3) };
+                f((row * cols + a) * 4 + dir);
+                a = next;
+            }
+        };
+        if col_first {
+            seg_v(src.1, src.0, dst.0, &mut f);
+            seg_h(dst.0, src.1, dst.1, &mut f);
+        } else {
+            seg_h(src.0, src.1, dst.1, &mut f);
+            seg_v(dst.1, src.0, dst.0, &mut f);
+        }
+    }
+
+    /// Route one (source, dest) pair of a stream, choosing the less-loaded
+    /// L variant. `mine` accumulates this stream's links.
+    fn route_l(
+        &mut self,
+        src: (usize, usize),
+        dst: (usize, usize),
+        mine: &mut Marker,
+    ) {
+        // Cost both L variants allocation-free.
+        let mut costs = [(0u32, 0u32); 2];
+        for (i, col_first) in [(0usize, true), (1, false)] {
+            let (mut max, mut sum) = (0u32, 0u32);
+            self.walk_l(src, dst, col_first, |id| {
+                if !mine.contains(id) {
+                    let u = self.load[id] + 1;
+                    max = max.max(u);
+                    sum += u;
+                }
+            });
+            costs[i] = (max, sum);
+        }
+        let col_first = costs[0] <= costs[1];
+        // Claim the chosen path (gather into a fixed buffer, then commit —
+        // `walk_l` borrows `self` immutably while `load` needs `&mut`).
+        let mut ids = [0usize; 128];
+        let mut n = 0usize;
+        self.walk_l(src, dst, col_first, |id| {
+            debug_assert!(n < ids.len(), "path longer than rows+cols");
+            ids[n] = id;
+            n += 1;
+        });
+        for &id in &ids[..n] {
+            if mine.insert(id) {
+                self.load[id] += 1;
+            }
+        }
+    }
+
+    fn congestion(&self) -> Option<(usize, u32)> {
+        let mut count = 0;
+        let mut max_over = 0;
+        for (id, &u) in self.load.iter().enumerate() {
+            if u == 0 {
+                continue;
+            }
+            let cap = capacity(self.dev, &self.id_link(id));
+            if u > cap {
+                count += 1;
+                max_over = max_over.max(u - cap);
+            }
+        }
+        let _ = self.rows;
+        (count > 0).then_some((count, max_over))
+    }
+}
+
+/// Switch-row of an AIE tile row (interface row is switch row 0).
+fn srow(aie_row: usize) -> usize {
+    aie_row + 1
+}
+
+/// Assign streams to interface columns nearest their centroid with
+/// bounded ports per column.
+fn assign_columns(
+    centroids: &[f64],
+    iface_cols: &[usize],
+    per_col: usize,
+) -> Result<Vec<usize>, RoutingError> {
+    let mut load: HashMap<usize, usize> = HashMap::default();
+    let mut out = Vec::with_capacity(centroids.len());
+    for &c in centroids {
+        let mut best: Option<usize> = None;
+        let mut best_d = f64::MAX;
+        for &ic in iface_cols {
+            if *load.get(&ic).unwrap_or(&0) >= per_col {
+                continue;
+            }
+            let d = (ic as f64 - c).abs();
+            if d < best_d {
+                best_d = d;
+                best = Some(ic);
+            }
+        }
+        let col = best.ok_or(RoutingError::NotEnoughPlios {
+            need: centroids.len(),
+            have: iface_cols.len() * per_col,
+        })?;
+        *load.entry(col).or_insert(0) += 1;
+        out.push(col);
+    }
+    Ok(out)
+}
+
+fn centroid(coords: &[Coord]) -> f64 {
+    if coords.is_empty() {
+        return 0.0;
+    }
+    coords.iter().map(|c| c.col as f64).sum::<f64>() / coords.len() as f64
+}
+
+/// Route the whole placed design. Returns usage statistics or a
+/// congestion error. This is the reproduction of the paper's PnR
+/// feasibility filter.
+pub fn route_design(dev: &AieDevice, design: &PlacedDesign) -> Result<RouteReport, RoutingError> {
+    // The paper's PnR slack rule: a design that needs DMA routes (pattern
+    // P1 T-shapes) on a 100%-utilized array cannot be routed (§V-B1).
+    if design.dma_banks > 0 && design.unused_cores(dev) == 0 {
+        return Err(RoutingError::NoSlack {
+            dma_banks: design.dma_banks,
+        });
+    }
+
+    let (x, y, z) = (
+        design.cand.x as usize,
+        design.cand.y as usize,
+        design.cand.z as usize,
+    );
+    let iface = interface_columns(dev);
+    let group = |xi: usize, zi: usize| &design.groups[xi * z + zi];
+
+    // A_{x,y} broadcast to the y-th MatMul of every group (x, ·): Z dests.
+    let mut in_streams: Vec<Vec<Coord>> = Vec::new();
+    for xi in 0..x {
+        for yi in 0..y {
+            in_streams.push((0..z).map(|zi| group(xi, zi).matmuls[yi]).collect());
+        }
+    }
+    // B_{y,z} broadcast to the y-th MatMul of every group (·, z): X dests.
+    for yi in 0..y {
+        for zi in 0..z {
+            in_streams.push((0..x).map(|xi| group(xi, zi).matmuls[yi]).collect());
+        }
+    }
+    let out_streams: Vec<Coord> = design.groups.iter().map(|g| g.adder).collect();
+
+    let in_per_col = dev.plio_in.div_ceil(iface.len().max(1));
+    let out_per_col = dev.plio_out.div_ceil(iface.len().max(1));
+    let in_cols = assign_columns(
+        &in_streams.iter().map(|d| centroid(d)).collect::<Vec<_>>(),
+        &iface,
+        in_per_col,
+    )?;
+    let out_cols = assign_columns(
+        &out_streams.iter().map(|c| c.col as f64).collect::<Vec<_>>(),
+        &iface,
+        out_per_col,
+    )?;
+
+    let mut fabric = Fabric::new(dev);
+    let mut mine = Marker::new((dev.rows + 1) * dev.cols * 4);
+    let mut streams = 0usize;
+    for (dests, col) in in_streams.iter().zip(&in_cols) {
+        streams += 1;
+        mine.clear();
+        // Route nearest destinations first so broadcast trunks grow
+        // incrementally (shared prefixes reused).
+        let mut ds = dests.clone();
+        ds.sort_by_key(|d| srow(d.row));
+        for d in ds {
+            fabric.route_l((0, *col), (srow(d.row), d.col), &mut mine);
+        }
+    }
+    for (src, col) in out_streams.iter().zip(&out_cols) {
+        streams += 1;
+        mine.clear();
+        fabric.route_l((srow(src.row), src.col), (0, *col), &mut mine);
+    }
+    // DMA connections of T-shapes: a short switch route from the far
+    // MatMul to the adder tile.
+    for g in &design.groups {
+        for (mm, buf) in g.matmuls.iter().zip(&g.out_buf_module) {
+            if buf.is_none() {
+                streams += 1;
+                mine.clear();
+                fabric.route_l(
+                    (srow(mm.row), mm.col),
+                    (srow(g.adder.row), g.adder.col),
+                    &mut mine,
+                );
+            }
+        }
+    }
+
+    if let Some((count, max_over)) = fabric.congestion() {
+        return Err(RoutingError::Congested { count, max_over });
+    }
+
+    let links_used = fabric.load.iter().filter(|&&u| u > 0).count();
+    let max_link_load = fabric.load.iter().copied().max().unwrap_or(0);
+    let mean_link_load = fabric.load.iter().map(|&u| u as f64).sum::<f64>()
+        / links_used.max(1) as f64;
+    Ok(RouteReport {
+        links_used,
+        max_link_load,
+        mean_link_load,
+        streams,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+    use crate::kernels::matmul::MatMulKernel;
+    use crate::optimizer::array::ArrayCandidate;
+    use crate::placement::pattern::Pattern;
+    use crate::placement::placer::place_design;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    fn placed(x: u64, y: u64, z: u64, pat: Pattern) -> PlacedDesign {
+        place_design(
+            &dev(),
+            ArrayCandidate::new(x, y, z),
+            pat,
+            MatMulKernel::paper_kernel(Precision::Fp32),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paper_13x4x6_routes() {
+        // §V-B1: 13×4×6 "does not present any routing issues".
+        let d = dev();
+        let r = route_design(&d, &placed(13, 4, 6, Pattern::P1)).unwrap();
+        assert!(r.max_link_load <= d.switch_capacity_per_dir);
+        assert_eq!(r.streams, 76 + 78 + 9); // PLIO in + out + 9 DMA hops
+    }
+
+    #[test]
+    fn paper_10x4x8_fails_routing() {
+        // §V-B1: the top-ranked 10×4×8 fails PnR: DMA (P1) + 100% cores.
+        let d = dev();
+        let err = route_design(&d, &placed(10, 4, 8, Pattern::P1)).unwrap_err();
+        assert!(matches!(err, RoutingError::NoSlack { .. }), "{err}");
+    }
+
+    #[test]
+    fn paper_10x3x10_routes_despite_full_array() {
+        // §V-B3: 10×3×10 P2 uses all 400 cores but routes fine (no DMA).
+        let d = dev();
+        route_design(&d, &placed(10, 3, 10, Pattern::P2)).unwrap();
+    }
+
+    #[test]
+    fn all_other_paper_configs_route() {
+        let d = dev();
+        for (x, y, z, pat) in [
+            (11, 4, 7, Pattern::P1),
+            (11, 3, 9, Pattern::P2),
+            (12, 4, 6, Pattern::P1),
+            (12, 3, 8, Pattern::P2),
+        ] {
+            route_design(&d, &placed(x, y, z, pat))
+                .unwrap_or_else(|e| panic!("{x}x{y}x{z} must route: {e}"));
+        }
+    }
+
+    #[test]
+    fn report_statistics_sane() {
+        let d = dev();
+        let r = route_design(&d, &placed(12, 3, 8, Pattern::P2)).unwrap();
+        assert!(r.links_used > 0);
+        assert!(r.mean_link_load >= 1.0);
+        assert!(r.mean_link_load <= r.max_link_load as f64);
+    }
+
+    #[test]
+    fn broadcast_duplication_not_double_counted() {
+        // A small design: one A stream feeding Z groups shares its trunk.
+        let d = dev();
+        let r = route_design(&d, &placed(1, 3, 2, Pattern::P2)).unwrap();
+        // 1·3 + 3·2 = 9 input streams + 2 outputs.
+        assert_eq!(r.streams, 11);
+        assert!(r.max_link_load <= d.switch_capacity_per_dir);
+    }
+}

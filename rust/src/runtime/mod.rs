@@ -1,0 +1,142 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! HLO **text** is the interchange format (not serialized protos —
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids). See /opt/xla-example and
+//! DESIGN.md §6.
+//!
+//! PJRT handles are not `Send` (raw pointers), so the coordinator owns a
+//! dedicated *device thread* that constructs the [`Runtime`], loads
+//! executables and serves tile jobs over channels
+//! (see [`crate::coordinator`]).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact naming scheme shared with `python/compile/aot.py`.
+pub fn artifact_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.hlo.txt"))
+}
+
+/// The PJRT CPU runtime: client + loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Construct a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    /// Load a named artifact from a directory.
+    pub fn load_named(&self, dir: &Path, name: &str) -> Result<Executable> {
+        self.load(&artifact_path(dir, name))
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs, returning the f32 elements of the single
+    /// (1-tuple) output. `inputs` are (data, dims) pairs.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .context("reshaping f32 input")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with i32 inputs (the int8 artifacts accept int32 operands
+    /// and cast internally — the `xla` crate has no i8 literal
+    /// constructor), returning i32 output elements.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .context("reshaping i32 input")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// True if the standard artifact set exists in `dir` (used by tests and
+/// examples to skip gracefully before `make artifacts` has run).
+pub fn artifacts_available(dir: &Path) -> bool {
+    artifact_path(dir, "array_fp32_13x4x6").exists()
+}
+
+/// The default artifacts directory: `$MAXEVA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("MAXEVA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_naming() {
+        let p = artifact_path(Path::new("artifacts"), "array_fp32_13x4x6");
+        assert_eq!(p, PathBuf::from("artifacts/array_fp32_13x4x6.hlo.txt"));
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // NOTE: relies on MAXEVA_ARTIFACTS being unset in the test env.
+        let d = default_artifacts_dir();
+        assert!(d == PathBuf::from("artifacts") || d.is_absolute() || d.exists() || !d.as_os_str().is_empty());
+    }
+
+    // Execution-path tests live in rust/tests/runtime_artifacts.rs (they
+    // need the artifacts built by `make artifacts`).
+}

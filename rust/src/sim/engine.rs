@@ -1,0 +1,257 @@
+//! Design-level simulation: runs the group pipeline for every group of a
+//! placed design (clean and T-shape variants), applies seeded per-group
+//! PnR jitter, and aggregates array throughput the way the paper measures
+//! it (total work over the completion time of the slowest group).
+
+use crate::arch::device::AieDevice;
+use crate::placement::group::GroupShape;
+use crate::placement::placer::PlacedDesign;
+use crate::sim::group_pipeline::{simulate_group, GroupSim, OverheadModel};
+use crate::util::prng::XorShift64;
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Iterations simulated per group (warmup is the first half).
+    pub iters: usize,
+    /// Seed for the PnR buffer-placement jitter.
+    pub seed: u64,
+    /// Amplitude of the per-group jitter (paper §V-B3 reports <1% effects;
+    /// default 0.5%).
+    pub jitter_amp: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            iters: 64,
+            seed: 0x4D41_5845_5641, // "MAXEVA"
+            jitter_amp: 0.005,
+        }
+    }
+}
+
+/// Aggregated simulation result for one design (one row of Table II/III).
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Steady-state iteration period of the slowest group, in cycles.
+    pub period_cycles: f64,
+    /// Throughput in ops/s (2 ops per MAC).
+    pub ops_per_sec: f64,
+    /// Array-level efficiency vs device peak [0, 1].
+    pub efficiency: f64,
+    /// Adder-core busy fraction (input to the power model).
+    pub adder_duty: f64,
+    /// MatMul-core busy fraction.
+    pub matmul_duty: f64,
+    /// Per-group periods (diagnostics; length = number of groups).
+    pub group_periods: Vec<f64>,
+}
+
+/// Simulate a placed design.
+///
+/// §Perf: groups only differ in (a) T-shape vs clean and (b) the seeded
+/// jitter, and jitter enters the steady-state period *additively*
+/// (`Δperiod = frac·(Y−1)·add_cyc·jit` — verified by
+/// `fast_path_matches_full_sim`). So only the two archetype pipelines are
+/// simulated and per-group periods are reconstructed analytically —
+/// ~40× fewer pipeline simulations than the naive per-group loop.
+pub fn simulate_design(dev: &AieDevice, design: &PlacedDesign, cfg: &SimConfig) -> SimResult {
+    let ovh = OverheadModel::calibrated(design.kernel.prec);
+    let mut rng = XorShift64::new(cfg.seed ^ design.cand.matmul_kernels());
+    let y = design.cand.y;
+
+    // Archetype pipelines at zero jitter.
+    let base_clean = simulate_group(dev, design.kernel, y, false, &ovh, cfg.iters, 0.0);
+    let has_t = design.groups.iter().any(|g| g.shape == GroupShape::TShape);
+    let base_t = if has_t {
+        simulate_group(dev, design.kernel, y, true, &ovh, cfg.iters, 0.0)
+    } else {
+        base_clean
+    };
+    // Jitter sensitivity: d(period)/d(jit) of the bank-conflict stall.
+    let add_cyc =
+        crate::kernels::add::AddKernel::new(design.kernel.m, design.kernel.n, design.kernel.prec)
+            .latency_cycles() as f64;
+    let stall_slope = ovh.bank_conflict_frac * (y as f64 - 1.0) * add_cyc;
+
+    let mut periods = Vec::with_capacity(design.groups.len());
+    let mut slowest: Option<GroupSim> = None;
+    let mut duty_acc = (0.0, 0.0);
+    for g in &design.groups {
+        let jitter = rng.jitter(cfg.jitter_amp);
+        let base = if g.shape == GroupShape::TShape { base_t } else { base_clean };
+        let period = base.period_cycles + stall_slope * jitter;
+        let gs = GroupSim {
+            period_cycles: period,
+            adder_duty: (y as f64 - 1.0) * add_cyc / period,
+            matmul_duty: design.kernel.latency_cycles() as f64 / period,
+        };
+        periods.push(gs.period_cycles);
+        duty_acc.0 += gs.adder_duty;
+        duty_acc.1 += gs.matmul_duty;
+        if slowest.map_or(true, |s| gs.period_cycles > s.period_cycles) {
+            slowest = Some(gs);
+        }
+    }
+    let slowest = slowest.expect("design has no groups");
+
+    // The paper measures aggregate throughput over a fixed workload: all
+    // groups iterate the same number of times, so completion is gated by
+    // the slowest group (T-shapes in P1).
+    let period = slowest.period_cycles;
+    let macs_per_iter = design.cand.matmul_kernels() as f64 * design.kernel.macs() as f64;
+    let ops_per_sec = 2.0 * macs_per_iter / (period / dev.freq_hz);
+    let n = design.groups.len() as f64;
+    SimResult {
+        period_cycles: period,
+        ops_per_sec,
+        efficiency: ops_per_sec / dev.peak_ops_per_sec(design.kernel.prec),
+        adder_duty: duty_acc.0 / n,
+        matmul_duty: duty_acc.1 / n,
+        group_periods: periods,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+    use crate::kernels::matmul::MatMulKernel;
+    use crate::optimizer::array::ArrayCandidate;
+    use crate::placement::pattern::Pattern;
+    use crate::placement::placer::place_design;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    fn sim(x: u64, y: u64, z: u64, pat: Pattern, prec: Precision) -> SimResult {
+        let d = dev();
+        let pd = place_design(
+            &d,
+            ArrayCandidate::new(x, y, z),
+            pat,
+            MatMulKernel::paper_kernel(prec),
+        )
+        .unwrap();
+        simulate_design(&d, &pd, &SimConfig::default())
+    }
+
+    #[test]
+    fn table2_row1_fp32_throughput() {
+        // Paper: 13×4×6 (P1) fp32 → 5442.11 GFLOPs. Model target ±1.5%.
+        let r = sim(13, 4, 6, Pattern::P1, Precision::Fp32);
+        let gflops = r.ops_per_sec / 1e9;
+        assert!(
+            (gflops - 5442.11).abs() / 5442.11 < 0.015,
+            "measured {gflops:.2} GFLOPs"
+        );
+    }
+
+    #[test]
+    fn table3_row1_int8_throughput() {
+        // Paper: 13×4×6 (P1) int8 → 77.01 TOPs. Model target ±1.5%.
+        let r = sim(13, 4, 6, Pattern::P1, Precision::Int8);
+        let tops = r.ops_per_sec / 1e12;
+        assert!(
+            (tops - 77.01).abs() / 77.01 < 0.015,
+            "measured {tops:.2} TOPs"
+        );
+    }
+
+    #[test]
+    fn predicted_rows_within_1_5_percent() {
+        // Rows 2–6 of both tables are *predictions* of the calibrated
+        // model (only rows 1–2 were used for fitting).
+        let cases: &[(u64, u64, u64, Pattern, Precision, f64)] = &[
+            (10, 3, 10, Pattern::P2, Precision::Fp32, 5405.33),
+            (11, 4, 7, Pattern::P1, Precision::Fp32, 5414.39),
+            (11, 3, 9, Pattern::P2, Precision::Fp32, 5382.27),
+            (12, 4, 6, Pattern::P1, Precision::Fp32, 5031.19),
+            (12, 3, 8, Pattern::P2, Precision::Fp32, 5225.05),
+            (10, 3, 10, Pattern::P2, Precision::Int8, 76080.0),
+            (11, 4, 7, Pattern::P1, Precision::Int8, 75670.0),
+            (11, 3, 9, Pattern::P2, Precision::Int8, 74660.0),
+            (12, 4, 6, Pattern::P1, Precision::Int8, 71250.0),
+            (12, 3, 8, Pattern::P2, Precision::Int8, 72930.0),
+        ];
+        for &(x, y, z, pat, prec, paper_gops) in cases {
+            let r = sim(x, y, z, pat, prec);
+            let gops = r.ops_per_sec / 1e9;
+            let err = (gops - paper_gops).abs() / paper_gops;
+            assert!(
+                err < 0.015,
+                "{x}x{y}x{z} {prec}: measured {gops:.1} vs paper {paper_gops:.1} ({:.2}%)",
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn p2_beats_p1_at_equal_kernels() {
+        // Paper §V-B3 ablation: at 288 kernels, P2 (no DMA) outperforms P1.
+        for prec in Precision::all() {
+            let p1 = sim(12, 4, 6, Pattern::P1, prec);
+            let p2 = sim(12, 3, 8, Pattern::P2, prec);
+            assert!(p2.ops_per_sec > p1.ops_per_sec, "{prec}");
+        }
+    }
+
+    #[test]
+    fn throughput_increases_with_kernels_within_pattern() {
+        let a = sim(12, 4, 6, Pattern::P1, Precision::Int8); // 288
+        let b = sim(13, 4, 6, Pattern::P1, Precision::Int8); // 312
+        assert!(b.ops_per_sec > a.ops_per_sec);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sim(13, 4, 6, Pattern::P1, Precision::Fp32);
+        let b = sim(13, 4, 6, Pattern::P1, Precision::Fp32);
+        assert_eq!(a.ops_per_sec, b.ops_per_sec);
+    }
+
+    #[test]
+    fn fast_path_matches_full_sim() {
+        // §Perf validity: the analytic jitter reconstruction must equal a
+        // full per-group pipeline simulation.
+        let d = dev();
+        for prec in Precision::all() {
+            for (x, y, z, pat) in [(13u64, 4u64, 6u64, Pattern::P1), (10, 3, 10, Pattern::P2)] {
+                let pd = place_design(&d, ArrayCandidate::new(x, y, z), pat,
+                    MatMulKernel::paper_kernel(prec)).unwrap();
+                let cfg = SimConfig::default();
+                let fast = simulate_design(&d, &pd, &cfg);
+                // Reference: explicit per-group sims with the same seeds.
+                let ovh = crate::sim::group_pipeline::OverheadModel::calibrated(prec);
+                let mut rng = crate::util::prng::XorShift64::new(
+                    cfg.seed ^ pd.cand.matmul_kernels(),
+                );
+                let mut worst: f64 = 0.0;
+                for g in &pd.groups {
+                    let jit = rng.jitter(cfg.jitter_amp);
+                    let gs = crate::sim::group_pipeline::simulate_group(
+                        &d, pd.kernel, y,
+                        g.shape == crate::placement::group::GroupShape::TShape,
+                        &ovh, cfg.iters, jit,
+                    );
+                    worst = worst.max(gs.period_cycles);
+                }
+                let delta = (fast.period_cycles - worst).abs() / worst;
+                assert!(delta < 1e-3, "{x}x{y}x{z} {prec}: {delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_below_single_kernel_bound() {
+        // Array efficiency can't exceed the single-kernel efficiency.
+        let r = sim(13, 4, 6, Pattern::P1, Precision::Int8);
+        let k = MatMulKernel::paper_kernel(Precision::Int8);
+        // Efficiency is vs whole-device peak: scale by utilization.
+        let used_frac = 312.0 / 400.0;
+        assert!(r.efficiency <= k.efficiency() * used_frac);
+        assert!(r.efficiency > 0.5 * used_frac);
+    }
+}

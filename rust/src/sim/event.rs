@@ -1,0 +1,331 @@
+//! Full-array discrete-event simulator.
+//!
+//! Where [`crate::sim::group_pipeline`] solves one group's steady-state
+//! recurrence (fast — used for the tables), this module simulates the
+//! *entire placed array* with an event queue: every MatMul core, adder
+//! core, PLIO stream and DMA channel is a resource with explicit busy
+//! intervals. It exists to (a) cross-validate the group-pipeline model
+//! (they must agree on the steady-state period within 1%, see tests),
+//! (b) expose transient behaviour — pipeline fill, drain, per-iteration
+//! jitter — that the recurrence hides, and (c) serve as the L3
+//! profiling target for the §Perf pass.
+
+use crate::arch::device::AieDevice;
+use crate::kernels::add::AddKernel;
+use crate::placement::group::GroupShape;
+use crate::placement::placer::PlacedDesign;
+use crate::sim::group_pipeline::OverheadModel;
+use crate::util::prng::XorShift64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Event kinds, ordered by time through the queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// MatMul kernel of (group, k) finished iteration `iter`.
+    MatMulDone { group: usize, k: usize, iter: usize },
+    /// Adder of `group` finished consuming all C-buffers of `iter`.
+    AdderDone { group: usize, iter: usize },
+    /// Output stream of `group` drained iteration `iter`.
+    OutDone { group: usize, iter: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct QueuedEvent {
+    time_fp: u64, // fixed-point cycles (×16) for a total order
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        (self.time_fp, self.seq) == (other.time_fp, other.seq)
+    }
+}
+impl Eq for QueuedEvent {}
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time_fp, self.seq).cmp(&(other.time_fp, other.seq))
+    }
+}
+
+/// Result of the event simulation.
+#[derive(Debug, Clone)]
+pub struct EventSimResult {
+    /// Steady-state period of the slowest group (cycles/iteration).
+    pub period_cycles: f64,
+    /// Cycles until the first output of the slowest group (pipeline fill).
+    pub fill_cycles: f64,
+    /// Total cycles for all groups to complete `iters` iterations.
+    pub makespan_cycles: f64,
+    /// Throughput over the full makespan (includes fill/drain), ops/s.
+    pub ops_per_sec_total: f64,
+    /// Steady-state throughput (excludes fill), ops/s.
+    pub ops_per_sec_steady: f64,
+    /// Events processed (diagnostics / perf).
+    pub events: u64,
+}
+
+/// Per-group mutable state.
+struct GroupState {
+    /// Completion time (cycles) of each MatMul's previous iteration.
+    mm_done: Vec<f64>,
+    /// Which iteration each MatMul runs next.
+    mm_iter: Vec<usize>,
+    /// c_ready[k]: completion time of the latest C produced by MatMul k.
+    c_ready: Vec<Vec<f64>>,
+    /// Adder consumption completion per iteration.
+    consumed: Vec<f64>,
+    adder_free: f64,
+    out_free: f64,
+    out_times: Vec<f64>,
+    /// Per-group stall jitter factor.
+    jitter: f64,
+    has_dma: bool,
+}
+
+/// Simulate the whole placed array for `iters` iterations per group.
+pub fn simulate_events(
+    dev: &AieDevice,
+    design: &PlacedDesign,
+    iters: usize,
+    seed: u64,
+    jitter_amp: f64,
+) -> EventSimResult {
+    assert!(iters >= 8);
+    let kernel = design.kernel;
+    let ovh = OverheadModel::calibrated(kernel.prec);
+    let add = AddKernel::new(kernel.m, kernel.n, kernel.prec);
+    let add_cyc = add.latency_cycles() as f64;
+    let (a_cyc, _b_cyc, c_cyc) = kernel.io_cycles(dev);
+    let kernel_cyc = kernel.latency_cycles() as f64;
+    let y = design.cand.y as usize;
+    let mut rng = XorShift64::new(seed ^ 0xE5E5);
+
+    let bank_stall = |jit: f64| ovh.bank_conflict_frac * (y as f64 - 1.0) * add_cyc * (1.0 + jit);
+
+    let mut groups: Vec<GroupState> = design
+        .groups
+        .iter()
+        .map(|g| GroupState {
+            mm_done: vec![0.0; y],
+            mm_iter: vec![0; y],
+            c_ready: vec![vec![0.0; iters]; y],
+            consumed: vec![0.0; iters],
+            adder_free: 0.0,
+            out_free: 0.0,
+            out_times: Vec::with_capacity(iters),
+            jitter: rng.jitter(jitter_amp),
+            has_dma: g.shape == GroupShape::TShape,
+        })
+        .collect();
+
+    let mut heap: BinaryHeap<Reverse<QueuedEvent>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut events = 0u64;
+    let fp = |t: f64| (t * 16.0) as u64;
+
+    let push = |heap: &mut BinaryHeap<Reverse<QueuedEvent>>, seq: &mut u64, t: f64, ev: Ev| {
+        *seq += 1;
+        heap.push(Reverse(QueuedEvent {
+            time_fp: fp(t),
+            seq: *seq,
+            ev,
+        }));
+    };
+
+    // Kick off: every MatMul starts its first iteration after its input
+    // streams fill (A and B fill concurrently on separate channels).
+    for (gi, g) in groups.iter_mut().enumerate() {
+        for k in 0..y {
+            let start = a_cyc as f64 + ovh.lock_cycles as f64;
+            let dma = if g.has_dma && k == y - 1 { ovh.dma_penalty as f64 } else { 0.0 };
+            let done = start + kernel_cyc + dma;
+            g.mm_done[k] = done;
+            g.c_ready[k][0] = done;
+            push(&mut heap, &mut seq, done, Ev::MatMulDone { group: gi, k, iter: 0 });
+        }
+    }
+
+    while let Some(Reverse(qe)) = heap.pop() {
+        events += 1;
+        let t = qe.time_fp as f64 / 16.0;
+        match qe.ev {
+            Ev::MatMulDone { group, k, iter } => {
+                let g = &mut groups[group];
+                g.mm_iter[k] = iter + 1;
+                // Schedule next iteration if any: gated by the C
+                // ping-pong (iteration i needs consumed[i-2]).
+                let next = iter + 1;
+                if next < iters {
+                    let c_free = if next >= 2 { g.consumed[next - 2] } else { 0.0 };
+                    let stall = bank_stall(g.jitter);
+                    let dma = if g.has_dma && k == y - 1 { ovh.dma_penalty as f64 } else { 0.0 };
+                    let start = g.mm_done[k].max(c_free) + ovh.lock_cycles as f64;
+                    let done = start + kernel_cyc + stall + dma;
+                    g.mm_done[k] = done;
+                    g.c_ready[k][next] = done;
+                    push(&mut heap, &mut seq, done, Ev::MatMulDone { group, k, iter: next });
+                }
+                // If this completes the set for `iter`, the adder can run.
+                if k == y - 1 || g.c_ready.iter().all(|c| c[iter] > 0.0) {
+                    let all_ready = g.c_ready.iter().all(|c| c[iter] > 0.0);
+                    if all_ready && g.consumed[iter] == 0.0 {
+                        // Adder consumes sequentially.
+                        let mut ta = g.adder_free.max(g.c_ready[0][iter]);
+                        for kk in 1..y {
+                            ta = ta.max(g.c_ready[kk][iter]) + add_cyc;
+                        }
+                        g.consumed[iter] = ta;
+                        g.adder_free = ta;
+                        push(&mut heap, &mut seq, ta, Ev::AdderDone { group, iter });
+                    }
+                }
+            }
+            Ev::AdderDone { group, iter } => {
+                let g = &mut groups[group];
+                // Output stream (double-buffered; serializes on the PLIO).
+                let out_done = t.max(g.out_free) + c_cyc as f64;
+                g.out_free = out_done;
+                push(&mut heap, &mut seq, out_done, Ev::OutDone { group, iter });
+            }
+            Ev::OutDone { group, iter } => {
+                let g = &mut groups[group];
+                debug_assert_eq!(g.out_times.len(), iter);
+                g.out_times.push(t);
+            }
+        }
+    }
+
+    // Analyze the slowest group.
+    let slowest = groups
+        .iter()
+        .max_by(|a, b| {
+            a.out_times
+                .last()
+                .partial_cmp(&b.out_times.last())
+                .unwrap()
+        })
+        .unwrap();
+    let outs = &slowest.out_times;
+    let fill = outs[0];
+    let half = outs.len() / 2;
+    let period = (outs[outs.len() - 1] - outs[half]) / (outs.len() - 1 - half) as f64;
+    let makespan = groups
+        .iter()
+        .map(|g| *g.out_times.last().unwrap())
+        .fold(0.0, f64::max);
+
+    let total_macs = design.cand.matmul_kernels() as f64 * kernel.macs() as f64 * iters as f64;
+    let steady_ops = 2.0
+        * design.cand.matmul_kernels() as f64
+        * kernel.macs() as f64
+        / (period / dev.freq_hz);
+    EventSimResult {
+        period_cycles: period,
+        fill_cycles: fill,
+        makespan_cycles: makespan,
+        ops_per_sec_total: 2.0 * total_macs / (makespan / dev.freq_hz),
+        ops_per_sec_steady: steady_ops,
+        events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+    use crate::kernels::matmul::MatMulKernel;
+    use crate::optimizer::array::ArrayCandidate;
+    use crate::placement::pattern::Pattern;
+    use crate::placement::placer::place_design;
+    use crate::sim::engine::{simulate_design, SimConfig};
+
+    fn placed(x: u64, y: u64, z: u64, pat: Pattern, prec: Precision) -> PlacedDesign {
+        place_design(
+            &AieDevice::vc1902(),
+            ArrayCandidate::new(x, y, z),
+            pat,
+            MatMulKernel::paper_kernel(prec),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn agrees_with_group_pipeline_model() {
+        // The event sim and the recurrence model must agree on the
+        // steady-state period within 1% for all paper configs.
+        let dev = AieDevice::vc1902();
+        for (x, y, z, pat) in maxeva_paper_configs() {
+            for prec in Precision::all() {
+                let pd = placed(x, y, z, pat, prec);
+                let fast = simulate_design(&dev, &pd, &SimConfig::default());
+                let ev = simulate_events(&dev, &pd, 48, 7, 0.005);
+                let delta = (ev.period_cycles - fast.period_cycles).abs() / fast.period_cycles;
+                assert!(
+                    delta < 0.01,
+                    "{x}x{y}x{z} {prec}: event {} vs model {}",
+                    ev.period_cycles,
+                    fast.period_cycles
+                );
+            }
+        }
+    }
+
+    fn maxeva_paper_configs() -> [(u64, u64, u64, Pattern); 3] {
+        // A subset for test speed; the full set is covered by the bench.
+        [
+            (13, 4, 6, Pattern::P1),
+            (10, 3, 10, Pattern::P2),
+            (12, 4, 6, Pattern::P1),
+        ]
+    }
+
+    #[test]
+    fn fill_is_positive_and_less_than_two_periods() {
+        let dev = AieDevice::vc1902();
+        let pd = placed(13, 4, 6, Pattern::P1, Precision::Fp32);
+        let ev = simulate_events(&dev, &pd, 32, 7, 0.0);
+        assert!(ev.fill_cycles > 0.0);
+        assert!(ev.fill_cycles < 2.0 * ev.period_cycles, "fill {}", ev.fill_cycles);
+    }
+
+    #[test]
+    fn total_throughput_below_steady() {
+        // Makespan includes fill → total ≤ steady-state throughput.
+        let dev = AieDevice::vc1902();
+        let pd = placed(10, 3, 10, Pattern::P2, Precision::Int8);
+        let ev = simulate_events(&dev, &pd, 32, 3, 0.005);
+        assert!(ev.ops_per_sec_total <= ev.ops_per_sec_steady);
+        // And converges: with more iterations the gap shrinks.
+        let ev2 = simulate_events(&dev, &pd, 96, 3, 0.005);
+        let gap1 = 1.0 - ev.ops_per_sec_total / ev.ops_per_sec_steady;
+        let gap2 = 1.0 - ev2.ops_per_sec_total / ev2.ops_per_sec_steady;
+        assert!(gap2 < gap1);
+    }
+
+    #[test]
+    fn event_count_scales_linearly() {
+        let dev = AieDevice::vc1902();
+        let pd = placed(12, 3, 8, Pattern::P2, Precision::Int8);
+        let e1 = simulate_events(&dev, &pd, 16, 1, 0.0);
+        let e2 = simulate_events(&dev, &pd, 32, 1, 0.0);
+        let ratio = e2.events as f64 / e1.events as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let dev = AieDevice::vc1902();
+        let pd = placed(11, 4, 7, Pattern::P1, Precision::Fp32);
+        let a = simulate_events(&dev, &pd, 32, 5, 0.005);
+        let b = simulate_events(&dev, &pd, 32, 5, 0.005);
+        assert_eq!(a.period_cycles, b.period_cycles);
+        assert_eq!(a.events, b.events);
+    }
+}

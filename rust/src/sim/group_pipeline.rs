@@ -1,0 +1,266 @@
+//! Discrete-event pipeline simulation of one group (Y MatMul cores + one
+//! adder-tree core) over many iterations.
+//!
+//! Dependency structure per iteration `i` (Fig. 5):
+//!
+//! ```text
+//!   PLIO A_k ──fill──▶ A-buf(k) ─┐
+//!   PLIO B_k ──fill──▶ B-buf(k) ─┼─▶ MatMul_k ──▶ C-buf(k) ─▶ adder ─▶ out
+//!                                 ┘   (kernel_cyc)  (ping-pong)  (Y−1 adds)
+//! ```
+//!
+//! All buffers between distinct cores are double-buffered (ping-pong), so
+//! fills/consumes of iteration `i+1` overlap compute of iteration `i`.
+//! The adder consumes the Y C-buffers sequentially; each consume interferes
+//! with the producer's concurrent write into the other ping-pong half
+//! (shared memory banks), stalling the MatMul by `bank_conflict_frac ·
+//! add_cyc`. DMA-connected buffers (P1 T-shapes) add a round-trip penalty
+//! to their producer.
+
+use crate::arch::device::AieDevice;
+use crate::arch::precision::Precision;
+use crate::kernels::add::AddKernel;
+use crate::kernels::matmul::MatMulKernel;
+
+/// Calibrated per-precision overhead constants (DESIGN.md §5).
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadModel {
+    /// Per-iteration lock acquire/release + stream arbitration cost on a
+    /// MatMul core (6 lock ops: A, B, C × acquire/release).
+    pub lock_cycles: u64,
+    /// Fraction of one Add-kernel latency lost by the producing MatMul to
+    /// memory-bank conflicts while the adder consumes its buffer.
+    pub bank_conflict_frac: f64,
+    /// Extra cycles per iteration for a DMA-connected output buffer
+    /// (switch round trip + DMA descriptor service, P1 T-shapes).
+    pub dma_penalty: u64,
+}
+
+impl OverheadModel {
+    /// Constants fit on rows 1–2 of Tables II and III (fp32 / int8);
+    /// all other table rows are predictions (EXPERIMENTS.md).
+    pub fn calibrated(prec: Precision) -> Self {
+        match prec {
+            Precision::Fp32 => OverheadModel {
+                lock_cycles: 64,
+                bank_conflict_frac: 0.40,
+                dma_penalty: 104,
+            },
+            Precision::Int8 => OverheadModel {
+                lock_cycles: 185,
+                bank_conflict_frac: 0.10,
+                dma_penalty: 19,
+            },
+            // Extensions (int16/bf16): interpolated between the two
+            // calibrated points by kernel length — estimates, not
+            // paper-calibrated (DESIGN.md §7).
+            Precision::Int16 => OverheadModel {
+                lock_cycles: 130,
+                bank_conflict_frac: 0.22,
+                dma_penalty: 55,
+            },
+            Precision::Bf16 => OverheadModel {
+                lock_cycles: 95,
+                bank_conflict_frac: 0.32,
+                dma_penalty: 80,
+            },
+        }
+    }
+}
+
+/// Result of simulating one group.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupSim {
+    /// Steady-state iteration period in cycles.
+    pub period_cycles: f64,
+    /// Fraction of the period the adder core is busy (for the power model).
+    pub adder_duty: f64,
+    /// Fraction of the period each MatMul core is computing.
+    pub matmul_duty: f64,
+}
+
+/// Simulate one group for `iters` iterations and measure the steady-state
+/// period. `has_dma` marks T-shape groups; `stall_jitter` is a seeded
+/// relative perturbation modelling PnR buffer-placement dissimilarities
+/// (the paper's "<1% memory conflicts", §V-B3).
+pub fn simulate_group(
+    dev: &AieDevice,
+    kernel: MatMulKernel,
+    y: u64,
+    has_dma: bool,
+    ovh: &OverheadModel,
+    iters: usize,
+    stall_jitter: f64,
+) -> GroupSim {
+    assert!(iters >= 16, "need warmup + measurement window");
+    let add = AddKernel::new(kernel.m, kernel.n, kernel.prec);
+    let add_cyc = add.latency_cycles();
+    let (a_cyc, b_cyc, c_cyc) = kernel.io_cycles(dev);
+    let kernel_cyc = kernel.latency_cycles();
+    let y = y as usize;
+
+    // Per-MatMul state: completion time of each iteration.
+    let mut mm_done = vec![0.0f64; y]; // done time of previous iteration
+    let mut c_ready = vec![vec![0.0f64; iters]; y];
+    // PLIO fills: the k-th MatMul's A/B stream can prefill one iteration
+    // ahead (double buffer). fill_done[k] = time its stream finished the
+    // current fill.
+    let mut a_fill_done = vec![0.0f64; y];
+    let mut b_fill_done = vec![0.0f64; y];
+    // Adder: time it finished consuming C(k) of each iteration.
+    let mut consumed = vec![vec![0.0f64; iters]; y];
+    let mut adder_free = 0.0f64;
+    let mut out_stream_free = 0.0f64;
+
+    let mut period_samples = Vec::new();
+    let mut last_out = 0.0f64;
+    let mut adder_busy_acc = 0.0f64;
+
+    // The adder performs (Y−1) sequential adds per iteration over buffers
+    // co-located (shared modules) with the MatMul write targets; the
+    // producer-side stall scales with total adder memory activity.
+    let bank_stall =
+        ovh.bank_conflict_frac * ((y - 1) as f64) * add_cyc as f64 * (1.0 + stall_jitter);
+    let dma_extra = if has_dma { ovh.dma_penalty as f64 } else { 0.0 };
+
+    for i in 0..iters {
+        // --- MatMul cores ---
+        for k in 0..y {
+            // Input fills (streams run ahead, gated by ping-pong reuse:
+            // the buffer of iteration i-2 must have been consumed by the
+            // kernel, i.e. the kernel started iteration i-1).
+            let gate = if i >= 2 { mm_done[k] - kernel_cyc as f64 } else { 0.0 };
+            a_fill_done[k] = (a_fill_done[k]).max(gate) + a_cyc as f64;
+            b_fill_done[k] = (b_fill_done[k]).max(gate) + b_cyc as f64;
+            // C ping-pong: slot of iteration i is free once the adder
+            // consumed iteration i-2.
+            let c_free = if i >= 2 { consumed[k][i - 2] } else { 0.0 };
+            let start = mm_done[k]
+                .max(a_fill_done[k])
+                .max(b_fill_done[k])
+                .max(c_free)
+                + ovh.lock_cycles as f64;
+            // Bank-conflict interference: while the adder consumed the
+            // other ping-pong half (previous iteration), the concurrent
+            // write stalls the kernel; DMA buffers pay the round trip.
+            let stall = if i >= 1 { bank_stall } else { 0.0 };
+            let done = start + kernel_cyc as f64 + stall
+                + if k == y - 1 { dma_extra } else { 0.0 };
+            mm_done[k] = done;
+            c_ready[k][i] = done;
+        }
+
+        // --- Adder core: consumes C(0..Y) sequentially, Y−1 adds ---
+        let mut t = adder_free.max(c_ready[0][i]);
+        consumed[0][i] = t;
+        for k in 1..y {
+            t = t.max(c_ready[k][i]) + add_cyc as f64;
+            consumed[k][i] = t;
+        }
+        let adds_done = t;
+        adder_busy_acc = (y as f64 - 1.0) * add_cyc as f64;
+        // Output write to PLIO (double-buffered: overlaps next iteration,
+        // but the out stream itself serializes).
+        let out_done = adds_done.max(out_stream_free) + 0.0;
+        out_stream_free = out_done + c_cyc as f64;
+        adder_free = adds_done;
+
+        if i >= iters / 2 {
+            period_samples.push(adds_done - last_out);
+        }
+        last_out = adds_done;
+    }
+
+    let period = crate::util::stats::mean(&period_samples);
+    GroupSim {
+        period_cycles: period,
+        adder_duty: (adder_busy_acc / period).min(1.0),
+        matmul_duty: (kernel_cyc as f64 / period).min(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::device::AieDevice;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    fn run(prec: Precision, y: u64, dma: bool) -> GroupSim {
+        let k = MatMulKernel::paper_kernel(prec);
+        simulate_group(&dev(), k, y, dma, &OverheadModel::calibrated(prec), 64, 0.0)
+    }
+
+    #[test]
+    fn fp32_period_near_table2_row1() {
+        // Table II row 1 implies a per-kernel period of ~4697 cycles
+        // (312 kernels, 5442.11 GFLOPs @1.25GHz). Calibration targets ±1%.
+        let g = run(Precision::Fp32, 4, true);
+        assert!(
+            (g.period_cycles - 4697.0).abs() / 4697.0 < 0.01,
+            "period {}",
+            g.period_cycles
+        );
+    }
+
+    #[test]
+    fn int8_period_near_table3_row1() {
+        // Table III row 1 implies ~1327.6 cycles.
+        let g = run(Precision::Int8, 4, true);
+        assert!(
+            (g.period_cycles - 1327.6).abs() / 1327.6 < 0.01,
+            "period {}",
+            g.period_cycles
+        );
+    }
+
+    #[test]
+    fn y3_faster_than_y4() {
+        // Less adder interference with a shallower tree (drives the P2
+        // per-kernel advantage of Tables II/III).
+        for p in Precision::all() {
+            let g3 = run(p, 3, false);
+            let g4 = run(p, 4, false);
+            assert!(g3.period_cycles < g4.period_cycles, "{p}");
+        }
+    }
+
+    #[test]
+    fn dma_slows_group() {
+        for p in Precision::all() {
+            let clean = run(p, 4, false);
+            let t = run(p, 4, true);
+            assert!(t.period_cycles > clean.period_cycles, "{p}");
+        }
+    }
+
+    #[test]
+    fn adder_duty_matches_table1_ratio_ordering() {
+        // fp32 adder idles much more than int8 (Table I: 0.04× vs 0.15×
+        // relative latency) — duty must reflect that.
+        let g8 = run(Precision::Int8, 4, false);
+        let g32 = run(Precision::Fp32, 4, false);
+        assert!(g8.adder_duty > 2.0 * g32.adder_duty);
+    }
+
+    #[test]
+    fn period_at_least_kernel_latency() {
+        for p in Precision::all() {
+            let k = MatMulKernel::paper_kernel(p);
+            let g = run(p, 4, true);
+            assert!(g.period_cycles >= k.latency_cycles() as f64);
+        }
+    }
+
+    #[test]
+    fn jitter_changes_period_slightly() {
+        let k = MatMulKernel::paper_kernel(Precision::Int8);
+        let m = OverheadModel::calibrated(Precision::Int8);
+        let base = simulate_group(&dev(), k, 4, false, &m, 64, 0.0).period_cycles;
+        let j = simulate_group(&dev(), k, 4, false, &m, 64, 0.005).period_cycles;
+        assert!((base - j).abs() / base < 0.01);
+        assert_ne!(base, j);
+    }
+}

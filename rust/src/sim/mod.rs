@@ -1,0 +1,20 @@
+//! Event-driven, cycle-approximate simulation of a placed MaxEVA design —
+//! the stand-in for the AMD aiesimulator used in the paper's evaluation.
+//!
+//! The simulator models, per group and per iteration: the ping-pong
+//! double buffers between PLIO streams and MatMul kernels and between
+//! MatMul kernels and the adder core; PLIO stream transfer times
+//! (4 B/cycle); lock acquire/release and stream-arbitration overheads;
+//! write-back interference between the adder's sequential buffer
+//! consumption and the producing MatMuls (shared memory banks); and the
+//! extra round-trip latency of DMA-connected buffers in P1 T-shapes.
+//!
+//! The three overhead constants (per precision) are calibrated on ONE row
+//! of each of Tables II and III and then *predict* the remaining ten rows
+//! within ~1% (see DESIGN.md §5 and EXPERIMENTS.md).
+
+pub mod engine;
+pub mod event;
+pub mod group_pipeline;
+
+pub use engine::{simulate_design, SimConfig, SimResult};

@@ -1,0 +1,216 @@
+//! Matrix-Vector (GEMV) extension — the special case the paper leaves as
+//! future work (§V-B4: "our work can be extended in straightforward
+//! fashion to other special cases of MatMul, e.g., Matrix-Vector").
+//!
+//! GEMV changes the optimization problem qualitatively: the `A` operand
+//! is streamed *once per use* (no reuse across a Z dimension — Z ≡ 1), so
+//! arithmetic intensity is ~1 MAC/element and the design becomes
+//! PLIO-bandwidth-bound instead of compute-bound. The extension keeps the
+//! paper's machinery — tile IP, Y-reduction adder trees, broadcast of the
+//! vector — and exposes where the bottleneck moves.
+
+use crate::arch::device::AieDevice;
+use crate::arch::precision::Precision;
+
+/// One GEMV tile kernel: `c (M) += A (M×K) · b (K)` on one AIE core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatVecKernel {
+    pub m: u64,
+    pub k: u64,
+    pub prec: Precision,
+}
+
+impl MatVecKernel {
+    pub fn macs(&self) -> u64 {
+        self.m * self.k
+    }
+
+    /// A-tile bytes (streamed fresh every iteration — the bottleneck).
+    pub fn a_bytes(&self) -> u64 {
+        self.m * self.k * self.prec.sizeof_input()
+    }
+
+    /// b-vector bytes (broadcast, amortized).
+    pub fn b_bytes(&self) -> u64 {
+        self.k * self.prec.sizeof_input()
+    }
+
+    pub fn c_bytes(&self) -> u64 {
+        self.m * self.prec.sizeof_output()
+    }
+
+    /// eq. (6) analog: double-buffered footprint must fit 14 KB.
+    pub fn buffer_bytes(&self) -> u64 {
+        self.a_bytes() + self.b_bytes() + self.c_bytes()
+    }
+
+    /// Compute-bound latency (cycles).
+    pub fn compute_cycles(&self) -> u64 {
+        self.macs().div_ceil(self.prec.peak_macs_per_cycle())
+    }
+
+    /// Stream-bound latency (cycles): the A tile must arrive over one
+    /// PLIO at `bw` B/cyc.
+    pub fn stream_cycles(&self, dev: &AieDevice) -> u64 {
+        self.a_bytes().div_ceil(dev.bw_io_bytes_per_cycle)
+    }
+
+    /// Effective iteration latency: max of compute and stream (double
+    /// buffering overlaps them).
+    pub fn latency_cycles(&self, dev: &AieDevice) -> u64 {
+        self.compute_cycles().max(self.stream_cycles(dev))
+    }
+
+    /// Achieved MACs/cycle — exposes the bandwidth bound.
+    pub fn throughput_macs_per_cycle(&self, dev: &AieDevice) -> f64 {
+        self.macs() as f64 / self.latency_cycles(dev) as f64
+    }
+}
+
+/// A GEMV array mapping: `X` row-groups × `Y`-deep reduction (Z ≡ 1).
+#[derive(Debug, Clone, Copy)]
+pub struct MatVecDesign {
+    pub kernel: MatVecKernel,
+    pub x: u64,
+    pub y: u64,
+}
+
+impl MatVecDesign {
+    /// Kernels (= A-stream PLIOs needed): X·Y.
+    pub fn kernels(&self) -> u64 {
+        self.x * self.y
+    }
+
+    /// PLIO inputs: one A stream per kernel + Y broadcast b streams.
+    pub fn plio_in(&self) -> u64 {
+        self.x * self.y + self.y
+    }
+
+    pub fn plio_out(&self) -> u64 {
+        self.x
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        // One adder-tree core per row-group, unless Y = 1 (no reduction).
+        self.kernels() + if self.y > 1 { self.x } else { 0 }
+    }
+
+    pub fn feasible(&self, dev: &AieDevice) -> bool {
+        self.total_cores() <= dev.total_cores() as u64
+            && self.plio_in() <= dev.plio_in as u64
+            && self.plio_out() <= dev.plio_out as u64
+    }
+
+    /// Steady-state array throughput in ops/s (2 ops/MAC): every kernel
+    /// sustains one A-tile per `latency` — PLIO-bound for realistic
+    /// sizes.
+    pub fn ops_per_sec(&self, dev: &AieDevice) -> f64 {
+        let lat = self.kernel.latency_cycles(dev) as f64;
+        2.0 * self.kernels() as f64 * self.kernel.macs() as f64 / (lat / dev.freq_hz)
+    }
+}
+
+/// Exhaustive GEMV DSE: maximize throughput subject to PLIO/core/memory
+/// constraints (the paper's eq. 7–9 analog with Z = 1 and per-kernel
+/// A streams).
+pub fn optimize_matvec(dev: &AieDevice, prec: Precision) -> Vec<MatVecDesign> {
+    let mut out = Vec::new();
+    let budget = dev.single_buffer_budget_bytes();
+    for me in 2..=9u32 {
+        for ke in 2..=9u32 {
+            let kernel = MatVecKernel { m: 1 << me, k: 1 << ke, prec };
+            if kernel.buffer_bytes() > budget {
+                continue;
+            }
+            for y in 1..=8u64 {
+                // x bounded by PLIO_in: x·y + y ≤ plio_in.
+                let x_max = (dev.plio_in as u64).saturating_sub(y) / y;
+                for x in 1..=x_max.max(1) {
+                    let d = MatVecDesign { kernel, x, y };
+                    if d.feasible(dev) {
+                        out.push(d);
+                    }
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        b.ops_per_sec(dev)
+            .partial_cmp(&a.ops_per_sec(dev))
+            .unwrap()
+            .then(a.total_cores().cmp(&b.total_cores()))
+            // Among stream-bound ties prefer bigger tiles (fewer
+            // per-invocation overheads on real hardware).
+            .then(b.kernel.macs().cmp(&a.kernel.macs()))
+    });
+    out
+}
+
+/// The theoretical GEMV throughput ceiling: every input PLIO saturated
+/// streaming A elements (ops/s).
+pub fn plio_bound_ops_per_sec(dev: &AieDevice, prec: Precision) -> f64 {
+    let elems_per_cyc = dev.bw_io_bytes_per_cycle as f64 / prec.sizeof_input() as f64;
+    2.0 * dev.plio_in as f64 * elems_per_cyc * dev.freq_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> AieDevice {
+        AieDevice::vc1902()
+    }
+
+    #[test]
+    fn gemv_is_stream_bound_fp32() {
+        // fp32: A stream delivers 1 elem/cyc but the core could do 8
+        // MACs/cyc → stream-bound by 8×.
+        let k = MatVecKernel { m: 64, k: 64, prec: Precision::Fp32 };
+        let d = dev();
+        assert!(k.stream_cycles(&d) > k.compute_cycles());
+        assert!((k.throughput_macs_per_cycle(&d) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemv_is_stream_bound_int8() {
+        // int8: 4 elems/cyc vs 128 MACs/cyc → stream-bound by 32×.
+        let k = MatVecKernel { m: 128, k: 128, prec: Precision::Int8 };
+        let d = dev();
+        assert!((k.throughput_macs_per_cycle(&d) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_design_saturates_plios_not_cores() {
+        let d = dev();
+        let designs = optimize_matvec(&d, Precision::Fp32);
+        let best = designs[0];
+        // PLIO_in is the binding constraint: used within 1 stream of max.
+        assert!(best.plio_in() >= d.plio_in as u64 - 2, "{}", best.plio_in());
+        // Cores are NOT the constraint: far fewer than for MatMul.
+        assert!(best.total_cores() < 120);
+        // Throughput is within 5% of the PLIO bound …
+        let bound = plio_bound_ops_per_sec(&d, Precision::Fp32);
+        assert!(best.ops_per_sec(&d) > 0.9 * bound);
+        // … and FAR below the MatMul design's 5.44 TFLOPs.
+        assert!(best.ops_per_sec(&d) < 0.25e12);
+    }
+
+    #[test]
+    fn plio_bound_values() {
+        // fp32: 78 PLIOs × 1 elem/cyc × 2 ops × 1.25 GHz = 195 GFLOPs.
+        let b32 = plio_bound_ops_per_sec(&dev(), Precision::Fp32);
+        assert!((b32 - 195e9).abs() < 1e6);
+        // int8: 4 elems/cyc → 780 GOPs.
+        let b8 = plio_bound_ops_per_sec(&dev(), Precision::Int8);
+        assert!((b8 - 780e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn all_designs_feasible() {
+        let d = dev();
+        for des in optimize_matvec(&d, Precision::Int8).iter().take(100) {
+            assert!(des.feasible(&d));
+            assert!(des.kernel.buffer_bytes() <= d.single_buffer_budget_bytes());
+        }
+    }
+}

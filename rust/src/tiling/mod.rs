@@ -1,0 +1,10 @@
+//! Host-side tiling of arbitrary MatMul sizes onto a design's native size
+//! (paper §V-B4, Fig. 8), including the zero-padding throughput model and
+//! full-DNN (MLP) estimates.
+
+pub mod matvec;
+pub mod mlp;
+pub mod padding;
+
+pub use padding::{TiledWorkload, native_size};
+pub use mlp::{MlpLayer, MlpEstimate, estimate_mlp};

@@ -1,0 +1,163 @@
+//! Zero-padding + tiling model for arbitrary MatMul sizes (Fig. 8).
+//!
+//! The design's *native* size is `(X·M) × (Y·K) × (Z·N)`; larger problems
+//! are tiled in PL (the paper assumes stall-free PL tiling, "commonly
+//! attained in practice"), and every dimension is zero-padded up to a
+//! multiple of the native size. Effective throughput is the peak device
+//! throughput derated by the useful-to-padded MAC ratio.
+
+use crate::optimizer::array::ArrayCandidate;
+use crate::kernels::matmul::MatMulKernel;
+
+/// Native whole-array MatMul size of a design.
+pub fn native_size(cand: &ArrayCandidate, kernel: &MatMulKernel) -> (u64, u64, u64) {
+    (cand.x * kernel.m, cand.y * kernel.k, cand.z * kernel.n)
+}
+
+/// A problem-size MatMul tiled onto a design.
+#[derive(Debug, Clone, Copy)]
+pub struct TiledWorkload {
+    /// Problem size.
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    /// Native design size.
+    pub native: (u64, u64, u64),
+}
+
+impl TiledWorkload {
+    pub fn new(m: u64, k: u64, n: u64, cand: &ArrayCandidate, kernel: &MatMulKernel) -> Self {
+        TiledWorkload {
+            m,
+            k,
+            n,
+            native: native_size(cand, kernel),
+        }
+    }
+
+    /// Number of native-size invocations along each dimension.
+    pub fn grid(&self) -> (u64, u64, u64) {
+        (
+            self.m.div_ceil(self.native.0),
+            self.k.div_ceil(self.native.1),
+            self.n.div_ceil(self.native.2),
+        )
+    }
+
+    /// Total invocations of the array design.
+    pub fn invocations(&self) -> u64 {
+        let (gm, gk, gn) = self.grid();
+        gm * gk * gn
+    }
+
+    /// Padded problem dimensions.
+    pub fn padded(&self) -> (u64, u64, u64) {
+        let (gm, gk, gn) = self.grid();
+        (gm * self.native.0, gk * self.native.1, gn * self.native.2)
+    }
+
+    /// Useful MACs / padded MACs ∈ (0, 1] — the Fig. 8 derating factor.
+    pub fn useful_ratio(&self) -> f64 {
+        let (pm, pk, pn) = self.padded();
+        (self.m * self.k * self.n) as f64 / (pm * pk * pn) as f64
+    }
+
+    /// Effective throughput in ops/s given the design's peak ops/s on
+    /// native-size work (Fig. 8 model: PL tiling is stall-free).
+    pub fn effective_ops_per_sec(&self, peak_ops_per_sec: f64) -> f64 {
+        peak_ops_per_sec * self.useful_ratio()
+    }
+
+    /// Device time (seconds) to run the whole problem, given the iteration
+    /// period of the design and the per-invocation iteration count of 1.
+    pub fn device_time_s(&self, period_cycles: f64, freq_hz: f64) -> f64 {
+        self.invocations() as f64 * period_cycles / freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+
+    fn design_fp32() -> (ArrayCandidate, MatMulKernel) {
+        (
+            ArrayCandidate::new(13, 4, 6),
+            MatMulKernel::paper_kernel(Precision::Fp32),
+        )
+    }
+
+    fn design_int8() -> (ArrayCandidate, MatMulKernel) {
+        (
+            ArrayCandidate::new(13, 4, 6),
+            MatMulKernel::paper_kernel(Precision::Int8),
+        )
+    }
+
+    #[test]
+    fn native_sizes_match_paper() {
+        // §V-B4: 13×4×6 natively computes 416×128×192 (fp32) and
+        // 416×512×192 (int8).
+        let (c, k) = design_fp32();
+        assert_eq!(native_size(&c, &k), (416, 128, 192));
+        let (c, k) = design_int8();
+        assert_eq!(native_size(&c, &k), (416, 512, 192));
+    }
+
+    #[test]
+    fn exact_multiple_has_ratio_one() {
+        let (c, k) = design_fp32();
+        let w = TiledWorkload::new(416 * 2, 128 * 3, 192 * 4, &c, &k);
+        assert_eq!(w.useful_ratio(), 1.0);
+        assert_eq!(w.invocations(), 24);
+    }
+
+    #[test]
+    fn small_matrices_heavily_derated() {
+        // Fig. 8: small matrices lose throughput to padding.
+        let (c, k) = design_fp32();
+        let w = TiledWorkload::new(256, 256, 256, &c, &k);
+        assert!(w.useful_ratio() < 0.65, "{}", w.useful_ratio());
+    }
+
+    #[test]
+    fn large_square_converges_to_peak() {
+        // Fig. 8: ≥ ~2K square matrices approach peak throughput.
+        let (c, k) = design_fp32();
+        let w2k = TiledWorkload::new(2048, 2048, 2048, &c, &k);
+        assert!(w2k.useful_ratio() > 0.93, "{}", w2k.useful_ratio());
+        let w16k = TiledWorkload::new(16384, 16384, 16384, &c, &k);
+        assert!(w16k.useful_ratio() > w2k.useful_ratio());
+    }
+
+    #[test]
+    fn ratio_monotone_pattern_over_power_of_two_sweep() {
+        // The Fig. 8 curve: throughput rises with size (modulo the
+        // sawtooth from alignment); endpoints must order correctly.
+        let (c, k) = design_int8();
+        let small = TiledWorkload::new(512, 512, 512, &c, &k).useful_ratio();
+        let large = TiledWorkload::new(8192, 8192, 8192, &c, &k).useful_ratio();
+        assert!(large > small);
+    }
+
+    #[test]
+    fn device_time_scales_with_invocations() {
+        let (c, k) = design_fp32();
+        let w1 = TiledWorkload::new(416, 128, 192, &c, &k);
+        let w8 = TiledWorkload::new(832, 256, 384, &c, &k);
+        let t1 = w1.device_time_s(4700.0, 1.25e9);
+        let t8 = w8.device_time_s(4700.0, 1.25e9);
+        assert!((t8 / t1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn padding_never_below_problem() {
+        let (c, k) = design_fp32();
+        for s in [100u64, 1000, 3000] {
+            let w = TiledWorkload::new(s, s, s, &c, &k);
+            let (pm, pk, pn) = w.padded();
+            assert!(pm >= s && pk >= s && pn >= s);
+            assert!(w.useful_ratio() <= 1.0 && w.useful_ratio() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities: deterministic PRNG (for seeded
+//! PnR-noise models and property tests) and statistics helpers.
+
+pub mod prng;
+pub mod stats;
+
+pub use prng::XorShift64;
+pub use stats::{geomean, mean, percentile, stddev};

@@ -1,0 +1,139 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! Used for (a) the seeded "PnR noise" terms in the simulator/power model
+//! (the paper attributes <1% run-to-run wiggles to buffer-placement
+//! dissimilarities of the AMD PnR tool; we model them deterministically so
+//! results are reproducible), and (b) the hand-rolled property tests
+//! (`proptest` is not available offline).
+
+/// xorshift64* generator. Deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator. A zero seed is remapped to a fixed constant
+    /// (xorshift has a zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive). Panics if lo > hi.
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "gen_range: lo > hi");
+        let span = hi - lo + 1;
+        lo + self.next_u64() % span
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Symmetric relative jitter: uniform in [-amp, +amp].
+    pub fn jitter(&mut self, amp: f64) -> f64 {
+        self.gen_range_f64(-amp, amp)
+    }
+
+    /// Pick a random element of a slice. Panics on empty slices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choose: empty slice");
+        &xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut a = XorShift64::new(0);
+        assert_ne!(a.next_u64(), 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v), "out of range: {v}");
+        }
+    }
+
+    #[test]
+    fn gen_range_inclusive_bounds_hit() {
+        let mut r = XorShift64::new(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            match r.gen_range(3, 5) {
+                3 => lo_seen = true,
+                5 => hi_seen = true,
+                4 => {}
+                other => panic!("out of range: {other}"),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn jitter_is_symmetric_range() {
+        let mut r = XorShift64::new(11);
+        for _ in 0..1000 {
+            let j = r.jitter(0.02);
+            assert!(j.abs() <= 0.02);
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        // Chi-square-ish sanity: 16 buckets over 64k draws, each within 20%.
+        let mut r = XorShift64::new(1234);
+        let mut buckets = [0u32; 16];
+        let n = 65_536;
+        for _ in 0..n {
+            buckets[(r.next_f64() * 16.0) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        for b in buckets {
+            assert!((b as f64 - expect).abs() < expect * 0.2, "bucket {b}");
+        }
+    }
+}

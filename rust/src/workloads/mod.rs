@@ -1,0 +1,92 @@
+//! Workload generators: the Fig. 8 matrix-size sweep, DNN layer sets and
+//! random request traces for the serving coordinator.
+
+use crate::util::prng::XorShift64;
+
+/// A single MatMul request: `C (m×n) = A (m×k) · B (k×n)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatMulRequest {
+    pub id: u64,
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+}
+
+impl MatMulRequest {
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n
+    }
+}
+
+/// Fig. 8 sweep: square sizes as powers of two from `lo` to `hi`
+/// (inclusive), e.g. 256..=16384.
+pub fn square_sweep(lo: u64, hi: u64) -> Vec<u64> {
+    assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+    let mut v = Vec::new();
+    let mut s = lo;
+    while s <= hi {
+        v.push(s);
+        s *= 2;
+    }
+    v
+}
+
+/// A reproducible random trace of MatMul requests with sizes drawn from
+/// power-of-two buckets weighted toward DL-typical GEMM shapes.
+pub fn random_trace(n: usize, seed: u64) -> Vec<MatMulRequest> {
+    let mut rng = XorShift64::new(seed);
+    let sizes = [128u64, 256, 512, 1024, 2048];
+    (0..n)
+        .map(|i| MatMulRequest {
+            id: i as u64,
+            m: *rng.choose(&sizes),
+            k: *rng.choose(&sizes),
+            n: *rng.choose(&sizes),
+        })
+        .collect()
+}
+
+/// Batched-GEMM layer sets of a small transformer block (batch×seq = rows)
+/// — used as a domain-specific example workload.
+pub fn transformer_block_gemms(rows: u64, d_model: u64, d_ff: u64) -> Vec<MatMulRequest> {
+    vec![
+        // QKV projection (fused): rows × d_model × 3·d_model
+        MatMulRequest { id: 0, m: rows, k: d_model, n: 3 * d_model },
+        // Attention output projection.
+        MatMulRequest { id: 1, m: rows, k: d_model, n: d_model },
+        // FFN up / down.
+        MatMulRequest { id: 2, m: rows, k: d_model, n: d_ff },
+        MatMulRequest { id: 3, m: rows, k: d_ff, n: d_model },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_powers_of_two() {
+        let v = square_sweep(256, 16384);
+        assert_eq!(v, vec![256, 512, 1024, 2048, 4096, 8192, 16384]);
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        assert_eq!(random_trace(10, 7), random_trace(10, 7));
+        assert_ne!(random_trace(10, 7), random_trace(10, 8));
+    }
+
+    #[test]
+    fn transformer_gemm_shapes() {
+        let g = transformer_block_gemms(512, 768, 3072);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].n, 2304);
+        assert_eq!(g[2].macs(), 512 * 768 * 3072);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sweep_rejects_non_power_of_two() {
+        square_sweep(100, 200);
+    }
+}

@@ -1,0 +1,196 @@
+//! Cross-module property tests: invariants that must hold for ANY
+//! feasible design, not just the paper's six (hand-rolled generators —
+//! proptest is unavailable offline).
+
+use maxeva::arch::device::AieDevice;
+use maxeva::arch::precision::Precision;
+use maxeva::kernels::matmul::MatMulKernel;
+use maxeva::optimizer::array::{optimize_array, ArrayCandidate};
+use maxeva::placement::pattern::Pattern;
+use maxeva::placement::placer::{capacity, place_design};
+use maxeva::power::estimate_power;
+use maxeva::routing::router::route_design;
+use maxeva::sim::engine::{simulate_design, SimConfig};
+use maxeva::util::prng::XorShift64;
+
+fn dev() -> AieDevice {
+    AieDevice::vc1902()
+}
+
+/// Random feasible candidates with Y ∈ {3,4} that fit their pattern.
+fn random_placeable(rng: &mut XorShift64, n: usize) -> Vec<(ArrayCandidate, Pattern)> {
+    let d = dev();
+    let mut out = Vec::new();
+    while out.len() < n {
+        let y = *rng.choose(&[3u64, 4]);
+        let x = rng.gen_range(1, 18);
+        let z = rng.gen_range(1, 14);
+        let c = ArrayCandidate::new(x, y, z);
+        let p = Pattern::for_y(y).unwrap();
+        if c.feasible(&d) && c.groups() as usize <= capacity(&d, p) {
+            out.push((c, p));
+        }
+    }
+    out
+}
+
+#[test]
+fn throughput_bounded_by_kernel_roofline() {
+    // ops/s ≤ kernels · peak_macs · single-kernel efficiency · 2 · freq.
+    let d = dev();
+    let mut rng = XorShift64::new(101);
+    for (c, p) in random_placeable(&mut rng, 25) {
+        for prec in Precision::all() {
+            let kernel = MatMulKernel::paper_kernel(prec);
+            let pd = place_design(&d, c, p, kernel).unwrap();
+            let sim = simulate_design(&d, &pd, &SimConfig::default());
+            let roofline = c.matmul_kernels() as f64
+                * prec.peak_macs_per_cycle() as f64
+                * kernel.efficiency()
+                * 2.0
+                * d.freq_hz;
+            assert!(
+                sim.ops_per_sec <= roofline * 1.0001,
+                "{} {prec}: {} > roofline {}",
+                c.label(),
+                sim.ops_per_sec,
+                roofline
+            );
+            assert!(sim.ops_per_sec > 0.5 * roofline, "sanity lower bound");
+        }
+    }
+}
+
+#[test]
+fn power_monotone_in_kernel_count_same_pattern() {
+    // More MatMul kernels (same pattern/precision) must not reduce core
+    // power.
+    let d = dev();
+    for prec in Precision::all() {
+        let kernel = MatMulKernel::paper_kernel(prec);
+        let mut last = 0.0;
+        for (x, z) in [(6u64, 6u64), (9, 6), (12, 6), (13, 6)] {
+            let c = ArrayCandidate::new(x, 4, z);
+            let pd = place_design(&d, c, Pattern::P1, kernel).unwrap();
+            let sim = simulate_design(&d, &pd, &SimConfig::default());
+            let p = estimate_power(&d, &pd, &sim);
+            assert!(p.core_w >= last, "{}: core power must not drop", c.label());
+            last = p.core_w;
+        }
+    }
+}
+
+#[test]
+fn energy_efficiency_below_theoretical_ratio() {
+    // EE = thr/power can never exceed thr at 1 W per design — smoke bound
+    // plus: int8 EE in TOPs/W stays near ~1, fp32 near ~120 GFLOPs/W.
+    let d = dev();
+    let mut rng = XorShift64::new(55);
+    for (c, p) in random_placeable(&mut rng, 10) {
+        for prec in Precision::all() {
+            let kernel = MatMulKernel::paper_kernel(prec);
+            let pd = place_design(&d, c, p, kernel).unwrap();
+            let sim = simulate_design(&d, &pd, &SimConfig::default());
+            let pw = estimate_power(&d, &pd, &sim);
+            let ee = pw.energy_efficiency(sim.ops_per_sec);
+            match prec {
+                Precision::Fp32 | Precision::Bf16 => assert!(ee / 1e9 < 200.0, "fp EE bound"),
+                Precision::Int8 | Precision::Int16 => assert!(ee / 1e12 < 2.0, "int EE bound"),
+            }
+        }
+    }
+}
+
+#[test]
+fn routing_deterministic() {
+    let d = dev();
+    let kernel = MatMulKernel::paper_kernel(Precision::Fp32);
+    let pd = place_design(&d, ArrayCandidate::new(11, 4, 7), Pattern::P1, kernel).unwrap();
+    let a = route_design(&d, &pd).unwrap();
+    let b = route_design(&d, &pd).unwrap();
+    assert_eq!(a.links_used, b.links_used);
+    assert_eq!(a.max_link_load, b.max_link_load);
+    assert_eq!(a.streams, b.streams);
+}
+
+#[test]
+fn optimizer_results_all_placeable_or_patternless() {
+    // Every top-tier optimizer result with Y ∈ {3,4} must place cleanly.
+    let d = dev();
+    let cands = optimize_array(&d, Some((3, 4)));
+    for c in cands.iter().take(40) {
+        let p = Pattern::for_y(c.y).unwrap();
+        if c.groups() as usize > capacity(&d, p) {
+            continue;
+        }
+        let pd = place_design(&d, *c, p, MatMulKernel::paper_kernel(Precision::Int8))
+            .unwrap_or_else(|e| panic!("{}: {e}", c.label()));
+        pd.validate(&d).unwrap();
+    }
+}
+
+#[test]
+fn sim_period_scales_down_with_faster_kernel() {
+    // int8 kernel is ~4× shorter than fp32 → period must be much smaller.
+    let d = dev();
+    let c = ArrayCandidate::new(12, 3, 8);
+    let p8 = place_design(&d, c, Pattern::P2, MatMulKernel::paper_kernel(Precision::Int8)).unwrap();
+    let p32 = place_design(&d, c, Pattern::P2, MatMulKernel::paper_kernel(Precision::Fp32)).unwrap();
+    let s8 = simulate_design(&d, &p8, &SimConfig::default());
+    let s32 = simulate_design(&d, &p32, &SimConfig::default());
+    assert!(s32.period_cycles > 3.0 * s8.period_cycles);
+}
+
+#[test]
+fn generalization_half_device_full_pipeline() {
+    // The whole pipeline must work on a non-VC1902 device (paper §IV:
+    // "generalizable to any Versal device").
+    let d = AieDevice::half_vc1902();
+    let cands = optimize_array(&d, Some((3, 4)));
+    let best = cands
+        .iter()
+        .find(|c| {
+            Pattern::for_y(c.y)
+                .map(|p| c.groups() as usize <= capacity(&d, p))
+                .unwrap_or(false)
+        })
+        .expect("some feasible candidate");
+    let p = Pattern::for_y(best.y).unwrap();
+    let pd = place_design(&d, *best, p, MatMulKernel::paper_kernel(Precision::Int8)).unwrap();
+    let sim = simulate_design(&d, &pd, &SimConfig::default());
+    assert!(sim.ops_per_sec > 0.0);
+    // Half the array → roughly half the flagship throughput, never more.
+    assert!(sim.efficiency <= 1.0);
+}
+
+#[test]
+fn tiler_roundtrip_property() {
+    // Tiled extract/accumulate with the native design size reproduces the
+    // reference matmul for random problem sizes (fringe + padding).
+    use maxeva::coordinator::tiler::{matmul_ref_f32, Tiler};
+    let t = Tiler::new((416, 128, 192));
+    let mut rng = XorShift64::new(2024);
+    for _ in 0..3 {
+        let m = rng.gen_range(1, 500) as usize;
+        let k = rng.gen_range(1, 200) as usize;
+        let n = rng.gen_range(1, 250) as usize;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let want = matmul_ref_f32(&a, &b, m, k, n);
+        let (gm, gk, gn) = t.grid(m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        for im in 0..gm {
+            for ik in 0..gk {
+                let ab = Tiler::extract_block(&a, m, k, im, ik, t.nm, t.nk);
+                for inn in 0..gn {
+                    let bb = Tiler::extract_block(&b, k, n, ik, inn, t.nk, t.nn);
+                    let cb = matmul_ref_f32(&ab, &bb, t.nm, t.nk, t.nn);
+                    Tiler::accumulate_block(&mut c, m, n, im, inn, t.nm, t.nn, &cb);
+                }
+            }
+        }
+        for (i, (x, y)) in c.iter().zip(&want).enumerate() {
+            assert!((x - y).abs() < 1e-3, "idx {i}: {x} vs {y}");
+        }
+    }
+}

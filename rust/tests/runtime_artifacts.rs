@@ -1,0 +1,205 @@
+//! Integration tests: the PJRT runtime executing the AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (pass trivially)
+//! when the artifacts are missing so `cargo test` works pre-build.
+
+use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::runtime::{artifacts_available, default_artifacts_dir, Runtime};
+use maxeva::util::prng::XorShift64;
+
+fn skip() -> bool {
+    if !artifacts_available(&default_artifacts_dir()) {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn fp32_array_artifact_matches_reference() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_named(&default_artifacts_dir(), "array_fp32_13x4x6")
+        .unwrap();
+    let (m, k, n) = (416usize, 128usize, 192usize);
+    let mut rng = XorShift64::new(7);
+    let a = rand_vec(m * k, &mut rng);
+    let b = rand_vec(k * n, &mut rng);
+    let out = exe
+        .run_f32(&[
+            (a.as_slice(), &[m as i64, k as i64]),
+            (b.as_slice(), &[k as i64, n as i64]),
+        ])
+        .unwrap();
+    let want = matmul_ref_f32(&a, &b, m, k, n);
+    assert_eq!(out.len(), want.len());
+    for (i, (x, y)) in out.iter().zip(&want).enumerate() {
+        assert!((x - y).abs() < 1e-3, "idx {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn int8_array_artifact_exact() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_named(&default_artifacts_dir(), "array_int8_13x4x6")
+        .unwrap();
+    let (m, k, n) = (416usize, 512usize, 192usize);
+    let mut rng = XorShift64::new(9);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.gen_range(0, 255) as i32 - 128).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.gen_range(0, 255) as i32 - 128).collect();
+    let out = exe
+        .run_i32(&[
+            (a.as_slice(), &[m as i64, k as i64]),
+            (b.as_slice(), &[k as i64, n as i64]),
+        ])
+        .unwrap();
+    // Spot-check against an i64 reference (no i32 overflow possible:
+    // |sum| ≤ 512·128² = 2^23).
+    for i in (0..m).step_by(97) {
+        for j in (0..n).step_by(41) {
+            let mut acc: i64 = 0;
+            for kk in 0..k {
+                acc += a[i * k + kk] as i64 * b[kk * n + j] as i64;
+            }
+            assert_eq!(out[i * n + j] as i64, acc, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn tile_artifacts_load_and_run() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_named(&default_artifacts_dir(), "tile_fp32_32x32x32")
+        .unwrap();
+    let mut rng = XorShift64::new(3);
+    let a = rand_vec(32 * 32, &mut rng);
+    let b = rand_vec(32 * 32, &mut rng);
+    let out = exe
+        .run_f32(&[(a.as_slice(), &[32, 32]), (b.as_slice(), &[32, 32])])
+        .unwrap();
+    let want = matmul_ref_f32(&a, &b, 32, 32, 32);
+    for (x, y) in out.iter().zip(&want) {
+        assert!((x - y).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn group_artifact_reduces_over_y() {
+    if skip() {
+        return;
+    }
+    // group_fp32_y4: (32, 4·32) × (4·32, 32) — one group's worth of work,
+    // tiles + adder tree.
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_named(&default_artifacts_dir(), "group_fp32_y4").unwrap();
+    let mut rng = XorShift64::new(5);
+    let a = rand_vec(32 * 128, &mut rng);
+    let b = rand_vec(128 * 32, &mut rng);
+    let out = exe
+        .run_f32(&[(a.as_slice(), &[32, 128]), (b.as_slice(), &[128, 32])])
+        .unwrap();
+    let want = matmul_ref_f32(&a, &b, 32, 128, 32);
+    for (x, y) in out.iter().zip(&want) {
+        assert!((x - y).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn mlp_artifact_runs() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_named(&default_artifacts_dir(), "mlp_fp32").unwrap();
+    let mut rng = XorShift64::new(11);
+    let x = rand_vec(64 * 128, &mut rng);
+    let w1 = rand_vec(128 * 256, &mut rng);
+    let w2 = rand_vec(256 * 256, &mut rng);
+    let w3 = rand_vec(256 * 64, &mut rng);
+    let out = exe
+        .run_f32(&[
+            (x.as_slice(), &[64, 128]),
+            (w1.as_slice(), &[128, 256]),
+            (w2.as_slice(), &[256, 256]),
+            (w3.as_slice(), &[256, 64]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 64 * 64);
+    let h1: Vec<f32> = matmul_ref_f32(&x, &w1, 64, 128, 256)
+        .iter()
+        .map(|v| v.max(0.0))
+        .collect();
+    let h2: Vec<f32> = matmul_ref_f32(&h1, &w2, 64, 256, 256)
+        .iter()
+        .map(|v| v.max(0.0))
+        .collect();
+    let want = matmul_ref_f32(&h2, &w3, 64, 256, 64);
+    for (i, (a, b)) in out.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 2e-2 * b.abs().max(1.0), "idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn fast_artifact_matches_tile_artifact() {
+    // §Perf validity: the panel-scheduled `_fast` artifact must produce
+    // the same numbers as the AIE-faithful per-tile artifact.
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let dir = default_artifacts_dir();
+    let slow = rt.load_named(&dir, "array_fp32_13x4x6").unwrap();
+    let fast = rt.load_named(&dir, "array_fp32_13x4x6_fast").unwrap();
+    let (m, k, n) = (416usize, 128usize, 192usize);
+    let mut rng = XorShift64::new(77);
+    let a = rand_vec(m * k, &mut rng);
+    let b = rand_vec(k * n, &mut rng);
+    let args: [(&[f32], &[i64]); 2] = [
+        (a.as_slice(), &[m as i64, k as i64]),
+        (b.as_slice(), &[k as i64, n as i64]),
+    ];
+    let out_slow = slow.run_f32(&args).unwrap();
+    let out_fast = fast.run_f32(&args).unwrap();
+    let mut max_err = 0.0f32;
+    for (x, y) in out_slow.iter().zip(&out_fast) {
+        max_err = max_err.max((x - y).abs());
+    }
+    // Same per-y reduction order; only the intra-dot order may differ.
+    assert!(max_err < 1e-4, "fast vs tile artifact max err {max_err}");
+}
+
+#[test]
+fn fast_int8_artifact_exact_vs_tile() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let dir = default_artifacts_dir();
+    let slow = rt.load_named(&dir, "array_int8_13x4x6").unwrap();
+    let fast = rt.load_named(&dir, "array_int8_13x4x6_fast").unwrap();
+    let (m, k, n) = (416usize, 512usize, 192usize);
+    let mut rng = XorShift64::new(78);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.gen_range(0, 255) as i32 - 128).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.gen_range(0, 255) as i32 - 128).collect();
+    let args: [(&[i32], &[i64]); 2] = [
+        (a.as_slice(), &[m as i64, k as i64]),
+        (b.as_slice(), &[k as i64, n as i64]),
+    ];
+    // Integer arithmetic: must be bit-identical.
+    assert_eq!(slow.run_i32(&args).unwrap(), fast.run_i32(&args).unwrap());
+}

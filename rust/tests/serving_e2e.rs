@@ -1,0 +1,132 @@
+//! End-to-end serving tests: requests → coordinator → tiler → device
+//! thread → PJRT artifact → accumulated results. Skip when artifacts are
+//! missing.
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{DesignConfig, ServeConfig};
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::runtime::{artifacts_available, default_artifacts_dir};
+use maxeva::util::prng::XorShift64;
+use maxeva::workloads::MatMulRequest;
+
+fn skip() -> bool {
+    if !artifacts_available(&default_artifacts_dir()) {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn serve_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    cfg
+}
+
+fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn single_request_native_size_correct() {
+    if skip() {
+        return;
+    }
+    let mut server = MatMulServer::start(&serve_cfg()).unwrap();
+    let (m, k, n) = (416u64, 128u64, 192u64);
+    let mut rng = XorShift64::new(21);
+    let a = rand_vec((m * k) as usize, &mut rng);
+    let b = rand_vec((k * n) as usize, &mut rng);
+    let req = MatMulRequest { id: 0, m, k, n };
+    let out = server.execute(req, a.clone(), b.clone()).unwrap();
+    let want = matmul_ref_f32(&a, &b, m as usize, k as usize, n as usize);
+    for (i, (x, y)) in out.iter().zip(&want).enumerate() {
+        assert!((x - y).abs() < 1e-3, "idx {i}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.invocations, 1);
+    assert!(stats.device_time_s > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn odd_sizes_padded_correctly() {
+    if skip() {
+        return;
+    }
+    // Sizes that don't divide the native tile exercise padding + fringe.
+    let mut server = MatMulServer::start(&serve_cfg()).unwrap();
+    let mut rng = XorShift64::new(23);
+    for (m, k, n) in [(100u64, 50u64, 70u64), (417, 129, 193), (512, 512, 512)] {
+        let a = rand_vec((m * k) as usize, &mut rng);
+        let b = rand_vec((k * n) as usize, &mut rng);
+        let req = MatMulRequest { id: m, m, k, n };
+        let out = server.execute(req, a.clone(), b.clone()).unwrap();
+        let want = matmul_ref_f32(&a, &b, m as usize, k as usize, n as usize);
+        assert_eq!(out.len(), want.len());
+        for (i, (x, y)) in out.iter().zip(&want).enumerate() {
+            assert!((x - y).abs() < 2e-3, "{m}x{k}x{n} idx {i}: {x} vs {y}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn batched_requests_all_correct_and_interleaved() {
+    if skip() {
+        return;
+    }
+    let mut server = MatMulServer::start(&serve_cfg()).unwrap();
+    let mut rng = XorShift64::new(29);
+    let sizes = [(64u64, 64u64, 64u64), (500, 200, 300), (416, 128, 192)];
+    let batch: Vec<_> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, k, n))| {
+            let a = rand_vec((m * k) as usize, &mut rng);
+            let b = rand_vec((k * n) as usize, &mut rng);
+            (MatMulRequest { id: i as u64, m, k, n }, a, b)
+        })
+        .collect();
+    let refs: Vec<Vec<f32>> = batch
+        .iter()
+        .map(|(r, a, b)| matmul_ref_f32(a, b, r.m as usize, r.k as usize, r.n as usize))
+        .collect();
+    let outs = server.run_batch(batch).unwrap();
+    assert_eq!(outs.len(), 3);
+    for (ri, (out, want)) in outs.iter().zip(&refs).enumerate() {
+        for (i, (x, y)) in out.iter().zip(want).enumerate() {
+            assert!((x - y).abs() < 2e-3, "req {ri} idx {i}");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 3);
+    // Small request (1 tile) must finish before the big one despite being
+    // submitted together (dynamic batching fairness): its latency must be
+    // well under the batch wall time.
+    assert!(stats.mean_latency_ms > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn device_time_accounting_scales_with_tiles() {
+    if skip() {
+        return;
+    }
+    let mut server = MatMulServer::start(&serve_cfg()).unwrap();
+    let mut rng = XorShift64::new(31);
+    let (m, k, n) = (416u64, 128u64, 192u64);
+    let a = rand_vec((m * k) as usize, &mut rng);
+    let b = rand_vec((k * n) as usize, &mut rng);
+    server.execute(MatMulRequest { id: 0, m, k, n }, a, b).unwrap();
+    let t1 = server.stats().device_time_s;
+    // 2×1×1 grid → 2 invocations → 2× device time.
+    let a2 = rand_vec((2 * m * k) as usize, &mut rng);
+    let b2 = rand_vec((k * n) as usize, &mut rng);
+    server.execute(MatMulRequest { id: 1, m: 2 * m, k, n }, a2, b2).unwrap();
+    let t2 = server.stats().device_time_s;
+    assert!(((t2 - t1) / t1 - 2.0).abs() < 1e-6, "t1={t1} t2={t2}");
+    server.shutdown();
+}
