@@ -16,13 +16,8 @@ use maxeva::config::schema::{DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
 use maxeva::coordinator::tiler::matmul_ref_f32;
 use maxeva::runtime::default_artifacts_dir;
-use maxeva::util::prng::XorShift64;
 use maxeva::util::stats::percentile;
-use maxeva::workloads::{random_trace, transformer_block_gemms};
-
-fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
-    (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
-}
+use maxeva::workloads::{materialize_batch, random_trace, transformer_block_gemms};
 
 fn main() {
     let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
@@ -36,23 +31,22 @@ fn main() {
         }
     };
     println!(
-        "server up — design 13x4x6 fp32, native MatMul {:?}",
-        server.native()
+        "server up — design 13x4x6 fp32, native MatMul {:?}, period {:.0} cyc @ {:.2} GHz",
+        server.native(),
+        server.period_cycles(),
+        server.freq_hz() / 1e9,
     );
-
-    let mut rng = XorShift64::new(4242);
+    println!(
+        "backend {} · {} device workers · pipeline window {}",
+        server.backend(),
+        server.workers(),
+        server.pipeline_depth(),
+    );
 
     // Workload 1: a random GEMM trace (DL-typical power-of-two shapes).
     let trace = random_trace(6, 11);
     println!("\n[1] random trace: {} requests", trace.len());
-    let batch: Vec<_> = trace
-        .iter()
-        .map(|r| {
-            let a = rand_vec((r.m * r.k) as usize, &mut rng);
-            let b = rand_vec((r.k * r.n) as usize, &mut rng);
-            (*r, a, b)
-        })
-        .collect();
+    let batch = materialize_batch(&trace, 4242);
     // Keep references for verification.
     let refs: Vec<Vec<f32>> = batch
         .iter()
@@ -72,14 +66,7 @@ fn main() {
     // motivates.
     let gemms = transformer_block_gemms(512, 768, 3072);
     println!("\n[2] transformer block GEMMs: {} requests", gemms.len());
-    let batch: Vec<_> = gemms
-        .iter()
-        .map(|r| {
-            let a = rand_vec((r.m * r.k) as usize, &mut rng);
-            let b = rand_vec((r.k * r.n) as usize, &mut rng);
-            (*r, a, b)
-        })
-        .collect();
+    let batch = materialize_batch(&gemms, 4243);
     server.run_batch(batch).expect("transformer batch");
 
     let stats = server.stats();

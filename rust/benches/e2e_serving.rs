@@ -1,9 +1,16 @@
 //! Bench: end-to-end serving throughput/latency through the whole stack
-//! (coordinator → device thread → PJRT artifact). Reports wall-clock
-//! (CPU emulation) and device-time (VCK190-equivalent) numbers
-//! separately — never conflated.
+//! (coordinator → device worker pool → PJRT artifact or reference
+//! backend). Reports wall-clock (CPU emulation) and device-time
+//! (VCK190-equivalent) numbers separately — never conflated.
 //!
-//! Needs `make artifacts`. Skips gracefully when missing.
+//! The centerpiece is the **pipeline A/B**: the same materialized batch
+//! is served with `pipeline_depth = 1` (the old synchronous
+//! one-tile-at-a-time engine) and with the configured window, side by
+//! side, asserting the outputs are bit-identical.
+//!
+//! Prefers the PJRT artifacts (`make artifacts` + `--features pjrt`);
+//! falls back to the pure-Rust reference backend so the pipeline A/B
+//! runs anywhere.
 //!
 //!     cargo bench --bench e2e_serving
 
@@ -12,26 +19,32 @@ mod common;
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
-use maxeva::runtime::{artifacts_available, default_artifacts_dir};
+use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::prng::XorShift64;
-use maxeva::workloads::MatMulRequest;
+use maxeva::workloads::{materialize_batch, MatMulRequest};
 
 fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
     (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
 }
 
 fn main() {
-    if !artifacts_available(&default_artifacts_dir()) {
-        println!("SKIP: artifacts missing — run `make artifacts` first");
-        return;
-    }
     let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
     cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
-    let mut server = MatMulServer::start(&cfg).expect("server start");
+    let mut server = match MatMulServer::start(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("SKIP: cannot start server: {e}");
+            return;
+        }
+    };
     println!(
-        "e2e serving bench — design 13x4x6 fp32, native {:?}, period {:.0} cyc",
+        "e2e serving bench — design 13x4x6 fp32, native {:?}, period {:.0} cyc @ {:.2} GHz, \
+         backend {}, {} device workers",
         server.native(),
-        0.0
+        server.period_cycles(),
+        server.freq_hz() / 1e9,
+        server.backend(),
+        server.workers(),
     );
 
     let mut rng = XorShift64::new(1);
@@ -59,25 +72,88 @@ fn main() {
         5442.0
     );
 
-    common::banner("batched 512^3 requests (4-way)");
+    common::banner("pipeline A/B: batched 512^3 requests (4-way)");
     let size = 512u64;
-    let batch: Vec<_> = (0..4)
-        .map(|i| {
-            let a = rand_vec((size * size) as usize, &mut rng);
-            let b = rand_vec((size * size) as usize, &mut rng);
-            (MatMulRequest { id: 100 + i, m: size, k: size, n: size }, a, b)
-        })
+    let reqs: Vec<MatMulRequest> = (0..4)
+        .map(|i| MatMulRequest { id: 100 + i, m: size, k: size, n: size })
         .collect();
-    let t0 = std::time::Instant::now();
-    let outs = server.run_batch(batch).unwrap();
-    let wall = t0.elapsed().as_secs_f64();
+    let batch = materialize_batch(&reqs, 2024);
     let ops = 4.0 * 2.0 * (size as f64).powi(3);
+
+    let configured_depth = cfg.pipeline_depth;
+    // Untimed warmup so first-touch allocation / cache warming isn't
+    // charged to whichever leg happens to run first.
+    server.set_pipeline_depth(configured_depth);
+    let _ = server.run_batch(batch.clone()).unwrap();
+    let mut walls = Vec::new();
+    let mut outs_by_depth = Vec::new();
+    for depth in [1usize, configured_depth] {
+        server.set_pipeline_depth(depth);
+        let t0 = std::time::Instant::now();
+        let outs = server.run_batch(batch.clone()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let (occ_mean, occ_max) = server.last_batch_occupancy();
+        println!(
+            "  depth {depth:>2}: wall {wall:>7.3} s → {:>7.2} GFLOPs emulated \
+             ({} requests, occupancy mean {occ_mean:.2} / max {occ_max})",
+            ops / wall / 1e9,
+            outs.len()
+        );
+        walls.push(wall);
+        outs_by_depth.push(outs);
+    }
+    let identical = outs_by_depth[0] == outs_by_depth[1];
     println!(
-        "4 × {size}^3: wall {:.2} s → {:.2} GFLOPs emulated; outputs {}",
-        wall,
-        ops / wall / 1e9,
-        outs.len()
+        "  speedup depth {configured_depth} vs 1: {:.2}×; outputs bit-identical: {}",
+        walls[0] / walls[1],
+        identical
     );
+    assert!(
+        identical,
+        "pipelined outputs must be bit-identical to the synchronous engine"
+    );
+
+    common::banner("pipeline A/B: mixed-size batch (fairness under interleaving)");
+    let mixed: Vec<MatMulRequest> = vec![
+        MatMulRequest { id: 200, m: 64, k: 64, n: 64 },
+        MatMulRequest { id: 201, m: 1024, k: 512, n: 512 },
+        MatMulRequest { id: 202, m: 500, k: 200, n: 300 },
+        MatMulRequest { id: 203, m: 768, k: 768, n: 256 },
+    ];
+    let mixed_ops: f64 = mixed.iter().map(|r| 2.0 * r.macs() as f64).sum();
+    let mixed_batch = materialize_batch(&mixed, 4096);
+    // Untimed warmup (new output-matrix shapes → fresh allocations).
+    let _ = server.run_batch(mixed_batch.clone()).unwrap();
+    let mut mixed_walls = Vec::new();
+    let mut mixed_outs = Vec::new();
+    let mut mixed_occ = Vec::new();
+    for depth in [1usize, configured_depth] {
+        server.set_pipeline_depth(depth);
+        let t0 = std::time::Instant::now();
+        let outs = server.run_batch(mixed_batch.clone()).unwrap();
+        mixed_walls.push(t0.elapsed().as_secs_f64());
+        mixed_occ.push(server.last_batch_occupancy());
+        mixed_outs.push(outs);
+    }
+    println!(
+        "  depth  1: wall {:>7.3} s → {:>7.2} GFLOPs emulated (occupancy mean {:.2})",
+        mixed_walls[0],
+        mixed_ops / mixed_walls[0] / 1e9,
+        mixed_occ[0].0
+    );
+    println!(
+        "  depth {:>2}: wall {:>7.3} s → {:>7.2} GFLOPs emulated (occupancy mean {:.2})",
+        configured_depth,
+        mixed_walls[1],
+        mixed_ops / mixed_walls[1] / 1e9,
+        mixed_occ[1].0
+    );
+    println!(
+        "  speedup {:.2}×; outputs bit-identical: {}",
+        mixed_walls[0] / mixed_walls[1],
+        mixed_outs[0] == mixed_outs[1]
+    );
+    assert!(mixed_outs[0] == mixed_outs[1]);
 
     let stats = server.stats();
     println!("\n==== cumulative serving stats ====");
@@ -85,6 +161,10 @@ fn main() {
     println!("tile invocations : {}", stats.invocations);
     println!("mean latency     : {:.1} ms (wall)", stats.mean_latency_ms);
     println!("p99 latency      : {:.1} ms (wall)", stats.p99_latency_ms);
+    println!(
+        "window occupancy : mean {:.2} / max {} (configured depth {})",
+        stats.mean_in_flight, stats.max_in_flight, stats.pipeline_depth
+    );
     println!("device time      : {:.3} ms (VCK190-equivalent)", stats.device_time_s * 1e3);
     println!(
         "device throughput: {:.1} GFLOPs (VCK190-equivalent; gap to 5442 peak = request \

@@ -183,16 +183,56 @@ impl RunConfig {
     }
 }
 
+/// Which tile-execution backend the device threads use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when compiled in (`pjrt` feature) and artifacts exist,
+    /// otherwise the pure-Rust reference backend.
+    #[default]
+    Auto,
+    /// PJRT only; fail fast if artifacts or the feature are missing.
+    Pjrt,
+    /// Pure-Rust reference matmul (no artifacts needed; slower, exact
+    /// same tile semantics).
+    Reference,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(BackendKind::Auto),
+            "pjrt" => Some(BackendKind::Pjrt),
+            "reference" => Some(BackendKind::Reference),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+        })
+    }
+}
+
 /// Serving-layer configuration (the end-to-end coordinator).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     pub design: DesignConfig,
     /// Path to the AOT artifact directory.
     pub artifacts_dir: String,
-    /// Worker threads executing tile jobs.
+    /// Device worker threads executing tile jobs.
     pub workers: usize,
     /// Maximum queued requests before backpressure.
     pub queue_depth: usize,
+    /// Tiles kept in flight by the serving pipeline (software ping-pong
+    /// window). `1` reproduces the synchronous one-tile-at-a-time engine.
+    pub pipeline_depth: usize,
+    /// Tile-execution backend selection.
+    pub backend: BackendKind,
 }
 
 impl ServeConfig {
@@ -202,6 +242,8 @@ impl ServeConfig {
             artifacts_dir: "artifacts".into(),
             workers: 2,
             queue_depth: 64,
+            pipeline_depth: 4,
+            backend: BackendKind::Auto,
         }
     }
 
@@ -211,12 +253,19 @@ impl ServeConfig {
         o.insert("artifacts_dir".into(), Json::Str(self.artifacts_dir.clone()));
         o.insert("workers".into(), Json::Num(self.workers as f64));
         o.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        o.insert("pipeline_depth".into(), Json::Num(self.pipeline_depth as f64));
+        o.insert("backend".into(), Json::Str(self.backend.to_string()));
         Json::Obj(o)
     }
 
     pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
         let design =
             DesignConfig::from_json(v.get("design").ok_or(ConfigError::Missing("design"))?)?;
+        let backend = match v.get("backend").and_then(Json::as_str) {
+            None => BackendKind::Auto,
+            Some(s) => BackendKind::parse(s)
+                .ok_or_else(|| ConfigError::Invalid("backend", s.to_string()))?,
+        };
         Ok(ServeConfig {
             design,
             artifacts_dir: v
@@ -226,6 +275,11 @@ impl ServeConfig {
                 .to_string(),
             workers: v.get("workers").and_then(Json::as_u64).unwrap_or(2) as usize,
             queue_depth: v.get("queue_depth").and_then(Json::as_u64).unwrap_or(64) as usize,
+            pipeline_depth: v
+                .get("pipeline_depth")
+                .and_then(Json::as_u64)
+                .unwrap_or(4) as usize,
+            backend,
         })
     }
 
@@ -304,6 +358,33 @@ mod tests {
         let c = ServeConfig::from_json(&v).unwrap();
         assert_eq!(c.workers, 2);
         assert_eq!(c.artifacts_dir, "artifacts");
+        assert_eq!(c.pipeline_depth, 4);
+        assert_eq!(c.backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn serve_config_roundtrip_with_pipeline_knobs() {
+        let mut c = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
+        c.pipeline_depth = 8;
+        c.backend = BackendKind::Reference;
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn backend_kind_parse_display_roundtrip() {
+        for b in [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Reference] {
+            assert_eq!(BackendKind::parse(&b.to_string()), Some(b));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"backend":"gpu"}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("backend", _))
+        ));
     }
 
     #[test]

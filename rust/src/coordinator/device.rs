@@ -1,26 +1,60 @@
-//! The device thread: owns the PJRT runtime (whose handles are not
+//! The device worker pool: owns the PJRT runtime (whose handles are not
 //! `Send`) and serves native-size tile jobs over a channel — the software
 //! stand-in for the AIE array device.
 //!
+//! # Job model (the pipelined dataflow)
+//!
+//! Jobs are **tagged** and carry `Arc`'d operand tiles from the server's
+//! tile-major pools — submission is zero-copy, the worker reads the
+//! slices in place. Every job names its own completion sender, and the
+//! serving engine points *all* of a batch's jobs at one channel, so a
+//! single `recv` loop drains completions for a whole in-flight window
+//! regardless of which worker executed which tile. This is the host-side
+//! mirror of the paper's ping-pong buffering (eq. 2): while a worker
+//! multiplies tile *i*, the host packs/accumulates tiles *i±window*.
+//!
 //! Each invocation advances the simulated device clock by the design's
-//! steady-state iteration period, giving VCK190-equivalent device time.
+//! steady-state iteration period, giving VCK190-equivalent device time
+//! (the clock sums busy periods across workers, i.e. it stays the serial
+//! device-equivalent time).
+//!
+//! # Backends
+//!
+//! * **PJRT** — the AOT-compiled JAX/Pallas artifact, one
+//!   `Runtime`/`Executable` per worker thread (handles are not `Send`).
+//!   Needs the `pjrt` cargo feature and `make artifacts`.
+//! * **Reference** — a pure-Rust native-tile matmul with identical tile
+//!   semantics. No artifacts needed; lets the full serving stack (and its
+//!   equivalence tests) run in any build environment.
 
-use crate::config::schema::DesignConfig;
-use crate::runtime::{artifacts_available, Runtime};
-use crate::sim::engine::{simulate_design, SimConfig};
+use crate::config::schema::{BackendKind, DesignConfig};
+use crate::coordinator::tiler::matmul_ref_f32;
 use crate::placement::placer::place_design;
+use crate::runtime::{artifacts_available, pjrt_compiled, Runtime};
+use crate::sim::engine::{simulate_design, SimConfig};
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// A native-size f32 tile job: `a` is `nm×nk`, `b` is `nk×nn` row-major.
+/// A tagged native-size f32 tile job: `a` is `nm×nk`, `b` is `nk×nn`
+/// row-major, shared zero-copy from the server's packed pools.
 pub struct TileJobF32 {
-    pub a: Vec<f32>,
-    pub b: Vec<f32>,
-    pub reply: mpsc::Sender<Result<Vec<f32>>>,
+    /// Correlation tag echoed back in [`TileDone`].
+    pub tag: u64,
+    pub a: Arc<Vec<f32>>,
+    pub b: Arc<Vec<f32>>,
+    /// Completion channel; the serving engine points a whole window of
+    /// jobs at one sender.
+    pub done: mpsc::Sender<TileDone>,
+}
+
+/// Completion of one tile job.
+pub struct TileDone {
+    pub tag: u64,
+    pub result: Result<Vec<f32>>,
 }
 
 enum Msg {
@@ -28,10 +62,10 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle to the running device thread.
+/// Handle to the running device worker pool.
 pub struct DeviceHandle {
     tx: mpsc::Sender<Msg>,
-    join: Option<JoinHandle<()>>,
+    joins: Vec<JoinHandle<()>>,
     /// Native design size (nm, nk, nn).
     pub native: (u64, u64, u64),
     /// Simulated device cycles consumed (fixed-point: whole cycles).
@@ -40,23 +74,27 @@ pub struct DeviceHandle {
     pub period_cycles: f64,
     /// Device frequency.
     pub freq_hz: f64,
+    /// Number of device worker threads.
+    pub workers: usize,
+    /// Resolved backend ("pjrt" or "reference").
+    pub backend: &'static str,
     /// Number of invocations served.
     invocations: Arc<AtomicU64>,
 }
 
 impl DeviceHandle {
-    /// Submit one native tile job.
+    /// Submit one tagged native tile job.
     pub fn submit(&self, job: TileJobF32) -> Result<()> {
         self.tx
             .send(Msg::Job(job))
-            .map_err(|_| anyhow!("device thread gone"))
+            .map_err(|_| anyhow!("device workers gone"))
     }
 
     /// Convenience: execute one tile synchronously.
     pub fn execute_tile(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(TileJobF32 { a, b, reply })?;
-        rx.recv().context("device reply channel closed")?
+        let (done, rx) = mpsc::channel();
+        self.submit(TileJobF32 { tag: 0, a: Arc::new(a), b: Arc::new(b), done })?;
+        rx.recv().context("device reply channel closed")?.result
     }
 
     /// Simulated device time consumed so far, seconds.
@@ -69,21 +107,24 @@ impl DeviceHandle {
         self.invocations.load(Ordering::Relaxed)
     }
 
-    /// Stop the device thread and wait for it.
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
+    fn stop(&mut self) {
+        for _ in &self.joins {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
+    }
+
+    /// Stop all device workers and wait for them.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for DeviceHandle {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.stop();
     }
 }
 
@@ -95,15 +136,51 @@ pub fn artifact_name(design: &DesignConfig) -> String {
     )
 }
 
-/// Spawn the device thread for `design`, loading its artifact from
-/// `artifacts_dir`. Fails fast if the artifact is missing.
+/// What a worker thread executes per tile.
+enum WorkerBackend {
+    Pjrt { _rt: Runtime, exe: crate::runtime::Executable },
+    Reference,
+}
+
+/// Spawn the device worker pool for `design` with the legacy defaults:
+/// PJRT backend, one worker. Fails fast if the artifact is missing.
 pub fn spawn_device(artifacts_dir: PathBuf, design: DesignConfig) -> Result<DeviceHandle> {
-    if !artifacts_available(&artifacts_dir) {
-        return Err(anyhow!(
-            "artifacts not found in {} — run `make artifacts` first",
-            artifacts_dir.display()
-        ));
-    }
+    spawn_device_pool(artifacts_dir, design, BackendKind::Pjrt, 1)
+}
+
+/// Spawn `workers` device threads serving tile jobs from a shared queue.
+///
+/// Backend resolution: `Pjrt` requires the `pjrt` feature *and* the
+/// artifact on disk (fails fast otherwise, pointing at `make artifacts`);
+/// `Reference` needs nothing; `Auto` picks PJRT when possible and falls
+/// back to the reference backend.
+pub fn spawn_device_pool(
+    artifacts_dir: PathBuf,
+    design: DesignConfig,
+    backend: BackendKind,
+    workers: usize,
+) -> Result<DeviceHandle> {
+    let have_artifacts = artifacts_available(&artifacts_dir);
+    let use_pjrt = match backend {
+        BackendKind::Pjrt => {
+            if !have_artifacts {
+                return Err(anyhow!(
+                    "artifacts not found in {} — run `make artifacts` first",
+                    artifacts_dir.display()
+                ));
+            }
+            if !pjrt_compiled() {
+                return Err(anyhow!(
+                    "backend `pjrt` requested but maxeva was built without the \
+                     `pjrt` feature"
+                ));
+            }
+            true
+        }
+        BackendKind::Reference => false,
+        BackendKind::Auto => have_artifacts && pjrt_compiled(),
+    };
+
     let dev = design.device()?;
     let cand = design.candidate();
     let kernel = design.kernel();
@@ -116,66 +193,121 @@ pub fn spawn_device(artifacts_dir: PathBuf, design: DesignConfig) -> Result<Devi
     let period = sim.period_cycles;
     let freq = dev.freq_hz;
 
+    let workers = workers.max(1);
     let cycles = Arc::new(AtomicU64::new(0));
     let invocations = Arc::new(AtomicU64::new(0));
     let (tx, rx) = mpsc::channel::<Msg>();
+    // std mpsc is single-consumer; the pool shares the receiver behind a
+    // mutex (locked only to pop, never while executing a tile).
+    let rx = Arc::new(Mutex::new(rx));
     let name = artifact_name(&design);
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
-    let cycles_t = Arc::clone(&cycles);
-    let invocations_t = Arc::clone(&invocations);
-    let join = std::thread::Builder::new()
-        .name("maxeva-device".into())
-        .spawn(move || {
-            // PJRT handles are created inside the thread (not Send).
-            // §Perf: prefer the panel-scheduled `_fast` artifact (same
-            // Pallas kernel, coarsened BlockSpec — ~11× faster on CPU
-            // PJRT, identical reduction order; EXPERIMENTS.md §Perf).
-            let init = (|| -> Result<_> {
-                let rt = Runtime::cpu()?;
-                let fast = crate::runtime::artifact_path(&artifacts_dir, &format!("{name}_fast"));
-                let exe = if fast.exists() {
-                    rt.load(&fast)?
-                } else {
-                    rt.load_named(&artifacts_dir, &name)?
+    let mut joins = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let rx_w = Arc::clone(&rx);
+        let cycles_w = Arc::clone(&cycles);
+        let invocations_w = Arc::clone(&invocations);
+        let ready_w = ready_tx.clone();
+        let dir_w = artifacts_dir.clone();
+        let name_w = name.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("maxeva-device-{w}"))
+            .spawn(move || {
+                // PJRT handles are created inside the thread (not Send).
+                // §Perf: prefer the panel-scheduled `_fast` artifact (same
+                // Pallas kernel, coarsened BlockSpec — ~11× faster on CPU
+                // PJRT, identical reduction order; EXPERIMENTS.md §Perf).
+                let init = (|| -> Result<WorkerBackend> {
+                    if !use_pjrt {
+                        return Ok(WorkerBackend::Reference);
+                    }
+                    let rt = Runtime::cpu()?;
+                    let fast = crate::runtime::artifact_path(&dir_w, &format!("{name_w}_fast"));
+                    let exe = if fast.exists() {
+                        rt.load(&fast)?
+                    } else {
+                        rt.load_named(&dir_w, &name_w)?
+                    };
+                    Ok(WorkerBackend::Pjrt { _rt: rt, exe })
+                })();
+                let backend = match init {
+                    Ok(b) => {
+                        let _ = ready_w.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_w.send(Err(e));
+                        return;
+                    }
                 };
-                Ok((rt, exe))
-            })();
-            let exe = match init {
-                Ok((_rt, exe)) => {
-                    let _ = ready_tx.send(Ok(()));
-                    exe
+                // Close this worker's ready sender now: if any sibling
+                // worker dies during init without sending, the spawn-side
+                // wait must see the channel disconnect, not hang.
+                drop(ready_w);
+                let (nm, nk, nn) = (native.0 as usize, native.1 as usize, native.2 as usize);
+                loop {
+                    // Pop under the lock, execute outside it so workers
+                    // overlap.
+                    let msg = match rx_w.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    let job = match msg {
+                        Ok(Msg::Job(job)) => job,
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    };
+                    // A panic inside the backend (e.g. PJRT FFI) must
+                    // still produce a completion — otherwise the server's
+                    // recv loop would wait forever for this tag.
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || match &backend {
+                            WorkerBackend::Pjrt { exe, .. } => exe.run_f32(&[
+                                (job.a.as_slice(), &[nm as i64, nk as i64][..]),
+                                (job.b.as_slice(), &[nk as i64, nn as i64][..]),
+                            ]),
+                            WorkerBackend::Reference => {
+                                Ok(matmul_ref_f32(&job.a, &job.b, nm, nk, nn))
+                            }
+                        },
+                    ))
+                    .unwrap_or_else(|_| Err(anyhow!("device worker panicked executing tile")));
+                    cycles_w.fetch_add(period as u64, Ordering::Relaxed);
+                    invocations_w.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.done.send(TileDone { tag: job.tag, result: res });
                 }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let (nm, nk, nn) = (native.0 as i64, native.1 as i64, native.2 as i64);
-            while let Ok(Msg::Job(job)) = rx.recv() {
-                let res = exe.run_f32(&[
-                    (job.a.as_slice(), &[nm, nk][..]),
-                    (job.b.as_slice(), &[nk, nn][..]),
-                ]);
-                cycles_t.fetch_add(period as u64, Ordering::Relaxed);
-                invocations_t.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(res);
-            }
-        })
-        .context("spawning device thread")?;
+            })
+            .context("spawning device worker")?;
+        joins.push(join);
+    }
+    drop(ready_tx);
 
-    // Wait for the artifact to compile (or fail).
-    ready_rx
-        .recv()
-        .context("device thread died during init")??;
+    // Wait for every worker's backend to come up (or fail).
+    for _ in 0..workers {
+        match ready_rx.recv().context("device worker died during init") {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) | Err(e) => {
+                // Tear the pool down before propagating.
+                for _ in 0..workers {
+                    let _ = tx.send(Msg::Shutdown);
+                }
+                for j in joins {
+                    let _ = j.join();
+                }
+                return Err(e);
+            }
+        }
+    }
 
     Ok(DeviceHandle {
         tx,
-        join: Some(join),
+        joins,
         native,
         cycles,
         period_cycles: period,
         freq_hz: freq,
+        workers,
+        backend: if use_pjrt { "pjrt" } else { "reference" },
         invocations,
     })
 }
@@ -201,6 +333,49 @@ mod tests {
             Err(err) => assert!(err.to_string().contains("make artifacts"), "{err}"),
             Ok(_) => panic!("spawn must fail without artifacts"),
         }
+    }
+
+    #[test]
+    fn reference_pool_executes_tagged_jobs() {
+        // Small 2×4×2 array of 4×4×4 kernels → native (8, 16, 8); the
+        // reference backend needs no artifacts.
+        let mut design = DesignConfig::flagship(Precision::Fp32);
+        (design.x, design.y, design.z) = (2, 4, 2);
+        (design.m, design.k, design.n) = (4, 4, 4);
+        let dir = std::env::temp_dir().join("maxeva_ref_pool");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
+        assert_eq!(dev.native, (8, 16, 8));
+        assert_eq!(dev.backend, "reference");
+        let (nm, nk, nn) = (8usize, 16usize, 8usize);
+        let a: Vec<f32> = (0..nm * nk).map(|i| (i % 5) as f32).collect();
+        let b: Vec<f32> = (0..nk * nn).map(|i| (i % 7) as f32 - 3.0).collect();
+        let want = matmul_ref_f32(&a, &b, nm, nk, nn);
+
+        // Tagged async submission on one completion channel.
+        let (done_tx, done_rx) = mpsc::channel();
+        let a = Arc::new(a);
+        let b = Arc::new(b);
+        for tag in 0..6u64 {
+            dev.submit(TileJobF32 {
+                tag,
+                a: Arc::clone(&a),
+                b: Arc::clone(&b),
+                done: done_tx.clone(),
+            })
+            .unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let d = done_rx.recv().unwrap();
+            assert_eq!(d.result.unwrap(), want);
+            seen.push(d.tag);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(dev.invocations(), 6);
+        assert!(dev.device_time_s() > 0.0);
+        dev.shutdown();
     }
 
     // Full execution tests live in rust/tests/runtime_artifacts.rs.

@@ -1,12 +1,16 @@
 //! The serving coordinator — the L3 runtime path.
 //!
 //! Arbitrary-size MatMul requests are padded and tiled to the design's
-//! native size ([`tiler`]), scheduled as tile jobs with round-robin
-//! dynamic batching across in-flight requests ([`server`]), and executed
-//! on the PJRT runtime by a dedicated device thread ([`device`]) — the
-//! software stand-in for the VCK190's AIE array. Python never runs here;
-//! the device thread executes the AOT artifacts produced once at build
-//! time.
+//! native size ([`tiler`]), packed once into tile-major `Arc`'d block
+//! pools, and streamed through a pipelined in-flight window of tagged
+//! tile jobs ([`server`]) executed by a pool of device worker threads
+//! ([`device`]) — the software stand-in for the VCK190's AIE array. The
+//! window is the host-side mirror of the paper's ping-pong buffering
+//! (eq. 2): host packing/reduction overlaps device execution instead of
+//! alternating with it. Python never runs here; the device workers
+//! execute the AOT artifacts produced once at build time (or, without
+//! the `pjrt` feature/artifacts, a pure-Rust reference backend with
+//! identical tile semantics).
 //!
 //! Device-time accounting: every artifact invocation advances the
 //! simulated device clock by the design's iteration period (from
@@ -20,6 +24,6 @@ pub mod trace;
 pub mod stats;
 pub mod tiler;
 
-pub use device::{spawn_device, DeviceHandle};
+pub use device::{spawn_device, spawn_device_pool, DeviceHandle, TileDone, TileJobF32};
 pub use server::{MatMulServer, ServerStats};
 pub use tiler::Tiler;

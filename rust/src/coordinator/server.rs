@@ -1,19 +1,51 @@
-//! The MatMul serving layer: request queue + dynamic tile batcher on top
-//! of the device thread.
+//! The MatMul serving layer: request queue + pipelined tile engine on top
+//! of the device worker pool.
 //!
 //! Requests of arbitrary `M×K×N` are decomposed into native-size tile
-//! jobs. The scheduler interleaves tiles of all in-flight requests
-//! round-robin ("dynamic batching" at tile granularity — the device never
-//! idles between requests, and small requests are not starved behind
-//! large ones), accumulates partial blocks, and completes requests in
-//! submission order per stream.
+//! jobs and streamed through an **asynchronous in-flight window** — the
+//! host-side analogue of the paper's ping-pong (double) buffering, eq. 2:
+//! the AIE kernel only sustains its rate because DMA refills one buffer
+//! while the datapath consumes the other, and likewise this engine only
+//! keeps the device workers busy because block packing and accumulation
+//! for tiles `i±window` happen while tile `i` executes. Three mechanisms
+//! cooperate:
+//!
+//! 1. **Tile-major packing (zero-copy)** — on admission each request's A
+//!    and B are packed once into tile-major pools of `Arc`'d native
+//!    blocks ([`Tiler::pack_tile_major`]). A tile job borrows its two
+//!    blocks by `Arc` clone; nothing is re-extracted or copied per tile.
+//!    The old engine extracted the `(im,ik)` A-block `gn` times and the
+//!    `(ik,inn)` B-block `gm` times per request.
+//! 2. **Windowed submission** — up to `pipeline_depth` tagged jobs are
+//!    kept in flight on a single completion channel, overlapping host
+//!    pack/reduce work with device execution (and, with `workers > 1`,
+//!    device executions with each other). `pipeline_depth = 1` reproduces
+//!    the synchronous one-tile-at-a-time engine exactly — the A/B knob
+//!    for measuring the win.
+//! 3. **Reuse-ordered scheduling** — each request walks its tiles
+//!    k-innermost per `(im, inn)` output block, so partial products
+//!    reduce into a dense per-block accumulation buffer and the strided
+//!    output matrix is written once per block, not once per tile.
+//!    Fairness across requests is round-robin at the *window* level (a
+//!    ready-queue rotation per submitted tile), not a rescan of every
+//!    in-flight request per tile.
+//!
+//! **Determinism:** completions may arrive out of order (multiple
+//! workers), but partials are applied to each output block strictly in
+//! ascending `ik` order (late partials park in a per-block reorder map),
+//! so outputs are bit-identical for every `pipeline_depth`/`workers`
+//! combination — see `rust/tests/pipeline_equivalence.rs`.
 
 use crate::config::schema::ServeConfig;
-use crate::coordinator::device::{spawn_device, DeviceHandle};
-use crate::coordinator::stats::{Completion, StatsAgg};
+use crate::coordinator::device::{spawn_device_pool, DeviceHandle, TileDone, TileJobF32};
+use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::MatMulRequest;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use rustc_hash::FxHashMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Serving statistics snapshot.
@@ -29,20 +61,59 @@ pub struct ServerStats {
     pub device_time_s: f64,
     /// Total wall time (s) spent in `run_batch`.
     pub wall_time_s: f64,
+    /// Configured in-flight window.
+    pub pipeline_depth: usize,
+    /// Measured mean window occupancy (1.0 = synchronous).
+    pub mean_in_flight: f64,
+    /// Measured peak window occupancy.
+    pub max_in_flight: usize,
 }
 
-/// One in-flight request's state.
+/// One in-flight request's state: operands packed tile-major at
+/// admission, grid cached (never recomputed per tile).
 struct InFlight {
     req: MatMulRequest,
-    a: Vec<f32>,
-    b: Vec<f32>,
+    /// Block grid `(gm, gk, gn)`, computed once at admission.
+    grid: (usize, usize, usize),
+    /// Raw row-major operands, held until this request's first tile is
+    /// scheduled: packing then happens *inside* the pipeline, overlapping
+    /// the tiles of earlier requests already executing on the workers.
+    raw: Option<(Vec<f32>, Vec<f32>)>,
+    /// Tile-major A pool, indexed `[im·gk + ik]` (filled at first
+    /// schedule).
+    a_tiles: Vec<Arc<Vec<f32>>>,
+    /// Tile-major B pool, indexed `[ik·gn + inn]` (filled at first
+    /// schedule).
+    b_tiles: Vec<Arc<Vec<f32>>>,
     c: Vec<f32>,
-    /// Tile cursor: (im, ik, in) lexicographic.
-    cursor: u64,
-    total_tiles: u64,
+    /// Cursor into the k-innermost tile walk.
+    next_tile: usize,
+    total_tiles: usize,
+    /// Tiles whose partials have been reduced (in order).
+    done_tiles: usize,
     started: Instant,
     invocations: u64,
     device_s0: f64,
+}
+
+/// Where a tagged in-flight job lands when it completes.
+#[derive(Debug, Clone, Copy)]
+struct JobDesc {
+    flight: usize,
+    im: usize,
+    inn: usize,
+    ik: usize,
+}
+
+/// Per-output-block accumulation state (the "small accumulation buffer
+/// per in-flight block").
+struct BlockAcc {
+    /// Dense `nm×nn` running sum.
+    buf: Vec<f32>,
+    /// Next `ik` to reduce — enforces the bit-exact reduction order.
+    next_ik: usize,
+    /// Out-of-order partials parked until their turn.
+    pending: BTreeMap<usize, Vec<f32>>,
 }
 
 /// The serving coordinator.
@@ -50,19 +121,33 @@ pub struct MatMulServer {
     device: DeviceHandle,
     tiler: Tiler,
     stats: StatsAgg,
+    /// Cumulative window occupancy over the server's lifetime.
+    window: WindowOcc,
+    /// Occupancy of the most recent `run_batch` only (A/B attribution).
+    last_window: WindowOcc,
+    pipeline_depth: usize,
     wall_time_s: f64,
 }
 
 impl MatMulServer {
-    /// Start the server: spawns the device thread and compiles the
-    /// design's artifact.
+    /// Start the server: spawns the device worker pool and compiles the
+    /// design's artifact (or brings up the reference backend, per
+    /// `cfg.backend`).
     pub fn start(cfg: &ServeConfig) -> Result<Self> {
-        let device = spawn_device(cfg.artifacts_dir.clone().into(), cfg.design.clone())?;
+        let device = spawn_device_pool(
+            cfg.artifacts_dir.clone().into(),
+            cfg.design.clone(),
+            cfg.backend,
+            cfg.workers,
+        )?;
         let tiler = Tiler::new(device.native);
         Ok(MatMulServer {
             device,
             tiler,
             stats: StatsAgg::default(),
+            window: WindowOcc::default(),
+            last_window: WindowOcc::default(),
+            pipeline_depth: cfg.pipeline_depth.max(1),
             wall_time_s: 0.0,
         })
     }
@@ -72,82 +157,224 @@ impl MatMulServer {
         self.device.native
     }
 
+    /// Steady-state iteration period of the design, in device cycles.
+    pub fn period_cycles(&self) -> f64 {
+        self.device.period_cycles
+    }
+
+    /// Device clock frequency, Hz.
+    pub fn freq_hz(&self) -> f64 {
+        self.device.freq_hz
+    }
+
+    /// Resolved tile-execution backend ("pjrt" or "reference").
+    pub fn backend(&self) -> &'static str {
+        self.device.backend
+    }
+
+    /// Device worker threads.
+    pub fn workers(&self) -> usize {
+        self.device.workers
+    }
+
+    /// Configured in-flight window.
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    /// Reconfigure the in-flight window (the A/B knob; `1` = synchronous).
+    pub fn set_pipeline_depth(&mut self, depth: usize) {
+        self.pipeline_depth = depth.max(1);
+    }
+
+    /// `(mean, max)` window occupancy of the most recent `run_batch` —
+    /// unlike [`ServerStats::mean_in_flight`] this is not diluted by
+    /// earlier batches run at other depths.
+    pub fn last_batch_occupancy(&self) -> (f64, usize) {
+        (self.last_window.mean(), self.last_window.max())
+    }
+
     /// Execute one request synchronously (convenience path).
     pub fn execute(&mut self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
         let mut out = self.run_batch(vec![(req, a, b)])?;
         Ok(out.pop().unwrap())
     }
 
-    /// Execute a batch of requests with round-robin tile interleaving.
+    /// Admit one request: validate shapes and cache the grid. Packing is
+    /// deferred to the request's first schedule (see [`InFlight::raw`]).
+    fn admit(&self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>, device_s0: f64) -> InFlight {
+        assert_eq!(a.len() as u64, req.m * req.k, "A shape mismatch");
+        assert_eq!(b.len() as u64, req.k * req.n, "B shape mismatch");
+        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
+        let grid = self.tiler.grid(m, k, n);
+        let (gm, gk, gn) = grid;
+        InFlight {
+            grid,
+            raw: Some((a, b)),
+            a_tiles: Vec::new(),
+            b_tiles: Vec::new(),
+            c: vec![0.0; m * n],
+            next_tile: 0,
+            total_tiles: gm * gk * gn,
+            done_tiles: 0,
+            started: Instant::now(),
+            invocations: 0,
+            device_s0,
+            req,
+        }
+    }
+
+    /// Execute a batch of requests through the pipelined engine.
     /// Returns the outputs in request order.
     pub fn run_batch(
         &mut self,
         batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
     ) -> Result<Vec<Vec<f32>>> {
         let wall0 = Instant::now();
+        let depth = self.pipeline_depth;
+        self.last_window = WindowOcc::default();
+        let device_s0 = self.device.device_time_s();
         let mut flights: Vec<InFlight> = batch
             .into_iter()
-            .map(|(req, a, b)| {
-                assert_eq!(a.len() as u64, req.m * req.k, "A shape mismatch");
-                assert_eq!(b.len() as u64, req.k * req.n, "B shape mismatch");
-                let (gm, gk, gn) = self.tiler.grid(req.m as usize, req.k as usize, req.n as usize);
-                InFlight {
-                    c: vec![0.0; (req.m * req.n) as usize],
-                    cursor: 0,
-                    total_tiles: (gm * gk * gn) as u64,
-                    started: Instant::now(),
-                    invocations: 0,
-                    device_s0: self.device.device_time_s(),
-                    req,
-                    a,
-                    b,
-                }
-            })
+            .map(|(req, a, b)| self.admit(req, a, b, device_s0))
             .collect();
 
         let mut outputs: Vec<Option<Vec<f32>>> = (0..flights.len()).map(|_| None).collect();
-        // Round-robin over in-flight requests, one tile each per turn.
-        while flights.iter().any(|f| f.cursor < f.total_tiles) {
-            for (idx, f) in flights.iter_mut().enumerate() {
-                if f.cursor >= f.total_tiles {
-                    continue;
-                }
-                self.step_tile(f)?;
-                if f.cursor == f.total_tiles {
-                    // Completed.
-                    let wall = f.started.elapsed();
-                    self.stats.record(Completion {
-                        id: f.req.id,
-                        macs: f.req.macs(),
-                        wall,
-                        device_s: self.device.device_time_s() - f.device_s0,
-                        invocations: f.invocations,
-                    });
-                    outputs[idx] = Some(std::mem::take(&mut f.c));
-                }
+        // Degenerate (zero-tile) requests complete immediately — still
+        // recorded, so stats().requests matches the outputs returned.
+        for (idx, f) in flights.iter_mut().enumerate() {
+            if f.total_tiles == 0 {
+                self.stats.record(Completion {
+                    id: f.req.id,
+                    macs: f.req.macs(),
+                    wall: f.started.elapsed(),
+                    device_s: 0.0,
+                    invocations: 0,
+                });
+                outputs[idx] = Some(std::mem::take(&mut f.c));
             }
         }
+
+        // Window-level round-robin: each ready request submits one tile,
+        // then rotates to the back of the queue.
+        let mut ready: VecDeque<usize> = (0..flights.len())
+            .filter(|&i| flights[i].total_tiles > 0)
+            .collect();
+        let (done_tx, done_rx) = mpsc::channel::<TileDone>();
+        let mut descs: FxHashMap<u64, JobDesc> = FxHashMap::default();
+        let mut accs: FxHashMap<(usize, usize, usize), BlockAcc> = FxHashMap::default();
+        let mut next_tag: u64 = 0;
+        let mut in_flight = 0usize;
+
+        loop {
+            // Fill the window.
+            while in_flight < depth {
+                let Some(fi) = ready.pop_front() else { break };
+                let f = &mut flights[fi];
+                let (_gm, gk, gn) = f.grid;
+                // First schedule of this request: pack its operands into
+                // the tile-major pools now — one extract pass per block,
+                // total, overlapping whatever is already in flight.
+                if let Some((a, b)) = f.raw.take() {
+                    let (m, k, n) =
+                        (f.req.m as usize, f.req.k as usize, f.req.n as usize);
+                    let (nm, nk, nn) = (self.tiler.nm, self.tiler.nk, self.tiler.nn);
+                    f.a_tiles = Tiler::pack_tile_major(&a, m, k, nm, nk)
+                        .into_iter()
+                        .map(Arc::new)
+                        .collect();
+                    f.b_tiles = Tiler::pack_tile_major(&b, k, n, nk, nn)
+                        .into_iter()
+                        .map(Arc::new)
+                        .collect();
+                }
+                // k-innermost walk: tile t = (im·gn + inn)·gk + ik.
+                let t = f.next_tile;
+                f.next_tile += 1;
+                let ik = t % gk;
+                let blk = t / gk;
+                let im = blk / gn;
+                let inn = blk % gn;
+                let tag = next_tag;
+                next_tag += 1;
+                descs.insert(tag, JobDesc { flight: fi, im, inn, ik });
+                f.invocations += 1;
+                if f.next_tile < f.total_tiles {
+                    ready.push_back(fi);
+                }
+                self.device.submit(TileJobF32 {
+                    tag,
+                    a: Arc::clone(&f.a_tiles[im * gk + ik]),
+                    b: Arc::clone(&f.b_tiles[ik * gn + inn]),
+                    done: done_tx.clone(),
+                })?;
+                in_flight += 1;
+            }
+            if in_flight == 0 {
+                break;
+            }
+            self.last_window.record(in_flight);
+
+            // Drain one completion (host reduce overlaps the tiles still
+            // executing on the workers).
+            let done = done_rx
+                .recv()
+                .map_err(|_| anyhow!("device completion channel closed"))?;
+            in_flight -= 1;
+            let desc = descs
+                .remove(&done.tag)
+                .ok_or_else(|| anyhow!("unknown completion tag {}", done.tag))?;
+            let partial = done.result?;
+            self.reduce_partial(&mut flights, &mut accs, desc, partial);
+            let f = &mut flights[desc.flight];
+            if f.done_tiles == f.total_tiles && outputs[desc.flight].is_none() {
+                let wall = f.started.elapsed();
+                self.stats.record(Completion {
+                    id: f.req.id,
+                    macs: f.req.macs(),
+                    wall,
+                    device_s: self.device.device_time_s() - f.device_s0,
+                    invocations: f.invocations,
+                });
+                outputs[desc.flight] = Some(std::mem::take(&mut f.c));
+            }
+        }
+        self.window.merge(&self.last_window);
         self.wall_time_s += wall0.elapsed().as_secs_f64();
         Ok(outputs.into_iter().map(|o| o.unwrap()).collect())
     }
 
-    /// Execute the next tile of one in-flight request.
-    fn step_tile(&mut self, f: &mut InFlight) -> Result<()> {
-        let (m, k, n) = (f.req.m as usize, f.req.k as usize, f.req.n as usize);
-        let (_gm, gk, gn) = self.tiler.grid(m, k, n);
-        let cur = f.cursor as usize;
-        // Lexicographic (im, ik, in).
-        let im = cur / (gk * gn);
-        let ik = (cur / gn) % gk;
-        let inn = cur % gn;
-        let (nm, nk, nn) = (self.tiler.nm, self.tiler.nk, self.tiler.nn);
-        let ab = Tiler::extract_block(&f.a, m, k, im, ik, nm, nk);
-        let bb = Tiler::extract_block(&f.b, k, n, ik, inn, nk, nn);
-        let cb = self.device.execute_tile(ab, bb)?;
-        Tiler::accumulate_block(&mut f.c, m, n, im, inn, nm, nn, &cb);
-        f.cursor += 1;
-        f.invocations += 1;
-        Ok(())
+    /// Reduce one completed partial product into its output block,
+    /// preserving ascending-`ik` order; write the block back once full.
+    fn reduce_partial(
+        &mut self,
+        flights: &mut [InFlight],
+        accs: &mut FxHashMap<(usize, usize, usize), BlockAcc>,
+        desc: JobDesc,
+        partial: Vec<f32>,
+    ) {
+        let (nm, nn) = (self.tiler.nm, self.tiler.nn);
+        let f = &mut flights[desc.flight];
+        let (_gm, gk, _gn) = f.grid;
+        let key = (desc.flight, desc.im, desc.inn);
+        let acc = accs.entry(key).or_insert_with(|| BlockAcc {
+            buf: vec![0.0; nm * nn],
+            next_ik: 0,
+            pending: BTreeMap::new(),
+        });
+        acc.pending.insert(desc.ik, partial);
+        while let Some(p) = acc.pending.remove(&acc.next_ik) {
+            for (dst, src) in acc.buf.iter_mut().zip(&p) {
+                *dst += *src;
+            }
+            acc.next_ik += 1;
+            f.done_tiles += 1;
+        }
+        if acc.next_ik == gk {
+            let full = accs.remove(&key).unwrap();
+            let (m, n) = (f.req.m as usize, f.req.n as usize);
+            Tiler::write_block(&mut f.c, m, n, desc.im, desc.inn, nm, nn, &full.buf);
+        }
     }
 
     /// Snapshot serving statistics.
@@ -160,14 +387,18 @@ impl MatMulServer {
             device_ops_per_sec: self.stats.device_ops_per_sec(),
             device_time_s: self.device.device_time_s(),
             wall_time_s: self.wall_time_s,
+            pipeline_depth: self.pipeline_depth,
+            mean_in_flight: self.window.mean(),
+            max_in_flight: self.window.max(),
         }
     }
 
-    /// Shut the device thread down.
+    /// Shut the device workers down.
     pub fn shutdown(self) {
         self.device.shutdown();
     }
 }
 
 // Integration tests (needing built artifacts) live in
-// rust/tests/serving_e2e.rs.
+// rust/tests/serving_e2e.rs; backend-independent pipelined-vs-sequential
+// equivalence tests live in rust/tests/pipeline_equivalence.rs.

@@ -1,7 +1,49 @@
-//! Request/serving statistics.
+//! Request/serving statistics: per-request completions plus pipeline
+//! window occupancy (how many tiles were actually in flight — the
+//! measured counterpart of the configured `pipeline_depth`).
 
 use crate::util::stats::{mean, percentile};
 use std::time::Duration;
+
+/// In-flight window occupancy aggregate, sampled once per completion
+/// wait. `mean()` near 1.0 means the engine ran synchronously; near the
+/// configured depth means full host/device overlap.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowOcc {
+    samples: u64,
+    sum: u64,
+    max: usize,
+}
+
+impl WindowOcc {
+    pub fn record(&mut self, in_flight: usize) {
+        self.samples += 1;
+        self.sum += in_flight as u64;
+        self.max = self.max.max(in_flight);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.samples as f64
+    }
+
+    pub fn max(&self) -> usize {
+        self.max
+    }
+
+    /// Fold another aggregate into this one (per-batch → cumulative).
+    pub fn merge(&mut self, other: &WindowOcc) {
+        self.samples += other.samples;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
 
 /// Completion record for one request.
 #[derive(Debug, Clone, Copy)]
@@ -96,5 +138,24 @@ mod tests {
         let s = StatsAgg::default();
         assert_eq!(s.device_ops_per_sec(), 0.0);
         assert_eq!(s.mean_latency_ms(), 0.0);
+    }
+
+    #[test]
+    fn window_occupancy_aggregates() {
+        let mut w = WindowOcc::default();
+        assert_eq!(w.mean(), 0.0);
+        for occ in [1, 4, 4, 3] {
+            w.record(occ);
+        }
+        assert_eq!(w.samples(), 4);
+        assert_eq!(w.max(), 4);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+
+        let mut total = WindowOcc::default();
+        total.record(6);
+        total.merge(&w);
+        assert_eq!(total.samples(), 5);
+        assert_eq!(total.max(), 6);
+        assert!((total.mean() - (6 + 1 + 4 + 4 + 3) as f64 / 5.0).abs() < 1e-12);
     }
 }

@@ -10,6 +10,10 @@ pub struct Tiler {
     pub nn: usize,
 }
 
+// Block addressing is inherently 8-parameter (dst/src + matrix shape +
+// block position + block shape); a params struct would obscure the call
+// sites more than it helps.
+#[allow(clippy::too_many_arguments)]
 impl Tiler {
     pub fn new(native: (u64, u64, u64)) -> Self {
         Tiler {
@@ -73,6 +77,80 @@ impl Tiler {
                 dst[dst_off + c] += block[src_off + c];
             }
         }
+    }
+
+    /// Write a finished native-size block into the `rows × cols` output at
+    /// block position `(bi, bj)`, clipping the padded fringe. Unlike
+    /// [`Tiler::accumulate_block`] this *overwrites*: the pipelined engine
+    /// reduces all `ik` partials of an output block in a dense `bh × bw`
+    /// accumulation buffer first, then writes the block back once —
+    /// one strided pass over `dst` per block instead of one per tile.
+    pub fn write_block<T: Copy>(
+        dst: &mut [T],
+        rows: usize,
+        cols: usize,
+        bi: usize,
+        bj: usize,
+        bh: usize,
+        bw: usize,
+        block: &[T],
+    ) {
+        assert_eq!(block.len(), bh * bw, "block shape mismatch");
+        let r0 = bi * bh;
+        let c0 = bj * bw;
+        let rmax = rows.saturating_sub(r0).min(bh);
+        let cmax = cols.saturating_sub(c0).min(bw);
+        for r in 0..rmax {
+            let dst_off = (r0 + r) * cols + c0;
+            let src_off = r * bw;
+            dst[dst_off..dst_off + cmax].copy_from_slice(&block[src_off..src_off + cmax]);
+        }
+    }
+
+    /// Pack a row-major `rows × cols` matrix into **tile-major** form: one
+    /// contiguous zero-padded `bh × bw` buffer per block, blocks ordered
+    /// row-major over the `(⌈rows/bh⌉ × ⌈cols/bw⌉)` block grid.
+    ///
+    /// This is the packing step of the serving pipeline (GotoBLAS-style):
+    /// each block is extracted exactly **once** per request, instead of
+    /// once per tile job that touches it.
+    pub fn pack_tile_major<T: Copy + Default>(
+        src: &[T],
+        rows: usize,
+        cols: usize,
+        bh: usize,
+        bw: usize,
+    ) -> Vec<Vec<T>> {
+        let gr = rows.div_ceil(bh);
+        let gc = cols.div_ceil(bw);
+        let mut tiles = Vec::with_capacity(gr * gc);
+        for bi in 0..gr {
+            for bj in 0..gc {
+                tiles.push(Self::extract_block(src, rows, cols, bi, bj, bh, bw));
+            }
+        }
+        tiles
+    }
+
+    /// Inverse of [`Tiler::pack_tile_major`]: reassemble the row-major
+    /// `rows × cols` matrix from tile-major blocks, dropping the padding.
+    pub fn unpack_tile_major<T: Copy + Default>(
+        tiles: &[Vec<T>],
+        rows: usize,
+        cols: usize,
+        bh: usize,
+        bw: usize,
+    ) -> Vec<T> {
+        let gr = rows.div_ceil(bh);
+        let gc = cols.div_ceil(bw);
+        assert_eq!(tiles.len(), gr * gc, "tile count mismatch");
+        let mut out = vec![T::default(); rows * cols];
+        for bi in 0..gr {
+            for bj in 0..gc {
+                Self::write_block(&mut out, rows, cols, bi, bj, bh, bw, &tiles[bi * gc + bj]);
+            }
+        }
+        out
     }
 
     /// Accumulate for i32 outputs (int8 designs accumulate int32).
@@ -186,6 +264,81 @@ mod tests {
         assert_eq!(t.grid(416, 128, 192), (1, 1, 1));
         assert_eq!(t.grid(417, 128, 192), (2, 1, 1));
         assert_eq!(t.grid(2048, 2048, 2048), (5, 16, 11));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_exact_fit() {
+        // 4×6 matrix, 2×3 blocks: packing divides exactly, no padding.
+        let src: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let tiles = Tiler::pack_tile_major(&src, 4, 6, 2, 3);
+        assert_eq!(tiles.len(), 4);
+        assert_eq!(tiles[0], vec![0.0, 1.0, 2.0, 6.0, 7.0, 8.0]);
+        assert_eq!(Tiler::unpack_tile_major(&tiles, 4, 6, 2, 3), src);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_random_shapes() {
+        // Property: unpack(pack(x)) == x for shapes with and without
+        // fringe padding, and every padded element is zero.
+        let mut rng = XorShift64::new(7);
+        for _ in 0..20 {
+            let rows = rng.gen_range(1, 40) as usize;
+            let cols = rng.gen_range(1, 40) as usize;
+            let bh = rng.gen_range(1, 9) as usize;
+            let bw = rng.gen_range(1, 9) as usize;
+            let src: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+                .collect();
+            let tiles = Tiler::pack_tile_major(&src, rows, cols, bh, bw);
+            assert_eq!(tiles.len(), rows.div_ceil(bh) * cols.div_ceil(bw));
+            let back = Tiler::unpack_tile_major(&tiles, rows, cols, bh, bw);
+            assert_eq!(back, src, "{rows}x{cols} in {bh}x{bw} blocks");
+        }
+    }
+
+    #[test]
+    fn packed_tiles_match_per_tile_extraction() {
+        // The packed pool must hold exactly what extract_block would
+        // produce on demand — the zero-copy pipeline depends on it.
+        let mut rng = XorShift64::new(11);
+        let (rows, cols, bh, bw) = (13usize, 10usize, 4usize, 3usize);
+        let src: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let tiles = Tiler::pack_tile_major(&src, rows, cols, bh, bw);
+        let gc = cols.div_ceil(bw);
+        for bi in 0..rows.div_ceil(bh) {
+            for bj in 0..gc {
+                let want = Tiler::extract_block(&src, rows, cols, bi, bj, bh, bw);
+                assert_eq!(tiles[bi * gc + bj], want, "block ({bi},{bj})");
+            }
+        }
+    }
+
+    #[test]
+    fn write_block_overwrites_and_clips() {
+        let mut dst = vec![7.0f32; 9];
+        let block = vec![1.0f32, 2.0, 3.0, 4.0];
+        Tiler::write_block(&mut dst, 3, 3, 1, 1, 2, 2, &block);
+        // Only the single in-bounds element of block (1,1) lands.
+        assert_eq!(dst, vec![7.0, 7.0, 7.0, 7.0, 7.0, 7.0, 7.0, 7.0, 1.0]);
+    }
+
+    #[test]
+    fn write_block_equals_accumulate_into_zero() {
+        // For a zeroed destination, write_block and accumulate_block agree
+        // bit-for-bit — the pipelined engine's write-back is a pure
+        // strength reduction, not a numerics change.
+        let mut rng = XorShift64::new(13);
+        let (rows, cols, bh, bw) = (7usize, 11usize, 4usize, 4usize);
+        let block: Vec<f32> = (0..bh * bw)
+            .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let mut via_write = vec![0.0f32; rows * cols];
+        let mut via_acc = vec![0.0f32; rows * cols];
+        Tiler::write_block(&mut via_write, rows, cols, 1, 2, bh, bw, &block);
+        Tiler::accumulate_block(&mut via_acc, rows, cols, 1, 2, bh, bw, &block);
+        assert_eq!(via_write, via_acc);
     }
 
     #[test]

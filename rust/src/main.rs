@@ -419,7 +419,13 @@ fn cmd_serve(args: &Args) -> i32 {
             return 1;
         }
     };
-    println!("device ready: native size {:?}", server.native());
+    println!(
+        "device ready: native size {:?}, backend {}, {} workers, pipeline window {}",
+        server.native(),
+        server.backend(),
+        server.workers(),
+        server.pipeline_depth()
+    );
     let mut rng = maxeva::util::prng::XorShift64::new(99);
     let reqs: Vec<_> = random_trace(n, 5)
         .into_iter()

@@ -79,10 +79,13 @@ impl ArrayCandidate {
 /// fewer cores. `y_range` restricts Y (the paper places patterns only for
 /// Y ∈ {3,4} — pass `None` to search all Y).
 pub fn optimize_array(dev: &AieDevice, y_range: Option<(u64, u64)>) -> Vec<ArrayCandidate> {
-    let cores = dev.total_cores() as u64;
-    let (y_lo, y_hi) = y_range.unwrap_or((1, cores));
+    // eq. 8 bounds Y directly: X·Y + Y·Z = Y·(X+Z) ≤ PLIO_in with
+    // X, Z ≥ 1, so Y ≤ PLIO_in/2. Scanning Y to total_cores (400 on the
+    // VC1902) only walked 360+ provably-infeasible outer iterations.
+    let y_cap = (dev.plio_in as u64 / 2).max(1);
+    let (y_lo, y_hi) = y_range.unwrap_or((1, y_cap));
     let mut out = Vec::new();
-    for y in y_lo..=y_hi.min(cores) {
+    for y in y_lo..=y_hi.min(y_cap) {
         // x·y ≤ plio_in gives a cheap bound on x; same for z.
         for x in 1..=(dev.plio_in as u64 / y.max(1)).max(1) {
             for z in 1..=(dev.plio_out as u64 / x.max(1)).max(1) {
@@ -212,6 +215,42 @@ mod tests {
         let best = cands[0];
         assert!(best.total_cores() <= 200);
         assert!(best.plio_in() <= 38);
+    }
+
+    #[test]
+    fn tight_y_bound_loses_no_candidates() {
+        // The eq.-8 cap on Y (Y·(X+Z) ≤ PLIO_in, X,Z ≥ 1 → Y ≤ PLIO_in/2)
+        // must yield exactly the candidate set of the old unbounded scan
+        // (Y up to total_cores), on both device models.
+        for d in [AieDevice::vc1902(), AieDevice::half_vc1902()] {
+            let bounded = optimize_array(&d, None);
+            let mut reference = Vec::new();
+            for y in 1..=d.total_cores() as u64 {
+                for x in 1..=(d.plio_in as u64 / y.max(1)).max(1) {
+                    for z in 1..=(d.plio_out as u64 / x.max(1)).max(1) {
+                        let c = ArrayCandidate::new(x, y, z);
+                        if c.feasible(&d) {
+                            reference.push(c);
+                        }
+                    }
+                }
+            }
+            assert_eq!(bounded.len(), reference.len());
+            let mut b: Vec<_> = bounded.iter().map(|c| (c.x, c.y, c.z)).collect();
+            let mut r: Vec<_> = reference.iter().map(|c| (c.x, c.y, c.z)).collect();
+            b.sort_unstable();
+            r.sort_unstable();
+            assert_eq!(b, r);
+        }
+    }
+
+    #[test]
+    fn y_above_cap_is_always_infeasible() {
+        // Directly: any Y > PLIO_in/2 violates eq. 8 for every X, Z ≥ 1.
+        let d = dev();
+        let cap = d.plio_in as u64 / 2;
+        assert!(!ArrayCandidate::new(1, cap + 1, 1).feasible(&d));
+        assert!(optimize_array(&d, Some((cap + 1, cap + 10))).is_empty());
     }
 
     #[test]

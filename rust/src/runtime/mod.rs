@@ -6,13 +6,27 @@
 //! rejects; the text parser reassigns ids). See /opt/xla-example and
 //! DESIGN.md §6.
 //!
-//! PJRT handles are not `Send` (raw pointers), so the coordinator owns a
-//! dedicated *device thread* that constructs the [`Runtime`], loads
-//! executables and serves tile jobs over channels
+//! PJRT handles are not `Send` (raw pointers), so the coordinator owns
+//! dedicated *device threads* that construct the [`Runtime`], load
+//! executables and serve tile jobs over channels
 //! (see [`crate::coordinator`]).
+//!
+//! # Feature gating
+//!
+//! The `xla` crate needs the `xla_extension` C++ bundle, which is not
+//! available in every build environment. The PJRT path is therefore
+//! gated behind the **`pjrt`** cargo feature; without it this module
+//! keeps the same public API but every constructor returns an error, and
+//! the serving stack falls back to the pure-Rust reference backend in
+//! [`crate::coordinator::device`] (numerically equivalent, slower).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::{Path, PathBuf};
+
+#[cfg(not(feature = "pjrt"))]
+use anyhow::anyhow;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 /// Artifact naming scheme shared with `python/compile/aot.py`.
 pub fn artifact_path(dir: &Path, name: &str) -> PathBuf {
@@ -21,15 +35,18 @@ pub fn artifact_path(dir: &Path, name: &str) -> PathBuf {
 
 /// The PJRT CPU runtime: client + loaded executables.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 /// One compiled artifact.
 pub struct Executable {
     pub name: String,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Construct a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -68,6 +85,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with f32 inputs, returning the f32 elements of the single
     /// (1-tuple) output. `inputs` are (data, dims) pairs.
@@ -107,6 +125,53 @@ impl Executable {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Without the `pjrt` feature there is no PJRT client to construct.
+    pub fn cpu() -> Result<Self> {
+        Err(anyhow!(
+            "maxeva was built without the `pjrt` feature — to enable it, \
+             uncomment the `xla` git dependency in rust/Cargo.toml, change \
+             the feature to `pjrt = [\"dep:xla\"]`, and rebuild with \
+             `--features pjrt` (needs the xla_extension C++ bundle); or use \
+             the reference backend (BackendKind::Reference / Auto)"
+        ))
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".into()
+    }
+
+    /// Loading artifacts requires the PJRT compiler.
+    pub fn load(&self, _path: &Path) -> Result<Executable> {
+        Err(anyhow!("built without the `pjrt` feature"))
+    }
+
+    /// Load a named artifact from a directory.
+    pub fn load_named(&self, dir: &Path, name: &str) -> Result<Executable> {
+        self.load(&artifact_path(dir, name))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Unreachable without `pjrt` ([`Runtime::load`] never constructs one).
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        Err(anyhow!("built without the `pjrt` feature"))
+    }
+
+    /// Unreachable without `pjrt` ([`Runtime::load`] never constructs one).
+    pub fn run_i32(&self, _inputs: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+        Err(anyhow!("built without the `pjrt` feature"))
+    }
+}
+
+/// True when the PJRT path was compiled in.
+pub const fn pjrt_compiled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
 /// True if the standard artifact set exists in `dir` (used by tests and
 /// examples to skip gracefully before `make artifacts` has run).
 pub fn artifacts_available(dir: &Path) -> bool {
@@ -135,6 +200,14 @@ mod tests {
         // NOTE: relies on MAXEVA_ARTIFACTS being unset in the test env.
         let d = default_artifacts_dir();
         assert!(d == PathBuf::from("artifacts") || d.is_absolute() || d.exists() || !d.as_os_str().is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        let err = Runtime::cpu().err().expect("stub must refuse to construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(!pjrt_compiled());
     }
 
     // Execution-path tests live in rust/tests/runtime_artifacts.rs (they

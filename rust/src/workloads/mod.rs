@@ -46,6 +46,29 @@ pub fn random_trace(n: usize, seed: u64) -> Vec<MatMulRequest> {
         .collect()
 }
 
+/// Materialize a request trace into a serving batch: reproducible random
+/// f32 operands for each request, ready for
+/// [`crate::coordinator::MatMulServer::run_batch`]. Shared by the e2e
+/// bench, the serving example and the pipeline equivalence tests so the
+/// A/B configurations run byte-identical inputs.
+pub fn materialize_batch(
+    requests: &[MatMulRequest],
+    seed: u64,
+) -> Vec<(MatMulRequest, Vec<f32>, Vec<f32>)> {
+    let mut rng = XorShift64::new(seed);
+    let mut rand_vec = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
+    };
+    requests
+        .iter()
+        .map(|r| {
+            let a = rand_vec((r.m * r.k) as usize);
+            let b = rand_vec((r.k * r.n) as usize);
+            (*r, a, b)
+        })
+        .collect()
+}
+
 /// Batched-GEMM layer sets of a small transformer block (batch×seq = rows)
 /// — used as a domain-specific example workload.
 pub fn transformer_block_gemms(rows: u64, d_model: u64, d_ff: u64) -> Vec<MatMulRequest> {
@@ -88,5 +111,22 @@ mod tests {
     #[should_panic]
     fn sweep_rejects_non_power_of_two() {
         square_sweep(100, 200);
+    }
+
+    #[test]
+    fn materialized_batch_deterministic_and_shaped() {
+        let reqs = random_trace(4, 3);
+        let a = materialize_batch(&reqs, 99);
+        let b = materialize_batch(&reqs, 99);
+        assert_eq!(a.len(), 4);
+        for ((ra, aa, ba), (rb, ab, bb)) in a.iter().zip(&b) {
+            assert_eq!(ra, rb);
+            assert_eq!(aa, ab);
+            assert_eq!(ba, bb);
+            assert_eq!(aa.len() as u64, ra.m * ra.k);
+            assert_eq!(ba.len() as u64, ra.k * ra.n);
+        }
+        let c = materialize_batch(&reqs, 100);
+        assert_ne!(a[0].1, c[0].1, "different seeds must differ");
     }
 }

@@ -1,0 +1,150 @@
+//! Property tests: the pipelined serving engine must produce
+//! **bit-identical** f32 outputs to the synchronous engine
+//! (`pipeline_depth = 1`), for any window depth and device worker count —
+//! the per-output-block reduction order is part of the engine's contract.
+//!
+//! These run the full request → pack → window → device pool → reduce
+//! path on the pure-Rust reference backend (no artifacts, no `pjrt`
+//! feature needed), over a deliberately small 2×4×2 array of 4×4×4
+//! kernels (native tile 8×16×8) so grids are large and cheap.
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::util::prng::XorShift64;
+use maxeva::workloads::{materialize_batch, MatMulRequest};
+
+/// A tiny design the reference backend can chew through quickly:
+/// native (8, 16, 8).
+fn small_cfg(workers: usize, pipeline_depth: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = pipeline_depth;
+    cfg
+}
+
+fn serve(
+    batch: &[(MatMulRequest, Vec<f32>, Vec<f32>)],
+    workers: usize,
+    depth: usize,
+) -> Vec<Vec<f32>> {
+    let mut server = MatMulServer::start(&small_cfg(workers, depth)).unwrap();
+    assert_eq!(server.native(), (8, 16, 8));
+    assert_eq!(server.backend(), "reference");
+    let out = server.run_batch(batch.to_vec()).unwrap();
+    server.shutdown();
+    out
+}
+
+#[test]
+fn pipelined_bit_identical_to_sequential_across_random_batches() {
+    let mut rng = XorShift64::new(0xE0_1);
+    for round in 0..6u64 {
+        let batch_len = rng.gen_range(1, 5) as usize;
+        let reqs: Vec<MatMulRequest> = (0..batch_len)
+            .map(|i| MatMulRequest {
+                id: i as u64,
+                m: rng.gen_range(1, 40),
+                k: rng.gen_range(1, 40),
+                n: rng.gen_range(1, 40),
+            })
+            .collect();
+        let batch = materialize_batch(&reqs, 7_000 + round);
+        let baseline = serve(&batch, 1, 1);
+        for (workers, depth) in [(1, 4), (1, 8), (2, 4), (3, 8)] {
+            let out = serve(&batch, workers, depth);
+            assert_eq!(
+                out, baseline,
+                "round {round}: depth {depth} / {workers} workers diverged from \
+                 the synchronous engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_outputs_match_reference_matmul() {
+    // Bit-equality between engine configurations is necessary but not
+    // sufficient — the shared answer must also be the right matmul
+    // (tiled reduction order differs from the naive reference, so this
+    // one is a tolerance check).
+    let reqs = vec![
+        MatMulRequest { id: 0, m: 23, k: 31, n: 17 },
+        MatMulRequest { id: 1, m: 8, k: 16, n: 8 },
+        MatMulRequest { id: 2, m: 33, k: 5, n: 40 },
+    ];
+    let batch = materialize_batch(&reqs, 55);
+    let outs = serve(&batch, 2, 8);
+    for ((req, a, b), out) in batch.iter().zip(&outs) {
+        let want = matmul_ref_f32(a, b, req.m as usize, req.k as usize, req.n as usize);
+        assert_eq!(out.len(), want.len());
+        for (i, (x, y)) in out.iter().zip(&want).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-3,
+                "req {} idx {i}: {x} vs {y}",
+                req.id
+            );
+        }
+    }
+}
+
+#[test]
+fn depth_toggle_on_live_server_is_stable() {
+    // The A/B knob used by benches: flipping pipeline_depth between
+    // batches on one server must not change results.
+    let reqs = vec![
+        MatMulRequest { id: 0, m: 30, k: 20, n: 25 },
+        MatMulRequest { id: 1, m: 9, k: 33, n: 14 },
+    ];
+    let batch = materialize_batch(&reqs, 91);
+    let mut server = MatMulServer::start(&small_cfg(2, 4)).unwrap();
+    let first = server.run_batch(batch.clone()).unwrap();
+    server.set_pipeline_depth(1);
+    let second = server.run_batch(batch.clone()).unwrap();
+    server.set_pipeline_depth(16);
+    let third = server.run_batch(batch).unwrap();
+    assert_eq!(first, second);
+    assert_eq!(first, third);
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, 6);
+    assert!(stats.invocations > 0);
+    assert!(stats.device_time_s > 0.0);
+    assert!(stats.mean_in_flight >= 1.0);
+    assert!(stats.max_in_flight <= 16);
+    server.shutdown();
+}
+
+#[test]
+fn zero_tile_requests_complete_and_are_recorded() {
+    // k = 0 → zero tiles: the output is the zeroed m×n matrix and the
+    // request still shows up in serving stats.
+    let req = MatMulRequest { id: 7, m: 4, k: 0, n: 4 };
+    let mut server = MatMulServer::start(&small_cfg(1, 4)).unwrap();
+    let outs = server.run_batch(vec![(req, vec![], vec![])]).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0], vec![0.0f32; 16]);
+    let stats = server.stats();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.invocations, 0);
+    server.shutdown();
+}
+
+#[test]
+fn window_stays_synchronous_at_depth_one() {
+    let reqs = vec![MatMulRequest { id: 0, m: 20, k: 20, n: 20 }];
+    let batch = materialize_batch(&reqs, 17);
+    let mut server = MatMulServer::start(&small_cfg(2, 1)).unwrap();
+    let _ = server.run_batch(batch).unwrap();
+    let stats = server.stats();
+    // depth 1 → exactly one tile in flight at every sample.
+    assert_eq!(stats.pipeline_depth, 1);
+    assert!((stats.mean_in_flight - 1.0).abs() < 1e-12);
+    assert_eq!(stats.max_in_flight, 1);
+    server.shutdown();
+}

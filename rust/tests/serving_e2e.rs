@@ -3,7 +3,7 @@
 //! missing.
 
 use maxeva::arch::precision::Precision;
-use maxeva::config::schema::{DesignConfig, ServeConfig};
+use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
 use maxeva::coordinator::tiler::matmul_ref_f32;
 use maxeva::runtime::{artifacts_available, default_artifacts_dir};
@@ -107,6 +107,36 @@ fn batched_requests_all_correct_and_interleaved() {
     // submitted together (dynamic batching fairness): its latency must be
     // well under the batch wall time.
     assert!(stats.mean_latency_ms > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn reference_backend_serves_without_artifacts() {
+    // The pure-Rust backend needs no artifacts: the full serving path
+    // (pack → window → pool → reduce) runs in any build environment.
+    let mut cfg = serve_cfg();
+    cfg.backend = BackendKind::Reference;
+    let mut server = MatMulServer::start(&cfg).unwrap();
+    assert_eq!(server.backend(), "reference");
+    assert!(server.period_cycles() > 0.0, "period must come from the simulator");
+    assert!(server.freq_hz() > 0.0);
+    let mut rng = XorShift64::new(37);
+    // Sub-native sizes → one tile each, cheap even in scalar Rust.
+    for (id, (m, k, n)) in [(0u64, (64u64, 64u64, 64u64)), (1, (100, 50, 70))] {
+        let a = rand_vec((m * k) as usize, &mut rng);
+        let b = rand_vec((k * n) as usize, &mut rng);
+        let out = server
+            .execute(MatMulRequest { id, m, k, n }, a.clone(), b.clone())
+            .unwrap();
+        let want = matmul_ref_f32(&a, &b, m as usize, k as usize, n as usize);
+        for (i, (x, y)) in out.iter().zip(&want).enumerate() {
+            assert!((x - y).abs() < 1e-3, "{m}x{k}x{n} idx {i}: {x} vs {y}");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.invocations, 2);
+    assert!(stats.device_time_s > 0.0);
     server.shutdown();
 }
 
