@@ -52,17 +52,41 @@ fn explore(dev: &AieDevice, prec: Precision) {
     for tier in top_tiers(&arrays, 4) {
         for cand in tier.iter().take(3) {
             let Some(pat) = Pattern::for_y(cand.y) else {
-                t.row(vec![cand.label(), cand.matmul_kernels().to_string(), "—".into(), "no pattern".into(), "—".into(), "—".into(), "—".into()]);
+                t.row(vec![
+                    cand.label(),
+                    cand.matmul_kernels().to_string(),
+                    "—".into(),
+                    "no pattern".into(),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                ]);
                 continue;
             };
             if cand.groups() as usize > capacity(dev, pat) {
-                t.row(vec![cand.label(), cand.matmul_kernels().to_string(), pat.to_string(), "no capacity".into(), "—".into(), "—".into(), "—".into()]);
+                t.row(vec![
+                    cand.label(),
+                    cand.matmul_kernels().to_string(),
+                    pat.to_string(),
+                    "no capacity".into(),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                ]);
                 continue;
             }
             let placed = match place_design(dev, *cand, pat, kernel) {
                 Ok(p) => p,
                 Err(e) => {
-                    t.row(vec![cand.label(), cand.matmul_kernels().to_string(), pat.to_string(), format!("place: {e}"), "—".into(), "—".into(), "—".into()]);
+                    t.row(vec![
+                        cand.label(),
+                        cand.matmul_kernels().to_string(),
+                        pat.to_string(),
+                        format!("place: {e}"),
+                        "—".into(),
+                        "—".into(),
+                        "—".into(),
+                    ]);
                     continue;
                 }
             };
@@ -88,10 +112,20 @@ fn explore(dev: &AieDevice, prec: Precision) {
                 }
                 Err(e) => {
                     let reason = match e {
-                        maxeva::routing::router::RoutingError::NoSlack { .. } => "FAIL (no slack)".to_string(),
+                        maxeva::routing::router::RoutingError::NoSlack { .. } => {
+                            "FAIL (no slack)".to_string()
+                        }
                         other => format!("FAIL ({other})"),
                     };
-                    t.row(vec![cand.label(), cand.matmul_kernels().to_string(), pat.to_string(), reason, "—".into(), "—".into(), "—".into()]);
+                    t.row(vec![
+                        cand.label(),
+                        cand.matmul_kernels().to_string(),
+                        pat.to_string(),
+                        reason,
+                        "—".into(),
+                        "—".into(),
+                        "—".into(),
+                    ]);
                 }
             }
         }

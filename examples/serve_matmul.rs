@@ -1,23 +1,36 @@
-//! **End-to-end driver** (the required full-system example): serve a
-//! stream of batched MatMul requests through the complete stack —
+//! **End-to-end driver** (the required full-system example): serve
+//! MatMul traffic through the complete stack —
 //!
-//!   request trace → coordinator (router + dynamic tile batcher)
-//!     → device thread → PJRT CPU executing the AOT-compiled JAX/Pallas
-//!       artifact (the 13×4×6 design's native 416×128×192 MatMul)
-//!     → accumulation → verification against a host reference
+//!   request stream → streaming admission queue (bounded, block/reject
+//!     backpressure) → scheduler (tile-major packing + pipelined
+//!     in-flight window) → device worker pool → PJRT CPU executing the
+//!     AOT-compiled JAX/Pallas artifact (or the pure-Rust reference
+//!     backend) → ordered reduction → per-request completion handles
+//!     → verification against host references
 //!
 //! and report latency + throughput, both wall-clock (CPU emulation) and
 //! device-time (VCK190-equivalent, from the calibrated simulator).
+//! Demonstrates both serving modes:
+//!
+//!   1. closed fp32 batches via `run_batch` (the PR 1 path, now a thin
+//!      wrapper over the stream), and
+//!   2. an **open mixed fp32/int8 request stream** via `submit` /
+//!      `RequestHandle` — per-request precision through one window.
 //!
 //!     make artifacts && cargo run --release --example serve_matmul
+//!
+//! (Without artifacts the reference backend serves the same stack.)
 
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
-use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::stats::percentile;
-use maxeva::workloads::{materialize_batch, random_trace, transformer_block_gemms};
+use maxeva::workloads::{
+    materialize_batch, materialize_mixed, mixed_trace, random_trace, transformer_block_gemms,
+    MatOutput, Operands,
+};
 
 fn main() {
     let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
@@ -31,21 +44,25 @@ fn main() {
         }
     };
     println!(
-        "server up — design 13x4x6 fp32, native MatMul {:?}, period {:.0} cyc @ {:.2} GHz",
+        "server up — design 13x4x6, native fp32 {:?} / int8 {:?}, period {:.0} cyc @ {:.2} GHz",
         server.native(),
+        server.native_for(Precision::Int8).unwrap(),
         server.period_cycles(),
         server.freq_hz() / 1e9,
     );
     println!(
-        "backend {} · {} device workers · pipeline window {}",
+        "backend {} · {} device workers · pipeline window {} · queue depth {} ({})",
         server.backend(),
         server.workers(),
         server.pipeline_depth(),
+        server.queue_depth(),
+        cfg.admission,
     );
 
-    // Workload 1: a random GEMM trace (DL-typical power-of-two shapes).
+    // Workload 1: a random fp32 GEMM trace as a closed batch
+    // (DL-typical power-of-two shapes).
     let trace = random_trace(6, 11);
-    println!("\n[1] random trace: {} requests", trace.len());
+    println!("\n[1] closed fp32 batch: {} requests", trace.len());
     let batch = materialize_batch(&trace, 4242);
     // Keep references for verification.
     let refs: Vec<Vec<f32>> = batch
@@ -61,11 +78,54 @@ fn main() {
     }
     println!("    verified: max abs error {max_err:.2e} across {} outputs", outs.len());
 
-    // Workload 2: the GEMMs of one transformer block (batch·seq = 512,
+    // Workload 2: an OPEN mixed fp32/int8 stream — requests admitted
+    // one by one through the bounded queue (blocking backpressure) and
+    // retired out of band via per-request handles. Int8 results are
+    // exact i32 accumulations; fp32 checked within tolerance.
+    let stream = mixed_trace(8, 23);
+    let int8_count = stream.iter().filter(|r| r.precision == Precision::Int8).count();
+    println!(
+        "\n[2] open mixed stream: {} requests ({} int8, {} fp32)",
+        stream.len(),
+        int8_count,
+        stream.len() - int8_count
+    );
+    let materialized = materialize_mixed(&stream, 9001);
+    let handles: Vec<_> = materialized
+        .iter()
+        .map(|(req, ops)| {
+            server
+                .submit(*req, ops.clone())
+                .expect("admission (blocking policy) must succeed")
+        })
+        .collect();
+    let mut exact_int8 = 0usize;
+    let mut max_err = 0.0f32;
+    for ((req, ops), handle) in materialized.iter().zip(handles) {
+        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
+        match (ops, handle.wait().expect("request must retire")) {
+            (Operands::I32 { a, b }, MatOutput::I32(got)) => {
+                assert_eq!(got, matmul_ref_i32(a, b, m, k, n), "int8 req {}", req.id);
+                exact_int8 += 1;
+            }
+            (Operands::F32 { a, b }, MatOutput::F32(got)) => {
+                for (x, y) in got.iter().zip(&matmul_ref_f32(a, b, m, k, n)) {
+                    max_err = max_err.max((x - y).abs());
+                }
+            }
+            _ => unreachable!("output precision follows request precision"),
+        }
+    }
+    println!(
+        "    verified: {exact_int8} int8 results bit-exact vs i32 reference, \
+         fp32 max abs error {max_err:.2e}"
+    );
+
+    // Workload 3: the GEMMs of one transformer block (batch·seq = 512,
     // d_model 768, d_ff 3072) — the kind of DL workload the intro
     // motivates.
     let gemms = transformer_block_gemms(512, 768, 3072);
-    println!("\n[2] transformer block GEMMs: {} requests", gemms.len());
+    println!("\n[3] transformer block GEMMs: {} requests", gemms.len());
     let batch = materialize_batch(&gemms, 4243);
     server.run_batch(batch).expect("transformer batch");
 

@@ -95,8 +95,16 @@ fn main() {
     let (m, s, _) = common::time_it(2, 10, || {
         for pat in [(12u64, 4u64, 6u64, Pattern::P1), (12, 3, 8, Pattern::P2)] {
             std::hint::black_box(
-                evaluate_config(&dev, pat.0, pat.1, pat.2, pat.3, Precision::Int8, &SimConfig::default())
-                    .unwrap(),
+                evaluate_config(
+                    &dev,
+                    pat.0,
+                    pat.1,
+                    pat.2,
+                    pat.3,
+                    Precision::Int8,
+                    &SimConfig::default(),
+                )
+                .unwrap(),
             );
         }
     });

@@ -1,33 +1,73 @@
 //! Bench: end-to-end serving throughput/latency through the whole stack
-//! (coordinator → device worker pool → PJRT artifact or reference
-//! backend). Reports wall-clock (CPU emulation) and device-time
-//! (VCK190-equivalent) numbers separately — never conflated.
+//! (streaming coordinator → device worker pool → PJRT artifact or
+//! reference backend). Reports wall-clock (CPU emulation) and
+//! device-time (VCK190-equivalent) numbers separately — never conflated.
 //!
 //! The centerpiece is the **pipeline A/B**: the same materialized batch
 //! is served with `pipeline_depth = 1` (the old synchronous
 //! one-tile-at-a-time engine) and with the configured window, side by
-//! side, asserting the outputs are bit-identical.
+//! side, asserting the outputs are bit-identical. A mixed fp32/int8
+//! streaming section exercises the open admission queue the same way.
 //!
 //! Prefers the PJRT artifacts (`make artifacts` + `--features pjrt`);
 //! falls back to the pure-Rust reference backend so the pipeline A/B
 //! runs anywhere.
 //!
-//!     cargo bench --bench e2e_serving
+//!     cargo bench --bench e2e_serving -- [--quick] [--json PATH]
+//!
+//! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
+//! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
+//! as a workflow artifact by the `bench-smoke` CI job).
 
 mod common;
 
 use maxeva::arch::precision::Precision;
+use maxeva::config::json::Json;
 use maxeva::config::schema::{DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
 use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::prng::XorShift64;
-use maxeva::workloads::{materialize_batch, MatMulRequest};
+use maxeva::workloads::{materialize_batch, materialize_mixed, mixed_trace, MatMulRequest};
+use std::collections::BTreeMap;
 
 fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
     (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
 }
 
+fn ab_json(label: &str, depths: &[usize], walls: &[f64], occ: &[(f64, usize)]) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("label".into(), Json::Str(label.into()));
+    o.insert(
+        "runs".into(),
+        Json::Arr(
+            depths
+                .iter()
+                .zip(walls)
+                .zip(occ)
+                .map(|((&d, &w), &(om, ox))| {
+                    let mut r = BTreeMap::new();
+                    r.insert("pipeline_depth".into(), Json::Num(d as f64));
+                    r.insert("wall_s".into(), Json::Num(w));
+                    r.insert("occupancy_mean".into(), Json::Num(om));
+                    r.insert("occupancy_max".into(), Json::Num(ox as f64));
+                    Json::Obj(r)
+                })
+                .collect(),
+        ),
+    );
+    o.insert("speedup".into(), Json::Num(walls[0] / walls[walls.len() - 1]));
+    Json::Obj(o)
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
     cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
     let mut server = match MatMulServer::start(&cfg) {
@@ -38,9 +78,11 @@ fn main() {
         }
     };
     println!(
-        "e2e serving bench — design 13x4x6 fp32, native {:?}, period {:.0} cyc @ {:.2} GHz, \
-         backend {}, {} device workers",
+        "e2e serving bench{} — design 13x4x6, native fp32 {:?} / int8 {:?}, period {:.0} cyc \
+         @ {:.2} GHz, backend {}, {} device workers",
+        if quick { " (quick)" } else { "" },
         server.native(),
+        server.native_for(Precision::Int8).unwrap(),
         server.period_cycles(),
         server.freq_hz() / 1e9,
         server.backend(),
@@ -48,17 +90,19 @@ fn main() {
     );
 
     let mut rng = XorShift64::new(1);
+    let mut json_sections: Vec<Json> = Vec::new();
 
     common::banner("single native tile (416x128x192)");
     let (m, k, n) = (416u64, 128u64, 192u64);
     let a = rand_vec((m * k) as usize, &mut rng);
     let b = rand_vec((k * n) as usize, &mut rng);
     let mut id = 0u64;
-    let (mean, sd, min) = common::time_it(2, 8, || {
+    let (warmup, iters) = if quick { (1, 2) } else { (2, 8) };
+    let (mean, sd, min) = common::time_it(warmup, iters, || {
         id += 1;
         std::hint::black_box(
             server
-                .execute(MatMulRequest { id, m, k, n }, a.clone(), b.clone())
+                .execute(MatMulRequest::f32(id, m, k, n), a.clone(), b.clone())
                 .unwrap(),
         );
     });
@@ -72,13 +116,14 @@ fn main() {
         5442.0
     );
 
-    common::banner("pipeline A/B: batched 512^3 requests (4-way)");
-    let size = 512u64;
-    let reqs: Vec<MatMulRequest> = (0..4)
-        .map(|i| MatMulRequest { id: 100 + i, m: size, k: size, n: size })
+    let size = if quick { 192u64 } else { 512 };
+    let batched = if quick { 2 } else { 4 };
+    common::banner(&format!("pipeline A/B: batched {size}^3 requests ({batched}-way)"));
+    let reqs: Vec<MatMulRequest> = (0..batched)
+        .map(|i| MatMulRequest::f32(100 + i, size, size, size))
         .collect();
     let batch = materialize_batch(&reqs, 2024);
-    let ops = 4.0 * 2.0 * (size as f64).powi(3);
+    let ops = batched as f64 * 2.0 * (size as f64).powi(3);
 
     let configured_depth = cfg.pipeline_depth;
     // Untimed warmup so first-touch allocation / cache warming isn't
@@ -86,8 +131,10 @@ fn main() {
     server.set_pipeline_depth(configured_depth);
     let _ = server.run_batch(batch.clone()).unwrap();
     let mut walls = Vec::new();
+    let mut occs = Vec::new();
     let mut outs_by_depth = Vec::new();
-    for depth in [1usize, configured_depth] {
+    let depths = [1usize, configured_depth];
+    for &depth in &depths {
         server.set_pipeline_depth(depth);
         let t0 = std::time::Instant::now();
         let outs = server.run_batch(batch.clone()).unwrap();
@@ -100,6 +147,7 @@ fn main() {
             outs.len()
         );
         walls.push(wall);
+        occs.push((occ_mean, occ_max));
         outs_by_depth.push(outs);
     }
     let identical = outs_by_depth[0] == outs_by_depth[1];
@@ -112,14 +160,23 @@ fn main() {
         identical,
         "pipelined outputs must be bit-identical to the synchronous engine"
     );
+    json_sections.push(ab_json("square_batch", &depths, &walls, &occs));
 
     common::banner("pipeline A/B: mixed-size batch (fairness under interleaving)");
-    let mixed: Vec<MatMulRequest> = vec![
-        MatMulRequest { id: 200, m: 64, k: 64, n: 64 },
-        MatMulRequest { id: 201, m: 1024, k: 512, n: 512 },
-        MatMulRequest { id: 202, m: 500, k: 200, n: 300 },
-        MatMulRequest { id: 203, m: 768, k: 768, n: 256 },
-    ];
+    let mixed: Vec<MatMulRequest> = if quick {
+        vec![
+            MatMulRequest::f32(200, 64, 64, 64),
+            MatMulRequest::f32(201, 384, 192, 192),
+            MatMulRequest::f32(202, 250, 100, 150),
+        ]
+    } else {
+        vec![
+            MatMulRequest::f32(200, 64, 64, 64),
+            MatMulRequest::f32(201, 1024, 512, 512),
+            MatMulRequest::f32(202, 500, 200, 300),
+            MatMulRequest::f32(203, 768, 768, 256),
+        ]
+    };
     let mixed_ops: f64 = mixed.iter().map(|r| 2.0 * r.macs() as f64).sum();
     let mixed_batch = materialize_batch(&mixed, 4096);
     // Untimed warmup (new output-matrix shapes → fresh allocations).
@@ -127,7 +184,7 @@ fn main() {
     let mut mixed_walls = Vec::new();
     let mut mixed_outs = Vec::new();
     let mut mixed_occ = Vec::new();
-    for depth in [1usize, configured_depth] {
+    for &depth in &depths {
         server.set_pipeline_depth(depth);
         let t0 = std::time::Instant::now();
         let outs = server.run_batch(mixed_batch.clone()).unwrap();
@@ -154,6 +211,41 @@ fn main() {
         mixed_outs[0] == mixed_outs[1]
     );
     assert!(mixed_outs[0] == mixed_outs[1]);
+    json_sections.push(ab_json("mixed_size_batch", &depths, &mixed_walls, &mixed_occ));
+
+    common::banner("streaming admission: open mixed fp32/int8 stream");
+    let stream_len = if quick { 6 } else { 12 };
+    let trace = mixed_trace(stream_len, 33);
+    let stream = materialize_mixed(&trace, 808);
+    let mut stream_walls = Vec::new();
+    let mut stream_outs = Vec::new();
+    for &depth in &depths {
+        server.set_pipeline_depth(depth);
+        let t0 = std::time::Instant::now();
+        // Open-queue submission: all requests admitted up front (default
+        // blocking policy, queue_depth 64), retired as they finish.
+        let handles: Vec<_> = stream
+            .iter()
+            .map(|(req, ops)| server.submit(*req, ops.clone()).unwrap())
+            .collect();
+        let outs: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        stream_walls.push(t0.elapsed().as_secs_f64());
+        stream_outs.push(outs);
+    }
+    let int8_count = trace.iter().filter(|r| r.precision == Precision::Int8).count();
+    println!(
+        "  {} requests ({} int8 / {} fp32): depth 1 wall {:.3} s, depth {} wall {:.3} s \
+         → {:.2}×; bit-identical: {}",
+        stream_len,
+        int8_count,
+        stream_len - int8_count,
+        stream_walls[0],
+        configured_depth,
+        stream_walls[1],
+        stream_walls[0] / stream_walls[1],
+        stream_outs[0] == stream_outs[1]
+    );
+    assert!(stream_outs[0] == stream_outs[1]);
 
     let stats = server.stats();
     println!("\n==== cumulative serving stats ====");
@@ -171,5 +263,23 @@ fn main() {
          padding, cf. Fig. 8)",
         stats.device_ops_per_sec / 1e9
     );
+
+    if let Some(path) = json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_serving".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("backend".into(), Json::Str(server.backend().into()));
+        o.insert("workers".into(), Json::Num(server.workers() as f64));
+        o.insert("configured_depth".into(), Json::Num(configured_depth as f64));
+        o.insert("sections".into(), Json::Arr(json_sections));
+        o.insert(
+            "stream_speedup_depth1_over_depthN".into(),
+            Json::Num(stream_walls[0] / stream_walls[1]),
+        );
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote A/B report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
     server.shutdown();
 }

@@ -27,7 +27,9 @@ use maxeva::workloads::random_trace;
 fn main() {
     let dev = AieDevice::vc1902();
 
-    common::banner("(1) precision sweep — full pipeline on the best routable design per precision");
+    common::banner(
+        "(1) precision sweep — full pipeline on the best routable design per precision",
+    );
     println!("(int16/bf16 model constants are engineering estimates — DESIGN.md §7)");
     let mut t = Table::new(vec![
         "precision", "kernel M×K×N", "kernel eff", "design", "throughput", "peak frac",
@@ -101,7 +103,13 @@ fn main() {
         })
         .sum::<f64>()
         / reqs.len() as f64;
-    let mut t = Table::new(vec!["offered load", "utilization", "mean lat (ms)", "p99 lat (ms)", "mean queue (ms)"]);
+    let mut t = Table::new(vec![
+        "offered load",
+        "utilization",
+        "mean lat (ms)",
+        "p99 lat (ms)",
+        "mean queue (ms)",
+    ]);
     let mut load_series = Series::new(vec!["load", "mean_ms", "p99_ms"]);
     for load in [0.2, 0.5, 0.8, 0.9, 0.95, 0.99] {
         let rep = replay_trace(
@@ -135,7 +143,9 @@ fn main() {
             if c.groups() as usize > maxeva::placement::placer::capacity(&d2, pat) {
                 continue;
             }
-            if let Ok(row) = evaluate_config(&d2, c.x, c.y, c.z, pat, Precision::Int8, &SimConfig::default()) {
+            let row =
+                evaluate_config(&d2, c.x, c.y, c.z, pat, Precision::Int8, &SimConfig::default());
+            if let Ok(row) = row {
                 chosen = Some((c.label(), row));
                 break;
             }

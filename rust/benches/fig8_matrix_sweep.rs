@@ -56,7 +56,10 @@ fn main() {
         print!("{}", t.render());
         // The paper's qualitative claim: near-peak for ≥ ~2K matrices.
         let at2k = series[3];
-        println!("≥2K sizes at ≥{:.1}% of peak (paper: 'almost peak performance')", at2k * 100.0);
+        println!(
+            "≥2K sizes at ≥{:.1}% of peak (paper: 'almost peak performance')",
+            at2k * 100.0
+        );
     }
 
     common::banner("tiling-model timing");

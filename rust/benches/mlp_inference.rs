@@ -25,9 +25,16 @@ fn main() {
 
     println!("§V-B4 — MLP inference estimate (13x4x6 fp32 design)");
     let layers = charm_mlp();
-    let mut t = Table::new(vec!["layer (B×in×out)", "GFLOP", "invocations", "useful ratio", "device ms"]);
+    let mut t = Table::new(vec![
+        "layer (B×in×out)",
+        "GFLOP",
+        "invocations",
+        "useful ratio",
+        "device ms",
+    ]);
     for l in &layers {
-        let w = TiledWorkload::new(l.batch, l.in_features, l.out_features, &d.candidate(), &d.kernel());
+        let w =
+            TiledWorkload::new(l.batch, l.in_features, l.out_features, &d.candidate(), &d.kernel());
         t.row(vec![
             format!("{}x{}x{}", l.batch, l.in_features, l.out_features),
             format!("{:.1}", 2.0 * l.macs() as f64 / 1e9),

@@ -63,7 +63,10 @@ impl CharmDesign {
             },
             // No CHARM baseline exists for the extension precisions.
             Precision::Int16 | Precision::Bf16 => {
-                panic!("CHARM published only fp32/int8 designs (extension precisions have no baseline)")
+                panic!(
+                    "CHARM published only fp32/int8 designs (extension precisions have no \
+                     baseline)"
+                )
             }
             // int8: 192 cores only (routing congestion, [34]).
             Precision::Int8 => CharmDesign {

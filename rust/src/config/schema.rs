@@ -61,6 +61,24 @@ impl DesignConfig {
             .ok_or_else(|| ConfigError::Invalid("device", self.device.clone()))
     }
 
+    /// The same array geometry (device, X/Y/Z, pattern) in another
+    /// precision. When the current kernel is the paper kernel for the
+    /// current precision, the sibling uses the paper kernel of the new
+    /// precision (the kernels differ — int8 is 32×128×32, fp32 is
+    /// 32×32×32); an explicitly customized kernel is kept as-is. This is
+    /// how the serving engine derives its int8 tile geometry from an
+    /// fp32 design (and vice versa).
+    pub fn with_precision(&self, precision: Precision) -> DesignConfig {
+        let mut d = self.clone();
+        let cur = MatMulKernel::paper_kernel(d.precision);
+        if (d.m, d.k, d.n) == (cur.m, cur.k, cur.n) {
+            let kp = MatMulKernel::paper_kernel(precision);
+            (d.m, d.k, d.n) = (kp.m, kp.k, kp.n);
+        }
+        d.precision = precision;
+        d
+    }
+
     pub fn candidate(&self) -> ArrayCandidate {
         ArrayCandidate::new(self.x, self.y, self.z)
     }
@@ -218,6 +236,38 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
+/// What `MatMulServer::submit` does when the admission queue is full
+/// (`queue_depth` open requests already admitted and not yet retired).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Block the submitting thread until a slot frees (classic
+    /// backpressure — slows producers down to the engine's pace).
+    #[default]
+    Block,
+    /// Fail fast with [`crate::coordinator::server::QueueFull`] so the
+    /// caller can shed load or retry.
+    Reject,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "block" => Some(AdmissionPolicy::Block),
+            "reject" => Some(AdmissionPolicy::Reject),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Reject => "reject",
+        })
+    }
+}
+
 /// Serving-layer configuration (the end-to-end coordinator).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -226,8 +276,11 @@ pub struct ServeConfig {
     pub artifacts_dir: String,
     /// Device worker threads executing tile jobs.
     pub workers: usize,
-    /// Maximum queued requests before backpressure.
+    /// Maximum open (admitted, not yet retired) requests before
+    /// admission backpressure kicks in; `0` = unbounded.
     pub queue_depth: usize,
+    /// Default backpressure policy when the queue is full.
+    pub admission: AdmissionPolicy,
     /// Tiles kept in flight by the serving pipeline (software ping-pong
     /// window). `1` reproduces the synchronous one-tile-at-a-time engine.
     pub pipeline_depth: usize,
@@ -242,6 +295,7 @@ impl ServeConfig {
             artifacts_dir: "artifacts".into(),
             workers: 2,
             queue_depth: 64,
+            admission: AdmissionPolicy::Block,
             pipeline_depth: 4,
             backend: BackendKind::Auto,
         }
@@ -253,6 +307,7 @@ impl ServeConfig {
         o.insert("artifacts_dir".into(), Json::Str(self.artifacts_dir.clone()));
         o.insert("workers".into(), Json::Num(self.workers as f64));
         o.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        o.insert("admission".into(), Json::Str(self.admission.to_string()));
         o.insert("pipeline_depth".into(), Json::Num(self.pipeline_depth as f64));
         o.insert("backend".into(), Json::Str(self.backend.to_string()));
         Json::Obj(o)
@@ -266,6 +321,11 @@ impl ServeConfig {
             Some(s) => BackendKind::parse(s)
                 .ok_or_else(|| ConfigError::Invalid("backend", s.to_string()))?,
         };
+        let admission = match v.get("admission").and_then(Json::as_str) {
+            None => AdmissionPolicy::Block,
+            Some(s) => AdmissionPolicy::parse(s)
+                .ok_or_else(|| ConfigError::Invalid("admission", s.to_string()))?,
+        };
         Ok(ServeConfig {
             design,
             artifacts_dir: v
@@ -275,6 +335,7 @@ impl ServeConfig {
                 .to_string(),
             workers: v.get("workers").and_then(Json::as_u64).unwrap_or(2) as usize,
             queue_depth: v.get("queue_depth").and_then(Json::as_u64).unwrap_or(64) as usize,
+            admission,
             pipeline_depth: v
                 .get("pipeline_depth")
                 .and_then(Json::as_u64)
@@ -360,6 +421,7 @@ mod tests {
         assert_eq!(c.artifacts_dir, "artifacts");
         assert_eq!(c.pipeline_depth, 4);
         assert_eq!(c.backend, BackendKind::Auto);
+        assert_eq!(c.admission, AdmissionPolicy::Block);
     }
 
     #[test]
@@ -367,8 +429,42 @@ mod tests {
         let mut c = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
         c.pipeline_depth = 8;
         c.backend = BackendKind::Reference;
+        c.admission = AdmissionPolicy::Reject;
+        c.queue_depth = 3;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn admission_policy_parse_display_roundtrip() {
+        for p in [AdmissionPolicy::Block, AdmissionPolicy::Reject] {
+            assert_eq!(AdmissionPolicy::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::parse("drop"), None);
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"admission":"shed"}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("admission", _))
+        ));
+    }
+
+    #[test]
+    fn with_precision_tracks_paper_kernels() {
+        // Paper-kernel designs swap to the sibling precision's paper
+        // kernel; explicit custom kernels are preserved.
+        let fp = DesignConfig::flagship(Precision::Fp32);
+        assert_eq!(fp.with_precision(Precision::Int8), DesignConfig::flagship(Precision::Int8));
+        assert_eq!(fp.with_precision(Precision::Fp32), fp);
+
+        let mut small = DesignConfig::flagship(Precision::Fp32);
+        (small.m, small.k, small.n) = (4, 4, 4);
+        let sib = small.with_precision(Precision::Int8);
+        assert_eq!(sib.precision, Precision::Int8);
+        assert_eq!((sib.m, sib.k, sib.n), (4, 4, 4));
+        assert_eq!((sib.x, sib.y, sib.z), (13, 4, 6));
     }
 
     #[test]

@@ -7,30 +7,42 @@
 //! Jobs are **tagged** and carry `Arc`'d operand tiles from the server's
 //! tile-major pools — submission is zero-copy, the worker reads the
 //! slices in place. Every job names its own completion sender, and the
-//! serving engine points *all* of a batch's jobs at one channel, so a
-//! single `recv` loop drains completions for a whole in-flight window
-//! regardless of which worker executed which tile. This is the host-side
-//! mirror of the paper's ping-pong buffering (eq. 2): while a worker
-//! multiplies tile *i*, the host packs/accumulates tiles *i±window*.
+//! serving engine points *all* of a window's jobs at one channel, so a
+//! single `recv` loop drains completions regardless of which worker
+//! executed which tile. This is the host-side mirror of the paper's
+//! ping-pong buffering (eq. 2): while a worker multiplies tile *i*, the
+//! host packs/accumulates tiles *i±window*.
 //!
-//! Each invocation advances the simulated device clock by the design's
-//! steady-state iteration period, giving VCK190-equivalent device time
-//! (the clock sums busy periods across workers, i.e. it stays the serial
-//! device-equivalent time).
+//! # Precision
+//!
+//! The pool is **dual-precision**: a job's payload selects the fp32 or
+//! the int8 (i32-carried, i32-accumulating) datapath per tile, mirroring
+//! the paper's two headline designs (5.44 TFLOPs fp32 / 77.01 TOPs int8).
+//! Each precision has its own native tile size and its own steady-state
+//! iteration period from the simulator; every invocation advances the
+//! simulated device clock by the period of the precision it ran in,
+//! giving VCK190-equivalent device time (the clock sums busy periods
+//! across workers, i.e. it stays the serial device-equivalent time).
 //!
 //! # Backends
 //!
-//! * **PJRT** — the AOT-compiled JAX/Pallas artifact, one
-//!   `Runtime`/`Executable` per worker thread (handles are not `Send`).
-//!   Needs the `pjrt` cargo feature and `make artifacts`.
-//! * **Reference** — a pure-Rust native-tile matmul with identical tile
-//!   semantics. No artifacts needed; lets the full serving stack (and its
-//!   equivalence tests) run in any build environment.
+//! * **PJRT** — the AOT-compiled JAX/Pallas artifacts, one
+//!   `Runtime`/`Executable` set per worker thread (handles are not
+//!   `Send`). The fp32 artifact is required; the int8 artifact is loaded
+//!   when present and int8 jobs fail cleanly when it is not. Needs the
+//!   `pjrt` cargo feature and `make artifacts`.
+//! * **Reference** — pure-Rust native-tile matmuls (f32 and wrapping-i32)
+//!   with identical tile semantics. No artifacts needed; lets the full
+//!   serving stack (and its equivalence tests) run in any build
+//!   environment.
 
+use crate::arch::precision::Precision;
 use crate::config::schema::{BackendKind, DesignConfig};
-use crate::coordinator::tiler::matmul_ref_f32;
+use crate::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 use crate::placement::placer::place_design;
-use crate::runtime::{artifacts_available, pjrt_compiled, Runtime};
+use crate::runtime::{
+    artifact_path, artifacts_available, named_artifact_available, pjrt_compiled, Runtime,
+};
 use crate::sim::engine::{simulate_design, SimConfig};
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
@@ -39,13 +51,38 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// A tagged native-size f32 tile job: `a` is `nm×nk`, `b` is `nk×nn`
-/// row-major, shared zero-copy from the server's packed pools.
-pub struct TileJobF32 {
+/// Operand tiles of one job, typed by precision. `F32` carries an
+/// `nm×nk` A and `nk×nn` B in the fp32 geometry; `I32` likewise in the
+/// int8 geometry (int8-range values carried as i32, matching
+/// [`crate::runtime::Executable::run_i32`]). Tiles are shared zero-copy
+/// from the server's packed pools.
+pub enum TilePayload {
+    F32 { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    I32 { a: Arc<Vec<i32>>, b: Arc<Vec<i32>> },
+}
+
+impl TilePayload {
+    /// The precision whose datapath (and device period) this job uses.
+    pub fn precision(&self) -> Precision {
+        match self {
+            TilePayload::F32 { .. } => Precision::Fp32,
+            TilePayload::I32 { .. } => Precision::Int8,
+        }
+    }
+}
+
+/// Result elements of one tile job, matching the payload's precision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TileOutput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A tagged native-size tile job.
+pub struct TileJob {
     /// Correlation tag echoed back in [`TileDone`].
     pub tag: u64,
-    pub a: Arc<Vec<f32>>,
-    pub b: Arc<Vec<f32>>,
+    pub payload: TilePayload,
     /// Completion channel; the serving engine points a whole window of
     /// jobs at one sender.
     pub done: mpsc::Sender<TileDone>,
@@ -54,24 +91,39 @@ pub struct TileJobF32 {
 /// Completion of one tile job.
 pub struct TileDone {
     pub tag: u64,
-    pub result: Result<Vec<f32>>,
+    pub result: Result<TileOutput>,
 }
 
 enum Msg {
-    Job(TileJobF32),
+    Job(TileJob),
     Shutdown,
+}
+
+/// Per-precision device facts: native tile size and steady-state
+/// iteration period, both derived from the placed design's simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct PrecisionInfo {
+    /// Native design size (nm, nk, nn).
+    pub native: (u64, u64, u64),
+    /// Iteration period in cycles.
+    pub period_cycles: f64,
 }
 
 /// Handle to the running device worker pool.
 pub struct DeviceHandle {
     tx: mpsc::Sender<Msg>,
     joins: Vec<JoinHandle<()>>,
-    /// Native design size (nm, nk, nn).
+    /// Native fp32 design size (nm, nk, nn).
     pub native: (u64, u64, u64),
+    /// Native int8 design size (nm, nk, nn) — differs from fp32 because
+    /// the paper's int8 kernel is 32×128×32 vs fp32's 32×32×32.
+    pub native_int8: (u64, u64, u64),
     /// Simulated device cycles consumed (fixed-point: whole cycles).
     cycles: Arc<AtomicU64>,
-    /// Iteration period in cycles (diagnostics).
+    /// fp32 iteration period in cycles (diagnostics).
     pub period_cycles: f64,
+    /// int8 iteration period in cycles (diagnostics).
+    pub period_cycles_int8: f64,
     /// Device frequency.
     pub freq_hz: f64,
     /// Number of device worker threads.
@@ -84,17 +136,49 @@ pub struct DeviceHandle {
 
 impl DeviceHandle {
     /// Submit one tagged native tile job.
-    pub fn submit(&self, job: TileJobF32) -> Result<()> {
+    pub fn submit(&self, job: TileJob) -> Result<()> {
         self.tx
             .send(Msg::Job(job))
             .map_err(|_| anyhow!("device workers gone"))
     }
 
-    /// Convenience: execute one tile synchronously.
+    /// Convenience: execute one fp32 tile synchronously.
     pub fn execute_tile(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
         let (done, rx) = mpsc::channel();
-        self.submit(TileJobF32 { tag: 0, a: Arc::new(a), b: Arc::new(b), done })?;
-        rx.recv().context("device reply channel closed")?.result
+        self.submit(TileJob {
+            tag: 0,
+            payload: TilePayload::F32 { a: Arc::new(a), b: Arc::new(b) },
+            done,
+        })?;
+        match rx.recv().context("device reply channel closed")?.result? {
+            TileOutput::F32(v) => Ok(v),
+            TileOutput::I32(_) => Err(anyhow!("f32 tile returned i32 output")),
+        }
+    }
+
+    /// Per-precision device facts for a serving precision — the single
+    /// dispatch point between a [`Precision`] and this pool's geometry.
+    pub fn info_for(&self, p: Precision) -> Result<PrecisionInfo> {
+        match p {
+            Precision::Fp32 => {
+                Ok(PrecisionInfo { native: self.native, period_cycles: self.period_cycles })
+            }
+            Precision::Int8 => Ok(PrecisionInfo {
+                native: self.native_int8,
+                period_cycles: self.period_cycles_int8,
+            }),
+            other => Err(anyhow!("serving supports fp32 and int8, not {other}")),
+        }
+    }
+
+    /// Native tile size for a serving precision.
+    pub fn native_for(&self, p: Precision) -> Result<(u64, u64, u64)> {
+        Ok(self.info_for(p)?.native)
+    }
+
+    /// Iteration period (cycles) for a serving precision.
+    pub fn period_cycles_for(&self, p: Precision) -> Result<f64> {
+        Ok(self.info_for(p)?.period_cycles)
     }
 
     /// Simulated device time consumed so far, seconds.
@@ -105,6 +189,12 @@ impl DeviceHandle {
     /// Invocations served.
     pub fn invocations(&self) -> u64 {
         self.invocations.load(Ordering::Relaxed)
+    }
+
+    /// Shared cycle/invocation counters, for observers that outlive or
+    /// run apart from the handle (the streaming server's stats path).
+    pub(crate) fn counters(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
+        (Arc::clone(&self.cycles), Arc::clone(&self.invocations))
     }
 
     fn stop(&mut self) {
@@ -136,9 +226,14 @@ pub fn artifact_name(design: &DesignConfig) -> String {
     )
 }
 
-/// What a worker thread executes per tile.
+/// What a worker thread executes per tile. PJRT holds one executable per
+/// precision; the int8 one is optional (artifact may not be built).
 enum WorkerBackend {
-    Pjrt { _rt: Runtime, exe: crate::runtime::Executable },
+    Pjrt {
+        _rt: Runtime,
+        exe_f32: crate::runtime::Executable,
+        exe_i32: Option<crate::runtime::Executable>,
+    },
     Reference,
 }
 
@@ -148,12 +243,40 @@ pub fn spawn_device(artifacts_dir: PathBuf, design: DesignConfig) -> Result<Devi
     spawn_device_pool(artifacts_dir, design, BackendKind::Pjrt, 1)
 }
 
+/// Native size and iteration period of one precision's design, from
+/// placement + simulation.
+fn precision_info(design: &DesignConfig) -> Result<PrecisionInfo> {
+    let dev = design.device()?;
+    let cand = design.candidate();
+    let kernel = design.kernel();
+    let native = (cand.x * kernel.m, cand.y * kernel.k, cand.z * kernel.n);
+    let placed = place_design(&dev, cand, design.pattern, kernel)
+        .map_err(|e| anyhow!("placement failed for {}: {e}", artifact_name(design)))?;
+    let sim = simulate_design(&dev, &placed, &SimConfig::default());
+    Ok(PrecisionInfo { native, period_cycles: sim.period_cycles })
+}
+
+/// Load a PJRT executable for a design, preferring the panel-scheduled
+/// `_fast` artifact variant (same Pallas kernel, coarsened BlockSpec —
+/// ~11× faster on CPU PJRT, identical reduction order; EXPERIMENTS.md
+/// §Perf).
+fn load_exe(rt: &Runtime, dir: &std::path::Path, name: &str) -> Result<crate::runtime::Executable> {
+    let fast = artifact_path(dir, &format!("{name}_fast"));
+    if fast.exists() {
+        rt.load(&fast)
+    } else {
+        rt.load_named(dir, name)
+    }
+}
+
 /// Spawn `workers` device threads serving tile jobs from a shared queue.
 ///
 /// Backend resolution: `Pjrt` requires the `pjrt` feature *and* the
-/// artifact on disk (fails fast otherwise, pointing at `make artifacts`);
-/// `Reference` needs nothing; `Auto` picks PJRT when possible and falls
-/// back to the reference backend.
+/// fp32 artifact on disk (fails fast otherwise, pointing at
+/// `make artifacts`); `Reference` needs nothing; `Auto` picks PJRT when
+/// possible and falls back to the reference backend. Either way the pool
+/// serves **both** precisions: the int8 geometry is derived from the
+/// design via [`DesignConfig::with_precision`].
 pub fn spawn_device_pool(
     artifacts_dir: PathBuf,
     design: DesignConfig,
@@ -181,17 +304,12 @@ pub fn spawn_device_pool(
         BackendKind::Auto => have_artifacts && pjrt_compiled(),
     };
 
-    let dev = design.device()?;
-    let cand = design.candidate();
-    let kernel = design.kernel();
-    let native = (cand.x * kernel.m, cand.y * kernel.k, cand.z * kernel.n);
-
-    // Device-time model from the simulator.
-    let placed = place_design(&dev, cand, design.pattern, kernel)
-        .map_err(|e| anyhow!("placement failed: {e}"))?;
-    let sim = simulate_design(&dev, &placed, &SimConfig::default());
-    let period = sim.period_cycles;
-    let freq = dev.freq_hz;
+    // Device-time model from the simulator, once per precision.
+    let design_f32 = design.with_precision(Precision::Fp32);
+    let design_i32 = design.with_precision(Precision::Int8);
+    let info_f32 = precision_info(&design_f32)?;
+    let info_i32 = precision_info(&design_i32)?;
+    let freq = design.device()?.freq_hz;
 
     let workers = workers.max(1);
     let cycles = Arc::new(AtomicU64::new(0));
@@ -200,7 +318,8 @@ pub fn spawn_device_pool(
     // std mpsc is single-consumer; the pool shares the receiver behind a
     // mutex (locked only to pop, never while executing a tile).
     let rx = Arc::new(Mutex::new(rx));
-    let name = artifact_name(&design);
+    let name_f32 = artifact_name(&design_f32);
+    let name_i32 = artifact_name(&design_i32);
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
     let mut joins = Vec::with_capacity(workers);
@@ -210,26 +329,26 @@ pub fn spawn_device_pool(
         let invocations_w = Arc::clone(&invocations);
         let ready_w = ready_tx.clone();
         let dir_w = artifacts_dir.clone();
-        let name_w = name.clone();
+        let name_f32_w = name_f32.clone();
+        let name_i32_w = name_i32.clone();
         let join = std::thread::Builder::new()
             .name(format!("maxeva-device-{w}"))
             .spawn(move || {
                 // PJRT handles are created inside the thread (not Send).
-                // §Perf: prefer the panel-scheduled `_fast` artifact (same
-                // Pallas kernel, coarsened BlockSpec — ~11× faster on CPU
-                // PJRT, identical reduction order; EXPERIMENTS.md §Perf).
                 let init = (|| -> Result<WorkerBackend> {
                     if !use_pjrt {
                         return Ok(WorkerBackend::Reference);
                     }
                     let rt = Runtime::cpu()?;
-                    let fast = crate::runtime::artifact_path(&dir_w, &format!("{name_w}_fast"));
-                    let exe = if fast.exists() {
-                        rt.load(&fast)?
+                    let exe_f32 = load_exe(&rt, &dir_w, &name_f32_w)?;
+                    // The int8 artifact is optional: load it when built,
+                    // otherwise int8 jobs fail cleanly at execution.
+                    let exe_i32 = if named_artifact_available(&dir_w, &name_i32_w) {
+                        Some(load_exe(&rt, &dir_w, &name_i32_w)?)
                     } else {
-                        rt.load_named(&dir_w, &name_w)?
+                        None
                     };
-                    Ok(WorkerBackend::Pjrt { _rt: rt, exe })
+                    Ok(WorkerBackend::Pjrt { _rt: rt, exe_f32, exe_i32 })
                 })();
                 let backend = match init {
                     Ok(b) => {
@@ -245,7 +364,9 @@ pub fn spawn_device_pool(
                 // worker dies during init without sending, the spawn-side
                 // wait must see the channel disconnect, not hang.
                 drop(ready_w);
-                let (nm, nk, nn) = (native.0 as usize, native.1 as usize, native.2 as usize);
+                let nf = info_f32.native;
+                let ni = info_i32.native;
+                let (pf, pi) = (info_f32.period_cycles as u64, info_i32.period_cycles as u64);
                 loop {
                     // Pop under the lock, execute outside it so workers
                     // overlap.
@@ -257,22 +378,18 @@ pub fn spawn_device_pool(
                         Ok(Msg::Job(job)) => job,
                         Ok(Msg::Shutdown) | Err(_) => break,
                     };
+                    let period = match job.payload.precision() {
+                        Precision::Int8 => pi,
+                        _ => pf,
+                    };
                     // A panic inside the backend (e.g. PJRT FFI) must
                     // still produce a completion — otherwise the server's
                     // recv loop would wait forever for this tag.
                     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || match &backend {
-                            WorkerBackend::Pjrt { exe, .. } => exe.run_f32(&[
-                                (job.a.as_slice(), &[nm as i64, nk as i64][..]),
-                                (job.b.as_slice(), &[nk as i64, nn as i64][..]),
-                            ]),
-                            WorkerBackend::Reference => {
-                                Ok(matmul_ref_f32(&job.a, &job.b, nm, nk, nn))
-                            }
-                        },
+                        || run_tile(&backend, &job.payload, nf, ni),
                     ))
                     .unwrap_or_else(|_| Err(anyhow!("device worker panicked executing tile")));
-                    cycles_w.fetch_add(period as u64, Ordering::Relaxed);
+                    cycles_w.fetch_add(period, Ordering::Relaxed);
                     invocations_w.fetch_add(1, Ordering::Relaxed);
                     let _ = job.done.send(TileDone { tag: job.tag, result: res });
                 }
@@ -302,9 +419,11 @@ pub fn spawn_device_pool(
     Ok(DeviceHandle {
         tx,
         joins,
-        native,
+        native: info_f32.native,
+        native_int8: info_i32.native,
         cycles,
-        period_cycles: period,
+        period_cycles: info_f32.period_cycles,
+        period_cycles_int8: info_i32.period_cycles,
         freq_hz: freq,
         workers,
         backend: if use_pjrt { "pjrt" } else { "reference" },
@@ -312,10 +431,53 @@ pub fn spawn_device_pool(
     })
 }
 
+/// Execute one tile on whichever datapath its payload selects.
+fn run_tile(
+    backend: &WorkerBackend,
+    payload: &TilePayload,
+    native_f32: (u64, u64, u64),
+    native_i32: (u64, u64, u64),
+) -> Result<TileOutput> {
+    match payload {
+        TilePayload::F32 { a, b } => {
+            let (nm, nk, nn) =
+                (native_f32.0 as usize, native_f32.1 as usize, native_f32.2 as usize);
+            match backend {
+                WorkerBackend::Pjrt { exe_f32, .. } => exe_f32
+                    .run_f32(&[
+                        (a.as_slice(), &[nm as i64, nk as i64][..]),
+                        (b.as_slice(), &[nk as i64, nn as i64][..]),
+                    ])
+                    .map(TileOutput::F32),
+                WorkerBackend::Reference => {
+                    Ok(TileOutput::F32(matmul_ref_f32(a, b, nm, nk, nn)))
+                }
+            }
+        }
+        TilePayload::I32 { a, b } => {
+            let (nm, nk, nn) =
+                (native_i32.0 as usize, native_i32.1 as usize, native_i32.2 as usize);
+            match backend {
+                WorkerBackend::Pjrt { exe_i32: Some(exe), .. } => exe
+                    .run_i32(&[
+                        (a.as_slice(), &[nm as i64, nk as i64][..]),
+                        (b.as_slice(), &[nk as i64, nn as i64][..]),
+                    ])
+                    .map(TileOutput::I32),
+                WorkerBackend::Pjrt { exe_i32: None, .. } => Err(anyhow!(
+                    "int8 artifact not built — run `make artifacts` with the int8 design"
+                )),
+                WorkerBackend::Reference => {
+                    Ok(TileOutput::I32(matmul_ref_i32(a, b, nm, nk, nn)))
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::precision::Precision;
 
     #[test]
     fn artifact_name_scheme() {
@@ -346,6 +508,9 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
         assert_eq!(dev.native, (8, 16, 8));
+        // Custom (non-paper) kernel → the int8 sibling keeps the same
+        // tile geometry.
+        assert_eq!(dev.native_int8, (8, 16, 8));
         assert_eq!(dev.backend, "reference");
         let (nm, nk, nn) = (8usize, 16usize, 8usize);
         let a: Vec<f32> = (0..nm * nk).map(|i| (i % 5) as f32).collect();
@@ -357,10 +522,9 @@ mod tests {
         let a = Arc::new(a);
         let b = Arc::new(b);
         for tag in 0..6u64 {
-            dev.submit(TileJobF32 {
+            dev.submit(TileJob {
                 tag,
-                a: Arc::clone(&a),
-                b: Arc::clone(&b),
+                payload: TilePayload::F32 { a: Arc::clone(&a), b: Arc::clone(&b) },
                 done: done_tx.clone(),
             })
             .unwrap();
@@ -368,13 +532,84 @@ mod tests {
         let mut seen = Vec::new();
         for _ in 0..6 {
             let d = done_rx.recv().unwrap();
-            assert_eq!(d.result.unwrap(), want);
+            assert_eq!(d.result.unwrap(), TileOutput::F32(want.clone()));
             seen.push(d.tag);
         }
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
         assert_eq!(dev.invocations(), 6);
         assert!(dev.device_time_s() > 0.0);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn reference_pool_serves_both_precisions() {
+        let mut design = DesignConfig::flagship(Precision::Fp32);
+        (design.x, design.y, design.z) = (2, 4, 2);
+        (design.m, design.k, design.n) = (4, 4, 4);
+        let dir = std::env::temp_dir().join("maxeva_ref_pool_i8");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
+        let (nm, nk, nn) = (8usize, 16usize, 8usize);
+        let ai: Vec<i32> = (0..nm * nk).map(|i| (i % 256) as i32 - 128).collect();
+        let bi: Vec<i32> = (0..nk * nn).map(|i| (i % 251) as i32 - 125).collect();
+        let want_i = matmul_ref_i32(&ai, &bi, nm, nk, nn);
+        let af: Vec<f32> = (0..nm * nk).map(|i| (i % 5) as f32).collect();
+        let bf: Vec<f32> = (0..nk * nn).map(|i| (i % 3) as f32 - 1.0).collect();
+        let want_f = matmul_ref_f32(&af, &bf, nm, nk, nn);
+
+        let (done_tx, done_rx) = mpsc::channel();
+        dev.submit(TileJob {
+            tag: 1,
+            payload: TilePayload::I32 { a: Arc::new(ai), b: Arc::new(bi) },
+            done: done_tx.clone(),
+        })
+        .unwrap();
+        dev.submit(TileJob {
+            tag: 2,
+            payload: TilePayload::F32 { a: Arc::new(af), b: Arc::new(bf) },
+            done: done_tx.clone(),
+        })
+        .unwrap();
+        let t0 = dev.device_time_s();
+        let mut got = 0;
+        for _ in 0..2 {
+            let d = done_rx.recv().unwrap();
+            match d.result.unwrap() {
+                TileOutput::I32(v) => {
+                    assert_eq!(d.tag, 1);
+                    assert_eq!(v, want_i);
+                    got += 1;
+                }
+                TileOutput::F32(v) => {
+                    assert_eq!(d.tag, 2);
+                    assert_eq!(v, want_f);
+                    got += 1;
+                }
+            }
+        }
+        assert_eq!(got, 2);
+        assert!(dev.device_time_s() >= t0);
+        assert!(dev.period_cycles_for(Precision::Int8).unwrap() > 0.0);
+        assert!(dev.native_for(Precision::Bf16).is_err());
+        dev.shutdown();
+    }
+
+    #[test]
+    fn flagship_precisions_have_distinct_natives() {
+        let dir = std::env::temp_dir().join("maxeva_flagship_natives");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dev = spawn_device_pool(
+            dir,
+            DesignConfig::flagship(Precision::Fp32),
+            BackendKind::Reference,
+            1,
+        )
+        .unwrap();
+        // 13·32 × 4·32 × 6·32 vs 13·32 × 4·128 × 6·32 (int8 kernel K=128).
+        assert_eq!(dev.native, (416, 128, 192));
+        assert_eq!(dev.native_int8, (416, 512, 192));
+        assert!(dev.period_cycles > 0.0 && dev.period_cycles_int8 > 0.0);
         dev.shutdown();
     }
 

@@ -1,12 +1,16 @@
 //! The serving coordinator — the L3 runtime path.
 //!
-//! Arbitrary-size MatMul requests are padded and tiled to the design's
-//! native size ([`tiler`]), packed once into tile-major `Arc`'d block
-//! pools, and streamed through a pipelined in-flight window of tagged
-//! tile jobs ([`server`]) executed by a pool of device worker threads
-//! ([`device`]) — the software stand-in for the VCK190's AIE array. The
-//! window is the host-side mirror of the paper's ping-pong buffering
-//! (eq. 2): host packing/reduction overlaps device execution instead of
+//! Arbitrary-size MatMul requests enter through a **streaming admission
+//! queue** (bounded by `ServeConfig::queue_depth`, block/reject
+//! backpressure), are padded and tiled to their precision's native size
+//! ([`tiler`]), packed once into tile-major `Arc`'d block pools, and
+//! streamed through a pipelined in-flight window of tagged tile jobs
+//! ([`server`]) executed by a pool of device worker threads ([`device`])
+//! — the software stand-in for the VCK190's AIE array. Requests carry a
+//! per-request precision: fp32 and int8 (i32-accumulating) tiles share
+//! one window, mirroring the paper's dual headline designs. The window
+//! is the host-side mirror of the paper's ping-pong buffering (eq. 2):
+//! host packing/reduction overlaps device execution instead of
 //! alternating with it. Python never runs here; the device workers
 //! execute the AOT artifacts produced once at build time (or, without
 //! the `pjrt` feature/artifacts, a pure-Rust reference backend with
@@ -20,10 +24,12 @@
 
 pub mod device;
 pub mod server;
-pub mod trace;
 pub mod stats;
 pub mod tiler;
+pub mod trace;
 
-pub use device::{spawn_device, spawn_device_pool, DeviceHandle, TileDone, TileJobF32};
-pub use server::{MatMulServer, ServerStats};
+pub use device::{
+    spawn_device, spawn_device_pool, DeviceHandle, TileDone, TileJob, TileOutput, TilePayload,
+};
+pub use server::{MatMulServer, QueueFull, RequestHandle, ServerStats};
 pub use tiler::Tiler;

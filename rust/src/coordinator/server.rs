@@ -1,57 +1,96 @@
-//! The MatMul serving layer: request queue + pipelined tile engine on top
-//! of the device worker pool.
+//! The MatMul serving layer: **streaming admission** + pipelined tile
+//! engine on top of the device worker pool.
 //!
-//! Requests of arbitrary `M×K×N` are decomposed into native-size tile
-//! jobs and streamed through an **asynchronous in-flight window** — the
-//! host-side analogue of the paper's ping-pong (double) buffering, eq. 2:
-//! the AIE kernel only sustains its rate because DMA refills one buffer
-//! while the datapath consumes the other, and likewise this engine only
-//! keeps the device workers busy because block packing and accumulation
-//! for tiles `i±window` happen while tile `i` executes. Three mechanisms
-//! cooperate:
+//! # Streaming admission (the open queue)
 //!
-//! 1. **Tile-major packing (zero-copy)** — on admission each request's A
-//!    and B are packed once into tile-major pools of `Arc`'d native
-//!    blocks ([`Tiler::pack_tile_major`]). A tile job borrows its two
-//!    blocks by `Arc` clone; nothing is re-extracted or copied per tile.
-//!    The old engine extracted the `(im,ik)` A-block `gn` times and the
-//!    `(ik,inn)` B-block `gm` times per request.
+//! Unlike the PR 1 engine, which replayed a pre-closed batch, this
+//! server is a long-lived stream processor. [`MatMulServer::submit`]
+//! admits one request into a bounded open queue and returns a
+//! [`RequestHandle`] immediately; a dedicated **scheduler thread** packs
+//! operands, feeds the in-flight window continuously, reduces partials
+//! and retires requests while later submissions are still arriving — so
+//! requests are admitted, scheduled and completed concurrently, not in
+//! batch lockstep.
+//!
+//! **Backpressure** is governed by `ServeConfig::queue_depth` — the
+//! maximum number of *open* requests (admitted but not yet retired;
+//! `0` = unbounded) — and an [`AdmissionPolicy`]:
+//!
+//! * [`AdmissionPolicy::Block`] parks the submitting thread until a
+//!   slot frees (producers run at the engine's pace).
+//! * [`AdmissionPolicy::Reject`] fails fast with [`QueueFull`] so the
+//!   caller can shed load or retry.
+//!
+//! Completions are delivered per request: [`RequestHandle::wait`] /
+//! [`RequestHandle::try_wait`], or a callback registered with
+//! [`MatMulServer::submit_with_callback`] (invoked on the scheduler
+//! thread — keep it short). [`MatMulServer::run_batch`] remains as a
+//! thin convenience wrapper: submit everything (blocking policy), wait
+//! in order — every batch test therefore exercises the streaming path.
+//!
+//! # Per-request precision
+//!
+//! Each [`MatMulRequest`] names its [`Precision`]: fp32 requests flow as
+//! f32 tiles, int8 requests as int8-range operands carried in i32 with
+//! **i32 accumulation buffers** (paper §IV-C1), through the *same*
+//! tiler/window/reduction machinery. Each precision has its own native
+//! tile geometry (the paper's int8 kernel is 32×128×32 vs fp32's
+//! 32×32×32) and its own simulated device period. One server interleaves
+//! both in a single window.
+//!
+//! # The pipeline (unchanged mechanics)
+//!
+//! 1. **Tile-major packing (zero-copy)** — on first schedule each
+//!    request's A and B are packed once into tile-major pools of `Arc`'d
+//!    native blocks ([`Tiler::pack_tile_major`]); a tile job borrows its
+//!    two blocks by `Arc` clone.
 //! 2. **Windowed submission** — up to `pipeline_depth` tagged jobs are
-//!    kept in flight on a single completion channel, overlapping host
-//!    pack/reduce work with device execution (and, with `workers > 1`,
-//!    device executions with each other). `pipeline_depth = 1` reproduces
-//!    the synchronous one-tile-at-a-time engine exactly — the A/B knob
-//!    for measuring the win.
+//!    kept in flight on one completion channel, overlapping host
+//!    pack/reduce with device execution. `pipeline_depth = 1` reproduces
+//!    the synchronous engine exactly.
 //! 3. **Reuse-ordered scheduling** — each request walks its tiles
-//!    k-innermost per `(im, inn)` output block, so partial products
-//!    reduce into a dense per-block accumulation buffer and the strided
-//!    output matrix is written once per block, not once per tile.
-//!    Fairness across requests is round-robin at the *window* level (a
-//!    ready-queue rotation per submitted tile), not a rescan of every
-//!    in-flight request per tile.
+//!    k-innermost per `(im, inn)` output block; fairness across requests
+//!    is round-robin at the window level.
 //!
-//! **Determinism:** completions may arrive out of order (multiple
-//! workers), but partials are applied to each output block strictly in
-//! ascending `ik` order (late partials park in a per-block reorder map),
-//! so outputs are bit-identical for every `pipeline_depth`/`workers`
-//! combination — see `rust/tests/pipeline_equivalence.rs`.
+//! **Determinism:** completions may arrive out of order, but partials
+//! are applied to each output block strictly in ascending `ik` order
+//! (late partials park in a per-block reorder map), so outputs are
+//! bit-identical for every `pipeline_depth`/`workers` combination and
+//! admission interleaving — f32 by ordered summation, i32 trivially
+//! (wrapping integer addition is associative). See
+//! `rust/tests/pipeline_equivalence.rs` and
+//! `rust/tests/streaming_admission.rs`.
 
-use crate::config::schema::ServeConfig;
-use crate::coordinator::device::{spawn_device_pool, DeviceHandle, TileDone, TileJobF32};
+use crate::arch::precision::Precision;
+use crate::config::schema::{AdmissionPolicy, ServeConfig};
+use crate::coordinator::device::{
+    spawn_device_pool, DeviceHandle, PrecisionInfo, TileDone, TileJob, TileOutput, TilePayload,
+};
 use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
-use crate::workloads::MatMulRequest;
+use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
 use rustc_hash::FxHashMap;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Returned by a [`AdmissionPolicy::Reject`] submission when
+/// `queue_depth` requests are already open. Recover it from the anyhow
+/// chain with `err.downcast_ref::<QueueFull>()`.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("admission queue full ({0} open requests)")]
+pub struct QueueFull(pub usize);
 
 /// Serving statistics snapshot.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub requests: usize,
+    /// Requests served in fp32 / int8 (the dual-precision traffic split).
+    pub requests_fp32: usize,
+    pub requests_int8: usize,
     pub invocations: u64,
     pub mean_latency_ms: f64,
     pub p99_latency_ms: f64,
@@ -59,7 +98,8 @@ pub struct ServerStats {
     pub device_ops_per_sec: f64,
     /// Total simulated device time (s).
     pub device_time_s: f64,
-    /// Total wall time (s) spent in `run_batch`.
+    /// Total wall time (s) spent in `run_batch` calls (streaming
+    /// submissions are not attributed here).
     pub wall_time_s: f64,
     /// Configured in-flight window.
     pub pipeline_depth: usize,
@@ -69,23 +109,242 @@ pub struct ServerStats {
     pub max_in_flight: usize,
 }
 
-/// One in-flight request's state: operands packed tile-major at
-/// admission, grid cached (never recomputed per tile).
-struct InFlight {
+/// Per-request completion delivery.
+enum Reply {
+    Handle(mpsc::Sender<Result<MatOutput>>),
+    Callback(Box<dyn FnOnce(MatMulRequest, Result<MatOutput>) + Send>),
+}
+
+impl Reply {
+    fn send(self, req: MatMulRequest, out: Result<MatOutput>) {
+        match self {
+            Reply::Handle(tx) => {
+                let _ = tx.send(out);
+            }
+            // User code runs on the scheduler thread; a panicking
+            // callback must not take the whole stream down with it.
+            Reply::Callback(cb) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cb(req, out)));
+            }
+        }
+    }
+}
+
+/// A request admitted by a client thread, in flight to the scheduler.
+///
+/// `ops`/`reply` are `Option`s taken out on the normal path; the `Drop`
+/// impl is the safety net for every other path (scheduler draining, the
+/// event channel torn down with admits still queued, send failure): it
+/// frees the admission slot and delivers a shutdown error, so a
+/// successful `submit` always resolves its handle/callback.
+struct Admitted {
     req: MatMulRequest,
-    /// Block grid `(gm, gk, gn)`, computed once at admission.
-    grid: (usize, usize, usize),
+    ops: Option<Operands>,
+    submitted: Instant,
+    reply: Option<Reply>,
+    gate: Arc<Gate>,
+}
+
+impl Drop for Admitted {
+    fn drop(&mut self) {
+        if let Some(reply) = self.reply.take() {
+            self.gate.release();
+            reply.send(self.req, Err(anyhow!("server is shutting down")));
+        }
+    }
+}
+
+/// Scheduler-thread events: admissions from clients and tile
+/// completions (forwarded from the device pool) share one channel, so
+/// the scheduler is a single ordered state machine.
+enum Event {
+    Admit(Box<Admitted>),
+    Done(TileDone),
+    SetDepth(usize),
+    ResetEpoch,
+    Drain,
+}
+
+/// The admission gate: a counting semaphore over open requests with a
+/// closed flag so blocked producers wake when the server goes away.
+struct Gate {
+    /// `0` = unbounded.
+    depth: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    open: usize,
+    closed: bool,
+}
+
+/// Closes the gate when dropped — even if the scheduler thread unwinds,
+/// producers parked in [`Gate::admit`] wake up instead of hanging.
+struct GateCloser(Arc<Gate>);
+
+impl Drop for GateCloser {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+impl Gate {
+    fn new(depth: usize) -> Self {
+        Gate {
+            depth,
+            state: Mutex::new(GateState { open: 0, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn admit(&self, policy: AdmissionPolicy) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(anyhow!("server is shut down"));
+            }
+            if self.depth == 0 || st.open < self.depth {
+                st.open += 1;
+                return Ok(());
+            }
+            match policy {
+                AdmissionPolicy::Reject => return Err(QueueFull(self.depth).into()),
+                AdmissionPolicy::Block => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = st.open.saturating_sub(1);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// State shared between the scheduler thread and client-side snapshots.
+struct Shared {
+    stats: Mutex<StatsAgg>,
+    /// Cumulative window occupancy over the server's lifetime.
+    window: Mutex<WindowOcc>,
+    /// Occupancy since the last epoch reset (A/B attribution).
+    last_window: Mutex<WindowOcc>,
+    /// Wall time spent inside `run_batch` calls.
+    wall_time_s: Mutex<f64>,
+}
+
+/// A completion handle for one admitted request.
+pub struct RequestHandle {
+    id: u64,
+    rx: mpsc::Receiver<Result<MatOutput>>,
+}
+
+impl RequestHandle {
+    /// The submitted request's id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request retires and take its output.
+    pub fn wait(self) -> Result<MatOutput> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped request {} without replying", self.id))?
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<MatOutput>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("server dropped request {} without replying", self.id)))
+            }
+        }
+    }
+}
+
+/// Element type the reduction machinery is generic over: f32 sums, the
+/// int8 path accumulates i32 with wrapping adds (both orderings are
+/// fixed by the ascending-`ik` rule; wrapping keeps i32 bit-exact even
+/// on overflow).
+trait Elem: Copy + Default + Send + Sync + 'static {
+    fn acc(&mut self, other: Self);
+}
+
+impl Elem for f32 {
+    fn acc(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+impl Elem for i32 {
+    fn acc(&mut self, other: Self) {
+        *self = self.wrapping_add(other);
+    }
+}
+
+/// One precision's operand pools and output matrix.
+struct Pools<T> {
     /// Raw row-major operands, held until this request's first tile is
     /// scheduled: packing then happens *inside* the pipeline, overlapping
     /// the tiles of earlier requests already executing on the workers.
-    raw: Option<(Vec<f32>, Vec<f32>)>,
-    /// Tile-major A pool, indexed `[im·gk + ik]` (filled at first
-    /// schedule).
-    a_tiles: Vec<Arc<Vec<f32>>>,
-    /// Tile-major B pool, indexed `[ik·gn + inn]` (filled at first
-    /// schedule).
-    b_tiles: Vec<Arc<Vec<f32>>>,
-    c: Vec<f32>,
+    raw: Option<(Vec<T>, Vec<T>)>,
+    /// Tile-major A pool, indexed `[im·gk + ik]`.
+    a_tiles: Vec<Arc<Vec<T>>>,
+    /// Tile-major B pool, indexed `[ik·gn + inn]`.
+    b_tiles: Vec<Arc<Vec<T>>>,
+    c: Vec<T>,
+}
+
+impl<T: Elem> Pools<T> {
+    fn fresh(a: Vec<T>, b: Vec<T>, out_len: usize) -> Self {
+        Pools {
+            raw: Some((a, b)),
+            a_tiles: Vec::new(),
+            b_tiles: Vec::new(),
+            c: vec![T::default(); out_len],
+        }
+    }
+
+    /// First schedule of this request: pack its operands into the
+    /// tile-major pools now — one extract pass per block, total,
+    /// overlapping whatever is already in flight.
+    fn pack(&mut self, m: usize, k: usize, n: usize, t: Tiler) {
+        if let Some((a, b)) = self.raw.take() {
+            self.a_tiles = Tiler::pack_tile_major(&a, m, k, t.nm, t.nk)
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+            self.b_tiles = Tiler::pack_tile_major(&b, k, n, t.nk, t.nn)
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+        }
+    }
+}
+
+/// Typed flight data — the only precision-specific part of a flight.
+enum FlightData {
+    F32(Pools<f32>),
+    I32(Pools<i32>),
+}
+
+/// One open request's state in the scheduler.
+struct Flight {
+    req: MatMulRequest,
+    /// Block grid `(gm, gk, gn)` in this request's precision geometry.
+    grid: (usize, usize, usize),
+    /// This request's precision tiler (native tile sizes are
+    /// per-precision).
+    tiler: Tiler,
+    data: FlightData,
     /// Cursor into the k-innermost tile walk.
     next_tile: usize,
     total_tiles: usize,
@@ -93,13 +352,13 @@ struct InFlight {
     done_tiles: usize,
     started: Instant,
     invocations: u64,
-    device_s0: f64,
+    reply: Reply,
 }
 
 /// Where a tagged in-flight job lands when it completes.
 #[derive(Debug, Clone, Copy)]
 struct JobDesc {
-    flight: usize,
+    flight: u64,
     im: usize,
     inn: usize,
     ik: usize,
@@ -107,32 +366,347 @@ struct JobDesc {
 
 /// Per-output-block accumulation state (the "small accumulation buffer
 /// per in-flight block").
-struct BlockAcc {
+struct BlockAcc<T> {
     /// Dense `nm×nn` running sum.
-    buf: Vec<f32>,
+    buf: Vec<T>,
     /// Next `ik` to reduce — enforces the bit-exact reduction order.
     next_ik: usize,
     /// Out-of-order partials parked until their turn.
-    pending: BTreeMap<usize, Vec<f32>>,
+    pending: BTreeMap<usize, Vec<T>>,
 }
 
-/// The serving coordinator.
-pub struct MatMulServer {
-    device: DeviceHandle,
+/// Reduce one completed partial into its output block, preserving
+/// ascending-`ik` order; write the block back once full.
+#[allow(clippy::too_many_arguments)]
+fn reduce_partial<T: Elem>(
+    accs: &mut FxHashMap<(u64, usize, usize), BlockAcc<T>>,
+    c: &mut [T],
+    done_tiles: &mut usize,
     tiler: Tiler,
-    stats: StatsAgg,
-    /// Cumulative window occupancy over the server's lifetime.
-    window: WindowOcc,
-    /// Occupancy of the most recent `run_batch` only (A/B attribution).
-    last_window: WindowOcc,
+    gk: usize,
+    m: usize,
+    n: usize,
+    fid: u64,
+    desc: JobDesc,
+    partial: Vec<T>,
+) {
+    let key = (fid, desc.im, desc.inn);
+    let acc = accs.entry(key).or_insert_with(|| BlockAcc {
+        buf: vec![T::default(); tiler.nm * tiler.nn],
+        next_ik: 0,
+        pending: BTreeMap::new(),
+    });
+    acc.pending.insert(desc.ik, partial);
+    while let Some(p) = acc.pending.remove(&acc.next_ik) {
+        for (dst, src) in acc.buf.iter_mut().zip(&p) {
+            dst.acc(*src);
+        }
+        acc.next_ik += 1;
+        *done_tiles += 1;
+    }
+    if acc.next_ik == gk {
+        let full = accs.remove(&key).unwrap();
+        Tiler::write_block(c, m, n, desc.im, desc.inn, tiler.nm, tiler.nn, &full.buf);
+    }
+}
+
+/// The scheduler: a single-threaded state machine owning the device
+/// pool, the open flights and the in-flight window.
+struct Scheduler {
+    device: DeviceHandle,
+    tiler_f32: Tiler,
+    tiler_i32: Tiler,
+    gate: Arc<Gate>,
+    shared: Arc<Shared>,
+    /// Sender cloned into every tile job; a forwarder thread relays
+    /// completions into the scheduler's event channel.
+    tile_tx: mpsc::Sender<TileDone>,
+    depth: usize,
+    draining: bool,
+    flights: FxHashMap<u64, Flight>,
+    /// Window-level round-robin: each ready request submits one tile,
+    /// then rotates to the back.
+    ready: VecDeque<u64>,
+    descs: FxHashMap<u64, JobDesc>,
+    accs_f32: FxHashMap<(u64, usize, usize), BlockAcc<f32>>,
+    accs_i32: FxHashMap<(u64, usize, usize), BlockAcc<i32>>,
+    next_flight: u64,
+    next_tag: u64,
+    in_flight: usize,
+}
+
+impl Scheduler {
+    fn run(mut self, events: mpsc::Receiver<Event>) {
+        // Wake any producer parked on the admission gate when this
+        // thread exits — normally or by unwinding.
+        let _gate_closer = GateCloser(Arc::clone(&self.gate));
+        loop {
+            // Fill the window from the ready rotation.
+            while self.in_flight < self.depth {
+                let Some(fid) = self.ready.pop_front() else { break };
+                self.submit_one(fid);
+            }
+            if self.draining && self.flights.is_empty() && self.in_flight == 0 {
+                break;
+            }
+            // Block for the next admission or completion.
+            let Ok(ev) = events.recv() else { break };
+            match ev {
+                Event::Admit(adm) => self.handle_admit(adm),
+                Event::Done(done) => self.handle_done(done),
+                Event::SetDepth(d) => self.depth = d.max(1),
+                Event::ResetEpoch => {
+                    *self.shared.last_window.lock().unwrap() = WindowOcc::default()
+                }
+                Event::Drain => self.draining = true,
+            }
+        }
+        // `_gate_closer` closes the admission gate as it drops;
+        // dropping `self.device` stops the worker pool.
+    }
+
+    fn tiler_for(&self, p: Precision) -> Tiler {
+        match p {
+            Precision::Int8 => self.tiler_i32,
+            _ => self.tiler_f32,
+        }
+    }
+
+    fn handle_admit(&mut self, mut adm: Box<Admitted>) {
+        if self.draining {
+            return; // Admitted::drop frees the slot and errors the reply
+        }
+        let req = adm.req;
+        let submitted = adm.submitted;
+        let ops = adm.ops.take().expect("operands consumed once");
+        let reply = adm.reply.take().expect("reply consumed once");
+        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
+        let tiler = self.tiler_for(req.precision);
+        let grid = tiler.grid(m, k, n);
+        let (gm, gk, gn) = grid;
+        let total_tiles = gm * gk * gn;
+        // Degenerate (zero-tile) requests retire immediately — still
+        // recorded, so stats().requests matches the replies delivered.
+        if total_tiles == 0 {
+            self.shared.stats.lock().unwrap().record(Completion {
+                id: req.id,
+                macs: req.macs(),
+                precision: req.precision,
+                wall: submitted.elapsed(),
+                device_s: 0.0,
+                invocations: 0,
+            });
+            let out = match ops {
+                Operands::F32 { .. } => MatOutput::F32(vec![0.0; m * n]),
+                Operands::I32 { .. } => MatOutput::I32(vec![0; m * n]),
+            };
+            self.gate.release();
+            reply.send(req, Ok(out));
+            return;
+        }
+        let data = match ops {
+            Operands::F32 { a, b } => FlightData::F32(Pools::fresh(a, b, m * n)),
+            Operands::I32 { a, b } => FlightData::I32(Pools::fresh(a, b, m * n)),
+        };
+        let fid = self.next_flight;
+        self.next_flight += 1;
+        self.flights.insert(
+            fid,
+            Flight {
+                req,
+                grid,
+                tiler,
+                data,
+                next_tile: 0,
+                total_tiles,
+                done_tiles: 0,
+                started: submitted,
+                invocations: 0,
+                reply,
+            },
+        );
+        self.ready.push_back(fid);
+    }
+
+    /// Schedule the next tile of flight `fid` into the window.
+    fn submit_one(&mut self, fid: u64) {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let (payload, desc, requeue) = {
+            let Some(f) = self.flights.get_mut(&fid) else { return };
+            let (_gm, gk, gn) = f.grid;
+            let (m, k, n) = (f.req.m as usize, f.req.k as usize, f.req.n as usize);
+            let tiler = f.tiler;
+            // k-innermost walk: tile t = (im·gn + inn)·gk + ik.
+            let t = f.next_tile;
+            f.next_tile += 1;
+            let ik = t % gk;
+            let blk = t / gk;
+            let im = blk / gn;
+            let inn = blk % gn;
+            let payload = match &mut f.data {
+                FlightData::F32(p) => {
+                    p.pack(m, k, n, tiler);
+                    TilePayload::F32 {
+                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
+                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
+                    }
+                }
+                FlightData::I32(p) => {
+                    p.pack(m, k, n, tiler);
+                    TilePayload::I32 {
+                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
+                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
+                    }
+                }
+            };
+            f.invocations += 1;
+            (payload, JobDesc { flight: fid, im, inn, ik }, f.next_tile < f.total_tiles)
+        };
+        self.descs.insert(tag, desc);
+        if requeue {
+            self.ready.push_back(fid);
+        }
+        match self.device.submit(TileJob { tag, payload, done: self.tile_tx.clone() }) {
+            Ok(()) => self.in_flight += 1,
+            Err(e) => {
+                self.descs.remove(&tag);
+                self.fail_flight(fid, e);
+            }
+        }
+    }
+
+    fn handle_done(&mut self, done: TileDone) {
+        // Sample the window as it stood while this tile completed.
+        let occ = self.in_flight;
+        self.shared.window.lock().unwrap().record(occ);
+        self.shared.last_window.lock().unwrap().record(occ);
+        self.in_flight = self.in_flight.saturating_sub(1);
+        let Some(desc) = self.descs.remove(&done.tag) else {
+            return; // stale tag (defensive; tags are scheduler-issued)
+        };
+        let fid = desc.flight;
+        if !self.flights.contains_key(&fid) {
+            return; // flight already failed; drop the straggler tile
+        }
+        let output = match done.result {
+            Ok(o) => o,
+            Err(e) => {
+                self.fail_flight(fid, e);
+                return;
+            }
+        };
+        let matched = {
+            let f = self.flights.get_mut(&fid).unwrap();
+            let tiler = f.tiler;
+            let (_gm, gk, _gn) = f.grid;
+            let (m, n) = (f.req.m as usize, f.req.n as usize);
+            match (&mut f.data, output) {
+                (FlightData::F32(p), TileOutput::F32(partial)) => {
+                    reduce_partial(
+                        &mut self.accs_f32,
+                        &mut p.c,
+                        &mut f.done_tiles,
+                        tiler,
+                        gk,
+                        m,
+                        n,
+                        fid,
+                        desc,
+                        partial,
+                    );
+                    true
+                }
+                (FlightData::I32(p), TileOutput::I32(partial)) => {
+                    reduce_partial(
+                        &mut self.accs_i32,
+                        &mut p.c,
+                        &mut f.done_tiles,
+                        tiler,
+                        gk,
+                        m,
+                        n,
+                        fid,
+                        desc,
+                        partial,
+                    );
+                    true
+                }
+                _ => false,
+            }
+        };
+        if !matched {
+            self.fail_flight(fid, anyhow!("device returned a tile in the wrong precision"));
+            return;
+        }
+        let f = &self.flights[&fid];
+        if f.done_tiles == f.total_tiles {
+            self.retire(fid);
+        }
+    }
+
+    /// Deliver a finished flight's output and free its admission slot.
+    fn retire(&mut self, fid: u64) {
+        let mut f = self.flights.remove(&fid).unwrap();
+        // Charge the flight exactly its own tiles (period × invocations)
+        // — the shared device clock spans concurrently open flights and
+        // would double-count overlap.
+        let period = self
+            .device
+            .info_for(f.req.precision)
+            .map(|i| i.period_cycles)
+            .unwrap_or_default();
+        self.shared.stats.lock().unwrap().record(Completion {
+            id: f.req.id,
+            macs: f.req.macs(),
+            precision: f.req.precision,
+            wall: f.started.elapsed(),
+            device_s: period * f.invocations as f64 / self.device.freq_hz,
+            invocations: f.invocations,
+        });
+        let out = match &mut f.data {
+            FlightData::F32(p) => MatOutput::F32(std::mem::take(&mut p.c)),
+            FlightData::I32(p) => MatOutput::I32(std::mem::take(&mut p.c)),
+        };
+        self.gate.release();
+        f.reply.send(f.req, Ok(out));
+    }
+
+    /// Fail one flight without tearing the stream down: later tiles of
+    /// the flight still in the window are dropped on arrival.
+    fn fail_flight(&mut self, fid: u64, err: anyhow::Error) {
+        let Some(f) = self.flights.remove(&fid) else { return };
+        self.ready.retain(|&x| x != fid);
+        self.accs_f32.retain(|k, _| k.0 != fid);
+        self.accs_i32.retain(|k, _| k.0 != fid);
+        self.gate.release();
+        f.reply.send(f.req, Err(err));
+    }
+}
+
+/// The serving coordinator (client handle). Cheap to share across
+/// threads by reference: `submit*` take `&self`.
+pub struct MatMulServer {
+    events: mpsc::Sender<Event>,
+    sched: Option<JoinHandle<()>>,
+    forwarder: Option<JoinHandle<()>>,
+    gate: Arc<Gate>,
+    shared: Arc<Shared>,
+    cycles: Arc<AtomicU64>,
+    invocations: Arc<AtomicU64>,
+    info_f32: PrecisionInfo,
+    info_int8: PrecisionInfo,
+    freq_hz: f64,
+    backend: &'static str,
+    workers: usize,
     pipeline_depth: usize,
-    wall_time_s: f64,
+    policy: AdmissionPolicy,
+    queue_depth: usize,
 }
 
 impl MatMulServer {
-    /// Start the server: spawns the device worker pool and compiles the
-    /// design's artifact (or brings up the reference backend, per
-    /// `cfg.backend`).
+    /// Start the server: spawns the device worker pool, the completion
+    /// forwarder and the scheduler thread.
     pub fn start(cfg: &ServeConfig) -> Result<Self> {
         let device = spawn_device_pool(
             cfg.artifacts_dir.clone().into(),
@@ -140,41 +714,121 @@ impl MatMulServer {
             cfg.backend,
             cfg.workers,
         )?;
-        let tiler = Tiler::new(device.native);
-        Ok(MatMulServer {
+        let (cycles, invocations) = device.counters();
+        let info_f32 = device.info_for(Precision::Fp32)?;
+        let info_int8 = device.info_for(Precision::Int8)?;
+        let freq_hz = device.freq_hz;
+        let backend = device.backend;
+        let workers = device.workers;
+
+        let gate = Arc::new(Gate::new(cfg.queue_depth));
+        let shared = Arc::new(Shared {
+            stats: Mutex::new(StatsAgg::default()),
+            window: Mutex::new(WindowOcc::default()),
+            last_window: Mutex::new(WindowOcc::default()),
+            wall_time_s: Mutex::new(0.0),
+        });
+        let (events_tx, events_rx) = mpsc::channel::<Event>();
+        let (tile_tx, tile_rx) = mpsc::channel::<TileDone>();
+
+        // Tile completions → scheduler events (std mpsc has no select;
+        // a relay thread keeps the scheduler single-channel).
+        let fwd_events = events_tx.clone();
+        let forwarder = std::thread::Builder::new()
+            .name("maxeva-completions".into())
+            .spawn(move || {
+                while let Ok(done) = tile_rx.recv() {
+                    if fwd_events.send(Event::Done(done)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning completion forwarder: {e}"))?;
+
+        let sched = Scheduler {
             device,
-            tiler,
-            stats: StatsAgg::default(),
-            window: WindowOcc::default(),
-            last_window: WindowOcc::default(),
+            tiler_f32: Tiler::new(info_f32.native),
+            tiler_i32: Tiler::new(info_int8.native),
+            gate: Arc::clone(&gate),
+            shared: Arc::clone(&shared),
+            tile_tx,
+            depth: cfg.pipeline_depth.max(1),
+            draining: false,
+            flights: FxHashMap::default(),
+            ready: VecDeque::new(),
+            descs: FxHashMap::default(),
+            accs_f32: FxHashMap::default(),
+            accs_i32: FxHashMap::default(),
+            next_flight: 0,
+            next_tag: 0,
+            in_flight: 0,
+        };
+        let sched = std::thread::Builder::new()
+            .name("maxeva-scheduler".into())
+            .spawn(move || sched.run(events_rx))
+            .map_err(|e| anyhow!("spawning scheduler: {e}"))?;
+
+        Ok(MatMulServer {
+            events: events_tx,
+            sched: Some(sched),
+            forwarder: Some(forwarder),
+            gate,
+            shared,
+            cycles,
+            invocations,
+            info_f32,
+            info_int8,
+            freq_hz,
+            backend,
+            workers,
             pipeline_depth: cfg.pipeline_depth.max(1),
-            wall_time_s: 0.0,
+            policy: cfg.admission,
+            queue_depth: cfg.queue_depth,
         })
     }
 
-    /// Native design size (nm, nk, nn).
-    pub fn native(&self) -> (u64, u64, u64) {
-        self.device.native
+    /// Per-precision device facts — the server-side dispatch point.
+    fn info_for(&self, p: Precision) -> Result<PrecisionInfo> {
+        match p {
+            Precision::Fp32 => Ok(self.info_f32),
+            Precision::Int8 => Ok(self.info_int8),
+            other => Err(anyhow!("serving supports fp32 and int8, not {other}")),
+        }
     }
 
-    /// Steady-state iteration period of the design, in device cycles.
+    /// Native fp32 design size (nm, nk, nn).
+    pub fn native(&self) -> (u64, u64, u64) {
+        self.info_f32.native
+    }
+
+    /// Native design size for a serving precision.
+    pub fn native_for(&self, p: Precision) -> Result<(u64, u64, u64)> {
+        Ok(self.info_for(p)?.native)
+    }
+
+    /// Steady-state fp32 iteration period of the design, in device cycles.
     pub fn period_cycles(&self) -> f64 {
-        self.device.period_cycles
+        self.info_f32.period_cycles
+    }
+
+    /// Iteration period for a serving precision, in device cycles.
+    pub fn period_cycles_for(&self, p: Precision) -> Result<f64> {
+        Ok(self.info_for(p)?.period_cycles)
     }
 
     /// Device clock frequency, Hz.
     pub fn freq_hz(&self) -> f64 {
-        self.device.freq_hz
+        self.freq_hz
     }
 
     /// Resolved tile-execution backend ("pjrt" or "reference").
     pub fn backend(&self) -> &'static str {
-        self.device.backend
+        self.backend
     }
 
     /// Device worker threads.
     pub fn workers(&self) -> usize {
-        self.device.workers
+        self.workers
     }
 
     /// Configured in-flight window.
@@ -182,223 +836,204 @@ impl MatMulServer {
         self.pipeline_depth
     }
 
+    /// Admission queue bound (`0` = unbounded).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
     /// Reconfigure the in-flight window (the A/B knob; `1` = synchronous).
     pub fn set_pipeline_depth(&mut self, depth: usize) {
         self.pipeline_depth = depth.max(1);
+        let _ = self.events.send(Event::SetDepth(depth));
     }
 
-    /// `(mean, max)` window occupancy of the most recent `run_batch` —
+    /// `(mean, max)` window occupancy since the last `run_batch` began —
     /// unlike [`ServerStats::mean_in_flight`] this is not diluted by
     /// earlier batches run at other depths.
     pub fn last_batch_occupancy(&self) -> (f64, usize) {
-        (self.last_window.mean(), self.last_window.max())
+        let w = self.shared.last_window.lock().unwrap();
+        (w.mean(), w.max())
     }
 
-    /// Execute one request synchronously (convenience path).
+    fn validate(req: &MatMulRequest, ops: &Operands) -> Result<()> {
+        match (req.precision, ops) {
+            (Precision::Fp32, Operands::F32 { a, b }) => {
+                if a.len() as u64 != req.m * req.k {
+                    return Err(anyhow!("request {}: A shape mismatch", req.id));
+                }
+                if b.len() as u64 != req.k * req.n {
+                    return Err(anyhow!("request {}: B shape mismatch", req.id));
+                }
+                Ok(())
+            }
+            (Precision::Int8, Operands::I32 { a, b }) => {
+                if a.len() as u64 != req.m * req.k {
+                    return Err(anyhow!("request {}: A shape mismatch", req.id));
+                }
+                if b.len() as u64 != req.k * req.n {
+                    return Err(anyhow!("request {}: B shape mismatch", req.id));
+                }
+                if a.iter().chain(b.iter()).any(|v| !(-128..=127).contains(v)) {
+                    return Err(anyhow!(
+                        "request {}: int8 operands must be in [-128, 127]",
+                        req.id
+                    ));
+                }
+                Ok(())
+            }
+            (Precision::Fp32, Operands::I32 { .. }) | (Precision::Int8, Operands::F32 { .. }) => {
+                Err(anyhow!(
+                    "request {}: operand container does not match request precision {}",
+                    req.id,
+                    req.precision
+                ))
+            }
+            (p, _) => Err(anyhow!("serving supports fp32 and int8, not {p}")),
+        }
+    }
+
+    fn submit_inner(
+        &self,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+        reply: Reply,
+    ) -> Result<()> {
+        Self::validate(&req, &ops)?;
+        self.gate.admit(policy)?;
+        let adm = Box::new(Admitted {
+            req,
+            ops: Some(ops),
+            submitted: Instant::now(),
+            reply: Some(reply),
+            gate: Arc::clone(&self.gate),
+        });
+        if self.events.send(Event::Admit(adm)).is_err() {
+            // The returned Admitted dropped: slot freed, reply errored.
+            return Err(anyhow!("server is shut down"));
+        }
+        Ok(())
+    }
+
+    /// Admit one request under the configured admission policy and get a
+    /// completion handle. Blocks (policy `Block`) or fails with
+    /// [`QueueFull`] (policy `Reject`) when `queue_depth` requests are
+    /// already open.
+    pub fn submit(&self, req: MatMulRequest, ops: Operands) -> Result<RequestHandle> {
+        self.submit_with_policy(req, ops, self.policy)
+    }
+
+    /// [`MatMulServer::submit`] with an explicit per-call policy.
+    pub fn submit_with_policy(
+        &self,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+    ) -> Result<RequestHandle> {
+        let (tx, rx) = mpsc::channel();
+        let id = req.id;
+        self.submit_inner(req, ops, policy, Reply::Handle(tx))?;
+        Ok(RequestHandle { id, rx })
+    }
+
+    /// Admit one request and deliver its completion through `callback`
+    /// instead of a handle. The callback runs on the scheduler thread —
+    /// keep it short (hand heavy post-processing to another thread).
+    pub fn submit_with_callback(
+        &self,
+        req: MatMulRequest,
+        ops: Operands,
+        callback: impl FnOnce(MatMulRequest, Result<MatOutput>) + Send + 'static,
+    ) -> Result<()> {
+        self.submit_inner(req, ops, self.policy, Reply::Callback(Box::new(callback)))
+    }
+
+    /// Execute one fp32 request synchronously (convenience path).
     pub fn execute(&mut self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
         let mut out = self.run_batch(vec![(req, a, b)])?;
         Ok(out.pop().unwrap())
     }
 
-    /// Admit one request: validate shapes and cache the grid. Packing is
-    /// deferred to the request's first schedule (see [`InFlight::raw`]).
-    fn admit(&self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>, device_s0: f64) -> InFlight {
-        assert_eq!(a.len() as u64, req.m * req.k, "A shape mismatch");
-        assert_eq!(b.len() as u64, req.k * req.n, "B shape mismatch");
-        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
-        let grid = self.tiler.grid(m, k, n);
-        let (gm, gk, gn) = grid;
-        InFlight {
-            grid,
-            raw: Some((a, b)),
-            a_tiles: Vec::new(),
-            b_tiles: Vec::new(),
-            c: vec![0.0; m * n],
-            next_tile: 0,
-            total_tiles: gm * gk * gn,
-            done_tiles: 0,
-            started: Instant::now(),
-            invocations: 0,
-            device_s0,
-            req,
-        }
-    }
-
-    /// Execute a batch of requests through the pipelined engine.
-    /// Returns the outputs in request order.
+    /// Serve a closed fp32 batch through the streaming engine (submit
+    /// everything with blocking admission, wait in order). Returns the
+    /// outputs in request order.
     pub fn run_batch(
         &mut self,
         batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
     ) -> Result<Vec<Vec<f32>>> {
-        let wall0 = Instant::now();
-        let depth = self.pipeline_depth;
-        self.last_window = WindowOcc::default();
-        let device_s0 = self.device.device_time_s();
-        let mut flights: Vec<InFlight> = batch
-            .into_iter()
-            .map(|(req, a, b)| self.admit(req, a, b, device_s0))
-            .collect();
-
-        let mut outputs: Vec<Option<Vec<f32>>> = (0..flights.len()).map(|_| None).collect();
-        // Degenerate (zero-tile) requests complete immediately — still
-        // recorded, so stats().requests matches the outputs returned.
-        for (idx, f) in flights.iter_mut().enumerate() {
-            if f.total_tiles == 0 {
-                self.stats.record(Completion {
-                    id: f.req.id,
-                    macs: f.req.macs(),
-                    wall: f.started.elapsed(),
-                    device_s: 0.0,
-                    invocations: 0,
-                });
-                outputs[idx] = Some(std::mem::take(&mut f.c));
-            }
-        }
-
-        // Window-level round-robin: each ready request submits one tile,
-        // then rotates to the back of the queue.
-        let mut ready: VecDeque<usize> = (0..flights.len())
-            .filter(|&i| flights[i].total_tiles > 0)
-            .collect();
-        let (done_tx, done_rx) = mpsc::channel::<TileDone>();
-        let mut descs: FxHashMap<u64, JobDesc> = FxHashMap::default();
-        let mut accs: FxHashMap<(usize, usize, usize), BlockAcc> = FxHashMap::default();
-        let mut next_tag: u64 = 0;
-        let mut in_flight = 0usize;
-
-        loop {
-            // Fill the window.
-            while in_flight < depth {
-                let Some(fi) = ready.pop_front() else { break };
-                let f = &mut flights[fi];
-                let (_gm, gk, gn) = f.grid;
-                // First schedule of this request: pack its operands into
-                // the tile-major pools now — one extract pass per block,
-                // total, overlapping whatever is already in flight.
-                if let Some((a, b)) = f.raw.take() {
-                    let (m, k, n) =
-                        (f.req.m as usize, f.req.k as usize, f.req.n as usize);
-                    let (nm, nk, nn) = (self.tiler.nm, self.tiler.nk, self.tiler.nn);
-                    f.a_tiles = Tiler::pack_tile_major(&a, m, k, nm, nk)
-                        .into_iter()
-                        .map(Arc::new)
-                        .collect();
-                    f.b_tiles = Tiler::pack_tile_major(&b, k, n, nk, nn)
-                        .into_iter()
-                        .map(Arc::new)
-                        .collect();
-                }
-                // k-innermost walk: tile t = (im·gn + inn)·gk + ik.
-                let t = f.next_tile;
-                f.next_tile += 1;
-                let ik = t % gk;
-                let blk = t / gk;
-                let im = blk / gn;
-                let inn = blk % gn;
-                let tag = next_tag;
-                next_tag += 1;
-                descs.insert(tag, JobDesc { flight: fi, im, inn, ik });
-                f.invocations += 1;
-                if f.next_tile < f.total_tiles {
-                    ready.push_back(fi);
-                }
-                self.device.submit(TileJobF32 {
-                    tag,
-                    a: Arc::clone(&f.a_tiles[im * gk + ik]),
-                    b: Arc::clone(&f.b_tiles[ik * gn + inn]),
-                    done: done_tx.clone(),
-                })?;
-                in_flight += 1;
-            }
-            if in_flight == 0 {
-                break;
-            }
-            self.last_window.record(in_flight);
-
-            // Drain one completion (host reduce overlaps the tiles still
-            // executing on the workers).
-            let done = done_rx
-                .recv()
-                .map_err(|_| anyhow!("device completion channel closed"))?;
-            in_flight -= 1;
-            let desc = descs
-                .remove(&done.tag)
-                .ok_or_else(|| anyhow!("unknown completion tag {}", done.tag))?;
-            let partial = done.result?;
-            self.reduce_partial(&mut flights, &mut accs, desc, partial);
-            let f = &mut flights[desc.flight];
-            if f.done_tiles == f.total_tiles && outputs[desc.flight].is_none() {
-                let wall = f.started.elapsed();
-                self.stats.record(Completion {
-                    id: f.req.id,
-                    macs: f.req.macs(),
-                    wall,
-                    device_s: self.device.device_time_s() - f.device_s0,
-                    invocations: f.invocations,
-                });
-                outputs[desc.flight] = Some(std::mem::take(&mut f.c));
-            }
-        }
-        self.window.merge(&self.last_window);
-        self.wall_time_s += wall0.elapsed().as_secs_f64();
-        Ok(outputs.into_iter().map(|o| o.unwrap()).collect())
+        self.run_batch_mixed(
+            batch
+                .into_iter()
+                .map(|(req, a, b)| (req, Operands::F32 { a, b }))
+                .collect(),
+        )?
+        .into_iter()
+        .map(MatOutput::into_f32)
+        .collect()
     }
 
-    /// Reduce one completed partial product into its output block,
-    /// preserving ascending-`ik` order; write the block back once full.
-    fn reduce_partial(
+    /// Serve a closed mixed-precision batch through the streaming
+    /// engine. Returns the outputs in request order.
+    pub fn run_batch_mixed(
         &mut self,
-        flights: &mut [InFlight],
-        accs: &mut FxHashMap<(usize, usize, usize), BlockAcc>,
-        desc: JobDesc,
-        partial: Vec<f32>,
-    ) {
-        let (nm, nn) = (self.tiler.nm, self.tiler.nn);
-        let f = &mut flights[desc.flight];
-        let (_gm, gk, _gn) = f.grid;
-        let key = (desc.flight, desc.im, desc.inn);
-        let acc = accs.entry(key).or_insert_with(|| BlockAcc {
-            buf: vec![0.0; nm * nn],
-            next_ik: 0,
-            pending: BTreeMap::new(),
-        });
-        acc.pending.insert(desc.ik, partial);
-        while let Some(p) = acc.pending.remove(&acc.next_ik) {
-            for (dst, src) in acc.buf.iter_mut().zip(&p) {
-                *dst += *src;
-            }
-            acc.next_ik += 1;
-            f.done_tiles += 1;
+        batch: Vec<(MatMulRequest, Operands)>,
+    ) -> Result<Vec<MatOutput>> {
+        let wall0 = Instant::now();
+        let _ = self.events.send(Event::ResetEpoch);
+        let mut handles = Vec::with_capacity(batch.len());
+        for (req, ops) in batch {
+            handles.push(self.submit_with_policy(req, ops, AdmissionPolicy::Block)?);
         }
-        if acc.next_ik == gk {
-            let full = accs.remove(&key).unwrap();
-            let (m, n) = (f.req.m as usize, f.req.n as usize);
-            Tiler::write_block(&mut f.c, m, n, desc.im, desc.inn, nm, nn, &full.buf);
-        }
+        let outs: Result<Vec<MatOutput>> = handles.into_iter().map(RequestHandle::wait).collect();
+        *self.shared.wall_time_s.lock().unwrap() += wall0.elapsed().as_secs_f64();
+        outs
     }
 
     /// Snapshot serving statistics.
     pub fn stats(&self) -> ServerStats {
+        let stats = self.shared.stats.lock().unwrap();
+        let window = self.shared.window.lock().unwrap();
         ServerStats {
-            requests: self.stats.count(),
-            invocations: self.device.invocations(),
-            mean_latency_ms: self.stats.mean_latency_ms(),
-            p99_latency_ms: self.stats.p99_latency_ms(),
-            device_ops_per_sec: self.stats.device_ops_per_sec(),
-            device_time_s: self.device.device_time_s(),
-            wall_time_s: self.wall_time_s,
+            requests: stats.count(),
+            requests_fp32: stats.count_by(Precision::Fp32),
+            requests_int8: stats.count_by(Precision::Int8),
+            invocations: self.invocations.load(Ordering::Relaxed),
+            mean_latency_ms: stats.mean_latency_ms(),
+            p99_latency_ms: stats.p99_latency_ms(),
+            device_ops_per_sec: stats.device_ops_per_sec(),
+            device_time_s: self.cycles.load(Ordering::Relaxed) as f64 / self.freq_hz,
+            wall_time_s: *self.shared.wall_time_s.lock().unwrap(),
             pipeline_depth: self.pipeline_depth,
-            mean_in_flight: self.window.mean(),
-            max_in_flight: self.window.max(),
+            mean_in_flight: window.mean(),
+            max_in_flight: window.max(),
         }
     }
 
-    /// Shut the device workers down.
-    pub fn shutdown(self) {
-        self.device.shutdown();
+    fn stop(&mut self) {
+        let _ = self.events.send(Event::Drain);
+        if let Some(j) = self.sched.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.forwarder.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Graceful shutdown: drain every open request, then stop the
+    /// scheduler and device workers.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+}
+
+impl Drop for MatMulServer {
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
 // Integration tests (needing built artifacts) live in
 // rust/tests/serving_e2e.rs; backend-independent pipelined-vs-sequential
-// equivalence tests live in rust/tests/pipeline_equivalence.rs.
+// equivalence tests in rust/tests/pipeline_equivalence.rs; streaming
+// admission, backpressure and mixed-precision tests in
+// rust/tests/streaming_admission.rs.

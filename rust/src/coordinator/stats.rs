@@ -2,7 +2,9 @@
 //! window occupancy (how many tiles were actually in flight — the
 //! measured counterpart of the configured `pipeline_depth`).
 
+use crate::arch::precision::Precision;
 use crate::util::stats::{mean, percentile};
+use std::collections::VecDeque;
 use std::time::Duration;
 
 /// In-flight window occupancy aggregate, sampled once per completion
@@ -36,13 +38,6 @@ impl WindowOcc {
     pub fn max(&self) -> usize {
         self.max
     }
-
-    /// Fold another aggregate into this one (per-batch → cumulative).
-    pub fn merge(&mut self, other: &WindowOcc) {
-        self.samples += other.samples;
-        self.sum += other.sum;
-        self.max = self.max.max(other.max);
-    }
 }
 
 /// Completion record for one request.
@@ -50,6 +45,8 @@ impl WindowOcc {
 pub struct Completion {
     pub id: u64,
     pub macs: u64,
+    /// Precision the request ran in (fp32 or int8).
+    pub precision: Precision,
     pub wall: Duration,
     /// Device time consumed by this request's tiles (seconds).
     pub device_s: f64,
@@ -57,34 +54,66 @@ pub struct Completion {
     pub invocations: u64,
 }
 
-/// Aggregated serving statistics.
+/// Latency samples retained for mean/percentile queries. The server is
+/// long-lived (open streaming admission), so per-request state must be
+/// bounded: totals below are exact running counters, latency stats are
+/// over the most recent window.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Aggregated serving statistics. Counts/MACs/device time are exact
+/// lifetime totals; wall-latency mean/p99 are computed over the last
+/// [`LATENCY_WINDOW`] completions so memory stays O(1) per server.
 #[derive(Debug, Clone, Default)]
 pub struct StatsAgg {
-    completions: Vec<Completion>,
+    count: usize,
+    count_fp32: usize,
+    count_int8: usize,
+    total_macs: u64,
+    total_device_s: f64,
+    recent_latency_ms: VecDeque<f64>,
 }
 
 impl StatsAgg {
     pub fn record(&mut self, c: Completion) {
-        self.completions.push(c);
+        self.count += 1;
+        match c.precision {
+            Precision::Fp32 => self.count_fp32 += 1,
+            Precision::Int8 => self.count_int8 += 1,
+            _ => {}
+        }
+        self.total_macs += c.macs;
+        self.total_device_s += c.device_s;
+        if self.recent_latency_ms.len() == LATENCY_WINDOW {
+            self.recent_latency_ms.pop_front();
+        }
+        self.recent_latency_ms.push_back(c.wall.as_secs_f64() * 1e3);
     }
 
     pub fn count(&self) -> usize {
-        self.completions.len()
+        self.count
+    }
+
+    /// Completions that ran in `precision` (per-precision traffic split).
+    pub fn count_by(&self, precision: Precision) -> usize {
+        match precision {
+            Precision::Fp32 => self.count_fp32,
+            Precision::Int8 => self.count_int8,
+            _ => 0,
+        }
     }
 
     pub fn total_macs(&self) -> u64 {
-        self.completions.iter().map(|c| c.macs).sum()
+        self.total_macs
     }
 
     pub fn total_device_s(&self) -> f64 {
-        self.completions.iter().map(|c| c.device_s).sum()
+        self.total_device_s
     }
 
+    /// Wall latencies (ms) of the most recent completions (bounded at
+    /// [`LATENCY_WINDOW`]).
     pub fn wall_latencies_ms(&self) -> Vec<f64> {
-        self.completions
-            .iter()
-            .map(|c| c.wall.as_secs_f64() * 1e3)
-            .collect()
+        self.recent_latency_ms.iter().copied().collect()
     }
 
     pub fn mean_latency_ms(&self) -> f64 {
@@ -116,6 +145,7 @@ mod tests {
         s.record(Completion {
             id: 0,
             macs: 1000,
+            precision: Precision::Fp32,
             wall: Duration::from_millis(10),
             device_s: 1e-6,
             invocations: 1,
@@ -123,11 +153,15 @@ mod tests {
         s.record(Completion {
             id: 1,
             macs: 3000,
+            precision: Precision::Int8,
             wall: Duration::from_millis(30),
             device_s: 3e-6,
             invocations: 3,
         });
         assert_eq!(s.count(), 2);
+        assert_eq!(s.count_by(Precision::Fp32), 1);
+        assert_eq!(s.count_by(Precision::Int8), 1);
+        assert_eq!(s.count_by(Precision::Bf16), 0);
         assert_eq!(s.total_macs(), 4000);
         assert!((s.mean_latency_ms() - 20.0).abs() < 1e-9);
         assert!((s.device_ops_per_sec() - 2.0 * 4000.0 / 4e-6).abs() < 1.0);
@@ -141,6 +175,28 @@ mod tests {
     }
 
     #[test]
+    fn latency_window_is_bounded_but_totals_are_exact() {
+        // A long-lived streaming server must not grow per-request state
+        // without bound: totals keep counting, latencies roll over.
+        let mut s = StatsAgg::default();
+        let n = LATENCY_WINDOW + 100;
+        for i in 0..n {
+            s.record(Completion {
+                id: i as u64,
+                macs: 10,
+                precision: Precision::Fp32,
+                wall: Duration::from_millis(1),
+                device_s: 1e-9,
+                invocations: 1,
+            });
+        }
+        assert_eq!(s.count(), n);
+        assert_eq!(s.count_by(Precision::Fp32), n);
+        assert_eq!(s.total_macs(), 10 * n as u64);
+        assert_eq!(s.wall_latencies_ms().len(), LATENCY_WINDOW);
+    }
+
+    #[test]
     fn window_occupancy_aggregates() {
         let mut w = WindowOcc::default();
         assert_eq!(w.mean(), 0.0);
@@ -150,12 +206,5 @@ mod tests {
         assert_eq!(w.samples(), 4);
         assert_eq!(w.max(), 4);
         assert!((w.mean() - 3.0).abs() < 1e-12);
-
-        let mut total = WindowOcc::default();
-        total.record(6);
-        total.merge(&w);
-        assert_eq!(total.samples(), 5);
-        assert_eq!(total.max(), 6);
-        assert!((total.mean() - (6 + 1 + 4 + 4 + 3) as f64 / 5.0).abs() < 1e-12);
     }
 }

@@ -190,8 +190,31 @@ pub fn matmul_ref_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec
             }
             let brow = &b[kk * n..kk * n + n];
             let crow = &mut c[i * n..i * n + n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Reference row-major matmul for the int8 path: int8-range operands
+/// carried as `i32`, i32 accumulation with wrapping adds (bit-exact
+/// regardless of tile/reduction order — integer addition is
+/// associative, so the pipelined engine's outputs match this reference
+/// exactly, not just within a tolerance).
+pub fn matmul_ref_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv = cv.wrapping_add(av.wrapping_mul(bv));
             }
         }
     }
@@ -346,5 +369,34 @@ mod tests {
         let mut dst = vec![i32::MAX; 1];
         Tiler::accumulate_block_i32(&mut dst, 1, 1, 0, 0, 1, 1, &[1]);
         assert_eq!(dst[0], i32::MIN);
+    }
+
+    #[test]
+    fn i32_tiled_matmul_is_bit_exact() {
+        // Integer tiling is exact: extract/accumulate through any block
+        // decomposition reproduces the direct reference bit-for-bit.
+        let mut rng = XorShift64::new(99);
+        let t = Tiler { nm: 4, nk: 8, nn: 4 };
+        for _ in 0..8 {
+            let m = rng.gen_range(1, 20) as usize;
+            let k = rng.gen_range(1, 20) as usize;
+            let n = rng.gen_range(1, 20) as usize;
+            let a: Vec<i32> = (0..m * k).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+            let want = matmul_ref_i32(&a, &b, m, k, n);
+            let (gm, gk, gn) = t.grid(m, k, n);
+            let mut c = vec![0i32; m * n];
+            for im in 0..gm {
+                for ik in 0..gk {
+                    let ab = Tiler::extract_block(&a, m, k, im, ik, t.nm, t.nk);
+                    for inn in 0..gn {
+                        let bb = Tiler::extract_block(&b, k, n, ik, inn, t.nk, t.nn);
+                        let cb = matmul_ref_i32(&ab, &bb, t.nm, t.nk, t.nn);
+                        Tiler::accumulate_block_i32(&mut c, m, n, im, inn, t.nm, t.nn, &cb);
+                    }
+                }
+            }
+            assert_eq!(c, want, "{m}x{k}x{n}");
+        }
     }
 }

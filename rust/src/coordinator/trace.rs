@@ -8,9 +8,9 @@
 //! (An M/D/1-style simulation: deterministic per-request service derived
 //! from the tiling model, stochastic arrivals.)
 
-use crate::tiling::padding::TiledWorkload;
 use crate::kernels::matmul::MatMulKernel;
 use crate::optimizer::array::ArrayCandidate;
+use crate::tiling::padding::TiledWorkload;
 use crate::util::prng::XorShift64;
 use crate::util::stats::{mean, percentile};
 use crate::workloads::MatMulRequest;

@@ -31,6 +31,22 @@
 //! * [`report`] — paper-table formatting and paper-vs-measured comparison.
 //! * [`workloads`] — workload generators (matrix sweeps, MLP, request traces).
 
+// Lint posture (CI runs `cargo clippy -- -D warnings` as a blocking
+// gate): these style lints fight idioms this codebase uses on purpose
+// and are allowed crate-wide rather than per-site.
+#![allow(
+    // Matrix/placement code indexes rows, columns and blocks explicitly;
+    // iterator rewrites of coupled index arithmetic obscure the math.
+    clippy::needless_range_loop,
+    // Block addressing is inherently many-parameter (dst/src + matrix
+    // shape + block position + block shape).
+    clippy::too_many_arguments,
+    // Serving batches are `(request, operands…)` tuples by design.
+    clippy::type_complexity,
+    // Paper-calibrated constants keep their published digits.
+    clippy::excessive_precision
+)]
+
 pub mod arch;
 pub mod charm;
 pub mod config;

@@ -11,6 +11,9 @@
 //!   serve     [--requests N] [--size S] [--config cfg]  end-to-end serving
 //!   info                                                device + artifact info
 
+// Same lint posture as the library crate (see rust/src/lib.rs).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments, clippy::type_complexity)]
+
 use maxeva::arch::device::AieDevice;
 use maxeva::arch::precision::Precision;
 use maxeva::charm::CharmDesign;
@@ -239,6 +242,7 @@ fn cmd_table1() -> i32 {
     let mm32 = MatMulKernel::paper_kernel(Precision::Fp32);
     let a8 = AddKernel::new(32, 32, Precision::Int8);
     let a32 = AddKernel::new(32, 32, Precision::Fp32);
+    #[rustfmt::skip]
     let rows: Vec<(String, u64, f64, f64)> = vec![
         ("MatMul int8 32x128x32".into(), mm8.latency_cycles(), mm8.throughput_macs_per_cycle(), mm8.efficiency()),
         ("Add int32 32x32".into(), a8.latency_cycles(), a8.throughput_ops_per_cycle(), a8.efficiency()),
@@ -343,7 +347,9 @@ fn cmd_table(prec: Precision) -> i32 {
     ]);
     print!("{}", t.render());
     if prec == Precision::Int8 {
-        println!("note: CHARM int8 power is not published (closed source); EE column model-estimated.");
+        println!(
+            "note: CHARM int8 power is not published (closed source); EE column model-estimated."
+        );
     }
     0
 }
@@ -449,7 +455,10 @@ fn cmd_serve(args: &Args) -> i32 {
     match server.run_batch(batch) {
         Ok(outs) => {
             let stats = server.stats();
-            println!("served {} requests ({} tile invocations)", stats.requests, stats.invocations);
+            println!(
+                "served {} requests ({} fp32 / {} int8, {} tile invocations)",
+                stats.requests, stats.requests_fp32, stats.requests_int8, stats.invocations
+            );
             println!("mean latency : {:.1} ms (wall, CPU emulation)", stats.mean_latency_ms);
             println!("device time  : {:.3} ms total", stats.device_time_s * 1e3);
             println!(

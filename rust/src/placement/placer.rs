@@ -319,9 +319,13 @@ mod tests {
     fn paper_11x4x7_and_12x4x6_dma_banks() {
         // Table II rows 3 and 5: 18 and 16 DMA banks.
         let d = dev();
-        let a = place_design(&d, ArrayCandidate::new(11, 4, 7), Pattern::P1, kernel(Precision::Fp32)).unwrap();
+        let a =
+            place_design(&d, ArrayCandidate::new(11, 4, 7), Pattern::P1, kernel(Precision::Fp32))
+                .unwrap();
         assert_eq!(a.dma_banks, 18); // 77 groups → 9 T-shapes... wait: 77/9
-        let b = place_design(&d, ArrayCandidate::new(12, 4, 6), Pattern::P1, kernel(Precision::Fp32)).unwrap();
+        let b =
+            place_design(&d, ArrayCandidate::new(12, 4, 6), Pattern::P1, kernel(Precision::Fp32))
+                .unwrap();
         assert_eq!(b.dma_banks, 16); // 72 groups → 8 T-shapes
     }
 
@@ -393,7 +397,8 @@ mod tests {
     #[test]
     fn unsupported_y_rejected() {
         let d = dev();
-        let err = place_auto(&d, ArrayCandidate::new(10, 5, 6), kernel(Precision::Fp32)).unwrap_err();
+        let err =
+            place_auto(&d, ArrayCandidate::new(10, 5, 6), kernel(Precision::Fp32)).unwrap_err();
         assert_eq!(err, PlacementError::UnsupportedY(5));
     }
 

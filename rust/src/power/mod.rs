@@ -129,7 +129,9 @@ mod tests {
 
     fn run(x: u64, y: u64, z: u64, pat: Pattern, prec: Precision) -> (PowerEstimate, SimResult) {
         let d = AieDevice::vc1902();
-        let pd = place_design(&d, ArrayCandidate::new(x, y, z), pat, MatMulKernel::paper_kernel(prec)).unwrap();
+        let pd =
+            place_design(&d, ArrayCandidate::new(x, y, z), pat, MatMulKernel::paper_kernel(prec))
+                .unwrap();
         let sim = simulate_design(&d, &pd, &SimConfig::default());
         (estimate_power(&d, &pd, &sim), sim)
     }

@@ -155,8 +155,10 @@ mod tests {
     #[test]
     fn table_units_differ_by_precision() {
         let dev = AieDevice::vc1902();
-        let f = evaluate_config(&dev, 12, 3, 8, Pattern::P2, Precision::Fp32, &SimConfig::default()).unwrap();
-        let i = evaluate_config(&dev, 12, 3, 8, Pattern::P2, Precision::Int8, &SimConfig::default()).unwrap();
+        let f = evaluate_config(&dev, 12, 3, 8, Pattern::P2, Precision::Fp32, &SimConfig::default())
+            .unwrap();
+        let i = evaluate_config(&dev, 12, 3, 8, Pattern::P2, Precision::Int8, &SimConfig::default())
+            .unwrap();
         // fp32 reported in GFLOPs (thousands), int8 in TOPs (tens).
         assert!(f.throughput_table_units() > 1000.0);
         assert!(i.throughput_table_units() < 100.0);

@@ -29,6 +29,7 @@ pub struct PaperRow {
 }
 
 /// Table II (fp32): the six MaxEVA configurations.
+#[rustfmt::skip]
 pub fn table2_fp32() -> Vec<PaperRow> {
     vec![
         PaperRow { x: 13, y: 4, z: 6, pattern: Pattern::P1, matmul_kernels: 312, total_cores: 390, memory_banks: 3138, dma_banks: 18, plios: 154, throughput_gops: 5442.11, power_w: Some(43.83), energy_eff: Some(124.16), core_power_w: Some(25.62), memory_power_w: Some(18.21) },
@@ -41,6 +42,7 @@ pub fn table2_fp32() -> Vec<PaperRow> {
 }
 
 /// Table III (int8): the six MaxEVA configurations (throughput in GOPs).
+#[rustfmt::skip]
 pub fn table3_int8() -> Vec<PaperRow> {
     vec![
         PaperRow { x: 13, y: 4, z: 6, pattern: Pattern::P1, matmul_kernels: 312, total_cores: 390, memory_banks: 3112, dma_banks: 18, plios: 154, throughput_gops: 77010.0, power_w: Some(66.83), energy_eff: Some(1.152), core_power_w: Some(48.65), memory_power_w: Some(18.18) },
@@ -83,6 +85,7 @@ pub struct PaperKernelRow {
     pub efficiency: f64,
 }
 
+#[rustfmt::skip]
 pub fn table1() -> Vec<PaperKernelRow> {
     vec![
         PaperKernelRow { name: "MatMul int8 32x128x32", latency_cyc: 1075, throughput_macs_per_cyc: 121.93, efficiency: 0.9526 },
@@ -123,9 +126,11 @@ mod tests {
     #[test]
     fn headline_gains_match_paper_claims() {
         // +20.8% fp32 and 2.19× int8 over CHARM.
-        let fp32_gain = table2_fp32()[0].throughput_gops / charm_row(Precision::Fp32).throughput_gops;
+        let fp32_gain =
+            table2_fp32()[0].throughput_gops / charm_row(Precision::Fp32).throughput_gops;
         assert!((fp32_gain - 1.208).abs() < 0.001);
-        let int8_gain = table3_int8()[0].throughput_gops / charm_row(Precision::Int8).throughput_gops;
+        let int8_gain =
+            table3_int8()[0].throughput_gops / charm_row(Precision::Int8).throughput_gops;
         assert!((int8_gain - 2.19).abs() < 0.005);
     }
 

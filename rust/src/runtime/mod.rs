@@ -178,6 +178,13 @@ pub fn artifacts_available(dir: &Path) -> bool {
     artifact_path(dir, "array_fp32_13x4x6").exists()
 }
 
+/// True if a specific named artifact — or its panel-scheduled `_fast`
+/// variant — exists in `dir`. The device pool uses this to decide
+/// whether the optional int8 executable can be loaded.
+pub fn named_artifact_available(dir: &Path, name: &str) -> bool {
+    artifact_path(dir, name).exists() || artifact_path(dir, &format!("{name}_fast")).exists()
+}
+
 /// The default artifacts directory: `$MAXEVA_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> PathBuf {
     std::env::var("MAXEVA_ARTIFACTS")
@@ -199,7 +206,23 @@ mod tests {
     fn default_dir_env_override() {
         // NOTE: relies on MAXEVA_ARTIFACTS being unset in the test env.
         let d = default_artifacts_dir();
-        assert!(d == PathBuf::from("artifacts") || d.is_absolute() || d.exists() || !d.as_os_str().is_empty());
+        assert!(
+            d == PathBuf::from("artifacts")
+                || d.is_absolute()
+                || d.exists()
+                || !d.as_os_str().is_empty()
+        );
+    }
+
+    #[test]
+    fn named_artifact_availability_checks_fast_variant() {
+        let dir = std::env::temp_dir().join("maxeva_named_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(!named_artifact_available(&dir, "array_int8_13x4x6"));
+        let p = artifact_path(&dir, "array_int8_13x4x6_fast");
+        std::fs::write(&p, "HloModule stub").unwrap();
+        assert!(named_artifact_available(&dir, "array_int8_13x4x6"));
+        std::fs::remove_file(&p).unwrap();
     }
 
     #[cfg(not(feature = "pjrt"))]

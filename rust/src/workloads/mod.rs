@@ -1,20 +1,101 @@
 //! Workload generators: the Fig. 8 matrix-size sweep, DNN layer sets and
-//! random request traces for the serving coordinator.
+//! random request traces for the serving coordinator — plus the operand /
+//! output containers the precision-generic serving engine moves around.
 
+use crate::arch::precision::Precision;
 use crate::util::prng::XorShift64;
+use anyhow::{anyhow, Result};
 
-/// A single MatMul request: `C (m×n) = A (m×k) · B (k×n)`.
+/// A single MatMul request: `C (m×n) = A (m×k) · B (k×n)`, executed in
+/// `precision` (per-request dispatch — one server can interleave fp32
+/// and int8 requests in the same pipeline window).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MatMulRequest {
     pub id: u64,
     pub m: u64,
     pub k: u64,
     pub n: u64,
+    /// Numeric precision this request runs in. The serving engine
+    /// supports [`Precision::Fp32`] and [`Precision::Int8`] (int8
+    /// operands, i32 accumulation — the paper's two headline paths).
+    pub precision: Precision,
 }
 
 impl MatMulRequest {
+    /// An fp32 request (the historical default).
+    pub fn f32(id: u64, m: u64, k: u64, n: u64) -> Self {
+        MatMulRequest { id, m, k, n, precision: Precision::Fp32 }
+    }
+
+    /// An int8 request: operands are int8-range values carried as `i32`
+    /// (matching [`crate::runtime::Executable::run_i32`]), results are
+    /// exact i32 accumulations.
+    pub fn int8(id: u64, m: u64, k: u64, n: u64) -> Self {
+        MatMulRequest { id, m, k, n, precision: Precision::Int8 }
+    }
+
     pub fn macs(&self) -> u64 {
         self.m * self.k * self.n
+    }
+}
+
+/// Operands of one request, typed by precision. Int8 operands are
+/// int8-range values carried as `i32` — the PJRT int8 artifacts take
+/// int32 operands and cast internally, and the i32 carrier keeps the
+/// reference backend's accumulation bit-exact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operands {
+    F32 { a: Vec<f32>, b: Vec<f32> },
+    I32 { a: Vec<i32>, b: Vec<i32> },
+}
+
+impl Operands {
+    /// The precision these operands are for.
+    pub fn precision(&self) -> Precision {
+        match self {
+            Operands::F32 { .. } => Precision::Fp32,
+            Operands::I32 { .. } => Precision::Int8,
+        }
+    }
+}
+
+/// Result of one request, typed by the request's precision (int8
+/// requests accumulate and return i32, per the paper's §IV-C1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MatOutput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl MatOutput {
+    pub fn len(&self) -> usize {
+        match self {
+            MatOutput::F32(v) => v.len(),
+            MatOutput::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            MatOutput::F32(v) => v.is_empty(),
+            MatOutput::I32(v) => v.is_empty(),
+        }
+    }
+
+    /// Unwrap an fp32 result.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            MatOutput::F32(v) => Ok(v),
+            MatOutput::I32(_) => Err(anyhow!("output is i32, not f32")),
+        }
+    }
+
+    /// Unwrap an int8-path (i32-accumulated) result.
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            MatOutput::I32(v) => Ok(v),
+            MatOutput::F32(_) => Err(anyhow!("output is f32, not i32")),
+        }
     }
 }
 
@@ -31,23 +112,39 @@ pub fn square_sweep(lo: u64, hi: u64) -> Vec<u64> {
     v
 }
 
-/// A reproducible random trace of MatMul requests with sizes drawn from
-/// power-of-two buckets weighted toward DL-typical GEMM shapes.
+/// A reproducible random trace of fp32 MatMul requests with sizes drawn
+/// from power-of-two buckets weighted toward DL-typical GEMM shapes.
 pub fn random_trace(n: usize, seed: u64) -> Vec<MatMulRequest> {
     let mut rng = XorShift64::new(seed);
     let sizes = [128u64, 256, 512, 1024, 2048];
     (0..n)
-        .map(|i| MatMulRequest {
-            id: i as u64,
-            m: *rng.choose(&sizes),
-            k: *rng.choose(&sizes),
-            n: *rng.choose(&sizes),
+        .map(|i| {
+            let (m, k, n) = (*rng.choose(&sizes), *rng.choose(&sizes), *rng.choose(&sizes));
+            MatMulRequest::f32(i as u64, m, k, n)
         })
         .collect()
 }
 
-/// Materialize a request trace into a serving batch: reproducible random
-/// f32 operands for each request, ready for
+/// A reproducible random trace mixing fp32 and int8 requests (roughly
+/// half each) — the dual-precision traffic shape the MaxEVA serving
+/// engine is built for.
+pub fn mixed_trace(n: usize, seed: u64) -> Vec<MatMulRequest> {
+    let mut rng = XorShift64::new(seed);
+    let sizes = [64u64, 128, 256, 512];
+    (0..n)
+        .map(|i| {
+            let (m, k, nn) = (*rng.choose(&sizes), *rng.choose(&sizes), *rng.choose(&sizes));
+            if rng.gen_range(0, 2) == 0 {
+                MatMulRequest::int8(i as u64, m, k, nn)
+            } else {
+                MatMulRequest::f32(i as u64, m, k, nn)
+            }
+        })
+        .collect()
+}
+
+/// Materialize an fp32 request trace into a serving batch: reproducible
+/// random f32 operands for each request, ready for
 /// [`crate::coordinator::MatMulServer::run_batch`]. Shared by the e2e
 /// bench, the serving example and the pipeline equivalence tests so the
 /// A/B configurations run byte-identical inputs.
@@ -62,9 +159,35 @@ pub fn materialize_batch(
     requests
         .iter()
         .map(|r| {
+            debug_assert_eq!(r.precision, Precision::Fp32, "materialize_batch is fp32-only");
             let a = rand_vec((r.m * r.k) as usize);
             let b = rand_vec((r.k * r.n) as usize);
             (*r, a, b)
+        })
+        .collect()
+}
+
+/// Materialize a mixed-precision trace: f32 operands in `[-1, 1)` for
+/// fp32 requests, int8-range integers (carried as i32) for int8
+/// requests. Deterministic in `seed`, so A/B engine configurations run
+/// byte-identical inputs.
+pub fn materialize_mixed(requests: &[MatMulRequest], seed: u64) -> Vec<(MatMulRequest, Operands)> {
+    let mut rng = XorShift64::new(seed);
+    requests
+        .iter()
+        .map(|r| {
+            let (an, bn) = ((r.m * r.k) as usize, (r.k * r.n) as usize);
+            let ops = match r.precision {
+                Precision::Int8 => Operands::I32 {
+                    a: (0..an).map(|_| rng.gen_range(0, 256) as i32 - 128).collect(),
+                    b: (0..bn).map(|_| rng.gen_range(0, 256) as i32 - 128).collect(),
+                },
+                _ => Operands::F32 {
+                    a: (0..an).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect(),
+                    b: (0..bn).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect(),
+                },
+            };
+            (*r, ops)
         })
         .collect()
 }
@@ -74,12 +197,12 @@ pub fn materialize_batch(
 pub fn transformer_block_gemms(rows: u64, d_model: u64, d_ff: u64) -> Vec<MatMulRequest> {
     vec![
         // QKV projection (fused): rows × d_model × 3·d_model
-        MatMulRequest { id: 0, m: rows, k: d_model, n: 3 * d_model },
+        MatMulRequest::f32(0, rows, d_model, 3 * d_model),
         // Attention output projection.
-        MatMulRequest { id: 1, m: rows, k: d_model, n: d_model },
+        MatMulRequest::f32(1, rows, d_model, d_model),
         // FFN up / down.
-        MatMulRequest { id: 2, m: rows, k: d_model, n: d_ff },
-        MatMulRequest { id: 3, m: rows, k: d_ff, n: d_model },
+        MatMulRequest::f32(2, rows, d_model, d_ff),
+        MatMulRequest::f32(3, rows, d_ff, d_model),
     ]
 }
 
@@ -97,6 +220,15 @@ mod tests {
     fn trace_deterministic() {
         assert_eq!(random_trace(10, 7), random_trace(10, 7));
         assert_ne!(random_trace(10, 7), random_trace(10, 8));
+        assert!(random_trace(10, 7).iter().all(|r| r.precision == Precision::Fp32));
+    }
+
+    #[test]
+    fn mixed_trace_has_both_precisions() {
+        let t = mixed_trace(32, 5);
+        assert_eq!(t, mixed_trace(32, 5));
+        assert!(t.iter().any(|r| r.precision == Precision::Int8));
+        assert!(t.iter().any(|r| r.precision == Precision::Fp32));
     }
 
     #[test]
@@ -128,5 +260,41 @@ mod tests {
         }
         let c = materialize_batch(&reqs, 100);
         assert_ne!(a[0].1, c[0].1, "different seeds must differ");
+    }
+
+    #[test]
+    fn materialized_mixed_matches_precision_and_range() {
+        let reqs = vec![MatMulRequest::int8(0, 5, 7, 3), MatMulRequest::f32(1, 4, 4, 4)];
+        let batch = materialize_mixed(&reqs, 21);
+        assert_eq!(batch, materialize_mixed(&reqs, 21));
+        match &batch[0].1 {
+            Operands::I32 { a, b } => {
+                assert_eq!(a.len(), 35);
+                assert_eq!(b.len(), 21);
+                assert!(a.iter().chain(b).all(|&v| (-128..=127).contains(&v)));
+            }
+            other => panic!("int8 request got {other:?}"),
+        }
+        match &batch[1].1 {
+            Operands::F32 { a, b } => {
+                assert_eq!(a.len(), 16);
+                assert_eq!(b.len(), 16);
+            }
+            other => panic!("fp32 request got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn output_unwrap_paths() {
+        assert_eq!(MatOutput::F32(vec![1.0]).into_f32().unwrap(), vec![1.0]);
+        assert_eq!(MatOutput::I32(vec![2]).into_i32().unwrap(), vec![2]);
+        assert!(MatOutput::F32(vec![]).into_i32().is_err());
+        assert!(MatOutput::I32(vec![]).into_f32().is_err());
+        assert!(MatOutput::F32(vec![]).is_empty());
+        assert_eq!(MatOutput::I32(vec![1, 2, 3]).len(), 3);
+        assert_eq!(
+            Operands::I32 { a: vec![], b: vec![] }.precision(),
+            Precision::Int8
+        );
     }
 }

@@ -1,7 +1,10 @@
 //! Property tests: the pipelined serving engine must produce
-//! **bit-identical** f32 outputs to the synchronous engine
+//! **bit-identical** outputs to the synchronous engine
 //! (`pipeline_depth = 1`), for any window depth and device worker count —
 //! the per-output-block reduction order is part of the engine's contract.
+//! This holds per precision: fp32 by ordered summation, int8 (i32
+//! accumulation) trivially, because wrapping integer addition is
+//! associative.
 //!
 //! These run the full request → pack → window → device pool → reduce
 //! path on the pure-Rust reference backend (no artifacts, no `pjrt`
@@ -11,12 +14,15 @@
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
-use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 use maxeva::util::prng::XorShift64;
-use maxeva::workloads::{materialize_batch, MatMulRequest};
+use maxeva::workloads::{
+    materialize_batch, materialize_mixed, MatMulRequest, MatOutput, Operands,
+};
 
 /// A tiny design the reference backend can chew through quickly:
-/// native (8, 16, 8).
+/// native (8, 16, 8) in both precisions (custom kernel → the int8
+/// sibling keeps the same tile geometry).
 fn small_cfg(workers: usize, pipeline_depth: usize) -> ServeConfig {
     let mut design = DesignConfig::flagship(Precision::Fp32);
     (design.x, design.y, design.z) = (2, 4, 2);
@@ -41,17 +47,30 @@ fn serve(
     out
 }
 
+fn serve_mixed(
+    batch: &[(MatMulRequest, Operands)],
+    workers: usize,
+    depth: usize,
+) -> Vec<MatOutput> {
+    let mut server = MatMulServer::start(&small_cfg(workers, depth)).unwrap();
+    let out = server.run_batch_mixed(batch.to_vec()).unwrap();
+    server.shutdown();
+    out
+}
+
 #[test]
 fn pipelined_bit_identical_to_sequential_across_random_batches() {
     let mut rng = XorShift64::new(0xE0_1);
     for round in 0..6u64 {
         let batch_len = rng.gen_range(1, 5) as usize;
         let reqs: Vec<MatMulRequest> = (0..batch_len)
-            .map(|i| MatMulRequest {
-                id: i as u64,
-                m: rng.gen_range(1, 40),
-                k: rng.gen_range(1, 40),
-                n: rng.gen_range(1, 40),
+            .map(|i| {
+                MatMulRequest::f32(
+                    i as u64,
+                    rng.gen_range(1, 40),
+                    rng.gen_range(1, 40),
+                    rng.gen_range(1, 40),
+                )
             })
             .collect();
         let batch = materialize_batch(&reqs, 7_000 + round);
@@ -68,15 +87,76 @@ fn pipelined_bit_identical_to_sequential_across_random_batches() {
 }
 
 #[test]
+fn mixed_precision_stream_bit_identical_to_sequential() {
+    // The acceptance property: a mixed fp32/int8 stream admitted through
+    // the open queue matches sequential (depth 1, 1 worker) execution
+    // bit-for-bit, for every window/worker combination.
+    let mut rng = XorShift64::new(0xAB_2);
+    for round in 0..4u64 {
+        let batch_len = rng.gen_range(2, 6) as usize;
+        let reqs: Vec<MatMulRequest> = (0..batch_len)
+            .map(|i| {
+                let (m, k, n) =
+                    (rng.gen_range(1, 40), rng.gen_range(1, 40), rng.gen_range(1, 40));
+                if rng.gen_range(0, 2) == 0 {
+                    MatMulRequest::int8(i as u64, m, k, n)
+                } else {
+                    MatMulRequest::f32(i as u64, m, k, n)
+                }
+            })
+            .collect();
+        let batch = materialize_mixed(&reqs, 9_100 + round);
+        let baseline = serve_mixed(&batch, 1, 1);
+        for (workers, depth) in [(1, 8), (2, 4), (3, 8)] {
+            let out = serve_mixed(&batch, workers, depth);
+            assert_eq!(
+                out, baseline,
+                "round {round}: mixed stream at depth {depth} / {workers} workers \
+                 diverged from the synchronous engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_outputs_match_scalar_i32_reference_exactly() {
+    // Integer accumulation is associative, so the engine's int8 results
+    // must equal the scalar i32 reference bit-for-bit (not within a
+    // tolerance) at any depth/worker count.
+    let reqs = vec![
+        MatMulRequest::int8(0, 23, 31, 17),
+        MatMulRequest::int8(1, 8, 16, 8),
+        MatMulRequest::int8(2, 33, 5, 40),
+    ];
+    let batch = materialize_mixed(&reqs, 303);
+    for (workers, depth) in [(1, 1), (2, 8), (3, 4)] {
+        let outs = serve_mixed(&batch, workers, depth);
+        for ((req, ops), out) in batch.iter().zip(&outs) {
+            let (a, b) = match ops {
+                Operands::I32 { a, b } => (a, b),
+                other => panic!("int8 request materialized as {other:?}"),
+            };
+            let want = matmul_ref_i32(a, b, req.m as usize, req.k as usize, req.n as usize);
+            assert_eq!(
+                out,
+                &MatOutput::I32(want),
+                "req {} at depth {depth} / {workers} workers",
+                req.id
+            );
+        }
+    }
+}
+
+#[test]
 fn pipelined_outputs_match_reference_matmul() {
     // Bit-equality between engine configurations is necessary but not
     // sufficient — the shared answer must also be the right matmul
-    // (tiled reduction order differs from the naive reference, so this
-    // one is a tolerance check).
+    // (tiled reduction order differs from the naive reference, so the
+    // fp32 one is a tolerance check).
     let reqs = vec![
-        MatMulRequest { id: 0, m: 23, k: 31, n: 17 },
-        MatMulRequest { id: 1, m: 8, k: 16, n: 8 },
-        MatMulRequest { id: 2, m: 33, k: 5, n: 40 },
+        MatMulRequest::f32(0, 23, 31, 17),
+        MatMulRequest::f32(1, 8, 16, 8),
+        MatMulRequest::f32(2, 33, 5, 40),
     ];
     let batch = materialize_batch(&reqs, 55);
     let outs = serve(&batch, 2, 8);
@@ -84,11 +164,7 @@ fn pipelined_outputs_match_reference_matmul() {
         let want = matmul_ref_f32(a, b, req.m as usize, req.k as usize, req.n as usize);
         assert_eq!(out.len(), want.len());
         for (i, (x, y)) in out.iter().zip(&want).enumerate() {
-            assert!(
-                (x - y).abs() < 1e-3,
-                "req {} idx {i}: {x} vs {y}",
-                req.id
-            );
+            assert!((x - y).abs() < 1e-3, "req {} idx {i}: {x} vs {y}", req.id);
         }
     }
 }
@@ -97,10 +173,7 @@ fn pipelined_outputs_match_reference_matmul() {
 fn depth_toggle_on_live_server_is_stable() {
     // The A/B knob used by benches: flipping pipeline_depth between
     // batches on one server must not change results.
-    let reqs = vec![
-        MatMulRequest { id: 0, m: 30, k: 20, n: 25 },
-        MatMulRequest { id: 1, m: 9, k: 33, n: 14 },
-    ];
+    let reqs = vec![MatMulRequest::f32(0, 30, 20, 25), MatMulRequest::f32(1, 9, 33, 14)];
     let batch = materialize_batch(&reqs, 91);
     let mut server = MatMulServer::start(&small_cfg(2, 4)).unwrap();
     let first = server.run_batch(batch.clone()).unwrap();
@@ -124,7 +197,7 @@ fn depth_toggle_on_live_server_is_stable() {
 fn zero_tile_requests_complete_and_are_recorded() {
     // k = 0 → zero tiles: the output is the zeroed m×n matrix and the
     // request still shows up in serving stats.
-    let req = MatMulRequest { id: 7, m: 4, k: 0, n: 4 };
+    let req = MatMulRequest::f32(7, 4, 0, 4);
     let mut server = MatMulServer::start(&small_cfg(1, 4)).unwrap();
     let outs = server.run_batch(vec![(req, vec![], vec![])]).unwrap();
     assert_eq!(outs.len(), 1);
@@ -137,7 +210,7 @@ fn zero_tile_requests_complete_and_are_recorded() {
 
 #[test]
 fn window_stays_synchronous_at_depth_one() {
-    let reqs = vec![MatMulRequest { id: 0, m: 20, k: 20, n: 20 }];
+    let reqs = vec![MatMulRequest::f32(0, 20, 20, 20)];
     let batch = materialize_batch(&reqs, 17);
     let mut server = MatMulServer::start(&small_cfg(2, 1)).unwrap();
     let _ = server.run_batch(batch).unwrap();

@@ -135,7 +135,8 @@ fn sim_period_scales_down_with_faster_kernel() {
     let d = dev();
     let c = ArrayCandidate::new(12, 3, 8);
     let p8 = place_design(&d, c, Pattern::P2, MatMulKernel::paper_kernel(Precision::Int8)).unwrap();
-    let p32 = place_design(&d, c, Pattern::P2, MatMulKernel::paper_kernel(Precision::Fp32)).unwrap();
+    let p32 =
+        place_design(&d, c, Pattern::P2, MatMulKernel::paper_kernel(Precision::Fp32)).unwrap();
     let s8 = simulate_design(&d, &p8, &SimConfig::default());
     let s32 = simulate_design(&d, &p32, &SimConfig::default());
     assert!(s32.period_cycles > 3.0 * s8.period_cycles);

@@ -38,7 +38,7 @@ fn single_request_native_size_correct() {
     let mut rng = XorShift64::new(21);
     let a = rand_vec((m * k) as usize, &mut rng);
     let b = rand_vec((k * n) as usize, &mut rng);
-    let req = MatMulRequest { id: 0, m, k, n };
+    let req = MatMulRequest::f32(0, m, k, n);
     let out = server.execute(req, a.clone(), b.clone()).unwrap();
     let want = matmul_ref_f32(&a, &b, m as usize, k as usize, n as usize);
     for (i, (x, y)) in out.iter().zip(&want).enumerate() {
@@ -62,7 +62,7 @@ fn odd_sizes_padded_correctly() {
     for (m, k, n) in [(100u64, 50u64, 70u64), (417, 129, 193), (512, 512, 512)] {
         let a = rand_vec((m * k) as usize, &mut rng);
         let b = rand_vec((k * n) as usize, &mut rng);
-        let req = MatMulRequest { id: m, m, k, n };
+        let req = MatMulRequest::f32(m, m, k, n);
         let out = server.execute(req, a.clone(), b.clone()).unwrap();
         let want = matmul_ref_f32(&a, &b, m as usize, k as usize, n as usize);
         assert_eq!(out.len(), want.len());
@@ -87,7 +87,7 @@ fn batched_requests_all_correct_and_interleaved() {
         .map(|(i, &(m, k, n))| {
             let a = rand_vec((m * k) as usize, &mut rng);
             let b = rand_vec((k * n) as usize, &mut rng);
-            (MatMulRequest { id: i as u64, m, k, n }, a, b)
+            (MatMulRequest::f32(i as u64, m, k, n), a, b)
         })
         .collect();
     let refs: Vec<Vec<f32>> = batch
@@ -126,7 +126,7 @@ fn reference_backend_serves_without_artifacts() {
         let a = rand_vec((m * k) as usize, &mut rng);
         let b = rand_vec((k * n) as usize, &mut rng);
         let out = server
-            .execute(MatMulRequest { id, m, k, n }, a.clone(), b.clone())
+            .execute(MatMulRequest::f32(id, m, k, n), a.clone(), b.clone())
             .unwrap();
         let want = matmul_ref_f32(&a, &b, m as usize, k as usize, n as usize);
         for (i, (x, y)) in out.iter().zip(&want).enumerate() {
@@ -150,12 +150,12 @@ fn device_time_accounting_scales_with_tiles() {
     let (m, k, n) = (416u64, 128u64, 192u64);
     let a = rand_vec((m * k) as usize, &mut rng);
     let b = rand_vec((k * n) as usize, &mut rng);
-    server.execute(MatMulRequest { id: 0, m, k, n }, a, b).unwrap();
+    server.execute(MatMulRequest::f32(0, m, k, n), a, b).unwrap();
     let t1 = server.stats().device_time_s;
     // 2×1×1 grid → 2 invocations → 2× device time.
     let a2 = rand_vec((2 * m * k) as usize, &mut rng);
     let b2 = rand_vec((k * n) as usize, &mut rng);
-    server.execute(MatMulRequest { id: 1, m: 2 * m, k, n }, a2, b2).unwrap();
+    server.execute(MatMulRequest::f32(1, 2 * m, k, n), a2, b2).unwrap();
     let t2 = server.stats().device_time_s;
     assert!(((t2 - t1) / t1 - 2.0).abs() < 1e-6, "t1={t1} t2={t2}");
     server.shutdown();

@@ -1,0 +1,290 @@
+//! Streaming-admission tests: the open queue, `queue_depth`
+//! backpressure under both policies, per-request completion delivery
+//! (handles and callbacks), and mixed-precision streaming — all on the
+//! pure-Rust reference backend (no artifacts needed).
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::server::{MatMulServer, QueueFull};
+use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
+use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
+use std::sync::mpsc;
+
+/// Tiny design (native 8×16×8 in both precisions) so tile grids are
+/// large and cheap on the scalar reference backend.
+fn small_cfg(workers: usize, pipeline_depth: usize, queue_depth: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = pipeline_depth;
+    cfg.queue_depth = queue_depth;
+    cfg
+}
+
+fn f32_ops(req: &MatMulRequest, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let batch = materialize_mixed(&[*req], seed);
+    match batch.into_iter().next().unwrap().1 {
+        Operands::F32 { a, b } => (a, b),
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn handles_resolve_out_of_submission_order() {
+    let server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let reqs: Vec<MatMulRequest> =
+        (0..4).map(|i| MatMulRequest::f32(i, 10 + i, 12, 9 + i)).collect();
+    let mut handles = Vec::new();
+    let mut wants = Vec::new();
+    for (i, req) in reqs.iter().enumerate() {
+        let (a, b) = f32_ops(req, 50 + i as u64);
+        wants.push(matmul_ref_f32(&a, &b, req.m as usize, req.k as usize, req.n as usize));
+        handles.push(server.submit(*req, Operands::F32 { a, b }).unwrap());
+    }
+    // Wait newest-first: completion delivery is per-request, not batch.
+    for (handle, want) in handles.into_iter().zip(wants).rev() {
+        let got = handle.wait().unwrap().into_f32().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn queue_depth_one_block_policy_serializes_without_deadlock() {
+    // With one admission slot and a blocking policy, each submit parks
+    // until the previous request fully retires — the stream must keep
+    // flowing (no deadlock against the in-flight window).
+    let mut cfg = small_cfg(2, 4, 1);
+    cfg.admission = AdmissionPolicy::Block;
+    let server = MatMulServer::start(&cfg).unwrap();
+    assert_eq!(server.queue_depth(), 1);
+    let mut handles = Vec::new();
+    for i in 0..5u64 {
+        let req = MatMulRequest::f32(i, 17, 21, 13);
+        let (a, b) = f32_ops(&req, 900 + i);
+        handles.push(server.submit(req, Operands::F32 { a, b }).unwrap());
+    }
+    for h in handles {
+        assert!(h.wait().is_ok());
+    }
+    assert_eq!(server.stats().requests, 5);
+    server.shutdown();
+}
+
+#[test]
+fn queue_depth_one_reject_policy_sheds_load() {
+    let mut cfg = small_cfg(1, 4, 1);
+    cfg.admission = AdmissionPolicy::Reject;
+    let server = MatMulServer::start(&cfg).unwrap();
+    // A large request (32×16×32 = 16384 tiles on the scalar backend)
+    // holds the only admission slot for many milliseconds.
+    let big = MatMulRequest::f32(0, 256, 256, 256);
+    let (a, b) = f32_ops(&big, 7);
+    let h = server.submit(big, Operands::F32 { a, b }).unwrap();
+
+    let mut rejected = 0;
+    for i in 0..6u64 {
+        let req = MatMulRequest::f32(1 + i, 8, 8, 8);
+        let (a, b) = f32_ops(&req, 70 + i);
+        match server.submit(req, Operands::F32 { a, b }) {
+            Ok(extra) => {
+                let _ = extra.wait();
+            }
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<QueueFull>().is_some(),
+                    "rejection must be typed QueueFull, got: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected >= 1, "burst against a held slot must shed load");
+    // The held request itself is unaffected by the rejected burst.
+    let out = h.wait().unwrap().into_f32().unwrap();
+    assert_eq!(out.len(), 256 * 256);
+    // The queue recovers: a blocking submit after the burst succeeds.
+    let req = MatMulRequest::f32(99, 9, 9, 9);
+    let (a, b) = f32_ops(&req, 123);
+    let late = server
+        .submit_with_policy(req, Operands::F32 { a, b }, AdmissionPolicy::Block)
+        .unwrap();
+    assert!(late.wait().is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn blocking_backpressure_from_multiple_producers() {
+    // Several producer threads push through a 2-slot queue; the gate
+    // serializes admissions and every request completes exactly once.
+    let mut cfg = small_cfg(2, 8, 2);
+    cfg.admission = AdmissionPolicy::Block;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let (done_tx, done_rx) = mpsc::channel::<u64>();
+    std::thread::scope(|scope| {
+        for t in 0..3u64 {
+            let server = &server;
+            let done_tx = done_tx.clone();
+            scope.spawn(move || {
+                for i in 0..4u64 {
+                    let id = t * 100 + i;
+                    let req = MatMulRequest::f32(id, 11, 19, 7);
+                    let (a, b) = f32_ops(&req, id);
+                    let h = server.submit(req, Operands::F32 { a, b }).unwrap();
+                    assert_eq!(h.id(), id);
+                    assert!(h.wait().is_ok());
+                    done_tx.send(id).unwrap();
+                }
+            });
+        }
+    });
+    drop(done_tx);
+    let mut ids: Vec<u64> = done_rx.iter().collect();
+    ids.sort_unstable();
+    assert_eq!(ids.len(), 12);
+    ids.dedup();
+    assert_eq!(ids.len(), 12, "every request completes exactly once");
+    assert_eq!(server.stats().requests, 12);
+    server.shutdown();
+}
+
+#[test]
+fn callbacks_fire_per_request() {
+    let server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let (tx, rx) = mpsc::channel::<(u64, usize)>();
+    for i in 0..3u64 {
+        let req = MatMulRequest::f32(i, 6 + i, 9, 5);
+        let (a, b) = f32_ops(&req, 400 + i);
+        let tx = tx.clone();
+        server
+            .submit_with_callback(req, Operands::F32 { a, b }, move |req, out| {
+                tx.send((req.id, out.unwrap().len())).unwrap();
+            })
+            .unwrap();
+    }
+    drop(tx);
+    let mut got: Vec<(u64, usize)> = rx.iter().collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![(0, 30), (1, 35), (2, 40)]);
+    server.shutdown();
+}
+
+#[test]
+fn panicking_callback_does_not_kill_the_stream() {
+    // Callbacks run on the scheduler thread; a panicking one must be
+    // contained — later requests (and blocked producers) keep flowing.
+    let server = MatMulServer::start(&small_cfg(1, 2, 1)).unwrap();
+    let req = MatMulRequest::f32(0, 6, 6, 6);
+    let (a, b) = f32_ops(&req, 1);
+    server
+        .submit_with_callback(req, Operands::F32 { a, b }, |_, _| {
+            panic!("user callback exploded")
+        })
+        .unwrap();
+    // With queue_depth = 1 this blocks until the panicking request's
+    // slot is released, then must still complete normally.
+    let req2 = MatMulRequest::f32(1, 7, 7, 7);
+    let (a, b) = f32_ops(&req2, 2);
+    let h = server.submit(req2, Operands::F32 { a, b }).unwrap();
+    assert_eq!(h.wait().unwrap().len(), 49);
+    assert_eq!(server.stats().requests, 2);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_precision_interleaved_streaming_matches_references() {
+    let server = MatMulServer::start(&small_cfg(2, 8, 0)).unwrap();
+    let reqs = vec![
+        MatMulRequest::int8(0, 19, 23, 11),
+        MatMulRequest::f32(1, 19, 23, 11),
+        MatMulRequest::int8(2, 8, 16, 8),
+        MatMulRequest::f32(3, 30, 7, 30),
+        MatMulRequest::int8(4, 30, 7, 30),
+    ];
+    let batch = materialize_mixed(&reqs, 777);
+    let handles: Vec<_> = batch
+        .iter()
+        .map(|(req, ops)| server.submit(*req, ops.clone()).unwrap())
+        .collect();
+    for ((req, ops), h) in batch.iter().zip(handles) {
+        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
+        match (ops, h.wait().unwrap()) {
+            (Operands::I32 { a, b }, MatOutput::I32(got)) => {
+                // Integer path: exact.
+                assert_eq!(got, matmul_ref_i32(a, b, m, k, n), "req {}", req.id);
+            }
+            (Operands::F32 { a, b }, MatOutput::F32(got)) => {
+                let want = matmul_ref_f32(a, b, m, k, n);
+                for (x, y) in got.iter().zip(&want) {
+                    assert!((x - y).abs() < 1e-3, "req {}: {x} vs {y}", req.id);
+                }
+            }
+            (_, out) => panic!("req {} returned wrong output kind {out:?}", req.id),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn invalid_submissions_fail_fast_without_consuming_slots() {
+    let server = MatMulServer::start(&small_cfg(1, 2, 1)).unwrap();
+    // Operand container must match the request precision.
+    let err = server
+        .submit(MatMulRequest::f32(0, 4, 4, 4), Operands::I32 { a: vec![0; 16], b: vec![0; 16] })
+        .unwrap_err();
+    assert!(err.to_string().contains("does not match"), "{err}");
+    // Int8 operands must be int8-range.
+    let err = server
+        .submit(
+            MatMulRequest::int8(1, 2, 2, 2),
+            Operands::I32 { a: vec![0, 0, 300, 0], b: vec![0; 4] },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("[-128, 127]"), "{err}");
+    // Shape mismatches are errors, not panics.
+    let err = server
+        .submit(MatMulRequest::f32(2, 4, 4, 4), Operands::F32 { a: vec![0.0; 3], b: vec![0.0; 16] })
+        .unwrap_err();
+    assert!(err.to_string().contains("A shape mismatch"), "{err}");
+    // Serving is fp32/int8 only.
+    let mut odd = MatMulRequest::f32(3, 4, 4, 4);
+    odd.precision = Precision::Bf16;
+    assert!(server
+        .submit(odd, Operands::F32 { a: vec![0.0; 16], b: vec![0.0; 16] })
+        .is_err());
+    // None of the failures consumed the single admission slot.
+    let req = MatMulRequest::f32(9, 8, 8, 8);
+    let (a, b) = f32_ops(&req, 31);
+    let h = server
+        .submit_with_policy(req, Operands::F32 { a, b }, AdmissionPolicy::Reject)
+        .unwrap();
+    assert!(h.wait().is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn streaming_and_batch_calls_coexist_on_one_server() {
+    let mut server = MatMulServer::start(&small_cfg(2, 4, 8)).unwrap();
+    let req = MatMulRequest::int8(0, 12, 18, 12);
+    let batch = materialize_mixed(&[req], 4040);
+    let (a, b) = match &batch[0].1 {
+        Operands::I32 { a, b } => (a.clone(), b.clone()),
+        _ => unreachable!(),
+    };
+    let want = matmul_ref_i32(&a, &b, 12, 18, 12);
+    let h = server.submit(req, Operands::I32 { a, b }).unwrap();
+    // A batch on the same server while the streamed request is open.
+    let breq = MatMulRequest::f32(1, 9, 9, 9);
+    let (ba, bb) = f32_ops(&breq, 11);
+    let outs = server.run_batch(vec![(breq, ba, bb)]).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(h.wait().unwrap().into_i32().unwrap(), want);
+    assert_eq!(server.stats().requests, 2);
+    server.shutdown();
+}
