@@ -22,14 +22,14 @@
 //! (Without artifacts the reference backend serves the same stack.)
 
 use maxeva::arch::precision::Precision;
-use maxeva::config::schema::{DesignConfig, ServeConfig};
-use maxeva::coordinator::server::MatMulServer;
+use maxeva::config::schema::{DesignConfig, PolicyKind, ServeConfig};
+use maxeva::coordinator::server::{Cancelled, MatMulServer};
 use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::stats::percentile;
 use maxeva::workloads::{
     materialize_batch, materialize_mixed, mixed_trace, random_trace, transformer_block_gemms,
-    MatOutput, Operands,
+    MatMulRequest, MatOutput, Operands,
 };
 
 fn main() {
@@ -128,6 +128,61 @@ fn main() {
     println!("\n[3] transformer block GEMMs: {} requests", gemms.len());
     let batch = materialize_batch(&gemms, 4243);
     server.run_batch(batch).expect("transformer batch");
+
+    // Workload 4: weighted-fair scheduling + cancellation. A second
+    // server runs the WeightedFair policy: int8 bulk traffic in class 1,
+    // latency-sensitive fp32 in class 0 (weight 4), so the heavy stream
+    // cannot monopolize the window. One bulk request is cancelled
+    // mid-flight — its undispatched tiles are reclaimed, and the handle
+    // still resolves (with a typed `Cancelled` error).
+    println!("\n[4] weighted-fair policy + cancellation");
+    let mut fair_cfg = cfg.clone();
+    fair_cfg.policy = PolicyKind::WeightedFair;
+    fair_cfg.class_weights = vec![4, 1];
+    let fair = MatMulServer::start(&fair_cfg).expect("fair server");
+    let bulk: Vec<MatMulRequest> = (0..4)
+        .map(|i| MatMulRequest::int8(900 + i, 256, 1024, 256).with_class(1))
+        .collect();
+    let latency: Vec<MatMulRequest> = (0..4)
+        .map(|i| MatMulRequest::f32(950 + i, 128, 128, 128).with_class(0))
+        .collect();
+    let bulk_batch = materialize_mixed(&bulk, 77);
+    let latency_batch = materialize_mixed(&latency, 78);
+    let mut bulk_handles: Vec<_> = bulk_batch
+        .iter()
+        .map(|(req, ops)| fair.submit(*req, ops.clone()).expect("bulk admission"))
+        .collect();
+    let latency_handles: Vec<_> = latency_batch
+        .iter()
+        .map(|(req, ops)| fair.submit(*req, ops.clone()).expect("latency admission"))
+        .collect();
+    // Change of plan: the last bulk request is no longer needed.
+    let doomed = bulk_handles.pop().unwrap();
+    doomed.cancel();
+    match doomed.wait() {
+        Err(e) if e.downcast_ref::<Cancelled>().is_some() => {
+            println!("    cancelled bulk request resolved with: {e}")
+        }
+        Err(e) => println!("    cancelled bulk request failed otherwise: {e}"),
+        Ok(_) => println!("    bulk request finished before the cancel landed"),
+    }
+    for h in latency_handles.into_iter().chain(bulk_handles) {
+        h.wait().expect("fair-served request");
+    }
+    let fstats = fair.stats();
+    println!(
+        "    policy {} · {} served / {} cancelled",
+        fair.sched_policy(),
+        fstats.requests,
+        fstats.cancelled
+    );
+    for c in &fstats.classes {
+        println!(
+            "    class {}: queue p50/p99 {:.1}/{:.1} ms · service p50/p99 {:.1}/{:.1} ms",
+            c.class, c.queue_p50_ms, c.queue_p99_ms, c.service_p50_ms, c.service_p99_ms
+        );
+    }
+    fair.shutdown();
 
     let stats = server.stats();
     println!("\n==== serving report ====");

@@ -1,6 +1,11 @@
 //! Shared harness for the benchmark binaries (criterion is unavailable
 //! offline; this provides warmup + repeated timing + stats).
 
+// Compiled into every bench target via `mod common;` — each target uses
+// a subset of the helpers, so per-target dead-code analysis would flag
+// the rest under the blocking `clippy --all-targets -- -D warnings` gate.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f` with `warmup` discarded runs and `iters` measured runs;

@@ -13,22 +13,29 @@
 //! falls back to the pure-Rust reference backend so the pipeline A/B
 //! runs anywhere.
 //!
-//!     cargo bench --bench e2e_serving -- [--quick] [--json PATH]
+//!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] [--load-json PATH]
 //!
 //! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
 //! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
-//! as a workflow artifact by the `bench-smoke` CI job).
+//! as a workflow artifact by the `bench-smoke` CI job); `--load-json
+//! PATH` writes the open-loop latency-under-load report (per-class
+//! queueing/service/latency percentiles, FIFO vs WeightedFair).
 
 mod common;
 
 use maxeva::arch::precision::Precision;
 use maxeva::config::json::Json;
-use maxeva::config::schema::{DesignConfig, ServeConfig};
+use maxeva::config::schema::{BackendKind, DesignConfig, PolicyKind, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;
+use maxeva::coordinator::stats::ClassStats;
 use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::prng::XorShift64;
-use maxeva::workloads::{materialize_batch, materialize_mixed, mixed_trace, MatMulRequest};
+use maxeva::workloads::{
+    materialize_batch, materialize_mixed, merge_arrivals, mixed_trace, poisson_arrivals,
+    MatMulRequest,
+};
 use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 fn rand_vec(n: usize, rng: &mut XorShift64) -> Vec<f32> {
     (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect()
@@ -59,12 +66,72 @@ fn ab_json(label: &str, depths: &[usize], walls: &[f64], occ: &[(f64, usize)]) -
     Json::Obj(o)
 }
 
+fn class_json(c: &ClassStats) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("class".into(), Json::Num(c.class as f64));
+    o.insert("count".into(), Json::Num(c.count as f64));
+    o.insert("queue_p50_ms".into(), Json::Num(c.queue_p50_ms));
+    o.insert("queue_p99_ms".into(), Json::Num(c.queue_p99_ms));
+    o.insert("service_p50_ms".into(), Json::Num(c.service_p50_ms));
+    o.insert("service_p99_ms".into(), Json::Num(c.service_p99_ms));
+    o.insert("latency_p50_ms".into(), Json::Num(c.latency_p50_ms));
+    o.insert("latency_p99_ms".into(), Json::Num(c.latency_p99_ms));
+    Json::Obj(o)
+}
+
+/// Replay a merged open-loop arrival timeline (stream 0 = heavy int8,
+/// stream 1 = fp32 trickle) against a fresh server running `policy`;
+/// returns the per-class stats snapshot.
+fn run_open_loop(
+    policy: PolicyKind,
+    arrivals: &[(usize, f64)],
+    streams: [&[(MatMulRequest, maxeva::workloads::Operands)]; 2],
+) -> Vec<ClassStats> {
+    // Paper kernels on a 1×1×1 array: native fp32 32×32×32 vs int8
+    // 32×128×32 — the real 4× tile-cost ratio at reference-backend
+    // friendly sizes. Reference backend always (this section measures
+    // scheduling, not numerics, and no 1×1×1 artifacts exist).
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (1, 1, 1);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = 1;
+    cfg.pipeline_depth = 1;
+    cfg.queue_depth = 0;
+    cfg.policy = policy;
+    cfg.class_weights = vec![4, 1];
+    let server = MatMulServer::start(&cfg).expect("open-loop server");
+    let mut cursors = [0usize; 2];
+    let mut handles = Vec::with_capacity(arrivals.len());
+    let t0 = Instant::now();
+    for &(stream, t) in arrivals {
+        let elapsed = t0.elapsed().as_secs_f64();
+        if t > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(t - elapsed));
+        }
+        let (req, ops) = &streams[stream][cursors[stream]];
+        cursors[stream] += 1;
+        handles.push(server.submit(*req, ops.clone()).expect("open-loop submit"));
+    }
+    for h in handles {
+        h.wait().expect("open-loop request");
+    }
+    let classes = server.stats().classes;
+    server.shutdown();
+    classes
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
     let json_path = args
         .iter()
         .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let load_json_path = args
+        .iter()
+        .position(|a| a == "--load-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
 
@@ -246,6 +313,78 @@ fn main() {
         stream_outs[0] == stream_outs[1]
     );
     assert!(stream_outs[0] == stream_outs[1]);
+
+    common::banner("open-loop latency under load: heavy int8 stream + fp32 trickle");
+    let (n_heavy, n_trickle) = if quick { (4usize, 6usize) } else { (10, 16) };
+    // Class 1: saturating int8 bulk (32×1024×32 → 8 heavy tiles each).
+    // Class 0: latency-sensitive fp32 trickle (single native tile).
+    let heavy_reqs: Vec<MatMulRequest> = (0..n_heavy)
+        .map(|i| MatMulRequest::int8(500 + i as u64, 32, 1024, 32).with_class(1))
+        .collect();
+    let trickle_reqs: Vec<MatMulRequest> = (0..n_trickle)
+        .map(|i| MatMulRequest::f32(600 + i as u64, 32, 32, 32).with_class(0))
+        .collect();
+    let heavy_batch = materialize_mixed(&heavy_reqs, 7001);
+    let trickle_batch = materialize_mixed(&trickle_reqs, 7002);
+    // Deterministic Poisson offered load: the int8 stream arrives near
+    // device saturation, the fp32 trickle well below it.
+    let arrivals = merge_arrivals(&[
+        poisson_arrivals(n_heavy, 400.0, 71),
+        poisson_arrivals(n_trickle, 900.0, 72),
+    ]);
+    let mut policy_reports: Vec<Json> = Vec::new();
+    let mut fp32_p99_by_policy: Vec<f64> = Vec::new();
+    for policy in [PolicyKind::Fifo, PolicyKind::WeightedFair] {
+        let classes = run_open_loop(policy, &arrivals, [&heavy_batch, &trickle_batch]);
+        println!("  policy {policy}:");
+        for c in &classes {
+            println!(
+                "    class {}: {} done · queue p50/p99 {:.2}/{:.2} ms · service p50/p99 \
+                 {:.2}/{:.2} ms · latency p99 {:.2} ms",
+                c.class,
+                c.count,
+                c.queue_p50_ms,
+                c.queue_p99_ms,
+                c.service_p50_ms,
+                c.service_p99_ms,
+                c.latency_p99_ms
+            );
+        }
+        fp32_p99_by_policy.push(
+            classes
+                .iter()
+                .find(|c| c.class == 0)
+                .map(|c| c.latency_p99_ms)
+                .unwrap_or(0.0),
+        );
+        let mut o = BTreeMap::new();
+        o.insert("policy".into(), Json::Str(policy.to_string()));
+        o.insert("classes".into(), Json::Arr(classes.iter().map(class_json).collect()));
+        policy_reports.push(Json::Obj(o));
+    }
+    println!(
+        "  fp32 (class 0) p99 under saturating int8: fifo {:.2} ms vs weighted_fair {:.2} ms \
+         ({:.2}× better)",
+        fp32_p99_by_policy[0],
+        fp32_p99_by_policy[1],
+        fp32_p99_by_policy[0] / fp32_p99_by_policy[1].max(1e-9)
+    );
+    if let Some(path) = load_json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_serving_open_loop".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("heavy_int8_requests".into(), Json::Num(n_heavy as f64));
+        o.insert("fp32_trickle_requests".into(), Json::Num(n_trickle as f64));
+        o.insert("policies".into(), Json::Arr(policy_reports));
+        o.insert(
+            "fp32_p99_ratio_fifo_over_weighted_fair".into(),
+            Json::Num(fp32_p99_by_policy[0] / fp32_p99_by_policy[1].max(1e-9)),
+        );
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote latency-under-load report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
 
     let stats = server.stats();
     println!("\n==== cumulative serving stats ====");

@@ -268,6 +268,42 @@ impl std::fmt::Display for AdmissionPolicy {
     }
 }
 
+/// Which scheduling policy arbitrates the in-flight window between
+/// open requests (see `crate::coordinator::policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// Window-level round-robin across flights — the original engine's
+    /// scheduling, bit-identical outputs and ordering.
+    #[default]
+    Fifo,
+    /// Deficit round-robin over priority classes with per-precision
+    /// tile costs: a heavy int8 stream cannot starve fp32 traffic.
+    WeightedFair,
+    /// Strict priority classes (lower class index wins) with aging.
+    Priority,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(PolicyKind::Fifo),
+            "weighted_fair" => Some(PolicyKind::WeightedFair),
+            "priority" => Some(PolicyKind::Priority),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::WeightedFair => "weighted_fair",
+            PolicyKind::Priority => "priority",
+        })
+    }
+}
+
 /// Serving-layer configuration (the end-to-end coordinator).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
@@ -286,6 +322,16 @@ pub struct ServeConfig {
     pub pipeline_depth: usize,
     /// Tile-execution backend selection.
     pub backend: BackendKind,
+    /// Scheduling policy for the in-flight window.
+    pub policy: PolicyKind,
+    /// Per-class weights for [`PolicyKind::WeightedFair`] (index =
+    /// request class; also fixes the number of classes for
+    /// [`PolicyKind::Priority`]). Out-of-range request classes clamp to
+    /// the last entry; zero weights are bumped to 1.
+    pub class_weights: Vec<u64>,
+    /// Scheduling decisions a flight may wait before
+    /// [`PolicyKind::Priority`] promotes it one class (`0` = no aging).
+    pub aging_threshold: u64,
 }
 
 impl ServeConfig {
@@ -298,6 +344,9 @@ impl ServeConfig {
             admission: AdmissionPolicy::Block,
             pipeline_depth: 4,
             backend: BackendKind::Auto,
+            policy: PolicyKind::Fifo,
+            class_weights: vec![1, 1, 1, 1],
+            aging_threshold: 64,
         }
     }
 
@@ -310,6 +359,12 @@ impl ServeConfig {
         o.insert("admission".into(), Json::Str(self.admission.to_string()));
         o.insert("pipeline_depth".into(), Json::Num(self.pipeline_depth as f64));
         o.insert("backend".into(), Json::Str(self.backend.to_string()));
+        o.insert("policy".into(), Json::Str(self.policy.to_string()));
+        o.insert(
+            "class_weights".into(),
+            Json::Arr(self.class_weights.iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        o.insert("aging_threshold".into(), Json::Num(self.aging_threshold as f64));
         Json::Obj(o)
     }
 
@@ -326,6 +381,24 @@ impl ServeConfig {
             Some(s) => AdmissionPolicy::parse(s)
                 .ok_or_else(|| ConfigError::Invalid("admission", s.to_string()))?,
         };
+        let policy = match v.get("policy").and_then(Json::as_str) {
+            None => PolicyKind::Fifo,
+            Some(s) => PolicyKind::parse(s)
+                .ok_or_else(|| ConfigError::Invalid("policy", s.to_string()))?,
+        };
+        let class_weights = match v.get("class_weights") {
+            None => vec![1, 1, 1, 1],
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|w| {
+                    w.as_u64()
+                        .ok_or_else(|| ConfigError::Invalid("class_weights", w.to_string()))
+                })
+                .collect::<Result<Vec<u64>, ConfigError>>()?,
+            Some(other) => {
+                return Err(ConfigError::Invalid("class_weights", other.to_string()))
+            }
+        };
         Ok(ServeConfig {
             design,
             artifacts_dir: v
@@ -341,6 +414,12 @@ impl ServeConfig {
                 .and_then(Json::as_u64)
                 .unwrap_or(4) as usize,
             backend,
+            policy,
+            class_weights,
+            aging_threshold: v
+                .get("aging_threshold")
+                .and_then(Json::as_u64)
+                .unwrap_or(64),
         })
     }
 
@@ -422,6 +501,9 @@ mod tests {
         assert_eq!(c.pipeline_depth, 4);
         assert_eq!(c.backend, BackendKind::Auto);
         assert_eq!(c.admission, AdmissionPolicy::Block);
+        assert_eq!(c.policy, PolicyKind::Fifo);
+        assert_eq!(c.class_weights, vec![1, 1, 1, 1]);
+        assert_eq!(c.aging_threshold, 64);
     }
 
     #[test]
@@ -433,6 +515,67 @@ mod tests {
         c.queue_depth = 3;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn serve_config_roundtrip_covers_every_field() {
+        // Every field set to a non-default value: a field missing from
+        // to_json/from_json fails this equality (the PR 2 gap — knobs
+        // added to the struct but silently dropped by the JSON layer).
+        let mut c = ServeConfig::new(DesignConfig::flagship(Precision::Int8));
+        c.artifacts_dir = "/tmp/maxeva_artifacts".into();
+        c.workers = 7;
+        c.queue_depth = 9;
+        c.admission = AdmissionPolicy::Reject;
+        c.pipeline_depth = 16;
+        c.backend = BackendKind::Reference;
+        c.policy = PolicyKind::WeightedFair;
+        c.class_weights = vec![8, 2, 1];
+        c.aging_threshold = 512;
+        let back = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // And through a file, like the launcher loads it.
+        let dir = std::env::temp_dir().join("maxeva_cfg_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.json");
+        std::fs::write(&path, c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(ServeConfig::load(&path).unwrap(), c);
+    }
+
+    #[test]
+    fn policy_kind_parse_display_roundtrip() {
+        for p in [PolicyKind::Fifo, PolicyKind::WeightedFair, PolicyKind::Priority] {
+            assert_eq!(PolicyKind::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(PolicyKind::parse("edf"), None);
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"policy":"lifo"}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("policy", _))
+        ));
+    }
+
+    #[test]
+    fn bad_class_weights_rejected() {
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"class_weights":[1,-2]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("class_weights", _))
+        ));
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"class_weights":3}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("class_weights", _))
+        ));
     }
 
     #[test]

@@ -1,0 +1,114 @@
+//! Streaming admission: the bounded open-request gate and the in-flight
+//! admission record handed to the scheduler thread.
+//!
+//! Admission is governed by `ServeConfig::queue_depth` — the maximum
+//! number of *open* requests (admitted but not yet retired; `0` =
+//! unbounded) — and an [`AdmissionPolicy`](crate::config::schema::AdmissionPolicy):
+//! `Block` parks the submitting thread until a slot frees, `Reject`
+//! fails fast with [`QueueFull`] so the caller can shed load or retry.
+
+use crate::config::schema::AdmissionPolicy;
+use crate::coordinator::handle::Reply;
+use crate::workloads::{MatMulRequest, Operands};
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Returned by a [`AdmissionPolicy::Reject`] submission when
+/// `queue_depth` requests are already open. Recover it from the anyhow
+/// chain with `err.downcast_ref::<QueueFull>()`.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("admission queue full ({0} open requests)")]
+pub struct QueueFull(pub usize);
+
+/// A request admitted by a client thread, in flight to the scheduler.
+///
+/// `ops`/`reply` are `Option`s taken out on the normal path; the `Drop`
+/// impl is the safety net for every other path (scheduler draining, the
+/// event channel torn down with admits still queued, send failure): it
+/// frees the admission slot and delivers a shutdown error, so a
+/// successful `submit` always resolves its handle/callback.
+pub(crate) struct Admitted {
+    pub(crate) req: MatMulRequest,
+    pub(crate) ops: Option<Operands>,
+    pub(crate) submitted: Instant,
+    pub(crate) reply: Option<Reply>,
+    /// Cancellation token minted at submission; [`RequestHandle::cancel`]
+    /// (and handle drop) route back to the scheduler through it.
+    ///
+    /// [`RequestHandle::cancel`]: crate::coordinator::handle::RequestHandle::cancel
+    pub(crate) token: u64,
+    pub(crate) gate: Arc<Gate>,
+}
+
+impl Drop for Admitted {
+    fn drop(&mut self) {
+        if let Some(reply) = self.reply.take() {
+            self.gate.release();
+            reply.send(self.req, Err(anyhow!("server is shutting down")));
+        }
+    }
+}
+
+/// The admission gate: a counting semaphore over open requests with a
+/// closed flag so blocked producers wake when the server goes away.
+pub(crate) struct Gate {
+    /// `0` = unbounded.
+    depth: usize,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    open: usize,
+    closed: bool,
+}
+
+/// Closes the gate when dropped — even if the scheduler thread unwinds,
+/// producers parked in [`Gate::admit`] wake up instead of hanging.
+pub(crate) struct GateCloser(pub(crate) Arc<Gate>);
+
+impl Drop for GateCloser {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+impl Gate {
+    pub(crate) fn new(depth: usize) -> Self {
+        Gate {
+            depth,
+            state: Mutex::new(GateState { open: 0, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn admit(&self, policy: AdmissionPolicy) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(anyhow!("server is shut down"));
+            }
+            if self.depth == 0 || st.open < self.depth {
+                st.open += 1;
+                return Ok(());
+            }
+            match policy {
+                AdmissionPolicy::Reject => return Err(QueueFull(self.depth).into()),
+                AdmissionPolicy::Block => st = self.cv.wait(st).unwrap(),
+            }
+        }
+    }
+
+    pub(crate) fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open = st.open.saturating_sub(1);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}

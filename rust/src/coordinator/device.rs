@@ -101,6 +101,10 @@ enum Msg {
 
 /// Per-precision device facts: native tile size and steady-state
 /// iteration period, both derived from the placed design's simulation.
+/// The `native` tuple doubles as the geometric per-tile cost input the
+/// scheduling policies weigh precisions by — see
+/// [`crate::coordinator::policy::TileCosts::from_native`] (on the
+/// flagship designs an int8 tile is 4× an fp32 tile).
 #[derive(Debug, Clone, Copy)]
 pub struct PrecisionInfo {
     /// Native design size (nm, nk, nn).
@@ -610,6 +614,12 @@ mod tests {
         assert_eq!(dev.native, (416, 128, 192));
         assert_eq!(dev.native_int8, (416, 512, 192));
         assert!(dev.period_cycles > 0.0 && dev.period_cycles_int8 > 0.0);
+        // The geometric tile-cost ratio the fair policies schedule on.
+        let costs = crate::coordinator::policy::TileCosts::from_native(
+            dev.info_for(Precision::Fp32).unwrap().native,
+            dev.info_for(Precision::Int8).unwrap().native,
+        );
+        assert_eq!(costs.int8, 4 * costs.fp32);
         dev.shutdown();
     }
 

@@ -1,0 +1,119 @@
+//! Per-request completion delivery: [`RequestHandle`] (wait / try_wait /
+//! cancel) and the callback reply path.
+//!
+//! # Cancellation
+//!
+//! Every submission mints a private token routed through the scheduler's
+//! event channel. [`RequestHandle::cancel`] — or simply dropping an
+//! unresolved handle — asks the scheduler to abandon the request: tiles
+//! not yet dispatched are never issued, the flight's queue and window
+//! slots are reclaimed, and the handle resolves with a [`Cancelled`]
+//! error (recover it with `err.downcast_ref::<Cancelled>()`). A request
+//! that already retired is unaffected: cancellation after completion is
+//! a no-op, and a handle always resolves exactly once.
+
+use crate::coordinator::scheduler::Event;
+use crate::workloads::{MatMulRequest, MatOutput};
+use anyhow::{anyhow, Result};
+use std::cell::Cell;
+use std::sync::mpsc;
+
+/// The request was cancelled (explicitly or by dropping its handle)
+/// before it completed. Carries the request id.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("request {0} was cancelled before completion")]
+pub struct Cancelled(pub u64);
+
+/// Per-request completion delivery.
+pub(crate) enum Reply {
+    Handle(mpsc::Sender<Result<MatOutput>>),
+    Callback(Box<dyn FnOnce(MatMulRequest, Result<MatOutput>) + Send>),
+}
+
+impl Reply {
+    pub(crate) fn send(self, req: MatMulRequest, out: Result<MatOutput>) {
+        match self {
+            Reply::Handle(tx) => {
+                let _ = tx.send(out);
+            }
+            // User code runs on the scheduler thread; a panicking
+            // callback must not take the whole stream down with it.
+            Reply::Callback(cb) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cb(req, out)));
+            }
+        }
+    }
+}
+
+/// A completion handle for one admitted request.
+///
+/// Dropping the handle without resolving it **cancels** the request —
+/// an unobserved result is dead weight, so its unscheduled tiles are
+/// reclaimed. Call [`RequestHandle::wait`] (or poll
+/// [`RequestHandle::try_wait`]) to keep the request running to
+/// completion.
+pub struct RequestHandle {
+    id: u64,
+    token: u64,
+    rx: mpsc::Receiver<Result<MatOutput>>,
+    events: mpsc::Sender<Event>,
+    /// Set once the result was received (or the server is known gone) —
+    /// suppresses the cancel-on-drop signal.
+    resolved: Cell<bool>,
+}
+
+impl RequestHandle {
+    pub(crate) fn new(
+        id: u64,
+        token: u64,
+        rx: mpsc::Receiver<Result<MatOutput>>,
+        events: mpsc::Sender<Event>,
+    ) -> Self {
+        RequestHandle { id, token, rx, events, resolved: Cell::new(false) }
+    }
+
+    /// The submitted request's id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the scheduler to abandon this request: not-yet-dispatched
+    /// tiles are dropped and the queue/window slots reclaimed. The
+    /// handle still resolves — [`RequestHandle::wait`] returns a
+    /// [`Cancelled`] error (or the output, if the request won the race
+    /// and retired first). Cancelling a completed request is a no-op.
+    pub fn cancel(&self) {
+        let _ = self.events.send(Event::Cancel(self.token));
+    }
+
+    /// Block until the request retires and take its output.
+    pub fn wait(self) -> Result<MatOutput> {
+        self.resolved.set(true);
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped request {} without replying", self.id))?
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<MatOutput>> {
+        match self.rx.try_recv() {
+            Ok(r) => {
+                self.resolved.set(true);
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.resolved.set(true);
+                Some(Err(anyhow!("server dropped request {} without replying", self.id)))
+            }
+        }
+    }
+}
+
+impl Drop for RequestHandle {
+    fn drop(&mut self) {
+        if !self.resolved.get() {
+            let _ = self.events.send(Event::Cancel(self.token));
+        }
+    }
+}

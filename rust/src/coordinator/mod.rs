@@ -1,20 +1,50 @@
 //! The serving coordinator — the L3 runtime path.
 //!
+//! # Architecture
+//!
+//! ```text
+//!  client threads                     scheduler thread                device pool
+//!  ──────────────                     ────────────────               ─────────────
+//!  submit / submit_with_callback
+//!    │ validate + admission gate
+//!    │ (queue_depth, block/reject)
+//!    ├──── Event::Admit ────────────▶ SchedPolicy ◀─ policy knobs
+//!    │                                │  Fifo | WeightedFair | Priority
+//!  RequestHandle                      │  pick() → flight issues 1 tile
+//!    │ wait / try_wait                │  (per-precision tile costs,
+//!    │ cancel / drop ── Cancel ─────▶ │   classes, aging)
+//!    │                                ▼
+//!    │                        in-flight window ──── TileJob ──────▶ worker 0..W
+//!    │                        (pipeline_depth)                       fp32 / int8
+//!    │                                ▲                              datapaths
+//!    │                                │◀─── Event::Done ◀─ forwarder ◀─ TileDone
+//!    │                                │ ordered (ascending-ik) reduction
+//!    ◀──── output / Cancelled ─────── │ retire: stats, free gate slot
+//! ```
+//!
 //! Arbitrary-size MatMul requests enter through a **streaming admission
-//! queue** (bounded by `ServeConfig::queue_depth`, block/reject
-//! backpressure), are padded and tiled to their precision's native size
-//! ([`tiler`]), packed once into tile-major `Arc`'d block pools, and
-//! streamed through a pipelined in-flight window of tagged tile jobs
-//! ([`server`]) executed by a pool of device worker threads ([`device`])
-//! — the software stand-in for the VCK190's AIE array. Requests carry a
-//! per-request precision: fp32 and int8 (i32-accumulating) tiles share
-//! one window, mirroring the paper's dual headline designs. The window
-//! is the host-side mirror of the paper's ping-pong buffering (eq. 2):
-//! host packing/reduction overlaps device execution instead of
-//! alternating with it. Python never runs here; the device workers
-//! execute the AOT artifacts produced once at build time (or, without
-//! the `pjrt` feature/artifacts, a pure-Rust reference backend with
-//! identical tile semantics).
+//! queue** ([`admission`]; bounded by `ServeConfig::queue_depth`,
+//! block/reject backpressure), are padded and tiled to their precision's
+//! native size ([`tiler`]), packed once into tile-major `Arc`'d block
+//! pools, and streamed through a pipelined in-flight window of tagged
+//! tile jobs ([`scheduler`]) executed by a pool of device worker threads
+//! ([`device`]) — the software stand-in for the VCK190's AIE array.
+//! Which flight issues the next tile is a pluggable [`policy`] decision:
+//! FIFO round-robin (the default, bit-identical to the pre-policy
+//! engine), deficit-round-robin weighted fairness over priority classes
+//! with per-precision tile costs, or strict priority with aging.
+//! Completions are delivered per request ([`handle`]); dropping or
+//! cancelling a handle reclaims the queue and window slots of tiles not
+//! yet dispatched.
+//!
+//! Requests carry a per-request precision: fp32 and int8
+//! (i32-accumulating) tiles share one window, mirroring the paper's
+//! dual headline designs. The window is the host-side mirror of the
+//! paper's ping-pong buffering (eq. 2): host packing/reduction overlaps
+//! device execution instead of alternating with it. Python never runs
+//! here; the device workers execute the AOT artifacts produced once at
+//! build time (or, without the `pjrt` feature/artifacts, a pure-Rust
+//! reference backend with identical tile semantics).
 //!
 //! Device-time accounting: every artifact invocation advances the
 //! simulated device clock by the design's iteration period (from
@@ -22,14 +52,22 @@
 //! emulation) and device-time (VCK190-equivalent) throughput without
 //! conflating them.
 
+pub mod admission;
 pub mod device;
+pub mod handle;
+pub mod policy;
+pub(crate) mod scheduler;
 pub mod server;
 pub mod stats;
 pub mod tiler;
 pub mod trace;
 
+pub use admission::QueueFull;
 pub use device::{
     spawn_device, spawn_device_pool, DeviceHandle, TileDone, TileJob, TileOutput, TilePayload,
 };
-pub use server::{MatMulServer, QueueFull, RequestHandle, ServerStats};
+pub use handle::{Cancelled, RequestHandle};
+pub use policy::{Fifo, FlightMeta, Priority, SchedPolicy, TileCosts, WeightedFair};
+pub use server::{MatMulServer, ServerStats};
+pub use stats::ClassStats;
 pub use tiler::Tiler;

@@ -1,0 +1,97 @@
+//! [`Fifo`]: window-level round-robin across flights — the original
+//! PR 1/2 scheduling, preserved bit-for-bit.
+
+use super::{FlightMeta, SchedPolicy};
+use std::collections::VecDeque;
+
+/// Round-robin over ready flights: each pick issues one tile and the
+/// flight rotates to the back. Admission order seeds the rotation, so
+/// with one flight open this is plain FIFO tile order — the behavior
+/// every pipeline-equivalence and bit-identity property test pins down.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    ready: VecDeque<u64>,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Fifo::default()
+    }
+}
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admit(&mut self, meta: FlightMeta) {
+        self.ready.push_back(meta.fid);
+    }
+
+    fn pick(&mut self) -> Option<u64> {
+        self.ready.pop_front()
+    }
+
+    fn tile_issued(&mut self, fid: u64, more: bool) {
+        if more {
+            self.ready.push_back(fid);
+        }
+    }
+
+    fn remove(&mut self, fid: u64) {
+        self.ready.retain(|&x| x != fid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+
+    fn meta(fid: u64) -> FlightMeta {
+        FlightMeta { fid, class: 0, precision: Precision::Fp32, tile_cost: 1 }
+    }
+
+    #[test]
+    fn round_robin_rotation() {
+        let mut p = Fifo::new();
+        for fid in [1, 2, 3] {
+            p.admit(meta(fid));
+        }
+        let mut picks = Vec::new();
+        for _ in 0..6 {
+            let fid = p.pick().unwrap();
+            picks.push(fid);
+            p.tile_issued(fid, true);
+        }
+        assert_eq!(picks, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn finished_flights_leave_the_rotation() {
+        let mut p = Fifo::new();
+        p.admit(meta(1));
+        p.admit(meta(2));
+        let a = p.pick().unwrap();
+        p.tile_issued(a, false); // last tile of flight 1
+        assert_eq!(p.pick(), Some(2));
+        p.tile_issued(2, true);
+        assert_eq!(p.pick(), Some(2));
+        p.tile_issued(2, false);
+        assert_eq!(p.pick(), None);
+    }
+
+    #[test]
+    fn remove_purges_queued_flight() {
+        let mut p = Fifo::new();
+        for fid in [1, 2, 3] {
+            p.admit(meta(fid));
+        }
+        p.remove(2);
+        assert_eq!(p.pick(), Some(1));
+        p.tile_issued(1, true);
+        assert_eq!(p.pick(), Some(3));
+        p.tile_issued(3, true);
+        assert_eq!(p.pick(), Some(1));
+    }
+}

@@ -1,0 +1,207 @@
+//! Pluggable scheduling policies: who gets the next tile slot.
+//!
+//! The scheduler thread owns the in-flight window; every time a slot
+//! frees it asks its [`SchedPolicy`] which open flight issues the next
+//! tile. The policy sees one [`FlightMeta`] per schedulable flight
+//! (priority class, precision, per-tile cost) and nothing else — all
+//! packing/reduction mechanics stay in the scheduler, so policies are
+//! tiny, deterministic, and unit-testable without a server.
+//!
+//! Three implementations ship:
+//!
+//! * [`Fifo`] — window-level round-robin across flights, the exact
+//!   PR 1/2 behavior (and the default): bit-identity and
+//!   depth-1-equivalence properties are preserved unchanged.
+//! * [`WeightedFair`] — deficit round-robin over priority classes.
+//!   Each tile charges its flight's class the flight's **per-precision
+//!   cost** ([`TileCosts`], derived from the design's tile geometry —
+//!   on the flagship designs an int8 tile is ~4× an fp32 tile), so one
+//!   heavy int8 stream cannot starve fp32 traffic of device time.
+//! * [`Priority`] — strict priority classes (lower class index wins)
+//!   with aging so low classes cannot starve forever.
+
+pub mod fifo;
+pub mod priority;
+pub mod weighted_fair;
+
+pub use fifo::Fifo;
+pub use priority::Priority;
+pub use weighted_fair::WeightedFair;
+
+use crate::arch::precision::Precision;
+use crate::config::schema::{PolicyKind, ServeConfig};
+
+/// Relative cost of one native tile per serving precision, derived from
+/// the design's tile geometry (MACs per native tile). On the paper's
+/// flagship designs int8 tiles are 32×128×32 against fp32's 32×32×32 —
+/// a 4× cost ratio — which is exactly the imbalance that lets an int8
+/// stream dominate a cost-blind round-robin.
+#[derive(Debug, Clone, Copy)]
+pub struct TileCosts {
+    pub fp32: u64,
+    pub int8: u64,
+}
+
+impl TileCosts {
+    /// Costs from the two native tile sizes `(nm, nk, nn)`.
+    pub fn from_native(native_f32: (u64, u64, u64), native_int8: (u64, u64, u64)) -> Self {
+        let macs = |(m, k, n): (u64, u64, u64)| (m * k * n).max(1);
+        TileCosts { fp32: macs(native_f32), int8: macs(native_int8) }
+    }
+
+    /// Cost of one tile in `precision`.
+    pub fn cost(&self, precision: Precision) -> u64 {
+        match precision {
+            Precision::Int8 => self.int8,
+            _ => self.fp32,
+        }
+    }
+
+    /// A DRR quantum that always affords at least one tile of either
+    /// precision per visit.
+    pub fn quantum(&self) -> u64 {
+        self.fp32.max(self.int8)
+    }
+}
+
+/// What a policy knows about one schedulable flight.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightMeta {
+    /// Scheduler-internal flight id (admission order).
+    pub fid: u64,
+    /// Priority class the request was submitted with (already clamped
+    /// to the configured class count).
+    pub class: usize,
+    pub precision: Precision,
+    /// Cost charged per issued tile ([`TileCosts::cost`]).
+    pub tile_cost: u64,
+}
+
+/// A scheduling policy: the single decision point between "a window
+/// slot is free" and "flight X issues its next tile".
+///
+/// Contract (enforced by the scheduler loop):
+/// * [`SchedPolicy::admit`] is called once per schedulable flight;
+/// * [`SchedPolicy::pick`] returns a previously admitted flight with
+///   unissued tiles, or `None` when nothing is schedulable;
+/// * after every pick the scheduler issues exactly one tile and calls
+///   [`SchedPolicy::tile_issued`] with `more = false` once the flight's
+///   last tile went out;
+/// * [`SchedPolicy::remove`] purges a flight wherever it is queued
+///   (retire, failure, cancellation).
+pub trait SchedPolicy: Send {
+    /// Policy name for diagnostics ("fifo", "weighted_fair", …).
+    fn name(&self) -> &'static str;
+
+    /// Make a flight schedulable.
+    fn admit(&mut self, meta: FlightMeta);
+
+    /// Choose the flight that issues the next tile.
+    fn pick(&mut self) -> Option<u64>;
+
+    /// One tile of `fid` was issued; `more` says whether the flight
+    /// still has unissued tiles and must remain schedulable.
+    fn tile_issued(&mut self, fid: u64, more: bool);
+
+    /// Drop a flight from all queues (no-op if absent).
+    fn remove(&mut self, fid: u64);
+}
+
+/// Normalized policy configuration: the `ServeConfig` knobs plus the
+/// per-precision tile costs the device pool derived from the design.
+#[derive(Debug, Clone)]
+pub struct PolicyParams {
+    pub kind: PolicyKind,
+    /// DRR weight per class index (never empty, weights never zero).
+    pub class_weights: Vec<u64>,
+    /// Picks a flight may wait before [`Priority`] promotes it one
+    /// class (`0` disables aging).
+    pub aging_threshold: u64,
+    pub costs: TileCosts,
+}
+
+impl PolicyParams {
+    pub fn from_config(cfg: &ServeConfig, costs: TileCosts) -> Self {
+        let mut class_weights: Vec<u64> =
+            cfg.class_weights.iter().map(|&w| w.max(1)).collect();
+        if class_weights.is_empty() {
+            class_weights.push(1);
+        }
+        PolicyParams {
+            kind: cfg.policy,
+            class_weights,
+            aging_threshold: cfg.aging_threshold,
+            costs,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.class_weights.len()
+    }
+
+    /// Map a request's class byte onto the configured class range.
+    pub fn clamp_class(&self, class: u8) -> usize {
+        (class as usize).min(self.n_classes() - 1)
+    }
+}
+
+/// Build the configured policy.
+pub fn build(params: &PolicyParams) -> Box<dyn SchedPolicy> {
+    match params.kind {
+        PolicyKind::Fifo => Box::new(Fifo::new()),
+        PolicyKind::WeightedFair => {
+            Box::new(WeightedFair::new(&params.class_weights, params.costs.quantum()))
+        }
+        PolicyKind::Priority => {
+            Box::new(Priority::new(params.n_classes(), params.aging_threshold))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_costs_from_flagship_geometry() {
+        // fp32 416×128×192 vs int8 416×512×192 → exactly 4×.
+        let c = TileCosts::from_native((416, 128, 192), (416, 512, 192));
+        assert_eq!(c.int8, 4 * c.fp32);
+        assert_eq!(c.quantum(), c.int8);
+        assert_eq!(c.cost(Precision::Int8), c.int8);
+        assert_eq!(c.cost(Precision::Fp32), c.fp32);
+    }
+
+    #[test]
+    fn params_normalize_degenerate_weights() {
+        let mut cfg = ServeConfig::new(crate::config::schema::DesignConfig::flagship(
+            Precision::Fp32,
+        ));
+        cfg.class_weights = vec![];
+        let p = PolicyParams::from_config(&cfg, TileCosts { fp32: 1, int8: 4 });
+        assert_eq!(p.class_weights, vec![1]);
+        assert_eq!(p.clamp_class(200), 0);
+
+        cfg.class_weights = vec![0, 3];
+        let p = PolicyParams::from_config(&cfg, TileCosts { fp32: 1, int8: 4 });
+        assert_eq!(p.class_weights, vec![1, 3]);
+        assert_eq!(p.clamp_class(0), 0);
+        assert_eq!(p.clamp_class(9), 1);
+    }
+
+    #[test]
+    fn build_selects_kind() {
+        let mut cfg = ServeConfig::new(crate::config::schema::DesignConfig::flagship(
+            Precision::Fp32,
+        ));
+        let costs = TileCosts { fp32: 1, int8: 4 };
+        for (kind, name) in [
+            (PolicyKind::Fifo, "fifo"),
+            (PolicyKind::WeightedFair, "weighted_fair"),
+            (PolicyKind::Priority, "priority"),
+        ] {
+            cfg.policy = kind;
+            assert_eq!(build(&PolicyParams::from_config(&cfg, costs)).name(), name);
+        }
+    }
+}

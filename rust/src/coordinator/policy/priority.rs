@@ -1,0 +1,168 @@
+//! [`Priority`]: strict priority classes with aging.
+//!
+//! Lower class index = higher priority; the highest nonempty class
+//! always issues the next tile (round-robin among its flights). Strict
+//! priority alone starves low classes under sustained high-priority
+//! load, so each waiting flight ages: once it has waited more than
+//! `aging_threshold` scheduling decisions at the head of its class it
+//! is promoted one class (repeatedly, up to the top), bounding worst-
+//! case service delay. `aging_threshold = 0` disables aging (pure
+//! strict priority).
+
+use super::{FlightMeta, SchedPolicy};
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+
+/// Strict classes with head-of-line aging.
+pub struct Priority {
+    /// `levels[0]` is the highest priority; entries are
+    /// `(fid, enqueue_tick)`.
+    levels: Vec<VecDeque<(u64, u64)>>,
+    /// fid → current level (tracks promotions).
+    level_of: FxHashMap<u64, usize>,
+    aging_threshold: u64,
+    /// Monotone pick counter — the aging clock.
+    tick: u64,
+}
+
+impl Priority {
+    pub fn new(n_classes: usize, aging_threshold: u64) -> Self {
+        Priority {
+            levels: (0..n_classes.max(1)).map(|_| VecDeque::new()).collect(),
+            level_of: FxHashMap::default(),
+            aging_threshold,
+            tick: 0,
+        }
+    }
+
+    /// Promote overdue head-of-line flights one level. O(levels) per
+    /// pick: only queue heads are inspected, which is where the oldest
+    /// entry of every level sits.
+    fn age(&mut self) {
+        for level in 1..self.levels.len() {
+            if let Some(&(fid, enq)) = self.levels[level].front() {
+                if self.tick.saturating_sub(enq) >= self.aging_threshold {
+                    self.levels[level].pop_front();
+                    self.levels[level - 1].push_back((fid, self.tick));
+                    self.level_of.insert(fid, level - 1);
+                }
+            }
+        }
+    }
+}
+
+impl SchedPolicy for Priority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn admit(&mut self, meta: FlightMeta) {
+        let level = meta.class.min(self.levels.len() - 1);
+        self.level_of.insert(meta.fid, level);
+        self.levels[level].push_back((meta.fid, self.tick));
+    }
+
+    fn pick(&mut self) -> Option<u64> {
+        self.tick += 1;
+        if self.aging_threshold > 0 {
+            self.age();
+        }
+        for level in &mut self.levels {
+            if let Some((fid, _)) = level.pop_front() {
+                return Some(fid);
+            }
+        }
+        None
+    }
+
+    fn tile_issued(&mut self, fid: u64, more: bool) {
+        if more {
+            let level = self.level_of[&fid];
+            self.levels[level].push_back((fid, self.tick));
+        }
+    }
+
+    fn remove(&mut self, fid: u64) {
+        if let Some(level) = self.level_of.remove(&fid) {
+            self.levels[level].retain(|&(x, _)| x != fid);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+
+    fn meta(fid: u64, class: usize) -> FlightMeta {
+        FlightMeta { fid, class, precision: Precision::Fp32, tile_cost: 1 }
+    }
+
+    #[test]
+    fn strict_priority_without_aging() {
+        let mut p = Priority::new(3, 0);
+        p.admit(meta(30, 2));
+        p.admit(meta(10, 0));
+        p.admit(meta(20, 1));
+        // Class 0 monopolizes while it has tiles.
+        for _ in 0..5 {
+            assert_eq!(p.pick(), Some(10));
+            p.tile_issued(10, true);
+        }
+        // Retire class 0 → class 1 is next, then class 2.
+        assert_eq!(p.pick(), Some(10));
+        p.tile_issued(10, false);
+        assert_eq!(p.pick(), Some(20));
+        p.tile_issued(20, false);
+        assert_eq!(p.pick(), Some(30));
+        p.tile_issued(30, false);
+        assert_eq!(p.pick(), None);
+    }
+
+    #[test]
+    fn round_robin_within_a_class() {
+        let mut p = Priority::new(2, 0);
+        p.admit(meta(1, 0));
+        p.admit(meta(2, 0));
+        let mut picks = Vec::new();
+        for _ in 0..4 {
+            let fid = p.pick().unwrap();
+            picks.push(fid);
+            p.tile_issued(fid, true);
+        }
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn aging_promotes_starved_flights() {
+        // Sustained class-0 load; the class-1 flight must still be
+        // served within threshold + a few picks.
+        let mut p = Priority::new(2, 3);
+        p.admit(meta(1, 0));
+        p.admit(meta(9, 1));
+        let mut served_at = None;
+        for i in 0..10 {
+            let fid = p.pick().unwrap();
+            p.tile_issued(fid, true);
+            if fid == 9 {
+                served_at = Some(i);
+                break;
+            }
+        }
+        let at = served_at.expect("aged flight must be served");
+        assert!(at <= 5, "served only at pick {at}");
+        assert_eq!(p.level_of[&9], 0, "flight was promoted to the top class");
+    }
+
+    #[test]
+    fn remove_purges_and_unknown_is_noop() {
+        let mut p = Priority::new(2, 0);
+        p.admit(meta(1, 0));
+        p.admit(meta(2, 0));
+        p.remove(1);
+        p.remove(777);
+        assert_eq!(p.pick(), Some(2));
+        p.tile_issued(2, false);
+        assert_eq!(p.pick(), None);
+    }
+}

@@ -1,0 +1,240 @@
+//! [`WeightedFair`]: deficit round-robin (DRR) over priority classes
+//! with per-precision tile costs.
+//!
+//! Each class keeps a FIFO rotation of its flights and a *deficit*
+//! counter. A class at the front of the rotation may issue tiles while
+//! its deficit covers the head flight's per-tile cost; when it cannot
+//! afford the next tile it banks one quantum (`weight × base quantum`)
+//! and rotates to the back. Because tiles are charged their precision's
+//! geometric cost (int8 ≈ 4× fp32 on the flagship designs), classes
+//! split *device time*, not tile counts — a saturating int8 stream gets
+//! its weighted share and no more, so fp32 latency stays bounded.
+
+use super::{FlightMeta, SchedPolicy};
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+
+struct ClassQ {
+    weight: u64,
+    deficit: u64,
+    queue: VecDeque<u64>,
+    /// Whether this class index is present in `rotation` (invariant).
+    in_rotation: bool,
+}
+
+/// Deficit round-robin over priority classes; round-robin over flights
+/// within a class.
+pub struct WeightedFair {
+    classes: Vec<ClassQ>,
+    rotation: VecDeque<usize>,
+    /// fid → (class, per-tile cost).
+    meta: FxHashMap<u64, (usize, u64)>,
+    quantum: u64,
+}
+
+impl WeightedFair {
+    /// `class_weights[i]` is class `i`'s DRR weight (zero-weight classes
+    /// are bumped to 1); `quantum` is the base replenishment, normally
+    /// [`TileCosts::quantum`](super::TileCosts::quantum) so one visit
+    /// always affords at least one tile.
+    ///
+    /// The empty/zero-weight normalization mirrors
+    /// [`PolicyParams::from_config`](super::PolicyParams::from_config):
+    /// `build()` passes pre-normalized weights, but this constructor is
+    /// public API and must not underflow on direct use — keep the two
+    /// rules in sync.
+    pub fn new(class_weights: &[u64], quantum: u64) -> Self {
+        let weights: Vec<u64> = if class_weights.is_empty() {
+            vec![1]
+        } else {
+            class_weights.iter().map(|&w| w.max(1)).collect()
+        };
+        WeightedFair {
+            classes: weights
+                .into_iter()
+                .map(|weight| ClassQ {
+                    weight,
+                    deficit: 0,
+                    queue: VecDeque::new(),
+                    in_rotation: false,
+                })
+                .collect(),
+            rotation: VecDeque::new(),
+            meta: FxHashMap::default(),
+            quantum: quantum.max(1),
+        }
+    }
+
+    fn enqueue(&mut self, class: usize, fid: u64) {
+        let cq = &mut self.classes[class];
+        cq.queue.push_back(fid);
+        if !cq.in_rotation {
+            cq.in_rotation = true;
+            self.rotation.push_back(class);
+        }
+    }
+}
+
+impl SchedPolicy for WeightedFair {
+    fn name(&self) -> &'static str {
+        "weighted_fair"
+    }
+
+    fn admit(&mut self, meta: FlightMeta) {
+        let class = meta.class.min(self.classes.len() - 1);
+        self.meta.insert(meta.fid, (class, meta.tile_cost.max(1)));
+        self.enqueue(class, meta.fid);
+    }
+
+    fn pick(&mut self) -> Option<u64> {
+        // Terminates: every unaffordable front visit banks ≥ quantum ≥
+        // any tile cost, so a nonempty class issues within two visits.
+        loop {
+            let &class = self.rotation.front()?;
+            let cq = &mut self.classes[class];
+            let Some(&fid) = cq.queue.front() else {
+                // Idle classes leave the rotation and forfeit their
+                // bank — deficits never accumulate while unbacklogged.
+                cq.deficit = 0;
+                cq.in_rotation = false;
+                self.rotation.pop_front();
+                continue;
+            };
+            let cost = self.meta[&fid].1;
+            if cq.deficit >= cost {
+                cq.deficit -= cost;
+                cq.queue.pop_front();
+                return Some(fid);
+            }
+            cq.deficit += cq.weight * self.quantum;
+            self.rotation.pop_front();
+            self.rotation.push_back(class);
+        }
+    }
+
+    fn tile_issued(&mut self, fid: u64, more: bool) {
+        if more {
+            let class = self.meta[&fid].0;
+            self.enqueue(class, fid);
+        }
+    }
+
+    fn remove(&mut self, fid: u64) {
+        if let Some((class, _)) = self.meta.remove(&fid) {
+            self.classes[class].queue.retain(|&x| x != fid);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::precision::Precision;
+
+    fn meta(fid: u64, class: usize, cost: u64) -> FlightMeta {
+        let precision = if cost > 1 { Precision::Int8 } else { Precision::Fp32 };
+        FlightMeta { fid, class, precision, tile_cost: cost }
+    }
+
+    /// Drive `picks` scheduling decisions with every flight always
+    /// having more tiles; returns per-fid tile counts.
+    fn drive(p: &mut WeightedFair, picks: usize) -> FxHashMap<u64, usize> {
+        let mut counts = FxHashMap::default();
+        for _ in 0..picks {
+            let fid = p.pick().expect("backlogged policy must always pick");
+            *counts.entry(fid).or_insert(0) += 1;
+            p.tile_issued(fid, true);
+        }
+        counts
+    }
+
+    #[test]
+    fn equal_weights_split_cost_not_tiles() {
+        // Class 0: one fp32 flight (cost 1). Class 1: one int8 flight
+        // (cost 4). Equal weights → equal cost share → fp32 issues 4
+        // tiles per int8 tile.
+        let mut p = WeightedFair::new(&[1, 1], 4);
+        p.admit(meta(10, 0, 1));
+        p.admit(meta(20, 1, 4));
+        let counts = drive(&mut p, 500);
+        assert_eq!(counts[&10], 400);
+        assert_eq!(counts[&20], 100);
+    }
+
+    #[test]
+    fn weights_scale_the_share() {
+        // Same costs, class 0 weighted 3× → 3× the cost share.
+        let mut p = WeightedFair::new(&[3, 1], 2);
+        p.admit(meta(1, 0, 2));
+        p.admit(meta(2, 1, 2));
+        let counts = drive(&mut p, 400);
+        assert_eq!(counts[&1], 300);
+        assert_eq!(counts[&2], 100);
+    }
+
+    #[test]
+    fn heavy_stream_cannot_starve_light_class() {
+        // Six saturating int8 flights against one fp32 flight: between
+        // any two consecutive fp32 tiles at most one int8 *burst* of
+        // quantum/cost tiles fits — bounded service gap, no starvation.
+        let mut p = WeightedFair::new(&[1, 1], 4);
+        p.admit(meta(1, 0, 1));
+        for fid in 10..16 {
+            p.admit(meta(fid, 1, 4));
+        }
+        let mut gap = 0usize;
+        let mut max_gap = 0usize;
+        for _ in 0..600 {
+            let fid = p.pick().unwrap();
+            if fid == 1 {
+                max_gap = max_gap.max(gap);
+                gap = 0;
+            } else {
+                gap += 1;
+            }
+            p.tile_issued(fid, true);
+        }
+        assert!(max_gap <= 2, "fp32 service gap {max_gap} tiles");
+    }
+
+    #[test]
+    fn flights_within_a_class_round_robin() {
+        let mut p = WeightedFair::new(&[1], 1);
+        for fid in [1, 2, 3] {
+            p.admit(meta(fid, 0, 1));
+        }
+        let mut picks = Vec::new();
+        for _ in 0..6 {
+            let fid = p.pick().unwrap();
+            picks.push(fid);
+            p.tile_issued(fid, true);
+        }
+        assert_eq!(picks, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn out_of_range_class_clamps_and_remove_purges() {
+        let mut p = WeightedFair::new(&[1, 1], 1);
+        p.admit(meta(7, 99, 1)); // clamps to class 1
+        p.admit(meta(8, 1, 1));
+        p.remove(7);
+        let counts = drive(&mut p, 4);
+        assert_eq!(counts.get(&7), None);
+        assert_eq!(counts[&8], 4);
+        // Removing an unknown fid is a no-op.
+        p.remove(12345);
+    }
+
+    #[test]
+    fn drains_to_none_and_recovers() {
+        let mut p = WeightedFair::new(&[1, 1], 4);
+        p.admit(meta(1, 0, 1));
+        let fid = p.pick().unwrap();
+        p.tile_issued(fid, false); // last tile
+        p.remove(fid);
+        assert_eq!(p.pick(), None);
+        // A later admission reactivates the class cleanly.
+        p.admit(meta(2, 0, 1));
+        assert_eq!(p.pick(), Some(2));
+    }
+}

@@ -1,0 +1,595 @@
+//! The scheduler thread: a single-threaded state machine owning the
+//! device pool, the open flights, the in-flight window — and, since
+//! PR 3, a pluggable [`SchedPolicy`] deciding which flight issues the
+//! next tile.
+//!
+//! # The pipeline (unchanged mechanics)
+//!
+//! 1. **Tile-major packing (zero-copy)** — on first schedule each
+//!    request's A and B are packed once into tile-major pools of `Arc`'d
+//!    native blocks ([`Tiler::pack_tile_major`]); a tile job borrows its
+//!    two blocks by `Arc` clone.
+//! 2. **Windowed submission** — up to `pipeline_depth` tagged jobs are
+//!    kept in flight on one completion channel, overlapping host
+//!    pack/reduce with device execution. `pipeline_depth = 1` reproduces
+//!    the synchronous engine exactly.
+//! 3. **Policy-ordered scheduling** — each flight walks its tiles
+//!    k-innermost per `(im, inn)` output block; *which* flight issues
+//!    the next tile is the policy's call ([`Fifo`] round-robin by
+//!    default, bit-identical to the pre-policy engine).
+//!
+//! **Determinism:** completions may arrive out of order, but partials
+//! are applied to each output block strictly in ascending `ik` order
+//! (late partials park in a per-block reorder map), so outputs are
+//! bit-identical for every `pipeline_depth`/`workers`/policy
+//! combination and admission interleaving — f32 by ordered summation,
+//! i32 trivially (wrapping integer addition is associative).
+//!
+//! [`Fifo`]: crate::coordinator::policy::Fifo
+
+use crate::arch::precision::Precision;
+use crate::config::schema::PolicyKind;
+use crate::coordinator::admission::{Admitted, Gate, GateCloser};
+use crate::coordinator::device::{DeviceHandle, TileDone, TileJob, TileOutput, TilePayload};
+use crate::coordinator::handle::{Cancelled, Reply};
+use crate::coordinator::policy::{self, FlightMeta, PolicyParams, SchedPolicy};
+use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
+use crate::coordinator::tiler::Tiler;
+use crate::workloads::{MatMulRequest, MatOutput, Operands};
+use anyhow::anyhow;
+use rustc_hash::FxHashMap;
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduler-thread events: admissions, tile completions (forwarded
+/// from the device pool), cancellations and control messages share one
+/// channel, so the scheduler is a single ordered state machine.
+pub(crate) enum Event {
+    Admit(Box<Admitted>),
+    Done(TileDone),
+    /// Cancel the request submitted with this admission token.
+    Cancel(u64),
+    SetDepth(usize),
+    SetPolicy(PolicyKind),
+    ResetEpoch,
+    Drain,
+}
+
+/// State shared between the scheduler thread and client-side snapshots.
+pub(crate) struct Shared {
+    pub(crate) stats: Mutex<StatsAgg>,
+    /// Cumulative window occupancy over the server's lifetime.
+    pub(crate) window: Mutex<WindowOcc>,
+    /// Occupancy since the last epoch reset (A/B attribution).
+    pub(crate) last_window: Mutex<WindowOcc>,
+    /// Wall time spent inside `run_batch` calls.
+    pub(crate) wall_time_s: Mutex<f64>,
+}
+
+/// Element type the reduction machinery is generic over: f32 sums, the
+/// int8 path accumulates i32 with wrapping adds (both orderings are
+/// fixed by the ascending-`ik` rule; wrapping keeps i32 bit-exact even
+/// on overflow).
+trait Elem: Copy + Default + Send + Sync + 'static {
+    fn acc(&mut self, other: Self);
+}
+
+impl Elem for f32 {
+    fn acc(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+impl Elem for i32 {
+    fn acc(&mut self, other: Self) {
+        *self = self.wrapping_add(other);
+    }
+}
+
+/// One precision's operand pools and output matrix.
+struct Pools<T> {
+    /// Raw row-major operands, held until this request's first tile is
+    /// scheduled: packing then happens *inside* the pipeline, overlapping
+    /// the tiles of earlier requests already executing on the workers.
+    raw: Option<(Vec<T>, Vec<T>)>,
+    /// Tile-major A pool, indexed `[im·gk + ik]`.
+    a_tiles: Vec<Arc<Vec<T>>>,
+    /// Tile-major B pool, indexed `[ik·gn + inn]`.
+    b_tiles: Vec<Arc<Vec<T>>>,
+    c: Vec<T>,
+}
+
+impl<T: Elem> Pools<T> {
+    fn fresh(a: Vec<T>, b: Vec<T>, out_len: usize) -> Self {
+        Pools {
+            raw: Some((a, b)),
+            a_tiles: Vec::new(),
+            b_tiles: Vec::new(),
+            c: vec![T::default(); out_len],
+        }
+    }
+
+    /// First schedule of this request: pack its operands into the
+    /// tile-major pools now — one extract pass per block, total,
+    /// overlapping whatever is already in flight.
+    fn pack(&mut self, m: usize, k: usize, n: usize, t: Tiler) {
+        if let Some((a, b)) = self.raw.take() {
+            self.a_tiles = Tiler::pack_tile_major(&a, m, k, t.nm, t.nk)
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+            self.b_tiles = Tiler::pack_tile_major(&b, k, n, t.nk, t.nn)
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+        }
+    }
+}
+
+/// Typed flight data — the only precision-specific part of a flight.
+enum FlightData {
+    F32(Pools<f32>),
+    I32(Pools<i32>),
+}
+
+/// One open request's state in the scheduler.
+struct Flight {
+    req: MatMulRequest,
+    /// Admission token — the cancellation address of this flight.
+    token: u64,
+    /// Priority class, clamped to the configured class count.
+    class: usize,
+    /// Block grid `(gm, gk, gn)` in this request's precision geometry.
+    grid: (usize, usize, usize),
+    /// This request's precision tiler (native tile sizes are
+    /// per-precision).
+    tiler: Tiler,
+    data: FlightData,
+    /// Cursor into the k-innermost tile walk.
+    next_tile: usize,
+    total_tiles: usize,
+    /// Tiles whose partials have been reduced (in order).
+    done_tiles: usize,
+    started: Instant,
+    /// When the first tile was issued — splits wall latency into
+    /// queueing delay and service time for the per-class stats.
+    first_issue: Option<Instant>,
+    invocations: u64,
+    reply: Reply,
+}
+
+/// Where a tagged in-flight job lands when it completes.
+#[derive(Debug, Clone, Copy)]
+struct JobDesc {
+    flight: u64,
+    im: usize,
+    inn: usize,
+    ik: usize,
+}
+
+/// Per-output-block accumulation state (the "small accumulation buffer
+/// per in-flight block").
+struct BlockAcc<T> {
+    /// Dense `nm×nn` running sum.
+    buf: Vec<T>,
+    /// Next `ik` to reduce — enforces the bit-exact reduction order.
+    next_ik: usize,
+    /// Out-of-order partials parked until their turn.
+    pending: BTreeMap<usize, Vec<T>>,
+}
+
+/// Reduce one completed partial into its output block, preserving
+/// ascending-`ik` order; write the block back once full.
+#[allow(clippy::too_many_arguments)]
+fn reduce_partial<T: Elem>(
+    accs: &mut FxHashMap<(u64, usize, usize), BlockAcc<T>>,
+    c: &mut [T],
+    done_tiles: &mut usize,
+    tiler: Tiler,
+    gk: usize,
+    m: usize,
+    n: usize,
+    fid: u64,
+    desc: JobDesc,
+    partial: Vec<T>,
+) {
+    let key = (fid, desc.im, desc.inn);
+    let acc = accs.entry(key).or_insert_with(|| BlockAcc {
+        buf: vec![T::default(); tiler.nm * tiler.nn],
+        next_ik: 0,
+        pending: BTreeMap::new(),
+    });
+    acc.pending.insert(desc.ik, partial);
+    while let Some(p) = acc.pending.remove(&acc.next_ik) {
+        for (dst, src) in acc.buf.iter_mut().zip(&p) {
+            dst.acc(*src);
+        }
+        acc.next_ik += 1;
+        *done_tiles += 1;
+    }
+    if acc.next_ik == gk {
+        let full = accs.remove(&key).unwrap();
+        Tiler::write_block(c, m, n, desc.im, desc.inn, tiler.nm, tiler.nn, &full.buf);
+    }
+}
+
+/// The scheduler state machine (see module docs).
+pub(crate) struct Scheduler {
+    pub(crate) device: DeviceHandle,
+    pub(crate) tiler_f32: Tiler,
+    pub(crate) tiler_i32: Tiler,
+    pub(crate) gate: Arc<Gate>,
+    pub(crate) shared: Arc<Shared>,
+    /// Sender cloned into every tile job; a forwarder thread relays
+    /// completions into the scheduler's event channel.
+    pub(crate) tile_tx: mpsc::Sender<TileDone>,
+    pub(crate) depth: usize,
+    /// Scheduling decisions are delegated here; see
+    /// [`crate::coordinator::policy`].
+    pub(crate) policy: Box<dyn SchedPolicy>,
+    pub(crate) params: PolicyParams,
+    pub(crate) draining: bool,
+    flights: FxHashMap<u64, Flight>,
+    /// Admission token → flight id (the cancellation route).
+    tokens: FxHashMap<u64, u64>,
+    descs: FxHashMap<u64, JobDesc>,
+    accs_f32: FxHashMap<(u64, usize, usize), BlockAcc<f32>>,
+    accs_i32: FxHashMap<(u64, usize, usize), BlockAcc<i32>>,
+    next_flight: u64,
+    next_tag: u64,
+    in_flight: usize,
+}
+
+impl Scheduler {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        device: DeviceHandle,
+        tiler_f32: Tiler,
+        tiler_i32: Tiler,
+        gate: Arc<Gate>,
+        shared: Arc<Shared>,
+        tile_tx: mpsc::Sender<TileDone>,
+        depth: usize,
+        params: PolicyParams,
+    ) -> Self {
+        Scheduler {
+            device,
+            tiler_f32,
+            tiler_i32,
+            gate,
+            shared,
+            tile_tx,
+            depth: depth.max(1),
+            policy: policy::build(&params),
+            params,
+            draining: false,
+            flights: FxHashMap::default(),
+            tokens: FxHashMap::default(),
+            descs: FxHashMap::default(),
+            accs_f32: FxHashMap::default(),
+            accs_i32: FxHashMap::default(),
+            next_flight: 0,
+            next_tag: 0,
+            in_flight: 0,
+        }
+    }
+
+    pub(crate) fn run(mut self, events: mpsc::Receiver<Event>) {
+        // Wake any producer parked on the admission gate when this
+        // thread exits — normally or by unwinding.
+        let _gate_closer = GateCloser(Arc::clone(&self.gate));
+        loop {
+            // Fill the window from the policy.
+            while self.in_flight < self.depth {
+                let Some(fid) = self.policy.pick() else { break };
+                self.submit_one(fid);
+            }
+            if self.draining && self.flights.is_empty() && self.in_flight == 0 {
+                break;
+            }
+            // Block for the next admission, completion or control event.
+            let Ok(ev) = events.recv() else { break };
+            match ev {
+                Event::Admit(adm) => self.handle_admit(adm),
+                Event::Done(done) => self.handle_done(done),
+                Event::Cancel(token) => self.handle_cancel(token),
+                Event::SetDepth(d) => self.depth = d.max(1),
+                Event::SetPolicy(kind) => self.set_policy(kind),
+                Event::ResetEpoch => {
+                    *self.shared.last_window.lock().unwrap() = WindowOcc::default()
+                }
+                Event::Drain => self.draining = true,
+            }
+        }
+        // `_gate_closer` closes the admission gate as it drops;
+        // dropping `self.device` stops the worker pool.
+    }
+
+    fn tiler_for(&self, p: Precision) -> Tiler {
+        match p {
+            Precision::Int8 => self.tiler_i32,
+            _ => self.tiler_f32,
+        }
+    }
+
+    fn flight_meta(&self, fid: u64, f: &Flight) -> FlightMeta {
+        FlightMeta {
+            fid,
+            class: f.class,
+            precision: f.req.precision,
+            tile_cost: self.params.costs.cost(f.req.precision),
+        }
+    }
+
+    /// Swap the scheduling policy live: rebuild it and re-admit every
+    /// flight that still has unissued tiles, in flight-id (admission)
+    /// order so the handover is deterministic.
+    fn set_policy(&mut self, kind: PolicyKind) {
+        self.params.kind = kind;
+        self.policy = policy::build(&self.params);
+        let mut open: Vec<u64> = self
+            .flights
+            .iter()
+            .filter(|(_, f)| f.next_tile < f.total_tiles)
+            .map(|(&fid, _)| fid)
+            .collect();
+        open.sort_unstable();
+        for fid in open {
+            let meta = self.flight_meta(fid, &self.flights[&fid]);
+            self.policy.admit(meta);
+        }
+    }
+
+    fn handle_admit(&mut self, mut adm: Box<Admitted>) {
+        if self.draining {
+            return; // Admitted::drop frees the slot and errors the reply
+        }
+        let req = adm.req;
+        let token = adm.token;
+        let submitted = adm.submitted;
+        let ops = adm.ops.take().expect("operands consumed once");
+        let reply = adm.reply.take().expect("reply consumed once");
+        let class = self.params.clamp_class(req.class);
+        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
+        let tiler = self.tiler_for(req.precision);
+        let grid = tiler.grid(m, k, n);
+        let (gm, gk, gn) = grid;
+        let total_tiles = gm * gk * gn;
+        // Degenerate (zero-tile) requests retire immediately — still
+        // recorded, so stats().requests matches the replies delivered.
+        if total_tiles == 0 {
+            self.shared.stats.lock().unwrap().record(Completion {
+                id: req.id,
+                macs: req.macs(),
+                precision: req.precision,
+                class,
+                wall: submitted.elapsed(),
+                queued: submitted.elapsed(),
+                service: Duration::ZERO,
+                device_s: 0.0,
+                invocations: 0,
+            });
+            let out = match ops {
+                Operands::F32 { .. } => MatOutput::F32(vec![0.0; m * n]),
+                Operands::I32 { .. } => MatOutput::I32(vec![0; m * n]),
+            };
+            self.gate.release();
+            reply.send(req, Ok(out));
+            return;
+        }
+        let data = match ops {
+            Operands::F32 { a, b } => FlightData::F32(Pools::fresh(a, b, m * n)),
+            Operands::I32 { a, b } => FlightData::I32(Pools::fresh(a, b, m * n)),
+        };
+        let fid = self.next_flight;
+        self.next_flight += 1;
+        self.flights.insert(
+            fid,
+            Flight {
+                req,
+                token,
+                class,
+                grid,
+                tiler,
+                data,
+                next_tile: 0,
+                total_tiles,
+                done_tiles: 0,
+                started: submitted,
+                first_issue: None,
+                invocations: 0,
+                reply,
+            },
+        );
+        self.tokens.insert(token, fid);
+        let meta = self.flight_meta(fid, &self.flights[&fid]);
+        self.policy.admit(meta);
+    }
+
+    /// Schedule the next tile of flight `fid` into the window.
+    fn submit_one(&mut self, fid: u64) {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let (payload, desc, more) = {
+            let Some(f) = self.flights.get_mut(&fid) else { return };
+            let (_gm, gk, gn) = f.grid;
+            let (m, k, n) = (f.req.m as usize, f.req.k as usize, f.req.n as usize);
+            let tiler = f.tiler;
+            if f.first_issue.is_none() {
+                f.first_issue = Some(Instant::now());
+            }
+            // k-innermost walk: tile t = (im·gn + inn)·gk + ik.
+            let t = f.next_tile;
+            f.next_tile += 1;
+            let ik = t % gk;
+            let blk = t / gk;
+            let im = blk / gn;
+            let inn = blk % gn;
+            let payload = match &mut f.data {
+                FlightData::F32(p) => {
+                    p.pack(m, k, n, tiler);
+                    TilePayload::F32 {
+                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
+                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
+                    }
+                }
+                FlightData::I32(p) => {
+                    p.pack(m, k, n, tiler);
+                    TilePayload::I32 {
+                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
+                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
+                    }
+                }
+            };
+            f.invocations += 1;
+            (payload, JobDesc { flight: fid, im, inn, ik }, f.next_tile < f.total_tiles)
+        };
+        self.descs.insert(tag, desc);
+        self.policy.tile_issued(fid, more);
+        match self.device.submit(TileJob { tag, payload, done: self.tile_tx.clone() }) {
+            Ok(()) => self.in_flight += 1,
+            Err(e) => {
+                self.descs.remove(&tag);
+                self.fail_flight(fid, e);
+            }
+        }
+    }
+
+    fn handle_done(&mut self, done: TileDone) {
+        // Sample the window as it stood while this tile completed.
+        let occ = self.in_flight;
+        self.shared.window.lock().unwrap().record(occ);
+        self.shared.last_window.lock().unwrap().record(occ);
+        self.in_flight = self.in_flight.saturating_sub(1);
+        let Some(desc) = self.descs.remove(&done.tag) else {
+            return; // stale tag (defensive; tags are scheduler-issued)
+        };
+        let fid = desc.flight;
+        if !self.flights.contains_key(&fid) {
+            return; // flight failed or was cancelled; drop the straggler
+        }
+        let output = match done.result {
+            Ok(o) => o,
+            Err(e) => {
+                self.fail_flight(fid, e);
+                return;
+            }
+        };
+        let matched = {
+            let f = self.flights.get_mut(&fid).unwrap();
+            let tiler = f.tiler;
+            let (_gm, gk, _gn) = f.grid;
+            let (m, n) = (f.req.m as usize, f.req.n as usize);
+            match (&mut f.data, output) {
+                (FlightData::F32(p), TileOutput::F32(partial)) => {
+                    reduce_partial(
+                        &mut self.accs_f32,
+                        &mut p.c,
+                        &mut f.done_tiles,
+                        tiler,
+                        gk,
+                        m,
+                        n,
+                        fid,
+                        desc,
+                        partial,
+                    );
+                    true
+                }
+                (FlightData::I32(p), TileOutput::I32(partial)) => {
+                    reduce_partial(
+                        &mut self.accs_i32,
+                        &mut p.c,
+                        &mut f.done_tiles,
+                        tiler,
+                        gk,
+                        m,
+                        n,
+                        fid,
+                        desc,
+                        partial,
+                    );
+                    true
+                }
+                _ => false,
+            }
+        };
+        if !matched {
+            self.fail_flight(fid, anyhow!("device returned a tile in the wrong precision"));
+            return;
+        }
+        let f = &self.flights[&fid];
+        if f.done_tiles == f.total_tiles {
+            self.retire(fid);
+        }
+    }
+
+    /// Deliver a finished flight's output and free its admission slot.
+    fn retire(&mut self, fid: u64) {
+        let mut f = self.flights.remove(&fid).unwrap();
+        self.tokens.remove(&f.token);
+        self.policy.remove(fid);
+        // Charge the flight exactly its own tiles (period × invocations)
+        // — the shared device clock spans concurrently open flights and
+        // would double-count overlap.
+        let period = self
+            .device
+            .info_for(f.req.precision)
+            .map(|i| i.period_cycles)
+            .unwrap_or_default();
+        let (queued, service) = match f.first_issue {
+            Some(t) => (t.duration_since(f.started), t.elapsed()),
+            None => (f.started.elapsed(), Duration::ZERO),
+        };
+        self.shared.stats.lock().unwrap().record(Completion {
+            id: f.req.id,
+            macs: f.req.macs(),
+            precision: f.req.precision,
+            class: f.class,
+            wall: f.started.elapsed(),
+            queued,
+            service,
+            device_s: period * f.invocations as f64 / self.device.freq_hz,
+            invocations: f.invocations,
+        });
+        let out = match &mut f.data {
+            FlightData::F32(p) => MatOutput::F32(std::mem::take(&mut p.c)),
+            FlightData::I32(p) => MatOutput::I32(std::mem::take(&mut p.c)),
+        };
+        self.gate.release();
+        f.reply.send(f.req, Ok(out));
+    }
+
+    /// Drop one flight's scheduler state (queues, reduction buffers,
+    /// token) and free its admission slot. Tiles already in the window
+    /// are dropped on arrival by `handle_done`'s straggler path.
+    fn evict(&mut self, fid: u64) -> Option<Flight> {
+        let f = self.flights.remove(&fid)?;
+        self.tokens.remove(&f.token);
+        self.policy.remove(fid);
+        self.accs_f32.retain(|k, _| k.0 != fid);
+        self.accs_i32.retain(|k, _| k.0 != fid);
+        self.gate.release();
+        Some(f)
+    }
+
+    /// Fail one flight without tearing the stream down.
+    fn fail_flight(&mut self, fid: u64, err: anyhow::Error) {
+        if let Some(f) = self.evict(fid) {
+            f.reply.send(f.req, Err(err));
+        }
+    }
+
+    /// Cancel the flight behind an admission token: unissued tiles are
+    /// abandoned, slots reclaimed, and the reply resolves with
+    /// [`Cancelled`]. Unknown tokens (already retired, failed, or
+    /// cancelled twice) are a no-op — a handle resolves exactly once.
+    fn handle_cancel(&mut self, token: u64) {
+        let Some(&fid) = self.tokens.get(&token) else { return };
+        if let Some(f) = self.evict(fid) {
+            self.shared.stats.lock().unwrap().record_cancelled();
+            f.reply.send(f.req, Err(Cancelled(f.req.id).into()));
+        }
+    }
+}

@@ -1,88 +1,71 @@
-//! The MatMul serving layer: **streaming admission** + pipelined tile
-//! engine on top of the device worker pool.
+//! The MatMul serving coordinator: **streaming admission** + pluggable
+//! scheduling policy + pipelined tile engine on the device worker pool.
+//!
+//! This module is the client-facing facade; the machinery lives in the
+//! sibling modules:
+//!
+//! * [`crate::coordinator::admission`] — the bounded open-request gate
+//!   (`queue_depth` + block/reject backpressure).
+//! * [`crate::coordinator::policy`] — [`SchedPolicy`]: who issues the
+//!   next tile ([`PolicyKind::Fifo`] round-robin by default,
+//!   `WeightedFair` deficit round-robin with per-precision costs,
+//!   `Priority` strict classes with aging).
+//! * [`crate::coordinator::scheduler`] — the scheduler thread: packing,
+//!   the in-flight window, ordered reduction, retirement, cancellation.
+//! * [`crate::coordinator::handle`] — per-request completion delivery
+//!   ([`RequestHandle`]: `wait` / `try_wait` / `cancel`) and callbacks.
 //!
 //! # Streaming admission (the open queue)
 //!
-//! Unlike the PR 1 engine, which replayed a pre-closed batch, this
-//! server is a long-lived stream processor. [`MatMulServer::submit`]
-//! admits one request into a bounded open queue and returns a
-//! [`RequestHandle`] immediately; a dedicated **scheduler thread** packs
-//! operands, feeds the in-flight window continuously, reduces partials
-//! and retires requests while later submissions are still arriving — so
-//! requests are admitted, scheduled and completed concurrently, not in
-//! batch lockstep.
+//! [`MatMulServer::submit`] admits one request into a bounded open
+//! queue and returns a [`RequestHandle`] immediately; the scheduler
+//! thread packs operands, feeds the in-flight window continuously,
+//! reduces partials and retires requests while later submissions are
+//! still arriving. Backpressure is governed by
+//! `ServeConfig::queue_depth` and an [`AdmissionPolicy`]
+//! (`Block` parks the producer, `Reject` fails fast with [`QueueFull`]).
 //!
-//! **Backpressure** is governed by `ServeConfig::queue_depth` — the
-//! maximum number of *open* requests (admitted but not yet retired;
-//! `0` = unbounded) — and an [`AdmissionPolicy`]:
+//! # Scheduling policy, classes and cancellation
 //!
-//! * [`AdmissionPolicy::Block`] parks the submitting thread until a
-//!   slot frees (producers run at the engine's pace).
-//! * [`AdmissionPolicy::Reject`] fails fast with [`QueueFull`] so the
-//!   caller can shed load or retry.
-//!
-//! Completions are delivered per request: [`RequestHandle::wait`] /
-//! [`RequestHandle::try_wait`], or a callback registered with
-//! [`MatMulServer::submit_with_callback`] (invoked on the scheduler
-//! thread — keep it short). [`MatMulServer::run_batch`] remains as a
-//! thin convenience wrapper: submit everything (blocking policy), wait
-//! in order — every batch test therefore exercises the streaming path.
+//! Every [`MatMulRequest`] carries a priority `class`; the configured
+//! [`PolicyKind`] decides how classes and precisions share the window.
+//! The default `Fifo` policy reproduces the PR 1/2 round-robin
+//! bit-for-bit. Dropping or explicitly cancelling a [`RequestHandle`]
+//! reclaims the request's queue and window slots for tiles not yet
+//! dispatched — see [`RequestHandle::cancel`] and the
+//! [`Cancelled`] error.
 //!
 //! # Per-request precision
 //!
-//! Each [`MatMulRequest`] names its [`Precision`]: fp32 requests flow as
-//! f32 tiles, int8 requests as int8-range operands carried in i32 with
-//! **i32 accumulation buffers** (paper §IV-C1), through the *same*
-//! tiler/window/reduction machinery. Each precision has its own native
-//! tile geometry (the paper's int8 kernel is 32×128×32 vs fp32's
-//! 32×32×32) and its own simulated device period. One server interleaves
-//! both in a single window.
+//! fp32 requests flow as f32 tiles, int8 requests as int8-range
+//! operands carried in i32 with **i32 accumulation buffers** (paper
+//! §IV-C1), through the same tiler/window/reduction machinery — each
+//! precision with its own native tile geometry and simulated device
+//! period. One server interleaves both in a single window.
 //!
-//! # The pipeline (unchanged mechanics)
-//!
-//! 1. **Tile-major packing (zero-copy)** — on first schedule each
-//!    request's A and B are packed once into tile-major pools of `Arc`'d
-//!    native blocks ([`Tiler::pack_tile_major`]); a tile job borrows its
-//!    two blocks by `Arc` clone.
-//! 2. **Windowed submission** — up to `pipeline_depth` tagged jobs are
-//!    kept in flight on one completion channel, overlapping host
-//!    pack/reduce with device execution. `pipeline_depth = 1` reproduces
-//!    the synchronous engine exactly.
-//! 3. **Reuse-ordered scheduling** — each request walks its tiles
-//!    k-innermost per `(im, inn)` output block; fairness across requests
-//!    is round-robin at the window level.
-//!
-//! **Determinism:** completions may arrive out of order, but partials
-//! are applied to each output block strictly in ascending `ik` order
-//! (late partials park in a per-block reorder map), so outputs are
-//! bit-identical for every `pipeline_depth`/`workers` combination and
-//! admission interleaving — f32 by ordered summation, i32 trivially
-//! (wrapping integer addition is associative). See
-//! `rust/tests/pipeline_equivalence.rs` and
+//! **Determinism:** outputs are bit-identical for every
+//! `pipeline_depth`/`workers` combination and admission interleaving —
+//! see `rust/tests/pipeline_equivalence.rs` and
 //! `rust/tests/streaming_admission.rs`.
 
 use crate::arch::precision::Precision;
-use crate::config::schema::{AdmissionPolicy, ServeConfig};
-use crate::coordinator::device::{
-    spawn_device_pool, DeviceHandle, PrecisionInfo, TileDone, TileJob, TileOutput, TilePayload,
-};
-use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
+use crate::config::schema::{AdmissionPolicy, PolicyKind, ServeConfig};
+use crate::coordinator::admission::{Admitted, Gate};
+use crate::coordinator::device::{spawn_device_pool, PrecisionInfo, TileDone};
+use crate::coordinator::handle::Reply;
+use crate::coordinator::policy::{PolicyParams, TileCosts};
+use crate::coordinator::scheduler::{Event, Scheduler, Shared};
+use crate::coordinator::stats::{ClassStats, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
-use rustc_hash::FxHashMap;
-use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Returned by a [`AdmissionPolicy::Reject`] submission when
-/// `queue_depth` requests are already open. Recover it from the anyhow
-/// chain with `err.downcast_ref::<QueueFull>()`.
-#[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("admission queue full ({0} open requests)")]
-pub struct QueueFull(pub usize);
+pub use crate::coordinator::admission::QueueFull;
+pub use crate::coordinator::handle::{Cancelled, RequestHandle};
 
 /// Serving statistics snapshot.
 #[derive(Debug, Clone)]
@@ -91,9 +74,14 @@ pub struct ServerStats {
     /// Requests served in fp32 / int8 (the dual-precision traffic split).
     pub requests_fp32: usize,
     pub requests_int8: usize,
+    /// Requests cancelled before completion (not counted in `requests`).
+    pub cancelled: usize,
     pub invocations: u64,
     pub mean_latency_ms: f64,
     pub p99_latency_ms: f64,
+    /// Per-class queueing-delay / service-time percentiles (bounded
+    /// windows; one entry per class that completed a request).
+    pub classes: Vec<ClassStats>,
     /// Device-time throughput (ops/s) over the whole stream.
     pub device_ops_per_sec: f64,
     /// Total simulated device time (s).
@@ -107,581 +95,6 @@ pub struct ServerStats {
     pub mean_in_flight: f64,
     /// Measured peak window occupancy.
     pub max_in_flight: usize,
-}
-
-/// Per-request completion delivery.
-enum Reply {
-    Handle(mpsc::Sender<Result<MatOutput>>),
-    Callback(Box<dyn FnOnce(MatMulRequest, Result<MatOutput>) + Send>),
-}
-
-impl Reply {
-    fn send(self, req: MatMulRequest, out: Result<MatOutput>) {
-        match self {
-            Reply::Handle(tx) => {
-                let _ = tx.send(out);
-            }
-            // User code runs on the scheduler thread; a panicking
-            // callback must not take the whole stream down with it.
-            Reply::Callback(cb) => {
-                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cb(req, out)));
-            }
-        }
-    }
-}
-
-/// A request admitted by a client thread, in flight to the scheduler.
-///
-/// `ops`/`reply` are `Option`s taken out on the normal path; the `Drop`
-/// impl is the safety net for every other path (scheduler draining, the
-/// event channel torn down with admits still queued, send failure): it
-/// frees the admission slot and delivers a shutdown error, so a
-/// successful `submit` always resolves its handle/callback.
-struct Admitted {
-    req: MatMulRequest,
-    ops: Option<Operands>,
-    submitted: Instant,
-    reply: Option<Reply>,
-    gate: Arc<Gate>,
-}
-
-impl Drop for Admitted {
-    fn drop(&mut self) {
-        if let Some(reply) = self.reply.take() {
-            self.gate.release();
-            reply.send(self.req, Err(anyhow!("server is shutting down")));
-        }
-    }
-}
-
-/// Scheduler-thread events: admissions from clients and tile
-/// completions (forwarded from the device pool) share one channel, so
-/// the scheduler is a single ordered state machine.
-enum Event {
-    Admit(Box<Admitted>),
-    Done(TileDone),
-    SetDepth(usize),
-    ResetEpoch,
-    Drain,
-}
-
-/// The admission gate: a counting semaphore over open requests with a
-/// closed flag so blocked producers wake when the server goes away.
-struct Gate {
-    /// `0` = unbounded.
-    depth: usize,
-    state: Mutex<GateState>,
-    cv: Condvar,
-}
-
-struct GateState {
-    open: usize,
-    closed: bool,
-}
-
-/// Closes the gate when dropped — even if the scheduler thread unwinds,
-/// producers parked in [`Gate::admit`] wake up instead of hanging.
-struct GateCloser(Arc<Gate>);
-
-impl Drop for GateCloser {
-    fn drop(&mut self) {
-        self.0.close();
-    }
-}
-
-impl Gate {
-    fn new(depth: usize) -> Self {
-        Gate {
-            depth,
-            state: Mutex::new(GateState { open: 0, closed: false }),
-            cv: Condvar::new(),
-        }
-    }
-
-    fn admit(&self, policy: AdmissionPolicy) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.closed {
-                return Err(anyhow!("server is shut down"));
-            }
-            if self.depth == 0 || st.open < self.depth {
-                st.open += 1;
-                return Ok(());
-            }
-            match policy {
-                AdmissionPolicy::Reject => return Err(QueueFull(self.depth).into()),
-                AdmissionPolicy::Block => st = self.cv.wait(st).unwrap(),
-            }
-        }
-    }
-
-    fn release(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.open = st.open.saturating_sub(1);
-        drop(st);
-        self.cv.notify_one();
-    }
-
-    fn close(&self) {
-        self.state.lock().unwrap().closed = true;
-        self.cv.notify_all();
-    }
-}
-
-/// State shared between the scheduler thread and client-side snapshots.
-struct Shared {
-    stats: Mutex<StatsAgg>,
-    /// Cumulative window occupancy over the server's lifetime.
-    window: Mutex<WindowOcc>,
-    /// Occupancy since the last epoch reset (A/B attribution).
-    last_window: Mutex<WindowOcc>,
-    /// Wall time spent inside `run_batch` calls.
-    wall_time_s: Mutex<f64>,
-}
-
-/// A completion handle for one admitted request.
-pub struct RequestHandle {
-    id: u64,
-    rx: mpsc::Receiver<Result<MatOutput>>,
-}
-
-impl RequestHandle {
-    /// The submitted request's id.
-    pub fn id(&self) -> u64 {
-        self.id
-    }
-
-    /// Block until the request retires and take its output.
-    pub fn wait(self) -> Result<MatOutput> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("server dropped request {} without replying", self.id))?
-    }
-
-    /// Non-blocking poll: `None` while the request is still in flight.
-    pub fn try_wait(&self) -> Option<Result<MatOutput>> {
-        match self.rx.try_recv() {
-            Ok(r) => Some(r),
-            Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err(anyhow!("server dropped request {} without replying", self.id)))
-            }
-        }
-    }
-}
-
-/// Element type the reduction machinery is generic over: f32 sums, the
-/// int8 path accumulates i32 with wrapping adds (both orderings are
-/// fixed by the ascending-`ik` rule; wrapping keeps i32 bit-exact even
-/// on overflow).
-trait Elem: Copy + Default + Send + Sync + 'static {
-    fn acc(&mut self, other: Self);
-}
-
-impl Elem for f32 {
-    fn acc(&mut self, other: Self) {
-        *self += other;
-    }
-}
-
-impl Elem for i32 {
-    fn acc(&mut self, other: Self) {
-        *self = self.wrapping_add(other);
-    }
-}
-
-/// One precision's operand pools and output matrix.
-struct Pools<T> {
-    /// Raw row-major operands, held until this request's first tile is
-    /// scheduled: packing then happens *inside* the pipeline, overlapping
-    /// the tiles of earlier requests already executing on the workers.
-    raw: Option<(Vec<T>, Vec<T>)>,
-    /// Tile-major A pool, indexed `[im·gk + ik]`.
-    a_tiles: Vec<Arc<Vec<T>>>,
-    /// Tile-major B pool, indexed `[ik·gn + inn]`.
-    b_tiles: Vec<Arc<Vec<T>>>,
-    c: Vec<T>,
-}
-
-impl<T: Elem> Pools<T> {
-    fn fresh(a: Vec<T>, b: Vec<T>, out_len: usize) -> Self {
-        Pools {
-            raw: Some((a, b)),
-            a_tiles: Vec::new(),
-            b_tiles: Vec::new(),
-            c: vec![T::default(); out_len],
-        }
-    }
-
-    /// First schedule of this request: pack its operands into the
-    /// tile-major pools now — one extract pass per block, total,
-    /// overlapping whatever is already in flight.
-    fn pack(&mut self, m: usize, k: usize, n: usize, t: Tiler) {
-        if let Some((a, b)) = self.raw.take() {
-            self.a_tiles = Tiler::pack_tile_major(&a, m, k, t.nm, t.nk)
-                .into_iter()
-                .map(Arc::new)
-                .collect();
-            self.b_tiles = Tiler::pack_tile_major(&b, k, n, t.nk, t.nn)
-                .into_iter()
-                .map(Arc::new)
-                .collect();
-        }
-    }
-}
-
-/// Typed flight data — the only precision-specific part of a flight.
-enum FlightData {
-    F32(Pools<f32>),
-    I32(Pools<i32>),
-}
-
-/// One open request's state in the scheduler.
-struct Flight {
-    req: MatMulRequest,
-    /// Block grid `(gm, gk, gn)` in this request's precision geometry.
-    grid: (usize, usize, usize),
-    /// This request's precision tiler (native tile sizes are
-    /// per-precision).
-    tiler: Tiler,
-    data: FlightData,
-    /// Cursor into the k-innermost tile walk.
-    next_tile: usize,
-    total_tiles: usize,
-    /// Tiles whose partials have been reduced (in order).
-    done_tiles: usize,
-    started: Instant,
-    invocations: u64,
-    reply: Reply,
-}
-
-/// Where a tagged in-flight job lands when it completes.
-#[derive(Debug, Clone, Copy)]
-struct JobDesc {
-    flight: u64,
-    im: usize,
-    inn: usize,
-    ik: usize,
-}
-
-/// Per-output-block accumulation state (the "small accumulation buffer
-/// per in-flight block").
-struct BlockAcc<T> {
-    /// Dense `nm×nn` running sum.
-    buf: Vec<T>,
-    /// Next `ik` to reduce — enforces the bit-exact reduction order.
-    next_ik: usize,
-    /// Out-of-order partials parked until their turn.
-    pending: BTreeMap<usize, Vec<T>>,
-}
-
-/// Reduce one completed partial into its output block, preserving
-/// ascending-`ik` order; write the block back once full.
-#[allow(clippy::too_many_arguments)]
-fn reduce_partial<T: Elem>(
-    accs: &mut FxHashMap<(u64, usize, usize), BlockAcc<T>>,
-    c: &mut [T],
-    done_tiles: &mut usize,
-    tiler: Tiler,
-    gk: usize,
-    m: usize,
-    n: usize,
-    fid: u64,
-    desc: JobDesc,
-    partial: Vec<T>,
-) {
-    let key = (fid, desc.im, desc.inn);
-    let acc = accs.entry(key).or_insert_with(|| BlockAcc {
-        buf: vec![T::default(); tiler.nm * tiler.nn],
-        next_ik: 0,
-        pending: BTreeMap::new(),
-    });
-    acc.pending.insert(desc.ik, partial);
-    while let Some(p) = acc.pending.remove(&acc.next_ik) {
-        for (dst, src) in acc.buf.iter_mut().zip(&p) {
-            dst.acc(*src);
-        }
-        acc.next_ik += 1;
-        *done_tiles += 1;
-    }
-    if acc.next_ik == gk {
-        let full = accs.remove(&key).unwrap();
-        Tiler::write_block(c, m, n, desc.im, desc.inn, tiler.nm, tiler.nn, &full.buf);
-    }
-}
-
-/// The scheduler: a single-threaded state machine owning the device
-/// pool, the open flights and the in-flight window.
-struct Scheduler {
-    device: DeviceHandle,
-    tiler_f32: Tiler,
-    tiler_i32: Tiler,
-    gate: Arc<Gate>,
-    shared: Arc<Shared>,
-    /// Sender cloned into every tile job; a forwarder thread relays
-    /// completions into the scheduler's event channel.
-    tile_tx: mpsc::Sender<TileDone>,
-    depth: usize,
-    draining: bool,
-    flights: FxHashMap<u64, Flight>,
-    /// Window-level round-robin: each ready request submits one tile,
-    /// then rotates to the back.
-    ready: VecDeque<u64>,
-    descs: FxHashMap<u64, JobDesc>,
-    accs_f32: FxHashMap<(u64, usize, usize), BlockAcc<f32>>,
-    accs_i32: FxHashMap<(u64, usize, usize), BlockAcc<i32>>,
-    next_flight: u64,
-    next_tag: u64,
-    in_flight: usize,
-}
-
-impl Scheduler {
-    fn run(mut self, events: mpsc::Receiver<Event>) {
-        // Wake any producer parked on the admission gate when this
-        // thread exits — normally or by unwinding.
-        let _gate_closer = GateCloser(Arc::clone(&self.gate));
-        loop {
-            // Fill the window from the ready rotation.
-            while self.in_flight < self.depth {
-                let Some(fid) = self.ready.pop_front() else { break };
-                self.submit_one(fid);
-            }
-            if self.draining && self.flights.is_empty() && self.in_flight == 0 {
-                break;
-            }
-            // Block for the next admission or completion.
-            let Ok(ev) = events.recv() else { break };
-            match ev {
-                Event::Admit(adm) => self.handle_admit(adm),
-                Event::Done(done) => self.handle_done(done),
-                Event::SetDepth(d) => self.depth = d.max(1),
-                Event::ResetEpoch => {
-                    *self.shared.last_window.lock().unwrap() = WindowOcc::default()
-                }
-                Event::Drain => self.draining = true,
-            }
-        }
-        // `_gate_closer` closes the admission gate as it drops;
-        // dropping `self.device` stops the worker pool.
-    }
-
-    fn tiler_for(&self, p: Precision) -> Tiler {
-        match p {
-            Precision::Int8 => self.tiler_i32,
-            _ => self.tiler_f32,
-        }
-    }
-
-    fn handle_admit(&mut self, mut adm: Box<Admitted>) {
-        if self.draining {
-            return; // Admitted::drop frees the slot and errors the reply
-        }
-        let req = adm.req;
-        let submitted = adm.submitted;
-        let ops = adm.ops.take().expect("operands consumed once");
-        let reply = adm.reply.take().expect("reply consumed once");
-        let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
-        let tiler = self.tiler_for(req.precision);
-        let grid = tiler.grid(m, k, n);
-        let (gm, gk, gn) = grid;
-        let total_tiles = gm * gk * gn;
-        // Degenerate (zero-tile) requests retire immediately — still
-        // recorded, so stats().requests matches the replies delivered.
-        if total_tiles == 0 {
-            self.shared.stats.lock().unwrap().record(Completion {
-                id: req.id,
-                macs: req.macs(),
-                precision: req.precision,
-                wall: submitted.elapsed(),
-                device_s: 0.0,
-                invocations: 0,
-            });
-            let out = match ops {
-                Operands::F32 { .. } => MatOutput::F32(vec![0.0; m * n]),
-                Operands::I32 { .. } => MatOutput::I32(vec![0; m * n]),
-            };
-            self.gate.release();
-            reply.send(req, Ok(out));
-            return;
-        }
-        let data = match ops {
-            Operands::F32 { a, b } => FlightData::F32(Pools::fresh(a, b, m * n)),
-            Operands::I32 { a, b } => FlightData::I32(Pools::fresh(a, b, m * n)),
-        };
-        let fid = self.next_flight;
-        self.next_flight += 1;
-        self.flights.insert(
-            fid,
-            Flight {
-                req,
-                grid,
-                tiler,
-                data,
-                next_tile: 0,
-                total_tiles,
-                done_tiles: 0,
-                started: submitted,
-                invocations: 0,
-                reply,
-            },
-        );
-        self.ready.push_back(fid);
-    }
-
-    /// Schedule the next tile of flight `fid` into the window.
-    fn submit_one(&mut self, fid: u64) {
-        let tag = self.next_tag;
-        self.next_tag += 1;
-        let (payload, desc, requeue) = {
-            let Some(f) = self.flights.get_mut(&fid) else { return };
-            let (_gm, gk, gn) = f.grid;
-            let (m, k, n) = (f.req.m as usize, f.req.k as usize, f.req.n as usize);
-            let tiler = f.tiler;
-            // k-innermost walk: tile t = (im·gn + inn)·gk + ik.
-            let t = f.next_tile;
-            f.next_tile += 1;
-            let ik = t % gk;
-            let blk = t / gk;
-            let im = blk / gn;
-            let inn = blk % gn;
-            let payload = match &mut f.data {
-                FlightData::F32(p) => {
-                    p.pack(m, k, n, tiler);
-                    TilePayload::F32 {
-                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
-                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
-                    }
-                }
-                FlightData::I32(p) => {
-                    p.pack(m, k, n, tiler);
-                    TilePayload::I32 {
-                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
-                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
-                    }
-                }
-            };
-            f.invocations += 1;
-            (payload, JobDesc { flight: fid, im, inn, ik }, f.next_tile < f.total_tiles)
-        };
-        self.descs.insert(tag, desc);
-        if requeue {
-            self.ready.push_back(fid);
-        }
-        match self.device.submit(TileJob { tag, payload, done: self.tile_tx.clone() }) {
-            Ok(()) => self.in_flight += 1,
-            Err(e) => {
-                self.descs.remove(&tag);
-                self.fail_flight(fid, e);
-            }
-        }
-    }
-
-    fn handle_done(&mut self, done: TileDone) {
-        // Sample the window as it stood while this tile completed.
-        let occ = self.in_flight;
-        self.shared.window.lock().unwrap().record(occ);
-        self.shared.last_window.lock().unwrap().record(occ);
-        self.in_flight = self.in_flight.saturating_sub(1);
-        let Some(desc) = self.descs.remove(&done.tag) else {
-            return; // stale tag (defensive; tags are scheduler-issued)
-        };
-        let fid = desc.flight;
-        if !self.flights.contains_key(&fid) {
-            return; // flight already failed; drop the straggler tile
-        }
-        let output = match done.result {
-            Ok(o) => o,
-            Err(e) => {
-                self.fail_flight(fid, e);
-                return;
-            }
-        };
-        let matched = {
-            let f = self.flights.get_mut(&fid).unwrap();
-            let tiler = f.tiler;
-            let (_gm, gk, _gn) = f.grid;
-            let (m, n) = (f.req.m as usize, f.req.n as usize);
-            match (&mut f.data, output) {
-                (FlightData::F32(p), TileOutput::F32(partial)) => {
-                    reduce_partial(
-                        &mut self.accs_f32,
-                        &mut p.c,
-                        &mut f.done_tiles,
-                        tiler,
-                        gk,
-                        m,
-                        n,
-                        fid,
-                        desc,
-                        partial,
-                    );
-                    true
-                }
-                (FlightData::I32(p), TileOutput::I32(partial)) => {
-                    reduce_partial(
-                        &mut self.accs_i32,
-                        &mut p.c,
-                        &mut f.done_tiles,
-                        tiler,
-                        gk,
-                        m,
-                        n,
-                        fid,
-                        desc,
-                        partial,
-                    );
-                    true
-                }
-                _ => false,
-            }
-        };
-        if !matched {
-            self.fail_flight(fid, anyhow!("device returned a tile in the wrong precision"));
-            return;
-        }
-        let f = &self.flights[&fid];
-        if f.done_tiles == f.total_tiles {
-            self.retire(fid);
-        }
-    }
-
-    /// Deliver a finished flight's output and free its admission slot.
-    fn retire(&mut self, fid: u64) {
-        let mut f = self.flights.remove(&fid).unwrap();
-        // Charge the flight exactly its own tiles (period × invocations)
-        // — the shared device clock spans concurrently open flights and
-        // would double-count overlap.
-        let period = self
-            .device
-            .info_for(f.req.precision)
-            .map(|i| i.period_cycles)
-            .unwrap_or_default();
-        self.shared.stats.lock().unwrap().record(Completion {
-            id: f.req.id,
-            macs: f.req.macs(),
-            precision: f.req.precision,
-            wall: f.started.elapsed(),
-            device_s: period * f.invocations as f64 / self.device.freq_hz,
-            invocations: f.invocations,
-        });
-        let out = match &mut f.data {
-            FlightData::F32(p) => MatOutput::F32(std::mem::take(&mut p.c)),
-            FlightData::I32(p) => MatOutput::I32(std::mem::take(&mut p.c)),
-        };
-        self.gate.release();
-        f.reply.send(f.req, Ok(out));
-    }
-
-    /// Fail one flight without tearing the stream down: later tiles of
-    /// the flight still in the window are dropped on arrival.
-    fn fail_flight(&mut self, fid: u64, err: anyhow::Error) {
-        let Some(f) = self.flights.remove(&fid) else { return };
-        self.ready.retain(|&x| x != fid);
-        self.accs_f32.retain(|k, _| k.0 != fid);
-        self.accs_i32.retain(|k, _| k.0 != fid);
-        self.gate.release();
-        f.reply.send(f.req, Err(err));
-    }
 }
 
 /// The serving coordinator (client handle). Cheap to share across
@@ -701,7 +114,10 @@ pub struct MatMulServer {
     workers: usize,
     pipeline_depth: usize,
     policy: AdmissionPolicy,
+    sched_policy: PolicyKind,
     queue_depth: usize,
+    /// Admission-token mint (cancellation addresses).
+    next_token: AtomicU64,
 }
 
 impl MatMulServer {
@@ -745,24 +161,20 @@ impl MatMulServer {
             })
             .map_err(|e| anyhow!("spawning completion forwarder: {e}"))?;
 
-        let sched = Scheduler {
+        // Per-precision tile costs fall out of the design's geometry:
+        // this is what makes WeightedFair split device time, not tiles.
+        let costs = TileCosts::from_native(info_f32.native, info_int8.native);
+        let params = PolicyParams::from_config(cfg, costs);
+        let sched = Scheduler::new(
             device,
-            tiler_f32: Tiler::new(info_f32.native),
-            tiler_i32: Tiler::new(info_int8.native),
-            gate: Arc::clone(&gate),
-            shared: Arc::clone(&shared),
+            Tiler::new(info_f32.native),
+            Tiler::new(info_int8.native),
+            Arc::clone(&gate),
+            Arc::clone(&shared),
             tile_tx,
-            depth: cfg.pipeline_depth.max(1),
-            draining: false,
-            flights: FxHashMap::default(),
-            ready: VecDeque::new(),
-            descs: FxHashMap::default(),
-            accs_f32: FxHashMap::default(),
-            accs_i32: FxHashMap::default(),
-            next_flight: 0,
-            next_tag: 0,
-            in_flight: 0,
-        };
+            cfg.pipeline_depth,
+            params,
+        );
         let sched = std::thread::Builder::new()
             .name("maxeva-scheduler".into())
             .spawn(move || sched.run(events_rx))
@@ -783,7 +195,9 @@ impl MatMulServer {
             workers,
             pipeline_depth: cfg.pipeline_depth.max(1),
             policy: cfg.admission,
+            sched_policy: cfg.policy,
             queue_depth: cfg.queue_depth,
+            next_token: AtomicU64::new(0),
         })
     }
 
@@ -841,10 +255,22 @@ impl MatMulServer {
         self.queue_depth
     }
 
+    /// The active scheduling policy.
+    pub fn sched_policy(&self) -> PolicyKind {
+        self.sched_policy
+    }
+
     /// Reconfigure the in-flight window (the A/B knob; `1` = synchronous).
     pub fn set_pipeline_depth(&mut self, depth: usize) {
         self.pipeline_depth = depth.max(1);
         let _ = self.events.send(Event::SetDepth(depth));
+    }
+
+    /// Swap the scheduling policy live (the policy A/B knob). Flights
+    /// already open migrate to the new policy deterministically.
+    pub fn set_sched_policy(&mut self, kind: PolicyKind) {
+        self.sched_policy = kind;
+        let _ = self.events.send(Event::SetPolicy(kind));
     }
 
     /// `(mean, max)` window occupancy since the last `run_batch` began —
@@ -898,27 +324,30 @@ impl MatMulServer {
         ops: Operands,
         policy: AdmissionPolicy,
         reply: Reply,
-    ) -> Result<()> {
+    ) -> Result<u64> {
         Self::validate(&req, &ops)?;
         self.gate.admit(policy)?;
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
         let adm = Box::new(Admitted {
             req,
             ops: Some(ops),
             submitted: Instant::now(),
             reply: Some(reply),
+            token,
             gate: Arc::clone(&self.gate),
         });
         if self.events.send(Event::Admit(adm)).is_err() {
             // The returned Admitted dropped: slot freed, reply errored.
             return Err(anyhow!("server is shut down"));
         }
-        Ok(())
+        Ok(token)
     }
 
     /// Admit one request under the configured admission policy and get a
     /// completion handle. Blocks (policy `Block`) or fails with
     /// [`QueueFull`] (policy `Reject`) when `queue_depth` requests are
-    /// already open.
+    /// already open. Dropping the handle unresolved **cancels** the
+    /// request ([`RequestHandle::cancel`]).
     pub fn submit(&self, req: MatMulRequest, ops: Operands) -> Result<RequestHandle> {
         self.submit_with_policy(req, ops, self.policy)
     }
@@ -932,8 +361,8 @@ impl MatMulServer {
     ) -> Result<RequestHandle> {
         let (tx, rx) = mpsc::channel();
         let id = req.id;
-        self.submit_inner(req, ops, policy, Reply::Handle(tx))?;
-        Ok(RequestHandle { id, rx })
+        let token = self.submit_inner(req, ops, policy, Reply::Handle(tx))?;
+        Ok(RequestHandle::new(id, token, rx, self.events.clone()))
     }
 
     /// Admit one request and deliver its completion through `callback`
@@ -945,7 +374,8 @@ impl MatMulServer {
         ops: Operands,
         callback: impl FnOnce(MatMulRequest, Result<MatOutput>) + Send + 'static,
     ) -> Result<()> {
-        self.submit_inner(req, ops, self.policy, Reply::Callback(Box::new(callback)))
+        self.submit_inner(req, ops, self.policy, Reply::Callback(Box::new(callback)))?;
+        Ok(())
     }
 
     /// Execute one fp32 request synchronously (convenience path).
@@ -956,7 +386,8 @@ impl MatMulServer {
 
     /// Serve a closed fp32 batch through the streaming engine (submit
     /// everything with blocking admission, wait in order). Returns the
-    /// outputs in request order.
+    /// outputs in request order. On error the batch's other open
+    /// requests are cancelled (see [`MatMulServer::run_batch_mixed`]).
     pub fn run_batch(
         &mut self,
         batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
@@ -974,6 +405,13 @@ impl MatMulServer {
 
     /// Serve a closed mixed-precision batch through the streaming
     /// engine. Returns the outputs in request order.
+    ///
+    /// On any error — a submission rejected mid-batch or a request
+    /// failing — the remaining handles are dropped, which (since PR 3)
+    /// **cancels** the batch's other open requests: a failed batch
+    /// reclaims its queue/window slots instead of running doomed work
+    /// to completion. Those requests land in `stats().cancelled`, not
+    /// `requests`.
     pub fn run_batch_mixed(
         &mut self,
         batch: Vec<(MatMulRequest, Operands)>,
@@ -997,9 +435,11 @@ impl MatMulServer {
             requests: stats.count(),
             requests_fp32: stats.count_by(Precision::Fp32),
             requests_int8: stats.count_by(Precision::Int8),
+            cancelled: stats.cancelled(),
             invocations: self.invocations.load(Ordering::Relaxed),
             mean_latency_ms: stats.mean_latency_ms(),
             p99_latency_ms: stats.p99_latency_ms(),
+            classes: stats.class_stats(),
             device_ops_per_sec: stats.device_ops_per_sec(),
             device_time_s: self.cycles.load(Ordering::Relaxed) as f64 / self.freq_hz,
             wall_time_s: *self.shared.wall_time_s.lock().unwrap(),
@@ -1036,4 +476,5 @@ impl Drop for MatMulServer {
 // rust/tests/serving_e2e.rs; backend-independent pipelined-vs-sequential
 // equivalence tests in rust/tests/pipeline_equivalence.rs; streaming
 // admission, backpressure and mixed-precision tests in
-// rust/tests/streaming_admission.rs.
+// rust/tests/streaming_admission.rs; fairness and cancellation tests in
+// rust/tests/policy_fairness.rs and rust/tests/cancellation.rs.

@@ -1,10 +1,11 @@
-//! Request/serving statistics: per-request completions plus pipeline
-//! window occupancy (how many tiles were actually in flight — the
-//! measured counterpart of the configured `pipeline_depth`).
+//! Request/serving statistics: per-request completions, per-class
+//! queueing/service percentiles, plus pipeline window occupancy (how
+//! many tiles were actually in flight — the measured counterpart of the
+//! configured `pipeline_depth`).
 
 use crate::arch::precision::Precision;
 use crate::util::stats::{mean, percentile};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Duration;
 
 /// In-flight window occupancy aggregate, sampled once per completion
@@ -47,7 +48,13 @@ pub struct Completion {
     pub macs: u64,
     /// Precision the request ran in (fp32 or int8).
     pub precision: Precision,
+    /// Priority class the request was scheduled in (clamped).
+    pub class: usize,
     pub wall: Duration,
+    /// Queueing delay: submission → first tile issued.
+    pub queued: Duration,
+    /// Service time: first tile issued → retirement.
+    pub service: Duration,
     /// Device time consumed by this request's tiles (seconds).
     pub device_s: f64,
     /// Tile invocations issued.
@@ -60,17 +67,67 @@ pub struct Completion {
 /// over the most recent window.
 pub const LATENCY_WINDOW: usize = 4096;
 
+/// Per-class samples retained for queueing/service percentiles. Classes
+/// are bounded by the request class byte (≤ 256) and in practice by the
+/// configured class count, so total memory stays O(classes · window).
+pub const CLASS_WINDOW: usize = 1024;
+
+/// Bounded queueing/service/latency sample windows of one class.
+#[derive(Debug, Clone, Default)]
+struct ClassAgg {
+    count: usize,
+    queue_ms: VecDeque<f64>,
+    service_ms: VecDeque<f64>,
+    latency_ms: VecDeque<f64>,
+}
+
+impl ClassAgg {
+    fn record(&mut self, queue_ms: f64, service_ms: f64, latency_ms: f64) {
+        self.count += 1;
+        for (window, v) in [
+            (&mut self.queue_ms, queue_ms),
+            (&mut self.service_ms, service_ms),
+            (&mut self.latency_ms, latency_ms),
+        ] {
+            if window.len() == CLASS_WINDOW {
+                window.pop_front();
+            }
+            window.push_back(v);
+        }
+    }
+}
+
+/// Percentile snapshot of one priority class (from the bounded
+/// [`CLASS_WINDOW`] sample windows; counts are exact lifetime totals).
+#[derive(Debug, Clone, Copy)]
+pub struct ClassStats {
+    pub class: usize,
+    pub count: usize,
+    /// Queueing delay (submission → first tile issued), ms.
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    /// Service time (first tile issued → retirement), ms.
+    pub service_p50_ms: f64,
+    pub service_p99_ms: f64,
+    /// End-to-end wall latency, ms.
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
 /// Aggregated serving statistics. Counts/MACs/device time are exact
 /// lifetime totals; wall-latency mean/p99 are computed over the last
-/// [`LATENCY_WINDOW`] completions so memory stays O(1) per server.
+/// [`LATENCY_WINDOW`] completions and per-class percentiles over the
+/// last [`CLASS_WINDOW`] per class, so memory stays O(1) per server.
 #[derive(Debug, Clone, Default)]
 pub struct StatsAgg {
     count: usize,
     count_fp32: usize,
     count_int8: usize,
+    cancelled: usize,
     total_macs: u64,
     total_device_s: f64,
     recent_latency_ms: VecDeque<f64>,
+    classes: BTreeMap<usize, ClassAgg>,
 }
 
 impl StatsAgg {
@@ -87,10 +144,26 @@ impl StatsAgg {
             self.recent_latency_ms.pop_front();
         }
         self.recent_latency_ms.push_back(c.wall.as_secs_f64() * 1e3);
+        self.classes.entry(c.class).or_default().record(
+            c.queued.as_secs_f64() * 1e3,
+            c.service.as_secs_f64() * 1e3,
+            c.wall.as_secs_f64() * 1e3,
+        );
+    }
+
+    /// Count one cancelled request (not a completion — cancelled
+    /// requests never enter the latency windows).
+    pub fn record_cancelled(&mut self) {
+        self.cancelled += 1;
     }
 
     pub fn count(&self) -> usize {
         self.count
+    }
+
+    /// Requests cancelled before completion.
+    pub fn cancelled(&self) -> usize {
+        self.cancelled
     }
 
     /// Completions that ran in `precision` (per-precision traffic split).
@@ -124,6 +197,27 @@ impl StatsAgg {
         percentile(&self.wall_latencies_ms(), 99.0)
     }
 
+    /// Per-class queueing/service/latency percentile snapshots, sorted
+    /// by class index. Only classes that completed a request appear.
+    pub fn class_stats(&self) -> Vec<ClassStats> {
+        let pct = |w: &VecDeque<f64>, p: f64| {
+            percentile(&w.iter().copied().collect::<Vec<f64>>(), p)
+        };
+        self.classes
+            .iter()
+            .map(|(&class, agg)| ClassStats {
+                class,
+                count: agg.count,
+                queue_p50_ms: pct(&agg.queue_ms, 50.0),
+                queue_p99_ms: pct(&agg.queue_ms, 99.0),
+                service_p50_ms: pct(&agg.service_ms, 50.0),
+                service_p99_ms: pct(&agg.service_ms, 99.0),
+                latency_p50_ms: pct(&agg.latency_ms, 50.0),
+                latency_p99_ms: pct(&agg.latency_ms, 99.0),
+            })
+            .collect()
+    }
+
     /// Device-time throughput in ops/s (2 ops per MAC): what the VCK190
     /// would sustain on this request stream.
     pub fn device_ops_per_sec(&self) -> f64 {
@@ -139,6 +233,20 @@ impl StatsAgg {
 mod tests {
     use super::*;
 
+    fn completion(id: u64, class: usize, macs: u64, wall_ms: u64, queue_ms: u64) -> Completion {
+        Completion {
+            id,
+            macs,
+            precision: Precision::Fp32,
+            class,
+            wall: Duration::from_millis(wall_ms),
+            queued: Duration::from_millis(queue_ms),
+            service: Duration::from_millis(wall_ms.saturating_sub(queue_ms)),
+            device_s: macs as f64 * 1e-9,
+            invocations: 1,
+        }
+    }
+
     #[test]
     fn aggregates() {
         let mut s = StatsAgg::default();
@@ -146,7 +254,10 @@ mod tests {
             id: 0,
             macs: 1000,
             precision: Precision::Fp32,
+            class: 0,
             wall: Duration::from_millis(10),
+            queued: Duration::from_millis(4),
+            service: Duration::from_millis(6),
             device_s: 1e-6,
             invocations: 1,
         });
@@ -154,7 +265,10 @@ mod tests {
             id: 1,
             macs: 3000,
             precision: Precision::Int8,
+            class: 1,
             wall: Duration::from_millis(30),
+            queued: Duration::from_millis(10),
+            service: Duration::from_millis(20),
             device_s: 3e-6,
             invocations: 3,
         });
@@ -162,6 +276,7 @@ mod tests {
         assert_eq!(s.count_by(Precision::Fp32), 1);
         assert_eq!(s.count_by(Precision::Int8), 1);
         assert_eq!(s.count_by(Precision::Bf16), 0);
+        assert_eq!(s.cancelled(), 0);
         assert_eq!(s.total_macs(), 4000);
         assert!((s.mean_latency_ms() - 20.0).abs() < 1e-9);
         assert!((s.device_ops_per_sec() - 2.0 * 4000.0 / 4e-6).abs() < 1.0);
@@ -172,6 +287,7 @@ mod tests {
         let s = StatsAgg::default();
         assert_eq!(s.device_ops_per_sec(), 0.0);
         assert_eq!(s.mean_latency_ms(), 0.0);
+        assert!(s.class_stats().is_empty());
     }
 
     #[test]
@@ -181,19 +297,58 @@ mod tests {
         let mut s = StatsAgg::default();
         let n = LATENCY_WINDOW + 100;
         for i in 0..n {
-            s.record(Completion {
-                id: i as u64,
-                macs: 10,
-                precision: Precision::Fp32,
-                wall: Duration::from_millis(1),
-                device_s: 1e-9,
-                invocations: 1,
-            });
+            s.record(completion(i as u64, 0, 10, 1, 0));
         }
         assert_eq!(s.count(), n);
         assert_eq!(s.count_by(Precision::Fp32), n);
         assert_eq!(s.total_macs(), 10 * n as u64);
         assert_eq!(s.wall_latencies_ms().len(), LATENCY_WINDOW);
+    }
+
+    #[test]
+    fn class_windows_bounded_counts_exact() {
+        let mut s = StatsAgg::default();
+        let n = CLASS_WINDOW + 50;
+        for i in 0..n {
+            s.record(completion(i as u64, 3, 1, 2, 1));
+        }
+        let cs = s.class_stats();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].class, 3);
+        assert_eq!(cs[0].count, n, "counts are lifetime-exact");
+        // The windows themselves stay bounded (indirect check: the
+        // percentiles still reflect the constant stream).
+        assert!((cs[0].queue_p99_ms - 1.0).abs() < 1e-9);
+        assert!((cs[0].latency_p50_ms - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_percentiles_split_queue_and_service() {
+        let mut s = StatsAgg::default();
+        // Class 0: fast service, no queueing. Class 1: queue-dominated.
+        for i in 0..100 {
+            s.record(completion(i, 0, 1, 2, 0));
+            s.record(completion(100 + i, 1, 1, 50, 45));
+        }
+        let cs = s.class_stats();
+        assert_eq!(cs.len(), 2);
+        assert_eq!((cs[0].class, cs[1].class), (0, 1));
+        assert!(cs[0].queue_p99_ms < 1e-9);
+        assert!((cs[0].service_p50_ms - 2.0).abs() < 1e-9);
+        assert!((cs[1].queue_p50_ms - 45.0).abs() < 1e-9);
+        assert!((cs[1].service_p99_ms - 5.0).abs() < 1e-9);
+        assert!(cs[1].latency_p99_ms > cs[0].latency_p99_ms);
+    }
+
+    #[test]
+    fn cancelled_counted_separately() {
+        let mut s = StatsAgg::default();
+        s.record(completion(0, 0, 1, 1, 0));
+        s.record_cancelled();
+        s.record_cancelled();
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.cancelled(), 2);
+        assert_eq!(s.class_stats()[0].count, 1);
     }
 
     #[test]

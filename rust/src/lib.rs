@@ -31,9 +31,12 @@
 //! * [`report`] — paper-table formatting and paper-vs-measured comparison.
 //! * [`workloads`] — workload generators (matrix sweeps, MLP, request traces).
 
-// Lint posture (CI runs `cargo clippy -- -D warnings` as a blocking
-// gate): these style lints fight idioms this codebase uses on purpose
-// and are allowed crate-wide rather than per-site.
+// Lint posture (CI runs `cargo clippy --all-targets -- -D warnings` as
+// a blocking gate): these style lints fight idioms this codebase uses
+// on purpose and are allowed crate-wide rather than per-site. The same
+// allow-list is mirrored in Cargo.toml's `[lints.clippy]` so it also
+// reaches tests, benches and examples (crate attributes here only
+// cover the lib target).
 #![allow(
     // Matrix/placement code indexes rows, columns and blocks explicitly;
     // iterator rewrites of coupled index arithmetic obscure the math.

@@ -19,19 +19,29 @@ pub struct MatMulRequest {
     /// supports [`Precision::Fp32`] and [`Precision::Int8`] (int8
     /// operands, i32 accumulation — the paper's two headline paths).
     pub precision: Precision,
+    /// Priority class for the scheduling policies (`0` = highest;
+    /// out-of-range classes clamp to the server's configured class
+    /// count). Ignored by the default FIFO policy.
+    pub class: u8,
 }
 
 impl MatMulRequest {
-    /// An fp32 request (the historical default).
+    /// An fp32 request (the historical default), class 0.
     pub fn f32(id: u64, m: u64, k: u64, n: u64) -> Self {
-        MatMulRequest { id, m, k, n, precision: Precision::Fp32 }
+        MatMulRequest { id, m, k, n, precision: Precision::Fp32, class: 0 }
     }
 
     /// An int8 request: operands are int8-range values carried as `i32`
     /// (matching [`crate::runtime::Executable::run_i32`]), results are
-    /// exact i32 accumulations.
+    /// exact i32 accumulations. Class 0.
     pub fn int8(id: u64, m: u64, k: u64, n: u64) -> Self {
-        MatMulRequest { id, m, k, n, precision: Precision::Int8 }
+        MatMulRequest { id, m, k, n, precision: Precision::Int8, class: 0 }
+    }
+
+    /// The same request in priority class `class`.
+    pub fn with_class(mut self, class: u8) -> Self {
+        self.class = class;
+        self
     }
 
     pub fn macs(&self) -> u64 {
@@ -192,6 +202,100 @@ pub fn materialize_mixed(requests: &[MatMulRequest], seed: u64) -> Vec<(MatMulRe
         .collect()
 }
 
+/// An open-loop arrival process: *when* requests hit the server,
+/// decoupled from how fast the server drains them (closed-loop
+/// submission only ever measures the server at its own pace).
+/// Deterministic — Poisson draws come from [`XorShift64`].
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_hz` requests/second.
+    Poisson { rate_hz: f64, seed: u64 },
+    /// Replay of recorded arrival timestamps (seconds, nondecreasing),
+    /// e.g. loaded with [`load_arrival_trace`].
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// The first `n` arrival times (seconds from stream start). A trace
+    /// shorter than `n` yields all it has — match your request count to
+    /// the trace when replaying.
+    pub fn arrivals(&self, n: usize) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { rate_hz, seed } => poisson_arrivals(n, *rate_hz, *seed),
+            ArrivalProcess::Trace(times) => times.iter().copied().take(n).collect(),
+        }
+    }
+}
+
+/// `n` Poisson arrival times at `rate_hz` requests/second:
+/// exponential inter-arrival gaps, cumulated. Deterministic in `seed`.
+pub fn poisson_arrivals(n: usize, rate_hz: f64, seed: u64) -> Vec<f64> {
+    assert!(rate_hz > 0.0, "poisson_arrivals: rate must be positive");
+    let mut rng = XorShift64::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / rate_hz;
+            t
+        })
+        .collect()
+}
+
+/// Parse an arrival trace: one absolute timestamp (seconds) per line,
+/// `#`-comments and blank lines ignored. Timestamps must be finite,
+/// nonnegative and nondecreasing.
+pub fn parse_arrival_trace(text: &str) -> Result<Vec<f64>> {
+    let mut times = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let t: f64 = line
+            .parse()
+            .map_err(|e| anyhow!("arrival trace line {}: {e}", lineno + 1))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(anyhow!(
+                "arrival trace line {}: timestamp {t} must be finite and >= 0",
+                lineno + 1
+            ));
+        }
+        if let Some(&prev) = times.last() {
+            if t < prev {
+                return Err(anyhow!(
+                    "arrival trace line {}: timestamp {t} decreases (previous {prev})",
+                    lineno + 1
+                ));
+            }
+        }
+        times.push(t);
+    }
+    Ok(times)
+}
+
+/// Load an arrival trace file (see [`parse_arrival_trace`] for the
+/// format).
+pub fn load_arrival_trace(path: impl AsRef<std::path::Path>) -> Result<Vec<f64>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading arrival trace {}: {e}", path.display()))?;
+    parse_arrival_trace(&text)
+}
+
+/// Merge several per-stream arrival timelines into one submission
+/// order: `(stream index, time)` sorted by time (ties resolved by
+/// stream index, so the merge is deterministic).
+pub fn merge_arrivals(streams: &[Vec<f64>]) -> Vec<(usize, f64)> {
+    let mut merged: Vec<(usize, f64)> = streams
+        .iter()
+        .enumerate()
+        .flat_map(|(s, times)| times.iter().map(move |&t| (s, t)))
+        .collect();
+    merged.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    merged
+}
+
 /// Batched-GEMM layer sets of a small transformer block (batch×seq = rows)
 /// — used as a domain-specific example workload.
 pub fn transformer_block_gemms(rows: u64, d_model: u64, d_ff: u64) -> Vec<MatMulRequest> {
@@ -229,6 +333,60 @@ mod tests {
         assert_eq!(t, mixed_trace(32, 5));
         assert!(t.iter().any(|r| r.precision == Precision::Int8));
         assert!(t.iter().any(|r| r.precision == Precision::Fp32));
+    }
+
+    #[test]
+    fn class_builder_and_default() {
+        let r = MatMulRequest::f32(1, 8, 8, 8);
+        assert_eq!(r.class, 0);
+        let hi = r.with_class(3);
+        assert_eq!(hi.class, 3);
+        // Everything else is untouched.
+        assert_eq!((hi.id, hi.m, hi.k, hi.n, hi.precision), (1, 8, 8, 8, Precision::Fp32));
+        assert_eq!(MatMulRequest::int8(2, 4, 4, 4).class, 0);
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_and_calibrated() {
+        let a = poisson_arrivals(4000, 100.0, 7);
+        assert_eq!(a, poisson_arrivals(4000, 100.0, 7));
+        assert_ne!(a, poisson_arrivals(4000, 100.0, 8));
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "arrival times are nondecreasing");
+        // Mean inter-arrival ≈ 1/rate (law of large numbers, 10% slack).
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 0.01).abs() < 0.001, "mean gap {mean_gap}");
+        assert_eq!(ArrivalProcess::Poisson { rate_hz: 100.0, seed: 7 }.arrivals(10), a[..10]);
+    }
+
+    #[test]
+    fn arrival_trace_parses_and_validates() {
+        let good = "# trace\n0.0\n0.5 # second request\n\n0.5\n2.25\n";
+        assert_eq!(parse_arrival_trace(good).unwrap(), vec![0.0, 0.5, 0.5, 2.25]);
+        assert!(parse_arrival_trace("0.0\nnope\n").is_err());
+        assert!(parse_arrival_trace("1.0\n0.5\n").is_err(), "decreasing timestamps");
+        assert!(parse_arrival_trace("-1.0\n").is_err());
+        assert!(parse_arrival_trace("inf\n").is_err());
+        // Trace process truncates to n and tolerates short traces.
+        let p = ArrivalProcess::Trace(vec![0.0, 1.0, 2.0]);
+        assert_eq!(p.arrivals(2), vec![0.0, 1.0]);
+        assert_eq!(p.arrivals(10), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn arrival_trace_file_roundtrip() {
+        let dir = std::env::temp_dir().join("maxeva_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("arrivals.txt");
+        std::fs::write(&path, "0.001\n0.002\n0.0035\n").unwrap();
+        assert_eq!(load_arrival_trace(&path).unwrap(), vec![0.001, 0.002, 0.0035]);
+        assert!(load_arrival_trace(dir.join("missing.txt")).is_err());
+    }
+
+    #[test]
+    fn merged_arrivals_sorted_and_stable() {
+        let merged = merge_arrivals(&[vec![0.1, 0.3], vec![0.1, 0.2]]);
+        assert_eq!(merged, vec![(0, 0.1), (1, 0.1), (1, 0.2), (0, 0.3)]);
+        assert!(merge_arrivals(&[]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Cancellation races through the full server stack: cancel before
+//! dispatch, mid-flight, after completion, by handle drop, and under a
+//! cancel storm — in every case the handle resolves exactly once and
+//! no queue or window slot leaks (probed with `Reject`-policy
+//! submissions against an exactly-sized gate).
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::server::{Cancelled, MatMulServer};
+use maxeva::coordinator::tiler::matmul_ref_f32;
+use maxeva::workloads::{materialize_mixed, MatMulRequest, Operands};
+use std::time::Duration;
+
+/// Tiny design (native 8×16×8) so tile grids are large and cheap on
+/// the scalar reference backend.
+fn small_cfg(workers: usize, pipeline_depth: usize, queue_depth: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = pipeline_depth;
+    cfg.queue_depth = queue_depth;
+    cfg
+}
+
+fn f32_ops(req: &MatMulRequest, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let batch = materialize_mixed(&[*req], seed);
+    match batch.into_iter().next().unwrap().1 {
+        Operands::F32 { a, b } => (a, b),
+        _ => unreachable!(),
+    }
+}
+
+/// A request the scalar backend needs tens of milliseconds for
+/// (128×512×128 → 8192 native tiles).
+fn heavy(id: u64) -> MatMulRequest {
+    MatMulRequest::f32(id, 128, 512, 128)
+}
+
+fn is_cancelled(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<Cancelled>().is_some()
+}
+
+#[test]
+fn cancel_before_dispatch_resolves_and_reclaims_slot() {
+    // One worker, window 1: the heavy request holds the only window
+    // slot, so the victim's tiles are still undispatched when the
+    // cancel lands right behind its admission on the event channel.
+    let server = MatMulServer::start(&small_cfg(1, 1, 2)).unwrap();
+    let (a, b) = f32_ops(&heavy(0), 1);
+    let h_heavy = server.submit(heavy(0), Operands::F32 { a, b }).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+
+    let victim = MatMulRequest::f32(1, 16, 32, 16);
+    let (a, b) = f32_ops(&victim, 2);
+    let h_victim = server.submit(victim, Operands::F32 { a, b }).unwrap();
+    h_victim.cancel();
+    let err = h_victim.wait().expect_err("cancelled request resolves with an error");
+    assert!(is_cancelled(&err), "typed Cancelled, got: {err}");
+
+    // The victim's admission slot is free again: with queue_depth = 2
+    // and the heavy request still holding one slot, a Reject-policy
+    // submission must be admitted.
+    let probe = MatMulRequest::f32(2, 8, 8, 8);
+    let (a, b) = f32_ops(&probe, 3);
+    let h_probe = server
+        .submit_with_policy(probe, Operands::F32 { a, b }, AdmissionPolicy::Reject)
+        .expect("cancelled request must free its queue slot");
+    assert_eq!(h_probe.wait().unwrap().len(), 64);
+    // The heavy request was never disturbed.
+    assert_eq!(h_heavy.wait().unwrap().len(), 128 * 128);
+    let stats = server.stats();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.requests, 2);
+    server.shutdown();
+}
+
+#[test]
+fn cancel_mid_flight_reclaims_window_and_stream_continues() {
+    let server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let (a, b) = f32_ops(&heavy(0), 11);
+    let h = server.submit(heavy(0), Operands::F32 { a, b }).unwrap();
+    // Let a bunch of its 1024 tiles complete, then cancel mid-flight.
+    std::thread::sleep(Duration::from_millis(10));
+    h.cancel();
+    let err = h.wait().expect_err("mid-flight cancel still resolves the handle");
+    assert!(is_cancelled(&err), "{err}");
+
+    // The stream keeps flowing and results stay correct — the window
+    // slots the cancelled flight held are reclaimed as its in-flight
+    // stragglers drain.
+    for i in 0..5u64 {
+        let req = MatMulRequest::f32(10 + i, 13, 17, 9);
+        let (a, b) = f32_ops(&req, 100 + i);
+        let want = matmul_ref_f32(&a, &b, 13, 17, 9);
+        let got = server
+            .submit(req, Operands::F32 { a, b })
+            .unwrap()
+            .wait()
+            .unwrap()
+            .into_f32()
+            .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.requests, 5);
+    server.shutdown();
+}
+
+#[test]
+fn cancel_after_completion_is_a_noop() {
+    let server = MatMulServer::start(&small_cfg(1, 2, 4)).unwrap();
+    let req = MatMulRequest::f32(0, 9, 9, 9);
+    let (a, b) = f32_ops(&req, 21);
+    let h = server.submit(req, Operands::F32 { a, b }).unwrap();
+    // Poll until the result is in, keeping the handle alive.
+    let out = loop {
+        if let Some(r) = h.try_wait() {
+            break r.unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    assert_eq!(out.len(), 81);
+    // Cancelling (and later dropping) the already-resolved handle must
+    // not count a cancellation or disturb anything.
+    h.cancel();
+    drop(h);
+    let req2 = MatMulRequest::f32(1, 6, 6, 6);
+    let (a, b) = f32_ops(&req2, 22);
+    assert_eq!(
+        server.submit(req2, Operands::F32 { a, b }).unwrap().wait().unwrap().len(),
+        36
+    );
+    let stats = server.stats();
+    assert_eq!(stats.cancelled, 0);
+    assert_eq!(stats.requests, 2);
+    server.shutdown();
+}
+
+#[test]
+fn dropping_an_unresolved_handle_cancels_the_request() {
+    // queue_depth 1: the follow-up Block submission can only be
+    // admitted because the dropped handle's cancellation freed the
+    // slot — the gate itself synchronizes the assertion.
+    let server = MatMulServer::start(&small_cfg(1, 1, 1)).unwrap();
+    let (a, b) = f32_ops(&heavy(0), 31);
+    let h = server.submit(heavy(0), Operands::F32 { a, b }).unwrap();
+    drop(h);
+
+    let req = MatMulRequest::f32(1, 8, 8, 8);
+    let (a, b) = f32_ops(&req, 32);
+    let out = server
+        .submit_with_policy(req, Operands::F32 { a, b }, AdmissionPolicy::Block)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.len(), 64);
+    let stats = server.stats();
+    assert_eq!(stats.cancelled, 1, "dropped handle must cancel its request");
+    assert_eq!(stats.requests, 1);
+    server.shutdown();
+}
+
+#[test]
+fn cancel_storm_leaks_no_slots_and_resolves_every_handle() {
+    let server = MatMulServer::start(&small_cfg(2, 4, 4)).unwrap();
+    let total = 12u64;
+    let mut kept = Vec::new();
+    let mut cancelled_results = 0usize;
+    let mut completed_results = 0usize;
+    for i in 0..total {
+        let req = MatMulRequest::f32(i, 16, 64, 16);
+        let (a, b) = f32_ops(&req, 600 + i);
+        let h = server.submit(req, Operands::F32 { a, b }).unwrap();
+        if i % 2 == 0 {
+            h.cancel();
+            // Cancel may race retirement; either way the handle
+            // resolves exactly once.
+            match h.wait() {
+                Ok(out) => {
+                    assert_eq!(out.len(), 256);
+                    completed_results += 1;
+                }
+                Err(e) => {
+                    assert!(is_cancelled(&e), "{e}");
+                    cancelled_results += 1;
+                }
+            }
+        } else {
+            kept.push(h);
+        }
+    }
+    for h in kept {
+        assert_eq!(h.wait().unwrap().len(), 256);
+        completed_results += 1;
+    }
+    let stats = server.stats();
+    assert_eq!(stats.cancelled, cancelled_results);
+    assert_eq!(stats.requests, completed_results);
+    assert_eq!(stats.cancelled + stats.requests, total as usize);
+
+    // No leaked admission slots: the gate holds exactly queue_depth = 4
+    // fresh Reject-policy submissions.
+    let mut probes = Vec::new();
+    for i in 0..4u64 {
+        let req = MatMulRequest::f32(100 + i, 8, 8, 8);
+        let (a, b) = f32_ops(&req, 700 + i);
+        probes.push(
+            server
+                .submit_with_policy(req, Operands::F32 { a, b }, AdmissionPolicy::Reject)
+                .expect("all four slots must be free after the storm"),
+        );
+    }
+    for p in probes {
+        assert!(p.wait().is_ok());
+    }
+    server.shutdown();
+}
