@@ -184,6 +184,54 @@ fn main() {
     }
     fair.shutdown();
 
+    // Workload 5: weight-reuse serving through the packed-weight cache.
+    // One "model" weight tagged with `with_weight_id` is multiplied by a
+    // stream of activations on a cache-enabled server: B is extracted
+    // and packed once, every later request reuses the packed pool
+    // (`ServerStats::mem` counts the hits), and outputs stay
+    // bit-identical to the uncached engine — verified against the main
+    // (cache-off) server.
+    println!("\n[5] weight-reuse stream through the packed-weight cache");
+    let mut cached_cfg = cfg.clone();
+    cached_cfg.weight_cache_bytes = 64 << 20;
+    let mut cached = MatMulServer::start(&cached_cfg).expect("cached server");
+    let (rm, rk, rn) = (96u64, 512u64, 96u64);
+    let reuse_reqs: Vec<MatMulRequest> = (0..6)
+        .map(|i| MatMulRequest::f32(1000 + i, rm, rk, rn).with_weight_id(1))
+        .collect();
+    let shared_weight = match materialize_mixed(&[reuse_reqs[0]], 555).remove(0).1 {
+        Operands::F32 { b, .. } => b,
+        _ => unreachable!(),
+    };
+    let reuse_batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)> = reuse_reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let a = match materialize_mixed(&[*r], 600 + i as u64).remove(0).1 {
+                Operands::F32 { a, .. } => a,
+                _ => unreachable!(),
+            };
+            (*r, a, shared_weight.clone())
+        })
+        .collect();
+    let warm = cached.run_batch(reuse_batch.clone()).expect("cached batch");
+    let cold = server.run_batch(reuse_batch).expect("uncached batch");
+    assert_eq!(warm, cold, "cache hits must not change outputs");
+    let mem = cached.stats().mem;
+    println!(
+        "    {} requests, one shared {rk}x{rn} weight: {} cache hit(s), {} miss(es), \
+         {:.1} KiB resident — outputs bit-identical to the uncached server",
+        reuse_reqs.len(),
+        mem.weight_cache_hits,
+        mem.weight_cache_misses,
+        mem.weight_cache_bytes as f64 / 1024.0
+    );
+    println!(
+        "    tile buffers: {} recycled / {} allocated across the stream",
+        mem.tile_buffers_recycled, mem.tile_buffers_allocated
+    );
+    cached.shutdown();
+
     let stats = server.stats();
     println!("\n==== serving report ====");
     println!("requests        : {}", stats.requests);

@@ -13,19 +13,23 @@
 //! falls back to the pure-Rust reference backend so the pipeline A/B
 //! runs anywhere.
 //!
-//!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] [--load-json PATH]
+//!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] \
+//!         [--load-json PATH] [--weight-json PATH]
 //!
 //! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
 //! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
 //! as a workflow artifact by the `bench-smoke` CI job); `--load-json
 //! PATH` writes the open-loop latency-under-load report (per-class
-//! queueing/service/latency percentiles, FIFO vs WeightedFair).
+//! queueing/service/latency percentiles, FIFO vs WeightedFair);
+//! `--weight-json PATH` writes the weight-reuse serving report (packed
+//! weight cache cold vs warm, packing time saved).
 
 mod common;
 
 use maxeva::arch::precision::Precision;
 use maxeva::config::json::Json;
 use maxeva::config::schema::{BackendKind, DesignConfig, PolicyKind, ServeConfig};
+use maxeva::coordinator::pool::TilePool;
 use maxeva::coordinator::server::MatMulServer;
 use maxeva::coordinator::stats::ClassStats;
 use maxeva::runtime::default_artifacts_dir;
@@ -79,18 +83,43 @@ fn class_json(c: &ClassStats) -> Json {
     Json::Obj(o)
 }
 
+/// Open-loop pacing: coarse-sleep until ~1 ms before the deadline, then
+/// spin. `thread::sleep` alone quantizes sub-millisecond inter-arrival
+/// gaps to the OS timer granularity, which distorts offered load
+/// exactly where the latency-under-load sections care most.
+fn pace_until(t0: Instant, target_s: f64) {
+    const SPIN_WINDOW_S: f64 = 1e-3;
+    loop {
+        let remaining = target_s - t0.elapsed().as_secs_f64();
+        if remaining <= 0.0 {
+            return;
+        }
+        if remaining > SPIN_WINDOW_S {
+            std::thread::sleep(Duration::from_secs_f64(remaining - SPIN_WINDOW_S));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
 /// Replay a merged open-loop arrival timeline (stream 0 = heavy int8,
 /// stream 1 = fp32 trickle) against a fresh server running `policy`;
 /// returns the per-class stats snapshot.
+///
+/// The arrival generator runs on a **dedicated thread** with spin-wait
+/// pacing ([`pace_until`]); the waiter drains completions on this
+/// thread as handles stream back, so neither waiting nor admission
+/// backpressure can delay the offered arrivals.
 fn run_open_loop(
     policy: PolicyKind,
     arrivals: &[(usize, f64)],
     streams: [&[(MatMulRequest, maxeva::workloads::Operands)]; 2],
 ) -> Vec<ClassStats> {
     // Paper kernels on a 1×1×1 array: native fp32 32×32×32 vs int8
-    // 32×128×32 — the real 4× tile-cost ratio at reference-backend
-    // friendly sizes. Reference backend always (this section measures
-    // scheduling, not numerics, and no 1×1×1 artifacts exist).
+    // 32×128×32 — genuinely distinct per-precision tile costs at
+    // reference-backend friendly sizes. Reference backend always (this
+    // section measures scheduling, not numerics, and no 1×1×1
+    // artifacts exist).
     let mut design = DesignConfig::flagship(Precision::Fp32);
     (design.x, design.y, design.z) = (1, 1, 1);
     let mut cfg = ServeConfig::new(design);
@@ -101,22 +130,27 @@ fn run_open_loop(
     cfg.policy = policy;
     cfg.class_weights = vec![4, 1];
     let server = MatMulServer::start(&cfg).expect("open-loop server");
-    let mut cursors = [0usize; 2];
-    let mut handles = Vec::with_capacity(arrivals.len());
-    let t0 = Instant::now();
-    for &(stream, t) in arrivals {
-        let elapsed = t0.elapsed().as_secs_f64();
-        if t > elapsed {
-            std::thread::sleep(Duration::from_secs_f64(t - elapsed));
+    let classes = std::thread::scope(|s| {
+        let (handle_tx, handle_rx) = std::sync::mpsc::channel();
+        let server = &server;
+        s.spawn(move || {
+            let mut cursors = [0usize; 2];
+            let t0 = Instant::now();
+            for &(stream, t) in arrivals {
+                pace_until(t0, t);
+                let (req, ops) = &streams[stream][cursors[stream]];
+                cursors[stream] += 1;
+                let h = server.submit(*req, ops.clone()).expect("open-loop submit");
+                if handle_tx.send(h).is_err() {
+                    break;
+                }
+            }
+        });
+        for h in handle_rx {
+            h.wait().expect("open-loop request");
         }
-        let (req, ops) = &streams[stream][cursors[stream]];
-        cursors[stream] += 1;
-        handles.push(server.submit(*req, ops.clone()).expect("open-loop submit"));
-    }
-    for h in handles {
-        h.wait().expect("open-loop request");
-    }
-    let classes = server.stats().classes;
+        server.stats().classes
+    });
     server.shutdown();
     classes
 }
@@ -132,6 +166,11 @@ fn main() {
     let load_json_path = args
         .iter()
         .position(|a| a == "--load-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let weight_json_path = args
+        .iter()
+        .position(|a| a == "--weight-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
 
@@ -314,6 +353,135 @@ fn main() {
     );
     assert!(stream_outs[0] == stream_outs[1]);
 
+    common::banner("weight-reuse serving: packed-weight cache cold vs warm");
+    // One shared weight matrix streamed against many activations — the
+    // steady-state serving shape the packed-weight cache targets. Fresh
+    // servers per leg so the memory-plane counters attribute cleanly:
+    // leg "cold" (weight_cache_bytes = 0) re-packs B per request, leg
+    // "warm" packs it once and hits the cache thereafter.
+    let (wm, wk, wn) = if quick { (64u64, 256u64, 64u64) } else { (192, 1024, 192) };
+    let n_reuse = if quick { 8usize } else { 24 };
+    let reuse_reqs: Vec<MatMulRequest> = (0..n_reuse)
+        .map(|i| MatMulRequest::f32(900 + i as u64, wm, wk, wn).with_weight_id(7))
+        .collect();
+    let mut wrng = XorShift64::new(4096);
+    let b_shared = rand_vec((wk * wn) as usize, &mut wrng);
+    let reuse_batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)> = reuse_reqs
+        .iter()
+        .map(|r| (*r, rand_vec((r.m * r.k) as usize, &mut wrng), b_shared.clone()))
+        .collect();
+    // The unit cost a warm cache removes per request: packing B once
+    // into the native fp32 tile geometry.
+    let native = server.native();
+    let t0 = Instant::now();
+    let packed_b = TilePool::pack(
+        &b_shared,
+        wk as usize,
+        wn as usize,
+        native.1 as usize,
+        native.2 as usize,
+    );
+    let pack_b_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  shared weight {wk}x{wn} packs to {} tiles / {:.1} KiB in {:.3} ms",
+        packed_b.tiles(),
+        packed_b.bytes() as f64 / 1024.0,
+        pack_b_s * 1e3
+    );
+    let mut reuse_walls = Vec::new();
+    let mut reuse_outs = Vec::new();
+    let mut reuse_mem = Vec::new();
+    let mut reuse_timed_hits = Vec::new();
+    for cache_bytes in [0usize, 256 << 20] {
+        let mut leg_cfg = cfg.clone();
+        leg_cfg.weight_cache_bytes = cache_bytes;
+        let mut leg = MatMulServer::start(&leg_cfg).expect("weight-reuse server");
+        // Untimed warmup: warms the cache (warm leg) and the free-lists
+        // (both legs), so the timed pass measures steady state.
+        let _ = leg.run_batch(reuse_batch.clone()).unwrap();
+        let warm_hits = leg.stats().mem.weight_cache_hits;
+        let t0 = Instant::now();
+        let outs = leg.run_batch(reuse_batch.clone()).unwrap();
+        reuse_walls.push(t0.elapsed().as_secs_f64());
+        let mem = leg.stats().mem;
+        // Hits inside the timed pass only — the scope the wall times
+        // cover, so the packing-saved figure below is commensurate.
+        reuse_timed_hits.push(mem.weight_cache_hits - warm_hits);
+        println!(
+            "  cache {:>9}: wall {:.3} s · hits {} / misses {} · tile buffers recycled {} \
+             / allocated {}",
+            if cache_bytes == 0 { "off".to_string() } else { format!("{} MiB", cache_bytes >> 20) },
+            reuse_walls.last().unwrap(),
+            mem.weight_cache_hits,
+            mem.weight_cache_misses,
+            mem.tile_buffers_recycled,
+            mem.tile_buffers_allocated,
+        );
+        reuse_mem.push(mem);
+        reuse_outs.push(outs);
+        leg.shutdown();
+    }
+    let reuse_identical = reuse_outs[0] == reuse_outs[1];
+    // Packing time saved in the timed pass (one skipped B pack per hit)
+    // — directly comparable to cold_wall_s − warm_wall_s.
+    let packing_saved_s = reuse_timed_hits[1] as f64 * pack_b_s;
+    println!(
+        "  cold/warm wall {:.2}× · B packs skipped in timed pass {} (≈{:.3} ms packing \
+         saved) · outputs bit-identical: {reuse_identical}",
+        reuse_walls[0] / reuse_walls[1].max(1e-12),
+        reuse_timed_hits[1],
+        packing_saved_s * 1e3
+    );
+    assert!(
+        reuse_identical,
+        "weight-cache hits must not change outputs (cold vs warm bit-identity)"
+    );
+    assert_eq!(
+        reuse_mem[1].weight_cache_hits as usize,
+        2 * n_reuse - 1,
+        "every request after the first must hit the warm cache"
+    );
+    assert_eq!(reuse_mem[0].weight_cache_hits, 0, "cache off must never hit");
+    if let Some(path) = weight_json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_weight_reuse".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("requests_per_pass".into(), Json::Num(n_reuse as f64));
+        o.insert("weight_shape".into(), Json::Str(format!("{wk}x{wn}")));
+        o.insert("packed_weight_bytes".into(), Json::Num(packed_b.bytes() as f64));
+        o.insert("pack_b_once_s".into(), Json::Num(pack_b_s));
+        o.insert("cold_wall_s".into(), Json::Num(reuse_walls[0]));
+        o.insert("warm_wall_s".into(), Json::Num(reuse_walls[1]));
+        o.insert(
+            "cold_over_warm_speedup".into(),
+            Json::Num(reuse_walls[0] / reuse_walls[1].max(1e-12)),
+        );
+        o.insert("warm_cache_hits".into(), Json::Num(reuse_mem[1].weight_cache_hits as f64));
+        o.insert(
+            "warm_cache_misses".into(),
+            Json::Num(reuse_mem[1].weight_cache_misses as f64),
+        );
+        // Timed-pass scope, like cold_wall_s/warm_wall_s above.
+        o.insert(
+            "timed_pass_cache_hits".into(),
+            Json::Num(reuse_timed_hits[1] as f64),
+        );
+        o.insert("packing_time_saved_s".into(), Json::Num(packing_saved_s));
+        o.insert(
+            "warm_tile_buffers_recycled".into(),
+            Json::Num(reuse_mem[1].tile_buffers_recycled as f64),
+        );
+        o.insert(
+            "warm_tile_buffers_allocated".into(),
+            Json::Num(reuse_mem[1].tile_buffers_allocated as f64),
+        );
+        o.insert("bit_identical".into(), Json::Bool(reuse_identical));
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote weight-reuse report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
+
     common::banner("open-loop latency under load: heavy int8 stream + fp32 trickle");
     let (n_heavy, n_trickle) = if quick { (4usize, 6usize) } else { (10, 16) };
     // Class 1: saturating int8 bulk (32×1024×32 → 8 heavy tiles each).
@@ -395,6 +563,12 @@ fn main() {
     println!(
         "window occupancy : mean {:.2} / max {} (configured depth {})",
         stats.mean_in_flight, stats.max_in_flight, stats.pipeline_depth
+    );
+    println!(
+        "tile buffers     : {} recycled / {} allocated ({} parked)",
+        stats.mem.tile_buffers_recycled,
+        stats.mem.tile_buffers_allocated,
+        stats.mem.tile_buffers_free
     );
     println!("device time      : {:.3} ms (VCK190-equivalent)", stats.device_time_s * 1e3);
     println!(

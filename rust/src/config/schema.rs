@@ -320,6 +320,13 @@ pub struct ServeConfig {
     /// Tiles kept in flight by the serving pipeline (software ping-pong
     /// window). `1` reproduces the synchronous one-tile-at-a-time engine.
     pub pipeline_depth: usize,
+    /// Byte budget of the packed-weight (B operand) LRU cache. `0`
+    /// disables the cache — per-request packing, the pre-PR 4 behavior
+    /// bit-for-bit. Size it to hold the working set of distinct
+    /// weights: ≈ `Σ ⌈k/nk⌉·⌈n/nn⌉ · nk·nn · 4` bytes over the weights
+    /// you want resident (packed pools store 4-byte elements in both
+    /// precisions — int8 operands are carried as i32).
+    pub weight_cache_bytes: usize,
     /// Tile-execution backend selection.
     pub backend: BackendKind,
     /// Scheduling policy for the in-flight window.
@@ -343,6 +350,7 @@ impl ServeConfig {
             queue_depth: 64,
             admission: AdmissionPolicy::Block,
             pipeline_depth: 4,
+            weight_cache_bytes: 0,
             backend: BackendKind::Auto,
             policy: PolicyKind::Fifo,
             class_weights: vec![1, 1, 1, 1],
@@ -358,6 +366,10 @@ impl ServeConfig {
         o.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
         o.insert("admission".into(), Json::Str(self.admission.to_string()));
         o.insert("pipeline_depth".into(), Json::Num(self.pipeline_depth as f64));
+        o.insert(
+            "weight_cache_bytes".into(),
+            Json::Num(self.weight_cache_bytes as f64),
+        );
         o.insert("backend".into(), Json::Str(self.backend.to_string()));
         o.insert("policy".into(), Json::Str(self.policy.to_string()));
         o.insert(
@@ -413,6 +425,10 @@ impl ServeConfig {
                 .get("pipeline_depth")
                 .and_then(Json::as_u64)
                 .unwrap_or(4) as usize,
+            weight_cache_bytes: v
+                .get("weight_cache_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0) as usize,
             backend,
             policy,
             class_weights,
@@ -499,6 +515,7 @@ mod tests {
         assert_eq!(c.workers, 2);
         assert_eq!(c.artifacts_dir, "artifacts");
         assert_eq!(c.pipeline_depth, 4);
+        assert_eq!(c.weight_cache_bytes, 0, "weight cache defaults off");
         assert_eq!(c.backend, BackendKind::Auto);
         assert_eq!(c.admission, AdmissionPolicy::Block);
         assert_eq!(c.policy, PolicyKind::Fifo);
@@ -528,6 +545,7 @@ mod tests {
         c.queue_depth = 9;
         c.admission = AdmissionPolicy::Reject;
         c.pipeline_depth = 16;
+        c.weight_cache_bytes = 64 << 20;
         c.backend = BackendKind::Reference;
         c.policy = PolicyKind::WeightedFair;
         c.class_weights = vec![8, 2, 1];

@@ -4,9 +4,13 @@
 //!
 //! # Job model (the pipelined dataflow)
 //!
-//! Jobs are **tagged** and carry `Arc`'d operand tiles from the server's
-//! tile-major pools — submission is zero-copy, the worker reads the
-//! slices in place. Every job names its own completion sender, and the
+//! Jobs are **tagged** and carry [`TileRef`]s into the server's
+//! contiguous tile-major arenas ([`crate::coordinator::pool::TilePool`])
+//! — submission is zero-copy (an `Arc` bump), the worker reads the
+//! stride-addressed slices in place. Reference-backend output buffers
+//! come from the pool's per-precision free-lists and are returned by
+//! the scheduler after reduction, so the steady-state loop allocates
+//! nothing per tile. Every job names its own completion sender, and the
 //! serving engine points *all* of a window's jobs at one channel, so a
 //! single `recv` loop drains completions regardless of which worker
 //! executed which tile. This is the host-side mirror of the paper's
@@ -38,7 +42,8 @@
 
 use crate::arch::precision::Precision;
 use crate::config::schema::{BackendKind, DesignConfig};
-use crate::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
+use crate::coordinator::pool::{BufferPool, TileRef, FREE_LIST_CAP};
+use crate::coordinator::tiler::{matmul_ref_f32_into, matmul_ref_i32_into};
 use crate::placement::placer::place_design;
 use crate::runtime::{
     artifact_path, artifacts_available, named_artifact_available, pjrt_compiled, Runtime,
@@ -54,11 +59,13 @@ use std::thread::JoinHandle;
 /// Operand tiles of one job, typed by precision. `F32` carries an
 /// `nm×nk` A and `nk×nn` B in the fp32 geometry; `I32` likewise in the
 /// int8 geometry (int8-range values carried as i32, matching
-/// [`crate::runtime::Executable::run_i32`]). Tiles are shared zero-copy
-/// from the server's packed pools.
+/// [`crate::runtime::Executable::run_i32`]). Tiles are [`TileRef`]s —
+/// stride-addressed slices into the server's contiguous arena pools
+/// ([`crate::coordinator::pool::TilePool`]); submission is an `Arc`
+/// bump, the worker reads the slices in place.
 pub enum TilePayload {
-    F32 { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
-    I32 { a: Arc<Vec<i32>>, b: Arc<Vec<i32>> },
+    F32 { a: TileRef<f32>, b: TileRef<f32> },
+    I32 { a: TileRef<i32>, b: TileRef<i32> },
 }
 
 impl TilePayload {
@@ -101,10 +108,14 @@ enum Msg {
 
 /// Per-precision device facts: native tile size and steady-state
 /// iteration period, both derived from the placed design's simulation.
-/// The `native` tuple doubles as the geometric per-tile cost input the
-/// scheduling policies weigh precisions by — see
-/// [`crate::coordinator::policy::TileCosts::from_native`] (on the
-/// flagship designs an int8 tile is 4× an fp32 tile).
+/// `period_cycles` is also the per-tile cost input the scheduling
+/// policies weigh precisions by — see
+/// [`crate::coordinator::policy::TileCosts::from_periods`], which
+/// charges measured device time per tile and falls back to the
+/// geometric MAC ratio ([`TileCosts::from_native`]) when the simulated
+/// periods are degenerate.
+///
+/// [`TileCosts::from_native`]: crate::coordinator::policy::TileCosts::from_native
 #[derive(Debug, Clone, Copy)]
 pub struct PrecisionInfo {
     /// Native design size (nm, nk, nn).
@@ -136,6 +147,10 @@ pub struct DeviceHandle {
     pub backend: &'static str,
     /// Number of invocations served.
     invocations: Arc<AtomicU64>,
+    /// Per-precision free-lists of native-tile output buffers, shared
+    /// with the scheduler's completion loop (the buffer-recycling layer
+    /// of the memory plane — see [`crate::coordinator::pool`]).
+    bufs: Arc<BufferPool>,
 }
 
 impl DeviceHandle {
@@ -151,7 +166,7 @@ impl DeviceHandle {
         let (done, rx) = mpsc::channel();
         self.submit(TileJob {
             tag: 0,
-            payload: TilePayload::F32 { a: Arc::new(a), b: Arc::new(b) },
+            payload: TilePayload::F32 { a: TileRef::single(a), b: TileRef::single(b) },
             done,
         })?;
         match rx.recv().context("device reply channel closed")?.result? {
@@ -199,6 +214,14 @@ impl DeviceHandle {
     /// run apart from the handle (the streaming server's stats path).
     pub(crate) fn counters(&self) -> (Arc<AtomicU64>, Arc<AtomicU64>) {
         (Arc::clone(&self.cycles), Arc::clone(&self.invocations))
+    }
+
+    /// The pool's tile-buffer free-lists. The scheduler returns reduced
+    /// partials and retired accumulation buffers here; the (reference)
+    /// workers take their output buffers from it, closing the recycle
+    /// loop.
+    pub fn buffer_pool(&self) -> Arc<BufferPool> {
+        Arc::clone(&self.bufs)
     }
 
     fn stop(&mut self) {
@@ -318,6 +341,7 @@ pub fn spawn_device_pool(
     let workers = workers.max(1);
     let cycles = Arc::new(AtomicU64::new(0));
     let invocations = Arc::new(AtomicU64::new(0));
+    let bufs = Arc::new(BufferPool::new(FREE_LIST_CAP));
     let (tx, rx) = mpsc::channel::<Msg>();
     // std mpsc is single-consumer; the pool shares the receiver behind a
     // mutex (locked only to pop, never while executing a tile).
@@ -331,6 +355,7 @@ pub fn spawn_device_pool(
         let rx_w = Arc::clone(&rx);
         let cycles_w = Arc::clone(&cycles);
         let invocations_w = Arc::clone(&invocations);
+        let bufs_w = Arc::clone(&bufs);
         let ready_w = ready_tx.clone();
         let dir_w = artifacts_dir.clone();
         let name_f32_w = name_f32.clone();
@@ -390,7 +415,7 @@ pub fn spawn_device_pool(
                     // still produce a completion — otherwise the server's
                     // recv loop would wait forever for this tag.
                     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_tile(&backend, &job.payload, nf, ni),
+                        || run_tile(&backend, &job.payload, nf, ni, &bufs_w),
                     ))
                     .unwrap_or_else(|_| Err(anyhow!("device worker panicked executing tile")));
                     cycles_w.fetch_add(period, Ordering::Relaxed);
@@ -432,15 +457,21 @@ pub fn spawn_device_pool(
         workers,
         backend: if use_pjrt { "pjrt" } else { "reference" },
         invocations,
+        bufs,
     })
 }
 
-/// Execute one tile on whichever datapath its payload selects.
+/// Execute one tile on whichever datapath its payload selects. The
+/// reference backend draws its output buffer from the shared free-lists
+/// (zero-allocation steady state); the PJRT path cannot — the FFI
+/// allocates the result — so only the scheduler-side recycling applies
+/// there.
 fn run_tile(
     backend: &WorkerBackend,
     payload: &TilePayload,
     native_f32: (u64, u64, u64),
     native_i32: (u64, u64, u64),
+    bufs: &BufferPool,
 ) -> Result<TileOutput> {
     match payload {
         TilePayload::F32 { a, b } => {
@@ -454,7 +485,9 @@ fn run_tile(
                     ])
                     .map(TileOutput::F32),
                 WorkerBackend::Reference => {
-                    Ok(TileOutput::F32(matmul_ref_f32(a, b, nm, nk, nn)))
+                    let mut out = bufs.fp32.take(nm * nn);
+                    matmul_ref_f32_into(&mut out, a.as_slice(), b.as_slice(), nm, nk, nn);
+                    Ok(TileOutput::F32(out))
                 }
             }
         }
@@ -472,7 +505,9 @@ fn run_tile(
                     "int8 artifact not built — run `make artifacts` with the int8 design"
                 )),
                 WorkerBackend::Reference => {
-                    Ok(TileOutput::I32(matmul_ref_i32(a, b, nm, nk, nn)))
+                    let mut out = bufs.int8.take(nm * nn);
+                    matmul_ref_i32_into(&mut out, a.as_slice(), b.as_slice(), nm, nk, nn);
+                    Ok(TileOutput::I32(out))
                 }
             }
         }
@@ -482,6 +517,8 @@ fn run_tile(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::TilePool;
+    use crate::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 
     #[test]
     fn artifact_name_scheme() {
@@ -521,14 +558,15 @@ mod tests {
         let b: Vec<f32> = (0..nk * nn).map(|i| (i % 7) as f32 - 3.0).collect();
         let want = matmul_ref_f32(&a, &b, nm, nk, nn);
 
-        // Tagged async submission on one completion channel.
+        // Tagged async submission on one completion channel; all six
+        // jobs share one arena tile zero-copy.
         let (done_tx, done_rx) = mpsc::channel();
-        let a = Arc::new(a);
-        let b = Arc::new(b);
+        let a = TilePool::from_tile(a);
+        let b = TilePool::from_tile(b);
         for tag in 0..6u64 {
             dev.submit(TileJob {
                 tag,
-                payload: TilePayload::F32 { a: Arc::clone(&a), b: Arc::clone(&b) },
+                payload: TilePayload::F32 { a: a.tile_ref(0), b: b.tile_ref(0) },
                 done: done_tx.clone(),
             })
             .unwrap();
@@ -565,13 +603,13 @@ mod tests {
         let (done_tx, done_rx) = mpsc::channel();
         dev.submit(TileJob {
             tag: 1,
-            payload: TilePayload::I32 { a: Arc::new(ai), b: Arc::new(bi) },
+            payload: TilePayload::I32 { a: TileRef::single(ai), b: TileRef::single(bi) },
             done: done_tx.clone(),
         })
         .unwrap();
         dev.submit(TileJob {
             tag: 2,
-            payload: TilePayload::F32 { a: Arc::new(af), b: Arc::new(bf) },
+            payload: TilePayload::F32 { a: TileRef::single(af), b: TileRef::single(bf) },
             done: done_tx.clone(),
         })
         .unwrap();
@@ -614,12 +652,25 @@ mod tests {
         assert_eq!(dev.native, (416, 128, 192));
         assert_eq!(dev.native_int8, (416, 512, 192));
         assert!(dev.period_cycles > 0.0 && dev.period_cycles_int8 > 0.0);
-        // The geometric tile-cost ratio the fair policies schedule on.
-        let costs = crate::coordinator::policy::TileCosts::from_native(
+        // Geometric fallback ratio (4× MACs) stays pinned…
+        let geo = crate::coordinator::policy::TileCosts::from_native(
             dev.info_for(Precision::Fp32).unwrap().native,
             dev.info_for(Precision::Int8).unwrap().native,
         );
-        assert_eq!(costs.int8, 4 * costs.fp32);
+        assert_eq!(geo.int8, 4 * geo.fp32);
+        // …but the fair policies now charge measured device periods
+        // per tile (PR 4): the simulated flagship periods are healthy,
+        // so the derivation is exact, not the fallback.
+        let info_f = dev.info_for(Precision::Fp32).unwrap();
+        let info_i = dev.info_for(Precision::Int8).unwrap();
+        let costs = crate::coordinator::policy::TileCosts::from_periods(
+            info_f.period_cycles,
+            info_i.period_cycles,
+            info_f.native,
+            info_i.native,
+        );
+        assert_eq!(costs.fp32, info_f.period_cycles.round() as u64);
+        assert_eq!(costs.int8, info_i.period_cycles.round() as u64);
         dev.shutdown();
     }
 

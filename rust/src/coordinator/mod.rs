@@ -25,10 +25,14 @@
 //! Arbitrary-size MatMul requests enter through a **streaming admission
 //! queue** ([`admission`]; bounded by `ServeConfig::queue_depth`,
 //! block/reject backpressure), are padded and tiled to their precision's
-//! native size ([`tiler`]), packed once into tile-major `Arc`'d block
-//! pools, and streamed through a pipelined in-flight window of tagged
-//! tile jobs ([`scheduler`]) executed by a pool of device worker threads
-//! ([`device`]) — the software stand-in for the VCK190's AIE array.
+//! native size ([`tiler`]), packed once into contiguous tile-major
+//! arenas ([`pool`]: one allocation per matrix, B optionally served
+//! from the byte-budgeted packed-weight cache), and streamed through a
+//! pipelined in-flight window of tagged tile jobs ([`scheduler`])
+//! executed by a pool of device worker threads ([`device`]) — the
+//! software stand-in for the VCK190's AIE array. Tile output and
+//! accumulation buffers recycle through per-precision free-lists, so
+//! the steady-state hot loop stops allocating.
 //! Which flight issues the next tile is a pluggable [`policy`] decision:
 //! FIFO round-robin (the default, bit-identical to the pre-policy
 //! engine), deficit-round-robin weighted fairness over priority classes
@@ -56,6 +60,7 @@ pub mod admission;
 pub mod device;
 pub mod handle;
 pub mod policy;
+pub mod pool;
 pub(crate) mod scheduler;
 pub mod server;
 pub mod stats;
@@ -68,6 +73,7 @@ pub use device::{
 };
 pub use handle::{Cancelled, RequestHandle};
 pub use policy::{Fifo, FlightMeta, Priority, SchedPolicy, TileCosts, WeightedFair};
+pub use pool::{BufferPool, FreeList, TilePool, TileRef, WeightCache, FREE_LIST_CAP};
 pub use server::{MatMulServer, ServerStats};
-pub use stats::ClassStats;
+pub use stats::{ClassStats, MemPlaneStats};
 pub use tiler::Tiler;

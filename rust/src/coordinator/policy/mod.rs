@@ -31,11 +31,15 @@ pub use weighted_fair::WeightedFair;
 use crate::arch::precision::Precision;
 use crate::config::schema::{PolicyKind, ServeConfig};
 
-/// Relative cost of one native tile per serving precision, derived from
-/// the design's tile geometry (MACs per native tile). On the paper's
-/// flagship designs int8 tiles are 32×128×32 against fp32's 32×32×32 —
-/// a 4× cost ratio — which is exactly the imbalance that lets an int8
-/// stream dominate a cost-blind round-robin.
+/// Relative cost of one native tile per serving precision. Since PR 4
+/// the primary derivation is the **measured device period** of each
+/// precision's placed design ([`TileCosts::from_periods`]): charging
+/// cycles-per-tile makes the fair policies split device *time* even
+/// when MACs/cycle differ across precisions (int8 runs 128 MACs/cyc to
+/// fp32's 8, so geometric MACs overstate int8's time by up to 16×).
+/// The geometric MAC derivation remains as the fallback for degenerate
+/// simulated periods — on the paper's flagship designs it pins the
+/// familiar 4× ratio (int8 32×128×32 vs fp32 32×32×32 kernels).
 #[derive(Debug, Clone, Copy)]
 pub struct TileCosts {
     pub fp32: u64,
@@ -43,10 +47,34 @@ pub struct TileCosts {
 }
 
 impl TileCosts {
-    /// Costs from the two native tile sizes `(nm, nk, nn)`.
+    /// Geometric fallback: costs from the two native tile sizes
+    /// `(nm, nk, nn)`, in MACs per native tile.
     pub fn from_native(native_f32: (u64, u64, u64), native_int8: (u64, u64, u64)) -> Self {
         let macs = |(m, k, n): (u64, u64, u64)| (m * k * n).max(1);
         TileCosts { fp32: macs(native_f32), int8: macs(native_int8) }
+    }
+
+    /// Costs from the measured per-precision iteration periods (device
+    /// cycles per native tile, from the simulator) — the derivation the
+    /// server uses. Falls back to [`TileCosts::from_native`] when either
+    /// period is degenerate (non-finite or under one cycle, e.g. an
+    /// unsimulatable custom design), so a policy always has usable
+    /// positive costs.
+    pub fn from_periods(
+        period_f32: f64,
+        period_int8: f64,
+        native_f32: (u64, u64, u64),
+        native_int8: (u64, u64, u64),
+    ) -> Self {
+        let healthy = |p: f64| p.is_finite() && p >= 1.0;
+        if healthy(period_f32) && healthy(period_int8) {
+            TileCosts {
+                fp32: period_f32.round() as u64,
+                int8: period_int8.round() as u64,
+            }
+        } else {
+            Self::from_native(native_f32, native_int8)
+        }
     }
 
     /// Cost of one tile in `precision`.
@@ -170,6 +198,24 @@ mod tests {
         assert_eq!(c.quantum(), c.int8);
         assert_eq!(c.cost(Precision::Int8), c.int8);
         assert_eq!(c.cost(Precision::Fp32), c.fp32);
+    }
+
+    #[test]
+    fn tile_costs_from_periods_and_degenerate_fallback() {
+        let nf = (416, 128, 192);
+        let ni = (416, 512, 192);
+        // Healthy periods: charge cycles per tile, rounded.
+        let c = TileCosts::from_periods(4700.4, 9400.6, nf, ni);
+        assert_eq!((c.fp32, c.int8), (4700, 9401));
+        assert_eq!(c.quantum(), 9401);
+        // Degenerate periods (zero, sub-cycle, NaN, infinite) fall back
+        // to the geometric MAC derivation — never a zero cost.
+        for (pf, pi) in [(0.0, 9400.0), (4700.0, 0.5), (f64::NAN, 9400.0), (4700.0, f64::INFINITY)]
+        {
+            let c = TileCosts::from_periods(pf, pi, nf, ni);
+            let geo = TileCosts::from_native(nf, ni);
+            assert_eq!((c.fp32, c.int8), (geo.fp32, geo.int8), "periods {pf}/{pi}");
+        }
     }
 
     #[test]

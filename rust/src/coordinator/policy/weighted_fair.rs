@@ -6,9 +6,10 @@
 //! its deficit covers the head flight's per-tile cost; when it cannot
 //! afford the next tile it banks one quantum (`weight × base quantum`)
 //! and rotates to the back. Because tiles are charged their precision's
-//! geometric cost (int8 ≈ 4× fp32 on the flagship designs), classes
-//! split *device time*, not tile counts — a saturating int8 stream gets
-//! its weighted share and no more, so fp32 latency stays bounded.
+//! measured device period ([`TileCosts::from_periods`](super::TileCosts::from_periods);
+//! geometric MACs as the degenerate-period fallback), classes split
+//! *device time*, not tile counts — a saturating int8 stream gets its
+//! weighted share and no more, so fp32 latency stays bounded.
 
 use super::{FlightMeta, SchedPolicy};
 use rustc_hash::FxHashMap;

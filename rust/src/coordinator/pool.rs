@@ -1,0 +1,673 @@
+//! The serving **memory plane**: arena tile pools, the packed-weight
+//! cache, and buffer free-lists — everything that lets a long-lived
+//! server reach a zero-allocation steady state per tile.
+//!
+//! MaxEVA's headline numbers come from keeping the AIE array fed; on the
+//! host side that means the operand/result buffers around the pipeline
+//! must stop costing allocations once traffic is steady. Three layers:
+//!
+//! * [`TilePool`] — one contiguous allocation per packed matrix
+//!   (`Arc<[T]>` + tile stride addressing) instead of one `Vec` per
+//!   tile. Packing a `gm×gk` grid is **one** allocation, tile reads are
+//!   cache-/prefetch-friendly slices, and a [`TileRef`] (pool + tile
+//!   index) is the zero-copy currency tile jobs carry to the device
+//!   workers.
+//! * [`WeightCache`] — a byte-budgeted LRU of packed **B** (weight)
+//!   pools, keyed by [`WeightKey`]: an explicit caller identity
+//!   (`MatMulRequest::with_weight_id`) or a content fingerprint
+//!   fallback, always qualified by shape and precision. A hit skips B
+//!   extraction and packing entirely — for steady weight-reuse serving
+//!   (the GotoBLAS2-on-Versal observation, arXiv 2404.15043) that is
+//!   the dominant per-request host cost. Budget `0` disables the cache
+//!   and reproduces the uncached engine bit-for-bit; a cached pool is
+//!   byte-identical to a freshly packed one because
+//!   [`TilePool::pack`] is deterministic, so caching never changes
+//!   outputs either way.
+//! * [`FreeList`] / [`BufferPool`] — per-precision free-lists for the
+//!   native-tile-sized working buffers that cycle through the
+//!   completion loop (device output tiles, per-block accumulation
+//!   buffers). All of a server's tile buffers share one length per
+//!   precision (`nm×nn` native), so recycling is a plain stack; the
+//!   retained depth is capped ([`FREE_LIST_CAP`]) so cancellation
+//!   storms cannot grow it without bound.
+//!
+//! Counters on all three layers feed
+//! [`ServerStats::mem`](crate::coordinator::server::ServerStats) so the
+//! e2e bench can attribute the win (cache hit rate, buffers recycled vs
+//! allocated).
+
+use crate::arch::precision::Precision;
+use crate::coordinator::tiler::Tiler;
+use rustc_hash::FxHashMap;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A packed tile-major matrix: every zero-padded `bh×bw` block of a
+/// `rows×cols` matrix, stored back to back in **one** contiguous
+/// `Arc<[T]>` allocation, blocks ordered row-major over the block grid.
+///
+/// This replaces the PR 1 `Vec<Vec<T>>` / per-tile `Arc<Vec<T>>`
+/// packing: per-request allocations drop from O(tiles) to O(1), and a
+/// tile read is a stride-addressed slice into one arena. Cloning a pool
+/// (or taking a [`TileRef`]) is an `Arc` bump — submission stays
+/// zero-copy.
+#[derive(Debug, Clone)]
+pub struct TilePool<T> {
+    data: Arc<[T]>,
+    tile_len: usize,
+}
+
+impl<T: Copy + Default> TilePool<T> {
+    /// Pack a row-major `rows×cols` matrix into a tile-major pool of
+    /// zero-padded `bh×bw` blocks (the packing step of the serving
+    /// pipeline, GotoBLAS-style: each block is extracted exactly once
+    /// per request). Deterministic: equal inputs yield byte-identical
+    /// pools, which is what makes [`WeightCache`] hits exact.
+    pub fn pack(src: &[T], rows: usize, cols: usize, bh: usize, bw: usize) -> Self {
+        assert_eq!(src.len(), rows * cols, "matrix shape mismatch");
+        let gr = rows.div_ceil(bh);
+        let gc = cols.div_ceil(bw);
+        let tile_len = bh * bw;
+        let mut data = vec![T::default(); gr * gc * tile_len];
+        for bi in 0..gr {
+            for bj in 0..gc {
+                let off = (bi * gc + bj) * tile_len;
+                Tiler::extract_block_into(
+                    &mut data[off..off + tile_len],
+                    src,
+                    rows,
+                    cols,
+                    bi,
+                    bj,
+                    bh,
+                    bw,
+                );
+            }
+        }
+        TilePool { data: data.into(), tile_len }
+    }
+
+    /// A single-tile pool wrapping an already-extracted block (the
+    /// synchronous `execute_tile` convenience path and tests).
+    pub fn from_tile(tile: Vec<T>) -> Self {
+        assert!(!tile.is_empty(), "a tile pool needs a nonzero tile");
+        TilePool { tile_len: tile.len(), data: tile.into() }
+    }
+
+    /// Inverse of [`TilePool::pack`]: reassemble the row-major
+    /// `rows×cols` matrix, dropping the padding.
+    pub fn unpack(&self, rows: usize, cols: usize, bh: usize, bw: usize) -> Vec<T> {
+        let gr = rows.div_ceil(bh);
+        let gc = cols.div_ceil(bw);
+        assert_eq!(self.tiles(), gr * gc, "tile count mismatch");
+        assert_eq!(self.tile_len, bh * bw, "tile shape mismatch");
+        let mut out = vec![T::default(); rows * cols];
+        for bi in 0..gr {
+            for bj in 0..gc {
+                Tiler::write_block(&mut out, rows, cols, bi, bj, bh, bw, self.tile(bi * gc + bj));
+            }
+        }
+        out
+    }
+
+    /// Borrow tile `idx` in place (row-major block-grid order).
+    pub fn tile(&self, idx: usize) -> &[T] {
+        &self.data[idx * self.tile_len..(idx + 1) * self.tile_len]
+    }
+
+    /// A shareable handle to tile `idx` (an `Arc` bump, no copy).
+    pub fn tile_ref(&self, idx: usize) -> TileRef<T> {
+        assert!(idx < self.tiles(), "tile index {idx} out of {}", self.tiles());
+        TileRef { pool: self.clone(), tile: idx }
+    }
+
+    /// Number of tiles in the pool.
+    pub fn tiles(&self) -> usize {
+        self.data.len() / self.tile_len
+    }
+
+    /// Elements per tile (`bh × bw`).
+    pub fn tile_len(&self) -> usize {
+        self.tile_len
+    }
+
+    /// Resident size of the arena in bytes (the [`WeightCache`] budget
+    /// currency).
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of_val(self.data.as_ref())
+    }
+}
+
+/// A zero-copy reference to one tile of a [`TilePool`] — what a
+/// [`TilePayload`](crate::coordinator::device::TilePayload) carries to
+/// the device workers. Holding a `TileRef` keeps the whole arena alive.
+#[derive(Debug, Clone)]
+pub struct TileRef<T> {
+    pool: TilePool<T>,
+    tile: usize,
+}
+
+impl<T: Copy + Default> TileRef<T> {
+    /// Wrap one already-extracted block as a standalone reference.
+    pub fn single(tile: Vec<T>) -> Self {
+        TilePool::from_tile(tile).tile_ref(0)
+    }
+
+    /// The tile's elements, read in place.
+    pub fn as_slice(&self) -> &[T] {
+        self.pool.tile(self.tile)
+    }
+}
+
+/// Maximum buffers a [`FreeList`] retains. All retained buffers are
+/// native-tile-sized, so this caps the recycling layer's resident
+/// memory at `cap × nm×nn × sizeof(T)` per precision — and bounds the
+/// free-list under cancellation storms (probed by
+/// `tests/memory_plane.rs`).
+pub const FREE_LIST_CAP: usize = 256;
+
+/// A lock-guarded stack of reusable `Vec<T>` buffers with recycle /
+/// fresh-allocation counters. Device workers [`take`](FreeList::take)
+/// output buffers, the scheduler [`put`](FreeList::put)s them back
+/// after reduction — in steady state the loop closes and per-tile heap
+/// allocations stop.
+#[derive(Debug)]
+pub struct FreeList<T> {
+    stack: Mutex<Vec<Vec<T>>>,
+    cap: usize,
+    recycled: AtomicU64,
+    allocated: AtomicU64,
+}
+
+impl<T: Copy + Default> FreeList<T> {
+    pub fn new(cap: usize) -> Self {
+        FreeList {
+            stack: Mutex::new(Vec::new()),
+            cap,
+            recycled: AtomicU64::new(0),
+            allocated: AtomicU64::new(0),
+        }
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (recycled buffers keep stale data — callers overwrite or
+    /// `fill(default)` as needed; `matmul_ref_*_into` and the
+    /// accumulation-buffer path both do).
+    pub fn take(&self, len: usize) -> Vec<T> {
+        let popped = self.stack.lock().unwrap().pop();
+        match popped {
+            Some(mut v) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                v.resize(len, T::default());
+                v
+            }
+            None => {
+                self.allocated.fetch_add(1, Ordering::Relaxed);
+                vec![T::default(); len]
+            }
+        }
+    }
+
+    /// Return a buffer for reuse. Dropped (truly freed) once the list
+    /// holds `cap` buffers, so the list length is bounded no matter how
+    /// many stragglers a cancellation storm washes back.
+    pub fn put(&self, v: Vec<T>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut stack = self.stack.lock().unwrap();
+        if stack.len() < self.cap {
+            stack.push(v);
+        }
+    }
+
+    /// Buffers currently parked in the list.
+    pub fn free(&self) -> usize {
+        self.stack.lock().unwrap().len()
+    }
+
+    /// `take` calls served by recycling.
+    pub fn recycled(&self) -> u64 {
+        self.recycled.load(Ordering::Relaxed)
+    }
+
+    /// `take` calls that fell through to a fresh heap allocation.
+    pub fn allocated(&self) -> u64 {
+        self.allocated.load(Ordering::Relaxed)
+    }
+}
+
+/// The per-precision free-lists one server's completion loop threads
+/// its tile buffers through (fp32 tiles are `Vec<f32>`, int8-path tiles
+/// accumulate `Vec<i32>`). Shared `Arc` between the device workers
+/// (take) and the scheduler (put).
+#[derive(Debug)]
+pub struct BufferPool {
+    pub fp32: FreeList<f32>,
+    pub int8: FreeList<i32>,
+}
+
+impl BufferPool {
+    pub fn new(cap: usize) -> Self {
+        BufferPool { fp32: FreeList::new(cap), int8: FreeList::new(cap) }
+    }
+
+    /// Total `take` calls served by recycling, both precisions.
+    pub fn recycled(&self) -> u64 {
+        self.fp32.recycled() + self.int8.recycled()
+    }
+
+    /// Total `take` calls that allocated fresh, both precisions.
+    pub fn allocated(&self) -> u64 {
+        self.fp32.allocated() + self.int8.allocated()
+    }
+
+    /// Buffers currently parked, both precisions.
+    pub fn free(&self) -> usize {
+        self.fp32.free() + self.int8.free()
+    }
+}
+
+/// How a cached weight is identified (always further qualified by shape
+/// and precision in [`WeightKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightIdent {
+    /// Caller-assigned identity
+    /// ([`MatMulRequest::with_weight_id`](crate::workloads::MatMulRequest::with_weight_id)):
+    /// the caller asserts equal ids ⇒ equal bytes. Preferred — no
+    /// per-request hash of the operand.
+    Id(u64),
+    /// Content fingerprint fallback (FNV-1a over the element bits and
+    /// length) for callers that don't tag weights. 64-bit, so a
+    /// collision is *possible* in principle; tag weights explicitly
+    /// when serving adversarial or extremely high-cardinality weight
+    /// sets.
+    Fingerprint(u64),
+}
+
+/// Cache key of one packed weight pool: identity × shape × precision.
+/// Shape and precision are part of the key because the packed layout
+/// depends on them — the same bytes packed under a different tile
+/// geometry are a different pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightKey {
+    pub ident: WeightIdent,
+    pub k: u64,
+    pub n: u64,
+    pub precision: Precision,
+}
+
+/// A cached pool, typed by precision (the key's `precision` field keeps
+/// lookups type-correct; [`PoolElem`] bridges the generic packing code).
+#[derive(Debug, Clone)]
+pub enum CachedPool {
+    F32(TilePool<f32>),
+    I32(TilePool<i32>),
+}
+
+/// Element types the weight cache can store — the dispatch point
+/// between the scheduler's precision-generic packing code and the
+/// type-erased cache entries.
+pub trait PoolElem: Copy + Default {
+    /// The serving precision this element type carries.
+    fn precision() -> Precision;
+    /// Content fingerprint over the element bits (FNV-1a 64).
+    fn fingerprint(data: &[Self]) -> u64;
+    fn wrap(pool: TilePool<Self>) -> CachedPool;
+    fn peek(cached: &CachedPool) -> Option<&TilePool<Self>>;
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_words(len: usize, words: impl Iterator<Item = u32>) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in (len as u64).to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+impl PoolElem for f32 {
+    fn precision() -> Precision {
+        Precision::Fp32
+    }
+    fn fingerprint(data: &[f32]) -> u64 {
+        fnv1a_words(data.len(), data.iter().map(|v| v.to_bits()))
+    }
+    fn wrap(pool: TilePool<f32>) -> CachedPool {
+        CachedPool::F32(pool)
+    }
+    fn peek(cached: &CachedPool) -> Option<&TilePool<f32>> {
+        match cached {
+            CachedPool::F32(p) => Some(p),
+            CachedPool::I32(_) => None,
+        }
+    }
+}
+
+impl PoolElem for i32 {
+    fn precision() -> Precision {
+        Precision::Int8
+    }
+    fn fingerprint(data: &[i32]) -> u64 {
+        fnv1a_words(data.len(), data.iter().map(|&v| v as u32))
+    }
+    fn wrap(pool: TilePool<i32>) -> CachedPool {
+        CachedPool::I32(pool)
+    }
+    fn peek(cached: &CachedPool) -> Option<&TilePool<i32>> {
+        match cached {
+            CachedPool::I32(p) => Some(p),
+            CachedPool::F32(_) => None,
+        }
+    }
+}
+
+/// Shared hit/miss/evict and residency gauges of one [`WeightCache`],
+/// published for [`ServerStats`](crate::coordinator::server::ServerStats)
+/// snapshots taken from client threads.
+#[derive(Debug, Default)]
+pub struct WeightCacheCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+    /// Current resident bytes (gauge).
+    pub bytes: AtomicU64,
+    /// Current entry count (gauge).
+    pub entries: AtomicU64,
+}
+
+struct CacheEntry {
+    pool: CachedPool,
+    bytes: usize,
+    /// Recency stamp; also this entry's key in the LRU index.
+    tick: u64,
+}
+
+/// Byte-budgeted LRU of packed weight pools (see the module docs).
+/// Owned by the scheduler thread — no locking on the lookup path; only
+/// the counters are shared.
+pub struct WeightCache {
+    /// Byte budget; `0` disables the cache entirely (today's per-request
+    /// packing behavior, bit-for-bit *and* allocation-for-allocation).
+    budget: usize,
+    bytes: usize,
+    tick: u64,
+    entries: FxHashMap<WeightKey, CacheEntry>,
+    /// tick → key, ordered oldest-first: O(log n) touch and eviction.
+    lru: BTreeMap<u64, WeightKey>,
+    counters: Arc<WeightCacheCounters>,
+}
+
+impl WeightCache {
+    pub fn new(budget_bytes: usize, counters: Arc<WeightCacheCounters>) -> Self {
+        WeightCache {
+            budget: budget_bytes,
+            bytes: 0,
+            tick: 0,
+            entries: FxHashMap::default(),
+            lru: BTreeMap::new(),
+            counters,
+        }
+    }
+
+    /// Whether caching is on (`weight_cache_bytes > 0`).
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// Resident bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn publish_gauges(&self) {
+        self.counters.bytes.store(self.bytes as u64, Ordering::Relaxed);
+        self.counters.entries.store(self.entries.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Look up a packed pool; counts a hit (touching recency) or a miss.
+    /// Always `None` when disabled — without counting, so budget `0`
+    /// reports all-zero cache stats.
+    pub fn get<T: PoolElem>(&mut self, key: &WeightKey) -> Option<TilePool<T>> {
+        if !self.enabled() {
+            return None;
+        }
+        let Some(e) = self.entries.get_mut(key) else {
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        self.lru.remove(&e.tick);
+        self.tick += 1;
+        e.tick = self.tick;
+        self.lru.insert(self.tick, *key);
+        let got = T::peek(&e.pool).cloned();
+        debug_assert!(got.is_some(), "weight key precision must match its pool type");
+        self.counters.hits.fetch_add(1, Ordering::Relaxed);
+        got
+    }
+
+    /// Insert a freshly packed pool, evicting least-recently-used
+    /// entries until it fits. A pool larger than the whole budget is
+    /// never cached (it would evict everything for a weight that cannot
+    /// stay resident anyway).
+    pub fn insert<T: PoolElem>(&mut self, key: WeightKey, pool: &TilePool<T>) {
+        if !self.enabled() {
+            return;
+        }
+        let bytes = pool.bytes();
+        if bytes > self.budget {
+            return;
+        }
+        if let Some(old) = self.entries.remove(&key) {
+            self.lru.remove(&old.tick);
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + bytes > self.budget {
+            let Some((&tick, &victim)) = self.lru.iter().next() else { break };
+            self.lru.remove(&tick);
+            if let Some(e) = self.entries.remove(&victim) {
+                self.bytes -= e.bytes;
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.tick += 1;
+        self.entries
+            .insert(key, CacheEntry { pool: T::wrap(pool.clone()), bytes, tick: self.tick });
+        self.lru.insert(self.tick, key);
+        self.bytes += bytes;
+        self.publish_gauges();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::XorShift64;
+
+    #[test]
+    fn pool_matches_per_tile_extraction() {
+        // The arena must hold exactly what extract_block would produce
+        // on demand — the zero-copy pipeline depends on it.
+        let mut rng = XorShift64::new(11);
+        for _ in 0..20 {
+            let rows = rng.gen_range(1, 40) as usize;
+            let cols = rng.gen_range(1, 40) as usize;
+            let bh = rng.gen_range(1, 9) as usize;
+            let bw = rng.gen_range(1, 9) as usize;
+            let src: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+                .collect();
+            let pool = TilePool::pack(&src, rows, cols, bh, bw);
+            let gc = cols.div_ceil(bw);
+            assert_eq!(pool.tiles(), rows.div_ceil(bh) * gc);
+            assert_eq!(pool.tile_len(), bh * bw);
+            for bi in 0..rows.div_ceil(bh) {
+                for bj in 0..gc {
+                    let want = Tiler::extract_block(&src, rows, cols, bi, bj, bh, bw);
+                    assert_eq!(pool.tile(bi * gc + bj), &want[..], "block ({bi},{bj})");
+                    assert_eq!(pool.tile_ref(bi * gc + bj).as_slice(), &want[..]);
+                }
+            }
+            // Round-trip, padding dropped.
+            assert_eq!(pool.unpack(rows, cols, bh, bw), src, "{rows}x{cols} in {bh}x{bw}");
+        }
+    }
+
+    #[test]
+    fn pool_pack_exact_fit() {
+        // 4×6 matrix, 2×3 blocks: divides exactly, no padding.
+        let src: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let pool = TilePool::pack(&src, 4, 6, 2, 3);
+        assert_eq!(pool.tiles(), 4);
+        assert_eq!(pool.tile(0), &[0.0, 1.0, 2.0, 6.0, 7.0, 8.0]);
+        assert_eq!(pool.bytes(), 24 * 4);
+        assert_eq!(pool.unpack(4, 6, 2, 3), src);
+    }
+
+    #[test]
+    fn single_tile_pool_and_ref() {
+        let r = TileRef::single(vec![1i32, 2, 3]);
+        assert_eq!(r.as_slice(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn free_list_recycles_and_counts() {
+        let fl: FreeList<f32> = FreeList::new(4);
+        let a = fl.take(8);
+        assert_eq!(a.len(), 8);
+        assert_eq!((fl.allocated(), fl.recycled()), (1, 0));
+        fl.put(a);
+        assert_eq!(fl.free(), 1);
+        // Recycled take resizes to the requested length; contents are
+        // unspecified by contract.
+        let b = fl.take(6);
+        assert_eq!(b.len(), 6);
+        assert_eq!((fl.allocated(), fl.recycled()), (1, 1));
+        fl.put(b);
+        let c = fl.take(10);
+        assert_eq!(c.len(), 10);
+        assert_eq!(fl.recycled(), 2);
+    }
+
+    #[test]
+    fn free_list_is_capacity_bounded() {
+        let fl: FreeList<i32> = FreeList::new(2);
+        for _ in 0..10 {
+            fl.put(vec![0; 4]);
+        }
+        assert_eq!(fl.free(), 2, "puts beyond cap are dropped");
+        // Zero-capacity vecs are not worth parking.
+        fl.put(Vec::new());
+        assert_eq!(fl.free(), 2);
+    }
+
+    fn key_id(id: u64, k: u64, n: u64) -> WeightKey {
+        WeightKey { ident: WeightIdent::Id(id), k, n, precision: Precision::Fp32 }
+    }
+
+    #[test]
+    fn weight_cache_hit_miss_and_identity() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let mut c = WeightCache::new(1 << 20, Arc::clone(&counters));
+        let src: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        let pool = TilePool::pack(&src, 8, 8, 4, 4);
+        let k = key_id(7, 8, 8);
+        assert!(c.get::<f32>(&k).is_none());
+        c.insert(k, &pool);
+        let hit = c.get::<f32>(&k).expect("inserted key must hit");
+        // A cached pool is byte-identical to the freshly packed one.
+        for t in 0..pool.tiles() {
+            assert_eq!(hit.tile(t), pool.tile(t));
+        }
+        assert_eq!(counters.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.misses.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.entries.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.bytes.load(Ordering::Relaxed), pool.bytes() as u64);
+    }
+
+    #[test]
+    fn weight_cache_lru_eviction_respects_budget() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let src: Vec<f32> = vec![1.0; 64];
+        let pool = TilePool::pack(&src, 8, 8, 4, 4); // 256 bytes
+        // Budget for exactly two pools.
+        let mut c = WeightCache::new(2 * pool.bytes(), Arc::clone(&counters));
+        c.insert(key_id(1, 8, 8), &pool);
+        c.insert(key_id(2, 8, 8), &pool);
+        assert_eq!(c.len(), 2);
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(c.get::<f32>(&key_id(1, 8, 8)).is_some());
+        c.insert(key_id(3, 8, 8), &pool);
+        assert_eq!(c.len(), 2);
+        assert!(c.bytes() <= 2 * pool.bytes(), "budget is a hard cap");
+        assert!(c.get::<f32>(&key_id(1, 8, 8)).is_some(), "recently used survives");
+        assert!(c.get::<f32>(&key_id(3, 8, 8)).is_some());
+        assert!(c.get::<f32>(&key_id(2, 8, 8)).is_none(), "LRU entry evicted");
+        assert_eq!(counters.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn weight_cache_oversize_and_disabled() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let src: Vec<f32> = vec![1.0; 64];
+        let pool = TilePool::pack(&src, 8, 8, 4, 4);
+        // A pool larger than the whole budget is never cached.
+        let mut c = WeightCache::new(pool.bytes() - 1, Arc::clone(&counters));
+        c.insert(key_id(1, 8, 8), &pool);
+        assert!(c.is_empty());
+        // Budget 0 = off: lookups are silent (no miss counting).
+        let mut off = WeightCache::new(0, Arc::clone(&counters));
+        assert!(!off.enabled());
+        off.insert(key_id(1, 8, 8), &pool);
+        assert!(off.get::<f32>(&key_id(1, 8, 8)).is_none());
+        assert_eq!(counters.misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn weight_cache_reinsert_replaces_in_place() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let small = TilePool::pack(&[1.0f32; 16], 4, 4, 4, 4);
+        let big = TilePool::pack(&[2.0f32; 64], 8, 8, 4, 4);
+        let mut c = WeightCache::new(1 << 20, counters);
+        c.insert(key_id(1, 4, 4), &small);
+        c.insert(key_id(1, 4, 4), &big);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), big.bytes(), "replacement accounts bytes exactly once");
+    }
+
+    #[test]
+    fn fingerprints_separate_contents_and_lengths() {
+        let a: Vec<f32> = (0..32).map(|x| x as f32).collect();
+        let mut b = a.clone();
+        assert_eq!(<f32 as PoolElem>::fingerprint(&a), <f32 as PoolElem>::fingerprint(&b));
+        b[7] += 1.0;
+        assert_ne!(<f32 as PoolElem>::fingerprint(&a), <f32 as PoolElem>::fingerprint(&b));
+        assert_ne!(
+            <f32 as PoolElem>::fingerprint(&a),
+            <f32 as PoolElem>::fingerprint(&a[..31])
+        );
+        let ai: Vec<i32> = (0..32).collect();
+        let mut bi = ai.clone();
+        bi[0] = -1;
+        assert_ne!(<i32 as PoolElem>::fingerprint(&ai), <i32 as PoolElem>::fingerprint(&bi));
+    }
+}

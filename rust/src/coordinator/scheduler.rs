@@ -3,12 +3,17 @@
 //! PR 3, a pluggable [`SchedPolicy`] deciding which flight issues the
 //! next tile.
 //!
-//! # The pipeline (unchanged mechanics)
+//! # The pipeline
 //!
-//! 1. **Tile-major packing (zero-copy)** — on first schedule each
-//!    request's A and B are packed once into tile-major pools of `Arc`'d
-//!    native blocks ([`Tiler::pack_tile_major`]); a tile job borrows its
-//!    two blocks by `Arc` clone.
+//! 1. **Arena packing (zero-copy)** — on first schedule each request's
+//!    A and B are packed once into contiguous tile-major arenas
+//!    ([`TilePool::pack`]): one allocation per matrix, tiles addressed
+//!    by stride; a tile job borrows its two blocks as [`TileRef`]s
+//!    (`Arc` bumps). The **B** pool first consults the packed-weight
+//!    cache ([`WeightCache`], `ServeConfig::weight_cache_bytes`): a hit
+//!    skips B extraction and packing entirely — the dominant
+//!    per-request host cost under steady weight reuse. Budget `0`
+//!    disables the cache (the pre-PR 4 behavior, bit-for-bit).
 //! 2. **Windowed submission** — up to `pipeline_depth` tagged jobs are
 //!    kept in flight on one completion channel, overlapping host
 //!    pack/reduce with device execution. `pipeline_depth = 1` reproduces
@@ -17,6 +22,14 @@
 //!    k-innermost per `(im, inn)` output block; *which* flight issues
 //!    the next tile is the policy's call ([`Fifo`] round-robin by
 //!    default, bit-identical to the pre-policy engine).
+//! 4. **Buffer recycling** — device output tiles and per-block
+//!    accumulation buffers flow through the per-precision free-lists
+//!    ([`crate::coordinator::pool::BufferPool`]) threaded around the
+//!    completion loop (including the cancellation/straggler paths), so
+//!    a long-lived server reaches a zero-allocation steady state per
+//!    tile.
+//!
+//! [`TileRef`]: crate::coordinator::pool::TileRef
 //!
 //! **Determinism:** completions may arrive out of order, but partials
 //! are applied to each output block strictly in ascending `ik` order
@@ -33,6 +46,9 @@ use crate::coordinator::admission::{Admitted, Gate, GateCloser};
 use crate::coordinator::device::{DeviceHandle, TileDone, TileJob, TileOutput, TilePayload};
 use crate::coordinator::handle::{Cancelled, Reply};
 use crate::coordinator::policy::{self, FlightMeta, PolicyParams, SchedPolicy};
+use crate::coordinator::pool::{
+    BufferPool, FreeList, PoolElem, TilePool, WeightCache, WeightIdent, WeightKey,
+};
 use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
@@ -87,42 +103,57 @@ impl Elem for i32 {
     }
 }
 
-/// One precision's operand pools and output matrix.
+/// One precision's operand pools and output matrix. Packed pools are
+/// contiguous arenas ([`TilePool`]): one allocation per matrix, tiles
+/// addressed by stride — A indexed `[im·gk + ik]`, B `[ik·gn + inn]`.
 struct Pools<T> {
     /// Raw row-major operands, held until this request's first tile is
     /// scheduled: packing then happens *inside* the pipeline, overlapping
     /// the tiles of earlier requests already executing on the workers.
     raw: Option<(Vec<T>, Vec<T>)>,
-    /// Tile-major A pool, indexed `[im·gk + ik]`.
-    a_tiles: Vec<Arc<Vec<T>>>,
-    /// Tile-major B pool, indexed `[ik·gn + inn]`.
-    b_tiles: Vec<Arc<Vec<T>>>,
+    packed: Option<(TilePool<T>, TilePool<T>)>,
     c: Vec<T>,
 }
 
-impl<T: Elem> Pools<T> {
+impl<T: Elem + PoolElem> Pools<T> {
     fn fresh(a: Vec<T>, b: Vec<T>, out_len: usize) -> Self {
-        Pools {
-            raw: Some((a, b)),
-            a_tiles: Vec::new(),
-            b_tiles: Vec::new(),
-            c: vec![T::default(); out_len],
-        }
+        Pools { raw: Some((a, b)), packed: None, c: vec![T::default(); out_len] }
     }
 
     /// First schedule of this request: pack its operands into the
-    /// tile-major pools now — one extract pass per block, total,
-    /// overlapping whatever is already in flight.
-    fn pack(&mut self, m: usize, k: usize, n: usize, t: Tiler) {
+    /// tile-major arenas now — one extract pass per block and one
+    /// allocation per matrix, total, overlapping whatever is already in
+    /// flight. The B (weight) pool goes through the packed-weight
+    /// cache: a hit skips extraction and packing entirely, and since
+    /// [`TilePool::pack`] is deterministic the cached pool is
+    /// byte-identical to what packing would have produced.
+    fn pack(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        t: Tiler,
+        weight_id: Option<u64>,
+        cache: &mut WeightCache,
+    ) {
         if let Some((a, b)) = self.raw.take() {
-            self.a_tiles = Tiler::pack_tile_major(&a, m, k, t.nm, t.nk)
-                .into_iter()
-                .map(Arc::new)
-                .collect();
-            self.b_tiles = Tiler::pack_tile_major(&b, k, n, t.nk, t.nn)
-                .into_iter()
-                .map(Arc::new)
-                .collect();
+            let a_pool = TilePool::pack(&a, m, k, t.nm, t.nk);
+            let b_pool = if cache.enabled() {
+                let ident = match weight_id {
+                    Some(id) => WeightIdent::Id(id),
+                    None => WeightIdent::Fingerprint(T::fingerprint(&b)),
+                };
+                let key =
+                    WeightKey { ident, k: k as u64, n: n as u64, precision: T::precision() };
+                cache.get::<T>(&key).unwrap_or_else(|| {
+                    let pool = TilePool::pack(&b, k, n, t.nk, t.nn);
+                    cache.insert(key, &pool);
+                    pool
+                })
+            } else {
+                TilePool::pack(&b, k, n, t.nk, t.nn)
+            };
+            self.packed = Some((a_pool, b_pool));
         }
     }
 }
@@ -171,7 +202,7 @@ struct JobDesc {
 /// Per-output-block accumulation state (the "small accumulation buffer
 /// per in-flight block").
 struct BlockAcc<T> {
-    /// Dense `nm×nn` running sum.
+    /// Dense `nm×nn` running sum (recycled through the free-list).
     buf: Vec<T>,
     /// Next `ik` to reduce — enforces the bit-exact reduction order.
     next_ik: usize,
@@ -180,7 +211,9 @@ struct BlockAcc<T> {
 }
 
 /// Reduce one completed partial into its output block, preserving
-/// ascending-`ik` order; write the block back once full.
+/// ascending-`ik` order; write the block back once full. Consumed
+/// partials and retired accumulation buffers return to `free`, closing
+/// the recycle loop with the device workers that take from it.
 #[allow(clippy::too_many_arguments)]
 fn reduce_partial<T: Elem>(
     accs: &mut FxHashMap<(u64, usize, usize), BlockAcc<T>>,
@@ -193,25 +226,48 @@ fn reduce_partial<T: Elem>(
     fid: u64,
     desc: JobDesc,
     partial: Vec<T>,
+    free: &FreeList<T>,
 ) {
     let key = (fid, desc.im, desc.inn);
-    let acc = accs.entry(key).or_insert_with(|| BlockAcc {
-        buf: vec![T::default(); tiler.nm * tiler.nn],
-        next_ik: 0,
-        pending: BTreeMap::new(),
+    let acc = accs.entry(key).or_insert_with(|| {
+        let mut buf = free.take(tiler.nm * tiler.nn);
+        buf.fill(T::default());
+        BlockAcc { buf, next_ik: 0, pending: BTreeMap::new() }
     });
     acc.pending.insert(desc.ik, partial);
     while let Some(p) = acc.pending.remove(&acc.next_ik) {
         for (dst, src) in acc.buf.iter_mut().zip(&p) {
             dst.acc(*src);
         }
+        free.put(p);
         acc.next_ik += 1;
         *done_tiles += 1;
     }
     if acc.next_ik == gk {
         let full = accs.remove(&key).unwrap();
         Tiler::write_block(c, m, n, desc.im, desc.inn, tiler.nm, tiler.nn, &full.buf);
+        free.put(full.buf);
     }
+}
+
+/// Purge one flight's accumulation state, recycling its buffers and
+/// parked partials (cancellation/failure path — without this a
+/// cancellation storm would leak every in-progress block's buffers).
+fn drain_accs<T: Elem>(
+    accs: &mut FxHashMap<(u64, usize, usize), BlockAcc<T>>,
+    fid: u64,
+    free: &FreeList<T>,
+) {
+    accs.retain(|key, acc| {
+        if key.0 != fid {
+            return true;
+        }
+        free.put(std::mem::take(&mut acc.buf));
+        for (_, p) in std::mem::take(&mut acc.pending) {
+            free.put(p);
+        }
+        false
+    });
 }
 
 /// The scheduler state machine (see module docs).
@@ -230,6 +286,10 @@ pub(crate) struct Scheduler {
     pub(crate) policy: Box<dyn SchedPolicy>,
     pub(crate) params: PolicyParams,
     pub(crate) draining: bool,
+    /// Packed-weight LRU (scheduler-thread owned, no locks on lookup).
+    weight_cache: WeightCache,
+    /// Tile-buffer free-lists shared with the device workers.
+    bufs: Arc<BufferPool>,
     flights: FxHashMap<u64, Flight>,
     /// Admission token → flight id (the cancellation route).
     tokens: FxHashMap<u64, u64>,
@@ -252,7 +312,9 @@ impl Scheduler {
         tile_tx: mpsc::Sender<TileDone>,
         depth: usize,
         params: PolicyParams,
+        weight_cache: WeightCache,
     ) -> Self {
+        let bufs = device.buffer_pool();
         Scheduler {
             device,
             tiler_f32,
@@ -264,6 +326,8 @@ impl Scheduler {
             policy: policy::build(&params),
             params,
             draining: false,
+            weight_cache,
+            bufs,
             flights: FxHashMap::default(),
             tokens: FxHashMap::default(),
             descs: FxHashMap::default(),
@@ -426,19 +490,22 @@ impl Scheduler {
             let blk = t / gk;
             let im = blk / gn;
             let inn = blk % gn;
+            let weight_id = f.req.weight_id;
             let payload = match &mut f.data {
                 FlightData::F32(p) => {
-                    p.pack(m, k, n, tiler);
+                    p.pack(m, k, n, tiler, weight_id, &mut self.weight_cache);
+                    let (ap, bp) = p.packed.as_ref().expect("packed on first schedule");
                     TilePayload::F32 {
-                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
-                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
+                        a: ap.tile_ref(im * gk + ik),
+                        b: bp.tile_ref(ik * gn + inn),
                     }
                 }
                 FlightData::I32(p) => {
-                    p.pack(m, k, n, tiler);
+                    p.pack(m, k, n, tiler, weight_id, &mut self.weight_cache);
+                    let (ap, bp) = p.packed.as_ref().expect("packed on first schedule");
                     TilePayload::I32 {
-                        a: Arc::clone(&p.a_tiles[im * gk + ik]),
-                        b: Arc::clone(&p.b_tiles[ik * gn + inn]),
+                        a: ap.tile_ref(im * gk + ik),
+                        b: bp.tile_ref(ik * gn + inn),
                     }
                 }
             };
@@ -467,7 +534,15 @@ impl Scheduler {
         };
         let fid = desc.flight;
         if !self.flights.contains_key(&fid) {
-            return; // flight failed or was cancelled; drop the straggler
+            // Flight failed or was cancelled: the straggler's result is
+            // dead weight, but its buffer recycles.
+            if let Ok(out) = done.result {
+                match out {
+                    TileOutput::F32(v) => self.bufs.fp32.put(v),
+                    TileOutput::I32(v) => self.bufs.int8.put(v),
+                }
+            }
+            return;
         }
         let output = match done.result {
             Ok(o) => o,
@@ -494,6 +569,7 @@ impl Scheduler {
                         fid,
                         desc,
                         partial,
+                        &self.bufs.fp32,
                     );
                     true
                 }
@@ -509,6 +585,7 @@ impl Scheduler {
                         fid,
                         desc,
                         partial,
+                        &self.bufs.int8,
                     );
                     true
                 }
@@ -563,13 +640,14 @@ impl Scheduler {
 
     /// Drop one flight's scheduler state (queues, reduction buffers,
     /// token) and free its admission slot. Tiles already in the window
-    /// are dropped on arrival by `handle_done`'s straggler path.
+    /// are dropped on arrival by `handle_done`'s straggler path (which
+    /// recycles their buffers); reduction state recycles here.
     fn evict(&mut self, fid: u64) -> Option<Flight> {
         let f = self.flights.remove(&fid)?;
         self.tokens.remove(&f.token);
         self.policy.remove(fid);
-        self.accs_f32.retain(|k, _| k.0 != fid);
-        self.accs_i32.retain(|k, _| k.0 != fid);
+        drain_accs(&mut self.accs_f32, fid, &self.bufs.fp32);
+        drain_accs(&mut self.accs_i32, fid, &self.bufs.int8);
         self.gate.release();
         Some(f)
     }

@@ -14,6 +14,12 @@
 //!   the in-flight window, ordered reduction, retirement, cancellation.
 //! * [`crate::coordinator::handle`] — per-request completion delivery
 //!   ([`RequestHandle`]: `wait` / `try_wait` / `cancel`) and callbacks.
+//! * [`crate::coordinator::pool`] — the memory plane: contiguous arena
+//!   tile pools, the byte-budgeted packed-weight cache
+//!   (`ServeConfig::weight_cache_bytes` +
+//!   [`MatMulRequest::with_weight_id`](crate::workloads::MatMulRequest::with_weight_id)),
+//!   and the tile-buffer free-lists that give a long-lived server a
+//!   zero-allocation steady state per tile ([`ServerStats::mem`]).
 //!
 //! # Streaming admission (the open queue)
 //!
@@ -54,8 +60,9 @@ use crate::coordinator::admission::{Admitted, Gate};
 use crate::coordinator::device::{spawn_device_pool, PrecisionInfo, TileDone};
 use crate::coordinator::handle::Reply;
 use crate::coordinator::policy::{PolicyParams, TileCosts};
+use crate::coordinator::pool::{BufferPool, WeightCache, WeightCacheCounters};
 use crate::coordinator::scheduler::{Event, Scheduler, Shared};
-use crate::coordinator::stats::{ClassStats, StatsAgg, WindowOcc};
+use crate::coordinator::stats::{ClassStats, MemPlaneStats, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
@@ -95,6 +102,9 @@ pub struct ServerStats {
     pub mean_in_flight: f64,
     /// Measured peak window occupancy.
     pub max_in_flight: usize,
+    /// Memory-plane counters: packed-weight cache hit/miss/evict and
+    /// tile-buffer recycle/alloc (see [`crate::coordinator::pool`]).
+    pub mem: MemPlaneStats,
 }
 
 /// The serving coordinator (client handle). Cheap to share across
@@ -118,6 +128,10 @@ pub struct MatMulServer {
     queue_depth: usize,
     /// Admission-token mint (cancellation addresses).
     next_token: AtomicU64,
+    /// Weight-cache counters shared with the scheduler's cache.
+    cache_counters: Arc<WeightCacheCounters>,
+    /// Tile-buffer free-lists shared with the device pool + scheduler.
+    bufs: Arc<BufferPool>,
 }
 
 impl MatMulServer {
@@ -161,10 +175,22 @@ impl MatMulServer {
             })
             .map_err(|e| anyhow!("spawning completion forwarder: {e}"))?;
 
-        // Per-precision tile costs fall out of the design's geometry:
-        // this is what makes WeightedFair split device time, not tiles.
-        let costs = TileCosts::from_native(info_f32.native, info_int8.native);
+        // Per-precision tile costs charge the *measured* device period
+        // per tile (falling back to the geometric MAC ratio when the
+        // simulated periods are degenerate): this is what makes
+        // WeightedFair split device time, not tiles — even when
+        // MACs/cycle differ across precisions.
+        let costs = TileCosts::from_periods(
+            info_f32.period_cycles,
+            info_int8.period_cycles,
+            info_f32.native,
+            info_int8.native,
+        );
         let params = PolicyParams::from_config(cfg, costs);
+        let cache_counters = Arc::new(WeightCacheCounters::default());
+        let weight_cache =
+            WeightCache::new(cfg.weight_cache_bytes, Arc::clone(&cache_counters));
+        let bufs = device.buffer_pool();
         let sched = Scheduler::new(
             device,
             Tiler::new(info_f32.native),
@@ -174,6 +200,7 @@ impl MatMulServer {
             tile_tx,
             cfg.pipeline_depth,
             params,
+            weight_cache,
         );
         let sched = std::thread::Builder::new()
             .name("maxeva-scheduler".into())
@@ -198,6 +225,8 @@ impl MatMulServer {
             sched_policy: cfg.policy,
             queue_depth: cfg.queue_depth,
             next_token: AtomicU64::new(0),
+            cache_counters,
+            bufs,
         })
     }
 
@@ -431,6 +460,16 @@ impl MatMulServer {
     pub fn stats(&self) -> ServerStats {
         let stats = self.shared.stats.lock().unwrap();
         let window = self.shared.window.lock().unwrap();
+        let mem = MemPlaneStats {
+            weight_cache_hits: self.cache_counters.hits.load(Ordering::Relaxed),
+            weight_cache_misses: self.cache_counters.misses.load(Ordering::Relaxed),
+            weight_cache_evictions: self.cache_counters.evictions.load(Ordering::Relaxed),
+            weight_cache_bytes: self.cache_counters.bytes.load(Ordering::Relaxed),
+            weight_cache_entries: self.cache_counters.entries.load(Ordering::Relaxed),
+            tile_buffers_recycled: self.bufs.recycled(),
+            tile_buffers_allocated: self.bufs.allocated(),
+            tile_buffers_free: self.bufs.free(),
+        };
         ServerStats {
             requests: stats.count(),
             requests_fp32: stats.count_by(Precision::Fp32),
@@ -446,6 +485,7 @@ impl MatMulServer {
             pipeline_depth: self.pipeline_depth,
             mean_in_flight: window.mean(),
             max_in_flight: window.max(),
+            mem,
         }
     }
 

@@ -41,6 +41,32 @@ impl WindowOcc {
     }
 }
 
+/// Memory-plane snapshot: packed-weight cache counters and tile-buffer
+/// recycling counters (see [`crate::coordinator::pool`]). Hits/misses/
+/// evictions and recycled/allocated are lifetime totals; bytes/entries/
+/// free are current gauges.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemPlaneStats {
+    /// Packed-B pools served from the weight cache (packing skipped).
+    pub weight_cache_hits: u64,
+    /// Lookups that had to pack (cache enabled but key absent).
+    pub weight_cache_misses: u64,
+    /// Entries evicted to respect the byte budget.
+    pub weight_cache_evictions: u64,
+    /// Resident cached bytes (gauge, ≤ `weight_cache_bytes`).
+    pub weight_cache_bytes: u64,
+    /// Resident cached weights (gauge).
+    pub weight_cache_entries: u64,
+    /// Tile-buffer takes served by the free-lists (no heap allocation).
+    pub tile_buffers_recycled: u64,
+    /// Tile-buffer takes that fell through to a fresh heap allocation —
+    /// plateaus once the server reaches its zero-alloc steady state.
+    pub tile_buffers_allocated: u64,
+    /// Buffers currently parked in the free-lists (gauge, bounded by
+    /// [`crate::coordinator::pool::FREE_LIST_CAP`] per precision).
+    pub tile_buffers_free: usize,
+}
+
 /// Completion record for one request.
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {

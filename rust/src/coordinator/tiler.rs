@@ -39,18 +39,43 @@ impl Tiler {
         bh: usize,
         bw: usize,
     ) -> Vec<T> {
-        assert_eq!(src.len(), rows * cols, "matrix shape mismatch");
         let mut out = vec![T::default(); bh * bw];
+        Self::extract_block_into(&mut out, src, rows, cols, bi, bj, bh, bw);
+        out
+    }
+
+    /// [`Tiler::extract_block`] into a caller-provided `bh × bw` buffer
+    /// — the allocation-free form the arena packer
+    /// ([`crate::coordinator::pool::TilePool::pack`]) slices into. Every
+    /// element of `dst` is written (fringe positions get zeros), so
+    /// stale contents are fine.
+    pub fn extract_block_into<T: Copy + Default>(
+        dst: &mut [T],
+        src: &[T],
+        rows: usize,
+        cols: usize,
+        bi: usize,
+        bj: usize,
+        bh: usize,
+        bw: usize,
+    ) {
+        assert_eq!(src.len(), rows * cols, "matrix shape mismatch");
+        assert_eq!(dst.len(), bh * bw, "block shape mismatch");
         let r0 = bi * bh;
         let c0 = bj * bw;
         let rmax = rows.saturating_sub(r0).min(bh);
         let cmax = cols.saturating_sub(c0).min(bw);
         for r in 0..rmax {
             let src_off = (r0 + r) * cols + c0;
-            let dst_off = r * bw;
-            out[dst_off..dst_off + cmax].copy_from_slice(&src[src_off..src_off + cmax]);
+            let drow = &mut dst[r * bw..(r + 1) * bw];
+            drow[..cmax].copy_from_slice(&src[src_off..src_off + cmax]);
+            for v in &mut drow[cmax..] {
+                *v = T::default();
+            }
         }
-        out
+        for v in &mut dst[rmax * bw..] {
+            *v = T::default();
+        }
     }
 
     /// Accumulate a native-size result block into the `rows × cols` output
@@ -107,51 +132,10 @@ impl Tiler {
         }
     }
 
-    /// Pack a row-major `rows × cols` matrix into **tile-major** form: one
-    /// contiguous zero-padded `bh × bw` buffer per block, blocks ordered
-    /// row-major over the `(⌈rows/bh⌉ × ⌈cols/bw⌉)` block grid.
-    ///
-    /// This is the packing step of the serving pipeline (GotoBLAS-style):
-    /// each block is extracted exactly **once** per request, instead of
-    /// once per tile job that touches it.
-    pub fn pack_tile_major<T: Copy + Default>(
-        src: &[T],
-        rows: usize,
-        cols: usize,
-        bh: usize,
-        bw: usize,
-    ) -> Vec<Vec<T>> {
-        let gr = rows.div_ceil(bh);
-        let gc = cols.div_ceil(bw);
-        let mut tiles = Vec::with_capacity(gr * gc);
-        for bi in 0..gr {
-            for bj in 0..gc {
-                tiles.push(Self::extract_block(src, rows, cols, bi, bj, bh, bw));
-            }
-        }
-        tiles
-    }
-
-    /// Inverse of [`Tiler::pack_tile_major`]: reassemble the row-major
-    /// `rows × cols` matrix from tile-major blocks, dropping the padding.
-    pub fn unpack_tile_major<T: Copy + Default>(
-        tiles: &[Vec<T>],
-        rows: usize,
-        cols: usize,
-        bh: usize,
-        bw: usize,
-    ) -> Vec<T> {
-        let gr = rows.div_ceil(bh);
-        let gc = cols.div_ceil(bw);
-        assert_eq!(tiles.len(), gr * gc, "tile count mismatch");
-        let mut out = vec![T::default(); rows * cols];
-        for bi in 0..gr {
-            for bj in 0..gc {
-                Self::write_block(&mut out, rows, cols, bi, bj, bh, bw, &tiles[bi * gc + bj]);
-            }
-        }
-        out
-    }
+    // Tile-major packing lives in the memory plane since PR 4: see
+    // [`crate::coordinator::pool::TilePool::pack`] / `unpack` — one
+    // contiguous arena per matrix instead of the former
+    // `pack_tile_major`'s Vec-per-tile.
 
     /// Accumulate for i32 outputs (int8 designs accumulate int32).
     pub fn accumulate_block_i32(
@@ -182,6 +166,17 @@ impl Tiler {
 /// Reference row-major matmul used by tests and the verification path.
 pub fn matmul_ref_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; m * n];
+    matmul_ref_f32_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// [`matmul_ref_f32`] into a caller-provided `m × n` output slice — the
+/// allocation-free form the recycling device backend uses (the buffer
+/// comes from a [`crate::coordinator::pool::FreeList`]). `c` is fully
+/// overwritten; stale contents are fine.
+pub fn matmul_ref_f32_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    c.fill(0.0);
     for i in 0..m {
         for kk in 0..k {
             let av = a[i * k + kk];
@@ -195,7 +190,6 @@ pub fn matmul_ref_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec
             }
         }
     }
-    c
 }
 
 /// Reference row-major matmul for the int8 path: int8-range operands
@@ -205,6 +199,15 @@ pub fn matmul_ref_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec
 /// exactly, not just within a tolerance).
 pub fn matmul_ref_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
     let mut c = vec![0i32; m * n];
+    matmul_ref_i32_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// [`matmul_ref_i32`] into a caller-provided `m × n` output slice (see
+/// [`matmul_ref_f32_into`]). `c` is fully overwritten.
+pub fn matmul_ref_i32_into(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    c.fill(0);
     for i in 0..m {
         for kk in 0..k {
             let av = a[i * k + kk];
@@ -218,7 +221,6 @@ pub fn matmul_ref_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec
             }
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -289,53 +291,39 @@ mod tests {
         assert_eq!(t.grid(2048, 2048, 2048), (5, 16, 11));
     }
 
+    // Tile-major pack/unpack round-trip tests moved with the packing
+    // code to `coordinator::pool` (TilePool).
+
     #[test]
-    fn pack_unpack_roundtrip_exact_fit() {
-        // 4×6 matrix, 2×3 blocks: packing divides exactly, no padding.
-        let src: Vec<f32> = (0..24).map(|x| x as f32).collect();
-        let tiles = Tiler::pack_tile_major(&src, 4, 6, 2, 3);
-        assert_eq!(tiles.len(), 4);
-        assert_eq!(tiles[0], vec![0.0, 1.0, 2.0, 6.0, 7.0, 8.0]);
-        assert_eq!(Tiler::unpack_tile_major(&tiles, 4, 6, 2, 3), src);
+    fn extract_block_into_overwrites_stale_contents() {
+        // The recycling path hands extract_block_into buffers with
+        // stale data; every element — fringe padding included — must
+        // be written.
+        let src: Vec<f32> = (1..=9).map(|x| x as f32).collect();
+        let mut dst = vec![f32::NAN; 4];
+        Tiler::extract_block_into(&mut dst, &src, 3, 3, 1, 1, 2, 2);
+        assert_eq!(dst, vec![9.0, 0.0, 0.0, 0.0]);
+        // Fully out-of-range block: all zeros, no stale NaNs.
+        let mut dst = vec![f32::NAN; 4];
+        Tiler::extract_block_into(&mut dst, &src, 3, 3, 5, 5, 2, 2);
+        assert_eq!(dst, vec![0.0; 4]);
     }
 
     #[test]
-    fn pack_unpack_roundtrip_random_shapes() {
-        // Property: unpack(pack(x)) == x for shapes with and without
-        // fringe padding, and every padded element is zero.
-        let mut rng = XorShift64::new(7);
-        for _ in 0..20 {
-            let rows = rng.gen_range(1, 40) as usize;
-            let cols = rng.gen_range(1, 40) as usize;
-            let bh = rng.gen_range(1, 9) as usize;
-            let bw = rng.gen_range(1, 9) as usize;
-            let src: Vec<f32> = (0..rows * cols)
-                .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
-                .collect();
-            let tiles = Tiler::pack_tile_major(&src, rows, cols, bh, bw);
-            assert_eq!(tiles.len(), rows.div_ceil(bh) * cols.div_ceil(bw));
-            let back = Tiler::unpack_tile_major(&tiles, rows, cols, bh, bw);
-            assert_eq!(back, src, "{rows}x{cols} in {bh}x{bw} blocks");
-        }
-    }
+    fn matmul_ref_into_matches_wrapper_over_stale_buffers() {
+        let mut rng = XorShift64::new(21);
+        let (m, k, n) = (7usize, 9usize, 5usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let mut c = vec![f32::NAN; m * n];
+        matmul_ref_f32_into(&mut c, &a, &b, m, k, n);
+        assert_eq!(c, matmul_ref_f32(&a, &b, m, k, n), "stale contents must not leak");
 
-    #[test]
-    fn packed_tiles_match_per_tile_extraction() {
-        // The packed pool must hold exactly what extract_block would
-        // produce on demand — the zero-copy pipeline depends on it.
-        let mut rng = XorShift64::new(11);
-        let (rows, cols, bh, bw) = (13usize, 10usize, 4usize, 3usize);
-        let src: Vec<f32> = (0..rows * cols)
-            .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
-            .collect();
-        let tiles = Tiler::pack_tile_major(&src, rows, cols, bh, bw);
-        let gc = cols.div_ceil(bw);
-        for bi in 0..rows.div_ceil(bh) {
-            for bj in 0..gc {
-                let want = Tiler::extract_block(&src, rows, cols, bi, bj, bh, bw);
-                assert_eq!(tiles[bi * gc + bj], want, "block ({bi},{bj})");
-            }
-        }
+        let ai: Vec<i32> = (0..m * k).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+        let bi: Vec<i32> = (0..k * n).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+        let mut ci = vec![i32::MIN; m * n];
+        matmul_ref_i32_into(&mut ci, &ai, &bi, m, k, n);
+        assert_eq!(ci, matmul_ref_i32(&ai, &bi, m, k, n));
     }
 
     #[test]

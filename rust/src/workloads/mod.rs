@@ -23,24 +23,40 @@ pub struct MatMulRequest {
     /// out-of-range classes clamp to the server's configured class
     /// count). Ignored by the default FIFO policy.
     pub class: u8,
+    /// Optional identity of the B (weight) operand for the server's
+    /// packed-weight cache: requests sharing a `weight_id` (and shape
+    /// and precision) assert byte-identical B matrices, so the server
+    /// can reuse the packed tile pool without rehashing the operand.
+    /// `None` falls back to a content fingerprint when the cache is
+    /// enabled (`ServeConfig::weight_cache_bytes > 0`); with the cache
+    /// off the field is ignored entirely.
+    pub weight_id: Option<u64>,
 }
 
 impl MatMulRequest {
     /// An fp32 request (the historical default), class 0.
     pub fn f32(id: u64, m: u64, k: u64, n: u64) -> Self {
-        MatMulRequest { id, m, k, n, precision: Precision::Fp32, class: 0 }
+        MatMulRequest { id, m, k, n, precision: Precision::Fp32, class: 0, weight_id: None }
     }
 
     /// An int8 request: operands are int8-range values carried as `i32`
     /// (matching [`crate::runtime::Executable::run_i32`]), results are
     /// exact i32 accumulations. Class 0.
     pub fn int8(id: u64, m: u64, k: u64, n: u64) -> Self {
-        MatMulRequest { id, m, k, n, precision: Precision::Int8, class: 0 }
+        MatMulRequest { id, m, k, n, precision: Precision::Int8, class: 0, weight_id: None }
     }
 
     /// The same request in priority class `class`.
     pub fn with_class(mut self, class: u8) -> Self {
         self.class = class;
+        self
+    }
+
+    /// The same request tagging its B operand with a weight identity
+    /// for the server's packed-weight cache (see
+    /// [`MatMulRequest::weight_id`]).
+    pub fn with_weight_id(mut self, weight_id: u64) -> Self {
+        self.weight_id = Some(weight_id);
         self
     }
 
@@ -339,11 +355,22 @@ mod tests {
     fn class_builder_and_default() {
         let r = MatMulRequest::f32(1, 8, 8, 8);
         assert_eq!(r.class, 0);
+        assert_eq!(r.weight_id, None);
         let hi = r.with_class(3);
         assert_eq!(hi.class, 3);
         // Everything else is untouched.
         assert_eq!((hi.id, hi.m, hi.k, hi.n, hi.precision), (1, 8, 8, 8, Precision::Fp32));
+        assert_eq!(hi.weight_id, None);
         assert_eq!(MatMulRequest::int8(2, 4, 4, 4).class, 0);
+    }
+
+    #[test]
+    fn weight_id_builder() {
+        let r = MatMulRequest::int8(5, 8, 16, 8).with_weight_id(42).with_class(1);
+        assert_eq!(r.weight_id, Some(42));
+        // Builder order is irrelevant and nothing else moves.
+        assert_eq!((r.id, r.m, r.k, r.n, r.class), (5, 8, 16, 8, 1));
+        assert_eq!(r.precision, Precision::Int8);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Memory-plane properties through the full server stack (pure-Rust
+//! reference backend, no artifacts needed):
+//!
+//! * the contiguous [`TilePool`] arena holds exactly what per-tile
+//!   `extract_block` extraction would produce (the packing layer is a
+//!   pure allocation strength-reduction, never a layout change);
+//! * outputs are **bit-identical across every `weight_cache_bytes`
+//!   setting** — a cache hit serves the same packed bytes packing would
+//!   have produced;
+//! * the weight cache obeys its byte budget with LRU eviction, counts
+//!   hits/misses/evictions, and the fingerprint fallback matches
+//!   identical contents without explicit ids;
+//! * the serving hot loop reaches a **zero-allocation steady state**:
+//!   the free-list `allocated` counter plateaus while `recycled` keeps
+//!   growing;
+//! * free-lists stay bounded under a cancellation storm (the
+//!   recycle-leak probe).
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::pool::TilePool;
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::coordinator::tiler::Tiler;
+use maxeva::coordinator::FREE_LIST_CAP;
+use maxeva::util::prng::XorShift64;
+use maxeva::workloads::{materialize_mixed, MatMulRequest, Operands};
+
+/// Tiny design (native 8×16×8 in both precisions) so tile grids are
+/// large and cheap on the scalar reference backend.
+fn small_cfg(workers: usize, depth: usize, weight_cache_bytes: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = depth;
+    cfg.weight_cache_bytes = weight_cache_bytes;
+    cfg
+}
+
+fn f32_ops(req: &MatMulRequest, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    match materialize_mixed(&[*req], seed).remove(0).1 {
+        Operands::F32 { a, b } => (a, b),
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn tile_pool_equals_per_tile_extraction() {
+    // Property over random shapes (fp32 and the i32 carrier): every
+    // arena tile equals the on-demand extract_block, and unpack drops
+    // the padding exactly.
+    let mut rng = XorShift64::new(0x9001);
+    for _ in 0..15 {
+        let rows = rng.gen_range(1, 50) as usize;
+        let cols = rng.gen_range(1, 50) as usize;
+        let bh = rng.gen_range(1, 10) as usize;
+        let bw = rng.gen_range(1, 10) as usize;
+        let src_f: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let src_i: Vec<i32> = (0..rows * cols)
+            .map(|_| rng.gen_range(0, 256) as i32 - 128)
+            .collect();
+        let pf = TilePool::pack(&src_f, rows, cols, bh, bw);
+        let pi = TilePool::pack(&src_i, rows, cols, bh, bw);
+        let gc = cols.div_ceil(bw);
+        for bi in 0..rows.div_ceil(bh) {
+            for bj in 0..gc {
+                assert_eq!(
+                    pf.tile(bi * gc + bj),
+                    &Tiler::extract_block(&src_f, rows, cols, bi, bj, bh, bw)[..],
+                    "f32 block ({bi},{bj}) of {rows}x{cols} in {bh}x{bw}"
+                );
+                assert_eq!(
+                    pi.tile(bi * gc + bj),
+                    &Tiler::extract_block(&src_i, rows, cols, bi, bj, bh, bw)[..],
+                    "i32 block ({bi},{bj})"
+                );
+            }
+        }
+        assert_eq!(pf.unpack(rows, cols, bh, bw), src_f);
+        assert_eq!(pi.unpack(rows, cols, bh, bw), src_i);
+    }
+}
+
+#[test]
+fn outputs_bit_identical_across_weight_cache_budgets() {
+    // The acceptance property: weight_cache_bytes is a pure performance
+    // knob. A mixed fp32/int8 stream with heavy weight reuse (shared Bs
+    // under explicit ids AND repeated anonymous contents for the
+    // fingerprint path) produces bit-identical outputs with the cache
+    // off, tiny (thrashing), and ample.
+    let reqs: Vec<MatMulRequest> = vec![
+        MatMulRequest::f32(0, 19, 33, 11).with_weight_id(1),
+        MatMulRequest::int8(1, 8, 33, 11).with_weight_id(2),
+        MatMulRequest::f32(2, 30, 33, 11).with_weight_id(1),
+        MatMulRequest::f32(3, 9, 33, 11), // anonymous → fingerprint
+        MatMulRequest::f32(4, 9, 33, 11),
+        MatMulRequest::int8(5, 23, 33, 11).with_weight_id(2),
+    ];
+    // Shared weights per id / per anonymous pair, distinct activations.
+    let (_, b_w1) = f32_ops(&reqs[0], 100);
+    let (_, b_anon) = f32_ops(&reqs[3], 101);
+    let b_w2 = match materialize_mixed(&[reqs[1]], 102).remove(0).1 {
+        Operands::I32 { b, .. } => b,
+        _ => unreachable!(),
+    };
+    let batch: Vec<(MatMulRequest, Operands)> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let ops = match materialize_mixed(&[*r], 200 + i as u64).remove(0).1 {
+                Operands::F32 { a, .. } => {
+                    let b = if r.weight_id == Some(1) { b_w1.clone() } else { b_anon.clone() };
+                    Operands::F32 { a, b }
+                }
+                Operands::I32 { a, .. } => Operands::I32 { a, b: b_w2.clone() },
+            };
+            (*r, ops)
+        })
+        .collect();
+    let serve = |cache_bytes: usize| {
+        let mut server = MatMulServer::start(&small_cfg(2, 4, cache_bytes)).unwrap();
+        let out = server.run_batch_mixed(batch.clone()).unwrap();
+        let mem = server.stats().mem;
+        server.shutdown();
+        (out, mem)
+    };
+    let (baseline, mem_off) = serve(0);
+    assert_eq!(mem_off.weight_cache_hits + mem_off.weight_cache_misses, 0, "off = silent");
+    for cache_bytes in [600, 1 << 20] {
+        let (out, _) = serve(cache_bytes);
+        assert_eq!(out, baseline, "cache_bytes = {cache_bytes} diverged");
+    }
+    // With an ample budget the reuse pattern actually hits.
+    let (_, mem_on) = serve(1 << 20);
+    assert!(
+        mem_on.weight_cache_hits >= 2,
+        "id-reuse and fingerprint-reuse must hit: {mem_on:?}"
+    );
+}
+
+#[test]
+fn weight_cache_respects_byte_budget_with_lru_eviction() {
+    // Native (8,16,8): a 16×8 B packs to exactly one 16×8 tile =
+    // 512 bytes. Budget 512 holds one packed weight; alternating two
+    // distinct weights evicts on every insert and never hits.
+    let shape = MatMulRequest::f32(0, 8, 16, 8);
+    let (a1, b1) = f32_ops(&shape, 1);
+    let (a2, b2) = f32_ops(&shape, 2);
+    let serve_seq = |cache_bytes: usize, rounds: usize| {
+        let server = MatMulServer::start(&small_cfg(1, 1, cache_bytes)).unwrap();
+        for i in 0..rounds {
+            for (wid, a, b) in [(1u64, &a1, &b1), (2, &a2, &b2)] {
+                let req = MatMulRequest::f32((i * 2 + wid as usize) as u64, 8, 16, 8)
+                    .with_weight_id(wid);
+                // Sequential submit+wait keeps the pack order (and so
+                // the hit/evict sequence) deterministic.
+                server
+                    .submit(req, Operands::F32 { a: a.clone(), b: b.clone() })
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+            }
+        }
+        let mem = server.stats().mem;
+        server.shutdown();
+        mem
+    };
+    // Thrashing budget: w1 miss+insert, w2 evicts w1, w1 evicts w2, …
+    let mem = serve_seq(512, 2);
+    assert_eq!(mem.weight_cache_hits, 0, "budget for one weight cannot serve two");
+    assert_eq!(mem.weight_cache_misses, 4);
+    assert_eq!(mem.weight_cache_evictions, 3);
+    assert!(mem.weight_cache_bytes <= 512, "budget is a hard cap: {mem:?}");
+    assert_eq!(mem.weight_cache_entries, 1);
+    // Ample budget: both weights stay resident after the cold round.
+    let mem = serve_seq(4096, 2);
+    assert_eq!(mem.weight_cache_misses, 2);
+    assert_eq!(mem.weight_cache_hits, 2);
+    assert_eq!(mem.weight_cache_evictions, 0);
+    assert_eq!(mem.weight_cache_entries, 2);
+    assert_eq!(mem.weight_cache_bytes, 1024);
+}
+
+#[test]
+fn fingerprint_fallback_matches_identical_contents() {
+    // No weight_id anywhere: byte-identical B matrices must still hit
+    // through the content fingerprint, and distinct Bs must not.
+    let shape = MatMulRequest::f32(0, 8, 32, 8);
+    let (a1, b_shared) = f32_ops(&shape, 7);
+    let (a2, b_other) = f32_ops(&shape, 8);
+    let server = MatMulServer::start(&small_cfg(1, 1, 1 << 20)).unwrap();
+    for (i, b) in [&b_shared, &b_other, &b_shared, &b_shared].iter().enumerate() {
+        let a = if i % 2 == 0 { a1.clone() } else { a2.clone() };
+        server
+            .submit(
+                MatMulRequest::f32(i as u64, 8, 32, 8),
+                Operands::F32 { a, b: (*b).clone() },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    let mem = server.stats().mem;
+    assert_eq!(mem.weight_cache_misses, 2, "two distinct contents: {mem:?}");
+    assert_eq!(mem.weight_cache_hits, 2, "repeated contents hit by fingerprint");
+    server.shutdown();
+}
+
+#[test]
+fn steady_state_reaches_zero_tile_allocations() {
+    // The headline acceptance criterion: per-tile heap allocations in
+    // the serving hot loop drop to O(1). After a short warmup the
+    // free-list `allocated` counter must stop moving entirely while
+    // requests keep flowing (every take is served by recycling).
+    let server = MatMulServer::start(&small_cfg(1, 1, 1 << 20)).unwrap();
+    let shape = MatMulRequest::f32(0, 16, 32, 16); // 2×2×2 grid → 8 tiles
+    let (a, b) = f32_ops(&shape, 42);
+    let run_one = |id: u64| {
+        server
+            .submit(
+                MatMulRequest::f32(id, 16, 32, 16).with_weight_id(9),
+                Operands::F32 { a: a.clone(), b: b.clone() },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+    };
+    for id in 0..4 {
+        run_one(id);
+    }
+    let warm = server.stats().mem;
+    assert!(warm.tile_buffers_allocated > 0, "warmup must have allocated something");
+    for id in 4..12 {
+        run_one(id);
+    }
+    let steady = server.stats().mem;
+    assert_eq!(
+        steady.tile_buffers_allocated, warm.tile_buffers_allocated,
+        "steady state must allocate zero tile buffers: {steady:?}"
+    );
+    assert!(
+        steady.tile_buffers_recycled >= warm.tile_buffers_recycled + 8,
+        "recycling must carry the steady-state load: {steady:?}"
+    );
+    // And the weight cache carried the packing: one miss, then hits.
+    assert_eq!(steady.weight_cache_misses, 1);
+    assert_eq!(steady.weight_cache_hits, 11);
+    server.shutdown();
+}
+
+#[test]
+fn free_lists_stay_bounded_under_cancellation_storm() {
+    // The recycle-leak probe. Every request in the storm is cancelled
+    // mid-flight (8192 tiles each — completion before the cancel is
+    // impossible), so the ONLY route a buffer has back to the
+    // free-lists is the cancellation path itself: the straggler
+    // recycle in `handle_done` and the `drain_accs` sweep in `evict`.
+    // A regression that reverts either to plain dropping makes
+    // `tile_buffers_free` stay at zero and fails the probe below; the
+    // cap bound pins the other failure mode (an unbounded list).
+    let server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let mut cancelled = 0usize;
+    for round in 0..3u64 {
+        let mut handles = Vec::new();
+        for i in 0..10u64 {
+            // 128×512×128 → 8192 native tiles: tens of milliseconds on
+            // the scalar backend (same margin tests/cancellation.rs
+            // relies on), so a 5 ms-old flight is nowhere near done.
+            let req = MatMulRequest::f32(round * 100 + i, 128, 512, 128);
+            let (a, b) = f32_ops(&req, 900 + i);
+            handles.push(server.submit(req, Operands::F32 { a, b }).unwrap());
+        }
+        // Let some tiles complete and reduce so per-block accumulation
+        // buffers are mid-flight when the cancels land.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        for h in &handles {
+            h.cancel();
+        }
+        for h in handles {
+            let err = h.wait().expect_err("8192-tile flight cannot finish in 5 ms");
+            assert!(err.downcast_ref::<maxeva::coordinator::Cancelled>().is_some(), "{err}");
+            cancelled += 1;
+        }
+    }
+    // Let the last in-flight stragglers drain back into the free-lists.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let mem = server.stats().mem;
+    assert_eq!(cancelled, 30);
+    assert_eq!(server.stats().cancelled, 30, "no storm request may complete");
+    assert!(
+        mem.tile_buffers_free > 0,
+        "an all-cancelled storm must recycle through the cancel paths: {mem:?}"
+    );
+    assert!(
+        mem.tile_buffers_free <= 2 * FREE_LIST_CAP,
+        "free-lists must stay bounded (≤ cap per precision): {mem:?}"
+    );
+    // Post-storm sanity: correct results, and the storm's buffers are
+    // actually reused.
+    let probe = MatMulRequest::f32(999, 16, 16, 16);
+    let (a, b) = f32_ops(&probe, 77);
+    let want = maxeva::coordinator::tiler::matmul_ref_f32(&a, &b, 16, 16, 16);
+    let got = server
+        .submit(probe, Operands::F32 { a, b })
+        .unwrap()
+        .wait()
+        .unwrap()
+        .into_f32()
+        .unwrap();
+    for (x, y) in got.iter().zip(&want) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+    let after = server.stats().mem;
+    assert!(after.tile_buffers_recycled > mem.tile_buffers_recycled);
+    server.shutdown();
+}

@@ -5,8 +5,10 @@
 //!   tile issue, never numerics (reduction order is pinned per flight);
 //! * `WeightedFair` keeps fp32 latency bounded while a heavy int8
 //!   stream saturates the window (the acceptance property: int8 tiles
-//!   are 4× fp32 tiles on paper-kernel geometry, so cost-blind
-//!   round-robin hands one int8 stream ~80% of the device);
+//!   cost more device cycles than fp32 tiles — charged as measured
+//!   per-precision periods since PR 4, geometric MACs as fallback — so
+//!   a cost-blind round-robin hands the int8 stream most of the
+//!   device);
 //! * the policy can be swapped on a live server without disturbing
 //!   open flights.
 
@@ -17,8 +19,9 @@ use maxeva::workloads::{materialize_mixed, MatMulRequest};
 use std::time::Duration;
 
 /// Paper kernels on a small 2×1×2 array: native fp32 tile 64×32×64,
-/// native int8 tile 64×128×64 — the real 4× geometric cost ratio, at
-/// sizes the scalar reference backend chews through in ~0.1 ms.
+/// native int8 tile 64×128×64 — distinct per-precision tile costs
+/// (simulated periods, 4× geometric MACs as the fallback), at sizes
+/// the scalar reference backend chews through in ~0.1 ms.
 fn fair_cfg(policy: PolicyKind) -> ServeConfig {
     let mut design = DesignConfig::flagship(Precision::Fp32);
     (design.x, design.y, design.z) = (2, 1, 2);
