@@ -232,6 +232,48 @@ fn main() {
     );
     cached.shutdown();
 
+    // Workload 6: parallel operand packing (the PR 5 host compute
+    // plane). The same tall-K batch is served by a serial-packing
+    // server and a `pack_workers = 4` server: arena extraction fans out
+    // across threads, the new `ServerStats::pack` counters attribute
+    // the packing time, and outputs stay bit-identical — parallel
+    // packing is a pure latency knob.
+    println!("\n[6] parallel operand packing: pack_workers 1 vs 4");
+    let (qm, qk, qn) = (128u64, 2048u64, 512u64);
+    let pack_reqs: Vec<MatMulRequest> = (0..3)
+        .map(|i| MatMulRequest::f32(1100 + i, qm, qk, qn))
+        .collect();
+    let pack_batch = materialize_batch(&pack_reqs, 6001);
+    let mut walls = Vec::new();
+    let mut outs_by_leg = Vec::new();
+    for pack_workers in [1usize, 4] {
+        let mut leg_cfg = cfg.clone();
+        leg_cfg.pack_workers = pack_workers;
+        let mut leg = MatMulServer::start(&leg_cfg).expect("packing server");
+        let t0 = std::time::Instant::now();
+        let outs = leg.run_batch(pack_batch.clone()).expect("packing batch");
+        let wall = t0.elapsed().as_secs_f64();
+        let p = leg.stats().pack;
+        println!(
+            "    pack_workers {}: batch wall {:.3} s · {} matrices packed \
+             ({} parallel) · {:.1} ms packing time",
+            leg.pack_workers(),
+            wall,
+            p.matrices_packed,
+            p.parallel_packs,
+            p.pack_time_s * 1e3
+        );
+        walls.push(wall);
+        outs_by_leg.push(outs);
+        leg.shutdown();
+    }
+    assert_eq!(outs_by_leg[0], outs_by_leg[1], "parallel packing must not change outputs");
+    println!(
+        "    {qm}x{qk}x{qn} ×{}: wall {:.2}× with parallel packing — outputs bit-identical",
+        pack_reqs.len(),
+        walls[0] / walls[1].max(1e-12)
+    );
+
     let stats = server.stats();
     println!("\n==== serving report ====");
     println!("requests        : {}", stats.requests);

@@ -482,6 +482,80 @@ fn main() {
         }
     }
 
+    common::banner("packing parallelism: pack_workers 1 vs 4 (PR 5 compute plane)");
+    // Tall-K requests make operand packing a visible slice of request
+    // latency: A is 1×gk tiles, B gk×gn — both grids big enough for
+    // `pack_with` to fan out. Fresh servers per leg (pack_workers is a
+    // start-time knob); outputs must stay bit-identical since parallel
+    // packing writes the same bytes from disjoint threads.
+    let pack_fan = 4usize;
+    let (pm, pk, pn) = if quick { (128u64, 1536u64, 512u64) } else { (192, 3072, 768) };
+    let n_pack_reqs = if quick { 2usize } else { 3 };
+    let pack_reqs: Vec<MatMulRequest> = (0..n_pack_reqs)
+        .map(|i| MatMulRequest::f32(1200 + i as u64, pm, pk, pn))
+        .collect();
+    let pack_batch = materialize_batch(&pack_reqs, 5150);
+    let mut pack_walls = Vec::new();
+    let mut pack_leg_times = Vec::new();
+    let mut pack_outs = Vec::new();
+    let mut pack_runs: Vec<Json> = Vec::new();
+    for workers in [1usize, pack_fan] {
+        let mut leg_cfg = cfg.clone();
+        leg_cfg.pack_workers = workers;
+        let mut leg = MatMulServer::start(&leg_cfg).expect("packing-parallelism server");
+        // Untimed warmup (free-lists, allocator); counters are lifetime
+        // totals, so snapshot before the timed pass and diff.
+        let _ = leg.run_batch(pack_batch.clone()).unwrap();
+        let warm_pack_s = leg.stats().pack.pack_time_s;
+        let t0 = Instant::now();
+        let outs = leg.run_batch(pack_batch.clone()).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let p = leg.stats().pack;
+        let timed_pack_s = p.pack_time_s - warm_pack_s;
+        println!(
+            "  pack_workers {workers}: wall {wall:.3} s · packing {:.1} ms in timed pass \
+             ({} matrices packed, {} parallel packs over the server's life)",
+            timed_pack_s * 1e3,
+            p.matrices_packed,
+            p.parallel_packs
+        );
+        let mut r = BTreeMap::new();
+        r.insert("pack_workers".into(), Json::Num(workers as f64));
+        r.insert("wall_s".into(), Json::Num(wall));
+        r.insert("pack_time_s".into(), Json::Num(timed_pack_s));
+        r.insert("parallel_packs".into(), Json::Num(p.parallel_packs as f64));
+        pack_runs.push(Json::Obj(r));
+        pack_walls.push(wall);
+        pack_leg_times.push(timed_pack_s);
+        pack_outs.push(outs);
+        leg.shutdown();
+    }
+    let pack_identical = pack_outs[0] == pack_outs[1];
+    println!(
+        "  pack-time speedup {:.2}× · wall speedup {:.2}× · outputs bit-identical: \
+         {pack_identical}",
+        pack_leg_times[0] / pack_leg_times[1].max(1e-12),
+        pack_walls[0] / pack_walls[1].max(1e-12)
+    );
+    assert!(
+        pack_identical,
+        "parallel packing must be bit-identical to serial packing"
+    );
+    {
+        let mut o = BTreeMap::new();
+        o.insert("label".into(), Json::Str("packing_parallelism".into()));
+        o.insert("shape".into(), Json::Str(format!("{pm}x{pk}x{pn}")));
+        o.insert("requests".into(), Json::Num(n_pack_reqs as f64));
+        o.insert("runs".into(), Json::Arr(pack_runs));
+        o.insert(
+            "pack_time_speedup".into(),
+            Json::Num(pack_leg_times[0] / pack_leg_times[1].max(1e-12)),
+        );
+        o.insert("wall_speedup".into(), Json::Num(pack_walls[0] / pack_walls[1].max(1e-12)));
+        o.insert("bit_identical".into(), Json::Bool(pack_identical));
+        json_sections.push(Json::Obj(o));
+    }
+
     common::banner("open-loop latency under load: heavy int8 stream + fp32 trickle");
     let (n_heavy, n_trickle) = if quick { (4usize, 6usize) } else { (10, 16) };
     // Class 1: saturating int8 bulk (32×1024×32 → 8 heavy tiles each).

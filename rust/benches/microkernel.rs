@@ -1,0 +1,244 @@
+//! Bench: the host compute plane — GFLOP/s (fp32) and GOP/s (int8-path
+//! i32) of the register-tiled GEMM microkernels across MR×NR tile
+//! geometries, against the naive scalar `ikj` loop they replaced.
+//!
+//! Every timed variant is first checked **bit-identical** to the naive
+//! oracle on its shape (the compute plane's contract), so the sweep can
+//! never silently trade correctness for speed. The dispatched default
+//! geometry ([`MR_F32`]×[`NR_F32`] / [`MR_I32`]×[`NR_I32`]) is marked
+//! in the output; if another geometry consistently wins on the CI
+//! hardware, that's the signal to retune the dispatch constants.
+//!
+//!     cargo bench --bench microkernel -- [--quick] [--json PATH]
+//!
+//! `--quick` shrinks repetitions to CI-smoke scale; `--json PATH`
+//! writes the sweep as a JSON report (uploaded as the
+//! `microkernel-gflops` workflow artifact by the `bench-smoke` CI job).
+
+mod common;
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::json::Json;
+use maxeva::coordinator::microkernel::{
+    matmul_mk, matmul_naive_f32_into, matmul_naive_i32_into, micro_geom,
+};
+use maxeva::util::prng::XorShift64;
+use std::collections::BTreeMap;
+
+/// The geometries the sweep instantiates (const generics, so the list
+/// is fixed at compile time). `(1, 8)` is the degenerate near-scalar
+/// row kernel; the rest trade accumulator rows against row width.
+const GEOMETRIES: [(usize, usize); 6] = [(1, 8), (2, 8), (4, 8), (4, 16), (8, 8), (8, 16)];
+
+fn run_f32(
+    geom: (usize, usize),
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match geom {
+        (1, 8) => matmul_mk::<f32, 1, 8>(c, a, b, m, k, n),
+        (2, 8) => matmul_mk::<f32, 2, 8>(c, a, b, m, k, n),
+        (4, 8) => matmul_mk::<f32, 4, 8>(c, a, b, m, k, n),
+        (4, 16) => matmul_mk::<f32, 4, 16>(c, a, b, m, k, n),
+        (8, 8) => matmul_mk::<f32, 8, 8>(c, a, b, m, k, n),
+        (8, 16) => matmul_mk::<f32, 8, 16>(c, a, b, m, k, n),
+        other => panic!("geometry {other:?} not instantiated"),
+    }
+}
+
+fn run_i32(
+    geom: (usize, usize),
+    c: &mut [i32],
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match geom {
+        (1, 8) => matmul_mk::<i32, 1, 8>(c, a, b, m, k, n),
+        (2, 8) => matmul_mk::<i32, 2, 8>(c, a, b, m, k, n),
+        (4, 8) => matmul_mk::<i32, 4, 8>(c, a, b, m, k, n),
+        (4, 16) => matmul_mk::<i32, 4, 16>(c, a, b, m, k, n),
+        (8, 8) => matmul_mk::<i32, 8, 8>(c, a, b, m, k, n),
+        (8, 16) => matmul_mk::<i32, 8, 16>(c, a, b, m, k, n),
+        other => panic!("geometry {other:?} not instantiated"),
+    }
+}
+
+struct Row {
+    label: String,
+    mr: usize,
+    nr: usize,
+    gops: f64,
+    speedup_vs_naive: f64,
+    dispatched: bool,
+}
+
+fn row_json(shape: (usize, usize, usize), precision: &str, r: &Row) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("precision".into(), Json::Str(precision.into()));
+    o.insert("m".into(), Json::Num(shape.0 as f64));
+    o.insert("k".into(), Json::Num(shape.1 as f64));
+    o.insert("n".into(), Json::Num(shape.2 as f64));
+    o.insert("kernel".into(), Json::Str(r.label.clone()));
+    o.insert("mr".into(), Json::Num(r.mr as f64));
+    o.insert("nr".into(), Json::Num(r.nr as f64));
+    o.insert("gops".into(), Json::Num(r.gops));
+    o.insert("speedup_vs_naive".into(), Json::Num(r.speedup_vs_naive));
+    o.insert("dispatched".into(), Json::Bool(r.dispatched));
+    Json::Obj(o)
+}
+
+/// Sweep one shape in one element type; returns the report rows
+/// (naive first).
+fn sweep<T, FNaive, FGeom>(
+    title: &str,
+    shape: (usize, usize, usize),
+    warmup: usize,
+    iters: usize,
+    a: &[T],
+    b: &[T],
+    mut naive: FNaive,
+    mut geom_run: FGeom,
+    dispatched: (usize, usize),
+) -> Vec<Row>
+where
+    T: Copy + Default + PartialEq + std::fmt::Debug,
+    FNaive: FnMut(&mut [T], &[T], &[T], usize, usize, usize),
+    FGeom: FnMut((usize, usize), &mut [T], &[T], &[T], usize, usize, usize),
+{
+    let (m, k, n) = shape;
+    common::banner(title);
+    let ops = 2.0 * m as f64 * k as f64 * n as f64;
+    let mut c = vec![T::default(); m * n];
+    let mut want = vec![T::default(); m * n];
+    naive(&mut want, a, b, m, k, n);
+    let (naive_mean, naive_sd, _) = common::time_it(warmup, iters, || {
+        naive(std::hint::black_box(&mut c), a, b, m, k, n);
+    });
+    common::report("naive ikj (oracle)", naive_mean, naive_sd);
+    let mut rows = vec![Row {
+        label: "naive".into(),
+        mr: 1,
+        nr: 1,
+        gops: ops / naive_mean / 1e9,
+        speedup_vs_naive: 1.0,
+        dispatched: false,
+    }];
+    for geom in GEOMETRIES {
+        geom_run(geom, &mut c, a, b, m, k, n);
+        assert_eq!(c, want, "{title}: {geom:?} must be bit-identical to naive");
+        let (mean, sd, _) = common::time_it(warmup, iters, || {
+            geom_run(geom, std::hint::black_box(&mut c), a, b, m, k, n);
+        });
+        let dflt = geom == dispatched;
+        common::report(
+            &format!("MR={} NR={}{}", geom.0, geom.1, if dflt { "  ← dispatched" } else { "" }),
+            mean,
+            sd,
+        );
+        rows.push(Row {
+            label: format!("mk_{}x{}", geom.0, geom.1),
+            mr: geom.0,
+            nr: geom.1,
+            gops: ops / mean / 1e9,
+            speedup_vs_naive: naive_mean / mean,
+            dispatched: dflt,
+        });
+    }
+    let best = rows[1..]
+        .iter()
+        .reduce(|x, y| if y.gops > x.gops { y } else { x })
+        .expect("non-empty sweep");
+    println!(
+        "  naive {:.2} G/s → best MR={} NR={} {:.2} G/s ({:.2}×)",
+        rows[0].gops, best.mr, best.nr, best.gops, best.speedup_vs_naive
+    );
+    rows
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 10) };
+    // The geometries the per-precision entry points are compiled with —
+    // the sweep marks them so the CI artifact shows whether the
+    // dispatch constants still win on real hardware.
+    let geom_f32 = micro_geom(Precision::Fp32);
+    let geom_i32 = micro_geom(Precision::Int8);
+    println!(
+        "microkernel GFLOP/s sweep{} — fp32 dispatch {}x{}, i32 dispatch {}x{}",
+        if quick { " (quick)" } else { "" },
+        geom_f32.mr,
+        geom_f32.nr,
+        geom_i32.mr,
+        geom_i32.nr
+    );
+
+    let mut rng = XorShift64::new(7);
+    let mut sections: Vec<Json> = Vec::new();
+
+    // fp32: the flagship native tile (what every reference device
+    // worker executes per job) plus a square DL-ish shape.
+    let mut f32_shapes = vec![(416usize, 128usize, 192usize)];
+    if !quick {
+        f32_shapes.push((256, 256, 256));
+    }
+    for shape in f32_shapes {
+        let (m, k, n) = shape;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let rows = sweep(
+            &format!("fp32 {m}x{k}x{n} (GFLOP/s)"),
+            shape,
+            warmup,
+            iters,
+            &a,
+            &b,
+            matmul_naive_f32_into,
+            run_f32,
+            (geom_f32.mr, geom_f32.nr),
+        );
+        sections.extend(rows.iter().map(|r| row_json(shape, "fp32", r)));
+    }
+
+    // int8 path (i32 carriers): the flagship int8 native tile.
+    let (m, k, n) = (416usize, 512usize, 192usize);
+    let ai: Vec<i32> = (0..m * k).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+    let bi: Vec<i32> = (0..k * n).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+    let rows = sweep(
+        &format!("int8-path i32 {m}x{k}x{n} (GOP/s)"),
+        (m, k, n),
+        warmup,
+        iters,
+        &ai,
+        &bi,
+        matmul_naive_i32_into,
+        run_i32,
+        (geom_i32.mr, geom_i32.nr),
+    );
+    sections.extend(rows.iter().map(|r| row_json((m, k, n), "int8", r)));
+
+    if let Some(path) = json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("microkernel".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("dispatched_f32".into(), Json::Str(format!("{}x{}", geom_f32.mr, geom_f32.nr)));
+        o.insert("dispatched_i32".into(), Json::Str(format!("{}x{}", geom_i32.mr, geom_i32.nr)));
+        o.insert("results".into(), Json::Arr(sections));
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote microkernel report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
+}

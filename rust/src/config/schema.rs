@@ -339,6 +339,22 @@ pub struct ServeConfig {
     /// Scheduling decisions a flight may wait before
     /// [`PolicyKind::Priority`] promotes it one class (`0` = no aging).
     pub aging_threshold: u64,
+    /// Fan-out width for operand arena extraction: packing a request's
+    /// A/B matrices splits the tile grid across up to this many scoped
+    /// threads (`1` = serial packing, today's behavior bit-for-bit —
+    /// parallel packs are bit-identical too, this is a pure latency
+    /// knob for large requests). See
+    /// `crate::coordinator::pool::TilePool::pack_with`.
+    pub pack_workers: usize,
+    /// Admission slots reserved per request class, carved out of
+    /// `queue_depth` (empty = unreserved = one shared semaphore, the
+    /// historical behavior). With reserves, a class always finds its
+    /// reserved slots and competes for the shared remainder
+    /// (`queue_depth − Σ reserves`) only beyond them — so a bulk class
+    /// cannot consume the whole admission queue ahead of latency-class
+    /// traffic. Out-of-range classes clamp to the last entry; ignored
+    /// while `queue_depth = 0`.
+    pub class_queue_reserve: Vec<u64>,
 }
 
 impl ServeConfig {
@@ -355,6 +371,8 @@ impl ServeConfig {
             policy: PolicyKind::Fifo,
             class_weights: vec![1, 1, 1, 1],
             aging_threshold: 64,
+            pack_workers: 1,
+            class_queue_reserve: Vec::new(),
         }
     }
 
@@ -377,6 +395,9 @@ impl ServeConfig {
             Json::Arr(self.class_weights.iter().map(|&w| Json::Num(w as f64)).collect()),
         );
         o.insert("aging_threshold".into(), Json::Num(self.aging_threshold as f64));
+        o.insert("pack_workers".into(), Json::Num(self.pack_workers as f64));
+        let reserve = self.class_queue_reserve.iter().map(|&r| Json::Num(r as f64)).collect();
+        o.insert("class_queue_reserve".into(), Json::Arr(reserve));
         Json::Obj(o)
     }
 
@@ -398,19 +419,18 @@ impl ServeConfig {
             Some(s) => PolicyKind::parse(s)
                 .ok_or_else(|| ConfigError::Invalid("policy", s.to_string()))?,
         };
-        let class_weights = match v.get("class_weights") {
-            None => vec![1, 1, 1, 1],
-            Some(Json::Arr(a)) => a
-                .iter()
-                .map(|w| {
-                    w.as_u64()
-                        .ok_or_else(|| ConfigError::Invalid("class_weights", w.to_string()))
-                })
-                .collect::<Result<Vec<u64>, ConfigError>>()?,
-            Some(other) => {
-                return Err(ConfigError::Invalid("class_weights", other.to_string()))
+        let u64_list = |field: &'static str, default: Vec<u64>| -> Result<Vec<u64>, ConfigError> {
+            match v.get(field) {
+                None => Ok(default),
+                Some(Json::Arr(a)) => a
+                    .iter()
+                    .map(|w| w.as_u64().ok_or_else(|| ConfigError::Invalid(field, w.to_string())))
+                    .collect(),
+                Some(other) => Err(ConfigError::Invalid(field, other.to_string())),
             }
         };
+        let class_weights = u64_list("class_weights", vec![1, 1, 1, 1])?;
+        let class_queue_reserve = u64_list("class_queue_reserve", Vec::new())?;
         Ok(ServeConfig {
             design,
             artifacts_dir: v
@@ -436,6 +456,8 @@ impl ServeConfig {
                 .get("aging_threshold")
                 .and_then(Json::as_u64)
                 .unwrap_or(64),
+            pack_workers: v.get("pack_workers").and_then(Json::as_u64).unwrap_or(1) as usize,
+            class_queue_reserve,
         })
     }
 
@@ -521,6 +543,8 @@ mod tests {
         assert_eq!(c.policy, PolicyKind::Fifo);
         assert_eq!(c.class_weights, vec![1, 1, 1, 1]);
         assert_eq!(c.aging_threshold, 64);
+        assert_eq!(c.pack_workers, 1, "packing defaults to serial");
+        assert!(c.class_queue_reserve.is_empty(), "admission defaults to unreserved");
     }
 
     #[test]
@@ -550,6 +574,8 @@ mod tests {
         c.policy = PolicyKind::WeightedFair;
         c.class_weights = vec![8, 2, 1];
         c.aging_threshold = 512;
+        c.pack_workers = 6;
+        c.class_queue_reserve = vec![3, 0, 1];
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
         // And through a file, like the launcher loads it.
@@ -593,6 +619,14 @@ mod tests {
         assert!(matches!(
             ServeConfig::from_json(&v),
             Err(ConfigError::Invalid("class_weights", _))
+        ));
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"class_queue_reserve":[1,"two"]}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("class_queue_reserve", _))
         ));
     }
 

@@ -6,6 +6,22 @@
 //! unbounded) — and an [`AdmissionPolicy`](crate::config::schema::AdmissionPolicy):
 //! `Block` parks the submitting thread until a slot frees, `Reject`
 //! fails fast with [`QueueFull`] so the caller can shed load or retry.
+//!
+//! # Per-class slot reservation
+//!
+//! `ServeConfig::class_queue_reserve` (empty = unreserved = the
+//! historical single-semaphore gate, bit-for-bit) carves per-class
+//! reserved slots out of `queue_depth`: a request of class `c` may
+//! always take one of its class's reserved slots, and competes for the
+//! **shared** remainder (`queue_depth − Σ reserves`) only once its
+//! reserve is full. A saturating bulk class can therefore occupy at
+//! most `shared + its own reserve` slots — it can no longer consume the
+//! whole admission queue before the scheduler ever sees a
+//! latency-class request. Out-of-range classes clamp to the last
+//! reserve entry (mirroring `class_weights` clamping); if
+//! `Σ reserves > queue_depth` the shared pool is empty and the
+//! effective bound is `Σ reserves`. Reserves are ignored while
+//! `queue_depth = 0` (unbounded admits everything anyway).
 
 use crate::config::schema::AdmissionPolicy;
 use crate::coordinator::handle::Reply;
@@ -14,11 +30,14 @@ use anyhow::{anyhow, Result};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-/// Returned by a [`AdmissionPolicy::Reject`] submission when
-/// `queue_depth` requests are already open. Recover it from the anyhow
-/// chain with `err.downcast_ref::<QueueFull>()`.
+/// Returned by a [`AdmissionPolicy::Reject`] submission when the
+/// request's class cannot open one more request. The payload is the
+/// **rejecting class's** open-request bound — its reserved slots plus
+/// the shared pool, which is simply `queue_depth` when no reserves are
+/// configured. Recover it from the anyhow chain with
+/// `err.downcast_ref::<QueueFull>()`.
 #[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("admission queue full ({0} open requests)")]
+#[error("admission queue full ({0} open requests for this class)")]
 pub struct QueueFull(pub usize);
 
 /// A request admitted by a client thread, in flight to the scheduler.
@@ -44,23 +63,29 @@ pub(crate) struct Admitted {
 impl Drop for Admitted {
     fn drop(&mut self) {
         if let Some(reply) = self.reply.take() {
-            self.gate.release();
+            self.gate.release(self.req.class);
             reply.send(self.req, Err(anyhow!("server is shutting down")));
         }
     }
 }
 
-/// The admission gate: a counting semaphore over open requests with a
+/// The admission gate: a counting semaphore over open requests —
+/// optionally with per-class reserved slots (module docs) — and a
 /// closed flag so blocked producers wake when the server goes away.
 pub(crate) struct Gate {
     /// `0` = unbounded.
     depth: usize,
+    /// Reserved slots per class (empty = plain semaphore).
+    reserves: Vec<usize>,
+    /// Shared slots: `depth − Σ reserves`, saturating at zero.
+    shared: usize,
     state: Mutex<GateState>,
     cv: Condvar,
 }
 
 struct GateState {
-    open: usize,
+    /// Open requests per reserve class (one bucket when unreserved).
+    open: Vec<usize>,
     closed: bool,
 }
 
@@ -75,40 +100,176 @@ impl Drop for GateCloser {
 }
 
 impl Gate {
-    pub(crate) fn new(depth: usize) -> Self {
+    pub(crate) fn new(depth: usize, reserves: Vec<usize>) -> Self {
+        let shared = depth.saturating_sub(reserves.iter().sum());
+        let buckets = reserves.len().max(1);
         Gate {
             depth,
-            state: Mutex::new(GateState { open: 0, closed: false }),
+            reserves,
+            shared,
+            state: Mutex::new(GateState { open: vec![0; buckets], closed: false }),
             cv: Condvar::new(),
         }
     }
 
-    pub(crate) fn admit(&self, policy: AdmissionPolicy) -> Result<()> {
+    /// Reserve bucket a request class lands in (out-of-range classes
+    /// clamp to the last configured entry, like `class_weights`).
+    fn bucket(&self, class: u8) -> usize {
+        if self.reserves.is_empty() {
+            0
+        } else {
+            (class as usize).min(self.reserves.len() - 1)
+        }
+    }
+
+    fn reserve_of(&self, bucket: usize) -> usize {
+        self.reserves.get(bucket).copied().unwrap_or(0)
+    }
+
+    /// Open-request bound of one class: its reserve plus the shared
+    /// pool (= `queue_depth` when unreserved) — what a [`QueueFull`]
+    /// rejection reports.
+    fn class_bound(&self, bucket: usize) -> usize {
+        self.shared + self.reserve_of(bucket)
+    }
+
+    /// Whether one more open request of `bucket` fits: its own reserve
+    /// first, then the shared pool (occupancy above a class's reserve
+    /// is what counts against shared).
+    fn fits(&self, st: &GateState, bucket: usize) -> bool {
+        if self.depth == 0 {
+            return true;
+        }
+        if st.open[bucket] < self.reserve_of(bucket) {
+            return true;
+        }
+        let mut shared_used = 0usize;
+        for (b, &open) in st.open.iter().enumerate() {
+            shared_used += open.saturating_sub(self.reserve_of(b));
+        }
+        shared_used < self.shared
+    }
+
+    pub(crate) fn admit(&self, policy: AdmissionPolicy, class: u8) -> Result<()> {
+        let bucket = self.bucket(class);
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
                 return Err(anyhow!("server is shut down"));
             }
-            if self.depth == 0 || st.open < self.depth {
-                st.open += 1;
+            if self.fits(&st, bucket) {
+                st.open[bucket] += 1;
                 return Ok(());
             }
             match policy {
-                AdmissionPolicy::Reject => return Err(QueueFull(self.depth).into()),
+                AdmissionPolicy::Reject => return Err(QueueFull(self.class_bound(bucket)).into()),
                 AdmissionPolicy::Block => st = self.cv.wait(st).unwrap(),
             }
         }
     }
 
-    pub(crate) fn release(&self) {
+    pub(crate) fn release(&self, class: u8) {
+        let bucket = self.bucket(class);
         let mut st = self.state.lock().unwrap();
-        st.open = st.open.saturating_sub(1);
+        st.open[bucket] = st.open[bucket].saturating_sub(1);
         drop(st);
-        self.cv.notify_one();
+        if self.reserves.is_empty() {
+            self.cv.notify_one();
+        } else {
+            // A freed slot may only be usable by one specific class's
+            // waiters; notify_one could wake an ineligible producer
+            // that re-parks and swallows the wakeup.
+            self.cv.notify_all();
+        }
     }
 
     pub(crate) fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unreserved_gate_is_a_plain_semaphore() {
+        let g = Gate::new(2, Vec::new());
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+        g.admit(AdmissionPolicy::Reject, 5).unwrap();
+        let err = g.admit(AdmissionPolicy::Reject, 0).unwrap_err();
+        assert!(err.downcast_ref::<QueueFull>().is_some());
+        g.release(5);
+        g.admit(AdmissionPolicy::Reject, 1).unwrap();
+    }
+
+    #[test]
+    fn reserved_slots_survive_a_bulk_class_flood() {
+        // depth 4, class 0 reserves 2 → bulk class 1 can hold at most
+        // the 2 shared slots; class 0 always finds its reserve.
+        let g = Gate::new(4, vec![2, 0]);
+        g.admit(AdmissionPolicy::Reject, 1).unwrap();
+        g.admit(AdmissionPolicy::Reject, 1).unwrap();
+        let err = g.admit(AdmissionPolicy::Reject, 1).unwrap_err();
+        // The error reports the rejecting class's own bound (the shared
+        // pool here — class 1 reserves nothing), not the total depth.
+        assert_eq!(err.downcast_ref::<QueueFull>().map(|q| q.0), Some(2));
+        // The latency class still admits — twice (its reserve).
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+        // Reserve full + shared full → now class 0 is bounded too.
+        assert!(g.admit(AdmissionPolicy::Reject, 0).is_err());
+        // Releasing a bulk slot reopens shared capacity for anyone.
+        g.release(1);
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+    }
+
+    #[test]
+    fn out_of_range_classes_clamp_to_last_reserve() {
+        let g = Gate::new(2, vec![0, 1]);
+        // Class 7 clamps to bucket 1 (reserve 1): one reserved admit…
+        g.admit(AdmissionPolicy::Reject, 7).unwrap();
+        // …then the single shared slot (2 − 1)…
+        g.admit(AdmissionPolicy::Reject, 7).unwrap();
+        // …then full.
+        assert!(g.admit(AdmissionPolicy::Reject, 7).is_err());
+        assert!(g.admit(AdmissionPolicy::Reject, 0).is_err(), "shared consumed");
+        g.release(7);
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+    }
+
+    #[test]
+    fn unbounded_depth_ignores_reserves() {
+        let g = Gate::new(0, vec![1, 1]);
+        for c in 0..16u8 {
+            g.admit(AdmissionPolicy::Reject, c).unwrap();
+        }
+    }
+
+    #[test]
+    fn oversubscribed_reserves_bound_each_class_individually() {
+        // Σ reserves (3) > depth (2): shared pool is empty, each class
+        // is capped by its own reserve.
+        let g = Gate::new(2, vec![2, 1]);
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+        g.admit(AdmissionPolicy::Reject, 0).unwrap();
+        assert!(g.admit(AdmissionPolicy::Reject, 0).is_err());
+        g.admit(AdmissionPolicy::Reject, 1).unwrap();
+        let err = g.admit(AdmissionPolicy::Reject, 1).unwrap_err();
+        // Empty shared pool: the reported bound is class 1's reserve.
+        assert_eq!(err.downcast_ref::<QueueFull>().map(|q| q.0), Some(1));
+    }
+
+    #[test]
+    fn closed_gate_rejects_and_wakes() {
+        let g = Arc::new(Gate::new(1, vec![1]));
+        g.admit(AdmissionPolicy::Block, 0).unwrap();
+        let g2 = Arc::clone(&g);
+        let waiter = std::thread::spawn(move || g2.admit(AdmissionPolicy::Block, 0));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        g.close();
+        assert!(waiter.join().unwrap().is_err(), "blocked producer must wake on close");
+        assert!(g.admit(AdmissionPolicy::Reject, 0).is_err());
     }
 }

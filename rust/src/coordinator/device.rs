@@ -35,15 +35,17 @@
 //!   `Send`). The fp32 artifact is required; the int8 artifact is loaded
 //!   when present and int8 jobs fail cleanly when it is not. Needs the
 //!   `pjrt` cargo feature and `make artifacts`.
-//! * **Reference** — pure-Rust native-tile matmuls (f32 and wrapping-i32)
-//!   with identical tile semantics. No artifacts needed; lets the full
-//!   serving stack (and its equivalence tests) run in any build
-//!   environment.
+//! * **Reference** — the register-tiled host compute plane
+//!   ([`crate::coordinator::microkernel`]): MR×NR-blocked f32 and
+//!   wrapping-i32 native-tile matmuls, bit-identical to the historical
+//!   scalar loops. No artifacts needed; lets the full serving stack
+//!   (and its equivalence tests) run in any build environment at
+//!   vectorized rather than scalar speed.
 
 use crate::arch::precision::Precision;
 use crate::config::schema::{BackendKind, DesignConfig};
+use crate::coordinator::microkernel::{matmul_f32, matmul_i32};
 use crate::coordinator::pool::{BufferPool, TileRef, FREE_LIST_CAP};
-use crate::coordinator::tiler::{matmul_ref_f32_into, matmul_ref_i32_into};
 use crate::placement::placer::place_design;
 use crate::runtime::{
     artifact_path, artifacts_available, named_artifact_available, pjrt_compiled, Runtime,
@@ -486,7 +488,7 @@ fn run_tile(
                     .map(TileOutput::F32),
                 WorkerBackend::Reference => {
                     let mut out = bufs.fp32.take(nm * nn);
-                    matmul_ref_f32_into(&mut out, a.as_slice(), b.as_slice(), nm, nk, nn);
+                    matmul_f32(&mut out, a.as_slice(), b.as_slice(), nm, nk, nn);
                     Ok(TileOutput::F32(out))
                 }
             }
@@ -506,7 +508,7 @@ fn run_tile(
                 )),
                 WorkerBackend::Reference => {
                     let mut out = bufs.int8.take(nm * nn);
-                    matmul_ref_i32_into(&mut out, a.as_slice(), b.as_slice(), nm, nk, nn);
+                    matmul_i32(&mut out, a.as_slice(), b.as_slice(), nm, nk, nn);
                     Ok(TileOutput::I32(out))
                 }
             }

@@ -1,0 +1,411 @@
+//! The host **compute plane**: register-tiled, autovectorization-friendly
+//! GEMM microkernels for the reference backend — the layer that turns
+//! the naive scalar tile loop into the packed-panel → register-block
+//! hierarchy the paper's whole thesis is built on.
+//!
+//! # Why this layer exists
+//!
+//! MaxEVA wins MatMul throughput by blocking at every level of the
+//! memory hierarchy: the AIE kernel computes an `m×k×n` register tile
+//! (fp32 32×32×32, int8 32×128×32), the X×Y×Z array aggregates kernels
+//! into a native device tile, and the host tiles arbitrary problems
+//! over that native size. Our serving engine mirrors the outer two
+//! levels (the [`Tiler`] grid and the [`TilePool`] arenas), but until
+//! this module the innermost level — how one native tile is actually
+//! multiplied on the host — was a naive scalar `ikj` triple loop that
+//! reloaded and re-stored a full row of `C` on every k step. The
+//! GotoBLAS2-on-Versal mapping (Lei & Quintana-Ortí, arXiv 2404.15043)
+//! and the Ryzen-AI GEMM study (Taka et al., 2025) both land on the
+//! same structure: packed operand panels feeding a small MR×NR
+//! microkernel whose accumulators live in registers. This module is
+//! that microkernel, mapped onto MaxEVA's terms:
+//!
+//! | MaxEVA level                  | host compute plane              |
+//! |-------------------------------|---------------------------------|
+//! | AIE register tile (`m×k×n`)   | MR×NR accumulator block         |
+//! | array native tile (X·m,Y·k,Z·n) | one `matmul_*` call on a packed tile |
+//! | PL tiling / zero-padding      | [`TilePool`] arenas + [`Tiler`] grid |
+//!
+//! # The MR×NR microkernel
+//!
+//! [`matmul_mk`] walks the output in MR×NR blocks. Each block keeps an
+//! `[[T; NR]; MR]` accumulator in fixed-size arrays — small enough to
+//! live entirely in vector registers — and runs **k innermost,
+//! ascending**: for every k step it broadcasts `A[i][k]` against a
+//! contiguous NR-wide row slice of `B`. The fixed NR trip count lets
+//! the compiler unroll and vectorize the update, and the accumulators
+//! are loaded/stored exactly once per block instead of once per k step
+//! (the naive loop's O(k) traffic on `C` is the strength reduction).
+//! Partial blocks at the m/n fringe run the same loop with runtime
+//! `mr ≤ MR`, `nr ≤ NR` bounds, so every shape is handled without a
+//! separate scalar path.
+//!
+//! # Bit-identity (the ascending-ik contract)
+//!
+//! The serving engine's fp32 determinism rests on every output element
+//! being the **same sequence of f32 operations** regardless of path.
+//! The microkernel preserves that sequence exactly:
+//!
+//! * per element `(i, j)` the accumulator starts at `0.0` and adds
+//!   `A[i][kk] * B[kk][j]` for `kk` **ascending** — the naive reference
+//!   ([`matmul_naive_f32_into`]) orders the same element's terms
+//!   identically (its `kk` loop is also ascending);
+//! * terms with `A[i][kk] == 0.0` are skipped under the identical
+//!   predicate in both kernels (the skip is observable in IEEE 754:
+//!   `-0.0 + 0.0·b` flips the sign of a `-0.0` accumulator, and
+//!   `0.0·inf` is NaN — so both kernels must agree on it);
+//! * each product is a separate multiply-then-add (Rust never contracts
+//!   to FMA implicitly), in both kernels.
+//!
+//! Hence `matmul_f32` is bit-identical to the naive loop for every
+//! shape — pinned by `tests/compute_plane.rs` over exhaustive fringe
+//! shapes — and the engine-wide ascending-`ik` reduction contract from
+//! PRs 1–4 survives untouched. The int8 path (i32 carriers, wrapping
+//! adds) is order-independent and therefore trivially exact.
+//!
+//! # Dispatch
+//!
+//! [`matmul_f32`] / [`matmul_i32`] are the per-precision entry points,
+//! compiled at [`MR_F32`]×[`NR_F32`] / [`MR_I32`]×[`NR_I32`] (chosen
+//! so one block's accumulators fit the 16 vector registers of
+//! mainstream SIMD ISAs with room for the broadcast and B-row
+//! operands); [`micro_geom`] reports those geometries per precision.
+//! `benches/microkernel.rs` sweeps alternative geometries against them
+//! and reports GFLOP/s / GOP/s so the defaults stay honest on real
+//! hardware.
+//!
+//! [`Tiler`]: crate::coordinator::tiler::Tiler
+//! [`TilePool`]: crate::coordinator::pool::TilePool
+
+use crate::arch::precision::Precision;
+
+/// Rows of one fp32 accumulator block.
+pub const MR_F32: usize = 4;
+/// Columns of one fp32 accumulator block (4×16 f32 = 8 256-bit
+/// registers of accumulator, leaving half the file for the broadcast
+/// A value and the streamed B row).
+pub const NR_F32: usize = 16;
+/// Rows of one i32 accumulator block.
+pub const MR_I32: usize = 4;
+/// Columns of one i32 accumulator block.
+pub const NR_I32: usize = 16;
+
+/// Element types the microkernel multiplies: the fp32 datapath and the
+/// int8 datapath's i32 carrier. `mul_acc` is one multiply-then-add in
+/// the type's serving semantics (f32 IEEE add, i32 wrapping), and
+/// `is_zero` is the A-operand skip predicate — both must match the
+/// naive reference exactly for the bit-identity argument above.
+pub trait MicroElem: Copy + Default + PartialEq + Send + Sync + 'static {
+    fn mul_acc(acc: Self, a: Self, b: Self) -> Self;
+    fn is_zero(self) -> bool;
+}
+
+impl MicroElem for f32 {
+    #[inline(always)]
+    fn mul_acc(acc: f32, a: f32, b: f32) -> f32 {
+        acc + a * b
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0.0
+    }
+}
+
+impl MicroElem for i32 {
+    #[inline(always)]
+    fn mul_acc(acc: i32, a: i32, b: i32) -> i32 {
+        acc.wrapping_add(a.wrapping_mul(b))
+    }
+    #[inline(always)]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+}
+
+/// Microkernel geometry of one precision's dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MicroGeom {
+    pub mr: usize,
+    pub nr: usize,
+}
+
+/// The MR×NR geometry [`matmul_f32`] / [`matmul_i32`] run a serving
+/// precision with (int8-path tiles accumulate in i32, so they use the
+/// i32 geometry).
+pub fn micro_geom(p: Precision) -> MicroGeom {
+    match p {
+        Precision::Int8 => MicroGeom { mr: MR_I32, nr: NR_I32 },
+        _ => MicroGeom { mr: MR_F32, nr: NR_F32 },
+    }
+}
+
+/// One full MR×NR output block: accumulators in fixed-size arrays
+/// (registers), k innermost ascending, A-zero skip — see the module
+/// docs for why this exact shape is both fast and bit-identical.
+#[inline]
+fn block_full<T: MicroElem, const MR: usize, const NR: usize>(
+    c: &mut [T],
+    a: &[T],
+    b: &[T],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+) {
+    let mut acc = [[T::default(); NR]; MR];
+    for kk in 0..k {
+        let boff = kk * n + j0;
+        let brow = &b[boff..boff + NR];
+        for (i, arow) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + i) * k + kk];
+            if av.is_zero() {
+                continue;
+            }
+            for j in 0..NR {
+                arow[j] = T::mul_acc(arow[j], av, brow[j]);
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate() {
+        let off = (i0 + i) * n + j0;
+        c[off..off + NR].copy_from_slice(arow);
+    }
+}
+
+/// A partial block at the m/n fringe: the same loop with runtime
+/// `mr ≤ MR`, `nr ≤ NR` bounds (the accumulator array stays fixed-size;
+/// only its `mr×nr` prefix is used and written back).
+#[inline]
+fn block_fringe<T: MicroElem, const MR: usize, const NR: usize>(
+    c: &mut [T],
+    a: &[T],
+    b: &[T],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[T::default(); NR]; MR];
+    for kk in 0..k {
+        let boff = kk * n + j0;
+        let brow = &b[boff..boff + nr];
+        for (i, arow) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i0 + i) * k + kk];
+            if av.is_zero() {
+                continue;
+            }
+            for (dst, &bv) in arow[..nr].iter_mut().zip(brow) {
+                *dst = T::mul_acc(*dst, av, bv);
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let off = (i0 + i) * n + j0;
+        c[off..off + nr].copy_from_slice(&arow[..nr]);
+    }
+}
+
+/// Register-tiled row-major GEMM: `C (m×n) = A (m×k) · B (k×n)` through
+/// MR×NR accumulator blocks. `c` is fully overwritten (stale contents
+/// are fine — the recycling free-lists hand these kernels dirty
+/// buffers). Outputs are bit-identical to the naive reference loop for
+/// every shape, in both element types (module docs).
+pub fn matmul_mk<T: MicroElem, const MR: usize, const NR: usize>(
+    c: &mut [T],
+    a: &[T],
+    b: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert!(MR > 0 && NR > 0, "degenerate microkernel geometry");
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = (n - j0).min(NR);
+            if mr == MR && nr == NR {
+                block_full::<T, MR, NR>(c, a, b, k, n, i0, j0);
+            } else {
+                block_fringe::<T, MR, NR>(c, a, b, k, n, i0, j0, mr, nr);
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// The fp32 microkernel at its dispatched geometry — what the reference
+/// device workers and [`matmul_ref_f32_into`] execute per native tile.
+///
+/// [`matmul_ref_f32_into`]: crate::coordinator::tiler::matmul_ref_f32_into
+pub fn matmul_f32(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    matmul_mk::<f32, MR_F32, NR_F32>(c, a, b, m, k, n);
+}
+
+/// The i32 (int8-path) microkernel at its dispatched geometry.
+/// Wrapping arithmetic: exact under any order, like the naive loop.
+pub fn matmul_i32(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: usize, n: usize) {
+    matmul_mk::<i32, MR_I32, NR_I32>(c, a, b, m, k, n);
+}
+
+/// The pre-compute-plane scalar `ikj` loop, kept verbatim as the
+/// bit-identity **oracle**: property tests pin `matmul_f32` /
+/// `matmul_i32` against it over exhaustive fringe shapes, and the
+/// microkernel bench reports its GFLOP/s as the baseline. `c` is fully
+/// overwritten.
+pub fn matmul_naive_f32_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    c.fill(0.0);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// [`matmul_naive_f32_into`]'s i32 sibling (wrapping adds, the int8
+/// path's exact semantics).
+pub fn matmul_naive_i32_into(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    c.fill(0);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            let crow = &mut c[i * n..i * n + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv = cv.wrapping_add(av.wrapping_mul(bv));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::XorShift64;
+
+    /// Random operands with a deliberate sprinkling of exact zeros in A
+    /// so the zero-skip predicate is exercised, not just dead code.
+    fn rand_f32(len: usize, rng: &mut XorShift64) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                if rng.gen_range(0, 4) == 0 {
+                    0.0
+                } else {
+                    rng.gen_range_f64(-1.0, 1.0) as f32
+                }
+            })
+            .collect()
+    }
+
+    fn rand_i32(len: usize, rng: &mut XorShift64) -> Vec<i32> {
+        (0..len)
+            .map(|_| {
+                if rng.gen_range(0, 4) == 0 {
+                    0
+                } else {
+                    rng.gen_range(0, 256) as i32 - 128
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn microkernel_bit_identical_to_naive_random_shapes() {
+        let mut rng = XorShift64::new(0x5EED);
+        for _ in 0..40 {
+            let m = rng.gen_range(1, 40) as usize;
+            let k = rng.gen_range(1, 24) as usize;
+            let n = rng.gen_range(1, 40) as usize;
+            let a = rand_f32(m * k, &mut rng);
+            let b = rand_f32(k * n, &mut rng);
+            let mut want = vec![f32::NAN; m * n];
+            let mut got = vec![f32::NAN; m * n];
+            matmul_naive_f32_into(&mut want, &a, &b, m, k, n);
+            matmul_f32(&mut got, &a, &b, m, k, n);
+            assert_eq!(got, want, "fp32 {m}x{k}x{n} must be bit-identical");
+
+            let ai = rand_i32(m * k, &mut rng);
+            let bi = rand_i32(k * n, &mut rng);
+            let mut wi = vec![i32::MIN; m * n];
+            let mut gi = vec![i32::MIN; m * n];
+            matmul_naive_i32_into(&mut wi, &ai, &bi, m, k, n);
+            matmul_i32(&mut gi, &ai, &bi, m, k, n);
+            assert_eq!(gi, wi, "i32 {m}x{k}x{n} must be exact");
+        }
+    }
+
+    #[test]
+    fn zero_skip_semantics_match_exactly() {
+        // The observable IEEE edge: a zero A value must be *skipped*
+        // (matching the naive loop), not multiplied through — otherwise
+        // 0·inf would poison the accumulator with NaN.
+        let a = vec![0.0f32, 1.0];
+        let b = vec![f32::INFINITY, 2.0];
+        let mut got = vec![f32::NAN; 1];
+        let mut want = vec![f32::NAN; 1];
+        matmul_f32(&mut got, &a, &b, 1, 2, 1);
+        matmul_naive_f32_into(&mut want, &a, &b, 1, 2, 1);
+        assert_eq!(got, want);
+        assert_eq!(got[0], 2.0, "the inf paired with a==0 is skipped in both kernels");
+    }
+
+    #[test]
+    fn degenerate_shapes_overwrite_everything() {
+        // k = 0: pure zero fill over stale contents.
+        let mut c = vec![f32::NAN; 6];
+        matmul_f32(&mut c, &[], &[], 2, 0, 3);
+        assert_eq!(c, vec![0.0; 6]);
+        // m or n = 0: empty output, no panic.
+        let mut empty: Vec<f32> = Vec::new();
+        matmul_f32(&mut empty, &[], &[1.0, 2.0], 0, 1, 2);
+        matmul_f32(&mut empty, &[1.0, 2.0], &[], 2, 1, 0);
+    }
+
+    #[test]
+    fn alternate_geometries_stay_bit_identical() {
+        // The bit-identity argument is geometry-independent (per-element
+        // order never depends on MR/NR); pin it for the sweep geometries
+        // the bench exercises.
+        let mut rng = XorShift64::new(0xBE57);
+        let (m, k, n) = (19usize, 13usize, 23usize);
+        let a = rand_f32(m * k, &mut rng);
+        let b = rand_f32(k * n, &mut rng);
+        let mut want = vec![0.0f32; m * n];
+        matmul_naive_f32_into(&mut want, &a, &b, m, k, n);
+        let mut got = vec![f32::NAN; m * n];
+        matmul_mk::<f32, 1, 8>(&mut got, &a, &b, m, k, n);
+        assert_eq!(got, want);
+        matmul_mk::<f32, 2, 8>(&mut got, &a, &b, m, k, n);
+        assert_eq!(got, want);
+        matmul_mk::<f32, 8, 8>(&mut got, &a, &b, m, k, n);
+        assert_eq!(got, want);
+        matmul_mk::<f32, 8, 16>(&mut got, &a, &b, m, k, n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dispatch_geometry_per_precision() {
+        assert_eq!(micro_geom(Precision::Fp32), MicroGeom { mr: MR_F32, nr: NR_F32 });
+        assert_eq!(micro_geom(Precision::Int8), MicroGeom { mr: MR_I32, nr: NR_I32 });
+    }
+}

@@ -23,11 +23,14 @@
 //! ```
 //!
 //! Arbitrary-size MatMul requests enter through a **streaming admission
-//! queue** ([`admission`]; bounded by `ServeConfig::queue_depth`,
-//! block/reject backpressure), are padded and tiled to their precision's
-//! native size ([`tiler`]), packed once into contiguous tile-major
-//! arenas ([`pool`]: one allocation per matrix, B optionally served
-//! from the byte-budgeted packed-weight cache), and streamed through a
+//! queue** ([`admission`]; bounded by `ServeConfig::queue_depth`, with
+//! optional per-class reserved slots via
+//! `ServeConfig::class_queue_reserve`, block/reject backpressure), are
+//! padded and tiled to their precision's native size ([`tiler`]),
+//! packed once into contiguous tile-major arenas ([`pool`]: one
+//! allocation per matrix, extraction optionally fanned out across
+//! `ServeConfig::pack_workers` threads, B optionally served from the
+//! byte-budgeted packed-weight cache), and streamed through a
 //! pipelined in-flight window of tagged tile jobs ([`scheduler`])
 //! executed by a pool of device worker threads ([`device`]) — the
 //! software stand-in for the VCK190's AIE array. Tile output and
@@ -47,8 +50,9 @@
 //! paper's ping-pong buffering (eq. 2): host packing/reduction overlaps
 //! device execution instead of alternating with it. Python never runs
 //! here; the device workers execute the AOT artifacts produced once at
-//! build time (or, without the `pjrt` feature/artifacts, a pure-Rust
-//! reference backend with identical tile semantics).
+//! build time (or, without the `pjrt` feature/artifacts, the
+//! register-tiled host compute plane ([`microkernel`]) with identical
+//! tile semantics — bit-identical outputs at vectorized speed).
 //!
 //! Device-time accounting: every artifact invocation advances the
 //! simulated device clock by the design's iteration period (from
@@ -59,6 +63,7 @@
 pub mod admission;
 pub mod device;
 pub mod handle;
+pub mod microkernel;
 pub mod policy;
 pub mod pool;
 pub(crate) mod scheduler;
@@ -72,8 +77,12 @@ pub use device::{
     spawn_device, spawn_device_pool, DeviceHandle, TileDone, TileJob, TileOutput, TilePayload,
 };
 pub use handle::{Cancelled, RequestHandle};
+pub use microkernel::{micro_geom, MicroGeom, MR_F32, MR_I32, NR_F32, NR_I32};
 pub use policy::{Fifo, FlightMeta, Priority, SchedPolicy, TileCosts, WeightedFair};
-pub use pool::{BufferPool, FreeList, TilePool, TileRef, WeightCache, FREE_LIST_CAP};
+pub use pool::{
+    BufferPool, FreeList, PackCounters, TilePool, TileRef, WeightCache, FREE_LIST_CAP,
+    PAR_PACK_MIN_TILES,
+};
 pub use server::{MatMulServer, ServerStats};
-pub use stats::{ClassStats, MemPlaneStats};
+pub use stats::{ClassStats, MemPlaneStats, PackStats};
 pub use tiler::Tiler;

@@ -11,7 +11,11 @@
 //!   tile. Packing a `gm×gk` grid is **one** allocation, tile reads are
 //!   cache-/prefetch-friendly slices, and a [`TileRef`] (pool + tile
 //!   index) is the zero-copy currency tile jobs carry to the device
-//!   workers.
+//!   workers. Since PR 5 extraction can fan out across threads
+//!   ([`TilePool::pack_with`], `ServeConfig::pack_workers`) — bit-
+//!   identical to the serial pack, so large requests stop serializing
+//!   on one core before the pipeline starts ([`PackCounters`] report
+//!   the time spent).
 //! * [`WeightCache`] — a byte-budgeted LRU of packed **B** (weight)
 //!   pools, keyed by [`WeightKey`]: an explicit caller identity
 //!   (`MatMulRequest::with_weight_id`) or a content fingerprint
@@ -88,6 +92,59 @@ impl<T: Copy + Default> TilePool<T> {
         TilePool { data: data.into(), tile_len }
     }
 
+    /// [`TilePool::pack`] with the extraction fanned out across up to
+    /// `workers` scoped threads (`ServeConfig::pack_workers`): the tile
+    /// grid is split into contiguous runs of whole tiles, each thread
+    /// fills its disjoint arena slice, and the result is **bit-identical
+    /// to the serial pack for every worker count** — every tile is
+    /// written by exactly one thread from the same deterministic
+    /// extraction, so parallelism is a pure latency knob. `workers <= 1`
+    /// (and grids below [`PAR_PACK_MIN_TILES`], where thread spawn would
+    /// cost more than the copies) take the serial path, reproducing the
+    /// single-threaded engine behavior exactly.
+    pub fn pack_with(
+        src: &[T],
+        rows: usize,
+        cols: usize,
+        bh: usize,
+        bw: usize,
+        workers: usize,
+    ) -> Self
+    where
+        T: Send + Sync,
+    {
+        assert_eq!(src.len(), rows * cols, "matrix shape mismatch");
+        let gr = rows.div_ceil(bh);
+        let gc = cols.div_ceil(bw);
+        let tiles = gr * gc;
+        let fanout = pack_fanout(workers, tiles);
+        if fanout <= 1 {
+            return Self::pack(src, rows, cols, bh, bw);
+        }
+        let tile_len = bh * bw;
+        let mut data = vec![T::default(); tiles * tile_len];
+        std::thread::scope(|s| {
+            let base = tiles / fanout;
+            let extra = tiles % fanout;
+            let mut rest = data.as_mut_slice();
+            let mut first_tile = 0usize;
+            for w in 0..fanout {
+                let count = base + usize::from(w < extra);
+                let (chunk, tail) = rest.split_at_mut(count * tile_len);
+                rest = tail;
+                let start = first_tile;
+                first_tile += count;
+                s.spawn(move || {
+                    for (i, dst) in chunk.chunks_mut(tile_len).enumerate() {
+                        let t = start + i;
+                        Tiler::extract_block_into(dst, src, rows, cols, t / gc, t % gc, bh, bw);
+                    }
+                });
+            }
+        });
+        TilePool { data: data.into(), tile_len }
+    }
+
     /// A single-tile pool wrapping an already-extracted block (the
     /// synchronous `execute_tile` convenience path and tests).
     pub fn from_tile(tile: Vec<T>) -> Self {
@@ -157,6 +214,45 @@ impl<T: Copy + Default> TileRef<T> {
     /// The tile's elements, read in place.
     pub fn as_slice(&self) -> &[T] {
         self.pool.tile(self.tile)
+    }
+}
+
+/// Minimum tile count before [`TilePool::pack_with`] fans extraction
+/// out across threads — below this the per-thread spawn cost exceeds
+/// the copy work being split.
+pub const PAR_PACK_MIN_TILES: usize = 8;
+
+/// Effective fan-out width [`TilePool::pack_with`] uses for a grid of
+/// `tiles` tiles when asked for `workers` pack workers (1 = serial).
+pub fn pack_fanout(workers: usize, tiles: usize) -> usize {
+    if tiles < PAR_PACK_MIN_TILES {
+        1
+    } else {
+        workers.max(1).min(tiles)
+    }
+}
+
+/// Shared counters of the request-packing stage, published for
+/// [`ServerStats::pack`](crate::coordinator::server::ServerStats)
+/// snapshots taken from client threads: how many operand matrices were
+/// packed into arenas, how many of those packs fanned out across
+/// threads, and the wall time the scheduler spent packing (the host
+/// cost the weight cache and `pack_workers` both attack).
+#[derive(Debug, Default)]
+pub struct PackCounters {
+    pub matrices: AtomicU64,
+    pub parallel: AtomicU64,
+    pub nanos: AtomicU64,
+}
+
+impl PackCounters {
+    /// Record one request's packing work: `matrices` arenas built, of
+    /// which `parallel` used a multi-thread fan-out, in `elapsed` wall
+    /// time.
+    pub fn record(&self, matrices: u64, parallel: u64, elapsed: std::time::Duration) {
+        self.matrices.fetch_add(matrices, Ordering::Relaxed);
+        self.parallel.fetch_add(parallel, Ordering::Relaxed);
+        self.nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -278,12 +374,14 @@ pub enum WeightIdent {
     /// the caller asserts equal ids ⇒ equal bytes. Preferred — no
     /// per-request hash of the operand.
     Id(u64),
-    /// Content fingerprint fallback (FNV-1a over the element bits and
-    /// length) for callers that don't tag weights. 64-bit, so a
-    /// collision is *possible* in principle; tag weights explicitly
-    /// when serving adversarial or extremely high-cardinality weight
-    /// sets.
-    Fingerprint(u64),
+    /// Content fingerprint fallback (128-bit FNV-1a over the element
+    /// bits and length) for callers that don't tag weights. Widened
+    /// from 64 bits in PR 5 — at 128 bits an accidental collision is
+    /// out of reach even for very high-cardinality anonymous weight
+    /// sets, and debug builds additionally verify every fingerprint
+    /// hit byte-for-byte ([`debug_assert_pool_matches`]). Tag weights
+    /// explicitly when serving adversarial inputs.
+    Fingerprint(u128),
 }
 
 /// Cache key of one packed weight pool: identity × shape × precision.
@@ -309,38 +407,62 @@ pub enum CachedPool {
 /// Element types the weight cache can store — the dispatch point
 /// between the scheduler's precision-generic packing code and the
 /// type-erased cache entries.
-pub trait PoolElem: Copy + Default {
+pub trait PoolElem: Copy + Default + PartialEq + std::fmt::Debug {
     /// The serving precision this element type carries.
     fn precision() -> Precision;
-    /// Content fingerprint over the element bits (FNV-1a 64).
-    fn fingerprint(data: &[Self]) -> u64;
+    /// Content fingerprint over the element bits (FNV-1a 128).
+    fn fingerprint(data: &[Self]) -> u128;
     fn wrap(pool: TilePool<Self>) -> CachedPool;
     fn peek(cached: &CachedPool) -> Option<&TilePool<Self>>;
 }
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const FNV128_OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+const FNV128_PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
 
-fn fnv1a_words(len: usize, words: impl Iterator<Item = u32>) -> u64 {
-    let mut h = FNV_OFFSET;
+fn fnv1a_words(len: usize, words: impl Iterator<Item = u32>) -> u128 {
+    let mut h = FNV128_OFFSET;
     for b in (len as u64).to_le_bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
+        h ^= b as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
     }
     for w in words {
         for b in w.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(FNV_PRIME);
+            h ^= b as u128;
+            h = h.wrapping_mul(FNV128_PRIME);
         }
     }
     h
+}
+
+/// Debug-build collision guard for fingerprint-keyed weight-cache hits:
+/// re-extract the raw operand serially and compare the cached arena
+/// byte-for-byte. A mismatch means two distinct weight matrices
+/// produced the same [`WeightKey`] — a fingerprint collision (or a
+/// corrupted cache entry) — which would silently serve wrong results in
+/// a release build; here it panics so tests catch it. Called by the
+/// scheduler under `cfg(debug_assertions)` only: release serving keeps
+/// the cache hit O(1).
+pub fn debug_assert_pool_matches<T: PoolElem>(
+    cached: &TilePool<T>,
+    raw: &[T],
+    rows: usize,
+    cols: usize,
+    bh: usize,
+    bw: usize,
+) {
+    let fresh = TilePool::pack(raw, rows, cols, bh, bw);
+    assert!(
+        cached.data == fresh.data && cached.tile_len == fresh.tile_len,
+        "weight-cache fingerprint hit does not match the raw operand \
+         ({rows}x{cols} in {bh}x{bw} tiles): fingerprint collision"
+    );
 }
 
 impl PoolElem for f32 {
     fn precision() -> Precision {
         Precision::Fp32
     }
-    fn fingerprint(data: &[f32]) -> u64 {
+    fn fingerprint(data: &[f32]) -> u128 {
         fnv1a_words(data.len(), data.iter().map(|v| v.to_bits()))
     }
     fn wrap(pool: TilePool<f32>) -> CachedPool {
@@ -358,7 +480,7 @@ impl PoolElem for i32 {
     fn precision() -> Precision {
         Precision::Int8
     }
-    fn fingerprint(data: &[i32]) -> u64 {
+    fn fingerprint(data: &[i32]) -> u128 {
         fnv1a_words(data.len(), data.iter().map(|&v| v as u32))
     }
     fn wrap(pool: TilePool<i32>) -> CachedPool {
@@ -652,6 +774,79 @@ mod tests {
         c.insert(key_id(1, 4, 4), &big);
         assert_eq!(c.len(), 1);
         assert_eq!(c.bytes(), big.bytes(), "replacement accounts bytes exactly once");
+    }
+
+    #[test]
+    fn pack_with_bit_identical_across_worker_counts() {
+        // Parallel packing is a pure latency knob: every worker count
+        // yields the same bytes as the serial pack, fringe shapes
+        // included.
+        let mut rng = XorShift64::new(0xACC);
+        for _ in 0..12 {
+            let rows = rng.gen_range(1, 60) as usize;
+            let cols = rng.gen_range(1, 60) as usize;
+            let bh = rng.gen_range(1, 9) as usize;
+            let bw = rng.gen_range(1, 9) as usize;
+            let src: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+                .collect();
+            let serial = TilePool::pack(&src, rows, cols, bh, bw);
+            for workers in [1usize, 2, 3, 4, 7] {
+                let par = TilePool::pack_with(&src, rows, cols, bh, bw, workers);
+                assert_eq!(par.tiles(), serial.tiles());
+                for t in 0..serial.tiles() {
+                    assert_eq!(
+                        par.tile(t),
+                        serial.tile(t),
+                        "{rows}x{cols} in {bh}x{bw}, workers {workers}, tile {t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_fanout_thresholds() {
+        // Tiny grids stay serial (spawn cost > copy work); otherwise
+        // the fan-out is capped by both knob and tile count.
+        assert_eq!(pack_fanout(4, PAR_PACK_MIN_TILES - 1), 1);
+        assert_eq!(pack_fanout(4, PAR_PACK_MIN_TILES), 4);
+        assert_eq!(pack_fanout(0, 100), 1);
+        assert_eq!(pack_fanout(1, 100), 1);
+        assert_eq!(pack_fanout(64, 9), 9);
+    }
+
+    #[test]
+    fn pack_counters_accumulate() {
+        let c = PackCounters::default();
+        c.record(2, 1, std::time::Duration::from_micros(5));
+        c.record(1, 0, std::time::Duration::from_micros(3));
+        assert_eq!(c.matrices.load(Ordering::Relaxed), 3);
+        assert_eq!(c.parallel.load(Ordering::Relaxed), 1);
+        assert_eq!(c.nanos.load(Ordering::Relaxed), 8_000);
+    }
+
+    #[test]
+    fn fingerprint_is_128_bit_and_collision_guard_fires() {
+        // Regression for the PR 4 ROADMAP note: the anonymous-weight
+        // fingerprint is now 128-bit (the value genuinely exceeds the
+        // old u64 range for ordinary inputs), and debug builds verify
+        // fingerprint hits byte-for-byte, so a manufactured collision —
+        // two different matrices behind one cache key — panics instead
+        // of silently serving the wrong weight.
+        let a: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        let fp: u128 = <f32 as PoolElem>::fingerprint(&a);
+        assert!(fp > u64::MAX as u128, "128-bit offset basis must survive mixing");
+        let pool = TilePool::pack(&a, 8, 8, 4, 4);
+        // Matching contents pass the guard…
+        debug_assert_pool_matches(&pool, &a, 8, 8, 4, 4);
+        // …a forged collision does not.
+        let mut forged = a.clone();
+        forged[13] = -7.0;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            debug_assert_pool_matches(&pool, &forged, 8, 8, 4, 4)
+        }));
+        assert!(r.is_err(), "collision guard must panic on mismatched contents");
     }
 
     #[test]

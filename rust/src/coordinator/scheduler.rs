@@ -47,7 +47,8 @@ use crate::coordinator::device::{DeviceHandle, TileDone, TileJob, TileOutput, Ti
 use crate::coordinator::handle::{Cancelled, Reply};
 use crate::coordinator::policy::{self, FlightMeta, PolicyParams, SchedPolicy};
 use crate::coordinator::pool::{
-    BufferPool, FreeList, PoolElem, TilePool, WeightCache, WeightIdent, WeightKey,
+    pack_fanout, BufferPool, FreeList, PackCounters, PoolElem, TilePool, WeightCache,
+    WeightIdent, WeightKey,
 };
 use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
@@ -123,10 +124,14 @@ impl<T: Elem + PoolElem> Pools<T> {
     /// First schedule of this request: pack its operands into the
     /// tile-major arenas now — one extract pass per block and one
     /// allocation per matrix, total, overlapping whatever is already in
-    /// flight. The B (weight) pool goes through the packed-weight
-    /// cache: a hit skips extraction and packing entirely, and since
-    /// [`TilePool::pack`] is deterministic the cached pool is
-    /// byte-identical to what packing would have produced.
+    /// flight, with extraction fanned out across `pack_workers` threads
+    /// for large grids ([`TilePool::pack_with`] — bit-identical to the
+    /// serial pack for every worker count). The B (weight) pool goes
+    /// through the packed-weight cache: a hit skips extraction and
+    /// packing entirely, and since packing is deterministic the cached
+    /// pool is byte-identical to what packing would have produced.
+    /// `counters` accumulate the packing wall time for
+    /// `ServerStats::pack`.
     fn pack(
         &mut self,
         m: usize,
@@ -135,9 +140,25 @@ impl<T: Elem + PoolElem> Pools<T> {
         t: Tiler,
         weight_id: Option<u64>,
         cache: &mut WeightCache,
+        pack_workers: usize,
+        counters: &PackCounters,
     ) {
         if let Some((a, b)) = self.raw.take() {
-            let a_pool = TilePool::pack(&a, m, k, t.nm, t.nk);
+            let mut built = 0u64;
+            let mut parallel = 0u64;
+            let mut spent = Duration::ZERO;
+            // Times each arena build alone: fingerprint hashing, cache
+            // lookups and the debug collision guard below never enter
+            // `pack_time_s`.
+            let mut timed_pack = |src: &[T], rows: usize, cols: usize, bh: usize, bw: usize| {
+                let t0 = Instant::now();
+                let pool = TilePool::pack_with(src, rows, cols, bh, bw, pack_workers);
+                spent += t0.elapsed();
+                built += 1;
+                parallel += u64::from(pack_fanout(pack_workers, pool.tiles()) > 1);
+                pool
+            };
+            let a_pool = timed_pack(&a, m, k, t.nm, t.nk);
             let b_pool = if cache.enabled() {
                 let ident = match weight_id {
                     Some(id) => WeightIdent::Id(id),
@@ -145,14 +166,28 @@ impl<T: Elem + PoolElem> Pools<T> {
                 };
                 let key =
                     WeightKey { ident, k: k as u64, n: n as u64, precision: T::precision() };
-                cache.get::<T>(&key).unwrap_or_else(|| {
-                    let pool = TilePool::pack(&b, k, n, t.nk, t.nn);
-                    cache.insert(key, &pool);
-                    pool
-                })
+                match cache.get::<T>(&key) {
+                    Some(pool) => {
+                        // Debug-build collision guard: an anonymous
+                        // (fingerprint-keyed) hit must byte-match the
+                        // raw operand it claims to replace.
+                        #[cfg(debug_assertions)]
+                        if matches!(key.ident, WeightIdent::Fingerprint(_)) {
+                            let guard = crate::coordinator::pool::debug_assert_pool_matches;
+                            guard(&pool, &b, k, n, t.nk, t.nn);
+                        }
+                        pool
+                    }
+                    None => {
+                        let pool = timed_pack(&b, k, n, t.nk, t.nn);
+                        cache.insert(key, &pool);
+                        pool
+                    }
+                }
             } else {
-                TilePool::pack(&b, k, n, t.nk, t.nn)
+                timed_pack(&b, k, n, t.nk, t.nn)
             };
+            counters.record(built, parallel, spent);
             self.packed = Some((a_pool, b_pool));
         }
     }
@@ -288,6 +323,11 @@ pub(crate) struct Scheduler {
     pub(crate) draining: bool,
     /// Packed-weight LRU (scheduler-thread owned, no locks on lookup).
     weight_cache: WeightCache,
+    /// Fan-out width for operand arena extraction
+    /// (`ServeConfig::pack_workers`; 1 = serial, today's behavior).
+    pack_workers: usize,
+    /// Packing-stage counters shared with client-side stats snapshots.
+    pack_counters: Arc<PackCounters>,
     /// Tile-buffer free-lists shared with the device workers.
     bufs: Arc<BufferPool>,
     flights: FxHashMap<u64, Flight>,
@@ -313,6 +353,8 @@ impl Scheduler {
         depth: usize,
         params: PolicyParams,
         weight_cache: WeightCache,
+        pack_workers: usize,
+        pack_counters: Arc<PackCounters>,
     ) -> Self {
         let bufs = device.buffer_pool();
         Scheduler {
@@ -327,6 +369,8 @@ impl Scheduler {
             params,
             draining: false,
             weight_cache,
+            pack_workers: pack_workers.max(1),
+            pack_counters,
             bufs,
             flights: FxHashMap::default(),
             tokens: FxHashMap::default(),
@@ -438,7 +482,7 @@ impl Scheduler {
                 Operands::F32 { .. } => MatOutput::F32(vec![0.0; m * n]),
                 Operands::I32 { .. } => MatOutput::I32(vec![0; m * n]),
             };
-            self.gate.release();
+            self.gate.release(req.class);
             reply.send(req, Ok(out));
             return;
         }
@@ -493,7 +537,16 @@ impl Scheduler {
             let weight_id = f.req.weight_id;
             let payload = match &mut f.data {
                 FlightData::F32(p) => {
-                    p.pack(m, k, n, tiler, weight_id, &mut self.weight_cache);
+                    p.pack(
+                        m,
+                        k,
+                        n,
+                        tiler,
+                        weight_id,
+                        &mut self.weight_cache,
+                        self.pack_workers,
+                        &self.pack_counters,
+                    );
                     let (ap, bp) = p.packed.as_ref().expect("packed on first schedule");
                     TilePayload::F32 {
                         a: ap.tile_ref(im * gk + ik),
@@ -501,7 +554,16 @@ impl Scheduler {
                     }
                 }
                 FlightData::I32(p) => {
-                    p.pack(m, k, n, tiler, weight_id, &mut self.weight_cache);
+                    p.pack(
+                        m,
+                        k,
+                        n,
+                        tiler,
+                        weight_id,
+                        &mut self.weight_cache,
+                        self.pack_workers,
+                        &self.pack_counters,
+                    );
                     let (ap, bp) = p.packed.as_ref().expect("packed on first schedule");
                     TilePayload::I32 {
                         a: ap.tile_ref(im * gk + ik),
@@ -634,7 +696,7 @@ impl Scheduler {
             FlightData::F32(p) => MatOutput::F32(std::mem::take(&mut p.c)),
             FlightData::I32(p) => MatOutput::I32(std::mem::take(&mut p.c)),
         };
-        self.gate.release();
+        self.gate.release(f.req.class);
         f.reply.send(f.req, Ok(out));
     }
 
@@ -648,7 +710,7 @@ impl Scheduler {
         self.policy.remove(fid);
         drain_accs(&mut self.accs_f32, fid, &self.bufs.fp32);
         drain_accs(&mut self.accs_i32, fid, &self.bufs.int8);
-        self.gate.release();
+        self.gate.release(f.req.class);
         Some(f)
     }
 

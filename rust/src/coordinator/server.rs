@@ -60,9 +60,9 @@ use crate::coordinator::admission::{Admitted, Gate};
 use crate::coordinator::device::{spawn_device_pool, PrecisionInfo, TileDone};
 use crate::coordinator::handle::Reply;
 use crate::coordinator::policy::{PolicyParams, TileCosts};
-use crate::coordinator::pool::{BufferPool, WeightCache, WeightCacheCounters};
+use crate::coordinator::pool::{BufferPool, PackCounters, WeightCache, WeightCacheCounters};
 use crate::coordinator::scheduler::{Event, Scheduler, Shared};
-use crate::coordinator::stats::{ClassStats, MemPlaneStats, StatsAgg, WindowOcc};
+use crate::coordinator::stats::{ClassStats, MemPlaneStats, PackStats, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
@@ -105,6 +105,9 @@ pub struct ServerStats {
     /// Memory-plane counters: packed-weight cache hit/miss/evict and
     /// tile-buffer recycle/alloc (see [`crate::coordinator::pool`]).
     pub mem: MemPlaneStats,
+    /// Packing-stage counters: matrices packed, parallel fan-outs and
+    /// wall time spent packing (`ServeConfig::pack_workers`).
+    pub pack: PackStats,
 }
 
 /// The serving coordinator (client handle). Cheap to share across
@@ -130,6 +133,10 @@ pub struct MatMulServer {
     next_token: AtomicU64,
     /// Weight-cache counters shared with the scheduler's cache.
     cache_counters: Arc<WeightCacheCounters>,
+    /// Packing-stage counters shared with the scheduler.
+    pack_counters: Arc<PackCounters>,
+    /// Configured operand-packing fan-out width.
+    pack_workers: usize,
     /// Tile-buffer free-lists shared with the device pool + scheduler.
     bufs: Arc<BufferPool>,
 }
@@ -151,7 +158,10 @@ impl MatMulServer {
         let backend = device.backend;
         let workers = device.workers;
 
-        let gate = Arc::new(Gate::new(cfg.queue_depth));
+        let gate = Arc::new(Gate::new(
+            cfg.queue_depth,
+            cfg.class_queue_reserve.iter().map(|&r| r as usize).collect(),
+        ));
         let shared = Arc::new(Shared {
             stats: Mutex::new(StatsAgg::default()),
             window: Mutex::new(WindowOcc::default()),
@@ -190,6 +200,7 @@ impl MatMulServer {
         let cache_counters = Arc::new(WeightCacheCounters::default());
         let weight_cache =
             WeightCache::new(cfg.weight_cache_bytes, Arc::clone(&cache_counters));
+        let pack_counters = Arc::new(PackCounters::default());
         let bufs = device.buffer_pool();
         let sched = Scheduler::new(
             device,
@@ -201,6 +212,8 @@ impl MatMulServer {
             cfg.pipeline_depth,
             params,
             weight_cache,
+            cfg.pack_workers,
+            Arc::clone(&pack_counters),
         );
         let sched = std::thread::Builder::new()
             .name("maxeva-scheduler".into())
@@ -226,6 +239,8 @@ impl MatMulServer {
             queue_depth: cfg.queue_depth,
             next_token: AtomicU64::new(0),
             cache_counters,
+            pack_counters,
+            pack_workers: cfg.pack_workers.max(1),
             bufs,
         })
     }
@@ -272,6 +287,12 @@ impl MatMulServer {
     /// Device worker threads.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Operand-packing fan-out width (`ServeConfig::pack_workers`;
+    /// 1 = serial packing).
+    pub fn pack_workers(&self) -> usize {
+        self.pack_workers
     }
 
     /// Configured in-flight window.
@@ -355,7 +376,7 @@ impl MatMulServer {
         reply: Reply,
     ) -> Result<u64> {
         Self::validate(&req, &ops)?;
-        self.gate.admit(policy)?;
+        self.gate.admit(policy, req.class)?;
         let token = self.next_token.fetch_add(1, Ordering::Relaxed);
         let adm = Box::new(Admitted {
             req,
@@ -470,6 +491,11 @@ impl MatMulServer {
             tile_buffers_allocated: self.bufs.allocated(),
             tile_buffers_free: self.bufs.free(),
         };
+        let pack = PackStats {
+            matrices_packed: self.pack_counters.matrices.load(Ordering::Relaxed),
+            parallel_packs: self.pack_counters.parallel.load(Ordering::Relaxed),
+            pack_time_s: self.pack_counters.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        };
         ServerStats {
             requests: stats.count(),
             requests_fp32: stats.count_by(Precision::Fp32),
@@ -486,6 +512,7 @@ impl MatMulServer {
             mean_in_flight: window.mean(),
             max_in_flight: window.max(),
             mem,
+            pack,
         }
     }
 

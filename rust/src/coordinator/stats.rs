@@ -67,6 +67,27 @@ pub struct MemPlaneStats {
     pub tile_buffers_free: usize,
 }
 
+/// Packing-stage snapshot: how much host time the scheduler spent
+/// extracting operand matrices into tile-major arenas, and how often
+/// the extraction fanned out across pack workers
+/// (`ServeConfig::pack_workers` — see
+/// [`crate::coordinator::pool::TilePool::pack_with`]). `pack_time_s`
+/// is the wall time of the arena builds as observed on the scheduler
+/// thread — parallel fan-outs *shrink* it, so comparing it across
+/// `pack_workers` settings measures the fan-out win directly. A
+/// weight-cache hit skips the B build (only the request's A build is
+/// counted); fingerprint hashing and cache lookups are never charged
+/// here.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PackStats {
+    /// Operand matrices packed into arenas (A + uncached B per request).
+    pub matrices_packed: u64,
+    /// Packs that fanned out across more than one pack worker.
+    pub parallel_packs: u64,
+    /// Wall time spent in arena builds on the scheduler thread, seconds.
+    pub pack_time_s: f64,
+}
+
 /// Completion record for one request.
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {

@@ -69,13 +69,9 @@ impl Tiler {
             let src_off = (r0 + r) * cols + c0;
             let drow = &mut dst[r * bw..(r + 1) * bw];
             drow[..cmax].copy_from_slice(&src[src_off..src_off + cmax]);
-            for v in &mut drow[cmax..] {
-                *v = T::default();
-            }
+            drow[cmax..].fill(T::default());
         }
-        for v in &mut dst[rmax * bw..] {
-            *v = T::default();
-        }
+        dst[rmax * bw..].fill(T::default());
     }
 
     /// Accumulate a native-size result block into the `rows × cols` output
@@ -174,22 +170,15 @@ pub fn matmul_ref_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec
 /// allocation-free form the recycling device backend uses (the buffer
 /// comes from a [`crate::coordinator::pool::FreeList`]). `c` is fully
 /// overwritten; stale contents are fine.
+///
+/// Since PR 5 this executes the register-tiled compute plane
+/// ([`crate::coordinator::microkernel::matmul_f32`]), which is
+/// **bit-identical** to the historical scalar loop (kept as
+/// [`crate::coordinator::microkernel::matmul_naive_f32_into`], the
+/// oracle of `tests/compute_plane.rs`): same per-element ascending-k
+/// summation order, same zero-skip predicate, same mul-then-add ops.
 pub fn matmul_ref_f32_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    assert_eq!(c.len(), m * n, "output shape mismatch");
-    c.fill(0.0);
-    for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..kk * n + n];
-            let crow = &mut c[i * n..i * n + n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    crate::coordinator::microkernel::matmul_f32(c, a, b, m, k, n);
 }
 
 /// Reference row-major matmul for the int8 path: int8-range operands
@@ -204,23 +193,11 @@ pub fn matmul_ref_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec
 }
 
 /// [`matmul_ref_i32`] into a caller-provided `m × n` output slice (see
-/// [`matmul_ref_f32_into`]). `c` is fully overwritten.
+/// [`matmul_ref_f32_into`]). `c` is fully overwritten. Executes the
+/// register-tiled compute plane; exact regardless of blocking because
+/// wrapping integer accumulation is order-independent.
 pub fn matmul_ref_i32_into(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: usize, n: usize) {
-    assert_eq!(c.len(), m * n, "output shape mismatch");
-    c.fill(0);
-    for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            if av == 0 {
-                continue;
-            }
-            let brow = &b[kk * n..kk * n + n];
-            let crow = &mut c[i * n..i * n + n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv = cv.wrapping_add(av.wrapping_mul(bv));
-            }
-        }
-    }
+    crate::coordinator::microkernel::matmul_i32(c, a, b, m, k, n);
 }
 
 #[cfg(test)]

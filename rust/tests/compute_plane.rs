@@ -1,0 +1,234 @@
+//! Compute-plane properties (PR 5): the register-tiled microkernels
+//! and parallel operand packing, pinned against the naive scalar paths
+//! they replaced — at the kernel level and through the whole server.
+//!
+//! * `matmul_f32` / `matmul_i32` are **bit-identical** to the naive
+//!   `ikj` oracle over an exhaustive sweep of fringe shapes (every
+//!   m/n remainder class around MR/NR, k from 1 up) in both precisions;
+//! * the served fp32 output equals an offline naive-per-tile,
+//!   ascending-`ik` tiled reference **bit-for-bit** — the microkernel
+//!   path through the engine is indistinguishable from the pre-PR 5
+//!   naive path;
+//! * `pack_workers` is a pure latency knob: outputs are bit-identical
+//!   across worker counts, and packing stats are populated;
+//! * the zero-allocation steady state (PR 4) survives the new kernels
+//!   and parallel packing.
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::microkernel::{
+    matmul_f32, matmul_i32, matmul_naive_f32_into, matmul_naive_i32_into, MR_F32, NR_F32,
+};
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::coordinator::tiler::Tiler;
+use maxeva::util::prng::XorShift64;
+use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
+
+/// Tiny design (native 8×16×8 in both precisions) so tile grids are
+/// large and cheap on the reference backend.
+fn small_cfg(workers: usize, depth: usize, pack_workers: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = depth;
+    cfg.pack_workers = pack_workers;
+    cfg
+}
+
+/// Random operands with exact zeros mixed in so the kernels' zero-skip
+/// predicate is exercised on every shape.
+fn rand_f32(len: usize, rng: &mut XorShift64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if rng.gen_range(0, 5) == 0 {
+                0.0
+            } else {
+                rng.gen_range_f64(-1.0, 1.0) as f32
+            }
+        })
+        .collect()
+}
+
+fn rand_i32(len: usize, rng: &mut XorShift64) -> Vec<i32> {
+    (0..len)
+        .map(|_| {
+            if rng.gen_range(0, 5) == 0 {
+                0
+            } else {
+                rng.gen_range(0, 256) as i32 - 128
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn microkernel_bit_identical_to_naive_across_fringe_shapes() {
+    // Every m remainder class around MR (1..=MR+1), every n remainder
+    // class around NR (1..=NR+1 sampled at the boundaries), small and
+    // boundary k — the complete fringe behavior space of the blocked
+    // walk, in both element types. fp32 equality is exact (==), not
+    // tolerance-based: same summation order, same bits.
+    let mut rng = XorShift64::new(0xF1A);
+    let m_set: Vec<usize> = (1..=MR_F32 + 1)
+        .chain([2 * MR_F32 - 1, 2 * MR_F32, 2 * MR_F32 + 1])
+        .collect();
+    let n_set: Vec<usize> = (1..=3)
+        .chain([NR_F32 - 1, NR_F32, NR_F32 + 1, 2 * NR_F32 + 3])
+        .collect();
+    let k_set = [1usize, 2, 5, 16, 17];
+    for &m in &m_set {
+        for &n in &n_set {
+            for &k in &k_set {
+                let a = rand_f32(m * k, &mut rng);
+                let b = rand_f32(k * n, &mut rng);
+                let mut want = vec![f32::NAN; m * n];
+                let mut got = vec![f32::NAN; m * n];
+                matmul_naive_f32_into(&mut want, &a, &b, m, k, n);
+                matmul_f32(&mut got, &a, &b, m, k, n);
+                assert_eq!(got, want, "fp32 {m}x{k}x{n}");
+
+                let ai = rand_i32(m * k, &mut rng);
+                let bi = rand_i32(k * n, &mut rng);
+                let mut wi = vec![i32::MAX; m * n];
+                let mut gi = vec![i32::MIN; m * n];
+                matmul_naive_i32_into(&mut wi, &ai, &bi, m, k, n);
+                matmul_i32(&mut gi, &ai, &bi, m, k, n);
+                assert_eq!(gi, wi, "i32 {m}x{k}x{n}");
+            }
+        }
+    }
+}
+
+/// Offline reference of the whole engine with the **naive** per-tile
+/// kernel: extract blocks on demand, multiply each native tile with
+/// the scalar oracle, reduce partials in ascending `ik` (elementwise,
+/// like the scheduler's `BlockAcc`), write each block back once.
+fn naive_tiled_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, t: Tiler) -> Vec<f32> {
+    let (gm, gk, gn) = t.grid(m, k, n);
+    let mut c = vec![0.0f32; m * n];
+    for im in 0..gm {
+        for inn in 0..gn {
+            let mut acc = vec![0.0f32; t.nm * t.nn];
+            for ik in 0..gk {
+                let at = Tiler::extract_block(a, m, k, im, ik, t.nm, t.nk);
+                let bt = Tiler::extract_block(b, k, n, ik, inn, t.nk, t.nn);
+                let mut partial = vec![0.0f32; t.nm * t.nn];
+                matmul_naive_f32_into(&mut partial, &at, &bt, t.nm, t.nk, t.nn);
+                for (dst, src) in acc.iter_mut().zip(&partial) {
+                    *dst += src;
+                }
+            }
+            Tiler::write_block(&mut c, m, n, im, inn, t.nm, t.nn, &acc);
+        }
+    }
+    c
+}
+
+#[test]
+fn served_fp32_bit_identical_to_naive_tiled_reference() {
+    // The acceptance property: swapping the per-tile kernel from the
+    // naive loop to the microkernel changed NOTHING observable — the
+    // served output still equals the naive-kernel tiled reference
+    // bit-for-bit (ascending-ik reduction in both).
+    let mut server = MatMulServer::start(&small_cfg(2, 4, 1)).unwrap();
+    let tiler = Tiler::new(server.native());
+    let mut rng = XorShift64::new(0xD00D);
+    let reqs: Vec<MatMulRequest> = vec![
+        MatMulRequest::f32(0, 8, 16, 8),   // exactly one native tile
+        MatMulRequest::f32(1, 23, 39, 17), // fringe everywhere
+        MatMulRequest::f32(2, 40, 64, 24), // multi-tile interior
+    ];
+    let batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)> = reqs
+        .iter()
+        .map(|r| {
+            let a = rand_f32((r.m * r.k) as usize, &mut rng);
+            let b = rand_f32((r.k * r.n) as usize, &mut rng);
+            (*r, a, b)
+        })
+        .collect();
+    let outs = server.run_batch(batch.clone()).unwrap();
+    for ((req, a, b), got) in batch.iter().zip(&outs) {
+        let want = naive_tiled_f32(a, b, req.m as usize, req.k as usize, req.n as usize, tiler);
+        assert_eq!(got, &want, "request {} diverged from the naive-kernel engine", req.id);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn outputs_bit_identical_across_pack_workers() {
+    // pack_workers is a pure latency knob: a mixed fp32/int8 batch with
+    // tile grids big enough to actually fan out must produce identical
+    // bytes at 1 and 4 pack workers — and the parallel leg must have
+    // really packed in parallel (counters prove it wasn't a silent
+    // serial fallback).
+    let reqs: Vec<MatMulRequest> = vec![
+        MatMulRequest::f32(0, 40, 96, 40),  // A 5×6, B 6×5 tile grids
+        MatMulRequest::int8(1, 24, 128, 32),
+        MatMulRequest::f32(2, 7, 5, 3),     // sub-tile fringe request
+        MatMulRequest::f32(3, 64, 160, 48),
+    ];
+    let batch = materialize_mixed(&reqs, 0xBEEF);
+    let serve = |pack_workers: usize| {
+        let mut server = MatMulServer::start(&small_cfg(2, 4, pack_workers)).unwrap();
+        let outs = server.run_batch_mixed(batch.clone()).unwrap();
+        let pack = server.stats().pack;
+        server.shutdown();
+        (outs, pack)
+    };
+    let (serial, pack1) = serve(1);
+    let (parallel, pack4) = serve(4);
+    assert_eq!(serial, parallel, "pack_workers must never change outputs");
+    assert_eq!(pack1.parallel_packs, 0, "serial leg must not fan out");
+    assert!(pack4.parallel_packs > 0, "parallel leg must fan out: {pack4:?}");
+    assert_eq!(
+        pack1.matrices_packed, pack4.matrices_packed,
+        "same batch packs the same matrices"
+    );
+    assert!(pack1.pack_time_s > 0.0 && pack4.pack_time_s > 0.0);
+}
+
+#[test]
+fn zero_alloc_steady_state_survives_the_compute_plane() {
+    // PR 4's headline property re-asserted on top of PR 5: with the
+    // microkernels serving tiles and packing fanned out across threads,
+    // the free-list `allocated` counter still plateaus (parallel
+    // packing builds arenas, which were never free-listed; tile/acc
+    // buffers keep recycling).
+    let mut cfg = small_cfg(1, 1, 4);
+    cfg.weight_cache_bytes = 1 << 20;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let shape = MatMulRequest::f32(0, 16, 96, 16).with_weight_id(3);
+    let (a, b) = match materialize_mixed(&[shape], 99).remove(0).1 {
+        Operands::F32 { a, b } => (a, b),
+        _ => unreachable!(),
+    };
+    let run_one = |id: u64| {
+        let out = server
+            .submit(
+                MatMulRequest::f32(id, 16, 96, 16).with_weight_id(3),
+                Operands::F32 { a: a.clone(), b: b.clone() },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(matches!(out, MatOutput::F32(_)));
+    };
+    for id in 0..4 {
+        run_one(id);
+    }
+    let warm = server.stats().mem;
+    assert!(warm.tile_buffers_allocated > 0);
+    for id in 4..12 {
+        run_one(id);
+    }
+    let steady = server.stats().mem;
+    assert_eq!(
+        steady.tile_buffers_allocated, warm.tile_buffers_allocated,
+        "steady state must allocate zero tile buffers: {steady:?}"
+    );
+    assert!(steady.tile_buffers_recycled > warm.tile_buffers_recycled);
+    server.shutdown();
+}

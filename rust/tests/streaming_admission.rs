@@ -288,3 +288,75 @@ fn streaming_and_batch_calls_coexist_on_one_server() {
     assert_eq!(server.stats().requests, 2);
     server.shutdown();
 }
+
+#[test]
+fn class_queue_reserve_keeps_bulk_class_out_of_latency_slots() {
+    // PR 5: per-class admission reserves. queue_depth 3 with one slot
+    // reserved for class 0 → the bulk class can hold at most the two
+    // shared slots, and a latency-class request still admits while the
+    // bulk flood is parked in the queue.
+    let mut cfg = small_cfg(1, 1, 3);
+    cfg.class_queue_reserve = vec![1, 0];
+    let server = MatMulServer::start(&cfg).unwrap();
+    // 64×256×64 on the 8×16×8 native → 1024 tiles per request: slow
+    // enough that nothing retires while the admissions race below runs.
+    let bulk_req = |id: u64| MatMulRequest::f32(id, 64, 256, 64).with_class(1);
+    let mut bulk = Vec::new();
+    for id in 0..2 {
+        let (a, b) = f32_ops(&bulk_req(id), 700 + id);
+        bulk.push(
+            server
+                .submit_with_policy(bulk_req(id), Operands::F32 { a, b }, AdmissionPolicy::Reject)
+                .unwrap(),
+        );
+    }
+    // Third bulk request: the shared pool (3 − 1 reserved) is full.
+    let (a, b) = f32_ops(&bulk_req(2), 702);
+    let err = server
+        .submit_with_policy(bulk_req(2), Operands::F32 { a, b }, AdmissionPolicy::Reject)
+        .unwrap_err();
+    assert!(err.downcast_ref::<QueueFull>().is_some(), "{err}");
+    // The latency class still finds its reserved slot immediately.
+    let lat_req = MatMulRequest::f32(10, 8, 16, 8).with_class(0);
+    let (a, b) = f32_ops(&lat_req, 710);
+    let lat = server
+        .submit_with_policy(lat_req, Operands::F32 { a, b }, AdmissionPolicy::Reject)
+        .expect("reserved slot must admit the latency class");
+    lat.wait().unwrap();
+    for h in bulk {
+        h.wait().unwrap();
+    }
+    assert_eq!(server.stats().requests, 3);
+    server.shutdown();
+}
+
+#[test]
+fn empty_class_reserve_is_the_plain_semaphore() {
+    // Default (no reserves): any class fills the whole queue — the
+    // pre-PR 5 gate bit-for-bit.
+    let cfg = small_cfg(1, 1, 2);
+    let server = MatMulServer::start(&cfg).unwrap();
+    let req = |id: u64| MatMulRequest::f32(id, 32, 128, 32).with_class(1);
+    let mut handles = Vec::new();
+    for id in 0..2 {
+        let (a, b) = f32_ops(&req(id), 800 + id);
+        handles.push(
+            server
+                .submit_with_policy(req(id), Operands::F32 { a, b }, AdmissionPolicy::Reject)
+                .unwrap(),
+        );
+    }
+    let (a, b) = f32_ops(&MatMulRequest::f32(5, 8, 16, 8), 810);
+    let err = server
+        .submit_with_policy(
+            MatMulRequest::f32(5, 8, 16, 8),
+            Operands::F32 { a, b },
+            AdmissionPolicy::Reject,
+        )
+        .unwrap_err();
+    assert!(err.downcast_ref::<QueueFull>().is_some(), "no reserve for class 0: {err}");
+    for h in handles {
+        h.wait().unwrap();
+    }
+    server.shutdown();
+}
