@@ -14,7 +14,7 @@
 //! runs anywhere.
 //!
 //!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] \
-//!         [--load-json PATH] [--weight-json PATH]
+//!         [--load-json PATH] [--weight-json PATH] [--chaos-json PATH]
 //!
 //! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
 //! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
@@ -22,7 +22,10 @@
 //! PATH` writes the open-loop latency-under-load report (per-class
 //! queueing/service/latency percentiles, FIFO vs WeightedFair);
 //! `--weight-json PATH` writes the weight-reuse serving report (packed
-//! weight cache cold vs warm, packing time saved).
+//! weight cache cold vs warm, packing time saved); `--chaos-json PATH`
+//! writes the fault-tolerance report (fault-free vs faulty-worker leg:
+//! degradation, injected/recovered fault counts — uploaded as the
+//! `chaos-report` artifact by the `chaos` CI job).
 
 mod common;
 
@@ -171,6 +174,11 @@ fn main() {
     let weight_json_path = args
         .iter()
         .position(|a| a == "--weight-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let chaos_json_path = args
+        .iter()
+        .position(|a| a == "--chaos-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
 
@@ -624,6 +632,133 @@ fn main() {
         );
         match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
             Ok(()) => println!("\nwrote latency-under-load report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
+
+    common::banner("fault tolerance: faulty worker degrades throughput, not availability");
+    // One worker of a small reference-backend pool misbehaves (delays,
+    // hangs and errors, budget-capped); deadlines + retries are armed.
+    // Every request must still resolve with the fault-free leg's exact
+    // bits — the faulty worker costs wall time, never answers.
+    let chaos_seed = std::env::var("MAXEVA_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1u64);
+    let mut chaos_design = DesignConfig::flagship(Precision::Fp32);
+    (chaos_design.x, chaos_design.y, chaos_design.z) = (2, 4, 2);
+    (chaos_design.m, chaos_design.k, chaos_design.n) = (4, 4, 4);
+    let n_chaos = if quick { 8usize } else { 16 };
+    let chaos_reqs: Vec<MatMulRequest> = (0..n_chaos)
+        .map(|i| MatMulRequest::f32(1500 + i as u64, 32, 64, 32))
+        .collect();
+    let chaos_batch = materialize_mixed(&chaos_reqs, 9090);
+    let chaos_ops: f64 = chaos_reqs.iter().map(|r| 2.0 * r.macs() as f64).sum();
+    let mut chaos_walls = Vec::new();
+    let mut chaos_outs = Vec::new();
+    let mut chaos_fault_stats = None;
+    for faulty in [false, true] {
+        let mut leg_cfg = ServeConfig::new(chaos_design.clone());
+        leg_cfg.backend = BackendKind::Reference;
+        leg_cfg.workers = 2;
+        leg_cfg.pipeline_depth = 4;
+        leg_cfg.queue_depth = 0;
+        if faulty {
+            let mut plan = maxeva::coordinator::fault::FaultPlan::new(
+                chaos_seed,
+                0.4,
+                vec![
+                    maxeva::coordinator::fault::FaultKind::Delay,
+                    maxeva::coordinator::fault::FaultKind::Hang,
+                    maxeva::coordinator::fault::FaultKind::Error,
+                ],
+            );
+            plan.worker = Some(0);
+            plan.max_faults = 12;
+            leg_cfg.fault_plan = Some(plan);
+            leg_cfg.max_tile_retries = 8;
+            leg_cfg.tile_timeout_mult = 1.0;
+            leg_cfg.tile_timeout_floor_ms = 60;
+            leg_cfg.quarantine_after = 3;
+        }
+        let leg = MatMulServer::start(&leg_cfg).expect("fault-tolerance server");
+        let t0 = Instant::now();
+        let handles: Vec<_> = chaos_batch
+            .iter()
+            .map(|(req, ops)| leg.submit(*req, ops.clone()).unwrap())
+            .collect();
+        let outs: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                h.wait_timeout(Duration::from_secs(120))
+                    .expect("request must resolve under chaos")
+                    .expect("request must recover, not fail")
+            })
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let s = leg.stats();
+        println!(
+            "  {} leg: wall {wall:.3} s → {:.2} GFLOPs emulated · {} requests · faults \
+             injected {} (timeouts {}, retries {}, quarantined {})",
+            if faulty { "faulty " } else { "healthy" },
+            chaos_ops / wall / 1e9,
+            s.requests,
+            s.faults.injected(),
+            s.faults.timeouts,
+            s.faults.retries,
+            s.faults.quarantined,
+        );
+        chaos_walls.push(wall);
+        chaos_outs.push(outs);
+        if faulty {
+            chaos_fault_stats = Some(s.faults);
+        }
+        leg.shutdown();
+    }
+    let chaos_identical = chaos_outs[0] == chaos_outs[1];
+    let chaos_faults = chaos_fault_stats.expect("faulty leg ran");
+    println!(
+        "  degradation {:.2}× wall · availability 100% ({} / {} resolved) · outputs \
+         bit-identical: {chaos_identical}",
+        chaos_walls[1] / chaos_walls[0].max(1e-12),
+        n_chaos,
+        n_chaos,
+    );
+    assert!(
+        chaos_identical,
+        "a recovered chaos run must be bit-identical to the fault-free leg"
+    );
+    assert!(chaos_faults.injected() > 0, "the chaos plan never fired");
+    assert_eq!(chaos_faults.retries_exhausted, 0, "no request may fail under this budget");
+    if let Some(path) = chaos_json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_fault_tolerance".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("seed".into(), Json::Num(chaos_seed as f64));
+        o.insert("requests".into(), Json::Num(n_chaos as f64));
+        o.insert("healthy_wall_s".into(), Json::Num(chaos_walls[0]));
+        o.insert("faulty_wall_s".into(), Json::Num(chaos_walls[1]));
+        o.insert(
+            "degradation".into(),
+            Json::Num(chaos_walls[1] / chaos_walls[0].max(1e-12)),
+        );
+        o.insert("faults_injected".into(), Json::Num(chaos_faults.injected() as f64));
+        o.insert("timeouts".into(), Json::Num(chaos_faults.timeouts as f64));
+        o.insert("retries".into(), Json::Num(chaos_faults.retries as f64));
+        o.insert(
+            "checksum_failures".into(),
+            Json::Num(chaos_faults.checksum_failures as f64),
+        );
+        o.insert("worker_deaths".into(), Json::Num(chaos_faults.worker_deaths as f64));
+        o.insert("respawns".into(), Json::Num(chaos_faults.respawns as f64));
+        o.insert("quarantined".into(), Json::Num(chaos_faults.quarantined as f64));
+        o.insert(
+            "retries_exhausted".into(),
+            Json::Num(chaos_faults.retries_exhausted as f64),
+        );
+        o.insert("bit_identical".into(), Json::Bool(chaos_identical));
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote chaos report to {path}"),
             Err(e) => println!("\nWARN: could not write {path}: {e}"),
         }
     }

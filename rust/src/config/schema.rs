@@ -3,6 +3,7 @@
 use crate::arch::device::AieDevice;
 use crate::arch::precision::Precision;
 use crate::config::json::Json;
+use crate::coordinator::fault::FaultPlan;
 use crate::kernels::matmul::MatMulKernel;
 use crate::optimizer::array::ArrayCandidate;
 use crate::placement::pattern::Pattern;
@@ -355,6 +356,38 @@ pub struct ServeConfig {
     /// traffic. Out-of-range classes clamp to the last entry; ignored
     /// while `queue_depth = 0`.
     pub class_queue_reserve: Vec<u64>,
+    /// Deterministic chaos schedule for the device pool (`None` =
+    /// disabled, the default: no checksumming, no injection, no change
+    /// to the steady-state hot path). See
+    /// [`crate::coordinator::fault::FaultPlan`].
+    pub fault_plan: Option<FaultPlan>,
+    /// Execution attempts a tile gets beyond its first: a tile that
+    /// errors, times out, or fails checksum verification is re-packed
+    /// from the arenas and re-dispatched (preferring a different
+    /// worker) up to this many times before its flight fails with
+    /// [`crate::coordinator::fault::TileRetriesExhausted`]. `0`
+    /// restores the historical fail-on-first-error behavior.
+    pub max_tile_retries: u32,
+    /// Per-tile deadline, as a multiple of the tile's simulated device
+    /// period (the precision's `period_cycles / freq_hz`). `0.0`
+    /// (default) disables deadlines — a lost completion blocks its
+    /// flight forever, the historical behavior. Because the simulated
+    /// period (µs) undershoots host execution time (ms), the armed
+    /// deadline is never shorter than `tile_timeout_floor_ms`.
+    pub tile_timeout_mult: f64,
+    /// Lower bound on any armed tile deadline, milliseconds — keeps
+    /// `tile_timeout_mult` calibrated against simulated device time
+    /// from flagging host-speed reference tiles as lost.
+    pub tile_timeout_floor_ms: u64,
+    /// Consecutive faults (errors, timeouts, checksum failures) after
+    /// which a worker is quarantined: it stops receiving new tiles
+    /// while any healthy worker remains. `0` = never quarantine.
+    pub quarantine_after: u32,
+    /// Graceful-shutdown drain budget, milliseconds: shutdown waits
+    /// this long for in-flight tiles, then fails stragglers with
+    /// [`crate::coordinator::fault::DrainDeadlineExpired`] instead of
+    /// hanging. `0` = unbounded drain, the historical behavior.
+    pub drain_deadline_ms: u64,
 }
 
 impl ServeConfig {
@@ -373,6 +406,12 @@ impl ServeConfig {
             aging_threshold: 64,
             pack_workers: 1,
             class_queue_reserve: Vec::new(),
+            fault_plan: None,
+            max_tile_retries: 2,
+            tile_timeout_mult: 0.0,
+            tile_timeout_floor_ms: 50,
+            quarantine_after: 3,
+            drain_deadline_ms: 0,
         }
     }
 
@@ -398,6 +437,17 @@ impl ServeConfig {
         o.insert("pack_workers".into(), Json::Num(self.pack_workers as f64));
         let reserve = self.class_queue_reserve.iter().map(|&r| Json::Num(r as f64)).collect();
         o.insert("class_queue_reserve".into(), Json::Arr(reserve));
+        if let Some(plan) = &self.fault_plan {
+            o.insert("fault_plan".into(), plan.to_json());
+        }
+        o.insert("max_tile_retries".into(), Json::Num(self.max_tile_retries as f64));
+        o.insert("tile_timeout_mult".into(), Json::Num(self.tile_timeout_mult));
+        o.insert(
+            "tile_timeout_floor_ms".into(),
+            Json::Num(self.tile_timeout_floor_ms as f64),
+        );
+        o.insert("quarantine_after".into(), Json::Num(self.quarantine_after as f64));
+        o.insert("drain_deadline_ms".into(), Json::Num(self.drain_deadline_ms as f64));
         Json::Obj(o)
     }
 
@@ -431,6 +481,18 @@ impl ServeConfig {
         };
         let class_weights = u64_list("class_weights", vec![1, 1, 1, 1])?;
         let class_queue_reserve = u64_list("class_queue_reserve", Vec::new())?;
+        let fault_plan = match v.get("fault_plan") {
+            None => None,
+            Some(p) => Some(FaultPlan::from_json(p)?),
+        };
+        let tile_timeout_mult =
+            v.get("tile_timeout_mult").and_then(Json::as_f64).unwrap_or(0.0);
+        if !tile_timeout_mult.is_finite() || tile_timeout_mult < 0.0 {
+            return Err(ConfigError::Invalid(
+                "tile_timeout_mult",
+                tile_timeout_mult.to_string(),
+            ));
+        }
         Ok(ServeConfig {
             design,
             artifacts_dir: v
@@ -458,6 +520,24 @@ impl ServeConfig {
                 .unwrap_or(64),
             pack_workers: v.get("pack_workers").and_then(Json::as_u64).unwrap_or(1) as usize,
             class_queue_reserve,
+            fault_plan,
+            max_tile_retries: v
+                .get("max_tile_retries")
+                .and_then(Json::as_u64)
+                .unwrap_or(2) as u32,
+            tile_timeout_mult,
+            tile_timeout_floor_ms: v
+                .get("tile_timeout_floor_ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(50),
+            quarantine_after: v
+                .get("quarantine_after")
+                .and_then(Json::as_u64)
+                .unwrap_or(3) as u32,
+            drain_deadline_ms: v
+                .get("drain_deadline_ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
         })
     }
 
@@ -545,6 +625,12 @@ mod tests {
         assert_eq!(c.aging_threshold, 64);
         assert_eq!(c.pack_workers, 1, "packing defaults to serial");
         assert!(c.class_queue_reserve.is_empty(), "admission defaults to unreserved");
+        assert_eq!(c.fault_plan, None, "fault injection defaults off");
+        assert_eq!(c.max_tile_retries, 2);
+        assert_eq!(c.tile_timeout_mult, 0.0, "tile deadlines default off");
+        assert_eq!(c.tile_timeout_floor_ms, 50);
+        assert_eq!(c.quarantine_after, 3);
+        assert_eq!(c.drain_deadline_ms, 0, "drain defaults unbounded");
     }
 
     #[test]
@@ -576,6 +662,19 @@ mod tests {
         c.aging_threshold = 512;
         c.pack_workers = 6;
         c.class_queue_reserve = vec![3, 0, 1];
+        c.fault_plan = Some({
+            use crate::coordinator::fault::FaultKind;
+            let mut p = FaultPlan::new(99, 0.125, vec![FaultKind::Hang, FaultKind::Corrupt]);
+            p.worker = Some(1);
+            p.delay_ms = 9;
+            p.max_faults = 17;
+            p
+        });
+        c.max_tile_retries = 5;
+        c.tile_timeout_mult = 2048.0;
+        c.tile_timeout_floor_ms = 120;
+        c.quarantine_after = 7;
+        c.drain_deadline_ms = 1500;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
         // And through a file, like the launcher loads it.
@@ -627,6 +726,26 @@ mod tests {
         assert!(matches!(
             ServeConfig::from_json(&v),
             Err(ConfigError::Invalid("class_queue_reserve", _))
+        ));
+    }
+
+    #[test]
+    fn bad_fault_knobs_rejected() {
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"tile_timeout_mult":-1.0}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("tile_timeout_mult", _))
+        ));
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"fault_plan":{"rate":0.5,"kinds":["sparkle"]}}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("fault_plan.kinds", _))
         ));
     }
 

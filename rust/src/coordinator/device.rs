@@ -1,6 +1,6 @@
 //! The device worker pool: owns the PJRT runtime (whose handles are not
-//! `Send`) and serves native-size tile jobs over a channel — the software
-//! stand-in for the AIE array device.
+//! `Send`) and serves native-size tile jobs over per-worker channels —
+//! the software stand-in for the AIE array device.
 //!
 //! # Job model (the pipelined dataflow)
 //!
@@ -16,6 +16,25 @@
 //! executed which tile. This is the host-side mirror of the paper's
 //! ping-pong buffering (eq. 2): while a worker multiplies tile *i*, the
 //! host packs/accumulates tiles *i±window*.
+//!
+//! # Dispatch and supervision (the fault-tolerant pool)
+//!
+//! Each worker owns a private job queue; [`DeviceHandle::dispatch`]
+//! routes a job to the least-loaded **healthy** worker, honouring an
+//! `avoid` hint so a retried tile lands somewhere else. Workers carry
+//! per-worker health gauges ([`DeviceHandle::health_snapshot`]):
+//! repeated consecutive faults quarantine a worker (it stops receiving
+//! new tiles while any healthy peer remains), a dead worker thread is
+//! detected by [`DeviceHandle::supervise`] and respawned, and when a
+//! respawn fails the pool shrinks gracefully around the loss. Output
+//! placement is worker-independent (the scheduler reduces by tag in
+//! ascending-`ik` order), so dispatch choice never affects results —
+//! see the "Failure model" section of [`crate::coordinator`].
+//!
+//! Deterministic chaos — seeded injection of errors, panics, delays,
+//! lost completions and corrupted outputs — wraps the execution path
+//! when a [`FaultPlan`] is configured; see
+//! [`crate::coordinator::fault`]. Without a plan, none of it runs.
 //!
 //! # Precision
 //!
@@ -44,8 +63,10 @@
 
 use crate::arch::precision::Precision;
 use crate::config::schema::{BackendKind, DesignConfig};
+use crate::coordinator::fault::{fnv1a_words, FaultCounters, FaultInjector, FaultKind, FaultPlan};
 use crate::coordinator::microkernel::{matmul_f32, matmul_i32};
 use crate::coordinator::pool::{BufferPool, TileRef, FREE_LIST_CAP};
+use crate::coordinator::stats::WorkerHealth;
 use crate::placement::placer::place_design;
 use crate::runtime::{
     artifact_path, artifacts_available, named_artifact_available, pjrt_compiled, Runtime,
@@ -53,9 +74,9 @@ use crate::runtime::{
 use crate::sim::engine::{simulate_design, SimConfig};
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Operand tiles of one job, typed by precision. `F32` carries an
@@ -87,6 +108,47 @@ pub enum TileOutput {
     I32(Vec<i32>),
 }
 
+impl TileOutput {
+    /// Number of output elements.
+    pub fn len(&self) -> usize {
+        match self {
+            TileOutput::F32(v) => v.len(),
+            TileOutput::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// FNV-1a checksum over a tile output's element bits — attached to
+/// completions in chaos mode, re-derived by the scheduler's verify
+/// pass ([`FaultKind::Corrupt`] detection).
+pub fn output_crc(out: &TileOutput) -> u64 {
+    match out {
+        TileOutput::F32(v) => fnv1a_words(v.iter().map(|x| x.to_bits())),
+        TileOutput::I32(v) => fnv1a_words(v.iter().map(|x| *x as u32)),
+    }
+}
+
+/// Flip one element of a tile output (bit-level XOR, so the change is
+/// guaranteed visible to [`output_crc`]).
+fn corrupt_output(out: &mut TileOutput, idx: usize) {
+    match out {
+        TileOutput::F32(v) => {
+            if let Some(x) = v.get_mut(idx) {
+                *x = f32::from_bits(x.to_bits() ^ 1);
+            }
+        }
+        TileOutput::I32(v) => {
+            if let Some(x) = v.get_mut(idx) {
+                *x ^= 1;
+            }
+        }
+    }
+}
+
 /// A tagged native-size tile job.
 pub struct TileJob {
     /// Correlation tag echoed back in [`TileDone`].
@@ -100,6 +162,13 @@ pub struct TileJob {
 /// Completion of one tile job.
 pub struct TileDone {
     pub tag: u64,
+    /// Worker index that executed (or faulted) the job — the address
+    /// retry/redispatch avoids and health accounting charges.
+    pub worker: usize,
+    /// Output checksum, attached only in chaos mode (a configured
+    /// [`FaultPlan`]); `None` on the default path keeps checksumming
+    /// off the hot loop entirely.
+    pub crc: Option<u64>,
     pub result: Result<TileOutput>,
 }
 
@@ -126,10 +195,158 @@ pub struct PrecisionInfo {
     pub period_cycles: f64,
 }
 
+/// A worker's dispatch eligibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WorkerState {
+    /// Eligible for new tiles.
+    Healthy,
+    /// Alive but benched after repeated consecutive faults: receives
+    /// new tiles only when no healthy worker remains.
+    Quarantined,
+    /// Thread gone and respawn failed — the pool shrank around it.
+    Dead,
+}
+
+const STATE_HEALTHY: u8 = 0;
+const STATE_QUARANTINED: u8 = 1;
+const STATE_DEAD: u8 = 2;
+
+/// One worker's shared health gauges (written by dispatch, the worker
+/// thread, and supervision; read by stats snapshots).
+#[derive(Debug, Default)]
+struct WorkerGauges {
+    state: AtomicU8,
+    /// Jobs dispatched but not yet completed/swallowed (the dispatch
+    /// load-balance key).
+    outstanding: AtomicUsize,
+    /// Tiles actually executed (faulted-before-execution tiles are not
+    /// counted).
+    executed: AtomicU64,
+    /// Faults charged to this worker (injected or organic; cumulative).
+    faults: AtomicU64,
+    /// Consecutive faults since the last success — the quarantine
+    /// trigger, reset by any clean completion.
+    consecutive: AtomicU32,
+    /// Times this worker slot was respawned after a death.
+    respawns: AtomicU32,
+}
+
+/// Shared per-worker health for the whole pool. The server keeps an
+/// `Arc` for stats snapshots after the [`DeviceHandle`] moves into the
+/// scheduler thread.
+#[derive(Debug)]
+pub(crate) struct PoolHealth {
+    workers: Vec<WorkerGauges>,
+}
+
+impl PoolHealth {
+    fn new(n: usize) -> Self {
+        PoolHealth { workers: (0..n).map(|_| WorkerGauges::default()).collect() }
+    }
+
+    fn state(&self, w: usize) -> WorkerState {
+        match self.workers[w].state.load(Ordering::Relaxed) {
+            STATE_HEALTHY => WorkerState::Healthy,
+            STATE_QUARANTINED => WorkerState::Quarantined,
+            _ => WorkerState::Dead,
+        }
+    }
+
+    fn set_state(&self, w: usize, s: WorkerState) {
+        let v = match s {
+            WorkerState::Healthy => STATE_HEALTHY,
+            WorkerState::Quarantined => STATE_QUARANTINED,
+            WorkerState::Dead => STATE_DEAD,
+        };
+        self.workers[w].state.store(v, Ordering::Relaxed);
+    }
+
+    fn inc_outstanding(&self, w: usize) {
+        self.workers[w].outstanding.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn dec_outstanding(&self, w: usize) {
+        let _ = self.workers[w].outstanding.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| v.checked_sub(1),
+        );
+    }
+
+    fn outstanding(&self, w: usize) -> usize {
+        self.workers[w].outstanding.load(Ordering::Relaxed)
+    }
+
+    fn note_executed(&self, w: usize) {
+        self.workers[w].executed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fresh thread, fresh queue: clear the load gauge and the
+    /// consecutive-fault streak (jobs queued at the dead worker are
+    /// gone; their tags resolve via tile deadlines).
+    fn reset_after_respawn(&self, w: usize) {
+        let g = &self.workers[w];
+        g.outstanding.store(0, Ordering::Relaxed);
+        g.consecutive.store(0, Ordering::Relaxed);
+        g.respawns.fetch_add(1, Ordering::Relaxed);
+        g.state.store(STATE_HEALTHY, Ordering::Relaxed);
+    }
+
+    /// Snapshot every worker's gauges (stats path).
+    pub(crate) fn snapshot(&self) -> Vec<WorkerHealth> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(w, g)| WorkerHealth {
+                worker: w,
+                state: match g.state.load(Ordering::Relaxed) {
+                    STATE_HEALTHY => "healthy",
+                    STATE_QUARANTINED => "quarantined",
+                    _ => "dead",
+                },
+                outstanding: g.outstanding.load(Ordering::Relaxed),
+                executed: g.executed.load(Ordering::Relaxed),
+                faults: g.faults.load(Ordering::Relaxed),
+                consecutive_faults: g.consecutive.load(Ordering::Relaxed),
+                respawns: g.respawns.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+/// One worker's dispatch endpoint.
+struct WorkerSlot {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Everything a (re)spawned worker thread needs — kept by the handle so
+/// supervision can rebuild a dead worker in place.
+#[derive(Clone)]
+struct WorkerCtx {
+    use_pjrt: bool,
+    dir: PathBuf,
+    name_f32: String,
+    name_i32: String,
+    native_f32: (u64, u64, u64),
+    native_i32: (u64, u64, u64),
+    period_f32: u64,
+    period_i32: u64,
+    cycles: Arc<AtomicU64>,
+    invocations: Arc<AtomicU64>,
+    bufs: Arc<BufferPool>,
+    injector: Option<FaultInjector>,
+    counters: Arc<FaultCounters>,
+    health: Arc<PoolHealth>,
+}
+
 /// Handle to the running device worker pool.
 pub struct DeviceHandle {
-    tx: mpsc::Sender<Msg>,
-    joins: Vec<JoinHandle<()>>,
+    slots: Vec<WorkerSlot>,
+    ctx: WorkerCtx,
+    /// Round-robin cursor breaking least-loaded ties, so equal-load
+    /// dispatch spreads instead of pinning to worker 0.
+    rr: usize,
     /// Native fp32 design size (nm, nk, nn).
     pub native: (u64, u64, u64),
     /// Native int8 design size (nm, nk, nn) — differs from fp32 because
@@ -143,7 +360,7 @@ pub struct DeviceHandle {
     pub period_cycles_int8: f64,
     /// Device frequency.
     pub freq_hz: f64,
-    /// Number of device worker threads.
+    /// Number of device worker threads the pool started with.
     pub workers: usize,
     /// Resolved backend ("pjrt" or "reference").
     pub backend: &'static str,
@@ -156,15 +373,141 @@ pub struct DeviceHandle {
 }
 
 impl DeviceHandle {
-    /// Submit one tagged native tile job.
-    pub fn submit(&self, job: TileJob) -> Result<()> {
-        self.tx
-            .send(Msg::Job(job))
-            .map_err(|_| anyhow!("device workers gone"))
+    /// Submit one tagged native tile job to the least-loaded healthy
+    /// worker.
+    pub fn submit(&mut self, job: TileJob) -> Result<()> {
+        self.dispatch(job, None).map(|_| ())
+    }
+
+    /// Route one job, preferring healthy workers and honouring the
+    /// `avoid` hint (a retried tile goes somewhere other than the
+    /// worker that just faulted it, when possible). Falls back to
+    /// quarantined workers rather than refusing service; errors only
+    /// when no live worker remains. Returns the chosen worker index.
+    pub(crate) fn dispatch(&mut self, job: TileJob, avoid: Option<usize>) -> Result<usize> {
+        let mut job = job;
+        loop {
+            let Some(w) = self
+                .pick(true, avoid)
+                .or_else(|| self.pick(true, None))
+                .or_else(|| self.pick(false, avoid))
+                .or_else(|| self.pick(false, None))
+            else {
+                return Err(anyhow!("no live device workers (pool exhausted)"));
+            };
+            self.rr = self.rr.wrapping_add(1);
+            self.ctx.health.inc_outstanding(w);
+            match self.slots[w].tx.send(Msg::Job(job)) {
+                Ok(()) => return Ok(w),
+                Err(mpsc::SendError(msg)) => {
+                    // The worker died with its queue (its receiver is
+                    // gone). Revive it — or shrink past it — and re-pick.
+                    self.ctx.health.dec_outstanding(w);
+                    self.revive(w);
+                    match msg {
+                        Msg::Job(j) => job = j,
+                        Msg::Shutdown => return Err(anyhow!("device workers gone")),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Least-outstanding eligible worker, round-robin tie-broken.
+    fn pick(&self, healthy_only: bool, avoid: Option<usize>) -> Option<usize> {
+        let n = self.slots.len();
+        let mut best: Option<(usize, usize)> = None;
+        for i in 0..n {
+            let w = (self.rr + i) % n;
+            match self.ctx.health.state(w) {
+                WorkerState::Dead => continue,
+                WorkerState::Quarantined if healthy_only => continue,
+                _ => {}
+            }
+            if avoid == Some(w) {
+                continue;
+            }
+            let load = self.ctx.health.outstanding(w);
+            match best {
+                Some((b, _)) if b <= load => {}
+                _ => best = Some((load, w)),
+            }
+        }
+        best.map(|(_, w)| w)
+    }
+
+    /// Charge one fault (error / timeout / checksum failure) to a
+    /// worker; quarantine it once `quarantine_after` consecutive faults
+    /// accumulate (`0` = never). Returns `true` if this call newly
+    /// quarantined the worker.
+    pub(crate) fn record_fault(&self, w: usize, quarantine_after: u32) -> bool {
+        let Some(g) = self.ctx.health.workers.get(w) else { return false };
+        g.faults.fetch_add(1, Ordering::Relaxed);
+        let streak = g.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if quarantine_after > 0
+            && streak >= quarantine_after
+            && self.ctx.health.state(w) == WorkerState::Healthy
+        {
+            self.ctx.health.set_state(w, WorkerState::Quarantined);
+            self.ctx.counters.quarantined.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// A clean completion from `w`: reset its consecutive-fault streak.
+    pub(crate) fn record_ok(&self, w: usize) {
+        if let Some(g) = self.ctx.health.workers.get(w) {
+            g.consecutive.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Sweep for dead worker threads and respawn them (pool shrink on
+    /// respawn failure). Cheap when everyone is alive — one atomic
+    /// `is_finished` load per worker — so the scheduler runs it on its
+    /// deadline ticks.
+    pub(crate) fn supervise(&mut self) {
+        for w in 0..self.slots.len() {
+            if self.ctx.health.state(w) == WorkerState::Dead {
+                continue;
+            }
+            let gone = match self.slots[w].join.as_ref() {
+                Some(j) => j.is_finished(),
+                None => true,
+            };
+            if gone {
+                self.revive(w);
+            }
+        }
+    }
+
+    /// A worker thread died: reap it and respawn in place; on respawn
+    /// failure mark the slot dead (graceful pool shrink). A respawned
+    /// worker starts healthy — quarantine history dies with the thread.
+    fn revive(&mut self, w: usize) {
+        self.ctx.counters.worker_deaths.fetch_add(1, Ordering::Relaxed);
+        if let Some(j) = self.slots[w].join.take() {
+            let _ = j.join();
+        }
+        match spawn_worker(self.ctx.clone(), w) {
+            Ok((tx, join)) => {
+                self.slots[w] = WorkerSlot { tx, join: Some(join) };
+                self.ctx.health.reset_after_respawn(w);
+                self.ctx.counters.respawns.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => self.ctx.health.set_state(w, WorkerState::Dead),
+        }
+    }
+
+    /// Workers still alive (healthy or quarantined).
+    pub fn alive(&self) -> usize {
+        (0..self.slots.len())
+            .filter(|&w| self.ctx.health.state(w) != WorkerState::Dead)
+            .count()
     }
 
     /// Convenience: execute one fp32 tile synchronously.
-    pub fn execute_tile(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+    pub fn execute_tile(&mut self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
         let (done, rx) = mpsc::channel();
         self.submit(TileJob {
             tag: 0,
@@ -218,6 +561,21 @@ impl DeviceHandle {
         (Arc::clone(&self.cycles), Arc::clone(&self.invocations))
     }
 
+    /// Shared fault-plane counters (injection + recovery).
+    pub(crate) fn fault_counters(&self) -> Arc<FaultCounters> {
+        Arc::clone(&self.ctx.counters)
+    }
+
+    /// Shared per-worker health gauges.
+    pub(crate) fn pool_health(&self) -> Arc<PoolHealth> {
+        Arc::clone(&self.ctx.health)
+    }
+
+    /// Snapshot every worker's health gauges.
+    pub fn health_snapshot(&self) -> Vec<WorkerHealth> {
+        self.ctx.health.snapshot()
+    }
+
     /// The pool's tile-buffer free-lists. The scheduler returns reduced
     /// partials and retired accumulation buffers here; the (reference)
     /// workers take their output buffers from it, closing the recycle
@@ -227,11 +585,13 @@ impl DeviceHandle {
     }
 
     fn stop(&mut self) {
-        for _ in &self.joins {
-            let _ = self.tx.send(Msg::Shutdown);
+        for slot in &self.slots {
+            let _ = slot.tx.send(Msg::Shutdown);
         }
-        for j in self.joins.drain(..) {
-            let _ = j.join();
+        for slot in &mut self.slots {
+            if let Some(j) = slot.join.take() {
+                let _ = j.join();
+            }
         }
     }
 
@@ -298,7 +658,139 @@ fn load_exe(rt: &Runtime, dir: &std::path::Path, name: &str) -> Result<crate::ru
     }
 }
 
-/// Spawn `workers` device threads serving tile jobs from a shared queue.
+/// Spawn one worker thread and wait for its backend to come up. Used
+/// both at pool construction and when supervision respawns a dead
+/// worker in place.
+fn spawn_worker(ctx: WorkerCtx, w: usize) -> Result<(mpsc::Sender<Msg>, JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let thread_ctx = ctx;
+    let join = std::thread::Builder::new()
+        .name(format!("maxeva-device-{w}"))
+        .spawn(move || {
+            // PJRT handles are created inside the thread (not Send).
+            let init = (|| -> Result<WorkerBackend> {
+                if !thread_ctx.use_pjrt {
+                    return Ok(WorkerBackend::Reference);
+                }
+                let rt = Runtime::cpu()?;
+                let exe_f32 = load_exe(&rt, &thread_ctx.dir, &thread_ctx.name_f32)?;
+                // The int8 artifact is optional: load it when built,
+                // otherwise int8 jobs fail cleanly at execution.
+                let exe_i32 = if named_artifact_available(&thread_ctx.dir, &thread_ctx.name_i32) {
+                    Some(load_exe(&rt, &thread_ctx.dir, &thread_ctx.name_i32)?)
+                } else {
+                    None
+                };
+                Ok(WorkerBackend::Pjrt { _rt: rt, exe_f32, exe_i32 })
+            })();
+            let backend = match init {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok(()));
+                    b
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            drop(ready_tx);
+            worker_loop(&thread_ctx, w, rx, backend);
+        })
+        .context("spawning device worker")?;
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok((tx, join)),
+        Ok(Err(e)) => {
+            let _ = join.join();
+            Err(e)
+        }
+        Err(_) => {
+            let _ = join.join();
+            Err(anyhow!("device worker died during init"))
+        }
+    }
+}
+
+/// The worker's serve loop: pop from the private queue, consult the
+/// fault injector (chaos mode only), execute, complete.
+fn worker_loop(ctx: &WorkerCtx, w: usize, rx: mpsc::Receiver<Msg>, backend: WorkerBackend) {
+    let chaos = ctx.injector.is_some();
+    loop {
+        let job = match rx.recv() {
+            Ok(Msg::Job(job)) => job,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let fault = ctx.injector.as_ref().and_then(|i| i.decide(job.tag, w));
+        if let Some(kind) = fault {
+            ctx.counters.count_injected(kind);
+            match kind {
+                FaultKind::Error => {
+                    ctx.health.dec_outstanding(w);
+                    let _ = job.done.send(TileDone {
+                        tag: job.tag,
+                        worker: w,
+                        crc: None,
+                        result: Err(anyhow!(
+                            "injected device fault: worker {w} errored tile {}",
+                            job.tag
+                        )),
+                    });
+                    continue;
+                }
+                // A crash: exit without completing the job — the thread
+                // dies, supervision detects and respawns it. (Simulated
+                // by a clean return so joins stay quiet.)
+                FaultKind::Panic => return,
+                // A lost completion: swallow the job, keep serving.
+                FaultKind::Hang => {
+                    ctx.health.dec_outstanding(w);
+                    continue;
+                }
+                // A straggler: execute, but late.
+                FaultKind::Delay => {
+                    if let Some(inj) = ctx.injector.as_ref() {
+                        std::thread::sleep(inj.delay());
+                    }
+                }
+                // Handled after execution (transport corruption).
+                FaultKind::Corrupt => {}
+            }
+        }
+        let period = match job.payload.precision() {
+            Precision::Int8 => ctx.period_i32,
+            _ => ctx.period_f32,
+        };
+        // A panic inside the backend (e.g. PJRT FFI) must still produce
+        // a completion — otherwise only a tile deadline could recover
+        // this tag.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_tile(&backend, &job.payload, ctx.native_f32, ctx.native_i32, &ctx.bufs)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("device worker panicked executing tile")));
+        ctx.cycles.fetch_add(period, Ordering::Relaxed);
+        ctx.invocations.fetch_add(1, Ordering::Relaxed);
+        ctx.health.note_executed(w);
+        // Chaos mode checksums the *clean* output; a Corrupt fault then
+        // flips one element after checksumming, modelling corruption in
+        // transport that the scheduler's verify pass must catch.
+        let crc = if chaos { res.as_ref().ok().map(output_crc) } else { None };
+        let res = match (fault, res) {
+            (Some(FaultKind::Corrupt), Ok(mut out)) => {
+                if let Some(inj) = ctx.injector.as_ref() {
+                    corrupt_output(&mut out, inj.corrupt_index(job.tag, out.len()));
+                }
+                Ok(out)
+            }
+            (_, r) => r,
+        };
+        ctx.health.dec_outstanding(w);
+        let _ = job.done.send(TileDone { tag: job.tag, worker: w, crc, result: res });
+    }
+}
+
+/// Spawn `workers` device threads, each with a private job queue
+/// (dispatch is least-loaded with retry-avoidance — see
+/// [`DeviceHandle::dispatch`]).
 ///
 /// Backend resolution: `Pjrt` requires the `pjrt` feature *and* the
 /// fp32 artifact on disk (fails fast otherwise, pointing at
@@ -311,6 +803,19 @@ pub fn spawn_device_pool(
     design: DesignConfig,
     backend: BackendKind,
     workers: usize,
+) -> Result<DeviceHandle> {
+    spawn_device_pool_with_faults(artifacts_dir, design, backend, workers, None)
+}
+
+/// [`spawn_device_pool`] plus an optional deterministic [`FaultPlan`]
+/// (chaos mode: seeded injection + output checksumming — see
+/// [`crate::coordinator::fault`]).
+pub fn spawn_device_pool_with_faults(
+    artifacts_dir: PathBuf,
+    design: DesignConfig,
+    backend: BackendKind,
+    workers: usize,
+    faults: Option<FaultPlan>,
 ) -> Result<DeviceHandle> {
     let have_artifacts = artifacts_available(&artifacts_dir);
     let use_pjrt = match backend {
@@ -344,103 +849,36 @@ pub fn spawn_device_pool(
     let cycles = Arc::new(AtomicU64::new(0));
     let invocations = Arc::new(AtomicU64::new(0));
     let bufs = Arc::new(BufferPool::new(FREE_LIST_CAP));
-    let (tx, rx) = mpsc::channel::<Msg>();
-    // std mpsc is single-consumer; the pool shares the receiver behind a
-    // mutex (locked only to pop, never while executing a tile).
-    let rx = Arc::new(Mutex::new(rx));
-    let name_f32 = artifact_name(&design_f32);
-    let name_i32 = artifact_name(&design_i32);
-    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let ctx = WorkerCtx {
+        use_pjrt,
+        dir: artifacts_dir,
+        name_f32: artifact_name(&design_f32),
+        name_i32: artifact_name(&design_i32),
+        native_f32: info_f32.native,
+        native_i32: info_i32.native,
+        period_f32: info_f32.period_cycles as u64,
+        period_i32: info_i32.period_cycles as u64,
+        cycles: Arc::clone(&cycles),
+        invocations: Arc::clone(&invocations),
+        bufs: Arc::clone(&bufs),
+        injector: faults.map(FaultInjector::new),
+        counters: Arc::new(FaultCounters::default()),
+        health: Arc::new(PoolHealth::new(workers)),
+    };
 
-    let mut joins = Vec::with_capacity(workers);
+    let mut slots: Vec<WorkerSlot> = Vec::with_capacity(workers);
     for w in 0..workers {
-        let rx_w = Arc::clone(&rx);
-        let cycles_w = Arc::clone(&cycles);
-        let invocations_w = Arc::clone(&invocations);
-        let bufs_w = Arc::clone(&bufs);
-        let ready_w = ready_tx.clone();
-        let dir_w = artifacts_dir.clone();
-        let name_f32_w = name_f32.clone();
-        let name_i32_w = name_i32.clone();
-        let join = std::thread::Builder::new()
-            .name(format!("maxeva-device-{w}"))
-            .spawn(move || {
-                // PJRT handles are created inside the thread (not Send).
-                let init = (|| -> Result<WorkerBackend> {
-                    if !use_pjrt {
-                        return Ok(WorkerBackend::Reference);
-                    }
-                    let rt = Runtime::cpu()?;
-                    let exe_f32 = load_exe(&rt, &dir_w, &name_f32_w)?;
-                    // The int8 artifact is optional: load it when built,
-                    // otherwise int8 jobs fail cleanly at execution.
-                    let exe_i32 = if named_artifact_available(&dir_w, &name_i32_w) {
-                        Some(load_exe(&rt, &dir_w, &name_i32_w)?)
-                    } else {
-                        None
-                    };
-                    Ok(WorkerBackend::Pjrt { _rt: rt, exe_f32, exe_i32 })
-                })();
-                let backend = match init {
-                    Ok(b) => {
-                        let _ = ready_w.send(Ok(()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready_w.send(Err(e));
-                        return;
-                    }
-                };
-                // Close this worker's ready sender now: if any sibling
-                // worker dies during init without sending, the spawn-side
-                // wait must see the channel disconnect, not hang.
-                drop(ready_w);
-                let nf = info_f32.native;
-                let ni = info_i32.native;
-                let (pf, pi) = (info_f32.period_cycles as u64, info_i32.period_cycles as u64);
-                loop {
-                    // Pop under the lock, execute outside it so workers
-                    // overlap.
-                    let msg = match rx_w.lock() {
-                        Ok(guard) => guard.recv(),
-                        Err(_) => break,
-                    };
-                    let job = match msg {
-                        Ok(Msg::Job(job)) => job,
-                        Ok(Msg::Shutdown) | Err(_) => break,
-                    };
-                    let period = match job.payload.precision() {
-                        Precision::Int8 => pi,
-                        _ => pf,
-                    };
-                    // A panic inside the backend (e.g. PJRT FFI) must
-                    // still produce a completion — otherwise the server's
-                    // recv loop would wait forever for this tag.
-                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_tile(&backend, &job.payload, nf, ni, &bufs_w),
-                    ))
-                    .unwrap_or_else(|_| Err(anyhow!("device worker panicked executing tile")));
-                    cycles_w.fetch_add(period, Ordering::Relaxed);
-                    invocations_w.fetch_add(1, Ordering::Relaxed);
-                    let _ = job.done.send(TileDone { tag: job.tag, result: res });
+        match spawn_worker(ctx.clone(), w) {
+            Ok((tx, join)) => slots.push(WorkerSlot { tx, join: Some(join) }),
+            Err(e) => {
+                // Tear down what came up before propagating.
+                for slot in &slots {
+                    let _ = slot.tx.send(Msg::Shutdown);
                 }
-            })
-            .context("spawning device worker")?;
-        joins.push(join);
-    }
-    drop(ready_tx);
-
-    // Wait for every worker's backend to come up (or fail).
-    for _ in 0..workers {
-        match ready_rx.recv().context("device worker died during init") {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) | Err(e) => {
-                // Tear the pool down before propagating.
-                for _ in 0..workers {
-                    let _ = tx.send(Msg::Shutdown);
-                }
-                for j in joins {
-                    let _ = j.join();
+                for slot in &mut slots {
+                    if let Some(j) = slot.join.take() {
+                        let _ = j.join();
+                    }
                 }
                 return Err(e);
             }
@@ -448,8 +886,9 @@ pub fn spawn_device_pool(
     }
 
     Ok(DeviceHandle {
-        tx,
-        joins,
+        slots,
+        ctx,
+        rr: 0,
         native: info_f32.native,
         native_int8: info_i32.native,
         cycles,
@@ -522,6 +961,13 @@ mod tests {
     use crate::coordinator::pool::TilePool;
     use crate::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 
+    fn small_design() -> DesignConfig {
+        let mut design = DesignConfig::flagship(Precision::Fp32);
+        (design.x, design.y, design.z) = (2, 4, 2);
+        (design.m, design.k, design.n) = (4, 4, 4);
+        design
+    }
+
     #[test]
     fn artifact_name_scheme() {
         let d = DesignConfig::flagship(Precision::Fp32);
@@ -544,17 +990,16 @@ mod tests {
     fn reference_pool_executes_tagged_jobs() {
         // Small 2×4×2 array of 4×4×4 kernels → native (8, 16, 8); the
         // reference backend needs no artifacts.
-        let mut design = DesignConfig::flagship(Precision::Fp32);
-        (design.x, design.y, design.z) = (2, 4, 2);
-        (design.m, design.k, design.n) = (4, 4, 4);
+        let design = small_design();
         let dir = std::env::temp_dir().join("maxeva_ref_pool");
         std::fs::create_dir_all(&dir).unwrap();
-        let dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
+        let mut dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
         assert_eq!(dev.native, (8, 16, 8));
         // Custom (non-paper) kernel → the int8 sibling keeps the same
         // tile geometry.
         assert_eq!(dev.native_int8, (8, 16, 8));
         assert_eq!(dev.backend, "reference");
+        assert_eq!(dev.alive(), 2);
         let (nm, nk, nn) = (8usize, 16usize, 8usize);
         let a: Vec<f32> = (0..nm * nk).map(|i| (i % 5) as f32).collect();
         let b: Vec<f32> = (0..nk * nn).map(|i| (i % 7) as f32 - 3.0).collect();
@@ -576,6 +1021,9 @@ mod tests {
         let mut seen = Vec::new();
         for _ in 0..6 {
             let d = done_rx.recv().unwrap();
+            // Default (no-chaos) completions carry no checksum.
+            assert_eq!(d.crc, None);
+            assert!(d.worker < 2);
             assert_eq!(d.result.unwrap(), TileOutput::F32(want.clone()));
             seen.push(d.tag);
         }
@@ -588,12 +1036,10 @@ mod tests {
 
     #[test]
     fn reference_pool_serves_both_precisions() {
-        let mut design = DesignConfig::flagship(Precision::Fp32);
-        (design.x, design.y, design.z) = (2, 4, 2);
-        (design.m, design.k, design.n) = (4, 4, 4);
+        let design = small_design();
         let dir = std::env::temp_dir().join("maxeva_ref_pool_i8");
         std::fs::create_dir_all(&dir).unwrap();
-        let dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
+        let mut dev = spawn_device_pool(dir, design, BackendKind::Reference, 2).unwrap();
         let (nm, nk, nn) = (8usize, 16usize, 8usize);
         let ai: Vec<i32> = (0..nm * nk).map(|i| (i % 256) as i32 - 128).collect();
         let bi: Vec<i32> = (0..nk * nn).map(|i| (i % 251) as i32 - 125).collect();
@@ -676,5 +1122,172 @@ mod tests {
         dev.shutdown();
     }
 
-    // Full execution tests live in rust/tests/runtime_artifacts.rs.
+    #[test]
+    fn injected_error_faults_complete_with_errors() {
+        let dir = std::env::temp_dir().join("maxeva_chaos_err_pool");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan = FaultPlan::new(5, 1.0, vec![FaultKind::Error]);
+        let mut dev =
+            spawn_device_pool_with_faults(dir, small_design(), BackendKind::Reference, 2, Some(plan))
+                .unwrap();
+        let (nm, nk) = (8usize, 16usize);
+        let a: Vec<f32> = vec![1.0; nm * nk];
+        let b: Vec<f32> = vec![1.0; nk * 8];
+        let (done_tx, done_rx) = mpsc::channel();
+        for tag in 0..4u64 {
+            dev.submit(TileJob {
+                tag,
+                payload: TilePayload::F32 {
+                    a: TileRef::single(a.clone()),
+                    b: TileRef::single(b.clone()),
+                },
+                done: done_tx.clone(),
+            })
+            .unwrap();
+        }
+        for _ in 0..4 {
+            let d = done_rx.recv().unwrap();
+            let err = d.result.unwrap_err();
+            assert!(err.to_string().contains("injected device fault"), "{err}");
+        }
+        assert_eq!(dev.fault_counters().injected_errors.load(Ordering::Relaxed), 4);
+        // Nothing executed, so the device clock never advanced.
+        assert_eq!(dev.invocations(), 0);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn corrupt_faults_checksum_clean_then_flip() {
+        let dir = std::env::temp_dir().join("maxeva_chaos_corrupt_pool");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plan = FaultPlan::new(6, 1.0, vec![FaultKind::Corrupt]);
+        let mut dev =
+            spawn_device_pool_with_faults(dir, small_design(), BackendKind::Reference, 1, Some(plan))
+                .unwrap();
+        let (nm, nk, nn) = (8usize, 16usize, 8usize);
+        let a: Vec<f32> = (0..nm * nk).map(|i| (i % 5) as f32).collect();
+        let b: Vec<f32> = (0..nk * nn).map(|i| (i % 7) as f32 - 3.0).collect();
+        let want = matmul_ref_f32(&a, &b, nm, nk, nn);
+        let (done_tx, done_rx) = mpsc::channel();
+        dev.submit(TileJob {
+            tag: 0,
+            payload: TilePayload::F32 { a: TileRef::single(a), b: TileRef::single(b) },
+            done: done_tx,
+        })
+        .unwrap();
+        let d = done_rx.recv().unwrap();
+        let crc = d.crc.expect("chaos mode attaches checksums");
+        let out = d.result.unwrap();
+        // The payload was corrupted after checksumming: re-deriving the
+        // checksum over the received elements must mismatch…
+        assert_ne!(output_crc(&out), crc);
+        // …and exactly one element differs from the clean product.
+        let TileOutput::F32(got) = out else { panic!("wrong precision") };
+        let diffs = got.iter().zip(&want).filter(|(x, y)| x != y).count();
+        assert_eq!(diffs, 1);
+        dev.shutdown();
+    }
+
+    #[test]
+    fn panic_fault_kills_worker_and_supervision_respawns_it() {
+        let dir = std::env::temp_dir().join("maxeva_chaos_panic_pool");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Only worker 0 faults, with a budget of one fault total.
+        let mut plan = FaultPlan::new(8, 1.0, vec![FaultKind::Panic]);
+        plan.worker = Some(0);
+        plan.max_faults = 1;
+        let mut dev =
+            spawn_device_pool_with_faults(dir, small_design(), BackendKind::Reference, 2, Some(plan))
+                .unwrap();
+        let (nm, nk) = (8usize, 16usize);
+        let a: Vec<f32> = vec![1.0; nm * nk];
+        let b: Vec<f32> = vec![1.0; nk * 8];
+        let (done_tx, done_rx) = mpsc::channel();
+        // The first dispatch lands on worker 0 (least-loaded ties break
+        // at the round-robin cursor, which starts there) and the
+        // injected panic kills the thread without a completion.
+        dev.submit(TileJob {
+            tag: 0,
+            payload: TilePayload::F32 {
+                a: TileRef::single(a.clone()),
+                b: TileRef::single(b.clone()),
+            },
+            done: done_tx.clone(),
+        })
+        .unwrap();
+        assert!(
+            done_rx.recv_timeout(std::time::Duration::from_millis(500)).is_err(),
+            "a panic fault must swallow the completion"
+        );
+        // Let the dead thread finish exiting, then supervise.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        dev.supervise();
+        assert_eq!(dev.alive(), 2, "dead worker respawned");
+        assert_eq!(dev.fault_counters().respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(dev.fault_counters().injected_panics.load(Ordering::Relaxed), 1);
+        // The respawned worker serves again (fault budget is spent).
+        let (tx2, rx2) = mpsc::channel();
+        for tag in 100..104u64 {
+            dev.submit(TileJob {
+                tag,
+                payload: TilePayload::F32 {
+                    a: TileRef::single(a.clone()),
+                    b: TileRef::single(b.clone()),
+                },
+                done: tx2.clone(),
+            })
+            .unwrap();
+        }
+        for _ in 0..4 {
+            rx2.recv_timeout(std::time::Duration::from_secs(10)).unwrap().result.unwrap();
+        }
+        dev.shutdown();
+    }
+
+    #[test]
+    fn quarantine_and_dispatch_avoidance() {
+        let dir = std::env::temp_dir().join("maxeva_quarantine_pool");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut dev =
+            spawn_device_pool(dir, small_design(), BackendKind::Reference, 2).unwrap();
+        // Three consecutive faults quarantine worker 0.
+        assert!(!dev.record_fault(0, 3));
+        assert!(!dev.record_fault(0, 3));
+        assert!(dev.record_fault(0, 3));
+        let health = dev.health_snapshot();
+        assert_eq!(health[0].state, "quarantined");
+        assert_eq!(health[0].faults, 3);
+        assert_eq!(health[1].state, "healthy");
+        // Dispatch now avoids the quarantined worker.
+        let (done_tx, done_rx) = mpsc::channel();
+        let a: Vec<f32> = vec![1.0; 8 * 16];
+        let b: Vec<f32> = vec![1.0; 16 * 8];
+        for tag in 0..4u64 {
+            let w = dev
+                .dispatch(
+                    TileJob {
+                        tag,
+                        payload: TilePayload::F32 {
+                            a: TileRef::single(a.clone()),
+                            b: TileRef::single(b.clone()),
+                        },
+                        done: done_tx.clone(),
+                    },
+                    None,
+                )
+                .unwrap();
+            assert_eq!(w, 1, "quarantined worker receives no new tiles");
+        }
+        for _ in 0..4 {
+            done_rx.recv().unwrap().result.unwrap();
+        }
+        // A success resets the streak; a quarantined worker stays
+        // benched (only respawn un-benches).
+        dev.record_ok(1);
+        assert_eq!(dev.health_snapshot()[1].consecutive_faults, 0);
+        dev.shutdown();
+    }
+
+    // Full execution tests live in rust/tests/runtime_artifacts.rs;
+    // end-to-end chaos tests in rust/tests/fault_tolerance.rs.
 }

@@ -1,0 +1,443 @@
+//! Deterministic fault injection for the device plane.
+//!
+//! The paper's throughput model assumes 400 AIE cores that never
+//! misbehave; a serving stack cannot. This module is the chaos half of
+//! the fault-tolerant device plane: a seeded [`FaultPlan`] (configured
+//! through `ServeConfig::fault_plan`, JSON round-tripped) wraps the
+//! reference backend and makes chosen workers error tiles, panic,
+//! delay, hang (swallow the completion), or corrupt an output — all
+//! **deterministically** per job tag, so a chaos run is exactly
+//! reproducible from its seed. The recovery half (deadlines, bounded
+//! retry/redispatch, quarantine, respawn) lives in
+//! [`crate::coordinator::scheduler`] and [`crate::coordinator::device`];
+//! see the "Failure model" section of [`crate::coordinator`] for the
+//! end-to-end story.
+//!
+//! With no plan configured (the default) none of this is on the hot
+//! path: workers skip checksumming, the scheduler arms no deadlines,
+//! and the steady state allocates and computes exactly what it did
+//! before the fault plane existed.
+
+use crate::config::json::Json;
+use crate::config::schema::ConfigError;
+use crate::util::prng::XorShift64;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One way a device worker can misbehave.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Complete the tile with an error instead of executing it.
+    Error,
+    /// Kill the worker thread without sending a completion (a crash:
+    /// detected by supervision, the worker is respawned).
+    Panic,
+    /// Execute normally, `delay_ms` late (a straggler: trips the tile
+    /// deadline when one is armed, then the original result arrives
+    /// stale and is discarded).
+    Delay,
+    /// Swallow the job — never send its `TileDone` (a lost completion:
+    /// only a tile deadline can recover it).
+    Hang,
+    /// Execute normally but flip one output element after checksumming,
+    /// so the scheduler's verify pass rejects the tile (a transport
+    /// fault).
+    Corrupt,
+}
+
+impl FaultKind {
+    /// Every injectable kind, in the order the seeded sweep walks them.
+    pub fn all() -> [FaultKind; 5] {
+        [
+            FaultKind::Error,
+            FaultKind::Panic,
+            FaultKind::Delay,
+            FaultKind::Hang,
+            FaultKind::Corrupt,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "error" => Some(FaultKind::Error),
+            "panic" => Some(FaultKind::Panic),
+            "delay" => Some(FaultKind::Delay),
+            "hang" => Some(FaultKind::Hang),
+            "corrupt" => Some(FaultKind::Corrupt),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultKind::Error => "error",
+            FaultKind::Panic => "panic",
+            FaultKind::Delay => "delay",
+            FaultKind::Hang => "hang",
+            FaultKind::Corrupt => "corrupt",
+        })
+    }
+}
+
+/// A deterministic chaos schedule for the device pool.
+///
+/// Whether a given job faults — and how — is a pure function of
+/// `(plan.seed, job.tag)`: each decision seeds a fresh
+/// [`XorShift64`] from the two, so runs are reproducible regardless of
+/// worker count, interleaving, or retries (a retried tile carries a new
+/// tag and therefore re-rolls — a tile is not doomed to refault
+/// forever, which is what makes bounded retry converge).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Chaos seed; every per-tile decision derives from it.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that an eligible job faults.
+    pub rate: f64,
+    /// Restrict injection to one worker index (`None` = any worker).
+    pub worker: Option<usize>,
+    /// Kinds to draw from (uniformly, seeded). Empty = all kinds.
+    pub kinds: Vec<FaultKind>,
+    /// Added latency for [`FaultKind::Delay`] faults, milliseconds.
+    pub delay_ms: u64,
+    /// Stop injecting after this many faults (`0` = unlimited) — lets a
+    /// chaos run converge to a healthy tail. The budget is claimed
+    /// across workers, so *which* tags win it depends on execution
+    /// order; per-tag determinism holds only for the unlimited plan.
+    pub max_faults: u64,
+}
+
+impl FaultPlan {
+    /// A plan injecting `kinds` at `rate` from `seed`, on any worker,
+    /// with a 20 ms delay and no fault budget.
+    pub fn new(seed: u64, rate: f64, kinds: Vec<FaultKind>) -> Self {
+        FaultPlan { seed, rate, worker: None, kinds, delay_ms: 20, max_faults: 0 }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert("rate".into(), Json::Num(self.rate));
+        if let Some(w) = self.worker {
+            o.insert("worker".into(), Json::Num(w as f64));
+        }
+        o.insert(
+            "kinds".into(),
+            Json::Arr(self.kinds.iter().map(|k| Json::Str(k.to_string())).collect()),
+        );
+        o.insert("delay_ms".into(), Json::Num(self.delay_ms as f64));
+        o.insert("max_faults".into(), Json::Num(self.max_faults as f64));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, ConfigError> {
+        let rate = v.get("rate").and_then(Json::as_f64).unwrap_or(0.0);
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(ConfigError::Invalid("fault_plan.rate", rate.to_string()));
+        }
+        let kinds = match v.get("kinds") {
+            None => Vec::new(),
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|k| {
+                    k.as_str()
+                        .and_then(FaultKind::parse)
+                        .ok_or_else(|| ConfigError::Invalid("fault_plan.kinds", k.to_string()))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            Some(other) => {
+                return Err(ConfigError::Invalid("fault_plan.kinds", other.to_string()))
+            }
+        };
+        Ok(FaultPlan {
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            rate,
+            worker: v.get("worker").and_then(Json::as_u64).map(|w| w as usize),
+            kinds,
+            delay_ms: v.get("delay_ms").and_then(Json::as_u64).unwrap_or(20),
+            max_faults: v.get("max_faults").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// Live fault-plane counters, shared between the device pool, the
+/// scheduler and stats snapshots ([`crate::coordinator::stats::FaultStats`]).
+/// The `injected_*` counters are bumped by workers at the moment of
+/// injection; the recovery counters (`timeouts`, `retries`, …) by the
+/// scheduler.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub injected_errors: AtomicU64,
+    pub injected_panics: AtomicU64,
+    pub injected_delays: AtomicU64,
+    pub injected_hangs: AtomicU64,
+    pub injected_corruptions: AtomicU64,
+    /// Tiles whose deadline expired before their completion arrived.
+    pub timeouts: AtomicU64,
+    /// Tiles re-dispatched after a fault or timeout.
+    pub retries: AtomicU64,
+    /// Flights failed because a tile exhausted `max_tile_retries`.
+    pub retries_exhausted: AtomicU64,
+    /// Completions rejected by the output checksum verify pass.
+    pub checksum_failures: AtomicU64,
+    /// Dead workers detected by supervision.
+    pub worker_deaths: AtomicU64,
+    /// Dead workers successfully respawned.
+    pub respawns: AtomicU64,
+    /// Workers quarantined after repeated consecutive faults.
+    pub quarantined: AtomicU64,
+}
+
+impl FaultCounters {
+    /// Total faults injected so far, across kinds.
+    pub fn injected(&self) -> u64 {
+        self.injected_errors.load(Ordering::Relaxed)
+            + self.injected_panics.load(Ordering::Relaxed)
+            + self.injected_delays.load(Ordering::Relaxed)
+            + self.injected_hangs.load(Ordering::Relaxed)
+            + self.injected_corruptions.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn count_injected(&self, kind: FaultKind) {
+        let c = match kind {
+            FaultKind::Error => &self.injected_errors,
+            FaultKind::Panic => &self.injected_panics,
+            FaultKind::Delay => &self.injected_delays,
+            FaultKind::Hang => &self.injected_hangs,
+            FaultKind::Corrupt => &self.injected_corruptions,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The active injector: a [`FaultPlan`] plus its shared budget. Cloned
+/// into every device worker (cheap: the budget is an `Arc`'d atomic on
+/// the pool's counters).
+#[derive(Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Faults granted so far, against `plan.max_faults`.
+    granted: std::sync::Arc<AtomicU64>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultInjector { plan, granted: std::sync::Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Per-tile decision: does job `tag` on `worker` fault, and how?
+    /// Deterministic in `(seed, tag)` — see [`FaultPlan`]. Respects the
+    /// worker restriction and the shared `max_faults` budget.
+    pub fn decide(&self, tag: u64, worker: usize) -> Option<FaultKind> {
+        if self.plan.rate <= 0.0 {
+            return None;
+        }
+        if self.plan.worker.is_some_and(|w| w != worker) {
+            return None;
+        }
+        // Fresh generator per decision: mix the tag into the seed with
+        // a golden-ratio stride so consecutive tags decorrelate.
+        let mut rng = XorShift64::new(self.plan.seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if rng.next_f64() >= self.plan.rate {
+            return None;
+        }
+        let all = FaultKind::all();
+        let kinds: &[FaultKind] =
+            if self.plan.kinds.is_empty() { &all } else { &self.plan.kinds };
+        let kind = *rng.choose(kinds);
+        if self.plan.max_faults > 0 {
+            // Claim one unit of budget; back off once it is spent.
+            let prev = self.granted.fetch_add(1, Ordering::Relaxed);
+            if prev >= self.plan.max_faults {
+                return None;
+            }
+        } else {
+            self.granted.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(kind)
+    }
+
+    /// Injection latency for [`FaultKind::Delay`] faults.
+    pub fn delay(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.plan.delay_ms)
+    }
+
+    /// Deterministically pick the element to flip in a corrupted output
+    /// of `len` elements.
+    pub fn corrupt_index(&self, tag: u64, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        let mut rng = XorShift64::new(self.plan.seed.rotate_left(17) ^ tag.wrapping_add(1));
+        (rng.next_u64() % len as u64) as usize
+    }
+}
+
+/// FNV-1a over a stream of 32-bit words — the output checksum the
+/// workers attach to completions in chaos mode and the scheduler
+/// re-derives on receipt ([`FaultKind::Corrupt`] detection).
+pub fn fnv1a_words(words: impl Iterator<Item = u32>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// A tile failed all of its `1 + max_tile_retries` execution attempts;
+/// the flight is failed with this typed error wrapping the last cause.
+#[derive(Debug, thiserror::Error)]
+#[error("request {id}: tile failed all {attempts} attempts; last error: {last}")]
+pub struct TileRetriesExhausted {
+    /// Failing request's id.
+    pub id: u64,
+    /// Execution attempts made (initial dispatch + retries).
+    pub attempts: u32,
+    /// Display of the last attempt's error.
+    pub last: String,
+}
+
+/// A tile's completion did not arrive within its deadline (lost,
+/// hung, or severely delayed worker).
+#[derive(Debug, thiserror::Error)]
+#[error("tile deadline expired after {waited_ms} ms (worker {worker})")]
+pub struct TileTimedOut {
+    pub worker: usize,
+    pub waited_ms: u64,
+}
+
+/// A completion's payload did not match the checksum computed by the
+/// worker (corruption between execution and reduction).
+#[derive(Debug, thiserror::Error)]
+#[error("tile output failed checksum verification (worker {worker})")]
+pub struct TileCorrupted {
+    pub worker: usize,
+}
+
+/// The scheduler thread panicked; every open flight is failed fast
+/// with this error so no client blocks on a dead server.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("scheduler thread panicked; request failed fast")]
+pub struct SchedulerPanicked;
+
+/// Shutdown's drain deadline expired with this request still open.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("request {0} still in flight when the shutdown drain deadline expired")]
+pub struct DrainDeadlineExpired(pub u64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_display_roundtrip() {
+        for k in FaultKind::all() {
+            assert_eq!(FaultKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(FaultKind::parse("meltdown"), None);
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let mut p = FaultPlan::new(42, 0.25, vec![FaultKind::Error, FaultKind::Hang]);
+        p.worker = Some(1);
+        p.delay_ms = 7;
+        p.max_faults = 3;
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        // Worker restriction is optional in both directions.
+        p.worker = None;
+        assert_eq!(FaultPlan::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn plan_json_rejects_bad_values() {
+        let v = Json::parse(r#"{"rate": 1.5}"#).unwrap();
+        assert!(matches!(
+            FaultPlan::from_json(&v),
+            Err(ConfigError::Invalid("fault_plan.rate", _))
+        ));
+        let v = Json::parse(r#"{"rate": 0.1, "kinds": ["error", "meltdown"]}"#).unwrap();
+        assert!(matches!(
+            FaultPlan::from_json(&v),
+            Err(ConfigError::Invalid("fault_plan.kinds", _))
+        ));
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_tag() {
+        let inj_a = FaultInjector::new(FaultPlan::new(7, 0.5, vec![]));
+        let inj_b = FaultInjector::new(FaultPlan::new(7, 0.5, vec![]));
+        for tag in 0..256 {
+            assert_eq!(inj_a.decide(tag, 0), inj_b.decide(tag, 0));
+        }
+    }
+
+    #[test]
+    fn rate_zero_never_faults_rate_one_always_faults() {
+        let never = FaultInjector::new(FaultPlan::new(1, 0.0, vec![]));
+        let always = FaultInjector::new(FaultPlan::new(1, 1.0, vec![FaultKind::Error]));
+        for tag in 0..128 {
+            assert_eq!(never.decide(tag, 0), None);
+            assert_eq!(always.decide(tag, 0), Some(FaultKind::Error));
+        }
+    }
+
+    #[test]
+    fn worker_restriction_is_respected() {
+        let mut plan = FaultPlan::new(3, 1.0, vec![FaultKind::Delay]);
+        plan.worker = Some(2);
+        let inj = FaultInjector::new(plan);
+        for tag in 0..64 {
+            assert_eq!(inj.decide(tag, 0), None);
+            assert_eq!(inj.decide(tag, 2), Some(FaultKind::Delay));
+        }
+    }
+
+    #[test]
+    fn budget_caps_total_faults() {
+        let mut plan = FaultPlan::new(9, 1.0, vec![FaultKind::Error]);
+        plan.max_faults = 5;
+        let inj = FaultInjector::new(plan);
+        let granted = (0..100).filter(|&t| inj.decide(t, 0).is_some()).count();
+        assert_eq!(granted, 5);
+    }
+
+    #[test]
+    fn retagged_retries_reroll() {
+        // At rate 0.5 some tag must fault and some other tag must not —
+        // i.e. a retry under a fresh tag is not doomed to refault.
+        let inj = FaultInjector::new(FaultPlan::new(11, 0.5, vec![]));
+        let hits = (0..256).filter(|&t| inj.decide(t, 0).is_some()).count();
+        assert!(hits > 0 && hits < 256, "degenerate fault distribution: {hits}/256");
+    }
+
+    #[test]
+    fn checksum_detects_single_flip() {
+        let clean: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let h0 = fnv1a_words(clean.iter().map(|v| v.to_bits()));
+        let mut dirty = clean.clone();
+        dirty[17] += 1.0;
+        let h1 = fnv1a_words(dirty.iter().map(|v| v.to_bits()));
+        assert_ne!(h0, h1);
+        assert_eq!(h0, fnv1a_words(clean.iter().map(|v| v.to_bits())));
+    }
+
+    #[test]
+    fn counters_aggregate_by_kind() {
+        let c = FaultCounters::default();
+        c.count_injected(FaultKind::Error);
+        c.count_injected(FaultKind::Hang);
+        c.count_injected(FaultKind::Hang);
+        assert_eq!(c.injected(), 3);
+        assert_eq!(c.injected_hangs.load(Ordering::Relaxed), 2);
+    }
+}

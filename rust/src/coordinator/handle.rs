@@ -1,5 +1,11 @@
-//! Per-request completion delivery: [`RequestHandle`] (wait / try_wait /
-//! cancel) and the callback reply path.
+//! Per-request completion delivery: [`RequestHandle`] (wait /
+//! wait_timeout / try_wait / cancel) and the callback reply path.
+//!
+//! A handle can never hang on a dead server: if the scheduler thread
+//! panics, every open flight is resolved fast with a typed
+//! [`SchedulerPanicked`](crate::coordinator::fault::SchedulerPanicked)
+//! error before the thread exits, and [`RequestHandle::wait_timeout`]
+//! bounds any single wait client-side regardless.
 //!
 //! # Cancellation
 //!
@@ -17,6 +23,7 @@ use crate::workloads::{MatMulRequest, MatOutput};
 use anyhow::{anyhow, Result};
 use std::cell::Cell;
 use std::sync::mpsc;
+use std::time::Duration;
 
 /// The request was cancelled (explicitly or by dropping its handle)
 /// before it completed. Carries the request id.
@@ -94,7 +101,33 @@ impl RequestHandle {
             .map_err(|_| anyhow!("server dropped request {} without replying", self.id))?
     }
 
+    /// Block up to `timeout` for the request to retire. Returns `None`
+    /// while the request is still in flight — the handle stays live and
+    /// can be waited on again (or cancelled). `Some(Err(..))` covers
+    /// both a failed request and a scheduler that died without
+    /// replying, so a bounded wait never wedges a client on a lost
+    /// completion; pair it with the server-side per-tile deadlines
+    /// (`ServeConfig::tile_timeout_mult`) for end-to-end boundedness.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<MatOutput>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => {
+                self.resolved.set(true);
+                Some(r)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.resolved.set(true);
+                Some(Err(anyhow!("server dropped request {} without replying", self.id)))
+            }
+        }
+    }
+
     /// Non-blocking poll: `None` while the request is still in flight.
+    /// `Some(Err(..))` covers both a failed request and a dead server
+    /// (channel disconnected) — either way the handle is resolved and
+    /// cancel-on-drop is suppressed. Polling never consumes the handle:
+    /// after `None` the request keeps running and the handle can still
+    /// be waited on, polled again, or cancelled.
     pub fn try_wait(&self) -> Option<Result<MatOutput>> {
         match self.rx.try_recv() {
             Ok(r) => {

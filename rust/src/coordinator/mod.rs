@@ -59,9 +59,67 @@
 //! [`crate::sim`]), so the coordinator reports both wall-clock (CPU
 //! emulation) and device-time (VCK190-equivalent) throughput without
 //! conflating them.
+//!
+//! # Failure model
+//!
+//! The device plane is fault-tolerant (PR 6). Faults it recovers from,
+//! and how:
+//!
+//! * **Tile errors** — a worker returns `Err` for a tile (or, under the
+//!   deterministic chaos layer in [`fault`], is *injected* with one).
+//!   The tile re-enters the window under a fresh tag, dispatched to a
+//!   different worker when one is available, up to
+//!   `ServeConfig::max_tile_retries`; only then does the request fail,
+//!   with a typed [`TileRetriesExhausted`].
+//! * **Lost completions** (hung worker, dropped message) — with
+//!   `ServeConfig::tile_timeout_mult` armed, every tile attempt carries
+//!   a deadline (multiplier × its precision's simulated tile period,
+//!   floored at `tile_timeout_floor_ms`). Expiry counts as a tile fault
+//!   and retries; a completion straggling in after expiry is dropped by
+//!   a stale-tag set, so a partial can never reduce twice.
+//! * **Corrupted outputs** — in chaos mode workers checksum each clean
+//!   output (FNV-1a over the element bits); the scheduler re-verifies
+//!   on arrival and rejects mismatches into the retry path
+//!   ([`TileCorrupted`]).
+//! * **Worker deaths** — a panicking worker thread is detected by
+//!   supervision (on deadline ticks and on dispatch send-failure) and
+//!   respawned in place; if respawn fails the slot is marked dead and
+//!   the pool shrinks gracefully. Workers with repeated consecutive
+//!   faults are **quarantined**: dispatch prefers healthy peers and
+//!   returns to a quarantined worker only when no healthy one remains.
+//! * **Scheduler death** — the scheduler loop runs under
+//!   `catch_unwind`; if it panics, every open request resolves fast
+//!   with [`SchedulerPanicked`] instead of hanging its clients.
+//!   [`RequestHandle::wait_timeout`] additionally bounds any single
+//!   client-side wait.
+//! * **Shutdown stragglers** — `ServeConfig::drain_deadline_ms` bounds
+//!   the shutdown drain; requests still open past it fail with
+//!   [`DrainDeadlineExpired`] instead of wedging teardown.
+//!
+//! **Guarantees.** A recovered run is bit-identical to a fault-free
+//! run: retried tiles are rebuilt from the immutable packed arenas and
+//! the ascending-`ik` reduction order is preserved, so retries are
+//! invisible in the output. Every submitted request resolves exactly
+//! once — with its output, a typed fault error, or [`Cancelled`] —
+//! under every fault mix the chaos layer can produce.
+//!
+//! **Non-guarantees.** Supervision is driven by the scheduler's
+//! deadline ticks: with deadlines disabled (`tile_timeout_mult = 0`,
+//! the default), dead workers are only noticed when a dispatch to them
+//! fails, and a hung worker wedges its in-flight tile forever — exactly
+//! the pre-PR 6 behavior. Fault *injection* (the [`fault`] layer) is
+//! deterministic per (seed, tag, worker) but the budget `max_faults` is
+//! claimed in completion order, which wall-clock timing may reorder.
+//!
+//! [`TileRetriesExhausted`]: fault::TileRetriesExhausted
+//! [`TileCorrupted`]: fault::TileCorrupted
+//! [`SchedulerPanicked`]: fault::SchedulerPanicked
+//! [`DrainDeadlineExpired`]: fault::DrainDeadlineExpired
+//! [`RequestHandle::wait_timeout`]: handle::RequestHandle::wait_timeout
 
 pub mod admission;
 pub mod device;
+pub mod fault;
 pub mod handle;
 pub mod microkernel;
 pub mod policy;
@@ -74,7 +132,12 @@ pub mod trace;
 
 pub use admission::QueueFull;
 pub use device::{
-    spawn_device, spawn_device_pool, DeviceHandle, TileDone, TileJob, TileOutput, TilePayload,
+    output_crc, spawn_device, spawn_device_pool, spawn_device_pool_with_faults, DeviceHandle,
+    TileDone, TileJob, TileOutput, TilePayload,
+};
+pub use fault::{
+    DrainDeadlineExpired, FaultCounters, FaultKind, FaultPlan, SchedulerPanicked, TileCorrupted,
+    TileRetriesExhausted, TileTimedOut,
 };
 pub use handle::{Cancelled, RequestHandle};
 pub use microkernel::{micro_geom, MicroGeom, MR_F32, MR_I32, NR_F32, NR_I32};
@@ -84,5 +147,5 @@ pub use pool::{
     PAR_PACK_MIN_TILES,
 };
 pub use server::{MatMulServer, ServerStats};
-pub use stats::{ClassStats, MemPlaneStats, PackStats};
+pub use stats::{ClassStats, FaultStats, MemPlaneStats, PackStats, WorkerHealth};
 pub use tiler::Tiler;

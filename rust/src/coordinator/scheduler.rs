@@ -31,6 +31,28 @@
 //!
 //! [`TileRef`]: crate::coordinator::pool::TileRef
 //!
+//! # Fault recovery (the completion loop under failure)
+//!
+//! Since PR 6 the completion wait is **deadline-aware**: when
+//! `ServeConfig::tile_timeout_mult` arms per-tile deadlines, the loop
+//! blocks with `recv_timeout` up to the earliest outstanding deadline
+//! instead of waiting forever on a completion that may never arrive. An
+//! expired, errored, or checksum-failed tile is re-packed from the
+//! (immutable) arenas and **re-dispatched under a fresh tag** to a
+//! different worker when possible, up to `max_tile_retries`; only then
+//! does the flight fail, with a typed
+//! [`TileRetriesExhausted`] error. Because retried partials are
+//! bit-identical to the originals and reduction stays in ascending-`ik`
+//! order, a recovered run equals the fault-free run bit-for-bit. A
+//! completion from a timed-out tag that straggles in later is dropped
+//! by a stale-tag set (its buffer recycles), so duplicate partials can
+//! never double-reduce. Deadline ticks also run worker supervision
+//! (dead-worker respawn / pool shrink — see
+//! [`crate::coordinator::device`]), and the whole loop body is wrapped
+//! in `catch_unwind`: if the scheduler itself panics, every open flight
+//! resolves fast with [`SchedulerPanicked`] instead of hanging its
+//! clients.
+//!
 //! **Determinism:** completions may arrive out of order, but partials
 //! are applied to each output block strictly in ascending `ik` order
 //! (late partials park in a per-block reorder map), so outputs are
@@ -43,7 +65,13 @@
 use crate::arch::precision::Precision;
 use crate::config::schema::PolicyKind;
 use crate::coordinator::admission::{Admitted, Gate, GateCloser};
-use crate::coordinator::device::{DeviceHandle, TileDone, TileJob, TileOutput, TilePayload};
+use crate::coordinator::device::{
+    output_crc, DeviceHandle, TileDone, TileJob, TileOutput, TilePayload,
+};
+use crate::coordinator::fault::{
+    DrainDeadlineExpired, FaultCounters, SchedulerPanicked, TileCorrupted, TileRetriesExhausted,
+    TileTimedOut,
+};
 use crate::coordinator::handle::{Cancelled, Reply};
 use crate::coordinator::policy::{self, FlightMeta, PolicyParams, SchedPolicy};
 use crate::coordinator::pool::{
@@ -54,8 +82,9 @@ use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::anyhow;
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -70,7 +99,13 @@ pub(crate) enum Event {
     SetDepth(usize),
     SetPolicy(PolicyKind),
     ResetEpoch,
-    Drain,
+    /// Stop admitting, serve what is open, then exit — within the
+    /// deadline when one is set (stragglers past it fail with
+    /// [`DrainDeadlineExpired`] instead of hanging shutdown).
+    Drain(Option<Duration>),
+    /// Test hook (`MatMulServer::inject_scheduler_panic`): panic the
+    /// scheduler loop to exercise the fail-fast path.
+    ChaosPanic,
 }
 
 /// State shared between the scheduler thread and client-side snapshots.
@@ -82,6 +117,18 @@ pub(crate) struct Shared {
     pub(crate) last_window: Mutex<WindowOcc>,
     /// Wall time spent inside `run_batch` calls.
     pub(crate) wall_time_s: Mutex<f64>,
+}
+
+/// Fault-plane knobs the scheduler enforces, derived from `ServeConfig`
+/// by the server (deadlines are pre-resolved to per-precision
+/// durations: `tile_timeout_mult` × simulated period, floored at
+/// `tile_timeout_floor_ms`; `None` = deadlines off, the historical
+/// wait-forever behavior).
+pub(crate) struct Robustness {
+    pub(crate) max_tile_retries: u32,
+    pub(crate) deadline_f32: Option<Duration>,
+    pub(crate) deadline_i32: Option<Duration>,
+    pub(crate) quarantine_after: u32,
 }
 
 /// Element type the reduction machinery is generic over: f32 sums, the
@@ -225,13 +272,41 @@ struct Flight {
     reply: Reply,
 }
 
-/// Where a tagged in-flight job lands when it completes.
+/// Where a tagged in-flight job lands when it completes — plus the
+/// retry/deadline state the fault plane tracks per attempt.
 #[derive(Debug, Clone, Copy)]
 struct JobDesc {
     flight: u64,
     im: usize,
     inn: usize,
     ik: usize,
+    /// Worker the job was dispatched to (retries avoid it).
+    worker: usize,
+    /// Execution attempts so far beyond the first.
+    retries: u32,
+    /// When this attempt was dispatched.
+    issued: Instant,
+    /// When this attempt is declared lost (`None` = deadlines off).
+    deadline: Option<Instant>,
+}
+
+/// Build a tile payload for block `(im, inn, ik)` from a flight's
+/// packed arenas. The arenas are immutable after the first schedule, so
+/// a retry rebuilt here carries bit-identical operand data. `None` only
+/// if the flight was never packed (no tile ever issued — cannot happen
+/// for a tile that reached the device).
+fn payload_from_packed(f: &Flight, im: usize, inn: usize, ik: usize) -> Option<TilePayload> {
+    let (_gm, gk, gn) = f.grid;
+    match &f.data {
+        FlightData::F32(p) => p.packed.as_ref().map(|(ap, bp)| TilePayload::F32 {
+            a: ap.tile_ref(im * gk + ik),
+            b: bp.tile_ref(ik * gn + inn),
+        }),
+        FlightData::I32(p) => p.packed.as_ref().map(|(ap, bp)| TilePayload::I32 {
+            a: ap.tile_ref(im * gk + ik),
+            b: bp.tile_ref(ik * gn + inn),
+        }),
+    }
 }
 
 /// Per-output-block accumulation state (the "small accumulation buffer
@@ -321,6 +396,11 @@ pub(crate) struct Scheduler {
     pub(crate) policy: Box<dyn SchedPolicy>,
     pub(crate) params: PolicyParams,
     pub(crate) draining: bool,
+    /// Fault-plane knobs (deadlines, retry budget, quarantine).
+    robust: Robustness,
+    /// Shared fault counters (the device pool's; scheduler-side
+    /// recovery events are recorded here too).
+    counters: Arc<FaultCounters>,
     /// Packed-weight LRU (scheduler-thread owned, no locks on lookup).
     weight_cache: WeightCache,
     /// Fan-out width for operand arena extraction
@@ -334,11 +414,16 @@ pub(crate) struct Scheduler {
     /// Admission token → flight id (the cancellation route).
     tokens: FxHashMap<u64, u64>,
     descs: FxHashMap<u64, JobDesc>,
+    /// Tags whose deadline expired: if their completion straggles in
+    /// later it is dropped (buffer recycled), never double-reduced.
+    stale: FxHashSet<u64>,
     accs_f32: FxHashMap<(u64, usize, usize), BlockAcc<f32>>,
     accs_i32: FxHashMap<(u64, usize, usize), BlockAcc<i32>>,
     next_flight: u64,
     next_tag: u64,
     in_flight: usize,
+    /// Absolute drain deadline, armed by [`Event::Drain`].
+    drain_by: Option<Instant>,
 }
 
 impl Scheduler {
@@ -355,8 +440,10 @@ impl Scheduler {
         weight_cache: WeightCache,
         pack_workers: usize,
         pack_counters: Arc<PackCounters>,
+        robust: Robustness,
     ) -> Self {
         let bufs = device.buffer_pool();
+        let counters = device.fault_counters();
         Scheduler {
             device,
             tiler_f32,
@@ -368,6 +455,8 @@ impl Scheduler {
             policy: policy::build(&params),
             params,
             draining: false,
+            robust,
+            counters,
             weight_cache,
             pack_workers: pack_workers.max(1),
             pack_counters,
@@ -375,11 +464,13 @@ impl Scheduler {
             flights: FxHashMap::default(),
             tokens: FxHashMap::default(),
             descs: FxHashMap::default(),
+            stale: FxHashSet::default(),
             accs_f32: FxHashMap::default(),
             accs_i32: FxHashMap::default(),
             next_flight: 0,
             next_tag: 0,
             in_flight: 0,
+            drain_by: None,
         }
     }
 
@@ -387,6 +478,21 @@ impl Scheduler {
         // Wake any producer parked on the admission gate when this
         // thread exits — normally or by unwinding.
         let _gate_closer = GateCloser(Arc::clone(&self.gate));
+        // Clients must never block forever on a dead scheduler: if the
+        // loop panics, resolve every open flight fast instead of
+        // leaving the handles to a disconnect error on teardown.
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.run_loop(&events)
+        }))
+        .is_err();
+        if panicked {
+            self.fail_all_open();
+        }
+        // `_gate_closer` closes the admission gate as it drops;
+        // dropping `self.device` stops the worker pool.
+    }
+
+    fn run_loop(&mut self, events: &mpsc::Receiver<Event>) {
         loop {
             // Fill the window from the policy.
             while self.in_flight < self.depth {
@@ -396,8 +502,35 @@ impl Scheduler {
             if self.draining && self.flights.is_empty() && self.in_flight == 0 {
                 break;
             }
-            // Block for the next admission, completion or control event.
-            let Ok(ev) = events.recv() else { break };
+            // Shutdown's drain budget: past it, fail stragglers typed
+            // instead of waiting on them.
+            if let Some(by) = self.drain_by {
+                if Instant::now() >= by {
+                    self.expire_drain();
+                    break;
+                }
+            }
+            // Block for the next admission, completion or control
+            // event — bounded by the earliest tile/drain deadline when
+            // one is armed (the historical wait was unbounded: a lost
+            // completion stalled the stream forever).
+            let ev = match self.next_wakeup() {
+                None => match events.recv() {
+                    Ok(ev) => ev,
+                    Err(_) => break,
+                },
+                Some(when) => {
+                    let wait = when.saturating_duration_since(Instant::now());
+                    match events.recv_timeout(wait) {
+                        Ok(ev) => ev,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            self.handle_deadlines();
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            };
             match ev {
                 Event::Admit(adm) => self.handle_admit(adm),
                 Event::Done(done) => self.handle_done(done),
@@ -407,11 +540,83 @@ impl Scheduler {
                 Event::ResetEpoch => {
                     *self.shared.last_window.lock().unwrap() = WindowOcc::default()
                 }
-                Event::Drain => self.draining = true,
+                Event::Drain(deadline) => {
+                    self.draining = true;
+                    self.drain_by = deadline.map(|d| Instant::now() + d);
+                }
+                Event::ChaosPanic => panic!("injected scheduler panic (chaos test hook)"),
             }
         }
-        // `_gate_closer` closes the admission gate as it drops;
-        // dropping `self.device` stops the worker pool.
+    }
+
+    /// Earliest armed deadline among outstanding tiles and the drain
+    /// budget (`None` = nothing armed, block indefinitely). The desc
+    /// map is bounded by the window depth, so the scan is cheap.
+    fn next_wakeup(&self) -> Option<Instant> {
+        let mut when = self.drain_by;
+        for d in self.descs.values() {
+            if let Some(dl) = d.deadline {
+                when = Some(match when {
+                    Some(w) if w <= dl => w,
+                    _ => dl,
+                });
+            }
+        }
+        when
+    }
+
+    /// A deadline tick: expire overdue tiles into the retry path and
+    /// sweep for dead workers.
+    fn handle_deadlines(&mut self) {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .descs
+            .iter()
+            .filter(|(_, d)| d.deadline.is_some_and(|dl| now >= dl))
+            .map(|(&tag, _)| tag)
+            .collect();
+        for tag in expired {
+            let desc = self.descs.remove(&tag).unwrap();
+            // The completion may still straggle in — drop it then.
+            self.stale.insert(tag);
+            self.in_flight = self.in_flight.saturating_sub(1);
+            self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
+            self.device.record_fault(desc.worker, self.robust.quarantine_after);
+            let waited_ms = now.saturating_duration_since(desc.issued).as_millis() as u64;
+            let err =
+                anyhow::Error::new(TileTimedOut { worker: desc.worker, waited_ms });
+            self.retry_or_fail(desc, err);
+        }
+        // Reap dead worker threads (cheap when everyone is alive). A
+        // hung worker keeps its thread — repeated timeouts quarantine
+        // it instead.
+        self.device.supervise();
+    }
+
+    /// The drain budget expired: fail every still-open flight with a
+    /// typed error so shutdown returns instead of hanging on lost
+    /// tiles.
+    fn expire_drain(&mut self) {
+        let open: Vec<u64> = self.flights.keys().copied().collect();
+        for fid in open {
+            let id = self.flights[&fid].req.id;
+            self.fail_flight(fid, anyhow::Error::new(DrainDeadlineExpired(id)));
+        }
+    }
+
+    /// The scheduler loop panicked: resolve every open flight with
+    /// [`SchedulerPanicked`] and free its admission slot. Deliberately
+    /// touches nothing else — stats mutexes may be poisoned by the very
+    /// panic that brought us here, and the policy/accumulator state
+    /// dies with the thread anyway.
+    fn fail_all_open(&mut self) {
+        let open: Vec<u64> = self.flights.keys().copied().collect();
+        for fid in open {
+            if let Some(f) = self.flights.remove(&fid) {
+                self.gate.release(f.req.class);
+                f.reply.send(f.req, Err(anyhow::Error::new(SchedulerPanicked)));
+            }
+        }
     }
 
     fn tiler_for(&self, p: Precision) -> Tiler {
@@ -419,6 +624,15 @@ impl Scheduler {
             Precision::Int8 => self.tiler_i32,
             _ => self.tiler_f32,
         }
+    }
+
+    /// Deadline for a tile dispatched now, per its precision.
+    fn deadline_for(&self, p: Precision) -> Option<Instant> {
+        let d = match p {
+            Precision::Int8 => self.robust.deadline_i32,
+            _ => self.robust.deadline_f32,
+        };
+        d.map(|d| Instant::now() + d)
     }
 
     fn flight_meta(&self, fid: u64, f: &Flight) -> FlightMeta {
@@ -535,49 +749,54 @@ impl Scheduler {
             let im = blk / gn;
             let inn = blk % gn;
             let weight_id = f.req.weight_id;
-            let payload = match &mut f.data {
-                FlightData::F32(p) => {
-                    p.pack(
-                        m,
-                        k,
-                        n,
-                        tiler,
-                        weight_id,
-                        &mut self.weight_cache,
-                        self.pack_workers,
-                        &self.pack_counters,
-                    );
-                    let (ap, bp) = p.packed.as_ref().expect("packed on first schedule");
-                    TilePayload::F32 {
-                        a: ap.tile_ref(im * gk + ik),
-                        b: bp.tile_ref(ik * gn + inn),
-                    }
-                }
-                FlightData::I32(p) => {
-                    p.pack(
-                        m,
-                        k,
-                        n,
-                        tiler,
-                        weight_id,
-                        &mut self.weight_cache,
-                        self.pack_workers,
-                        &self.pack_counters,
-                    );
-                    let (ap, bp) = p.packed.as_ref().expect("packed on first schedule");
-                    TilePayload::I32 {
-                        a: ap.tile_ref(im * gk + ik),
-                        b: bp.tile_ref(ik * gn + inn),
-                    }
-                }
-            };
+            match &mut f.data {
+                FlightData::F32(p) => p.pack(
+                    m,
+                    k,
+                    n,
+                    tiler,
+                    weight_id,
+                    &mut self.weight_cache,
+                    self.pack_workers,
+                    &self.pack_counters,
+                ),
+                FlightData::I32(p) => p.pack(
+                    m,
+                    k,
+                    n,
+                    tiler,
+                    weight_id,
+                    &mut self.weight_cache,
+                    self.pack_workers,
+                    &self.pack_counters,
+                ),
+            }
+            let payload =
+                payload_from_packed(f, im, inn, ik).expect("packed on first schedule");
             f.invocations += 1;
-            (payload, JobDesc { flight: fid, im, inn, ik }, f.next_tile < f.total_tiles)
+            let desc = JobDesc {
+                flight: fid,
+                im,
+                inn,
+                ik,
+                worker: 0,
+                retries: 0,
+                issued: Instant::now(),
+                deadline: None,
+            };
+            (payload, desc, f.next_tile < f.total_tiles)
         };
+        let mut desc = desc;
+        desc.deadline = self.deadline_for(self.flights[&fid].req.precision);
         self.descs.insert(tag, desc);
         self.policy.tile_issued(fid, more);
-        match self.device.submit(TileJob { tag, payload, done: self.tile_tx.clone() }) {
-            Ok(()) => self.in_flight += 1,
+        match self.device.dispatch(TileJob { tag, payload, done: self.tile_tx.clone() }, None) {
+            Ok(w) => {
+                self.in_flight += 1;
+                if let Some(d) = self.descs.get_mut(&tag) {
+                    d.worker = w;
+                }
+            }
             Err(e) => {
                 self.descs.remove(&tag);
                 self.fail_flight(fid, e);
@@ -585,31 +804,123 @@ impl Scheduler {
         }
     }
 
+    /// A tile attempt failed (device error, deadline expiry, or
+    /// checksum rejection): re-dispatch it under a fresh tag — on a
+    /// different worker when one is available — or fail the flight once
+    /// the retry budget is spent. The retried partial is rebuilt from
+    /// the immutable packed arenas, so a recovered flight's output is
+    /// bit-identical to a fault-free run.
+    fn retry_or_fail(&mut self, desc: JobDesc, err: anyhow::Error) {
+        let fid = desc.flight;
+        // Flight already gone (cancelled or failed on another tile):
+        // nothing to recover. The attempt's window slot was freed by
+        // the caller.
+        let Some(f) = self.flights.get(&fid) else { return };
+        if desc.retries >= self.robust.max_tile_retries {
+            let exhausted = TileRetriesExhausted {
+                id: f.req.id,
+                attempts: desc.retries + 1,
+                last: format!("{err:#}"),
+            };
+            self.counters.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+            self.fail_flight(fid, anyhow::Error::new(exhausted));
+            return;
+        }
+        let precision = f.req.precision;
+        let Some(payload) = payload_from_packed(f, desc.im, desc.inn, desc.ik) else {
+            // Unreachable in practice: a tile that reached the device
+            // implies its flight packed on first schedule.
+            self.fail_flight(fid, err.context("tile faulted before its flight was packed"));
+            return;
+        };
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let mut retried = desc;
+        retried.retries += 1;
+        retried.issued = Instant::now();
+        retried.deadline = self.deadline_for(precision);
+        self.counters.retries.fetch_add(1, Ordering::Relaxed);
+        self.descs.insert(tag, retried);
+        // The policy already charged this tile at first issue; only the
+        // device-time attribution counts the re-execution.
+        match self
+            .device
+            .dispatch(TileJob { tag, payload, done: self.tile_tx.clone() }, Some(desc.worker))
+        {
+            Ok(w) => {
+                self.in_flight += 1;
+                if let Some(d) = self.descs.get_mut(&tag) {
+                    d.worker = w;
+                }
+                if let Some(f) = self.flights.get_mut(&fid) {
+                    f.invocations += 1;
+                }
+            }
+            Err(e) => {
+                self.descs.remove(&tag);
+                self.fail_flight(fid, e);
+            }
+        }
+    }
+
+    fn recycle_output(&self, out: TileOutput) {
+        match out {
+            TileOutput::F32(v) => self.bufs.fp32.put(v),
+            TileOutput::I32(v) => self.bufs.int8.put(v),
+        }
+    }
+
     fn handle_done(&mut self, done: TileDone) {
+        // A stale tag: its deadline expired and the slot was already
+        // freed (and possibly re-dispatched). Drop the straggler —
+        // recycling its buffer — so a partial can never double-reduce.
+        if self.stale.remove(&done.tag) {
+            if let Ok(out) = done.result {
+                self.recycle_output(out);
+            }
+            return;
+        }
         // Sample the window as it stood while this tile completed.
         let occ = self.in_flight;
         self.shared.window.lock().unwrap().record(occ);
         self.shared.last_window.lock().unwrap().record(occ);
         self.in_flight = self.in_flight.saturating_sub(1);
         let Some(desc) = self.descs.remove(&done.tag) else {
-            return; // stale tag (defensive; tags are scheduler-issued)
+            // Unknown tag (defensive; tags are scheduler-issued) — the
+            // buffer still recycles.
+            if let Ok(out) = done.result {
+                self.recycle_output(out);
+            }
+            return;
         };
         let fid = desc.flight;
         if !self.flights.contains_key(&fid) {
             // Flight failed or was cancelled: the straggler's result is
             // dead weight, but its buffer recycles.
             if let Ok(out) = done.result {
-                match out {
-                    TileOutput::F32(v) => self.bufs.fp32.put(v),
-                    TileOutput::I32(v) => self.bufs.int8.put(v),
-                }
+                self.recycle_output(out);
             }
             return;
         }
-        let output = match done.result {
-            Ok(o) => o,
+        // Verify the checksum when the pool attached one (chaos mode):
+        // a corrupted payload is rejected here and enters the retry
+        // path like any other tile fault.
+        let result = match (done.result, done.crc) {
+            (Ok(out), Some(crc)) if output_crc(&out) != crc => {
+                self.counters.checksum_failures.fetch_add(1, Ordering::Relaxed);
+                self.recycle_output(out);
+                Err(anyhow::Error::new(TileCorrupted { worker: done.worker }))
+            }
+            (r, _) => r,
+        };
+        let output = match result {
+            Ok(o) => {
+                self.device.record_ok(done.worker);
+                o
+            }
             Err(e) => {
-                self.fail_flight(fid, e);
+                self.device.record_fault(done.worker, self.robust.quarantine_after);
+                self.retry_or_fail(desc, e);
                 return;
             }
         };
@@ -671,7 +982,8 @@ impl Scheduler {
         self.policy.remove(fid);
         // Charge the flight exactly its own tiles (period × invocations)
         // — the shared device clock spans concurrently open flights and
-        // would double-count overlap.
+        // would double-count overlap. Retries count as invocations: the
+        // device (modulo injected non-executing faults) ran them.
         let period = self
             .device
             .info_for(f.req.precision)

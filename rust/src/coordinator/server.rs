@@ -57,19 +57,24 @@
 use crate::arch::precision::Precision;
 use crate::config::schema::{AdmissionPolicy, PolicyKind, ServeConfig};
 use crate::coordinator::admission::{Admitted, Gate};
-use crate::coordinator::device::{spawn_device_pool, PrecisionInfo, TileDone};
+use crate::coordinator::device::{
+    spawn_device_pool_with_faults, PoolHealth, PrecisionInfo, TileDone,
+};
+use crate::coordinator::fault::FaultCounters;
 use crate::coordinator::handle::Reply;
 use crate::coordinator::policy::{PolicyParams, TileCosts};
 use crate::coordinator::pool::{BufferPool, PackCounters, WeightCache, WeightCacheCounters};
-use crate::coordinator::scheduler::{Event, Scheduler, Shared};
-use crate::coordinator::stats::{ClassStats, MemPlaneStats, PackStats, StatsAgg, WindowOcc};
+use crate::coordinator::scheduler::{Event, Robustness, Scheduler, Shared};
+use crate::coordinator::stats::{
+    ClassStats, FaultStats, MemPlaneStats, PackStats, StatsAgg, WindowOcc, WorkerHealth,
+};
 use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use crate::coordinator::admission::QueueFull;
 pub use crate::coordinator::handle::{Cancelled, RequestHandle};
@@ -108,6 +113,13 @@ pub struct ServerStats {
     /// Packing-stage counters: matrices packed, parallel fan-outs and
     /// wall time spent packing (`ServeConfig::pack_workers`).
     pub pack: PackStats,
+    /// Fault-plane counters: injected faults (chaos mode), timeouts,
+    /// retries, checksum rejections, worker deaths/respawns/quarantines
+    /// (see [`crate::coordinator::fault`]). All zero on a fault-free
+    /// run with the fault plane disabled.
+    pub faults: FaultStats,
+    /// Per-worker health gauges, one entry per pool slot.
+    pub worker_health: Vec<WorkerHealth>,
 }
 
 /// The serving coordinator (client handle). Cheap to share across
@@ -139,19 +151,29 @@ pub struct MatMulServer {
     pack_workers: usize,
     /// Tile-buffer free-lists shared with the device pool + scheduler.
     bufs: Arc<BufferPool>,
+    /// Fault-plane counters shared with the device pool + scheduler.
+    fault_counters: Arc<FaultCounters>,
+    /// Per-worker health gauges shared with the device pool.
+    health: Arc<PoolHealth>,
+    /// Shutdown drain budget (`ServeConfig::drain_deadline_ms`;
+    /// `None` = wait for every open request, the historical behavior).
+    drain_deadline: Option<Duration>,
 }
 
 impl MatMulServer {
     /// Start the server: spawns the device worker pool, the completion
     /// forwarder and the scheduler thread.
     pub fn start(cfg: &ServeConfig) -> Result<Self> {
-        let device = spawn_device_pool(
+        let device = spawn_device_pool_with_faults(
             cfg.artifacts_dir.clone().into(),
             cfg.design.clone(),
             cfg.backend,
             cfg.workers,
+            cfg.fault_plan.clone(),
         )?;
         let (cycles, invocations) = device.counters();
+        let fault_counters = device.fault_counters();
+        let health = device.pool_health();
         let info_f32 = device.info_for(Precision::Fp32)?;
         let info_int8 = device.info_for(Precision::Int8)?;
         let freq_hz = device.freq_hz;
@@ -202,6 +224,28 @@ impl MatMulServer {
             WeightCache::new(cfg.weight_cache_bytes, Arc::clone(&cache_counters));
         let pack_counters = Arc::new(PackCounters::default());
         let bufs = device.buffer_pool();
+        // Resolve the per-tile deadline once per precision: multiplier ×
+        // the precision's simulated tile period, floored so a deadline
+        // is never shorter than scheduling noise. Multiplier 0 keeps
+        // the historical wait-forever completion loop.
+        let tile_deadline = |period_cycles: f64| -> Option<Duration> {
+            if cfg.tile_timeout_mult <= 0.0 {
+                return None;
+            }
+            let secs = (cfg.tile_timeout_mult * period_cycles / freq_hz)
+                .max(cfg.tile_timeout_floor_ms as f64 / 1e3);
+            Some(Duration::from_secs_f64(secs))
+        };
+        let robust = Robustness {
+            max_tile_retries: cfg.max_tile_retries,
+            deadline_f32: tile_deadline(info_f32.period_cycles),
+            deadline_i32: tile_deadline(info_int8.period_cycles),
+            quarantine_after: cfg.quarantine_after,
+        };
+        let drain_deadline = match cfg.drain_deadline_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
         let sched = Scheduler::new(
             device,
             Tiler::new(info_f32.native),
@@ -214,6 +258,7 @@ impl MatMulServer {
             weight_cache,
             cfg.pack_workers,
             Arc::clone(&pack_counters),
+            robust,
         );
         let sched = std::thread::Builder::new()
             .name("maxeva-scheduler".into())
@@ -242,6 +287,9 @@ impl MatMulServer {
             pack_counters,
             pack_workers: cfg.pack_workers.max(1),
             bufs,
+            fault_counters,
+            health,
+            drain_deadline,
         })
     }
 
@@ -496,6 +544,21 @@ impl MatMulServer {
             parallel_packs: self.pack_counters.parallel.load(Ordering::Relaxed),
             pack_time_s: self.pack_counters.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
         };
+        let fc = &self.fault_counters;
+        let faults = FaultStats {
+            injected_errors: fc.injected_errors.load(Ordering::Relaxed),
+            injected_panics: fc.injected_panics.load(Ordering::Relaxed),
+            injected_delays: fc.injected_delays.load(Ordering::Relaxed),
+            injected_hangs: fc.injected_hangs.load(Ordering::Relaxed),
+            injected_corruptions: fc.injected_corruptions.load(Ordering::Relaxed),
+            timeouts: fc.timeouts.load(Ordering::Relaxed),
+            retries: fc.retries.load(Ordering::Relaxed),
+            retries_exhausted: fc.retries_exhausted.load(Ordering::Relaxed),
+            checksum_failures: fc.checksum_failures.load(Ordering::Relaxed),
+            worker_deaths: fc.worker_deaths.load(Ordering::Relaxed),
+            respawns: fc.respawns.load(Ordering::Relaxed),
+            quarantined: fc.quarantined.load(Ordering::Relaxed),
+        };
         ServerStats {
             requests: stats.count(),
             requests_fp32: stats.count_by(Precision::Fp32),
@@ -513,11 +576,13 @@ impl MatMulServer {
             max_in_flight: window.max(),
             mem,
             pack,
+            faults,
+            worker_health: self.health.snapshot(),
         }
     }
 
     fn stop(&mut self) {
-        let _ = self.events.send(Event::Drain);
+        let _ = self.events.send(Event::Drain(self.drain_deadline));
         if let Some(j) = self.sched.take() {
             let _ = j.join();
         }
@@ -527,9 +592,29 @@ impl MatMulServer {
     }
 
     /// Graceful shutdown: drain every open request, then stop the
-    /// scheduler and device workers.
+    /// scheduler and device workers. With
+    /// `ServeConfig::drain_deadline_ms` set, the drain is bounded:
+    /// requests still open past the budget fail with
+    /// [`DrainDeadlineExpired`](crate::coordinator::fault::DrainDeadlineExpired)
+    /// instead of hanging shutdown on a lost tile.
     pub fn shutdown(mut self) {
         self.stop();
+    }
+
+    /// [`MatMulServer::shutdown`] with an explicit drain budget,
+    /// overriding the configured `drain_deadline_ms`.
+    pub fn shutdown_with_deadline(mut self, deadline: Duration) {
+        self.drain_deadline = Some(deadline);
+        self.stop();
+    }
+
+    /// Chaos-test hook: make the scheduler thread panic, exercising the
+    /// fail-fast path that resolves every open flight with
+    /// [`SchedulerPanicked`](crate::coordinator::fault::SchedulerPanicked).
+    /// Kills the scheduler — the server serves nothing afterwards.
+    #[doc(hidden)]
+    pub fn inject_scheduler_panic(&self) {
+        let _ = self.events.send(Event::ChaosPanic);
     }
 }
 

@@ -88,6 +88,70 @@ pub struct PackStats {
     pub pack_time_s: f64,
 }
 
+/// Fault-plane snapshot: injection counters (bumped by the device
+/// workers at the moment of injection — see
+/// [`crate::coordinator::fault::FaultPlan`]) and recovery counters
+/// (bumped by the scheduler's deadline/retry/verify machinery). With
+/// fault injection disabled the `injected_*` and `checksum_failures`
+/// counters stay zero, but timeouts/retries/deaths can still occur
+/// organically (a genuinely wedged or crashed worker).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultStats {
+    pub injected_errors: u64,
+    pub injected_panics: u64,
+    pub injected_delays: u64,
+    pub injected_hangs: u64,
+    pub injected_corruptions: u64,
+    /// Tiles whose deadline expired before a completion arrived.
+    pub timeouts: u64,
+    /// Tiles re-dispatched after an error, timeout or checksum failure.
+    pub retries: u64,
+    /// Flights failed because a tile exhausted `max_tile_retries`.
+    pub retries_exhausted: u64,
+    /// Completions rejected by the checksum verify pass (chaos mode).
+    pub checksum_failures: u64,
+    /// Dead worker threads detected by supervision.
+    pub worker_deaths: u64,
+    /// Dead workers successfully respawned in place.
+    pub respawns: u64,
+    /// Workers quarantined after repeated consecutive faults.
+    pub quarantined: u64,
+}
+
+impl FaultStats {
+    /// Total injected faults across kinds.
+    pub fn injected(&self) -> u64 {
+        self.injected_errors
+            + self.injected_panics
+            + self.injected_delays
+            + self.injected_hangs
+            + self.injected_corruptions
+    }
+}
+
+/// One device worker's health gauges, as surfaced in
+/// `ServerStats::worker_health` (see
+/// [`crate::coordinator::device::DeviceHandle::health_snapshot`]).
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    /// Worker index in the pool.
+    pub worker: usize,
+    /// `"healthy"`, `"quarantined"` (benched after repeated consecutive
+    /// faults; used only when no healthy peer remains) or `"dead"`
+    /// (thread gone and respawn failed — the pool shrank).
+    pub state: &'static str,
+    /// Jobs dispatched to this worker and not yet completed.
+    pub outstanding: usize,
+    /// Tiles this worker actually executed.
+    pub executed: u64,
+    /// Faults charged to this worker (cumulative).
+    pub faults: u64,
+    /// Consecutive faults since its last clean completion.
+    pub consecutive_faults: u32,
+    /// Times this worker slot was respawned after a death.
+    pub respawns: u32,
+}
+
 /// Completion record for one request.
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {

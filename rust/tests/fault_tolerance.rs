@@ -1,0 +1,405 @@
+//! Chaos property tests for the fault-tolerant device plane: every
+//! injected fault kind (error / panic / delay / hang / corrupt) is
+//! driven through the full server stack with deadlines and retries
+//! armed, and the recovered run must be **bit-identical** to a
+//! fault-free oracle run of the same workload. Also covered: typed
+//! errors once retries are exhausted, cancellation racing a retry
+//! (no slot leaks), fault-stats reconciliation, `wait_timeout`,
+//! scheduler-panic fail-fast, and the bounded shutdown drain.
+//!
+//! The chaos seed defaults to 1 and can be swept from CI with
+//! `MAXEVA_CHAOS_SEED` (the `chaos` job runs a small seed matrix). No
+//! test here may hang: every wait is bounded by a deadline, a retry
+//! budget, or `wait_timeout`.
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::fault::{
+    DrainDeadlineExpired, FaultKind, FaultPlan, SchedulerPanicked, TileRetriesExhausted,
+};
+use maxeva::coordinator::server::{Cancelled, MatMulServer};
+use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
+use std::time::{Duration, Instant};
+
+/// Chaos seed, sweepable from CI (`MAXEVA_CHAOS_SEED`).
+fn chaos_seed() -> u64 {
+    std::env::var("MAXEVA_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Tiny design (native 8×16×8) so tile grids are large and cheap on
+/// the scalar reference backend.
+fn small_cfg(workers: usize, pipeline_depth: usize, queue_depth: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = pipeline_depth;
+    cfg.queue_depth = queue_depth;
+    cfg
+}
+
+/// `small_cfg` with the recovery plane armed: per-tile deadlines (the
+/// floor dominates — the simulated tile period is microseconds) and a
+/// deep retry budget so a bounded fault budget can never exhaust it.
+fn chaos_cfg(workers: usize, plan: FaultPlan) -> ServeConfig {
+    let mut cfg = small_cfg(workers, 4, 0);
+    cfg.fault_plan = Some(plan);
+    cfg.max_tile_retries = 8;
+    cfg.tile_timeout_mult = 1.0;
+    cfg.tile_timeout_floor_ms = 80;
+    cfg.quarantine_after = 3;
+    cfg
+}
+
+/// The sweep workload: a handful of odd-shaped fp32 and int8 requests
+/// (both precisions share the window, so chaos hits both datapaths).
+fn workload(seed: u64) -> Vec<(MatMulRequest, Operands)> {
+    let reqs = [
+        MatMulRequest::f32(0, 32, 64, 32),
+        MatMulRequest::int8(1, 24, 48, 24),
+        MatMulRequest::f32(2, 16, 48, 40),
+        MatMulRequest::f32(3, 40, 32, 16),
+        MatMulRequest::int8(4, 16, 32, 16),
+        MatMulRequest::f32(5, 24, 24, 24),
+    ];
+    materialize_mixed(&reqs, seed)
+}
+
+/// Run one workload to completion, waiting with a generous bound (no
+/// chaos test may hang — a lost completion must surface as a test
+/// failure, not a CI timeout).
+fn run_all(server: &MatMulServer, batch: Vec<(MatMulRequest, Operands)>) -> Vec<MatOutput> {
+    let handles: Vec<_> = batch
+        .into_iter()
+        .map(|(req, ops)| server.submit(req, ops).unwrap())
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| {
+            h.wait_timeout(Duration::from_secs(60))
+                .expect("request must resolve within 60 s under chaos")
+                .expect("request must recover, not fail")
+        })
+        .collect()
+}
+
+fn assert_bit_identical(got: &[MatOutput], want: &[MatOutput]) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        match (g, w) {
+            (MatOutput::F32(g), MatOutput::F32(w)) => {
+                assert_eq!(g.len(), w.len(), "request {i}: f32 length");
+                for (j, (x, y)) in g.iter().zip(w).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "request {i} elem {j}: {x} vs {y} (recovered run must be bit-identical)"
+                    );
+                }
+            }
+            (MatOutput::I32(g), MatOutput::I32(w)) => {
+                assert_eq!(g, w, "request {i}: i32 outputs differ");
+            }
+            _ => panic!("request {i}: precision mismatch between runs"),
+        }
+    }
+}
+
+/// The tentpole property: for **every** fault kind, a seeded chaos run
+/// whose retries succeed is bit-identical to the fault-free oracle run
+/// of the same workload, and the chaos layer actually fired.
+#[test]
+fn every_fault_kind_recovers_bit_identical_to_fault_free_oracle() {
+    let seed = chaos_seed();
+    let oracle_server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let oracle = run_all(&oracle_server, workload(seed));
+    oracle_server.shutdown();
+
+    for kind in FaultKind::all() {
+        // A bounded fault budget (8) against a deep retry budget (8):
+        // chaos converges to a healthy tail, and exhausting retries
+        // would need 9 consecutive faults on one tile — more than the
+        // whole budget.
+        let mut plan = FaultPlan::new(seed, 0.35, vec![kind]);
+        plan.max_faults = 8;
+        let server = MatMulServer::start(&chaos_cfg(2, plan)).unwrap();
+        let got = run_all(&server, workload(seed));
+        let stats = server.stats();
+        assert_bit_identical(&got, &oracle);
+        assert!(
+            stats.faults.injected() > 0,
+            "{kind}: chaos plan never fired — the sweep proved nothing"
+        );
+        assert_eq!(stats.requests, 6, "{kind}: all requests must complete");
+        assert_eq!(stats.worker_health.len(), 2, "{kind}: one gauge per pool slot");
+        // Reconciliation: recovery accounting must match injection.
+        match kind {
+            FaultKind::Hang => {
+                // Every swallowed tile must have been declared lost by
+                // its deadline (nothing else times out at an 80 ms
+                // floor) and re-dispatched.
+                assert!(stats.faults.timeouts >= stats.faults.injected_hangs, "{kind}");
+                assert!(stats.faults.retries >= stats.faults.injected_hangs, "{kind}");
+            }
+            FaultKind::Corrupt => {
+                // Every corruption is caught by the checksum verify
+                // pass — none may reach an output (bit-identity above
+                // proves that too).
+                assert_eq!(
+                    stats.faults.checksum_failures, stats.faults.injected_corruptions,
+                    "{kind}"
+                );
+                assert!(stats.faults.retries >= stats.faults.injected_corruptions, "{kind}");
+            }
+            FaultKind::Error => {
+                assert!(stats.faults.retries >= stats.faults.injected_errors, "{kind}");
+            }
+            FaultKind::Panic => {
+                // Each panic kills a worker thread; supervision (or an
+                // inline dispatch revive) must bring the pool back.
+                assert!(stats.faults.worker_deaths >= 1, "{kind}");
+                assert_eq!(stats.faults.worker_deaths, stats.faults.respawns, "{kind}");
+            }
+            FaultKind::Delay => {
+                // Delays alone change timing, never results; nothing to
+                // reconcile beyond bit-identity and injected() > 0.
+            }
+        }
+        assert_eq!(stats.faults.retries_exhausted, 0, "{kind}: no flight may fail");
+        server.shutdown();
+    }
+}
+
+/// When every attempt faults (rate 1.0, unlimited budget), the retry
+/// budget exhausts and the request fails with the typed
+/// [`TileRetriesExhausted`] error — it must not hang, and the server
+/// must keep serving other requests.
+#[test]
+fn exhausted_retries_surface_typed_error() {
+    let mut cfg = small_cfg(2, 4, 0);
+    cfg.fault_plan = Some(FaultPlan::new(chaos_seed(), 1.0, vec![FaultKind::Error]));
+    cfg.max_tile_retries = 1;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let req = MatMulRequest::f32(0, 16, 32, 16);
+    let batch = materialize_mixed(&[req], 7);
+    let (req, ops) = batch.into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    let err = h
+        .wait_timeout(Duration::from_secs(30))
+        .expect("doomed request must resolve, not hang")
+        .expect_err("rate-1.0 errors with 1 retry must fail the request");
+    let typed = err
+        .downcast_ref::<TileRetriesExhausted>()
+        .unwrap_or_else(|| panic!("want TileRetriesExhausted, got: {err:#}"));
+    assert_eq!(typed.id, 0);
+    assert_eq!(typed.attempts, 2, "1 retry = 2 attempts");
+    assert!(typed.last.contains("injected device fault"), "{}", typed.last);
+    let stats = server.stats();
+    assert!(stats.faults.retries_exhausted >= 1);
+    assert!(stats.faults.retries >= 1);
+    assert_eq!(stats.requests, 0);
+    server.shutdown();
+}
+
+/// A worker that hangs (swallows tiles without replying) degrades
+/// throughput, not availability: deadlines declare its tiles lost,
+/// retries land on the healthy peer, and the result is exact.
+#[test]
+fn hung_worker_recovers_via_deadline_and_redispatch() {
+    let seed = chaos_seed();
+    let oracle_server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let oracle = run_all(&oracle_server, workload(seed));
+    oracle_server.shutdown();
+
+    let mut plan = FaultPlan::new(seed, 1.0, vec![FaultKind::Hang]);
+    plan.worker = Some(0);
+    plan.max_faults = 3;
+    let mut cfg = chaos_cfg(2, plan);
+    cfg.tile_timeout_floor_ms = 40;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let got = run_all(&server, workload(seed));
+    assert_bit_identical(&got, &oracle);
+    let stats = server.stats();
+    assert!(stats.faults.injected_hangs >= 1, "the hang plan never fired");
+    assert!(stats.faults.timeouts >= stats.faults.injected_hangs);
+    assert_eq!(stats.faults.retries_exhausted, 0);
+    server.shutdown();
+}
+
+/// Cancellation racing the retry path leaks nothing: cancel a request
+/// whose tiles are wedged on a hung worker mid-recovery, then prove
+/// every admission slot is free again with Reject-policy probes (the
+/// `cancellation.rs` slot-leak idiom, under chaos).
+#[test]
+fn cancellation_during_retry_leaks_no_slots() {
+    let mut plan = FaultPlan::new(chaos_seed(), 1.0, vec![FaultKind::Hang]);
+    plan.max_faults = 4;
+    let mut cfg = chaos_cfg(2, plan);
+    cfg.tile_timeout_floor_ms = 60;
+    cfg.queue_depth = 2;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let req = MatMulRequest::f32(0, 32, 128, 32);
+    let batch = materialize_mixed(&[req], 9);
+    let (req, ops) = batch.into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    // Let tiles dispatch and (rate 1.0) wedge; cancel mid-recovery,
+    // while timed-out tiles are being re-dispatched.
+    std::thread::sleep(Duration::from_millis(90));
+    h.cancel();
+    match h.wait_timeout(Duration::from_secs(30)).expect("cancelled handle must resolve") {
+        Err(e) => assert!(e.downcast_ref::<Cancelled>().is_some(), "{e:#}"),
+        Ok(out) => assert_eq!(out.len(), 32 * 32, "won the race — still a valid resolution"),
+    }
+    // Both queue slots must be free: the cancelled flight reclaimed
+    // its slot even though some of its tiles were mid-retry.
+    let mut probes = Vec::new();
+    for i in 0..2u64 {
+        let req = MatMulRequest::f32(10 + i, 8, 16, 8);
+        let batch = materialize_mixed(&[req], 20 + i);
+        let (req, ops) = batch.into_iter().next().unwrap();
+        probes.push(
+            server
+                .submit_with_policy(req, ops, AdmissionPolicy::Reject)
+                .expect("cancellation under chaos must free its admission slot"),
+        );
+    }
+    for p in probes {
+        // The probes themselves run under the (budget-capped) chaos
+        // plan, so they complete once the budget is spent.
+        assert!(p
+            .wait_timeout(Duration::from_secs(30))
+            .expect("probe must resolve")
+            .is_ok());
+    }
+    server.shutdown();
+}
+
+/// `wait_timeout` semantics: `None` while in flight (handle stays
+/// live), `Some(Ok)` once retired — and the `None` path must not
+/// cancel or consume the request.
+#[test]
+fn wait_timeout_returns_none_then_completes() {
+    let server = MatMulServer::start(&small_cfg(1, 2, 0)).unwrap();
+    let req = MatMulRequest::f32(0, 128, 512, 128);
+    let batch = materialize_mixed(&[req], 3);
+    let (req, ops) = batch.into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    // 8192 scalar tiles take far longer than 1 ms.
+    assert!(
+        h.wait_timeout(Duration::from_millis(1)).is_none(),
+        "a heavy request cannot retire in 1 ms"
+    );
+    let out = h
+        .wait_timeout(Duration::from_secs(120))
+        .expect("request must retire")
+        .expect("fault-free request must succeed");
+    assert_eq!(out.len(), 128 * 128);
+    let stats = server.stats();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.cancelled, 0, "a timed-out wait must not cancel the request");
+    server.shutdown();
+}
+
+/// If the scheduler thread panics, every open flight resolves fast
+/// with the typed [`SchedulerPanicked`] error — no client hangs on a
+/// dead server.
+#[test]
+fn scheduler_panic_fails_open_flights_fast() {
+    let server = MatMulServer::start(&small_cfg(1, 1, 0)).unwrap();
+    // A heavy request holds the single window slot for tens of ms, so
+    // it is still open when the panic event lands behind it.
+    let req = MatMulRequest::f32(0, 128, 512, 128);
+    let batch = materialize_mixed(&[req], 5);
+    let (req, ops) = batch.into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    server.inject_scheduler_panic();
+    let t0 = Instant::now();
+    let err = h
+        .wait_timeout(Duration::from_secs(10))
+        .expect("open flight must fail fast, not hang")
+        .expect_err("a panicked scheduler cannot complete the request");
+    assert!(
+        err.downcast_ref::<SchedulerPanicked>().is_some(),
+        "want SchedulerPanicked, got: {err:#}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "fail-fast took {:?}", t0.elapsed()
+    );
+    // New submissions land on a dead server: they must error (at
+    // admission or on the handle), never hang.
+    let req = MatMulRequest::f32(1, 8, 16, 8);
+    let batch = materialize_mixed(&[req], 6);
+    let (req, ops) = batch.into_iter().next().unwrap();
+    match server.submit(req, ops) {
+        Err(_) => {}
+        Ok(h) => {
+            let r = h.wait_timeout(Duration::from_secs(10)).expect("must resolve");
+            assert!(r.is_err(), "a dead server cannot serve");
+        }
+    }
+    server.shutdown();
+}
+
+/// With tiles wedged forever (hangs, deadlines off) shutdown must not
+/// hang: the drain deadline bounds it and stragglers fail with the
+/// typed [`DrainDeadlineExpired`] error.
+#[test]
+fn drain_deadline_bounds_shutdown_with_wedged_tiles() {
+    let mut cfg = small_cfg(2, 4, 0);
+    // Deadlines deliberately OFF: nothing recovers these tiles — only
+    // the drain budget can unwedge shutdown.
+    cfg.fault_plan = Some(FaultPlan::new(chaos_seed(), 1.0, vec![FaultKind::Hang]));
+    cfg.drain_deadline_ms = 200;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let req = MatMulRequest::f32(0, 16, 64, 16);
+    let batch = materialize_mixed(&[req], 13);
+    let (req, ops) = batch.into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // let tiles wedge
+    let t0 = Instant::now();
+    let shut = std::thread::spawn(move || server.shutdown());
+    let err = h
+        .wait_timeout(Duration::from_secs(10))
+        .expect("wedged request must fail at the drain deadline, not hang")
+        .expect_err("a fully wedged request cannot complete");
+    assert!(
+        err.downcast_ref::<DrainDeadlineExpired>().is_some(),
+        "want DrainDeadlineExpired, got: {err:#}"
+    );
+    shut.join().unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "bounded drain took {:?}", t0.elapsed()
+    );
+}
+
+/// The default config has the whole fault plane disabled — and the
+/// serving path behaves exactly as before: no deadlines, no checksums,
+/// zero fault counters.
+#[test]
+fn disabled_fault_plane_is_invisible() {
+    let cfg = small_cfg(2, 4, 0);
+    assert!(cfg.fault_plan.is_none());
+    assert_eq!(cfg.tile_timeout_mult, 0.0);
+    let server = MatMulServer::start(&cfg).unwrap();
+    let seed = chaos_seed();
+    let got = run_all(&server, workload(seed));
+    assert_eq!(got.len(), 6);
+    let stats = server.stats();
+    assert_eq!(stats.faults.injected(), 0);
+    assert_eq!(stats.faults.timeouts, 0);
+    assert_eq!(stats.faults.retries, 0);
+    assert_eq!(stats.faults.checksum_failures, 0);
+    assert_eq!(stats.faults.worker_deaths, 0);
+    assert_eq!(stats.faults.quarantined, 0);
+    assert_eq!(stats.worker_health.len(), 2);
+    for w in &stats.worker_health {
+        assert_eq!(w.state, "healthy");
+        assert_eq!(w.faults, 0);
+        assert_eq!(w.respawns, 0);
+    }
+    server.shutdown();
+}
