@@ -12,8 +12,8 @@
 //! device-time (VCK190-equivalent, from the calibrated simulator).
 //! Demonstrates both serving modes:
 //!
-//!   1. closed fp32 batches via `run_batch` (the PR 1 path, now a thin
-//!      wrapper over the stream), and
+//!   1. closed fp32 batches replayed through the streaming API
+//!      (`submit` with blocking admission, wait in request order), and
 //!   2. an **open mixed fp32/int8 request stream** via `submit` /
 //!      `RequestHandle` — per-request precision through one window.
 //!
@@ -21,22 +21,40 @@
 //!
 //! (Without artifacts the reference backend serves the same stack.)
 
-use maxeva::arch::precision::Precision;
-use maxeva::config::schema::{DesignConfig, PolicyKind, ServeConfig};
-use maxeva::coordinator::server::{Cancelled, MatMulServer};
 use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
+use maxeva::prelude::*;
 use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::stats::percentile;
 use maxeva::workloads::{
     materialize_batch, materialize_mixed, mixed_trace, random_trace, transformer_block_gemms,
-    MatMulRequest, MatOutput, Operands,
 };
 
-fn main() {
-    let mut cfg = ServeConfig::new(DesignConfig::flagship(Precision::Fp32));
-    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+/// Replay a closed fp32 batch through the streaming API: submit
+/// everything (blocking admission), wait in request order. This is what
+/// the deprecated `run_batch` wrapper does internally.
+fn serve_batch(
+    server: &MatMulServer,
+    batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
+) -> Vec<Vec<f32>> {
+    let handles: Vec<RequestHandle> = batch
+        .into_iter()
+        .map(|(req, a, b)| {
+            server.submit(req, Operands::F32 { a, b }).expect("admission (blocking) must succeed")
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.wait().expect("request must retire").into_f32().expect("fp32 output"))
+        .collect()
+}
 
-    let mut server = match MatMulServer::start(&cfg) {
+fn main() {
+    let cfg = ServeConfig::builder(DesignConfig::flagship(Precision::Fp32))
+        .artifacts_dir(default_artifacts_dir().to_string_lossy().into_owned())
+        .build()
+        .expect("default serving config is valid");
+
+    let server = match MatMulServer::start(&cfg) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("cannot start server: {e}");
@@ -69,7 +87,9 @@ fn main() {
         .iter()
         .map(|(r, a, b)| matmul_ref_f32(a, b, r.m as usize, r.k as usize, r.n as usize))
         .collect();
-    let outs = server.run_batch(batch).expect("batch must run");
+    let t0 = std::time::Instant::now();
+    let outs = serve_batch(&server, batch);
+    let mut wall_s = t0.elapsed().as_secs_f64();
     let mut max_err = 0.0f32;
     for (out, want) in outs.iter().zip(&refs) {
         for (x, y) in out.iter().zip(want) {
@@ -127,7 +147,9 @@ fn main() {
     let gemms = transformer_block_gemms(512, 768, 3072);
     println!("\n[3] transformer block GEMMs: {} requests", gemms.len());
     let batch = materialize_batch(&gemms, 4243);
-    server.run_batch(batch).expect("transformer batch");
+    let t0 = std::time::Instant::now();
+    serve_batch(&server, batch);
+    wall_s += t0.elapsed().as_secs_f64();
 
     // Workload 4: weighted-fair scheduling + cancellation. A second
     // server runs the WeightedFair policy: int8 bulk traffic in class 1,
@@ -194,7 +216,7 @@ fn main() {
     println!("\n[5] weight-reuse stream through the packed-weight cache");
     let mut cached_cfg = cfg.clone();
     cached_cfg.weight_cache_bytes = 64 << 20;
-    let mut cached = MatMulServer::start(&cached_cfg).expect("cached server");
+    let cached = MatMulServer::start(&cached_cfg).expect("cached server");
     let (rm, rk, rn) = (96u64, 512u64, 96u64);
     let reuse_reqs: Vec<MatMulRequest> = (0..6)
         .map(|i| MatMulRequest::f32(1000 + i, rm, rk, rn).with_weight_id(1))
@@ -214,8 +236,10 @@ fn main() {
             (*r, a, shared_weight.clone())
         })
         .collect();
-    let warm = cached.run_batch(reuse_batch.clone()).expect("cached batch");
-    let cold = server.run_batch(reuse_batch).expect("uncached batch");
+    let warm = serve_batch(&cached, reuse_batch.clone());
+    let t0 = std::time::Instant::now();
+    let cold = serve_batch(&server, reuse_batch);
+    wall_s += t0.elapsed().as_secs_f64();
     assert_eq!(warm, cold, "cache hits must not change outputs");
     let mem = cached.stats().mem;
     println!(
@@ -249,9 +273,9 @@ fn main() {
     for pack_workers in [1usize, 4] {
         let mut leg_cfg = cfg.clone();
         leg_cfg.pack_workers = pack_workers;
-        let mut leg = MatMulServer::start(&leg_cfg).expect("packing server");
+        let leg = MatMulServer::start(&leg_cfg).expect("packing server");
         let t0 = std::time::Instant::now();
-        let outs = leg.run_batch(pack_batch.clone()).expect("packing batch");
+        let outs = serve_batch(&leg, pack_batch.clone());
         let wall = t0.elapsed().as_secs_f64();
         let p = leg.stats().pack;
         println!(
@@ -280,7 +304,7 @@ fn main() {
     println!("tile invocations: {}", stats.invocations);
     println!("mean latency    : {:.1} ms (wall, CPU emulation)", stats.mean_latency_ms);
     println!("p99 latency     : {:.1} ms", stats.p99_latency_ms);
-    println!("wall time       : {:.2} s (CPU emulation of the array)", stats.wall_time_s);
+    println!("wall time       : {:.2} s (CPU emulation, closed-batch replays)", wall_s);
     println!("device time     : {:.3} ms (simulated VCK190 @1.25 GHz)", stats.device_time_s * 1e3);
     println!(
         "device thr      : {:.1} GFLOPs VCK190-equivalent (design peak 5442 GFLOPs; \

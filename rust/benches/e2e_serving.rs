@@ -14,7 +14,8 @@
 //! runs anywhere.
 //!
 //!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] \
-//!         [--load-json PATH] [--weight-json PATH] [--chaos-json PATH]
+//!         [--load-json PATH] [--weight-json PATH] [--chaos-json PATH] \
+//!         [--shard-json PATH]
 //!
 //! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
 //! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
@@ -25,7 +26,14 @@
 //! weight cache cold vs warm, packing time saved); `--chaos-json PATH`
 //! writes the fault-tolerance report (fault-free vs faulty-worker leg:
 //! degradation, injected/recovered fault counts — uploaded as the
-//! `chaos-report` artifact by the `chaos` CI job).
+//! `chaos-report` artifact by the `chaos` CI job); `--shard-json PATH`
+//! writes the shard-scaling report (1 vs 4 shards, weight-affinity
+//! routing on vs off, plus the M-split leg — uploaded as the
+//! `shard-scaling` artifact by the `bench-smoke` CI job).
+
+// The closed-batch A/B legs intentionally replay through the
+// deprecated `run_batch` wrapper (`coordinator::compat`).
+#![allow(deprecated)]
 
 mod common;
 
@@ -179,6 +187,11 @@ fn main() {
     let chaos_json_path = args
         .iter()
         .position(|a| a == "--chaos-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let shard_json_path = args
+        .iter()
+        .position(|a| a == "--shard-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
 
@@ -562,6 +575,172 @@ fn main() {
         o.insert("wall_speedup".into(), Json::Num(pack_walls[0] / pack_walls[1].max(1e-12)));
         o.insert("bit_identical".into(), Json::Bool(pack_identical));
         json_sections.push(Json::Obj(o));
+    }
+
+    common::banner("shard scaling: 1 vs 4 shards, weight-affinity routing on vs off");
+    // A repeat-`weight_id` stream (a few hot "models", many activations)
+    // is the shape weight-affinity routing targets: with affinity on,
+    // every request for a weight lands on the shard whose cache already
+    // holds its packed form, so the warm-hit rate survives sharding.
+    // Small custom design (native 8×16×8) on the reference backend so
+    // the section is CI-smoke cheap and artifact-independent; the JSON
+    // is behavior evidence (routing counters, cache misses,
+    // bit-identity) first, wall clocks second.
+    let mut shard_design = DesignConfig::flagship(Precision::Fp32);
+    (shard_design.x, shard_design.y, shard_design.z) = (2, 4, 2);
+    (shard_design.m, shard_design.k, shard_design.n) = (4, 4, 4);
+    let mut shard_cfg = ServeConfig::new(shard_design);
+    shard_cfg.backend = BackendKind::Reference;
+    shard_cfg.workers = 2;
+    shard_cfg.pipeline_depth = 4;
+    shard_cfg.weight_cache_bytes = 64 << 20;
+    let serve_f32 = |srv: &MatMulServer, batch: &[(MatMulRequest, Vec<f32>, Vec<f32>)]| {
+        let handles: Vec<_> = batch
+            .iter()
+            .map(|(r, a, b)| {
+                srv.submit(*r, maxeva::workloads::Operands::F32 { a: a.clone(), b: b.clone() })
+                    .unwrap()
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.wait().unwrap().into_f32().unwrap())
+            .collect::<Vec<Vec<f32>>>()
+    };
+    let n_models = 4usize;
+    let n_shard_reqs = if quick { 12usize } else { 32 };
+    let (sm, sk, sn) = (24u64, 64u64, 24u64); // gm = 3 tiles → routed whole
+    let mut srng = XorShift64::new(777);
+    let model_bs: Vec<Vec<f32>> =
+        (0..n_models).map(|_| rand_vec((sk * sn) as usize, &mut srng)).collect();
+    let affinity_batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)> = (0..n_shard_reqs)
+        .map(|i| {
+            let req = MatMulRequest::f32(2000 + i as u64, sm, sk, sn)
+                .with_weight_id(1 + (i % n_models) as u64);
+            (req, rand_vec((sm * sk) as usize, &mut srng), model_bs[i % n_models].clone())
+        })
+        .collect();
+    let mut affinity_runs: Vec<Json> = Vec::new();
+    let mut affinity_outs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for (shards, affinity) in [(1usize, true), (4, true), (4, false)] {
+        let mut leg_cfg = shard_cfg.clone();
+        leg_cfg.shards = shards;
+        leg_cfg.shard_affinity = affinity;
+        let leg = MatMulServer::start(&leg_cfg).expect("shard-scaling server");
+        // Untimed warmup pass: packs each model's weight into its
+        // shard's cache, warms free-lists.
+        let _ = serve_f32(&leg, &affinity_batch);
+        let t0 = Instant::now();
+        let outs = serve_f32(&leg, &affinity_batch);
+        let wall = t0.elapsed().as_secs_f64();
+        let s = leg.stats();
+        let per_shard: Vec<usize> = s.shards.iter().map(|sh| sh.requests).collect();
+        println!(
+            "  shards {shards} affinity {affinity:>5}: wall {wall:.3} s · routed affinity {} \
+             / least-loaded {} · cache hits {} / misses {} · per-shard requests {per_shard:?}",
+            s.router.routed_affinity,
+            s.router.routed_least_loaded,
+            s.mem.weight_cache_hits,
+            s.mem.weight_cache_misses,
+        );
+        if shards > 1 && affinity {
+            // Affinity routing pins each weight to one shard: every
+            // whole request routes by hash and each model's weight is
+            // packed exactly once across the whole fleet.
+            assert_eq!(s.router.routed_least_loaded, 0, "affinity must cover tagged requests");
+            assert_eq!(
+                s.mem.weight_cache_misses as usize, n_models,
+                "each model must be packed on exactly one shard"
+            );
+        }
+        let mut r = BTreeMap::new();
+        r.insert("shards".into(), Json::Num(shards as f64));
+        r.insert("affinity".into(), Json::Bool(affinity));
+        r.insert("wall_s".into(), Json::Num(wall));
+        r.insert("routed_affinity".into(), Json::Num(s.router.routed_affinity as f64));
+        r.insert(
+            "routed_least_loaded".into(),
+            Json::Num(s.router.routed_least_loaded as f64),
+        );
+        r.insert("weight_cache_hits".into(), Json::Num(s.mem.weight_cache_hits as f64));
+        r.insert("weight_cache_misses".into(), Json::Num(s.mem.weight_cache_misses as f64));
+        r.insert(
+            "per_shard_requests".into(),
+            Json::Arr(per_shard.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        affinity_runs.push(Json::Obj(r));
+        affinity_outs.push(outs);
+        leg.shutdown();
+    }
+    let affinity_identical =
+        affinity_outs.iter().all(|outs| *outs == affinity_outs[0]);
+    println!("  outputs bit-identical across all shard/affinity legs: {affinity_identical}");
+    assert!(
+        affinity_identical,
+        "shard routing must never change outputs (whole-request legs)"
+    );
+
+    // M-split leg: one GEMM tall enough to split (gm ≥ split_tiles)
+    // fans out across the fleet and reduces back bit-identically.
+    let (bm, bk, bn) = if quick { (64u64, 64u64, 24u64) } else { (128, 64, 24) };
+    let split_req = vec![MatMulRequest::f32(3000, bm, bk, bn)];
+    let split_batch = materialize_batch(&split_req, 31337);
+    let mut split_runs: Vec<Json> = Vec::new();
+    let mut split_outs: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut split_parts = 0u64;
+    for shards in [1usize, 4] {
+        let mut leg_cfg = shard_cfg.clone();
+        leg_cfg.shards = shards;
+        let leg = MatMulServer::start(&leg_cfg).expect("shard-split server");
+        let t0 = Instant::now();
+        let outs = serve_f32(&leg, &split_batch);
+        let wall = t0.elapsed().as_secs_f64();
+        let s = leg.stats();
+        println!(
+            "  split {bm}x{bk}x{bn} over {shards} shard(s): wall {wall:.3} s · \
+             {} split request(s), {} band(s)",
+            s.router.split_requests, s.router.split_parts
+        );
+        if shards > 1 {
+            assert_eq!(s.router.split_requests, 1, "the tall GEMM must split");
+            split_parts = s.router.split_parts;
+        }
+        let mut r = BTreeMap::new();
+        r.insert("shards".into(), Json::Num(shards as f64));
+        r.insert("wall_s".into(), Json::Num(wall));
+        r.insert("split_requests".into(), Json::Num(s.router.split_requests as f64));
+        r.insert("split_parts".into(), Json::Num(s.router.split_parts as f64));
+        split_runs.push(Json::Obj(r));
+        split_outs.push(outs);
+        leg.shutdown();
+    }
+    let split_identical = split_outs[0] == split_outs[1];
+    println!(
+        "  split outputs bit-identical to the single-shard run: {split_identical} \
+         ({split_parts} bands)"
+    );
+    assert!(
+        split_identical,
+        "an M-split request must be bit-identical to the unsplit engine"
+    );
+    if let Some(path) = shard_json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_shard_scaling".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("requests_per_pass".into(), Json::Num(n_shard_reqs as f64));
+        o.insert("models".into(), Json::Num(n_models as f64));
+        o.insert("affinity_runs".into(), Json::Arr(affinity_runs));
+        o.insert("affinity_bit_identical".into(), Json::Bool(affinity_identical));
+        let mut sp = BTreeMap::new();
+        sp.insert("shape".into(), Json::Str(format!("{bm}x{bk}x{bn}")));
+        sp.insert("runs".into(), Json::Arr(split_runs));
+        sp.insert("split_parts".into(), Json::Num(split_parts as f64));
+        sp.insert("bit_identical".into(), Json::Bool(split_identical));
+        o.insert("split".into(), Json::Obj(sp));
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote shard-scaling report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
     }
 
     common::banner("open-loop latency under load: heavy int8 stream + fp32 trickle");

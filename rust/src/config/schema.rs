@@ -245,7 +245,7 @@ pub enum AdmissionPolicy {
     /// backpressure — slows producers down to the engine's pace).
     #[default]
     Block,
-    /// Fail fast with [`crate::coordinator::server::QueueFull`] so the
+    /// Fail fast with [`crate::coordinator::QueueFull`] so the
     /// caller can shed load or retry.
     Reject,
 }
@@ -388,6 +388,25 @@ pub struct ServeConfig {
     /// [`crate::coordinator::fault::DrainDeadlineExpired`] instead of
     /// hanging. `0` = unbounded drain, the historical behavior.
     pub drain_deadline_ms: u64,
+    /// Independent serving engines ("cards") behind the facade: each
+    /// shard owns a full scheduler + device pool + memory plane. `1`
+    /// (the default) is the single-engine server, bit-for-bit. With
+    /// more shards the front-end router steers small requests whole
+    /// (weight-affinity or least-loaded) and splits large GEMMs along M
+    /// — see [`crate::coordinator::shard`]. Every per-engine knob above
+    /// (`workers`, `queue_depth`, `pipeline_depth`, caches, fault plan)
+    /// applies *per shard*.
+    pub shards: usize,
+    /// Minimum M-tile count (`⌈m / nm⌉` in the request's precision
+    /// geometry) at which a request is split along M across shards
+    /// instead of routed whole. `0` disables splitting entirely.
+    /// Irrelevant while `shards = 1`.
+    pub shard_split_tiles: usize,
+    /// Steer repeat-`weight_id` requests to a consistent shard
+    /// (rendezvous hashing on the weight identity) so that shard's
+    /// packed-weight cache stays warm. `false` routes every unsplit
+    /// request least-loaded. Irrelevant while `shards = 1`.
+    pub shard_affinity: bool,
 }
 
 impl ServeConfig {
@@ -412,7 +431,62 @@ impl ServeConfig {
             tile_timeout_floor_ms: 50,
             quarantine_after: 3,
             drain_deadline_ms: 0,
+            shards: 1,
+            shard_split_tiles: 8,
+            shard_affinity: true,
         }
+    }
+
+    /// A validating builder over the same fields (see
+    /// [`ServeConfigBuilder`]): misconfigurations are rejected at
+    /// `build()` time instead of surfacing inside
+    /// `MatMulServer::start` or, worse, as silent clamping.
+    pub fn builder(design: DesignConfig) -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::new(design) }
+    }
+
+    /// Reject configurations the server would otherwise have to clamp
+    /// or misinterpret. Called by [`ServeConfigBuilder::build`]; plain
+    /// struct construction stays unvalidated for backward
+    /// compatibility (the engine clamps defensively).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.shards == 0 {
+            return Err(ConfigError::Invalid("shards", "0 (need at least one shard)".into()));
+        }
+        if self.pipeline_depth == 0 {
+            return Err(ConfigError::Invalid(
+                "pipeline_depth",
+                "0 (need at least one tile in flight)".into(),
+            ));
+        }
+        if self.workers == 0 {
+            return Err(ConfigError::Invalid("workers", "0 (need at least one worker)".into()));
+        }
+        if self.pack_workers == 0 {
+            return Err(ConfigError::Invalid(
+                "pack_workers",
+                "0 (need at least serial packing)".into(),
+            ));
+        }
+        let reserved: u64 = self.class_queue_reserve.iter().sum();
+        if self.queue_depth > 0 && reserved > self.queue_depth as u64 {
+            return Err(ConfigError::Invalid(
+                "class_queue_reserve",
+                format!("reserves {reserved} exceed queue_depth {}", self.queue_depth),
+            ));
+        }
+        if !self.tile_timeout_mult.is_finite() || self.tile_timeout_mult < 0.0 {
+            return Err(ConfigError::Invalid(
+                "tile_timeout_mult",
+                self.tile_timeout_mult.to_string(),
+            ));
+        }
+        if let Some(plan) = &self.fault_plan {
+            if !(0.0..=1.0).contains(&plan.rate) {
+                return Err(ConfigError::Invalid("fault_plan.rate", plan.rate.to_string()));
+            }
+        }
+        Ok(())
     }
 
     pub fn to_json(&self) -> Json {
@@ -448,6 +522,9 @@ impl ServeConfig {
         );
         o.insert("quarantine_after".into(), Json::Num(self.quarantine_after as f64));
         o.insert("drain_deadline_ms".into(), Json::Num(self.drain_deadline_ms as f64));
+        o.insert("shards".into(), Json::Num(self.shards as f64));
+        o.insert("shard_split_tiles".into(), Json::Num(self.shard_split_tiles as f64));
+        o.insert("shard_affinity".into(), Json::Bool(self.shard_affinity));
         Json::Obj(o)
     }
 
@@ -538,12 +615,157 @@ impl ServeConfig {
                 .get("drain_deadline_ms")
                 .and_then(Json::as_u64)
                 .unwrap_or(0),
+            shards: v.get("shards").and_then(Json::as_u64).unwrap_or(1) as usize,
+            shard_split_tiles: v
+                .get("shard_split_tiles")
+                .and_then(Json::as_u64)
+                .unwrap_or(8) as usize,
+            shard_affinity: v
+                .get("shard_affinity")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
         })
     }
 
     pub fn load(path: &Path) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path)?;
         Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Validating builder for [`ServeConfig`] — chainable setters over the
+/// defaults of [`ServeConfig::new`], with misconfigurations (zero
+/// shards, zero pipeline depth, oversubscribed class reserves, …)
+/// rejected by [`ServeConfigBuilder::build`] instead of surfacing at
+/// server start. The plain struct (and its JSON round-trip) keeps
+/// working unvalidated for existing call sites.
+///
+/// ```no_run
+/// use maxeva::config::schema::{DesignConfig, ServeConfig};
+/// use maxeva::Precision;
+///
+/// let cfg = ServeConfig::builder(DesignConfig::flagship(Precision::Fp32))
+///     .workers(4)
+///     .shards(2)
+///     .weight_cache_bytes(64 << 20)
+///     .build()
+///     .expect("valid serving config");
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.cfg.admission = policy;
+        self
+    }
+
+    pub fn pipeline_depth(mut self, depth: usize) -> Self {
+        self.cfg.pipeline_depth = depth;
+        self
+    }
+
+    pub fn weight_cache_bytes(mut self, bytes: usize) -> Self {
+        self.cfg.weight_cache_bytes = bytes;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn class_weights(mut self, weights: Vec<u64>) -> Self {
+        self.cfg.class_weights = weights;
+        self
+    }
+
+    pub fn aging_threshold(mut self, threshold: u64) -> Self {
+        self.cfg.aging_threshold = threshold;
+        self
+    }
+
+    pub fn pack_workers(mut self, workers: usize) -> Self {
+        self.cfg.pack_workers = workers;
+        self
+    }
+
+    pub fn class_queue_reserve(mut self, reserve: Vec<u64>) -> Self {
+        self.cfg.class_queue_reserve = reserve;
+        self
+    }
+
+    pub fn fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.cfg.fault_plan = plan;
+        self
+    }
+
+    pub fn max_tile_retries(mut self, retries: u32) -> Self {
+        self.cfg.max_tile_retries = retries;
+        self
+    }
+
+    pub fn tile_timeout_mult(mut self, mult: f64) -> Self {
+        self.cfg.tile_timeout_mult = mult;
+        self
+    }
+
+    pub fn tile_timeout_floor_ms(mut self, floor_ms: u64) -> Self {
+        self.cfg.tile_timeout_floor_ms = floor_ms;
+        self
+    }
+
+    pub fn quarantine_after(mut self, faults: u32) -> Self {
+        self.cfg.quarantine_after = faults;
+        self
+    }
+
+    pub fn drain_deadline_ms(mut self, ms: u64) -> Self {
+        self.cfg.drain_deadline_ms = ms;
+        self
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = shards;
+        self
+    }
+
+    pub fn shard_split_tiles(mut self, tiles: usize) -> Self {
+        self.cfg.shard_split_tiles = tiles;
+        self
+    }
+
+    pub fn shard_affinity(mut self, affinity: bool) -> Self {
+        self.cfg.shard_affinity = affinity;
+        self
+    }
+
+    /// Validate and produce the config ([`ServeConfig::validate`]).
+    pub fn build(self) -> Result<ServeConfig, ConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -631,6 +853,9 @@ mod tests {
         assert_eq!(c.tile_timeout_floor_ms, 50);
         assert_eq!(c.quarantine_after, 3);
         assert_eq!(c.drain_deadline_ms, 0, "drain defaults unbounded");
+        assert_eq!(c.shards, 1, "sharding defaults to the single engine");
+        assert_eq!(c.shard_split_tiles, 8);
+        assert!(c.shard_affinity, "weight-affinity routing defaults on");
     }
 
     #[test]
@@ -675,6 +900,9 @@ mod tests {
         c.tile_timeout_floor_ms = 120;
         c.quarantine_after = 7;
         c.drain_deadline_ms = 1500;
+        c.shards = 5;
+        c.shard_split_tiles = 3;
+        c.shard_affinity = false;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
         // And through a file, like the launcher loads it.
@@ -794,6 +1022,79 @@ mod tests {
         assert!(matches!(
             ServeConfig::from_json(&v),
             Err(ConfigError::Invalid("backend", _))
+        ));
+    }
+
+    #[test]
+    fn builder_builds_and_validates() {
+        let design = DesignConfig::flagship(Precision::Fp32);
+        let cfg = ServeConfig::builder(design.clone())
+            .workers(4)
+            .queue_depth(32)
+            .admission(AdmissionPolicy::Reject)
+            .pipeline_depth(8)
+            .weight_cache_bytes(16 << 20)
+            .backend(BackendKind::Reference)
+            .policy(PolicyKind::WeightedFair)
+            .class_weights(vec![4, 1])
+            .pack_workers(2)
+            .class_queue_reserve(vec![8, 0])
+            .max_tile_retries(3)
+            .shards(4)
+            .shard_split_tiles(2)
+            .shard_affinity(false)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.shard_split_tiles, 2);
+        assert!(!cfg.shard_affinity);
+        // Untouched knobs keep their ServeConfig::new defaults.
+        assert_eq!(cfg.aging_threshold, 64);
+        assert_eq!(cfg.drain_deadline_ms, 0);
+        // The built config round-trips like the plain struct.
+        assert_eq!(ServeConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        // And defaults alone build fine.
+        ServeConfig::builder(design).build().unwrap();
+    }
+
+    #[test]
+    fn builder_rejects_misconfigurations() {
+        let design = DesignConfig::flagship(Precision::Fp32);
+        let b = || ServeConfig::builder(design.clone());
+        assert!(matches!(
+            b().shards(0).build(),
+            Err(ConfigError::Invalid("shards", _))
+        ));
+        assert!(matches!(
+            b().pipeline_depth(0).build(),
+            Err(ConfigError::Invalid("pipeline_depth", _))
+        ));
+        assert!(matches!(
+            b().workers(0).build(),
+            Err(ConfigError::Invalid("workers", _))
+        ));
+        assert!(matches!(
+            b().pack_workers(0).build(),
+            Err(ConfigError::Invalid("pack_workers", _))
+        ));
+        // Reserves exceeding the queue depth are almost certainly a
+        // typo (the gate would run with an empty shared pool).
+        assert!(matches!(
+            b().queue_depth(4).class_queue_reserve(vec![3, 2]).build(),
+            Err(ConfigError::Invalid("class_queue_reserve", _))
+        ));
+        // Unbounded queues ignore reserves, so any reserve is fine.
+        b().queue_depth(0).class_queue_reserve(vec![3, 2]).build().unwrap();
+        assert!(matches!(
+            b().tile_timeout_mult(f64::NAN).build(),
+            Err(ConfigError::Invalid("tile_timeout_mult", _))
+        ));
+        let mut bad_plan = FaultPlan::new(1, 0.5, vec![]);
+        bad_plan.rate = 2.0;
+        assert!(matches!(
+            b().fault_plan(Some(bad_plan)).build(),
+            Err(ConfigError::Invalid("fault_plan.rate", _))
         ));
     }
 

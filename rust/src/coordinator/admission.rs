@@ -187,6 +187,13 @@ impl Gate {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
+
+    /// Open requests currently admitted and not yet retired, across all
+    /// classes — the live load gauge the shard router's least-loaded
+    /// fallback compares.
+    pub(crate) fn in_flight(&self) -> usize {
+        self.state.lock().unwrap().open.iter().sum()
+    }
 }
 
 #[cfg(test)]
@@ -200,7 +207,9 @@ mod tests {
         g.admit(AdmissionPolicy::Reject, 5).unwrap();
         let err = g.admit(AdmissionPolicy::Reject, 0).unwrap_err();
         assert!(err.downcast_ref::<QueueFull>().is_some());
+        assert_eq!(g.in_flight(), 2);
         g.release(5);
+        assert_eq!(g.in_flight(), 1);
         g.admit(AdmissionPolicy::Reject, 1).unwrap();
     }
 

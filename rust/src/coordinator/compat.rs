@@ -1,0 +1,86 @@
+//! Deprecated batch-replay wrappers over the streaming API.
+//!
+//! `execute` / `run_batch` / `run_batch_mixed` predate streaming
+//! admission: they replay a *closed* batch through the engine and block
+//! until it finishes. They remain for source compatibility — each is a
+//! thin shim over [`MatMulServer::submit_with_policy`] with blocking
+//! admission and in-order waits — but new code should submit requests
+//! as they arrive ([`MatMulServer::submit`] /
+//! [`MatMulServer::submit_with_callback`]) and let the scheduler
+//! overlap them.
+//!
+//! [`MatMulServer::submit`]: crate::coordinator::server::MatMulServer::submit
+//! [`MatMulServer::submit_with_callback`]: crate::coordinator::server::MatMulServer::submit_with_callback
+//! [`MatMulServer::submit_with_policy`]: crate::coordinator::server::MatMulServer::submit_with_policy
+
+// The wrappers call each other (execute → run_batch → run_batch_mixed);
+// those internal calls must not trip the deprecation lint this module
+// itself raises.
+#![allow(deprecated)]
+
+use crate::config::schema::AdmissionPolicy;
+use crate::coordinator::handle::RequestHandle;
+use crate::coordinator::server::MatMulServer;
+use crate::workloads::{MatMulRequest, MatOutput, Operands};
+use anyhow::Result;
+use std::time::Instant;
+
+impl MatMulServer {
+    /// Execute one fp32 request synchronously (convenience path).
+    #[deprecated(
+        note = "batch replay is a compatibility shim; use MatMulServer::submit and wait on the handle"
+    )]
+    pub fn execute(&mut self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
+        let mut out = self.run_batch(vec![(req, a, b)])?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Serve a closed fp32 batch through the streaming engine (submit
+    /// everything with blocking admission, wait in order). Returns the
+    /// outputs in request order. On error the batch's other open
+    /// requests are cancelled (see [`MatMulServer::run_batch_mixed`]).
+    #[deprecated(
+        note = "batch replay is a compatibility shim; use MatMulServer::submit / submit_with_callback"
+    )]
+    pub fn run_batch(
+        &mut self,
+        batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.run_batch_mixed(
+            batch
+                .into_iter()
+                .map(|(req, a, b)| (req, Operands::F32 { a, b }))
+                .collect(),
+        )?
+        .into_iter()
+        .map(MatOutput::into_f32)
+        .collect()
+    }
+
+    /// Serve a closed mixed-precision batch through the streaming
+    /// engine. Returns the outputs in request order.
+    ///
+    /// On any error — a submission rejected mid-batch or a request
+    /// failing — the remaining handles are dropped, which (since PR 3)
+    /// **cancels** the batch's other open requests: a failed batch
+    /// reclaims its queue/window slots instead of running doomed work
+    /// to completion. Those requests land in `stats().cancelled`, not
+    /// `requests`.
+    #[deprecated(
+        note = "batch replay is a compatibility shim; use MatMulServer::submit / submit_with_callback"
+    )]
+    pub fn run_batch_mixed(
+        &mut self,
+        batch: Vec<(MatMulRequest, Operands)>,
+    ) -> Result<Vec<MatOutput>> {
+        let wall0 = Instant::now();
+        self.reset_epoch();
+        let mut handles = Vec::with_capacity(batch.len());
+        for (req, ops) in batch {
+            handles.push(self.submit_with_policy(req, ops, AdmissionPolicy::Block)?);
+        }
+        let outs: Result<Vec<MatOutput>> = handles.into_iter().map(RequestHandle::wait).collect();
+        self.add_wall_time(wall0.elapsed().as_secs_f64());
+        outs
+    }
+}

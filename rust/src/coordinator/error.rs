@@ -1,0 +1,141 @@
+//! The unified public error surface of the serving layer.
+//!
+//! Every typed error the coordinator can deliver — admission rejections
+//! ([`QueueFull`]), cancellations ([`Cancelled`]) and the fault-plane
+//! failures ([`TileRetriesExhausted`], [`TileTimedOut`],
+//! [`TileCorrupted`], [`SchedulerPanicked`], [`DrainDeadlineExpired`])
+//! — is collected under one `#[non_exhaustive]` enum, [`ServeError`],
+//! re-exported from the crate root.
+//!
+//! The engine still transports errors through `anyhow::Error` with the
+//! concrete types attached (so existing
+//! `err.downcast_ref::<QueueFull>()` call sites keep compiling
+//! unchanged); [`ServeError::from_anyhow`] classifies such an error
+//! into the enum when a caller wants one `match` over every serving
+//! failure mode instead of a downcast ladder.
+
+use crate::coordinator::admission::QueueFull;
+use crate::coordinator::fault::{
+    DrainDeadlineExpired, SchedulerPanicked, TileCorrupted, TileRetriesExhausted, TileTimedOut,
+};
+use crate::coordinator::handle::Cancelled;
+
+/// Any typed failure the serving layer can resolve a request with.
+///
+/// `#[non_exhaustive]`: future PRs may add failure modes (deadline
+/// SLOs, shard evacuation, …) without a breaking change — always keep a
+/// `_` arm. The `From` impls let existing code that produced or matched
+/// the concrete error types lift them into the enum for free.
+#[non_exhaustive]
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum ServeError {
+    /// The admission queue could not open one more request
+    /// (`AdmissionPolicy::Reject` backpressure).
+    #[error(transparent)]
+    QueueFull(#[from] QueueFull),
+    /// The request was cancelled (explicitly or by dropping its handle)
+    /// before it completed.
+    #[error(transparent)]
+    Cancelled(#[from] Cancelled),
+    /// A tile failed every execution attempt (`max_tile_retries`).
+    #[error(transparent)]
+    TileRetriesExhausted(#[from] TileRetriesExhausted),
+    /// A tile's completion missed its armed deadline.
+    #[error(transparent)]
+    TileTimedOut(#[from] TileTimedOut),
+    /// A tile's output failed checksum verification (chaos mode).
+    #[error(transparent)]
+    TileCorrupted(#[from] TileCorrupted),
+    /// The scheduler thread panicked; the request was failed fast.
+    #[error(transparent)]
+    SchedulerPanicked(#[from] SchedulerPanicked),
+    /// The shutdown drain deadline expired with the request still open.
+    #[error(transparent)]
+    DrainDeadlineExpired(#[from] DrainDeadlineExpired),
+}
+
+impl ServeError {
+    /// Classify an `anyhow::Error` delivered by the serving layer into
+    /// the typed enum. `None` for untyped failures (validation errors,
+    /// shutdown messages, backend errors) — those remain plain anyhow
+    /// messages by design.
+    pub fn from_anyhow(err: &anyhow::Error) -> Option<ServeError> {
+        if let Some(e) = err.downcast_ref::<QueueFull>() {
+            return Some(ServeError::QueueFull(*e));
+        }
+        if let Some(e) = err.downcast_ref::<Cancelled>() {
+            return Some(ServeError::Cancelled(*e));
+        }
+        if let Some(e) = err.downcast_ref::<TileRetriesExhausted>() {
+            return Some(ServeError::TileRetriesExhausted(e.clone()));
+        }
+        if let Some(e) = err.downcast_ref::<TileTimedOut>() {
+            return Some(ServeError::TileTimedOut(*e));
+        }
+        if let Some(e) = err.downcast_ref::<TileCorrupted>() {
+            return Some(ServeError::TileCorrupted(*e));
+        }
+        if let Some(e) = err.downcast_ref::<SchedulerPanicked>() {
+            return Some(ServeError::SchedulerPanicked(*e));
+        }
+        if let Some(e) = err.downcast_ref::<DrainDeadlineExpired>() {
+            return Some(ServeError::DrainDeadlineExpired(*e));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_every_typed_error() {
+        let cases: Vec<(anyhow::Error, fn(&ServeError) -> bool)> = vec![
+            (QueueFull(4).into(), |e| matches!(e, ServeError::QueueFull(QueueFull(4)))),
+            (Cancelled(7).into(), |e| matches!(e, ServeError::Cancelled(Cancelled(7)))),
+            (
+                TileRetriesExhausted { id: 1, attempts: 3, last: "boom".into() }.into(),
+                |e| matches!(e, ServeError::TileRetriesExhausted(t) if t.attempts == 3),
+            ),
+            (
+                TileTimedOut { worker: 2, waited_ms: 80 }.into(),
+                |e| matches!(e, ServeError::TileTimedOut(t) if t.worker == 2),
+            ),
+            (
+                TileCorrupted { worker: 1 }.into(),
+                |e| matches!(e, ServeError::TileCorrupted(_)),
+            ),
+            (SchedulerPanicked.into(), |e| matches!(e, ServeError::SchedulerPanicked(_))),
+            (
+                DrainDeadlineExpired(9).into(),
+                |e| matches!(e, ServeError::DrainDeadlineExpired(DrainDeadlineExpired(9))),
+            ),
+        ];
+        for (err, check) in cases {
+            let classified = ServeError::from_anyhow(&err)
+                .unwrap_or_else(|| panic!("unclassified: {err}"));
+            assert!(check(&classified), "misclassified: {classified}");
+            // Display is transparent: the enum shows the inner message.
+            assert_eq!(classified.to_string(), err.to_string());
+        }
+    }
+
+    #[test]
+    fn untyped_errors_stay_unclassified() {
+        let err = anyhow::anyhow!("request 3: A shape mismatch");
+        assert!(ServeError::from_anyhow(&err).is_none());
+    }
+
+    #[test]
+    fn from_impls_lift_concrete_types() {
+        // The From impls are what keep pre-enum call sites compiling:
+        // `?` and `.into()` on a concrete error produce the enum.
+        let e: ServeError = QueueFull(1).into();
+        assert!(matches!(e, ServeError::QueueFull(_)));
+        let e: ServeError = Cancelled(0).into();
+        assert!(matches!(e, ServeError::Cancelled(_)));
+        let e: ServeError = SchedulerPanicked.into();
+        assert!(matches!(e, ServeError::SchedulerPanicked(_)));
+    }
+}

@@ -294,7 +294,7 @@ pub fn fnv1a_words(words: impl Iterator<Item = u32>) -> u64 {
 
 /// A tile failed all of its `1 + max_tile_retries` execution attempts;
 /// the flight is failed with this typed error wrapping the last cause.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, thiserror::Error)]
 #[error("request {id}: tile failed all {attempts} attempts; last error: {last}")]
 pub struct TileRetriesExhausted {
     /// Failing request's id.
@@ -307,7 +307,7 @@ pub struct TileRetriesExhausted {
 
 /// A tile's completion did not arrive within its deadline (lost,
 /// hung, or severely delayed worker).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, Copy, thiserror::Error)]
 #[error("tile deadline expired after {waited_ms} ms (worker {worker})")]
 pub struct TileTimedOut {
     pub worker: usize,
@@ -316,7 +316,7 @@ pub struct TileTimedOut {
 
 /// A completion's payload did not match the checksum computed by the
 /// worker (corruption between execution and reduction).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, Copy, thiserror::Error)]
 #[error("tile output failed checksum verification (worker {worker})")]
 pub struct TileCorrupted {
     pub worker: usize,

@@ -17,6 +17,13 @@
 //! error (recover it with `err.downcast_ref::<Cancelled>()`). A request
 //! that already retired is unaffected: cancellation after completion is
 //! a no-op, and a handle always resolves exactly once.
+//!
+//! When the shard router splits a request along M
+//! (see [`crate::coordinator::shard`]), the handle carries one cancel
+//! route per band — `cancel` fans out to every shard that owns a band,
+//! and the merged result resolves with [`Cancelled`] unless every band
+//! had already retired (in which case the output is delivered whole,
+//! exactly like the single-shard race).
 
 use crate::coordinator::scheduler::Event;
 use crate::workloads::{MatMulRequest, MatOutput};
@@ -61,9 +68,11 @@ impl Reply {
 /// completion.
 pub struct RequestHandle {
     id: u64,
-    token: u64,
     rx: mpsc::Receiver<Result<MatOutput>>,
-    events: mpsc::Sender<Event>,
+    /// One `(scheduler event channel, cancellation token)` per shard
+    /// holding a piece of this request — a single entry for whole
+    /// routing, one per band for M-split routing.
+    routes: Vec<(mpsc::Sender<Event>, u64)>,
     /// Set once the result was received (or the server is known gone) —
     /// suppresses the cancel-on-drop signal.
     resolved: Cell<bool>,
@@ -72,11 +81,10 @@ pub struct RequestHandle {
 impl RequestHandle {
     pub(crate) fn new(
         id: u64,
-        token: u64,
         rx: mpsc::Receiver<Result<MatOutput>>,
-        events: mpsc::Sender<Event>,
+        routes: Vec<(mpsc::Sender<Event>, u64)>,
     ) -> Self {
-        RequestHandle { id, token, rx, events, resolved: Cell::new(false) }
+        RequestHandle { id, rx, routes, resolved: Cell::new(false) }
     }
 
     /// The submitted request's id.
@@ -89,8 +97,12 @@ impl RequestHandle {
     /// handle still resolves — [`RequestHandle::wait`] returns a
     /// [`Cancelled`] error (or the output, if the request won the race
     /// and retired first). Cancelling a completed request is a no-op.
+    /// For an M-split request the cancel fans out to every shard that
+    /// owns a band.
     pub fn cancel(&self) {
-        let _ = self.events.send(Event::Cancel(self.token));
+        for (events, token) in &self.routes {
+            let _ = events.send(Event::Cancel(*token));
+        }
     }
 
     /// Block until the request retires and take its output.
@@ -146,7 +158,9 @@ impl RequestHandle {
 impl Drop for RequestHandle {
     fn drop(&mut self) {
         if !self.resolved.get() {
-            let _ = self.events.send(Event::Cancel(self.token));
+            for (events, token) in &self.routes {
+                let _ = events.send(Event::Cancel(*token));
+            }
         }
     }
 }

@@ -2,12 +2,21 @@
 //!
 //! # Architecture
 //!
+//! The facade ([`server::MatMulServer`]) fronts `ServeConfig::shards`
+//! independent copies of the engine below (a `shard::Shard` each);
+//! the router in [`shard`] places whole requests by weight-affinity
+//! rendezvous hashing (least-loaded fallback) and splits large GEMMs
+//! along M with a bit-identity-preserving reduction — see
+//! [`shard`] for the routing policy and the bit-identity-under-split
+//! argument. One shard (the default) bypasses the router entirely:
+//!
 //! ```text
 //!  client threads                     scheduler thread                device pool
 //!  ──────────────                     ────────────────               ─────────────
 //!  submit / submit_with_callback
-//!    │ validate + admission gate
-//!    │ (queue_depth, block/reject)
+//!    │ validate + shard router
+//!    │ admission gate (per shard:
+//!    │  queue_depth, block/reject)
 //!    ├──── Event::Admit ────────────▶ SchedPolicy ◀─ policy knobs
 //!    │                                │  Fifo | WeightedFair | Priority
 //!  RequestHandle                      │  pick() → flight issues 1 tile
@@ -101,7 +110,16 @@
 //! the ascending-`ik` reduction order is preserved, so retries are
 //! invisible in the output. Every submitted request resolves exactly
 //! once — with its output, a typed fault error, or [`Cancelled`] —
-//! under every fault mix the chaos layer can produce.
+//! under every fault mix the chaos layer can produce. Both guarantees
+//! extend across the shard router: an M-split request's bands execute
+//! the identical tile walk and `ik` reduction the unsplit request would
+//! have for their rows, the merge is pure row-band concatenation (so
+//! `shards = N` outputs are bit-identical to `shards = 1` — see
+//! [`shard`]), and a split request still resolves exactly once (its
+//! first failing band, in band order, decides the error). Every typed
+//! failure is classifiable through the single
+//! [`ServeError`](error::ServeError) enum re-exported at the crate
+//! root.
 //!
 //! **Non-guarantees.** Supervision is driven by the scheduler's
 //! deadline ticks: with deadlines disabled (`tile_timeout_mult = 0`,
@@ -118,7 +136,9 @@
 //! [`RequestHandle::wait_timeout`]: handle::RequestHandle::wait_timeout
 
 pub mod admission;
+pub mod compat;
 pub mod device;
+pub mod error;
 pub mod fault;
 pub mod handle;
 pub mod microkernel;
@@ -126,15 +146,20 @@ pub mod policy;
 pub mod pool;
 pub(crate) mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod stats;
 pub mod tiler;
 pub mod trace;
 
+// The canonical re-export surface of the serving layer. These are the
+// *only* re-exports (the sibling modules no longer duplicate them);
+// `crate::prelude` narrows this list to what a typical client needs.
 pub use admission::QueueFull;
 pub use device::{
     output_crc, spawn_device, spawn_device_pool, spawn_device_pool_with_faults, DeviceHandle,
     TileDone, TileJob, TileOutput, TilePayload,
 };
+pub use error::ServeError;
 pub use fault::{
     DrainDeadlineExpired, FaultCounters, FaultKind, FaultPlan, SchedulerPanicked, TileCorrupted,
     TileRetriesExhausted, TileTimedOut,
@@ -147,5 +172,7 @@ pub use pool::{
     PAR_PACK_MIN_TILES,
 };
 pub use server::{MatMulServer, ServerStats};
-pub use stats::{ClassStats, FaultStats, MemPlaneStats, PackStats, WorkerHealth};
+pub use stats::{
+    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, WorkerHealth,
+};
 pub use tiler::Tiler;

@@ -115,8 +115,6 @@ pub(crate) struct Shared {
     pub(crate) window: Mutex<WindowOcc>,
     /// Occupancy since the last epoch reset (A/B attribution).
     pub(crate) last_window: Mutex<WindowOcc>,
-    /// Wall time spent inside `run_batch` calls.
-    pub(crate) wall_time_s: Mutex<f64>,
 }
 
 /// Fault-plane knobs the scheduler enforces, derived from `ServeConfig`

@@ -1,11 +1,17 @@
 //! The MatMul serving coordinator: **streaming admission** + pluggable
-//! scheduling policy + pipelined tile engine on the device worker pool.
+//! scheduling policy + pipelined tile engines on device worker pools.
 //!
 //! This module is the client-facing facade; the machinery lives in the
 //! sibling modules:
 //!
+//! * [`crate::coordinator::shard`] — the sharded serving plane: each
+//!   [`Shard`] is one complete scheduler + device-pool + memory-plane
+//!   engine, and the router places requests on shards (weight-affinity
+//!   rendezvous hashing, least-loaded fallback, M-splitting for large
+//!   GEMMs — with the bit-identity-under-split contract documented
+//!   there).
 //! * [`crate::coordinator::admission`] — the bounded open-request gate
-//!   (`queue_depth` + block/reject backpressure).
+//!   (`queue_depth` + block/reject backpressure), one per shard.
 //! * [`crate::coordinator::policy`] — [`SchedPolicy`]: who issues the
 //!   next tile ([`PolicyKind::Fifo`] round-robin by default,
 //!   `WeightedFair` deficit round-robin with per-precision costs,
@@ -20,26 +26,37 @@
 //!   [`MatMulRequest::with_weight_id`](crate::workloads::MatMulRequest::with_weight_id)),
 //!   and the tile-buffer free-lists that give a long-lived server a
 //!   zero-allocation steady state per tile ([`ServerStats::mem`]).
+//! * [`crate::coordinator::error`] — [`ServeError`], the one enum over
+//!   every typed serving failure.
 //!
 //! # Streaming admission (the open queue)
 //!
 //! [`MatMulServer::submit`] admits one request into a bounded open
-//! queue and returns a [`RequestHandle`] immediately; the scheduler
+//! queue and returns a [`RequestHandle`] immediately; a scheduler
 //! thread packs operands, feeds the in-flight window continuously,
 //! reduces partials and retires requests while later submissions are
 //! still arriving. Backpressure is governed by
-//! `ServeConfig::queue_depth` and an [`AdmissionPolicy`]
+//! `ServeConfig::queue_depth` (per shard) and an [`AdmissionPolicy`]
 //! (`Block` parks the producer, `Reject` fails fast with [`QueueFull`]).
+//!
+//! # Sharding
+//!
+//! With `ServeConfig::shards = N > 1` the facade runs N engines and
+//! routes each request (see [`crate::coordinator::shard`]); the default
+//! `shards = 1` short-circuits the router entirely and is bit-for-bit
+//! the single-engine server. [`MatMulServer::stats`] reports per-shard
+//! snapshots (`ServerStats::shards`) plus rolled-up totals, and
+//! `ServerStats::router` counts the routing decisions taken.
 //!
 //! # Scheduling policy, classes and cancellation
 //!
 //! Every [`MatMulRequest`] carries a priority `class`; the configured
-//! [`PolicyKind`] decides how classes and precisions share the window.
-//! The default `Fifo` policy reproduces the PR 1/2 round-robin
+//! [`PolicyKind`] decides how classes and precisions share each shard's
+//! window. The default `Fifo` policy reproduces the PR 1/2 round-robin
 //! bit-for-bit. Dropping or explicitly cancelling a [`RequestHandle`]
 //! reclaims the request's queue and window slots for tiles not yet
-//! dispatched — see [`RequestHandle::cancel`] and the
-//! [`Cancelled`] error.
+//! dispatched — across every shard holding a band of it — see
+//! [`RequestHandle::cancel`] and the [`Cancelled`] error.
 //!
 //! # Per-request precision
 //!
@@ -50,36 +67,38 @@
 //! period. One server interleaves both in a single window.
 //!
 //! **Determinism:** outputs are bit-identical for every
-//! `pipeline_depth`/`workers` combination and admission interleaving —
-//! see `rust/tests/pipeline_equivalence.rs` and
-//! `rust/tests/streaming_admission.rs`.
+//! `pipeline_depth`/`workers`/`shards` combination and admission
+//! interleaving — see `rust/tests/pipeline_equivalence.rs`,
+//! `rust/tests/streaming_admission.rs` and
+//! `rust/tests/shard_routing.rs`.
+//!
+//! [`Shard`]: crate::coordinator::shard
+//! [`SchedPolicy`]: crate::coordinator::policy::SchedPolicy
+//! [`QueueFull`]: crate::coordinator::admission::QueueFull
+//! [`Cancelled`]: crate::coordinator::handle::Cancelled
+//! [`ServeError`]: crate::coordinator::error::ServeError
 
 use crate::arch::precision::Precision;
 use crate::config::schema::{AdmissionPolicy, PolicyKind, ServeConfig};
-use crate::coordinator::admission::{Admitted, Gate};
-use crate::coordinator::device::{
-    spawn_device_pool_with_faults, PoolHealth, PrecisionInfo, TileDone,
+use crate::coordinator::device::PrecisionInfo;
+use crate::coordinator::handle::{Reply, RequestHandle};
+use crate::coordinator::scheduler::Event;
+use crate::coordinator::shard::{
+    band_operands, band_reply, band_request, plan_route, Band, Route, RouterCounters, Shard,
+    SplitAcc,
 };
-use crate::coordinator::fault::FaultCounters;
-use crate::coordinator::handle::Reply;
-use crate::coordinator::policy::{PolicyParams, TileCosts};
-use crate::coordinator::pool::{BufferPool, PackCounters, WeightCache, WeightCacheCounters};
-use crate::coordinator::scheduler::{Event, Robustness, Scheduler, Shared};
 use crate::coordinator::stats::{
-    ClassStats, FaultStats, MemPlaneStats, PackStats, StatsAgg, WindowOcc, WorkerHealth,
+    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, StatsAgg,
+    WindowOcc, WorkerHealth,
 };
-use crate::coordinator::tiler::Tiler;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
 
-pub use crate::coordinator::admission::QueueFull;
-pub use crate::coordinator::handle::{Cancelled, RequestHandle};
-
-/// Serving statistics snapshot.
+/// Serving statistics snapshot: rolled-up totals over every shard, plus
+/// the per-shard breakdown in [`ServerStats::shards`]. With one shard
+/// (the default) the totals are exactly that shard's statistics.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
     pub requests: usize,
@@ -87,8 +106,10 @@ pub struct ServerStats {
     pub requests_fp32: usize,
     pub requests_int8: usize,
     /// Requests cancelled before completion (not counted in `requests`).
+    /// Bands of an M-split request count individually.
     pub cancelled: usize,
     pub invocations: u64,
+    /// Mean/p99 over the most recent completions across all shards.
     pub mean_latency_ms: f64,
     pub p99_latency_ms: f64,
     /// Per-class queueing-delay / service-time percentiles (bounded
@@ -96,199 +117,89 @@ pub struct ServerStats {
     pub classes: Vec<ClassStats>,
     /// Device-time throughput (ops/s) over the whole stream.
     pub device_ops_per_sec: f64,
-    /// Total simulated device time (s).
+    /// Total simulated device time (s), summed over shards.
     pub device_time_s: f64,
-    /// Total wall time (s) spent in `run_batch` calls (streaming
-    /// submissions are not attributed here).
+    /// Total wall time (s) spent in (deprecated) `run_batch` calls
+    /// (streaming submissions are not attributed here).
     pub wall_time_s: f64,
-    /// Configured in-flight window.
+    /// Configured in-flight window (per shard).
     pub pipeline_depth: usize,
     /// Measured mean window occupancy (1.0 = synchronous).
     pub mean_in_flight: f64,
-    /// Measured peak window occupancy.
+    /// Measured peak window occupancy on any shard.
     pub max_in_flight: usize,
-    /// Memory-plane counters: packed-weight cache hit/miss/evict and
-    /// tile-buffer recycle/alloc (see [`crate::coordinator::pool`]).
+    /// Memory-plane counters summed over shards: packed-weight cache
+    /// hit/miss/evict and tile-buffer recycle/alloc
+    /// (see [`crate::coordinator::pool`]).
     pub mem: MemPlaneStats,
-    /// Packing-stage counters: matrices packed, parallel fan-outs and
-    /// wall time spent packing (`ServeConfig::pack_workers`).
+    /// Packing-stage counters summed over shards: matrices packed,
+    /// parallel fan-outs and scheduler time spent packing
+    /// (`ServeConfig::pack_workers`).
     pub pack: PackStats,
-    /// Fault-plane counters: injected faults (chaos mode), timeouts,
-    /// retries, checksum rejections, worker deaths/respawns/quarantines
-    /// (see [`crate::coordinator::fault`]). All zero on a fault-free
-    /// run with the fault plane disabled.
+    /// Fault-plane counters summed over shards: injected faults (chaos
+    /// mode), timeouts, retries, checksum rejections, worker
+    /// deaths/respawns/quarantines (see [`crate::coordinator::fault`]).
+    /// All zero on a fault-free run with the fault plane disabled.
     pub faults: FaultStats,
-    /// Per-worker health gauges, one entry per pool slot.
+    /// Per-worker health gauges, concatenated shard by shard (worker
+    /// indices are shard-local).
     pub worker_health: Vec<WorkerHealth>,
+    /// Per-shard statistics, indexed by shard.
+    pub shards: Vec<ShardStats>,
+    /// Routing decisions taken by the shard router (all zero with one
+    /// shard — the router short-circuits).
+    pub router: RouterStats,
 }
 
-/// The serving coordinator (client handle). Cheap to share across
+/// The serving coordinator (client handle): a facade over
+/// `ServeConfig::shards` independent engines. Cheap to share across
 /// threads by reference: `submit*` take `&self`.
 pub struct MatMulServer {
-    events: mpsc::Sender<Event>,
-    sched: Option<JoinHandle<()>>,
-    forwarder: Option<JoinHandle<()>>,
-    gate: Arc<Gate>,
-    shared: Arc<Shared>,
-    cycles: Arc<AtomicU64>,
-    invocations: Arc<AtomicU64>,
-    info_f32: PrecisionInfo,
-    info_int8: PrecisionInfo,
-    freq_hz: f64,
-    backend: &'static str,
-    workers: usize,
+    shards: Vec<Shard>,
+    router: RouterCounters,
     pipeline_depth: usize,
     policy: AdmissionPolicy,
     sched_policy: PolicyKind,
     queue_depth: usize,
-    /// Admission-token mint (cancellation addresses).
-    next_token: AtomicU64,
-    /// Weight-cache counters shared with the scheduler's cache.
-    cache_counters: Arc<WeightCacheCounters>,
-    /// Packing-stage counters shared with the scheduler.
-    pack_counters: Arc<PackCounters>,
-    /// Configured operand-packing fan-out width.
     pack_workers: usize,
-    /// Tile-buffer free-lists shared with the device pool + scheduler.
-    bufs: Arc<BufferPool>,
-    /// Fault-plane counters shared with the device pool + scheduler.
-    fault_counters: Arc<FaultCounters>,
-    /// Per-worker health gauges shared with the device pool.
-    health: Arc<PoolHealth>,
+    /// M-tile threshold for splitting a request across shards
+    /// (`ServeConfig::shard_split_tiles`; 0 = never split).
+    split_tiles: usize,
+    /// Weight-affinity routing on/off (`ServeConfig::shard_affinity`).
+    affinity: bool,
+    /// Wall time accumulated by the deprecated batch-replay wrappers.
+    wall_time_s: Mutex<f64>,
     /// Shutdown drain budget (`ServeConfig::drain_deadline_ms`;
     /// `None` = wait for every open request, the historical behavior).
     drain_deadline: Option<Duration>,
 }
 
 impl MatMulServer {
-    /// Start the server: spawns the device worker pool, the completion
-    /// forwarder and the scheduler thread.
+    /// Start the server: spawns `cfg.shards` engines (device worker
+    /// pool + completion forwarder + scheduler thread each). Prefer
+    /// constructing `cfg` through [`ServeConfig::builder`], which
+    /// validates the cross-field constraints this constructor clamps.
     pub fn start(cfg: &ServeConfig) -> Result<Self> {
-        let device = spawn_device_pool_with_faults(
-            cfg.artifacts_dir.clone().into(),
-            cfg.design.clone(),
-            cfg.backend,
-            cfg.workers,
-            cfg.fault_plan.clone(),
-        )?;
-        let (cycles, invocations) = device.counters();
-        let fault_counters = device.fault_counters();
-        let health = device.pool_health();
-        let info_f32 = device.info_for(Precision::Fp32)?;
-        let info_int8 = device.info_for(Precision::Int8)?;
-        let freq_hz = device.freq_hz;
-        let backend = device.backend;
-        let workers = device.workers;
-
-        let gate = Arc::new(Gate::new(
-            cfg.queue_depth,
-            cfg.class_queue_reserve.iter().map(|&r| r as usize).collect(),
-        ));
-        let shared = Arc::new(Shared {
-            stats: Mutex::new(StatsAgg::default()),
-            window: Mutex::new(WindowOcc::default()),
-            last_window: Mutex::new(WindowOcc::default()),
-            wall_time_s: Mutex::new(0.0),
-        });
-        let (events_tx, events_rx) = mpsc::channel::<Event>();
-        let (tile_tx, tile_rx) = mpsc::channel::<TileDone>();
-
-        // Tile completions → scheduler events (std mpsc has no select;
-        // a relay thread keeps the scheduler single-channel).
-        let fwd_events = events_tx.clone();
-        let forwarder = std::thread::Builder::new()
-            .name("maxeva-completions".into())
-            .spawn(move || {
-                while let Ok(done) = tile_rx.recv() {
-                    if fwd_events.send(Event::Done(done)).is_err() {
-                        break;
-                    }
-                }
-            })
-            .map_err(|e| anyhow!("spawning completion forwarder: {e}"))?;
-
-        // Per-precision tile costs charge the *measured* device period
-        // per tile (falling back to the geometric MAC ratio when the
-        // simulated periods are degenerate): this is what makes
-        // WeightedFair split device time, not tiles — even when
-        // MACs/cycle differ across precisions.
-        let costs = TileCosts::from_periods(
-            info_f32.period_cycles,
-            info_int8.period_cycles,
-            info_f32.native,
-            info_int8.native,
-        );
-        let params = PolicyParams::from_config(cfg, costs);
-        let cache_counters = Arc::new(WeightCacheCounters::default());
-        let weight_cache =
-            WeightCache::new(cfg.weight_cache_bytes, Arc::clone(&cache_counters));
-        let pack_counters = Arc::new(PackCounters::default());
-        let bufs = device.buffer_pool();
-        // Resolve the per-tile deadline once per precision: multiplier ×
-        // the precision's simulated tile period, floored so a deadline
-        // is never shorter than scheduling noise. Multiplier 0 keeps
-        // the historical wait-forever completion loop.
-        let tile_deadline = |period_cycles: f64| -> Option<Duration> {
-            if cfg.tile_timeout_mult <= 0.0 {
-                return None;
-            }
-            let secs = (cfg.tile_timeout_mult * period_cycles / freq_hz)
-                .max(cfg.tile_timeout_floor_ms as f64 / 1e3);
-            Some(Duration::from_secs_f64(secs))
-        };
-        let robust = Robustness {
-            max_tile_retries: cfg.max_tile_retries,
-            deadline_f32: tile_deadline(info_f32.period_cycles),
-            deadline_i32: tile_deadline(info_int8.period_cycles),
-            quarantine_after: cfg.quarantine_after,
-        };
+        let n = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for index in 0..n {
+            shards.push(Shard::start(cfg, index)?);
+        }
         let drain_deadline = match cfg.drain_deadline_ms {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         };
-        let sched = Scheduler::new(
-            device,
-            Tiler::new(info_f32.native),
-            Tiler::new(info_int8.native),
-            Arc::clone(&gate),
-            Arc::clone(&shared),
-            tile_tx,
-            cfg.pipeline_depth,
-            params,
-            weight_cache,
-            cfg.pack_workers,
-            Arc::clone(&pack_counters),
-            robust,
-        );
-        let sched = std::thread::Builder::new()
-            .name("maxeva-scheduler".into())
-            .spawn(move || sched.run(events_rx))
-            .map_err(|e| anyhow!("spawning scheduler: {e}"))?;
-
         Ok(MatMulServer {
-            events: events_tx,
-            sched: Some(sched),
-            forwarder: Some(forwarder),
-            gate,
-            shared,
-            cycles,
-            invocations,
-            info_f32,
-            info_int8,
-            freq_hz,
-            backend,
-            workers,
+            shards,
+            router: RouterCounters::default(),
             pipeline_depth: cfg.pipeline_depth.max(1),
             policy: cfg.admission,
             sched_policy: cfg.policy,
             queue_depth: cfg.queue_depth,
-            next_token: AtomicU64::new(0),
-            cache_counters,
-            pack_counters,
             pack_workers: cfg.pack_workers.max(1),
-            bufs,
-            fault_counters,
-            health,
+            split_tiles: cfg.shard_split_tiles,
+            affinity: cfg.shard_affinity,
+            wall_time_s: Mutex::new(0.0),
             drain_deadline,
         })
     }
@@ -296,15 +207,15 @@ impl MatMulServer {
     /// Per-precision device facts — the server-side dispatch point.
     fn info_for(&self, p: Precision) -> Result<PrecisionInfo> {
         match p {
-            Precision::Fp32 => Ok(self.info_f32),
-            Precision::Int8 => Ok(self.info_int8),
+            Precision::Fp32 => Ok(self.shards[0].info_f32),
+            Precision::Int8 => Ok(self.shards[0].info_int8),
             other => Err(anyhow!("serving supports fp32 and int8, not {other}")),
         }
     }
 
     /// Native fp32 design size (nm, nk, nn).
     pub fn native(&self) -> (u64, u64, u64) {
-        self.info_f32.native
+        self.shards[0].info_f32.native
     }
 
     /// Native design size for a serving precision.
@@ -314,7 +225,7 @@ impl MatMulServer {
 
     /// Steady-state fp32 iteration period of the design, in device cycles.
     pub fn period_cycles(&self) -> f64 {
-        self.info_f32.period_cycles
+        self.shards[0].info_f32.period_cycles
     }
 
     /// Iteration period for a serving precision, in device cycles.
@@ -324,17 +235,22 @@ impl MatMulServer {
 
     /// Device clock frequency, Hz.
     pub fn freq_hz(&self) -> f64 {
-        self.freq_hz
+        self.shards[0].freq_hz
     }
 
     /// Resolved tile-execution backend ("pjrt" or "reference").
     pub fn backend(&self) -> &'static str {
-        self.backend
+        self.shards[0].backend
     }
 
-    /// Device worker threads.
+    /// Device worker threads **per shard**.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.shards[0].workers
+    }
+
+    /// Serving shards (engines) behind this facade.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
     }
 
     /// Operand-packing fan-out width (`ServeConfig::pack_workers`;
@@ -343,12 +259,12 @@ impl MatMulServer {
         self.pack_workers
     }
 
-    /// Configured in-flight window.
+    /// Configured in-flight window (per shard).
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
     }
 
-    /// Admission queue bound (`0` = unbounded).
+    /// Admission queue bound per shard (`0` = unbounded).
     pub fn queue_depth(&self) -> usize {
         self.queue_depth
     }
@@ -358,25 +274,48 @@ impl MatMulServer {
         self.sched_policy
     }
 
-    /// Reconfigure the in-flight window (the A/B knob; `1` = synchronous).
+    /// Reconfigure the in-flight window on every shard (the A/B knob;
+    /// `1` = synchronous).
     pub fn set_pipeline_depth(&mut self, depth: usize) {
         self.pipeline_depth = depth.max(1);
-        let _ = self.events.send(Event::SetDepth(depth));
+        for s in &self.shards {
+            let _ = s.events.send(Event::SetDepth(depth));
+        }
     }
 
-    /// Swap the scheduling policy live (the policy A/B knob). Flights
-    /// already open migrate to the new policy deterministically.
+    /// Swap the scheduling policy live on every shard (the policy A/B
+    /// knob). Flights already open migrate to the new policy
+    /// deterministically.
     pub fn set_sched_policy(&mut self, kind: PolicyKind) {
         self.sched_policy = kind;
-        let _ = self.events.send(Event::SetPolicy(kind));
+        for s in &self.shards {
+            let _ = s.events.send(Event::SetPolicy(kind));
+        }
     }
 
-    /// `(mean, max)` window occupancy since the last `run_batch` began —
-    /// unlike [`ServerStats::mean_in_flight`] this is not diluted by
-    /// earlier batches run at other depths.
+    /// `(mean, max)` window occupancy since the last epoch reset, over
+    /// every shard — unlike [`ServerStats::mean_in_flight`] this is not
+    /// diluted by earlier batches run at other depths.
     pub fn last_batch_occupancy(&self) -> (f64, usize) {
-        let w = self.shared.last_window.lock().unwrap();
+        let mut w = WindowOcc::default();
+        for s in &self.shards {
+            w.absorb(&s.shared.last_window.lock().unwrap());
+        }
         (w.mean(), w.max())
+    }
+
+    /// Start a new occupancy-attribution epoch on every shard (used by
+    /// the batch-replay wrappers in [`crate::coordinator::compat`]).
+    pub(crate) fn reset_epoch(&self) {
+        for s in &self.shards {
+            let _ = s.events.send(Event::ResetEpoch);
+        }
+    }
+
+    /// Attribute wall time to `ServerStats::wall_time_s` (used by the
+    /// batch-replay wrappers).
+    pub(crate) fn add_wall_time(&self, secs: f64) {
+        *self.wall_time_s.lock().unwrap() += secs;
     }
 
     fn validate(req: &MatMulRequest, ops: &Operands) -> Result<()> {
@@ -416,35 +355,58 @@ impl MatMulServer {
         }
     }
 
-    fn submit_inner(
+    /// Route one validated request (single-shard servers short-circuit
+    /// inside [`plan_route`] without touching the router counters).
+    fn route(&self, req: &MatMulRequest) -> Route {
+        let nm = match req.precision {
+            Precision::Int8 => self.shards[0].info_int8.native.0,
+            _ => self.shards[0].info_f32.native.0,
+        } as usize;
+        plan_route(&self.shards, req, nm, self.split_tiles, self.affinity, &self.router)
+    }
+
+    /// Submit every band of an M-split request to its shard, wiring the
+    /// band replies into one [`SplitAcc`] that resolves `sink` exactly
+    /// once. Returns the cancel routes. If a band's admission fails,
+    /// the bands already admitted are cancelled and the error is
+    /// returned to the caller — the sink never fires.
+    fn submit_split(
         &self,
         req: MatMulRequest,
         ops: Operands,
         policy: AdmissionPolicy,
-        reply: Reply,
-    ) -> Result<u64> {
-        Self::validate(&req, &ops)?;
-        self.gate.admit(policy, req.class)?;
-        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
-        let adm = Box::new(Admitted {
-            req,
-            ops: Some(ops),
-            submitted: Instant::now(),
-            reply: Some(reply),
-            token,
-            gate: Arc::clone(&self.gate),
-        });
-        if self.events.send(Event::Admit(adm)).is_err() {
-            // The returned Admitted dropped: slot freed, reply errored.
-            return Err(anyhow!("server is shut down"));
+        bands: Vec<Band>,
+        sink: Reply,
+    ) -> Result<Vec<(mpsc::Sender<Event>, u64)>> {
+        let k = req.k as usize;
+        let acc = SplitAcc::new(req, bands.len(), sink);
+        let mut routes = Vec::with_capacity(bands.len());
+        for (j, band) in bands.iter().enumerate() {
+            let shard = &self.shards[band.shard];
+            let sub_ops = band_operands(&ops, band, k);
+            match shard.submit(band_request(&req, band), sub_ops, policy, band_reply(&acc, j)) {
+                Ok(token) => routes.push((shard.events.clone(), token)),
+                Err(e) => {
+                    // Roll back: cancel the admitted bands. Their
+                    // band replies land in the accumulator but the
+                    // unsubmitted bands keep `remaining` above zero,
+                    // so the sink never delivers — the caller owns
+                    // this error exclusively.
+                    for (events, token) in &routes {
+                        let _ = events.send(Event::Cancel(*token));
+                    }
+                    return Err(e);
+                }
+            }
         }
-        Ok(token)
+        Ok(routes)
     }
 
     /// Admit one request under the configured admission policy and get a
     /// completion handle. Blocks (policy `Block`) or fails with
-    /// [`QueueFull`] (policy `Reject`) when `queue_depth` requests are
-    /// already open. Dropping the handle unresolved **cancels** the
+    /// [`QueueFull`](crate::coordinator::admission::QueueFull) (policy
+    /// `Reject`) when `queue_depth` requests are already open on the
+    /// target shard. Dropping the handle unresolved **cancels** the
     /// request ([`RequestHandle::cancel`]).
     pub fn submit(&self, req: MatMulRequest, ops: Operands) -> Result<RequestHandle> {
         self.submit_with_policy(req, ops, self.policy)
@@ -457,14 +419,21 @@ impl MatMulServer {
         ops: Operands,
         policy: AdmissionPolicy,
     ) -> Result<RequestHandle> {
+        Self::validate(&req, &ops)?;
         let (tx, rx) = mpsc::channel();
-        let id = req.id;
-        let token = self.submit_inner(req, ops, policy, Reply::Handle(tx))?;
-        Ok(RequestHandle::new(id, token, rx, self.events.clone()))
+        let routes = match self.route(&req) {
+            Route::Whole(s) => {
+                let shard = &self.shards[s];
+                let token = shard.submit(req, ops, policy, Reply::Handle(tx))?;
+                vec![(shard.events.clone(), token)]
+            }
+            Route::Split(bands) => self.submit_split(req, ops, policy, bands, Reply::Handle(tx))?,
+        };
+        Ok(RequestHandle::new(req.id, rx, routes))
     }
 
     /// Admit one request and deliver its completion through `callback`
-    /// instead of a handle. The callback runs on the scheduler thread —
+    /// instead of a handle. The callback runs on a scheduler thread —
     /// keep it short (hand heavy post-processing to another thread).
     pub fn submit_with_callback(
         &self,
@@ -472,127 +441,74 @@ impl MatMulServer {
         ops: Operands,
         callback: impl FnOnce(MatMulRequest, Result<MatOutput>) + Send + 'static,
     ) -> Result<()> {
-        self.submit_inner(req, ops, self.policy, Reply::Callback(Box::new(callback)))?;
+        Self::validate(&req, &ops)?;
+        let reply = Reply::Callback(Box::new(callback));
+        match self.route(&req) {
+            Route::Whole(s) => {
+                self.shards[s].submit(req, ops, self.policy, reply)?;
+            }
+            Route::Split(bands) => {
+                self.submit_split(req, ops, self.policy, bands, reply)?;
+            }
+        }
         Ok(())
     }
 
-    /// Execute one fp32 request synchronously (convenience path).
-    pub fn execute(&mut self, req: MatMulRequest, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>> {
-        let mut out = self.run_batch(vec![(req, a, b)])?;
-        Ok(out.pop().unwrap())
-    }
-
-    /// Serve a closed fp32 batch through the streaming engine (submit
-    /// everything with blocking admission, wait in order). Returns the
-    /// outputs in request order. On error the batch's other open
-    /// requests are cancelled (see [`MatMulServer::run_batch_mixed`]).
-    pub fn run_batch(
-        &mut self,
-        batch: Vec<(MatMulRequest, Vec<f32>, Vec<f32>)>,
-    ) -> Result<Vec<Vec<f32>>> {
-        self.run_batch_mixed(
-            batch
-                .into_iter()
-                .map(|(req, a, b)| (req, Operands::F32 { a, b }))
-                .collect(),
-        )?
-        .into_iter()
-        .map(MatOutput::into_f32)
-        .collect()
-    }
-
-    /// Serve a closed mixed-precision batch through the streaming
-    /// engine. Returns the outputs in request order.
-    ///
-    /// On any error — a submission rejected mid-batch or a request
-    /// failing — the remaining handles are dropped, which (since PR 3)
-    /// **cancels** the batch's other open requests: a failed batch
-    /// reclaims its queue/window slots instead of running doomed work
-    /// to completion. Those requests land in `stats().cancelled`, not
-    /// `requests`.
-    pub fn run_batch_mixed(
-        &mut self,
-        batch: Vec<(MatMulRequest, Operands)>,
-    ) -> Result<Vec<MatOutput>> {
-        let wall0 = Instant::now();
-        let _ = self.events.send(Event::ResetEpoch);
-        let mut handles = Vec::with_capacity(batch.len());
-        for (req, ops) in batch {
-            handles.push(self.submit_with_policy(req, ops, AdmissionPolicy::Block)?);
-        }
-        let outs: Result<Vec<MatOutput>> = handles.into_iter().map(RequestHandle::wait).collect();
-        *self.shared.wall_time_s.lock().unwrap() += wall0.elapsed().as_secs_f64();
-        outs
-    }
-
-    /// Snapshot serving statistics.
+    /// Snapshot serving statistics: rolled-up totals plus the per-shard
+    /// breakdown.
     pub fn stats(&self) -> ServerStats {
-        let stats = self.shared.stats.lock().unwrap();
-        let window = self.shared.window.lock().unwrap();
-        let mem = MemPlaneStats {
-            weight_cache_hits: self.cache_counters.hits.load(Ordering::Relaxed),
-            weight_cache_misses: self.cache_counters.misses.load(Ordering::Relaxed),
-            weight_cache_evictions: self.cache_counters.evictions.load(Ordering::Relaxed),
-            weight_cache_bytes: self.cache_counters.bytes.load(Ordering::Relaxed),
-            weight_cache_entries: self.cache_counters.entries.load(Ordering::Relaxed),
-            tile_buffers_recycled: self.bufs.recycled(),
-            tile_buffers_allocated: self.bufs.allocated(),
-            tile_buffers_free: self.bufs.free(),
-        };
-        let pack = PackStats {
-            matrices_packed: self.pack_counters.matrices.load(Ordering::Relaxed),
-            parallel_packs: self.pack_counters.parallel.load(Ordering::Relaxed),
-            pack_time_s: self.pack_counters.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-        };
-        let fc = &self.fault_counters;
-        let faults = FaultStats {
-            injected_errors: fc.injected_errors.load(Ordering::Relaxed),
-            injected_panics: fc.injected_panics.load(Ordering::Relaxed),
-            injected_delays: fc.injected_delays.load(Ordering::Relaxed),
-            injected_hangs: fc.injected_hangs.load(Ordering::Relaxed),
-            injected_corruptions: fc.injected_corruptions.load(Ordering::Relaxed),
-            timeouts: fc.timeouts.load(Ordering::Relaxed),
-            retries: fc.retries.load(Ordering::Relaxed),
-            retries_exhausted: fc.retries_exhausted.load(Ordering::Relaxed),
-            checksum_failures: fc.checksum_failures.load(Ordering::Relaxed),
-            worker_deaths: fc.worker_deaths.load(Ordering::Relaxed),
-            respawns: fc.respawns.load(Ordering::Relaxed),
-            quarantined: fc.quarantined.load(Ordering::Relaxed),
-        };
+        let shards: Vec<ShardStats> = self.shards.iter().map(Shard::stats).collect();
+        let mut agg = StatsAgg::default();
+        let mut window = WindowOcc::default();
+        for s in &self.shards {
+            agg.absorb(&s.shared.stats.lock().unwrap());
+            window.absorb(&s.shared.window.lock().unwrap());
+        }
+        let mut mem = MemPlaneStats::default();
+        let mut pack = PackStats::default();
+        let mut faults = FaultStats::default();
+        for st in &shards {
+            mem.absorb(&st.mem);
+            pack.absorb(&st.pack);
+            faults.absorb(&st.faults);
+        }
         ServerStats {
-            requests: stats.count(),
-            requests_fp32: stats.count_by(Precision::Fp32),
-            requests_int8: stats.count_by(Precision::Int8),
-            cancelled: stats.cancelled(),
-            invocations: self.invocations.load(Ordering::Relaxed),
-            mean_latency_ms: stats.mean_latency_ms(),
-            p99_latency_ms: stats.p99_latency_ms(),
-            classes: stats.class_stats(),
-            device_ops_per_sec: stats.device_ops_per_sec(),
-            device_time_s: self.cycles.load(Ordering::Relaxed) as f64 / self.freq_hz,
-            wall_time_s: *self.shared.wall_time_s.lock().unwrap(),
+            requests: agg.count(),
+            requests_fp32: agg.count_by(Precision::Fp32),
+            requests_int8: agg.count_by(Precision::Int8),
+            cancelled: agg.cancelled(),
+            invocations: shards.iter().map(|s| s.invocations).sum(),
+            mean_latency_ms: agg.mean_latency_ms(),
+            p99_latency_ms: agg.p99_latency_ms(),
+            classes: agg.class_stats(),
+            device_ops_per_sec: agg.device_ops_per_sec(),
+            device_time_s: shards.iter().map(|s| s.device_time_s).sum(),
+            wall_time_s: *self.wall_time_s.lock().unwrap(),
             pipeline_depth: self.pipeline_depth,
             mean_in_flight: window.mean(),
             max_in_flight: window.max(),
             mem,
             pack,
             faults,
-            worker_health: self.health.snapshot(),
+            worker_health: shards.iter().flat_map(|s| s.worker_health.clone()).collect(),
+            shards,
+            router: self.router.snapshot(),
         }
     }
 
     fn stop(&mut self) {
-        let _ = self.events.send(Event::Drain(self.drain_deadline));
-        if let Some(j) = self.sched.take() {
-            let _ = j.join();
+        // Drain every shard concurrently, then join — total shutdown
+        // time is bounded by the slowest shard, not the sum.
+        for s in &self.shards {
+            s.drain(self.drain_deadline);
         }
-        if let Some(j) = self.forwarder.take() {
-            let _ = j.join();
+        for s in &mut self.shards {
+            s.join();
         }
     }
 
-    /// Graceful shutdown: drain every open request, then stop the
-    /// scheduler and device workers. With
+    /// Graceful shutdown: drain every open request on every shard, then
+    /// stop the schedulers and device workers. With
     /// `ServeConfig::drain_deadline_ms` set, the drain is bounded:
     /// requests still open past the budget fail with
     /// [`DrainDeadlineExpired`](crate::coordinator::fault::DrainDeadlineExpired)
@@ -602,19 +518,23 @@ impl MatMulServer {
     }
 
     /// [`MatMulServer::shutdown`] with an explicit drain budget,
-    /// overriding the configured `drain_deadline_ms`.
+    /// overriding the configured `drain_deadline_ms`. The budget
+    /// applies per shard, concurrently.
     pub fn shutdown_with_deadline(mut self, deadline: Duration) {
         self.drain_deadline = Some(deadline);
         self.stop();
     }
 
-    /// Chaos-test hook: make the scheduler thread panic, exercising the
-    /// fail-fast path that resolves every open flight with
+    /// Chaos-test hook: make every shard's scheduler thread panic,
+    /// exercising the fail-fast path that resolves every open flight
+    /// with
     /// [`SchedulerPanicked`](crate::coordinator::fault::SchedulerPanicked).
-    /// Kills the scheduler — the server serves nothing afterwards.
+    /// Kills the schedulers — the server serves nothing afterwards.
     #[doc(hidden)]
     pub fn inject_scheduler_panic(&self) {
-        let _ = self.events.send(Event::ChaosPanic);
+        for s in &self.shards {
+            let _ = s.events.send(Event::ChaosPanic);
+        }
     }
 }
 
@@ -629,4 +549,6 @@ impl Drop for MatMulServer {
 // equivalence tests in rust/tests/pipeline_equivalence.rs; streaming
 // admission, backpressure and mixed-precision tests in
 // rust/tests/streaming_admission.rs; fairness and cancellation tests in
-// rust/tests/policy_fairness.rs and rust/tests/cancellation.rs.
+// rust/tests/policy_fairness.rs and rust/tests/cancellation.rs; shard
+// routing, split bit-identity and affinity tests in
+// rust/tests/shard_routing.rs.

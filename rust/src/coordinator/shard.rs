@@ -1,0 +1,702 @@
+//! The sharded serving plane: N independent scheduler + device-pool +
+//! memory-plane engines (`Shard`, crate-internal) behind one
+//! [`MatMulServer`] facade, plus the front-end router that places
+//! requests on them.
+//!
+//! MaxEVA scales MatMul by replicating the kernel across the AIE array;
+//! the serving-side analogue is replicating the whole engine across
+//! shards (`ServeConfig::shards`, default 1 = the single-engine server,
+//! bit-for-bit). Each shard owns a private scheduler thread, device
+//! worker pool, admission gate, packed-weight cache and tile-buffer
+//! free-lists — shards share nothing, so they scale without contending
+//! on a lock.
+//!
+//! # Routing policy
+//!
+//! * **Whole requests with a `weight_id`** are placed by rendezvous
+//!   (highest-random-weight) hashing on the id when
+//!   `ServeConfig::shard_affinity` is on: every repeat of a weight
+//!   lands on the shard whose [`WeightCache`] already holds its packed
+//!   panels — the working-set-locality argument for packed B panels,
+//!   now applied across engines. Rendezvous hashing is stable under
+//!   resizing: growing from N to N+1 shards only moves keys *to* the
+//!   new shard, never between survivors.
+//! * **Anonymous requests** (no `weight_id`, or affinity disabled) go
+//!   to the least-loaded shard — fewest open requests, ties to the
+//!   lowest index.
+//! * **Large GEMMs** — at least `ServeConfig::shard_split_tiles` M-tile
+//!   rows (`⌈m/nm⌉`) — split along M into one contiguous row band per
+//!   shard and merge in a reduction stage on completion. Bands are cut
+//!   on native tile boundaries, so no tile ever straddles two shards.
+//!
+//! # Bit-identity under split
+//!
+//! Splitting along M cannot change a single output bit, for either
+//! precision. Each output element `C[i][j]` is produced by exactly one
+//! row band; within that band the operand tiles, the k-tile walk and
+//! the ascending-`ik` reduction order (f32 ordered sums, i32 wrapping
+//! adds) are identical to what the unsplit request would have executed
+//! for those rows, because bands are cut on `nm` boundaries and B is
+//! replicated whole. The merge is pure row-band concatenation in band
+//! order — no arithmetic — so `shards = N` outputs are bit-identical
+//! to `shards = 1` (see `rust/tests/shard_routing.rs`).
+//!
+//! The cost of a split is one copy of each A row band (the bands
+//! partition A) plus one clone of B per band: splitting pays B
+//! replication for M-parallelism, which is why small requests route
+//! whole.
+//!
+//! [`MatMulServer`]: crate::coordinator::server::MatMulServer
+//! [`WeightCache`]: crate::coordinator::pool::WeightCache
+
+use crate::arch::precision::Precision;
+use crate::config::schema::{AdmissionPolicy, ServeConfig};
+use crate::coordinator::admission::{Admitted, Gate};
+use crate::coordinator::device::{
+    spawn_device_pool_with_faults, PoolHealth, PrecisionInfo, TileDone,
+};
+use crate::coordinator::fault::FaultCounters;
+use crate::coordinator::handle::Reply;
+use crate::coordinator::policy::{PolicyParams, TileCosts};
+use crate::coordinator::pool::{BufferPool, PackCounters, WeightCache, WeightCacheCounters};
+use crate::coordinator::scheduler::{Event, Robustness, Scheduler, Shared};
+use crate::coordinator::stats::{
+    FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, StatsAgg, WindowOcc,
+};
+use crate::coordinator::tiler::Tiler;
+use crate::workloads::{MatMulRequest, MatOutput, Operands};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One self-contained serving engine: a scheduler thread, a device
+/// worker pool, an admission gate and a private memory plane. The
+/// facade owns a `Vec<Shard>` and the router decides which shard (or
+/// shards) a request reaches.
+pub(crate) struct Shard {
+    pub(crate) index: usize,
+    pub(crate) events: mpsc::Sender<Event>,
+    sched: Option<JoinHandle<()>>,
+    forwarder: Option<JoinHandle<()>>,
+    pub(crate) gate: Arc<Gate>,
+    pub(crate) shared: Arc<Shared>,
+    pub(crate) cycles: Arc<AtomicU64>,
+    pub(crate) invocations: Arc<AtomicU64>,
+    pub(crate) info_f32: PrecisionInfo,
+    pub(crate) info_int8: PrecisionInfo,
+    pub(crate) freq_hz: f64,
+    pub(crate) backend: &'static str,
+    pub(crate) workers: usize,
+    cache_counters: Arc<WeightCacheCounters>,
+    pack_counters: Arc<PackCounters>,
+    bufs: Arc<BufferPool>,
+    fault_counters: Arc<FaultCounters>,
+    health: Arc<PoolHealth>,
+    /// Admission-token mint (cancellation addresses are shard-local:
+    /// a cancel route pairs this shard's event channel with a token).
+    next_token: AtomicU64,
+}
+
+impl Shard {
+    /// Spawn one engine: device pool, completion forwarder and
+    /// scheduler thread, all tagged with the shard index. Every
+    /// per-engine `ServeConfig` knob (workers, queue depth, cache
+    /// budget, fault plan, …) applies to each shard independently.
+    pub(crate) fn start(cfg: &ServeConfig, index: usize) -> Result<Shard> {
+        let device = spawn_device_pool_with_faults(
+            cfg.artifacts_dir.clone().into(),
+            cfg.design.clone(),
+            cfg.backend,
+            cfg.workers,
+            cfg.fault_plan.clone(),
+        )?;
+        let (cycles, invocations) = device.counters();
+        let fault_counters = device.fault_counters();
+        let health = device.pool_health();
+        let info_f32 = device.info_for(Precision::Fp32)?;
+        let info_int8 = device.info_for(Precision::Int8)?;
+        let freq_hz = device.freq_hz;
+        let backend = device.backend;
+        let workers = device.workers;
+
+        let gate = Arc::new(Gate::new(
+            cfg.queue_depth,
+            cfg.class_queue_reserve.iter().map(|&r| r as usize).collect(),
+        ));
+        let shared = Arc::new(Shared {
+            stats: Mutex::new(StatsAgg::default()),
+            window: Mutex::new(WindowOcc::default()),
+            last_window: Mutex::new(WindowOcc::default()),
+        });
+        let (events_tx, events_rx) = mpsc::channel::<Event>();
+        let (tile_tx, tile_rx) = mpsc::channel::<TileDone>();
+
+        // Tile completions → scheduler events (std mpsc has no select;
+        // a relay thread keeps the scheduler single-channel).
+        let fwd_events = events_tx.clone();
+        let forwarder = std::thread::Builder::new()
+            .name(format!("maxeva-compl-{index}"))
+            .spawn(move || {
+                while let Ok(done) = tile_rx.recv() {
+                    if fwd_events.send(Event::Done(done)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning completion forwarder {index}: {e}"))?;
+
+        // Per-precision tile costs charge the *measured* device period
+        // per tile (falling back to the geometric MAC ratio when the
+        // simulated periods are degenerate): this is what makes
+        // WeightedFair split device time, not tiles — even when
+        // MACs/cycle differ across precisions.
+        let costs = TileCosts::from_periods(
+            info_f32.period_cycles,
+            info_int8.period_cycles,
+            info_f32.native,
+            info_int8.native,
+        );
+        let params = PolicyParams::from_config(cfg, costs);
+        let cache_counters = Arc::new(WeightCacheCounters::default());
+        let weight_cache =
+            WeightCache::new(cfg.weight_cache_bytes, Arc::clone(&cache_counters));
+        let pack_counters = Arc::new(PackCounters::default());
+        let bufs = device.buffer_pool();
+        // Resolve the per-tile deadline once per precision: multiplier ×
+        // the precision's simulated tile period, floored so a deadline
+        // is never shorter than scheduling noise. Multiplier 0 keeps
+        // the historical wait-forever completion loop.
+        let tile_deadline = |period_cycles: f64| -> Option<Duration> {
+            if cfg.tile_timeout_mult <= 0.0 {
+                return None;
+            }
+            let secs = (cfg.tile_timeout_mult * period_cycles / freq_hz)
+                .max(cfg.tile_timeout_floor_ms as f64 / 1e3);
+            Some(Duration::from_secs_f64(secs))
+        };
+        let robust = Robustness {
+            max_tile_retries: cfg.max_tile_retries,
+            deadline_f32: tile_deadline(info_f32.period_cycles),
+            deadline_i32: tile_deadline(info_int8.period_cycles),
+            quarantine_after: cfg.quarantine_after,
+        };
+        let sched = Scheduler::new(
+            device,
+            Tiler::new(info_f32.native),
+            Tiler::new(info_int8.native),
+            Arc::clone(&gate),
+            Arc::clone(&shared),
+            tile_tx,
+            cfg.pipeline_depth,
+            params,
+            weight_cache,
+            cfg.pack_workers,
+            Arc::clone(&pack_counters),
+            robust,
+        );
+        let sched = std::thread::Builder::new()
+            .name(format!("maxeva-sched-{index}"))
+            .spawn(move || sched.run(events_rx))
+            .map_err(|e| anyhow!("spawning scheduler {index}: {e}"))?;
+
+        Ok(Shard {
+            index,
+            events: events_tx,
+            sched: Some(sched),
+            forwarder: Some(forwarder),
+            gate,
+            shared,
+            cycles,
+            invocations,
+            info_f32,
+            info_int8,
+            freq_hz,
+            backend,
+            workers,
+            cache_counters,
+            pack_counters,
+            bufs,
+            fault_counters,
+            health,
+            next_token: AtomicU64::new(0),
+        })
+    }
+
+    /// Admit one (already validated) request into this shard's gate and
+    /// hand it to its scheduler. Returns the cancellation token; the
+    /// caller pairs it with this shard's event channel to form a cancel
+    /// route.
+    pub(crate) fn submit(
+        &self,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+        reply: Reply,
+    ) -> Result<u64> {
+        self.gate.admit(policy, req.class)?;
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let adm = Box::new(Admitted {
+            req,
+            ops: Some(ops),
+            submitted: Instant::now(),
+            reply: Some(reply),
+            token,
+            gate: Arc::clone(&self.gate),
+        });
+        if self.events.send(Event::Admit(adm)).is_err() {
+            // The returned Admitted dropped: slot freed, reply errored.
+            return Err(anyhow!("server is shut down"));
+        }
+        Ok(token)
+    }
+
+    /// Open requests on this shard (the router's least-loaded gauge).
+    pub(crate) fn in_flight(&self) -> usize {
+        self.gate.in_flight()
+    }
+
+    /// Ask the scheduler to stop admitting, serve what is open and exit.
+    pub(crate) fn drain(&self, deadline: Option<Duration>) {
+        let _ = self.events.send(Event::Drain(deadline));
+    }
+
+    /// Join the engine threads (after [`Shard::drain`]).
+    pub(crate) fn join(&mut self) {
+        if let Some(j) = self.sched.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.forwarder.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Snapshot this shard's serving statistics.
+    pub(crate) fn stats(&self) -> ShardStats {
+        let stats = self.shared.stats.lock().unwrap();
+        let window = self.shared.window.lock().unwrap();
+        let mem = MemPlaneStats {
+            weight_cache_hits: self.cache_counters.hits.load(Ordering::Relaxed),
+            weight_cache_misses: self.cache_counters.misses.load(Ordering::Relaxed),
+            weight_cache_evictions: self.cache_counters.evictions.load(Ordering::Relaxed),
+            weight_cache_bytes: self.cache_counters.bytes.load(Ordering::Relaxed),
+            weight_cache_entries: self.cache_counters.entries.load(Ordering::Relaxed),
+            tile_buffers_recycled: self.bufs.recycled(),
+            tile_buffers_allocated: self.bufs.allocated(),
+            tile_buffers_free: self.bufs.free(),
+        };
+        let pack = PackStats {
+            matrices_packed: self.pack_counters.matrices.load(Ordering::Relaxed),
+            parallel_packs: self.pack_counters.parallel.load(Ordering::Relaxed),
+            pack_time_s: self.pack_counters.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        };
+        let fc = &self.fault_counters;
+        let faults = FaultStats {
+            injected_errors: fc.injected_errors.load(Ordering::Relaxed),
+            injected_panics: fc.injected_panics.load(Ordering::Relaxed),
+            injected_delays: fc.injected_delays.load(Ordering::Relaxed),
+            injected_hangs: fc.injected_hangs.load(Ordering::Relaxed),
+            injected_corruptions: fc.injected_corruptions.load(Ordering::Relaxed),
+            timeouts: fc.timeouts.load(Ordering::Relaxed),
+            retries: fc.retries.load(Ordering::Relaxed),
+            retries_exhausted: fc.retries_exhausted.load(Ordering::Relaxed),
+            checksum_failures: fc.checksum_failures.load(Ordering::Relaxed),
+            worker_deaths: fc.worker_deaths.load(Ordering::Relaxed),
+            respawns: fc.respawns.load(Ordering::Relaxed),
+            quarantined: fc.quarantined.load(Ordering::Relaxed),
+        };
+        ShardStats {
+            shard: self.index,
+            requests: stats.count(),
+            requests_fp32: stats.count_by(Precision::Fp32),
+            requests_int8: stats.count_by(Precision::Int8),
+            cancelled: stats.cancelled(),
+            invocations: self.invocations.load(Ordering::Relaxed),
+            mean_latency_ms: stats.mean_latency_ms(),
+            p99_latency_ms: stats.p99_latency_ms(),
+            classes: stats.class_stats(),
+            device_ops_per_sec: stats.device_ops_per_sec(),
+            device_time_s: self.cycles.load(Ordering::Relaxed) as f64 / self.freq_hz,
+            mean_in_flight: window.mean(),
+            max_in_flight: window.max(),
+            open_requests: self.gate.in_flight(),
+            mem,
+            pack,
+            faults,
+            worker_health: self.health.snapshot(),
+        }
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        // Safety net for a facade start() that fails after some shards
+        // spawned; the normal path drains with the configured deadline
+        // through MatMulServer::stop and leaves nothing to join here.
+        if self.sched.is_some() || self.forwarder.is_some() {
+            self.drain(None);
+            self.join();
+        }
+    }
+}
+
+/// Lifetime routing-decision counters kept by the facade (snapshot in
+/// `ServerStats::router`).
+#[derive(Default)]
+pub(crate) struct RouterCounters {
+    pub(crate) routed_affinity: AtomicU64,
+    pub(crate) routed_least_loaded: AtomicU64,
+    pub(crate) split_requests: AtomicU64,
+    pub(crate) split_parts: AtomicU64,
+}
+
+impl RouterCounters {
+    pub(crate) fn snapshot(&self) -> RouterStats {
+        RouterStats {
+            routed_affinity: self.routed_affinity.load(Ordering::Relaxed),
+            routed_least_loaded: self.routed_least_loaded.load(Ordering::Relaxed),
+            split_requests: self.split_requests.load(Ordering::Relaxed),
+            split_parts: self.split_parts.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A routing decision for one request.
+pub(crate) enum Route {
+    /// Serve the request unsplit on one shard.
+    Whole(usize),
+    /// Split along M into one contiguous row band per entry.
+    Split(Vec<Band>),
+}
+
+/// One row band of an M-split request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Band {
+    /// Shard the band is placed on.
+    pub(crate) shard: usize,
+    /// First output row of the band.
+    pub(crate) row0: usize,
+    /// Rows in the band (> 0).
+    pub(crate) rows: usize,
+}
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mixer, so rendezvous
+/// scores are uniform even for small consecutive weight ids.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Rendezvous (highest-random-weight) shard of a weight id: the shard
+/// whose mixed `(weight_id, shard)` score is highest. Deterministic,
+/// uniform, and stable under resizing (growing the shard set only moves
+/// keys to the new shard).
+pub(crate) fn rendezvous_shard(weight_id: u64, shards: usize) -> usize {
+    (0..shards)
+        .max_by_key(|&s| (mix64(weight_id ^ mix64(s as u64 + 1)), std::cmp::Reverse(s)))
+        .unwrap_or(0)
+}
+
+/// Cut `gm` tile rows into at most `shards` contiguous bands of
+/// `nm`-row tiles (band `j` → shard `j`), balanced to within one tile.
+/// The final band absorbs the fringe rows (`m % nm`), exactly like the
+/// unsplit tiler.
+pub(crate) fn plan_bands(m: usize, nm: usize, shards: usize) -> Vec<Band> {
+    let gm = m.div_ceil(nm);
+    let bands = shards.min(gm).max(1);
+    let base = gm / bands;
+    let rem = gm % bands;
+    let mut out = Vec::with_capacity(bands);
+    let mut tile0 = 0usize;
+    for shard in 0..bands {
+        let tiles = base + usize::from(shard < rem);
+        let row0 = tile0 * nm;
+        let row1 = ((tile0 + tiles) * nm).min(m);
+        out.push(Band { shard, row0, rows: row1 - row0 });
+        tile0 += tiles;
+    }
+    out
+}
+
+/// Decide where one validated request runs. `nm` is the native M-tile
+/// height of the request's precision.
+pub(crate) fn plan_route(
+    shards: &[Shard],
+    req: &MatMulRequest,
+    nm: usize,
+    split_tiles: usize,
+    affinity: bool,
+    counters: &RouterCounters,
+) -> Route {
+    let n = shards.len();
+    if n <= 1 {
+        return Route::Whole(0);
+    }
+    let m = req.m as usize;
+    let gm = m.div_ceil(nm);
+    if split_tiles > 0 && gm >= split_tiles && gm >= 2 {
+        let bands = plan_bands(m, nm, n);
+        if bands.len() > 1 {
+            counters.split_requests.fetch_add(1, Ordering::Relaxed);
+            counters.split_parts.fetch_add(bands.len() as u64, Ordering::Relaxed);
+            return Route::Split(bands);
+        }
+    }
+    if affinity {
+        if let Some(id) = req.weight_id {
+            counters.routed_affinity.fetch_add(1, Ordering::Relaxed);
+            return Route::Whole(rendezvous_shard(id, n));
+        }
+    }
+    counters.routed_least_loaded.fetch_add(1, Ordering::Relaxed);
+    let shard = shards
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, s)| (s.in_flight(), *i))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Route::Whole(shard)
+}
+
+/// The sub-request one band submits: same id/class/precision/weight
+/// identity, `m` shrunk to the band's rows.
+pub(crate) fn band_request(req: &MatMulRequest, band: &Band) -> MatMulRequest {
+    let mut sub = *req;
+    sub.m = band.rows as u64;
+    sub
+}
+
+/// The band's operands: its slice of A's rows (row-major, so a band is
+/// one contiguous range) and a full clone of B.
+pub(crate) fn band_operands(ops: &Operands, band: &Band, k: usize) -> Operands {
+    let (r0, r1) = (band.row0 * k, (band.row0 + band.rows) * k);
+    match ops {
+        Operands::F32 { a, b } => Operands::F32 { a: a[r0..r1].to_vec(), b: b.clone() },
+        Operands::I32 { a, b } => Operands::I32 { a: a[r0..r1].to_vec(), b: b.clone() },
+    }
+}
+
+/// The reduction stage of an M-split request: collects every band's
+/// result (in any completion order) and resolves the caller's reply
+/// exactly once — the concatenation of the bands in band order on
+/// success, or the first failing band's error (in band order, so the
+/// reported error is deterministic regardless of timing).
+pub(crate) struct SplitAcc {
+    req: MatMulRequest,
+    slots: Vec<Option<Result<MatOutput>>>,
+    remaining: usize,
+    sink: Option<Reply>,
+}
+
+impl SplitAcc {
+    pub(crate) fn new(req: MatMulRequest, bands: usize, sink: Reply) -> Arc<Mutex<SplitAcc>> {
+        Arc::new(Mutex::new(SplitAcc {
+            req,
+            slots: (0..bands).map(|_| None).collect(),
+            remaining: bands,
+            sink: Some(sink),
+        }))
+    }
+
+    fn deliver(&mut self) {
+        let Some(sink) = self.sink.take() else { return };
+        let mut outs = Vec::with_capacity(self.slots.len());
+        for slot in &mut self.slots {
+            match slot.take() {
+                Some(Ok(out)) => outs.push(out),
+                Some(Err(e)) => {
+                    sink.send(self.req, Err(e));
+                    return;
+                }
+                // Unreachable: deliver only runs once every band resolved.
+                None => {
+                    sink.send(self.req, Err(anyhow!("split band lost its result")));
+                    return;
+                }
+            }
+        }
+        let total = (self.req.m * self.req.n) as usize;
+        let merged = (|| {
+            Ok(match self.req.precision {
+                Precision::Int8 => {
+                    let mut c = Vec::with_capacity(total);
+                    for out in outs {
+                        c.extend(out.into_i32()?);
+                    }
+                    MatOutput::I32(c)
+                }
+                _ => {
+                    let mut c = Vec::with_capacity(total);
+                    for out in outs {
+                        c.extend(out.into_f32()?);
+                    }
+                    MatOutput::F32(c)
+                }
+            })
+        })();
+        sink.send(self.req, merged);
+    }
+}
+
+/// The per-band reply: stores band `j`'s result in the accumulator and
+/// delivers the merged reply when the last band lands. Runs on the
+/// finishing shard's scheduler thread — the merge is a concatenation,
+/// cheap enough to live there.
+pub(crate) fn band_reply(acc: &Arc<Mutex<SplitAcc>>, j: usize) -> Reply {
+    let acc = Arc::clone(acc);
+    Reply::Callback(Box::new(move |_sub, out| {
+        let mut g = acc.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if g.slots[j].is_none() {
+            g.slots[j] = Some(out);
+            g.remaining -= 1;
+            if g.remaining == 0 {
+                g.deliver();
+            }
+        }
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendezvous_is_deterministic_and_spreads() {
+        let shards = 4;
+        let mut counts = vec![0usize; shards];
+        for id in 0..4096u64 {
+            let s = rendezvous_shard(id, shards);
+            assert_eq!(s, rendezvous_shard(id, shards), "same id, same shard");
+            counts[s] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            // Uniform would be 1024 per shard; allow wide slack — the
+            // point is no shard is starved or hot by construction.
+            assert!(c > 512 && c < 1536, "shard {s} got {c} of 4096");
+        }
+    }
+
+    #[test]
+    fn rendezvous_resize_only_moves_keys_to_the_new_shard() {
+        // The HRW property the affinity story relies on: growing the
+        // shard set reassigns a key only if the *new* shard wins it —
+        // survivors never trade keys among themselves, so warm caches
+        // stay warm through a resize.
+        for id in 0..2048u64 {
+            let before = rendezvous_shard(id, 4);
+            let after = rendezvous_shard(id, 5);
+            assert!(after == before || after == 4, "id {id}: {before} → {after}");
+        }
+    }
+
+    #[test]
+    fn bands_partition_rows_on_tile_boundaries() {
+        for (m, nm, shards) in
+            [(40, 8, 4), (37, 8, 4), (16, 8, 4), (33, 8, 2), (8, 8, 4), (129, 16, 3)]
+        {
+            let bands = plan_bands(m, nm, shards);
+            let gm = m.div_ceil(nm);
+            assert_eq!(bands.len(), shards.min(gm));
+            let mut next_row = 0usize;
+            for (j, b) in bands.iter().enumerate() {
+                assert_eq!(b.shard, j);
+                assert_eq!(b.row0, next_row, "bands are contiguous");
+                assert!(b.rows > 0);
+                assert_eq!(b.row0 % nm, 0, "bands start on tile boundaries");
+                if j + 1 < bands.len() {
+                    assert_eq!(b.rows % nm, 0, "only the last band holds fringe rows");
+                }
+                next_row += b.rows;
+            }
+            assert_eq!(next_row, m, "bands partition every output row");
+            // Balanced to within one tile.
+            let tiles: Vec<usize> = bands.iter().map(|b| b.rows.div_ceil(nm)).collect();
+            let (min, max) = (tiles.iter().min().unwrap(), tiles.iter().max().unwrap());
+            assert!(max - min <= 1, "m={m} nm={nm}: unbalanced tiles {tiles:?}");
+        }
+    }
+
+    #[test]
+    fn band_operands_slice_a_rows_and_clone_b() {
+        let (m, k) = (6, 3);
+        let a: Vec<f32> = (0..(m * k) as i32).map(|v| v as f32).collect();
+        let b = vec![1.0f32; 3 * 2];
+        let ops = Operands::F32 { a: a.clone(), b: b.clone() };
+        let band = Band { shard: 1, row0: 2, rows: 3 };
+        match band_operands(&ops, &band, k) {
+            Operands::F32 { a: sub_a, b: sub_b } => {
+                assert_eq!(sub_a, a[2 * k..5 * k].to_vec());
+                assert_eq!(sub_b, b);
+            }
+            _ => panic!("precision changed across the split"),
+        }
+    }
+
+    #[test]
+    fn split_acc_merges_in_band_order_regardless_of_completion_order() {
+        let req = MatMulRequest::f32(9, 4, 3, 2).with_weight_id(7);
+        let got = Arc::new(Mutex::new(None));
+        let sink = {
+            let got = Arc::clone(&got);
+            Reply::Callback(Box::new(move |_req, out| {
+                *got.lock().unwrap() = Some(out);
+            }))
+        };
+        let acc = SplitAcc::new(req, 3, sink);
+        // Bands of 1/2/1 rows of the 4×2 output (disjoint row blocks).
+        let blocks: Vec<Vec<f32>> =
+            vec![vec![0.0, 1.0], vec![2.0, 3.0, 4.0, 5.0], vec![6.0, 7.0]];
+        // Deliver out of order: 2, 0, 1.
+        for j in [2usize, 0, 1] {
+            assert!(got.lock().unwrap().is_none(), "must not deliver early");
+            band_reply(&acc, j).send(req, Ok(MatOutput::F32(blocks[j].clone())));
+        }
+        let out = got.lock().unwrap().take().expect("delivered once all bands landed");
+        assert_eq!(
+            out.unwrap().into_f32().unwrap(),
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            "concatenated in band order, not completion order"
+        );
+    }
+
+    #[test]
+    fn split_acc_reports_first_failing_band_deterministically() {
+        let req = MatMulRequest::f32(10, 4, 2, 1);
+        let got = Arc::new(Mutex::new(None));
+        let sink = {
+            let got = Arc::clone(&got);
+            Reply::Callback(Box::new(move |_req, out| {
+                *got.lock().unwrap() = Some(out);
+            }))
+        };
+        let acc = SplitAcc::new(req, 3, sink);
+        // Bands 2 and 1 fail, band 0 succeeds; completion order 2, 1, 0.
+        band_reply(&acc, 2).send(req, Err(anyhow!("late failure")));
+        band_reply(&acc, 1).send(req, Err(anyhow!("early failure")));
+        band_reply(&acc, 0).send(req, Ok(MatOutput::F32(vec![0.0])));
+        let out = got.lock().unwrap().take().expect("resolved");
+        // Band order decides: band 1's error wins even though band 2
+        // failed first in time.
+        assert_eq!(out.unwrap_err().to_string(), "early failure");
+    }
+
+    #[test]
+    fn split_acc_merges_int8_accumulators() {
+        let req = MatMulRequest::int8(9, 4, 2, 1);
+        let got = Arc::new(Mutex::new(None));
+        let sink = {
+            let got = Arc::clone(&got);
+            Reply::Callback(Box::new(move |_req, out| {
+                *got.lock().unwrap() = Some(out);
+            }))
+        };
+        let acc = SplitAcc::new(req, 2, sink);
+        band_reply(&acc, 1).send(req, Ok(MatOutput::I32(vec![3, 4])));
+        band_reply(&acc, 0).send(req, Ok(MatOutput::I32(vec![1, 2])));
+        let out = got.lock().unwrap().take().expect("resolved");
+        assert_eq!(out.unwrap().into_i32().unwrap(), vec![1, 2, 3, 4]);
+    }
+}

@@ -25,6 +25,15 @@ impl WindowOcc {
         self.max = self.max.max(in_flight);
     }
 
+    /// Fold another occupancy aggregate into this one (per-shard →
+    /// server-wide roll-up; absorbing a single aggregate into an empty
+    /// one is an exact copy).
+    pub fn absorb(&mut self, other: &WindowOcc) {
+        self.samples += other.samples;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
     pub fn samples(&self) -> u64 {
         self.samples
     }
@@ -67,6 +76,22 @@ pub struct MemPlaneStats {
     pub tile_buffers_free: usize,
 }
 
+impl MemPlaneStats {
+    /// Fold another shard's memory-plane snapshot into this roll-up
+    /// (lifetime counters and gauges both sum: total resident bytes /
+    /// entries / free buffers across shards).
+    pub fn absorb(&mut self, other: &MemPlaneStats) {
+        self.weight_cache_hits += other.weight_cache_hits;
+        self.weight_cache_misses += other.weight_cache_misses;
+        self.weight_cache_evictions += other.weight_cache_evictions;
+        self.weight_cache_bytes += other.weight_cache_bytes;
+        self.weight_cache_entries += other.weight_cache_entries;
+        self.tile_buffers_recycled += other.tile_buffers_recycled;
+        self.tile_buffers_allocated += other.tile_buffers_allocated;
+        self.tile_buffers_free += other.tile_buffers_free;
+    }
+}
+
 /// Packing-stage snapshot: how much host time the scheduler spent
 /// extracting operand matrices into tile-major arenas, and how often
 /// the extraction fanned out across pack workers
@@ -86,6 +111,18 @@ pub struct PackStats {
     pub parallel_packs: u64,
     /// Wall time spent in arena builds on the scheduler thread, seconds.
     pub pack_time_s: f64,
+}
+
+impl PackStats {
+    /// Fold another shard's packing snapshot into this roll-up. Pack
+    /// times sum across shards (each shard has its own scheduler
+    /// thread, so the roll-up is total scheduler-seconds spent packing,
+    /// not wall time).
+    pub fn absorb(&mut self, other: &PackStats) {
+        self.matrices_packed += other.matrices_packed;
+        self.parallel_packs += other.parallel_packs;
+        self.pack_time_s += other.pack_time_s;
+    }
 }
 
 /// Fault-plane snapshot: injection counters (bumped by the device
@@ -119,6 +156,23 @@ pub struct FaultStats {
 }
 
 impl FaultStats {
+    /// Fold another shard's fault-plane snapshot into this roll-up
+    /// (every field is a lifetime counter, so they all sum).
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.injected_errors += other.injected_errors;
+        self.injected_panics += other.injected_panics;
+        self.injected_delays += other.injected_delays;
+        self.injected_hangs += other.injected_hangs;
+        self.injected_corruptions += other.injected_corruptions;
+        self.timeouts += other.timeouts;
+        self.retries += other.retries;
+        self.retries_exhausted += other.retries_exhausted;
+        self.checksum_failures += other.checksum_failures;
+        self.worker_deaths += other.worker_deaths;
+        self.respawns += other.respawns;
+        self.quarantined += other.quarantined;
+    }
+
     /// Total injected faults across kinds.
     pub fn injected(&self) -> u64 {
         self.injected_errors
@@ -206,6 +260,20 @@ impl ClassAgg {
             window.push_back(v);
         }
     }
+
+    fn absorb(&mut self, other: &ClassAgg) {
+        self.count += other.count;
+        for (window, src) in [
+            (&mut self.queue_ms, &other.queue_ms),
+            (&mut self.service_ms, &other.service_ms),
+            (&mut self.latency_ms, &other.latency_ms),
+        ] {
+            window.extend(src.iter().copied());
+            while window.len() > CLASS_WINDOW {
+                window.pop_front();
+            }
+        }
+    }
 }
 
 /// Percentile snapshot of one priority class (from the bounded
@@ -266,6 +334,30 @@ impl StatsAgg {
     /// requests never enter the latency windows).
     pub fn record_cancelled(&mut self) {
         self.cancelled += 1;
+    }
+
+    /// Fold another aggregate into this one — the per-shard →
+    /// server-wide roll-up. Lifetime totals sum exactly; the bounded
+    /// latency/class windows concatenate (self's samples first, then
+    /// `other`'s) and re-trim to their caps, which preserves mean/
+    /// percentile semantics because those are order-insensitive.
+    /// Absorbing one aggregate into an empty one reproduces it exactly,
+    /// so a single-shard server reports identical statistics through
+    /// the roll-up path.
+    pub fn absorb(&mut self, other: &StatsAgg) {
+        self.count += other.count;
+        self.count_fp32 += other.count_fp32;
+        self.count_int8 += other.count_int8;
+        self.cancelled += other.cancelled;
+        self.total_macs += other.total_macs;
+        self.total_device_s += other.total_device_s;
+        self.recent_latency_ms.extend(other.recent_latency_ms.iter().copied());
+        while self.recent_latency_ms.len() > LATENCY_WINDOW {
+            self.recent_latency_ms.pop_front();
+        }
+        for (&class, agg) in &other.classes {
+            self.classes.entry(class).or_default().absorb(agg);
+        }
     }
 
     pub fn count(&self) -> usize {
@@ -338,6 +430,55 @@ impl StatsAgg {
         }
         2.0 * self.total_macs() as f64 / t
     }
+}
+
+/// One shard's serving statistics, as surfaced in
+/// `ServerStats::shards`. Field meanings match their server-wide
+/// counterparts in [`crate::coordinator::server::ServerStats`], scoped
+/// to the one scheduler + device pool + memory plane this shard owns.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Shard index (position in `ServerStats::shards`).
+    pub shard: usize,
+    /// Requests this shard completed (split bands count individually).
+    pub requests: usize,
+    pub requests_fp32: usize,
+    pub requests_int8: usize,
+    /// Requests (or split bands) cancelled before completion.
+    pub cancelled: usize,
+    /// Kernel invocations issued by this shard's scheduler.
+    pub invocations: u64,
+    pub mean_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Per-class queueing/service percentiles for this shard's traffic.
+    pub classes: Vec<ClassStats>,
+    pub device_ops_per_sec: f64,
+    pub device_time_s: f64,
+    pub mean_in_flight: f64,
+    pub max_in_flight: usize,
+    /// Requests currently admitted and not yet retired — the live load
+    /// gauge the router's least-loaded fallback reads.
+    pub open_requests: usize,
+    pub mem: MemPlaneStats,
+    pub pack: PackStats,
+    pub faults: FaultStats,
+    /// This shard's device workers (indices are shard-local).
+    pub worker_health: Vec<WorkerHealth>,
+}
+
+/// Routing decisions made by the shard router (lifetime counters; see
+/// [`crate::coordinator::shard`] for the routing policy).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Whole requests placed by rendezvous hashing on their `weight_id`.
+    pub routed_affinity: u64,
+    /// Whole requests placed on the least-loaded shard (anonymous
+    /// weights, or affinity disabled).
+    pub routed_least_loaded: u64,
+    /// Requests split along M across shards.
+    pub split_requests: u64,
+    /// Total bands those split requests fanned out into.
+    pub split_parts: u64,
 }
 
 #[cfg(test)]
@@ -460,6 +601,75 @@ mod tests {
         assert_eq!(s.count(), 1);
         assert_eq!(s.cancelled(), 2);
         assert_eq!(s.class_stats()[0].count, 1);
+    }
+
+    #[test]
+    fn absorb_into_empty_is_identity() {
+        // The server-wide roll-up for shards = 1 must report exactly
+        // what the lone shard reports.
+        let mut shard = StatsAgg::default();
+        for i in 0..50 {
+            shard.record(completion(i, i as usize % 3, 100, 5 + i, 2));
+        }
+        shard.record_cancelled();
+        let mut agg = StatsAgg::default();
+        agg.absorb(&shard);
+        assert_eq!(agg.count(), shard.count());
+        assert_eq!(agg.cancelled(), shard.cancelled());
+        assert_eq!(agg.total_macs(), shard.total_macs());
+        assert_eq!(agg.wall_latencies_ms(), shard.wall_latencies_ms());
+        assert_eq!(agg.mean_latency_ms(), shard.mean_latency_ms());
+        assert_eq!(agg.p99_latency_ms(), shard.p99_latency_ms());
+        let (a, b) = (agg.class_stats(), shard.class_stats());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.class, x.count), (y.class, y.count));
+            assert_eq!(x.latency_p99_ms, y.latency_p99_ms);
+        }
+    }
+
+    #[test]
+    fn absorb_sums_totals_and_bounds_windows() {
+        let mut a = StatsAgg::default();
+        let mut b = StatsAgg::default();
+        for i in 0..LATENCY_WINDOW {
+            a.record(completion(i as u64, 0, 10, 1, 0));
+            b.record(completion(i as u64, 1, 20, 3, 1));
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), 2 * LATENCY_WINDOW);
+        assert_eq!(a.total_macs(), 30 * LATENCY_WINDOW as u64);
+        assert_eq!(a.wall_latencies_ms().len(), LATENCY_WINDOW);
+        assert_eq!(a.class_stats().len(), 2);
+        // b's newer samples displaced a's from the merged window.
+        assert!((a.mean_latency_ms() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_absorb_sums_fields() {
+        let mut m = MemPlaneStats { weight_cache_hits: 1, tile_buffers_free: 2, ..Default::default() };
+        m.absorb(&MemPlaneStats { weight_cache_hits: 4, tile_buffers_free: 3, ..Default::default() });
+        assert_eq!(m.weight_cache_hits, 5);
+        assert_eq!(m.tile_buffers_free, 5);
+
+        let mut p = PackStats { matrices_packed: 2, pack_time_s: 0.5, ..Default::default() };
+        p.absorb(&PackStats { matrices_packed: 1, pack_time_s: 0.25, ..Default::default() });
+        assert_eq!(p.matrices_packed, 3);
+        assert!((p.pack_time_s - 0.75).abs() < 1e-12);
+
+        let mut f = FaultStats { retries: 2, injected_errors: 1, ..Default::default() };
+        f.absorb(&FaultStats { retries: 3, injected_panics: 2, ..Default::default() });
+        assert_eq!(f.retries, 5);
+        assert_eq!(f.injected(), 3);
+
+        let mut w = WindowOcc::default();
+        w.record(2);
+        let mut w2 = WindowOcc::default();
+        w2.record(6);
+        w.absorb(&w2);
+        assert_eq!(w.samples(), 2);
+        assert_eq!(w.max(), 6);
+        assert!((w.mean() - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -68,3 +68,40 @@ pub mod workloads;
 
 pub use arch::device::AieDevice;
 pub use arch::precision::Precision;
+pub use coordinator::ServeError;
+
+/// Everything a typical serving client needs, in one import:
+///
+/// ```no_run
+/// use maxeva::prelude::*;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let cfg = ServeConfig::builder(DesignConfig::flagship(Precision::Fp32)).build()?;
+/// let server = MatMulServer::start(&cfg)?;
+/// let req = MatMulRequest::f32(0, 64, 64, 64);
+/// let handle: RequestHandle = server.submit(
+///     req,
+///     Operands::F32 { a: vec![0.0; 64 * 64], b: vec![0.0; 64 * 64] },
+/// )?;
+/// match handle.wait() {
+///     Ok(out) => drop(out.into_f32()?),
+///     Err(err) => {
+///         if let Some(serve_err) = ServeError::from_anyhow(&err) {
+///             eprintln!("typed serving failure: {serve_err}");
+///         }
+///     }
+/// }
+/// # Ok(())
+/// # }
+/// ```
+pub mod prelude {
+    pub use crate::arch::precision::Precision;
+    pub use crate::config::schema::{
+        AdmissionPolicy, BackendKind, DesignConfig, PolicyKind, ServeConfig, ServeConfigBuilder,
+    };
+    pub use crate::coordinator::{
+        Cancelled, MatMulServer, QueueFull, RequestHandle, RouterStats, ServeError, ServerStats,
+        ShardStats,
+    };
+    pub use crate::workloads::{MatMulRequest, MatOutput, Operands};
+}

@@ -11,8 +11,11 @@
 //!   serve     [--requests N] [--size S] [--config cfg]  end-to-end serving
 //!   info                                                device + artifact info
 
-// Same lint posture as the library crate (see rust/src/lib.rs).
+// Same lint posture as the library crate (see rust/src/lib.rs). The
+// `serve` subcommand replays a closed batch through the deprecated
+// `run_batch` wrapper (`coordinator::compat`) on purpose.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments, clippy::type_complexity)]
+#![allow(deprecated)]
 
 use maxeva::arch::device::AieDevice;
 use maxeva::arch::precision::Precision;

@@ -6,7 +6,7 @@
 
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeConfig};
-use maxeva::coordinator::server::{Cancelled, MatMulServer};
+use maxeva::coordinator::{Cancelled, MatMulServer};
 use maxeva::coordinator::tiler::matmul_ref_f32;
 use maxeva::workloads::{materialize_mixed, MatMulRequest, Operands};
 use std::time::Duration;

@@ -14,6 +14,10 @@
 //! * the zero-allocation steady state (PR 4) survives the new kernels
 //!   and parallel packing.
 
+// Closed-batch coverage here intentionally exercises the deprecated
+// `run_batch` replay wrappers (`coordinator::compat`).
+#![allow(deprecated)]
+
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::microkernel::{

@@ -17,7 +17,7 @@ use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeCo
 use maxeva::coordinator::fault::{
     DrainDeadlineExpired, FaultKind, FaultPlan, SchedulerPanicked, TileRetriesExhausted,
 };
-use maxeva::coordinator::server::{Cancelled, MatMulServer};
+use maxeva::coordinator::{Cancelled, MatMulServer};
 use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
 use std::time::{Duration, Instant};
 

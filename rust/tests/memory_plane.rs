@@ -16,6 +16,10 @@
 //! * free-lists stay bounded under a cancellation storm (the
 //!   recycle-leak probe).
 
+// Closed-batch coverage here intentionally exercises the deprecated
+// `run_batch` replay wrappers (`coordinator::compat`).
+#![allow(deprecated)]
+
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::pool::TilePool;

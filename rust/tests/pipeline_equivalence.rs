@@ -11,6 +11,10 @@
 //! feature needed), over a deliberately small 2×4×2 array of 4×4×4
 //! kernels (native tile 8×16×8) so grids are large and cheap.
 
+// Closed-batch coverage here intentionally exercises the deprecated
+// `run_batch` replay wrappers (`coordinator::compat`).
+#![allow(deprecated)]
+
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;

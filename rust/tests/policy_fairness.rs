@@ -12,6 +12,10 @@
 //! * the policy can be swapped on a live server without disturbing
 //!   open flights.
 
+// Closed-batch coverage here intentionally exercises the deprecated
+// `run_batch` replay wrappers (`coordinator::compat`).
+#![allow(deprecated)]
+
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, PolicyKind, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;

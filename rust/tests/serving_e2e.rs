@@ -2,6 +2,10 @@
 //! thread → PJRT artifact → accumulated results. Skip when artifacts are
 //! missing.
 
+// Closed-batch coverage here intentionally exercises the deprecated
+// `run_batch` replay wrappers (`coordinator::compat`).
+#![allow(deprecated)]
+
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::server::MatMulServer;

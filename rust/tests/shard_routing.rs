@@ -1,0 +1,331 @@
+//! Shard-router properties through the full facade (pure-Rust
+//! reference backend, no artifacts needed):
+//!
+//! * **M-split bit-identity** — a request tall enough to split fans out
+//!   across the fleet and its merged output is bit-identical to the
+//!   single-shard engine, for fp32 and int8 across fringe shapes;
+//! * **`shards = 1` is a bit-for-bit no-op** — the router
+//!   short-circuits (no counters touched) and the facade reproduces a
+//!   second single-shard server exactly;
+//! * **weight-affinity routing** — a repeat-`weight_id` stream lands on
+//!   one shard and hits that shard's warm packed-weight cache on ≥ 90%
+//!   of requests; anonymous (or affinity-off) traffic falls back to
+//!   least-loaded;
+//! * **cancellation / drain / fault injection** behave identically
+//!   through the router: every handle resolves exactly once, shutdown
+//!   drains open split requests on every shard, and an injected-fault
+//!   run recovers bit-identically to the fault-free oracle;
+//! * per-shard statistics roll up to the facade totals.
+
+use maxeva::coordinator::fault::{FaultKind, FaultPlan};
+use maxeva::prelude::*;
+use maxeva::workloads::materialize_mixed;
+use std::time::Duration;
+
+/// Tiny design (native 8×16×8 in both precisions) so tile grids are
+/// large and cheap on the reference backend. With the default
+/// `shard_split_tiles = 8`, any request with m ≥ 57 (⌈m/8⌉ ≥ 8 tiles)
+/// splits across a multi-shard fleet.
+fn small_cfg(shards: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = 2;
+    cfg.pipeline_depth = 4;
+    cfg.queue_depth = 0;
+    cfg.shards = shards;
+    cfg
+}
+
+/// Submit a materialized batch and wait in order.
+fn serve_all(server: &MatMulServer, batch: &[(MatMulRequest, Operands)]) -> Vec<MatOutput> {
+    let handles: Vec<RequestHandle> = batch
+        .iter()
+        .map(|(req, ops)| server.submit(*req, ops.clone()).expect("admission"))
+        .collect();
+    handles.into_iter().map(|h| h.wait().expect("request must retire")).collect()
+}
+
+#[test]
+fn split_requests_are_bit_identical_to_the_single_shard_engine() {
+    // Fringe coverage around the 8-row tile: m on and off band
+    // boundaries (64 = 4 even bands, 57 = minimal split with fringe
+    // rows, 71/120 = uneven band loads), k/n fringes, both precisions.
+    let shapes = [(64u64, 32u64, 24u64), (57, 16, 8), (71, 33, 10), (120, 64, 17)];
+    let mut reqs = Vec::new();
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        reqs.push(MatMulRequest::f32(2 * i as u64, m, k, n));
+        reqs.push(MatMulRequest::int8(2 * i as u64 + 1, m, k, n));
+    }
+    let batch = materialize_mixed(&reqs, 4242);
+    let single = MatMulServer::start(&small_cfg(1)).expect("single-shard server");
+    let fleet = MatMulServer::start(&small_cfg(4)).expect("4-shard server");
+    let want = serve_all(&single, &batch);
+    let got = serve_all(&fleet, &batch);
+    assert_eq!(want, got, "an M-split request must reproduce the unsplit engine bit-for-bit");
+
+    let router = fleet.stats().router;
+    assert_eq!(router.split_requests, reqs.len() as u64, "every shape here is tall enough");
+    assert!(
+        router.split_parts >= 2 * router.split_requests,
+        "each split must fan out into at least two bands: {router:?}"
+    );
+    let single_router = single.stats().router;
+    assert_eq!(single_router, RouterStats::default(), "one shard never routes");
+    single.shutdown();
+    fleet.shutdown();
+}
+
+#[test]
+fn split_callback_delivery_matches_the_handle_path() {
+    use std::sync::{Arc, Mutex};
+    let req = MatMulRequest::f32(50, 64, 32, 24);
+    let batch = materialize_mixed(&[req], 808);
+    let fleet = MatMulServer::start(&small_cfg(4)).expect("4-shard server");
+    let want = serve_all(&fleet, &batch);
+
+    let got = Arc::new(Mutex::new(None));
+    let sink = Arc::clone(&got);
+    let (req, ops) = &batch[0];
+    fleet
+        .submit_with_callback(*req, ops.clone(), move |creq, out| {
+            assert_eq!(creq.id, 50, "the callback sees the original request, not a band");
+            assert_eq!(creq.m, 64, "the callback request keeps the unsplit shape");
+            *sink.lock().unwrap() = Some(out.expect("split request must succeed"));
+        })
+        .expect("callback submission");
+    // The callback fires on a scheduler thread; shutdown drains first.
+    fleet.shutdown();
+    let got = got.lock().unwrap().take().expect("callback fired exactly once");
+    assert_eq!(got, want[0], "callback delivery must merge the same bands");
+}
+
+#[test]
+fn single_shard_facade_is_a_bit_for_bit_noop() {
+    // A stream that would exercise every routing path on a fleet: tall
+    // (would split), weight-tagged (would hash), anonymous (would
+    // least-load). On one shard the router must short-circuit before
+    // touching any counter, and two identical servers must agree
+    // bit-for-bit.
+    let reqs = [
+        MatMulRequest::f32(0, 64, 32, 24),
+        MatMulRequest::f32(1, 16, 64, 16).with_weight_id(7),
+        MatMulRequest::int8(2, 24, 16, 8),
+        MatMulRequest::f32(3, 120, 33, 17),
+    ];
+    let batch = materialize_mixed(&reqs, 1729);
+    let a = MatMulServer::start(&small_cfg(1)).expect("server a");
+    let b = MatMulServer::start(&small_cfg(1)).expect("server b");
+    assert_eq!(a.shards(), 1);
+    let out_a = serve_all(&a, &batch);
+    let out_b = serve_all(&b, &batch);
+    assert_eq!(out_a, out_b, "the single-shard facade must stay deterministic");
+
+    let stats = a.stats();
+    assert_eq!(stats.router, RouterStats::default(), "the router must short-circuit");
+    assert_eq!(stats.shards.len(), 1);
+    // The rolled-up totals are exactly the one shard's statistics.
+    assert_eq!(stats.requests, stats.shards[0].requests);
+    assert_eq!(stats.invocations, stats.shards[0].invocations);
+    assert_eq!(stats.cancelled, stats.shards[0].cancelled);
+    a.shutdown();
+    b.shutdown();
+}
+
+#[test]
+fn affinity_pins_repeat_weights_to_one_warm_shard() {
+    let mut cfg = small_cfg(4);
+    cfg.weight_cache_bytes = 64 << 20;
+    let server = MatMulServer::start(&cfg).expect("4-shard cached server");
+    // One model (weight_id 42) multiplied by 20 activation streams —
+    // small enough to route whole (⌈16/8⌉ = 2 tiles < split threshold).
+    let reqs: Vec<MatMulRequest> =
+        (0..20).map(|i| MatMulRequest::f32(100 + i, 16, 64, 16).with_weight_id(42)).collect();
+    let shared_b = match materialize_mixed(&[reqs[0]], 7).remove(0).1 {
+        Operands::F32 { b, .. } => b,
+        _ => unreachable!(),
+    };
+    for (i, req) in reqs.iter().enumerate() {
+        let a = match materialize_mixed(&[*req], 500 + i as u64).remove(0).1 {
+            Operands::F32 { a, .. } => a,
+            _ => unreachable!(),
+        };
+        let ops = Operands::F32 { a, b: shared_b.clone() };
+        server.submit(*req, ops).expect("admission").wait().expect("request must retire");
+    }
+
+    let s = server.stats();
+    assert_eq!(s.router.routed_affinity, 20, "every tagged request routes by hash");
+    assert_eq!(s.router.routed_least_loaded, 0);
+    assert_eq!(
+        s.mem.weight_cache_misses,
+        1,
+        "the weight must be packed exactly once, on its home shard"
+    );
+    assert!(
+        s.mem.weight_cache_hits >= 19,
+        "≥ 90% of the repeat stream must hit the warm cache, got {} of 20 hits",
+        s.mem.weight_cache_hits
+    );
+    let served: Vec<usize> = s.shards.iter().map(|sh| sh.requests).collect();
+    assert_eq!(served.iter().sum::<usize>(), 20);
+    assert_eq!(
+        served.iter().filter(|&&c| c > 0).count(),
+        1,
+        "affinity must pin the whole stream to one shard: {served:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn anonymous_and_affinity_off_requests_route_least_loaded() {
+    // Anonymous requests on an affinity-on fleet.
+    let server = MatMulServer::start(&small_cfg(4)).expect("4-shard server");
+    let reqs: Vec<MatMulRequest> = (0..6).map(|i| MatMulRequest::f32(i, 16, 16, 16)).collect();
+    serve_all(&server, &materialize_mixed(&reqs, 5));
+    let r = server.stats().router;
+    assert_eq!(r.routed_least_loaded, 6, "anonymous weights use the load fallback");
+    assert_eq!(r.routed_affinity, 0);
+    server.shutdown();
+
+    // Tagged requests on an affinity-off fleet.
+    let mut cfg = small_cfg(4);
+    cfg.shard_affinity = false;
+    let server = MatMulServer::start(&cfg).expect("affinity-off server");
+    let reqs: Vec<MatMulRequest> =
+        (0..6).map(|i| MatMulRequest::f32(10 + i, 16, 16, 16).with_weight_id(9)).collect();
+    serve_all(&server, &materialize_mixed(&reqs, 6));
+    let r = server.stats().router;
+    assert_eq!(r.routed_affinity, 0, "affinity off must ignore weight ids");
+    assert_eq!(r.routed_least_loaded, 6);
+    server.shutdown();
+}
+
+#[test]
+fn cancellation_resolves_exactly_once_through_the_router() {
+    let server = MatMulServer::start(&small_cfg(4)).expect("4-shard server");
+    // Split requests: a cancel must fan out to every shard holding a
+    // band. Race tolerated both ways — the handle resolves with the
+    // output (cancel lost the race) or `Cancelled`, never neither,
+    // never twice, never a hang.
+    let reqs: Vec<MatMulRequest> =
+        (0..4).map(|i| MatMulRequest::f32(300 + i, 64, 64, 24)).collect();
+    let batch = materialize_mixed(&reqs, 99);
+    let handles: Vec<RequestHandle> = batch
+        .iter()
+        .map(|(req, ops)| server.submit(*req, ops.clone()).expect("admission"))
+        .collect();
+    for h in handles {
+        h.cancel();
+        match h.wait_timeout(Duration::from_secs(120)).expect("handle must resolve, not hang") {
+            Ok(MatOutput::F32(v)) => assert_eq!(v.len(), 64 * 24, "a won race is a full output"),
+            Ok(other) => panic!("precision changed: {other:?}"),
+            Err(e) => assert!(
+                e.downcast_ref::<Cancelled>().is_some(),
+                "a lost race is a typed Cancelled, not: {e}"
+            ),
+        }
+    }
+
+    // The fleet must keep serving correctly after the cancel storm (no
+    // leaked queue or window slots on any shard).
+    let probe = materialize_mixed(&[MatMulRequest::f32(999, 64, 32, 8)], 123);
+    let single = MatMulServer::start(&small_cfg(1)).expect("oracle server");
+    let want = serve_all(&single, &probe);
+    let got = serve_all(&server, &probe);
+    assert_eq!(want, got, "the fleet must serve bit-identically after cancellations");
+    single.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_open_requests_across_shards() {
+    let reqs = [
+        MatMulRequest::f32(400, 64, 32, 24),
+        MatMulRequest::int8(401, 64, 16, 8),
+        MatMulRequest::f32(402, 16, 64, 16).with_weight_id(3),
+    ];
+    let batch = materialize_mixed(&reqs, 606);
+    let single = MatMulServer::start(&small_cfg(1)).expect("oracle server");
+    let want = serve_all(&single, &batch);
+    single.shutdown();
+
+    let fleet = MatMulServer::start(&small_cfg(4)).expect("4-shard server");
+    let handles: Vec<RequestHandle> = batch
+        .iter()
+        .map(|(req, ops)| fleet.submit(*req, ops.clone()).expect("admission"))
+        .collect();
+    // Shut down with the requests still open: the drain must serve
+    // every band on every shard before the engines exit.
+    fleet.shutdown();
+    for (handle, want) in handles.into_iter().zip(want) {
+        let got = handle.wait().expect("drained request must resolve with its output");
+        assert_eq!(got, want, "drained outputs must match the oracle bit-for-bit");
+    }
+}
+
+#[test]
+fn fault_injection_recovers_bit_identically_through_the_router() {
+    let reqs = [
+        MatMulRequest::f32(700, 64, 64, 24),
+        MatMulRequest::int8(701, 64, 32, 16),
+        MatMulRequest::f32(702, 16, 64, 16).with_weight_id(3),
+        MatMulRequest::f32(703, 120, 33, 17),
+    ];
+    let batch = materialize_mixed(&reqs, 777);
+    let oracle = MatMulServer::start(&small_cfg(1)).expect("fault-free oracle");
+    let want = serve_all(&oracle, &batch);
+    oracle.shutdown();
+
+    // Worker 0 of *every* shard injects tile errors (each shard clones
+    // the plan); retries re-dispatch to the healthy peer. The recovered
+    // fleet run must match the fault-free single-shard oracle exactly.
+    let mut cfg = small_cfg(4);
+    let mut plan = FaultPlan::new(1, 0.4, vec![FaultKind::Error]);
+    plan.worker = Some(0);
+    plan.max_faults = 12;
+    cfg.fault_plan = Some(plan);
+    cfg.max_tile_retries = 8;
+    let fleet = MatMulServer::start(&cfg).expect("chaos fleet");
+    let got = serve_all(&fleet, &batch);
+    assert_eq!(want, got, "a recovered fleet run must be bit-identical to the oracle");
+
+    let s = fleet.stats();
+    assert!(s.faults.injected() > 0, "the chaos plan never fired");
+    assert!(s.faults.retries >= s.faults.injected_errors, "every error must retry");
+    assert_eq!(s.faults.retries_exhausted, 0, "no request may fail under this budget");
+    fleet.shutdown();
+}
+
+#[test]
+fn per_shard_stats_roll_up_to_the_totals() {
+    let server = MatMulServer::start(&small_cfg(4)).expect("4-shard server");
+    let reqs = [
+        MatMulRequest::f32(800, 64, 32, 24),
+        MatMulRequest::f32(801, 16, 16, 16).with_weight_id(1),
+        MatMulRequest::f32(802, 16, 16, 16).with_weight_id(2),
+        MatMulRequest::int8(803, 24, 16, 8),
+    ];
+    serve_all(&server, &materialize_mixed(&reqs, 321));
+
+    let s = server.stats();
+    assert_eq!(s.shards.len(), 4);
+    for (i, sh) in s.shards.iter().enumerate() {
+        assert_eq!(sh.shard, i, "shard snapshots are indexed by shard");
+    }
+    // Engine-level counts sum exactly (a split request retires once per
+    // band on its shard, and the roll-up counts what the engines did).
+    assert_eq!(s.requests, s.shards.iter().map(|sh| sh.requests).sum::<usize>());
+    assert_eq!(s.invocations, s.shards.iter().map(|sh| sh.invocations).sum::<u64>());
+    assert_eq!(s.cancelled, s.shards.iter().map(|sh| sh.cancelled).sum::<usize>());
+    let device_sum: f64 = s.shards.iter().map(|sh| sh.device_time_s).sum();
+    assert!((s.device_time_s - device_sum).abs() < 1e-12);
+    assert_eq!(
+        s.worker_health.len(),
+        4 * server.workers(),
+        "worker health concatenates every shard's pool"
+    );
+    server.shutdown();
+}

@@ -3,9 +3,13 @@
 //! (handles and callbacks), and mixed-precision streaming — all on the
 //! pure-Rust reference backend (no artifacts needed).
 
+// Closed-batch coverage here intentionally exercises the deprecated
+// `run_batch` replay wrappers (`coordinator::compat`).
+#![allow(deprecated)]
+
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeConfig};
-use maxeva::coordinator::server::{MatMulServer, QueueFull};
+use maxeva::coordinator::{MatMulServer, QueueFull};
 use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
 use std::sync::mpsc;
