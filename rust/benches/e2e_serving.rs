@@ -503,12 +503,17 @@ fn main() {
         }
     }
 
-    common::banner("packing parallelism: pack_workers 1 vs 4 (PR 5 compute plane)");
+    common::banner(
+        "packing parallelism: serial vs scoped-thread vs persistent-pool fan-out (PR 5 / PR 8)",
+    );
     // Tall-K requests make operand packing a visible slice of request
     // latency: A is 1×gk tiles, B gk×gn — both grids big enough for
-    // `pack_with` to fan out. Fresh servers per leg (pack_workers is a
-    // start-time knob); outputs must stay bit-identical since parallel
-    // packing writes the same bytes from disjoint threads.
+    // the pack stage to fan out. Fresh servers per leg (pack_workers /
+    // pack_persistent are start-time knobs); outputs must stay
+    // bit-identical since every fan-out mode writes the same bytes.
+    // The scoped-vs-persistent A/B isolates the per-call spawn/join
+    // overhead the persistent WorkPool removes — visible directly in
+    // the `pack_spawn_s` stat split out of packing time in PR 8.
     let pack_fan = 4usize;
     let (pm, pk, pn) = if quick { (128u64, 1536u64, 512u64) } else { (192, 3072, 768) };
     let n_pack_reqs = if quick { 2usize } else { 3 };
@@ -518,49 +523,66 @@ fn main() {
     let pack_batch = materialize_batch(&pack_reqs, 5150);
     let mut pack_walls = Vec::new();
     let mut pack_leg_times = Vec::new();
+    let mut pack_spawn_times = Vec::new();
     let mut pack_outs = Vec::new();
     let mut pack_runs: Vec<Json> = Vec::new();
-    for workers in [1usize, pack_fan] {
+    let pack_legs: [(usize, bool, &str); 3] = [
+        (1, true, "serial"),
+        (pack_fan, false, "scoped threads"),
+        (pack_fan, true, "persistent pool"),
+    ];
+    for (workers, persistent, label) in pack_legs {
         let mut leg_cfg = cfg.clone();
         leg_cfg.pack_workers = workers;
+        leg_cfg.pack_persistent = persistent;
         let mut leg = MatMulServer::start(&leg_cfg).expect("packing-parallelism server");
         // Untimed warmup (free-lists, allocator); counters are lifetime
         // totals, so snapshot before the timed pass and diff.
         let _ = leg.run_batch(pack_batch.clone()).unwrap();
-        let warm_pack_s = leg.stats().pack.pack_time_s;
+        let warm = leg.stats().pack;
         let t0 = Instant::now();
         let outs = leg.run_batch(pack_batch.clone()).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let p = leg.stats().pack;
-        let timed_pack_s = p.pack_time_s - warm_pack_s;
+        let timed_pack_s = p.pack_time_s - warm.pack_time_s;
+        let timed_spawn_s = p.pack_spawn_s - warm.pack_spawn_s;
         println!(
-            "  pack_workers {workers}: wall {wall:.3} s · packing {:.1} ms in timed pass \
-             ({} matrices packed, {} parallel packs over the server's life)",
+            "  pack_workers {workers} ({label}): wall {wall:.3} s · packing {:.1} ms + \
+             {:.2} ms fan-out overhead in timed pass ({} matrices packed, {} parallel \
+             packs over the server's life)",
             timed_pack_s * 1e3,
+            timed_spawn_s * 1e3,
             p.matrices_packed,
             p.parallel_packs
         );
         let mut r = BTreeMap::new();
         r.insert("pack_workers".into(), Json::Num(workers as f64));
+        r.insert("pack_persistent".into(), Json::Bool(persistent));
+        r.insert("mode".into(), Json::Str(label.replace(' ', "_")));
         r.insert("wall_s".into(), Json::Num(wall));
         r.insert("pack_time_s".into(), Json::Num(timed_pack_s));
+        r.insert("pack_spawn_s".into(), Json::Num(timed_spawn_s));
         r.insert("parallel_packs".into(), Json::Num(p.parallel_packs as f64));
         pack_runs.push(Json::Obj(r));
         pack_walls.push(wall);
         pack_leg_times.push(timed_pack_s);
+        pack_spawn_times.push(timed_spawn_s);
         pack_outs.push(outs);
         leg.shutdown();
     }
-    let pack_identical = pack_outs[0] == pack_outs[1];
+    let pack_identical = pack_outs[0] == pack_outs[1] && pack_outs[1] == pack_outs[2];
     println!(
-        "  pack-time speedup {:.2}× · wall speedup {:.2}× · outputs bit-identical: \
+        "  pack-time speedup (serial→persistent) {:.2}× · wall speedup {:.2}× · fan-out \
+         overhead scoped {:.2} ms vs persistent {:.2} ms · outputs bit-identical: \
          {pack_identical}",
-        pack_leg_times[0] / pack_leg_times[1].max(1e-12),
-        pack_walls[0] / pack_walls[1].max(1e-12)
+        pack_leg_times[0] / pack_leg_times[2].max(1e-12),
+        pack_walls[0] / pack_walls[2].max(1e-12),
+        pack_spawn_times[1] * 1e3,
+        pack_spawn_times[2] * 1e3
     );
     assert!(
         pack_identical,
-        "parallel packing must be bit-identical to serial packing"
+        "every pack fan-out mode must be bit-identical to serial packing"
     );
     {
         let mut o = BTreeMap::new();
@@ -570,9 +592,17 @@ fn main() {
         o.insert("runs".into(), Json::Arr(pack_runs));
         o.insert(
             "pack_time_speedup".into(),
-            Json::Num(pack_leg_times[0] / pack_leg_times[1].max(1e-12)),
+            Json::Num(pack_leg_times[0] / pack_leg_times[2].max(1e-12)),
         );
-        o.insert("wall_speedup".into(), Json::Num(pack_walls[0] / pack_walls[1].max(1e-12)));
+        o.insert(
+            "spawn_overhead_scoped_s".into(),
+            Json::Num(pack_spawn_times[1]),
+        );
+        o.insert(
+            "spawn_overhead_persistent_s".into(),
+            Json::Num(pack_spawn_times[2]),
+        );
+        o.insert("wall_speedup".into(), Json::Num(pack_walls[0] / pack_walls[2].max(1e-12)));
         o.insert("bit_identical".into(), Json::Bool(pack_identical));
         json_sections.push(Json::Obj(o));
     }

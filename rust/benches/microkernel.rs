@@ -1,29 +1,44 @@
 //! Bench: the host compute plane — GFLOP/s (fp32) and GOP/s (int8-path
 //! i32) of the register-tiled GEMM microkernels across MR×NR tile
-//! geometries, against the naive scalar `ikj` loop they replaced.
+//! geometries, against the naive scalar `ikj` loop they replaced —
+//! plus (PR 8) a KC/MC/NC cache-block-size sweep of the GotoBLAS-style
+//! blocked loop nest and, when built with `--features simd`, a
+//! scalar-vs-SIMD comparison of the explicit AVX2/NEON panel kernels.
 //!
 //! Every timed variant is first checked **bit-identical** to the naive
 //! oracle on its shape (the compute plane's contract), so the sweep can
 //! never silently trade correctness for speed. The dispatched default
-//! geometry ([`MR_F32`]×[`NR_F32`] / [`MR_I32`]×[`NR_I32`]) is marked
-//! in the output; if another geometry consistently wins on the CI
-//! hardware, that's the signal to retune the dispatch constants.
+//! geometry ([`MR_F32`]×[`NR_F32`] / [`MR_I32`]×[`NR_I32`]) and the
+//! dispatched panel geometry ([`panel_geom`]) are marked in the
+//! output; if another variant consistently wins on the CI hardware,
+//! that's the signal to retune the dispatch constants.
 //!
 //!     cargo bench --bench microkernel -- [--quick] [--json PATH]
 //!
 //! `--quick` shrinks repetitions to CI-smoke scale; `--json PATH`
 //! writes the sweep as a JSON report (uploaded as the
-//! `microkernel-gflops` workflow artifact by the `bench-smoke` CI job).
+//! `microkernel-gflops` workflow artifact by the `bench-smoke` CI job,
+//! with the MR×NR rows under `results`, the block-size rows under
+//! `block_sweep`, and the SIMD rows under `simd_sweep`).
 
 mod common;
 
 use maxeva::arch::precision::Precision;
 use maxeva::config::json::Json;
 use maxeva::coordinator::microkernel::{
-    matmul_mk, matmul_naive_f32_into, matmul_naive_i32_into, micro_geom,
+    matmul_blocked, matmul_mk, matmul_naive_f32_into, matmul_naive_i32_into, micro_geom,
+    panel_geom, PanelGeom, MR_F32, MR_I32, NR_F32, NR_I32,
 };
 use maxeva::util::prng::XorShift64;
 use std::collections::BTreeMap;
+
+/// The KC/MC/NC panel geometries the block sweep times (`(mc, kc, nc)`
+/// triples). The dispatched default ([`panel_geom`]) is marked in the
+/// report; these bracket it from both sides so the artifact shows
+/// whether the cache constants still sit at the sweet spot on the CI
+/// hardware.
+const BLOCK_GEOMETRIES: [(usize, usize, usize); 4] =
+    [(32, 128, 512), (64, 256, 1024), (96, 256, 512), (128, 512, 2048)];
 
 /// The geometries the sweep instantiates (const generics, so the list
 /// is fixed at compile time). `(1, 8)` is the degenerate near-scalar
@@ -162,6 +177,135 @@ where
     rows
 }
 
+/// Time the blocked loop nest across [`BLOCK_GEOMETRIES`] against the
+/// flat (single-panel) kernel on one shape; every variant is asserted
+/// bit-identical to the flat kernel's output (itself checked against
+/// naive by [`sweep`] on the same shapes) before it is timed. Returns
+/// JSON rows for the `block_sweep` report section.
+fn block_sweep<T, FFlat, FBlocked>(
+    title: &str,
+    shape: (usize, usize, usize),
+    precision: &str,
+    warmup: usize,
+    iters: usize,
+    a: &[T],
+    b: &[T],
+    mut flat: FFlat,
+    mut blocked: FBlocked,
+    dispatched: PanelGeom,
+) -> Vec<Json>
+where
+    T: Copy + Default + PartialEq + std::fmt::Debug,
+    FFlat: FnMut(&mut [T], &[T], &[T], usize, usize, usize),
+    FBlocked: FnMut(&mut [T], &[T], &[T], usize, usize, usize, PanelGeom),
+{
+    let (m, k, n) = shape;
+    common::banner(title);
+    let ops = 2.0 * m as f64 * k as f64 * n as f64;
+    let mut c = vec![T::default(); m * n];
+    let mut want = vec![T::default(); m * n];
+    flat(&mut want, a, b, m, k, n);
+    let (flat_mean, flat_sd, _) = common::time_it(warmup, iters, || {
+        flat(std::hint::black_box(&mut c), a, b, m, k, n);
+    });
+    common::report("flat (single panel)", flat_mean, flat_sd);
+    let row = |label: String, pg: (usize, usize, usize), gops: f64, speedup: f64, dflt: bool| {
+        let mut o = BTreeMap::new();
+        o.insert("precision".into(), Json::Str(precision.into()));
+        o.insert("m".into(), Json::Num(m as f64));
+        o.insert("k".into(), Json::Num(k as f64));
+        o.insert("n".into(), Json::Num(n as f64));
+        o.insert("kernel".into(), Json::Str(label));
+        o.insert("mc".into(), Json::Num(pg.0 as f64));
+        o.insert("kc".into(), Json::Num(pg.1 as f64));
+        o.insert("nc".into(), Json::Num(pg.2 as f64));
+        o.insert("gops".into(), Json::Num(gops));
+        o.insert("speedup_vs_flat".into(), Json::Num(speedup));
+        o.insert("dispatched".into(), Json::Bool(dflt));
+        Json::Obj(o)
+    };
+    let mut rows =
+        vec![row("flat".into(), (0, 0, 0), ops / flat_mean / 1e9, 1.0, false)];
+    for (mc, kc, nc) in BLOCK_GEOMETRIES {
+        let pg = PanelGeom { mc, kc, nc };
+        blocked(&mut c, a, b, m, k, n, pg);
+        assert_eq!(c, want, "{title}: blocked {pg:?} must be bit-identical to flat");
+        let (mean, sd, _) = common::time_it(warmup, iters, || {
+            blocked(std::hint::black_box(&mut c), a, b, m, k, n, pg);
+        });
+        let dflt = pg == dispatched;
+        common::report(
+            &format!("MC={mc} KC={kc} NC={nc}{}", if dflt { "  ← dispatched" } else { "" }),
+            mean,
+            sd,
+        );
+        rows.push(row(
+            format!("blocked_{mc}x{kc}x{nc}"),
+            (mc, kc, nc),
+            ops / mean / 1e9,
+            flat_mean / mean,
+            dflt,
+        ));
+    }
+    rows
+}
+
+/// Scalar-vs-SIMD comparison on one shape: the scalar dispatched
+/// geometry against the explicit AVX2/NEON panel kernels behind the
+/// `simd` feature. Asserted bit-identical (the SIMD kernels preserve
+/// the scalar reduction order exactly — no FMA, no lane reduction)
+/// before timing. Returns JSON rows for the `simd_sweep` section.
+#[cfg(feature = "simd")]
+fn simd_sweep<T, FScalar, FSimd>(
+    title: &str,
+    shape: (usize, usize, usize),
+    precision: &str,
+    warmup: usize,
+    iters: usize,
+    a: &[T],
+    b: &[T],
+    mut scalar: FScalar,
+    mut simd: FSimd,
+) -> Vec<Json>
+where
+    T: Copy + Default + PartialEq + std::fmt::Debug,
+    FScalar: FnMut(&mut [T], &[T], &[T], usize, usize, usize),
+    FSimd: FnMut(&mut [T], &[T], &[T], usize, usize, usize),
+{
+    let (m, k, n) = shape;
+    common::banner(title);
+    let ops = 2.0 * m as f64 * k as f64 * n as f64;
+    let mut c = vec![T::default(); m * n];
+    let mut want = vec![T::default(); m * n];
+    scalar(&mut want, a, b, m, k, n);
+    simd(&mut c, a, b, m, k, n);
+    assert_eq!(c, want, "{title}: SIMD must be bit-identical to scalar");
+    let (scalar_mean, scalar_sd, _) = common::time_it(warmup, iters, || {
+        scalar(std::hint::black_box(&mut c), a, b, m, k, n);
+    });
+    common::report("scalar dispatch", scalar_mean, scalar_sd);
+    let (simd_mean, simd_sd, _) = common::time_it(warmup, iters, || {
+        simd(std::hint::black_box(&mut c), a, b, m, k, n);
+    });
+    common::report("simd dispatch", simd_mean, simd_sd);
+    println!("  scalar→simd speedup {:.2}×", scalar_mean / simd_mean);
+    let row = |label: &str, mean: f64, speedup: f64| {
+        let mut o = BTreeMap::new();
+        o.insert("precision".into(), Json::Str(precision.into()));
+        o.insert("m".into(), Json::Num(m as f64));
+        o.insert("k".into(), Json::Num(k as f64));
+        o.insert("n".into(), Json::Num(n as f64));
+        o.insert("kernel".into(), Json::Str(label.into()));
+        o.insert("gops".into(), Json::Num(ops / mean / 1e9));
+        o.insert("speedup_vs_scalar".into(), Json::Num(speedup));
+        Json::Obj(o)
+    };
+    vec![
+        row("scalar", scalar_mean, 1.0),
+        row("simd", simd_mean, scalar_mean / simd_mean),
+    ]
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -229,13 +373,131 @@ fn main() {
     );
     sections.extend(rows.iter().map(|r| row_json((m, k, n), "int8", r)));
 
+    // ── KC/MC/NC block-size sweep ────────────────────────────────────
+    // The GotoBLAS-style blocked nest above the microkernel. The
+    // flagship fp32 tile exceeds MC (m = 416), the flagship int8 tile
+    // exceeds KC too (k = 512), so the panel machinery is genuinely
+    // exercised; the full run adds a shape that exceeds every bound.
+    let mut block_rows: Vec<Json> = Vec::new();
+    let mut f32_block_shapes = vec![(416usize, 128usize, 192usize)];
+    if !quick {
+        f32_block_shapes.push((512, 512, 1536));
+    }
+    for shape in f32_block_shapes {
+        let (m, k, n) = shape;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+        block_rows.extend(block_sweep(
+            &format!("fp32 {m}x{k}x{n} block sweep (GFLOP/s)"),
+            shape,
+            "fp32",
+            warmup,
+            iters,
+            &a,
+            &b,
+            matmul_mk::<f32, MR_F32, NR_F32>,
+            matmul_blocked::<f32, MR_F32, NR_F32>,
+            panel_geom(Precision::Fp32),
+        ));
+    }
+    {
+        let (m, k, n) = (416usize, 512usize, 192usize);
+        let ai: Vec<i32> = (0..m * k).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+        let bi: Vec<i32> = (0..k * n).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+        block_rows.extend(block_sweep(
+            &format!("int8-path i32 {m}x{k}x{n} block sweep (GOP/s)"),
+            (m, k, n),
+            "int8",
+            warmup,
+            iters,
+            &ai,
+            &bi,
+            matmul_mk::<i32, MR_I32, NR_I32>,
+            matmul_blocked::<i32, MR_I32, NR_I32>,
+            panel_geom(Precision::Int8),
+        ));
+    }
+
+    // ── Scalar vs SIMD (behind `--features simd`) ────────────────────
+    #[allow(unused_mut)]
+    let mut simd_rows: Vec<Json> = Vec::new();
+    #[cfg(feature = "simd")]
+    {
+        use maxeva::coordinator::microkernel::simd;
+        if simd::available() {
+            let (m, k, n) = (416usize, 128usize, 192usize);
+            let a: Vec<f32> =
+                (0..m * k).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+            let b: Vec<f32> =
+                (0..k * n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+            simd_rows.extend(simd_sweep(
+                &format!("fp32 {m}x{k}x{n} scalar vs simd (GFLOP/s)"),
+                (m, k, n),
+                "fp32",
+                warmup,
+                iters,
+                &a,
+                &b,
+                |c: &mut [f32], a: &[f32], b: &[f32], m, k, n| {
+                    matmul_blocked::<f32, MR_F32, NR_F32>(
+                        c,
+                        a,
+                        b,
+                        m,
+                        k,
+                        n,
+                        panel_geom(Precision::Fp32),
+                    )
+                },
+                simd::matmul_f32,
+            ));
+            let (m, k, n) = (416usize, 512usize, 192usize);
+            let ai: Vec<i32> =
+                (0..m * k).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+            let bi: Vec<i32> =
+                (0..k * n).map(|_| rng.gen_range(0, 256) as i32 - 128).collect();
+            simd_rows.extend(simd_sweep(
+                &format!("int8-path i32 {m}x{k}x{n} scalar vs simd (GOP/s)"),
+                (m, k, n),
+                "int8",
+                warmup,
+                iters,
+                &ai,
+                &bi,
+                |c: &mut [i32], a: &[i32], b: &[i32], m, k, n| {
+                    matmul_blocked::<i32, MR_I32, NR_I32>(
+                        c,
+                        a,
+                        b,
+                        m,
+                        k,
+                        n,
+                        panel_geom(Precision::Int8),
+                    )
+                },
+                simd::matmul_i32,
+            ));
+        } else {
+            println!("\nsimd feature built, but this host lacks the ISA — skipping simd sweep");
+        }
+    }
+
     if let Some(path) = json_path {
         let mut o = BTreeMap::new();
         o.insert("bench".into(), Json::Str("microkernel".into()));
         o.insert("quick".into(), Json::Bool(quick));
+        o.insert("simd_built".into(), Json::Bool(cfg!(feature = "simd")));
+        o.insert("simd_ran".into(), Json::Bool(!simd_rows.is_empty()));
         o.insert("dispatched_f32".into(), Json::Str(format!("{}x{}", geom_f32.mr, geom_f32.nr)));
         o.insert("dispatched_i32".into(), Json::Str(format!("{}x{}", geom_i32.mr, geom_i32.nr)));
+        let pg = panel_geom(Precision::Fp32);
+        o.insert(
+            "dispatched_blocks".into(),
+            Json::Str(format!("{}x{}x{}", pg.mc, pg.kc, pg.nc)),
+        );
         o.insert("results".into(), Json::Arr(sections));
+        o.insert("block_sweep".into(), Json::Arr(block_rows));
+        o.insert("simd_sweep".into(), Json::Arr(simd_rows));
         match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
             Ok(()) => println!("\nwrote microkernel report to {path}"),
             Err(e) => println!("\nWARN: could not write {path}: {e}"),

@@ -341,12 +341,20 @@ pub struct ServeConfig {
     /// [`PolicyKind::Priority`] promotes it one class (`0` = no aging).
     pub aging_threshold: u64,
     /// Fan-out width for operand arena extraction: packing a request's
-    /// A/B matrices splits the tile grid across up to this many scoped
+    /// A/B matrices splits the tile grid across up to this many
     /// threads (`1` = serial packing, today's behavior bit-for-bit —
     /// parallel packs are bit-identical too, this is a pure latency
     /// knob for large requests). See
-    /// `crate::coordinator::pool::TilePool::pack_with`.
+    /// `crate::coordinator::pool::TilePool::pack_timed`.
     pub pack_workers: usize,
+    /// Run the pack fan-out on a persistent per-shard worker pool
+    /// (`crate::coordinator::workpool::WorkPool`, the default) instead
+    /// of spawning scoped threads per packed matrix. Pure overhead
+    /// knob: outputs are bit-identical either way (and to serial
+    /// packing); `false` keeps the legacy per-call spawn as the A/B
+    /// baseline, and the `pack_spawn_s` stat shows the difference.
+    /// Irrelevant while `pack_workers = 1`.
+    pub pack_persistent: bool,
     /// Admission slots reserved per request class, carved out of
     /// `queue_depth` (empty = unreserved = one shared semaphore, the
     /// historical behavior). With reserves, a class always finds its
@@ -424,6 +432,7 @@ impl ServeConfig {
             class_weights: vec![1, 1, 1, 1],
             aging_threshold: 64,
             pack_workers: 1,
+            pack_persistent: true,
             class_queue_reserve: Vec::new(),
             fault_plan: None,
             max_tile_retries: 2,
@@ -509,6 +518,7 @@ impl ServeConfig {
         );
         o.insert("aging_threshold".into(), Json::Num(self.aging_threshold as f64));
         o.insert("pack_workers".into(), Json::Num(self.pack_workers as f64));
+        o.insert("pack_persistent".into(), Json::Bool(self.pack_persistent));
         let reserve = self.class_queue_reserve.iter().map(|&r| Json::Num(r as f64)).collect();
         o.insert("class_queue_reserve".into(), Json::Arr(reserve));
         if let Some(plan) = &self.fault_plan {
@@ -596,6 +606,10 @@ impl ServeConfig {
                 .and_then(Json::as_u64)
                 .unwrap_or(64),
             pack_workers: v.get("pack_workers").and_then(Json::as_u64).unwrap_or(1) as usize,
+            pack_persistent: v
+                .get("pack_persistent")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
             class_queue_reserve,
             fault_plan,
             max_tile_retries: v
@@ -709,6 +723,11 @@ impl ServeConfigBuilder {
 
     pub fn pack_workers(mut self, workers: usize) -> Self {
         self.cfg.pack_workers = workers;
+        self
+    }
+
+    pub fn pack_persistent(mut self, persistent: bool) -> Self {
+        self.cfg.pack_persistent = persistent;
         self
     }
 
@@ -846,6 +865,7 @@ mod tests {
         assert_eq!(c.class_weights, vec![1, 1, 1, 1]);
         assert_eq!(c.aging_threshold, 64);
         assert_eq!(c.pack_workers, 1, "packing defaults to serial");
+        assert!(c.pack_persistent, "pack fan-out defaults to the persistent pool");
         assert!(c.class_queue_reserve.is_empty(), "admission defaults to unreserved");
         assert_eq!(c.fault_plan, None, "fault injection defaults off");
         assert_eq!(c.max_tile_retries, 2);
@@ -886,6 +906,7 @@ mod tests {
         c.class_weights = vec![8, 2, 1];
         c.aging_threshold = 512;
         c.pack_workers = 6;
+        c.pack_persistent = false;
         c.class_queue_reserve = vec![3, 0, 1];
         c.fault_plan = Some({
             use crate::coordinator::fault::FaultKind;
@@ -1038,6 +1059,7 @@ mod tests {
             .policy(PolicyKind::WeightedFair)
             .class_weights(vec![4, 1])
             .pack_workers(2)
+            .pack_persistent(false)
             .class_queue_reserve(vec![8, 0])
             .max_tile_retries(3)
             .shards(4)
@@ -1049,6 +1071,7 @@ mod tests {
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.shard_split_tiles, 2);
         assert!(!cfg.shard_affinity);
+        assert!(!cfg.pack_persistent);
         // Untouched knobs keep their ServeConfig::new defaults.
         assert_eq!(cfg.aging_threshold, 64);
         assert_eq!(cfg.drain_deadline_ms, 0);

@@ -1,7 +1,8 @@
-//! The host **compute plane**: register-tiled, autovectorization-friendly
-//! GEMM microkernels for the reference backend — the layer that turns
-//! the naive scalar tile loop into the packed-panel → register-block
-//! hierarchy the paper's whole thesis is built on.
+//! The host **compute plane**: register-tiled GEMM microkernels, the
+//! GotoBLAS2 packed-panel loop nest above them, and (behind the `simd`
+//! feature) explicit AVX2/NEON kernels — the layer that turns the naive
+//! scalar tile loop into the cache → register blocking hierarchy the
+//! paper's whole thesis is built on.
 //!
 //! # Why this layer exists
 //!
@@ -10,19 +11,18 @@
 //! (fp32 32×32×32, int8 32×128×32), the X×Y×Z array aggregates kernels
 //! into a native device tile, and the host tiles arbitrary problems
 //! over that native size. Our serving engine mirrors the outer two
-//! levels (the [`Tiler`] grid and the [`TilePool`] arenas), but until
-//! this module the innermost level — how one native tile is actually
-//! multiplied on the host — was a naive scalar `ikj` triple loop that
-//! reloaded and re-stored a full row of `C` on every k step. The
-//! GotoBLAS2-on-Versal mapping (Lei & Quintana-Ortí, arXiv 2404.15043)
-//! and the Ryzen-AI GEMM study (Taka et al., 2025) both land on the
-//! same structure: packed operand panels feeding a small MR×NR
-//! microkernel whose accumulators live in registers. This module is
-//! that microkernel, mapped onto MaxEVA's terms:
+//! levels (the [`Tiler`] grid and the [`TilePool`] arenas); this module
+//! is the innermost levels — how one native tile is actually multiplied
+//! on the host. The GotoBLAS2-on-Versal mapping (Lei &
+//! Quintana-Ortí, arXiv 2404.15043) and the Ryzen-AI GEMM study (Taka
+//! et al., 2025) both land on the same structure: packed operand panels
+//! feeding a small MR×NR microkernel whose accumulators live in
+//! registers. Mapped onto MaxEVA's terms:
 //!
 //! | MaxEVA level                  | host compute plane              |
 //! |-------------------------------|---------------------------------|
 //! | AIE register tile (`m×k×n`)   | MR×NR accumulator block         |
+//! | AIE memory-tile / PL buffers  | packed MC×KC / KC×NC panels     |
 //! | array native tile (X·m,Y·k,Z·n) | one `matmul_*` call on a packed tile |
 //! | PL tiling / zero-padding      | [`TilePool`] arenas + [`Tiler`] grid |
 //!
@@ -40,11 +40,51 @@
 //! `mr ≤ MR`, `nr ≤ NR` bounds, so every shape is handled without a
 //! separate scalar path.
 //!
+//! # The packed-panel (GotoBLAS2) nest
+//!
+//! A native tile can be far larger than cache (fp32 flagship:
+//! 416×128×192 ≈ 10 MB of streamed operands), so the flat MR×NR walk
+//! re-streams whole operand rows from memory on every pass.
+//! [`matmul_blocked`] wraps the microkernel in the GotoBLAS2 loop
+//! nest: K is carved into KC chunks (outermost), N into NC chunks, M
+//! into MC chunks, and each operand strip is **packed** into a dense
+//! panel before the micro-tile walk runs over it:
+//!
+//! ```text
+//! for pc in (0..k).step_by(KC)          // outermost: ascending k chunks
+//!   for jc in (0..n).step_by(NC)        //   pack B[pc.., jc..] → KC×NC panel
+//!     for ic in (0..m).step_by(MC)      //     pack A[ic.., pc..] → MC×KC panel
+//!       for (i0, j0) in MC×NC by MR×NR  //       C[..] += Apanel · Bpanel
+//!                                       //       (accumulators in registers)
+//! ```
+//!
+//! [`PANEL_MC`]·[`PANEL_KC`]·4 B ≈ 64 KiB keeps the A panel resident
+//! in L2 while a whole row of micro-tiles streams over it;
+//! [`PANEL_KC`]·[`PANEL_NC`]·4 B ≈ 1 MiB holds the B panel in L3/L2
+//! across all MC strips (both precisions store 4-byte elements).
+//! [`panel_geom`] reports the bounds per precision, and
+//! `benches/microkernel.rs --json` sweeps KC/MC/NC (the `block_sweep`
+//! section of the `microkernel-gflops` CI artifact) so the constants
+//! can be retuned per host.
+//!
+//! **Blocking never changes bits.** The KC chunk loop is *outermost*,
+//! so each output element still receives its `A[i][kk]·B[kk][j]` terms
+//! in ascending `kk` — now accumulated through `C` (pre-zeroed, loaded
+//! and stored once per chunk) instead of a register kept live across
+//! all of k. An f32 store/load round-trip is bit-exact (NaN payloads
+//! included), packing copies preserve element bits (so the zero-skip
+//! predicate sees identical values), and each term stays a separate
+//! multiply-then-add. The per-element operation sequence is therefore
+//! *identical* to the flat kernel's, and [`matmul_blocked`] is
+//! bit-identical to [`matmul_mk`] for every shape and every panel
+//! geometry — pinned here and in `tests/compute_plane.rs` over panel
+//! bounds that do not divide m/k/n.
+//!
 //! # Bit-identity (the ascending-ik contract)
 //!
 //! The serving engine's fp32 determinism rests on every output element
 //! being the **same sequence of f32 operations** regardless of path.
-//! The microkernel preserves that sequence exactly:
+//! Every kernel in this module preserves that sequence exactly:
 //!
 //! * per element `(i, j)` the accumulator starts at `0.0` and adds
 //!   `A[i][kk] * B[kk][j]` for `kk` **ascending** — the naive reference
@@ -63,6 +103,13 @@
 //! PRs 1–4 survives untouched. The int8 path (i32 carriers, wrapping
 //! adds) is order-independent and therefore trivially exact.
 //!
+//! The explicit-SIMD kernels (`simd` submodule, `--features simd`)
+//! uphold the *same* contract, and strictly: because the microkernel
+//! broadcasts `A[i][kk]` across output columns, SIMD lanes are
+//! independent output elements — there is **no lane reduction** whose
+//! order could differ from scalar code. The SIMD path is bit-identical
+//! to the scalar path, not merely ULP-close; see the submodule docs.
+//!
 //! # Dispatch
 //!
 //! [`matmul_f32`] / [`matmul_i32`] are the per-precision entry points,
@@ -70,9 +117,14 @@
 //! so one block's accumulators fit the 16 vector registers of
 //! mainstream SIMD ISAs with room for the broadcast and B-row
 //! operands); [`micro_geom`] reports those geometries per precision.
-//! `benches/microkernel.rs` sweeps alternative geometries against them
-//! and reports GFLOP/s / GOP/s so the defaults stay honest on real
-//! hardware.
+//! A tile routes to the packed-panel nest when any dimension exceeds
+//! its panel bound ([`panel_geom`]) and to the flat walk otherwise;
+//! with the `simd` feature enabled and a capable CPU, the same nests
+//! run with the AVX2/NEON panel kernels plugged in. Every route is
+//! bit-identical, so dispatch is purely a performance decision.
+//! `benches/microkernel.rs` sweeps alternative geometries, panel
+//! bounds, and scalar-vs-SIMD kernels and reports GFLOP/s / GOP/s so
+//! the defaults stay honest on real hardware.
 //!
 //! [`Tiler`]: crate::coordinator::tiler::Tiler
 //! [`TilePool`]: crate::coordinator::pool::TilePool
@@ -89,6 +141,18 @@ pub const NR_F32: usize = 16;
 pub const MR_I32: usize = 4;
 /// Columns of one i32 accumulator block.
 pub const NR_I32: usize = 16;
+
+/// Rows of one packed A panel (the MC in MC×KC): with [`PANEL_KC`],
+/// 64×256 4-byte elements = 64 KiB — comfortably L2-resident under
+/// the streamed B panel.
+pub const PANEL_MC: usize = 64;
+/// Depth of one K chunk (the KC in MC×KC / KC×NC): the unit of the
+/// outermost loop, sized so an A panel row strip stays in L1/L2.
+pub const PANEL_KC: usize = 256;
+/// Columns of one packed B panel (the NC in KC×NC): 256×1024 4-byte
+/// elements = 1 MiB, sized for L3 (or a large L2) so every MC strip
+/// of A reuses the same resident B panel.
+pub const PANEL_NC: usize = 1024;
 
 /// Element types the microkernel multiplies: the fp32 datapath and the
 /// int8 datapath's i32 carrier. `mul_acc` is one multiply-then-add in
@@ -137,6 +201,35 @@ pub fn micro_geom(p: Precision) -> MicroGeom {
         Precision::Int8 => MicroGeom { mr: MR_I32, nr: NR_I32 },
         _ => MicroGeom { mr: MR_F32, nr: NR_F32 },
     }
+}
+
+/// Panel bounds of the GotoBLAS2 nest (the MC/KC/NC of the module
+/// docs' diagram). All three must be > 0; none needs to divide the
+/// problem shape — fringe panels shrink to fit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelGeom {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+/// The panel bounds [`matmul_f32`] / [`matmul_i32`] block a serving
+/// precision with. Both precisions move 4-byte elements, so they share
+/// [`PANEL_MC`]/[`PANEL_KC`]/[`PANEL_NC`] today; the per-precision
+/// split exists so the block-size sweep in `benches/microkernel.rs`
+/// can retune them independently later.
+pub fn panel_geom(p: Precision) -> PanelGeom {
+    match p {
+        Precision::Int8 => PanelGeom { mc: PANEL_MC, kc: PANEL_KC, nc: PANEL_NC },
+        _ => PanelGeom { mc: PANEL_MC, kc: PANEL_KC, nc: PANEL_NC },
+    }
+}
+
+/// Whether a problem is big enough for the packed-panel nest: any
+/// dimension overflowing its panel bound means the flat walk would
+/// re-stream operands through cache once per pass.
+fn wants_blocking(m: usize, k: usize, n: usize, pg: PanelGeom) -> bool {
+    m > pg.mc || k > pg.kc || n > pg.nc
 }
 
 /// One full MR×NR output block: accumulators in fixed-size arrays
@@ -208,10 +301,11 @@ fn block_fringe<T: MicroElem, const MR: usize, const NR: usize>(
 }
 
 /// Register-tiled row-major GEMM: `C (m×n) = A (m×k) · B (k×n)` through
-/// MR×NR accumulator blocks. `c` is fully overwritten (stale contents
-/// are fine — the recycling free-lists hand these kernels dirty
-/// buffers). Outputs are bit-identical to the naive reference loop for
-/// every shape, in both element types (module docs).
+/// MR×NR accumulator blocks — the **flat** walk (no panel packing).
+/// `c` is fully overwritten (stale contents are fine — the recycling
+/// free-lists hand these kernels dirty buffers). Outputs are
+/// bit-identical to the naive reference loop for every shape, in both
+/// element types (module docs).
 pub fn matmul_mk<T: MicroElem, const MR: usize, const NR: usize>(
     c: &mut [T],
     a: &[T],
@@ -241,18 +335,252 @@ pub fn matmul_mk<T: MicroElem, const MR: usize, const NR: usize>(
     }
 }
 
-/// The fp32 microkernel at its dispatched geometry — what the reference
-/// device workers and [`matmul_ref_f32_into`] execute per native tile.
+/// An accumulating panel kernel: adds the `mr×nr` product of an A
+/// strip and a B strip into a C sub-block, `kk` ascending, reading
+/// A rows at stride `lda` from `a[a0..]`, B rows at stride `ldb` from
+/// `b[b0..]`, and loading/storing C rows at stride `ldc` from
+/// `c[c0..]`. The blocked and flat drivers are generic over this shape
+/// so the SIMD kernels plug into the identical loop nest.
+type PanelKernel<T> = fn(
+    c: &mut [T],
+    ldc: usize,
+    c0: usize,
+    a: &[T],
+    lda: usize,
+    a0: usize,
+    b: &[T],
+    ldb: usize,
+    b0: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+);
+
+/// The scalar [`PanelKernel`]: [`block_full`]/[`block_fringe`] with
+/// the epilogue changed from overwrite to load-accumulate-store. The
+/// per-element operation sequence (ascending `kk`, A-zero skip,
+/// separate multiply-then-add) is exactly the flat kernels'.
+#[inline]
+fn accum_block<T: MicroElem, const MR: usize, const NR: usize>(
+    c: &mut [T],
+    ldc: usize,
+    c0: usize,
+    a: &[T],
+    lda: usize,
+    a0: usize,
+    b: &[T],
+    ldb: usize,
+    b0: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[T::default(); NR]; MR];
+    for (i, arow) in acc.iter_mut().enumerate().take(mr) {
+        let off = c0 + i * ldc;
+        arow[..nr].copy_from_slice(&c[off..off + nr]);
+    }
+    for kk in 0..kc {
+        let boff = b0 + kk * ldb;
+        let brow = &b[boff..boff + nr];
+        for (i, arow) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[a0 + i * lda + kk];
+            if av.is_zero() {
+                continue;
+            }
+            for (dst, &bv) in arow[..nr].iter_mut().zip(brow) {
+                *dst = T::mul_acc(*dst, av, bv);
+            }
+        }
+    }
+    for (i, arow) in acc.iter().enumerate().take(mr) {
+        let off = c0 + i * ldc;
+        c[off..off + nr].copy_from_slice(&arow[..nr]);
+    }
+}
+
+/// Copy the `rows×cols` submatrix of row-major `src` (row stride
+/// `stride`, origin `(r0, c0)`) into the dense row-major panel
+/// `dst[..rows*cols]`. A verbatim bit copy: packed panels preserve
+/// exact element bits, so the kernels' zero-skip predicate and f32
+/// term values are unchanged by packing.
+fn pack_panel<T: Copy>(
+    dst: &mut [T],
+    src: &[T],
+    stride: usize,
+    r0: usize,
+    c0: usize,
+    rows: usize,
+    cols: usize,
+) {
+    for r in 0..rows {
+        let s = (r0 + r) * stride + c0;
+        dst[r * cols..(r + 1) * cols].copy_from_slice(&src[s..s + cols]);
+    }
+}
+
+/// The GotoBLAS2 nest of the module docs, generic over the panel
+/// kernel: zero `c`, then `pc → jc → ic → (i0, j0)` with packed A/B
+/// panels. `pc` outermost keeps per-element `kk` ascending across
+/// chunks — the whole bit-identity argument.
+fn run_blocked<T: MicroElem>(
+    c: &mut [T],
+    a: &[T],
+    b: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+    pg: PanelGeom,
+    mr_max: usize,
+    nr_max: usize,
+    kernel: PanelKernel<T>,
+) {
+    assert!(pg.mc > 0 && pg.kc > 0 && pg.nc > 0, "degenerate panel geometry");
+    assert!(mr_max > 0 && nr_max > 0, "degenerate microkernel geometry");
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    c.fill(T::default());
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut apack = vec![T::default(); pg.mc.min(m) * pg.kc.min(k)];
+    let mut bpack = vec![T::default(); pg.kc.min(k) * pg.nc.min(n)];
+    let mut pc = 0;
+    while pc < k {
+        let kc = (k - pc).min(pg.kc);
+        let mut jc = 0;
+        while jc < n {
+            let nc = (n - jc).min(pg.nc);
+            pack_panel(&mut bpack[..kc * nc], b, n, pc, jc, kc, nc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = (m - ic).min(pg.mc);
+                pack_panel(&mut apack[..mc * kc], a, k, ic, pc, mc, kc);
+                let mut i0 = 0;
+                while i0 < mc {
+                    let mr = (mc - i0).min(mr_max);
+                    let mut j0 = 0;
+                    while j0 < nc {
+                        let nr = (nc - j0).min(nr_max);
+                        kernel(
+                            c,
+                            n,
+                            (ic + i0) * n + jc + j0,
+                            &apack,
+                            kc,
+                            i0 * kc,
+                            &bpack,
+                            nc,
+                            j0,
+                            kc,
+                            mr,
+                            nr,
+                        );
+                        j0 += nr_max;
+                    }
+                    i0 += mr_max;
+                }
+                ic += pg.mc;
+            }
+            jc += pg.nc;
+        }
+        pc += pg.kc;
+    }
+}
+
+/// The flat walk generic over the panel kernel: zero `c`, one
+/// accumulate pass per MR×NR block with the full operands as the
+/// "panels" (`kc = k`). Used by the SIMD dispatch for problems below
+/// the blocking threshold; bit-identical to [`matmul_mk`]. (The
+/// scalar dispatch prefers [`matmul_mk`] directly — its overwrite
+/// epilogue skips the load of `C` — so this driver is only reachable
+/// with the `simd` feature.)
+#[cfg_attr(not(feature = "simd"), allow(dead_code))]
+fn run_flat<T: MicroElem>(
+    c: &mut [T],
+    a: &[T],
+    b: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+    mr_max: usize,
+    nr_max: usize,
+    kernel: PanelKernel<T>,
+) {
+    assert!(mr_max > 0 && nr_max > 0, "degenerate microkernel geometry");
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "output shape mismatch");
+    c.fill(T::default());
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = (m - i0).min(mr_max);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = (n - j0).min(nr_max);
+            kernel(c, n, i0 * n + j0, a, k, i0 * k, b, n, j0, k, mr, nr);
+            j0 += nr_max;
+        }
+        i0 += mr_max;
+    }
+}
+
+/// Cache-blocked row-major GEMM: the packed-panel nest over the scalar
+/// MR×NR microkernel, with explicit panel bounds. Bit-identical to
+/// [`matmul_mk`] (and hence to the naive reference) for every shape
+/// and every valid `pg` — see the module docs' blocking argument.
+/// `c` is fully overwritten.
+pub fn matmul_blocked<T: MicroElem, const MR: usize, const NR: usize>(
+    c: &mut [T],
+    a: &[T],
+    b: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+    pg: PanelGeom,
+) {
+    assert!(MR > 0 && NR > 0, "degenerate microkernel geometry");
+    run_blocked(c, a, b, m, k, n, pg, MR, NR, accum_block::<T, MR, NR>);
+}
+
+/// The fp32 compute-plane entry point — what the reference device
+/// workers and [`matmul_ref_f32_into`] execute per native tile. Routes
+/// to the packed-panel nest for above-panel shapes, the flat walk
+/// otherwise, and (with `--features simd` on a capable CPU) the
+/// explicit-SIMD kernels — all bit-identical, so dispatch is purely a
+/// performance decision.
 ///
 /// [`matmul_ref_f32_into`]: crate::coordinator::tiler::matmul_ref_f32_into
 pub fn matmul_f32(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    matmul_mk::<f32, MR_F32, NR_F32>(c, a, b, m, k, n);
+    #[cfg(feature = "simd")]
+    if simd::available() {
+        simd::matmul_f32(c, a, b, m, k, n);
+        return;
+    }
+    let pg = panel_geom(Precision::Fp32);
+    if wants_blocking(m, k, n, pg) {
+        matmul_blocked::<f32, MR_F32, NR_F32>(c, a, b, m, k, n, pg);
+    } else {
+        matmul_mk::<f32, MR_F32, NR_F32>(c, a, b, m, k, n);
+    }
 }
 
-/// The i32 (int8-path) microkernel at its dispatched geometry.
-/// Wrapping arithmetic: exact under any order, like the naive loop.
+/// The i32 (int8-path) compute-plane entry point, with the same
+/// blocked/flat/SIMD dispatch as [`matmul_f32`]. Wrapping arithmetic:
+/// exact under any order, like the naive loop.
 pub fn matmul_i32(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: usize, n: usize) {
-    matmul_mk::<i32, MR_I32, NR_I32>(c, a, b, m, k, n);
+    #[cfg(feature = "simd")]
+    if simd::available() {
+        simd::matmul_i32(c, a, b, m, k, n);
+        return;
+    }
+    let pg = panel_geom(Precision::Int8);
+    if wants_blocking(m, k, n, pg) {
+        matmul_blocked::<i32, MR_I32, NR_I32>(c, a, b, m, k, n, pg);
+    } else {
+        matmul_mk::<i32, MR_I32, NR_I32>(c, a, b, m, k, n);
+    }
 }
 
 /// The pre-compute-plane scalar `ikj` loop, kept verbatim as the
@@ -293,6 +621,353 @@ pub fn matmul_naive_i32_into(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: u
             let crow = &mut c[i * n..i * n + n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv = cv.wrapping_add(av.wrapping_mul(bv));
+            }
+        }
+    }
+}
+
+/// Explicit-SIMD panel kernels (`--features simd`): AVX2 on x86_64,
+/// NEON on aarch64, runtime-detected, with the scalar microkernel as
+/// the universal fallback.
+///
+/// # Channel strategy
+///
+/// `std::simd` is still nightly-only, so this module is written
+/// against the **stable `core::arch` intrinsics** instead — the `simd`
+/// feature builds on the same stable/MSRV toolchains as the rest of
+/// the crate (no nightly leg in CI, see ci.yml). On targets with
+/// neither ISA, or hosts whose CPU lacks it at runtime, [`available`]
+/// reports `false` and dispatch falls back to the scalar kernels —
+/// enabling the feature is always safe.
+///
+/// # Reduction order: exactly the scalar sequence
+///
+/// The microkernel broadcasts `A[i][kk]` against a contiguous row of
+/// B, so SIMD lanes are **independent output columns**, never partial
+/// sums of one element — there is no lane reduction to reorder. Each
+/// lane performs the identical ascending-`kk` multiply-then-add
+/// sequence as the scalar kernel (separate `mul`/`add` intrinsics;
+/// FMA would contract the rounding step and change bits, so it is
+/// deliberately not used), and the A-zero skip is the same scalar
+/// predicate per row. These kernels are therefore **bit-identical** to
+/// the scalar microkernel for fp32 — stronger than the ULP-bounded
+/// contract the serving layer would tolerate — and exact for i32
+/// (wrapping `mullo`/`add`). Pinned by the `simd_*` tests in this
+/// module over flat, blocked, and fringe shapes.
+#[cfg(feature = "simd")]
+pub mod simd {
+    use super::*;
+
+    #[cfg(target_arch = "x86_64")]
+    fn detect() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    fn detect() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn detect() -> bool {
+        false
+    }
+
+    /// `true` when the running CPU supports the ISA the arch kernels
+    /// target (AVX2 on x86_64, NEON on aarch64). `std` caches the
+    /// detection, so this is an atomic load after the first call.
+    pub fn available() -> bool {
+        detect()
+    }
+
+    /// Panel kernel with the SIMD full-block fast path; fringe blocks
+    /// (`mr < MR`, `nr < NR`) and non-SIMD hosts take the scalar
+    /// accumulate path — identical bits either way.
+    fn kernel_f32(
+        c: &mut [f32],
+        ldc: usize,
+        c0: usize,
+        a: &[f32],
+        lda: usize,
+        a0: usize,
+        b: &[f32],
+        ldb: usize,
+        b0: usize,
+        kc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if mr == MR_F32 && nr == NR_F32 && detect() {
+            // Safety: AVX2 presence verified by `detect()` above.
+            unsafe { x86::panel_f32_4x16(c, ldc, c0, a, lda, a0, b, ldb, b0, kc) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if mr == MR_F32 && nr == NR_F32 && detect() {
+            // Safety: NEON presence verified by `detect()` above.
+            unsafe { neon::panel_f32_4x16(c, ldc, c0, a, lda, a0, b, ldb, b0, kc) };
+            return;
+        }
+        accum_block::<f32, MR_F32, NR_F32>(c, ldc, c0, a, lda, a0, b, ldb, b0, kc, mr, nr);
+    }
+
+    /// [`kernel_f32`]'s i32 sibling.
+    fn kernel_i32(
+        c: &mut [i32],
+        ldc: usize,
+        c0: usize,
+        a: &[i32],
+        lda: usize,
+        a0: usize,
+        b: &[i32],
+        ldb: usize,
+        b0: usize,
+        kc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if mr == MR_I32 && nr == NR_I32 && detect() {
+            // Safety: AVX2 presence verified by `detect()` above.
+            unsafe { x86::panel_i32_4x16(c, ldc, c0, a, lda, a0, b, ldb, b0, kc) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if mr == MR_I32 && nr == NR_I32 && detect() {
+            // Safety: NEON presence verified by `detect()` above.
+            unsafe { neon::panel_i32_4x16(c, ldc, c0, a, lda, a0, b, ldb, b0, kc) };
+            return;
+        }
+        accum_block::<i32, MR_I32, NR_I32>(c, ldc, c0, a, lda, a0, b, ldb, b0, kc, mr, nr);
+    }
+
+    /// The SIMD fp32 entry: the same blocked/flat dispatch as the
+    /// scalar [`matmul_f32`](super::matmul_f32) with the AVX2/NEON
+    /// panel kernel plugged in. Bit-identical to the scalar path
+    /// (module docs); correct (via scalar fallback blocks) even when
+    /// [`available`] is `false`.
+    pub fn matmul_f32(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        let pg = panel_geom(Precision::Fp32);
+        if wants_blocking(m, k, n, pg) {
+            run_blocked(c, a, b, m, k, n, pg, MR_F32, NR_F32, kernel_f32);
+        } else {
+            run_flat(c, a, b, m, k, n, MR_F32, NR_F32, kernel_f32);
+        }
+    }
+
+    /// The SIMD i32 entry, mirroring [`matmul_f32`](self::matmul_f32).
+    pub fn matmul_i32(c: &mut [i32], a: &[i32], b: &[i32], m: usize, k: usize, n: usize) {
+        let pg = panel_geom(Precision::Int8);
+        if wants_blocking(m, k, n, pg) {
+            run_blocked(c, a, b, m, k, n, pg, MR_I32, NR_I32, kernel_i32);
+        } else {
+            run_flat(c, a, b, m, k, n, MR_I32, NR_I32, kernel_i32);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    mod x86 {
+        use std::arch::x86_64::*;
+
+        /// Full 4×16 fp32 accumulate block: 8 AVX2 accumulator
+        /// registers (4 rows × 2 `__m256`), ascending `kk`, scalar
+        /// A-zero skip, separate `mul`+`add` (never FMA — contraction
+        /// would change bits). All memory access is through
+        /// bounds-checked slices; only the ISA contract is unsafe.
+        ///
+        /// # Safety
+        /// The caller must have verified AVX2 support at runtime.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn panel_f32_4x16(
+            c: &mut [f32],
+            ldc: usize,
+            c0: usize,
+            a: &[f32],
+            lda: usize,
+            a0: usize,
+            b: &[f32],
+            ldb: usize,
+            b0: usize,
+            kc: usize,
+        ) {
+            let mut acc = [[_mm256_setzero_ps(); 2]; 4];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let off = c0 + i * ldc;
+                row[0] = _mm256_loadu_ps(c[off..off + 8].as_ptr());
+                row[1] = _mm256_loadu_ps(c[off + 8..off + 16].as_ptr());
+            }
+            for kk in 0..kc {
+                let boff = b0 + kk * ldb;
+                let blo = _mm256_loadu_ps(b[boff..boff + 8].as_ptr());
+                let bhi = _mm256_loadu_ps(b[boff + 8..boff + 16].as_ptr());
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[a0 + i * lda + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avv = _mm256_set1_ps(av);
+                    row[0] = _mm256_add_ps(row[0], _mm256_mul_ps(avv, blo));
+                    row[1] = _mm256_add_ps(row[1], _mm256_mul_ps(avv, bhi));
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                let off = c0 + i * ldc;
+                _mm256_storeu_ps(c[off..off + 8].as_mut_ptr(), row[0]);
+                _mm256_storeu_ps(c[off + 8..off + 16].as_mut_ptr(), row[1]);
+            }
+        }
+
+        /// Full 4×16 i32 accumulate block: wrapping `mullo`/`add`
+        /// lanes — exactly the scalar wrapping semantics.
+        ///
+        /// # Safety
+        /// The caller must have verified AVX2 support at runtime.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn panel_i32_4x16(
+            c: &mut [i32],
+            ldc: usize,
+            c0: usize,
+            a: &[i32],
+            lda: usize,
+            a0: usize,
+            b: &[i32],
+            ldb: usize,
+            b0: usize,
+            kc: usize,
+        ) {
+            let mut acc = [[_mm256_setzero_si256(); 2]; 4];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let off = c0 + i * ldc;
+                row[0] = _mm256_loadu_si256(c[off..off + 8].as_ptr() as *const __m256i);
+                row[1] = _mm256_loadu_si256(c[off + 8..off + 16].as_ptr() as *const __m256i);
+            }
+            for kk in 0..kc {
+                let boff = b0 + kk * ldb;
+                let blo = _mm256_loadu_si256(b[boff..boff + 8].as_ptr() as *const __m256i);
+                let bhi = _mm256_loadu_si256(b[boff + 8..boff + 16].as_ptr() as *const __m256i);
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[a0 + i * lda + kk];
+                    if av == 0 {
+                        continue;
+                    }
+                    let avv = _mm256_set1_epi32(av);
+                    row[0] = _mm256_add_epi32(row[0], _mm256_mullo_epi32(avv, blo));
+                    row[1] = _mm256_add_epi32(row[1], _mm256_mullo_epi32(avv, bhi));
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                let off = c0 + i * ldc;
+                _mm256_storeu_si256(c[off..off + 8].as_mut_ptr() as *mut __m256i, row[0]);
+                _mm256_storeu_si256(c[off + 8..off + 16].as_mut_ptr() as *mut __m256i, row[1]);
+            }
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    mod neon {
+        use std::arch::aarch64::*;
+
+        /// Full 4×16 fp32 accumulate block on NEON: 16 `float32x4_t`
+        /// accumulators (4 rows × 4 quads), ascending `kk`, scalar
+        /// A-zero skip, separate `vmul`+`vadd` (never `vfma` —
+        /// contraction would change bits).
+        ///
+        /// # Safety
+        /// The caller must have verified NEON support at runtime.
+        #[target_feature(enable = "neon")]
+        pub unsafe fn panel_f32_4x16(
+            c: &mut [f32],
+            ldc: usize,
+            c0: usize,
+            a: &[f32],
+            lda: usize,
+            a0: usize,
+            b: &[f32],
+            ldb: usize,
+            b0: usize,
+            kc: usize,
+        ) {
+            let mut acc = [[vdupq_n_f32(0.0); 4]; 4];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let off = c0 + i * ldc;
+                for (q, lane) in row.iter_mut().enumerate() {
+                    *lane = vld1q_f32(c[off + 4 * q..off + 4 * q + 4].as_ptr());
+                }
+            }
+            for kk in 0..kc {
+                let boff = b0 + kk * ldb;
+                let mut brow = [vdupq_n_f32(0.0); 4];
+                for (q, lane) in brow.iter_mut().enumerate() {
+                    *lane = vld1q_f32(b[boff + 4 * q..boff + 4 * q + 4].as_ptr());
+                }
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[a0 + i * lda + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avv = vdupq_n_f32(av);
+                    for (dst, &bq) in row.iter_mut().zip(brow.iter()) {
+                        *dst = vaddq_f32(*dst, vmulq_f32(avv, bq));
+                    }
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                let off = c0 + i * ldc;
+                for (q, lane) in row.iter().enumerate() {
+                    vst1q_f32(c[off + 4 * q..off + 4 * q + 4].as_mut_ptr(), *lane);
+                }
+            }
+        }
+
+        /// Full 4×16 i32 accumulate block on NEON: wrapping
+        /// `vmul`/`vadd` lanes — exactly the scalar wrapping
+        /// semantics.
+        ///
+        /// # Safety
+        /// The caller must have verified NEON support at runtime.
+        #[target_feature(enable = "neon")]
+        pub unsafe fn panel_i32_4x16(
+            c: &mut [i32],
+            ldc: usize,
+            c0: usize,
+            a: &[i32],
+            lda: usize,
+            a0: usize,
+            b: &[i32],
+            ldb: usize,
+            b0: usize,
+            kc: usize,
+        ) {
+            let mut acc = [[vdupq_n_s32(0); 4]; 4];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let off = c0 + i * ldc;
+                for (q, lane) in row.iter_mut().enumerate() {
+                    *lane = vld1q_s32(c[off + 4 * q..off + 4 * q + 4].as_ptr());
+                }
+            }
+            for kk in 0..kc {
+                let boff = b0 + kk * ldb;
+                let mut brow = [vdupq_n_s32(0); 4];
+                for (q, lane) in brow.iter_mut().enumerate() {
+                    *lane = vld1q_s32(b[boff + 4 * q..boff + 4 * q + 4].as_ptr());
+                }
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[a0 + i * lda + kk];
+                    if av == 0 {
+                        continue;
+                    }
+                    let avv = vdupq_n_s32(av);
+                    for (dst, &bq) in row.iter_mut().zip(brow.iter()) {
+                        *dst = vaddq_s32(*dst, vmulq_s32(avv, bq));
+                    }
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                let off = c0 + i * ldc;
+                for (q, lane) in row.iter().enumerate() {
+                    vst1q_s32(c[off + 4 * q..off + 4 * q + 4].as_mut_ptr(), *lane);
+                }
             }
         }
     }
@@ -355,6 +1030,73 @@ mod tests {
     }
 
     #[test]
+    fn blocked_nest_bit_identical_to_flat_over_odd_panels() {
+        // Panel bounds deliberately NOT dividing m/k/n — pathological
+        // {1,1,1}, coprime odd bounds, a nest that only blocks one
+        // dimension, and the production geometry — against the flat
+        // kernel. fp32 equality is exact (==): the pc-outermost nest
+        // preserves each element's ascending-kk operation sequence.
+        let geoms = [
+            PanelGeom { mc: 1, kc: 1, nc: 1 },
+            PanelGeom { mc: 5, kc: 3, nc: 7 },
+            PanelGeom { mc: 64, kc: 2, nc: 1024 },
+            panel_geom(Precision::Fp32),
+        ];
+        let mut rng = XorShift64::new(0x90B5);
+        for _ in 0..12 {
+            let m = rng.gen_range(1, 34) as usize;
+            let k = rng.gen_range(1, 26) as usize;
+            let n = rng.gen_range(1, 34) as usize;
+            let a = rand_f32(m * k, &mut rng);
+            let b = rand_f32(k * n, &mut rng);
+            let mut want = vec![f32::NAN; m * n];
+            matmul_mk::<f32, MR_F32, NR_F32>(&mut want, &a, &b, m, k, n);
+            let ai = rand_i32(m * k, &mut rng);
+            let bi = rand_i32(k * n, &mut rng);
+            let mut wi = vec![i32::MIN; m * n];
+            matmul_mk::<i32, MR_I32, NR_I32>(&mut wi, &ai, &bi, m, k, n);
+            for pg in geoms {
+                let mut got = vec![f32::NAN; m * n];
+                matmul_blocked::<f32, MR_F32, NR_F32>(&mut got, &a, &b, m, k, n, pg);
+                assert_eq!(got, want, "fp32 {m}x{k}x{n} under {pg:?}");
+                let mut gi = vec![i32::MIN; m * n];
+                matmul_blocked::<i32, MR_I32, NR_I32>(&mut gi, &ai, &bi, m, k, n, pg);
+                assert_eq!(gi, wi, "i32 {m}x{k}x{n} under {pg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_blocked_path_matches_naive_above_panel_bounds() {
+        // Shapes that overflow a panel bound route matmul_f32/i32
+        // through the blocked nest — the entry points must still be
+        // bit-identical to the naive oracle there.
+        let mut rng = XorShift64::new(0xB10C);
+        for &(m, k, n) in &[
+            (PANEL_MC + 7, 19, 33),       // m overflows MC
+            (9, PANEL_KC + 5, 12),        // k overflows KC
+            (6, 11, PANEL_NC + 3),        // n overflows NC
+            (PANEL_MC + 1, PANEL_KC + 1, 40), // two dimensions at once
+        ] {
+            let a = rand_f32(m * k, &mut rng);
+            let b = rand_f32(k * n, &mut rng);
+            let mut want = vec![f32::NAN; m * n];
+            let mut got = vec![f32::NAN; m * n];
+            matmul_naive_f32_into(&mut want, &a, &b, m, k, n);
+            matmul_f32(&mut got, &a, &b, m, k, n);
+            assert_eq!(got, want, "fp32 {m}x{k}x{n}");
+
+            let ai = rand_i32(m * k, &mut rng);
+            let bi = rand_i32(k * n, &mut rng);
+            let mut wi = vec![i32::MIN; m * n];
+            let mut gi = vec![i32::MAX; m * n];
+            matmul_naive_i32_into(&mut wi, &ai, &bi, m, k, n);
+            matmul_i32(&mut gi, &ai, &bi, m, k, n);
+            assert_eq!(gi, wi, "i32 {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
     fn zero_skip_semantics_match_exactly() {
         // The observable IEEE edge: a zero A value must be *skipped*
         // (matching the naive loop), not multiplied through — otherwise
@@ -367,6 +1109,19 @@ mod tests {
         matmul_naive_f32_into(&mut want, &a, &b, 1, 2, 1);
         assert_eq!(got, want);
         assert_eq!(got[0], 2.0, "the inf paired with a==0 is skipped in both kernels");
+        // And through the blocked nest: the packed copy preserves the
+        // exact zero, so the skip fires identically there.
+        let mut blocked = vec![f32::NAN; 1];
+        matmul_blocked::<f32, MR_F32, NR_F32>(
+            &mut blocked,
+            &a,
+            &b,
+            1,
+            2,
+            1,
+            PanelGeom { mc: 1, kc: 1, nc: 1 },
+        );
+        assert_eq!(blocked, want);
     }
 
     #[test]
@@ -379,6 +1134,10 @@ mod tests {
         let mut empty: Vec<f32> = Vec::new();
         matmul_f32(&mut empty, &[], &[1.0, 2.0], 0, 1, 2);
         matmul_f32(&mut empty, &[1.0, 2.0], &[], 2, 1, 0);
+        // The blocked nest handles the same degenerate shapes.
+        let mut c = vec![f32::NAN; 6];
+        matmul_blocked::<f32, MR_F32, NR_F32>(&mut c, &[], &[], 2, 0, 3, panel_geom(Precision::Fp32));
+        assert_eq!(c, vec![0.0; 6]);
     }
 
     #[test]
@@ -407,5 +1166,70 @@ mod tests {
     fn dispatch_geometry_per_precision() {
         assert_eq!(micro_geom(Precision::Fp32), MicroGeom { mr: MR_F32, nr: NR_F32 });
         assert_eq!(micro_geom(Precision::Int8), MicroGeom { mr: MR_I32, nr: NR_I32 });
+        assert_eq!(
+            panel_geom(Precision::Fp32),
+            PanelGeom { mc: PANEL_MC, kc: PANEL_KC, nc: PANEL_NC }
+        );
+        assert_eq!(
+            panel_geom(Precision::Int8),
+            PanelGeom { mc: PANEL_MC, kc: PANEL_KC, nc: PANEL_NC }
+        );
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_path_bit_identical_to_scalar() {
+        // The headline SIMD contract: not ULP-close — *bit-identical*.
+        // Lanes are independent output columns (no lane reduction), so
+        // the SIMD entries must reproduce the scalar kernels' bits
+        // exactly, over flat shapes, fringe shapes, and shapes that
+        // route through the blocked nest. On hosts without the ISA the
+        // SIMD entries fall back to the scalar blocks and the equality
+        // holds trivially; with it, the AVX2/NEON kernels are on trial.
+        let mut rng = XorShift64::new(0x51D0);
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (4, 8, 16),                 // exactly one full SIMD block
+            (7, 5, 19),                 // fringe rows and columns
+            (40, 33, 48),
+            (PANEL_MC + 3, 21, 37),     // blocked nest, m fringe
+            (10, PANEL_KC + 9, 24),     // blocked nest, k chunks
+        ];
+        for &(m, k, n) in &shapes {
+            let a = rand_f32(m * k, &mut rng);
+            let b = rand_f32(k * n, &mut rng);
+            let mut want = vec![f32::NAN; m * n];
+            let mut got = vec![f32::NAN; m * n];
+            matmul_naive_f32_into(&mut want, &a, &b, m, k, n);
+            simd::matmul_f32(&mut got, &a, &b, m, k, n);
+            assert_eq!(got, want, "fp32 simd {m}x{k}x{n}");
+
+            let ai = rand_i32(m * k, &mut rng);
+            let bi = rand_i32(k * n, &mut rng);
+            let mut wi = vec![i32::MIN; m * n];
+            let mut gi = vec![i32::MAX; m * n];
+            matmul_naive_i32_into(&mut wi, &ai, &bi, m, k, n);
+            simd::matmul_i32(&mut gi, &ai, &bi, m, k, n);
+            assert_eq!(gi, wi, "i32 simd {m}x{k}x{n}");
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_zero_skip_matches_scalar_exactly() {
+        // 0·inf must be skipped (scalar predicate) in the SIMD kernels
+        // too — a full 4×16 block with an inf column and zeros in A.
+        let (m, k, n) = (4usize, 2usize, 16usize);
+        let mut a = vec![1.0f32; m * k];
+        a[0] = 0.0; // row 0 skips kk = 0
+        let mut b = vec![2.0f32; k * n];
+        b[0] = f32::INFINITY; // kk = 0 row of B carries an inf
+        let mut want = vec![f32::NAN; m * n];
+        let mut got = vec![f32::NAN; m * n];
+        matmul_naive_f32_into(&mut want, &a, &b, m, k, n);
+        simd::matmul_f32(&mut got, &a, &b, m, k, n);
+        assert_eq!(got, want);
+        assert!(got[0].is_finite(), "skipped 0·inf must not poison the lane");
+        assert!(want[n].is_infinite(), "rows without the zero do see the inf");
     }
 }

@@ -38,8 +38,11 @@
 //! padded and tiled to their precision's native size ([`tiler`]),
 //! packed once into contiguous tile-major arenas ([`pool`]: one
 //! allocation per matrix, extraction optionally fanned out across
-//! `ServeConfig::pack_workers` threads, B optionally served from the
-//! byte-budgeted packed-weight cache), and streamed through a
+//! `ServeConfig::pack_workers` — by default onto the scheduler's
+//! persistent [`workpool`] of long-lived pack threads, or legacy
+//! per-call scoped threads with `pack_persistent = false` — B
+//! optionally served from the byte-budgeted packed-weight cache), and
+//! streamed through a
 //! pipelined in-flight window of tagged tile jobs ([`scheduler`])
 //! executed by a pool of device worker threads ([`device`]) — the
 //! software stand-in for the VCK190's AIE array. Tile output and
@@ -150,6 +153,7 @@ pub mod shard;
 pub mod stats;
 pub mod tiler;
 pub mod trace;
+pub mod workpool;
 
 // The canonical re-export surface of the serving layer. These are the
 // *only* re-exports (the sibling modules no longer duplicate them);
@@ -165,10 +169,13 @@ pub use fault::{
     TileRetriesExhausted, TileTimedOut,
 };
 pub use handle::{Cancelled, RequestHandle};
-pub use microkernel::{micro_geom, MicroGeom, MR_F32, MR_I32, NR_F32, NR_I32};
+pub use microkernel::{
+    matmul_blocked, micro_geom, panel_geom, MicroGeom, PanelGeom, MR_F32, MR_I32, NR_F32, NR_I32,
+    PANEL_KC, PANEL_MC, PANEL_NC,
+};
 pub use policy::{Fifo, FlightMeta, Priority, SchedPolicy, TileCosts, WeightedFair};
 pub use pool::{
-    BufferPool, FreeList, PackCounters, TilePool, TileRef, WeightCache, FREE_LIST_CAP,
+    BufferPool, FreeList, PackCounters, PackTiming, TilePool, TileRef, WeightCache, FREE_LIST_CAP,
     PAR_PACK_MIN_TILES,
 };
 pub use server::{MatMulServer, ServerStats};
@@ -176,3 +183,4 @@ pub use stats::{
     ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, WorkerHealth,
 };
 pub use tiler::Tiler;
+pub use workpool::WorkPool;

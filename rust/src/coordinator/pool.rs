@@ -14,8 +14,12 @@
 //!   workers. Since PR 5 extraction can fan out across threads
 //!   ([`TilePool::pack_with`], `ServeConfig::pack_workers`) — bit-
 //!   identical to the serial pack, so large requests stop serializing
-//!   on one core before the pipeline starts ([`PackCounters`] report
-//!   the time spent).
+//!   on one core before the pipeline starts. Since PR 8 the fan-out
+//!   runs on the scheduler's persistent
+//!   [`WorkPool`](crate::coordinator::workpool::WorkPool) by default
+//!   ([`TilePool::pack_timed`]), and [`PackCounters`] split the time
+//!   spent into the extraction critical path and the fan-out
+//!   orchestration overhead ([`PackTiming`]).
 //! * [`WeightCache`] — a byte-budgeted LRU of packed **B** (weight)
 //!   pools, keyed by [`WeightKey`]: an explicit caller identity
 //!   (`MatMulRequest::with_weight_id`) or a content fingerprint
@@ -42,10 +46,12 @@
 
 use crate::arch::precision::Precision;
 use crate::coordinator::tiler::Tiler;
+use crate::coordinator::workpool::WorkPool;
 use rustc_hash::FxHashMap;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// A packed tile-major matrix: every zero-padded `bh×bw` block of a
 /// `rows×cols` matrix, stored back to back in **one** contiguous
@@ -145,6 +151,85 @@ impl<T: Copy + Default> TilePool<T> {
         TilePool { data: data.into(), tile_len }
     }
 
+    /// [`TilePool::pack_with`] with a wall-time split and an optional
+    /// **persistent** worker pool: returns the packed pool plus a
+    /// [`PackTiming`] separating the extraction critical path
+    /// (`busiest`, the longest single chunk) from the fan-out
+    /// orchestration overhead (`spawn_overhead()`). With
+    /// `work_pool: Some(_)` the chunks run on the scheduler's
+    /// long-lived [`WorkPool`] threads (one chunk stays inline on the
+    /// caller); with `None` they run on per-call scoped threads — the
+    /// pre-PR 8 behavior, kept as the A/B baseline for
+    /// `benches/e2e_serving.rs`. Every mode is **bit-identical** to
+    /// the serial [`TilePool::pack`]: the same deterministic
+    /// extraction writes every tile exactly once, whichever thread
+    /// runs it.
+    pub fn pack_timed(
+        src: &[T],
+        rows: usize,
+        cols: usize,
+        bh: usize,
+        bw: usize,
+        workers: usize,
+        work_pool: Option<&WorkPool>,
+    ) -> (Self, PackTiming)
+    where
+        T: Send + Sync,
+    {
+        let t0 = Instant::now();
+        assert_eq!(src.len(), rows * cols, "matrix shape mismatch");
+        let gr = rows.div_ceil(bh);
+        let gc = cols.div_ceil(bw);
+        let tiles = gr * gc;
+        let fanout = pack_fanout(workers, tiles);
+        if fanout <= 1 {
+            let pool = Self::pack(src, rows, cols, bh, bw);
+            let total = t0.elapsed();
+            // Serial: the whole pack *is* the critical path.
+            return (pool, PackTiming { total, busiest: total });
+        }
+        let tile_len = bh * bw;
+        let mut data = vec![T::default(); tiles * tile_len];
+        let chunk_nanos: Vec<AtomicU64> = (0..fanout).map(|_| AtomicU64::new(0)).collect();
+        {
+            let base = tiles / fanout;
+            let extra = tiles % fanout;
+            let mut rest = data.as_mut_slice();
+            let mut first_tile = 0usize;
+            let mut tasks = Vec::with_capacity(fanout);
+            for (w, slot) in chunk_nanos.iter().enumerate() {
+                let count = base + usize::from(w < extra);
+                let (chunk, tail) = rest.split_at_mut(count * tile_len);
+                rest = tail;
+                let start = first_tile;
+                first_tile += count;
+                tasks.push(move || {
+                    let c0 = Instant::now();
+                    for (i, dst) in chunk.chunks_mut(tile_len).enumerate() {
+                        let t = start + i;
+                        Tiler::extract_block_into(dst, src, rows, cols, t / gc, t % gc, bh, bw);
+                    }
+                    slot.store(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+            }
+            match work_pool {
+                Some(pool) => pool.run_scoped(tasks),
+                None => {
+                    std::thread::scope(|s| {
+                        for task in tasks {
+                            s.spawn(task);
+                        }
+                    });
+                }
+            }
+        }
+        let total = t0.elapsed();
+        let busiest_nanos =
+            chunk_nanos.iter().map(|a| a.load(Ordering::Relaxed)).max().unwrap_or(0);
+        let busiest = Duration::from_nanos(busiest_nanos).min(total);
+        (TilePool { data: data.into(), tile_len }, PackTiming { total, busiest })
+    }
+
     /// A single-tile pool wrapping an already-extracted block (the
     /// synchronous `execute_tile` convenience path and tests).
     pub fn from_tile(tile: Vec<T>) -> Self {
@@ -232,27 +317,63 @@ pub fn pack_fanout(workers: usize, tiles: usize) -> usize {
     }
 }
 
+/// Wall-time split of one [`TilePool::pack_timed`] call.
+///
+/// `busiest` is the extraction critical path — the longest time any
+/// single chunk spent copying tiles (serial packs have exactly one
+/// chunk, so there `busiest == total`). Everything else in `total` is
+/// fan-out orchestration: building tasks, dispatching them to threads,
+/// and waiting for the join — the overhead the persistent [`WorkPool`]
+/// exists to shrink, surfaced as `PackStats.pack_spawn_s`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PackTiming {
+    /// Wall time of the whole pack call.
+    pub total: Duration,
+    /// Longest single extraction chunk (the copy critical path).
+    pub busiest: Duration,
+}
+
+impl PackTiming {
+    /// Time spent orchestrating the fan-out rather than copying:
+    /// `total − busiest` (saturating — a serial pack reports zero).
+    pub fn spawn_overhead(&self) -> Duration {
+        self.total.saturating_sub(self.busiest)
+    }
+}
+
 /// Shared counters of the request-packing stage, published for
 /// [`ServerStats::pack`](crate::coordinator::server::ServerStats)
 /// snapshots taken from client threads: how many operand matrices were
 /// packed into arenas, how many of those packs fanned out across
-/// threads, and the wall time the scheduler spent packing (the host
-/// cost the weight cache and `pack_workers` both attack).
+/// threads, and the wall time the scheduler spent packing — split into
+/// the extraction critical path (`nanos`) and the fan-out spawn/join
+/// overhead (`spawn_nanos`), the host costs the weight cache,
+/// `pack_workers`, and the persistent [`WorkPool`] respectively
+/// attack.
 #[derive(Debug, Default)]
 pub struct PackCounters {
     pub matrices: AtomicU64,
     pub parallel: AtomicU64,
     pub nanos: AtomicU64,
+    pub spawn_nanos: AtomicU64,
 }
 
 impl PackCounters {
     /// Record one request's packing work: `matrices` arenas built, of
-    /// which `parallel` used a multi-thread fan-out, in `elapsed` wall
-    /// time.
-    pub fn record(&self, matrices: u64, parallel: u64, elapsed: std::time::Duration) {
+    /// which `parallel` used a multi-thread fan-out, spending `elapsed`
+    /// on the extraction critical path and `spawn` on fan-out
+    /// orchestration (see [`PackTiming`]).
+    pub fn record(
+        &self,
+        matrices: u64,
+        parallel: u64,
+        elapsed: std::time::Duration,
+        spawn: std::time::Duration,
+    ) {
         self.matrices.fetch_add(matrices, Ordering::Relaxed);
         self.parallel.fetch_add(parallel, Ordering::Relaxed);
         self.nanos.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.spawn_nanos.fetch_add(spawn.as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -806,6 +927,46 @@ mod tests {
     }
 
     #[test]
+    fn pack_timed_bit_identical_across_modes() {
+        // The timed path must produce the same bytes as the serial
+        // pack in every mode: serial (fanout 1), legacy scoped
+        // threads, and the persistent work pool.
+        let work_pool = WorkPool::new(3, 0);
+        let mut rng = XorShift64::new(0x7137ED);
+        for _ in 0..8 {
+            let rows = rng.gen_range(1, 60) as usize;
+            let cols = rng.gen_range(1, 60) as usize;
+            let bh = rng.gen_range(1, 9) as usize;
+            let bw = rng.gen_range(1, 9) as usize;
+            let src: Vec<f32> = (0..rows * cols)
+                .map(|_| rng.gen_range_f64(-1.0, 1.0) as f32)
+                .collect();
+            let serial = TilePool::pack(&src, rows, cols, bh, bw);
+            let modes: [(usize, Option<&WorkPool>); 3] =
+                [(1, None), (4, None), (4, Some(&work_pool))];
+            for (workers, pool) in modes {
+                let (timed, timing) = TilePool::pack_timed(&src, rows, cols, bh, bw, workers, pool);
+                assert_eq!(timed.tiles(), serial.tiles());
+                for t in 0..serial.tiles() {
+                    assert_eq!(
+                        timed.tile(t),
+                        serial.tile(t),
+                        "{rows}x{cols} in {bh}x{bw}, workers {workers}, tile {t}"
+                    );
+                }
+                assert!(timing.total >= timing.busiest, "busiest is clamped to total");
+                if pack_fanout(workers, serial.tiles()) <= 1 {
+                    assert_eq!(
+                        timing.spawn_overhead(),
+                        Duration::ZERO,
+                        "serial packs report zero fan-out overhead"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn pack_fanout_thresholds() {
         // Tiny grids stay serial (spawn cost > copy work); otherwise
         // the fan-out is capped by both knob and tile count.
@@ -819,11 +980,12 @@ mod tests {
     #[test]
     fn pack_counters_accumulate() {
         let c = PackCounters::default();
-        c.record(2, 1, std::time::Duration::from_micros(5));
-        c.record(1, 0, std::time::Duration::from_micros(3));
+        c.record(2, 1, std::time::Duration::from_micros(5), std::time::Duration::from_micros(2));
+        c.record(1, 0, std::time::Duration::from_micros(3), std::time::Duration::ZERO);
         assert_eq!(c.matrices.load(Ordering::Relaxed), 3);
         assert_eq!(c.parallel.load(Ordering::Relaxed), 1);
         assert_eq!(c.nanos.load(Ordering::Relaxed), 8_000);
+        assert_eq!(c.spawn_nanos.load(Ordering::Relaxed), 2_000);
     }
 
     #[test]

@@ -80,6 +80,7 @@ use crate::coordinator::pool::{
 };
 use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
+use crate::coordinator::workpool::WorkPool;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::anyhow;
 use rustc_hash::{FxHashMap, FxHashSet};
@@ -170,13 +171,18 @@ impl<T: Elem + PoolElem> Pools<T> {
     /// tile-major arenas now — one extract pass per block and one
     /// allocation per matrix, total, overlapping whatever is already in
     /// flight, with extraction fanned out across `pack_workers` threads
-    /// for large grids ([`TilePool::pack_with`] — bit-identical to the
-    /// serial pack for every worker count). The B (weight) pool goes
+    /// for large grids ([`TilePool::pack_timed`] — bit-identical to the
+    /// serial pack for every worker count) — onto the scheduler's
+    /// persistent [`WorkPool`] when one is configured
+    /// (`pack_persistent`, the default), or legacy per-call scoped
+    /// threads otherwise. The B (weight) pool goes
     /// through the packed-weight cache: a hit skips extraction and
     /// packing entirely, and since packing is deterministic the cached
     /// pool is byte-identical to what packing would have produced.
     /// `counters` accumulate the packing wall time for
-    /// `ServerStats::pack`.
+    /// `ServerStats::pack`, split into extraction critical path and
+    /// fan-out orchestration overhead
+    /// ([`PackTiming`](crate::coordinator::pool::PackTiming)).
     fn pack(
         &mut self,
         m: usize,
@@ -186,19 +192,22 @@ impl<T: Elem + PoolElem> Pools<T> {
         weight_id: Option<u64>,
         cache: &mut WeightCache,
         pack_workers: usize,
+        work_pool: Option<&WorkPool>,
         counters: &PackCounters,
     ) {
         if let Some((a, b)) = self.raw.take() {
             let mut built = 0u64;
             let mut parallel = 0u64;
             let mut spent = Duration::ZERO;
+            let mut spawn = Duration::ZERO;
             // Times each arena build alone: fingerprint hashing, cache
             // lookups and the debug collision guard below never enter
-            // `pack_time_s`.
+            // `pack_time_s` / `pack_spawn_s`.
             let mut timed_pack = |src: &[T], rows: usize, cols: usize, bh: usize, bw: usize| {
-                let t0 = Instant::now();
-                let pool = TilePool::pack_with(src, rows, cols, bh, bw, pack_workers);
-                spent += t0.elapsed();
+                let (pool, timing) =
+                    TilePool::pack_timed(src, rows, cols, bh, bw, pack_workers, work_pool);
+                spent += timing.busiest;
+                spawn += timing.spawn_overhead();
                 built += 1;
                 parallel += u64::from(pack_fanout(pack_workers, pool.tiles()) > 1);
                 pool
@@ -232,7 +241,7 @@ impl<T: Elem + PoolElem> Pools<T> {
             } else {
                 timed_pack(&b, k, n, t.nk, t.nn)
             };
-            counters.record(built, parallel, spent);
+            counters.record(built, parallel, spent, spawn);
             self.packed = Some((a_pool, b_pool));
         }
     }
@@ -404,6 +413,12 @@ pub(crate) struct Scheduler {
     /// Fan-out width for operand arena extraction
     /// (`ServeConfig::pack_workers`; 1 = serial, today's behavior).
     pack_workers: usize,
+    /// Persistent pack workers (`ServeConfig::pack_persistent`, the
+    /// default when `pack_workers > 1`); `None` falls back to per-call
+    /// scoped threads. Owned here so the pool's threads join when the
+    /// scheduler thread winds down — shard teardown leaves no pack
+    /// threads behind.
+    work_pool: Option<WorkPool>,
     /// Packing-stage counters shared with client-side stats snapshots.
     pack_counters: Arc<PackCounters>,
     /// Tile-buffer free-lists shared with the device workers.
@@ -437,6 +452,7 @@ impl Scheduler {
         params: PolicyParams,
         weight_cache: WeightCache,
         pack_workers: usize,
+        work_pool: Option<WorkPool>,
         pack_counters: Arc<PackCounters>,
         robust: Robustness,
     ) -> Self {
@@ -457,6 +473,7 @@ impl Scheduler {
             counters,
             weight_cache,
             pack_workers: pack_workers.max(1),
+            work_pool,
             pack_counters,
             bufs,
             flights: FxHashMap::default(),
@@ -756,6 +773,7 @@ impl Scheduler {
                     weight_id,
                     &mut self.weight_cache,
                     self.pack_workers,
+                    self.work_pool.as_ref(),
                     &self.pack_counters,
                 ),
                 FlightData::I32(p) => p.pack(
@@ -766,6 +784,7 @@ impl Scheduler {
                     weight_id,
                     &mut self.weight_cache,
                     self.pack_workers,
+                    self.work_pool.as_ref(),
                     &self.pack_counters,
                 ),
             }

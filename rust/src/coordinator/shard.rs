@@ -64,6 +64,7 @@ use crate::coordinator::stats::{
     FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, StatsAgg, WindowOcc,
 };
 use crate::coordinator::tiler::Tiler;
+use crate::coordinator::workpool::WorkPool;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -182,6 +183,13 @@ impl Shard {
             deadline_i32: tile_deadline(info_int8.period_cycles),
             quarantine_after: cfg.quarantine_after,
         };
+        // Persistent pack workers (sized one below the fan-out width:
+        // `run_scoped` keeps one chunk inline on the scheduler thread).
+        // Owned by the scheduler, so its drop joins them — `None` (knob
+        // off, or serial packing) keeps the legacy per-call scoped
+        // threads.
+        let work_pool = (cfg.pack_persistent && cfg.pack_workers > 1)
+            .then(|| WorkPool::new(cfg.pack_workers - 1, index));
         let sched = Scheduler::new(
             device,
             Tiler::new(info_f32.native),
@@ -193,6 +201,7 @@ impl Shard {
             params,
             weight_cache,
             cfg.pack_workers,
+            work_pool,
             Arc::clone(&pack_counters),
             robust,
         );
@@ -290,6 +299,7 @@ impl Shard {
             matrices_packed: self.pack_counters.matrices.load(Ordering::Relaxed),
             parallel_packs: self.pack_counters.parallel.load(Ordering::Relaxed),
             pack_time_s: self.pack_counters.nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            pack_spawn_s: self.pack_counters.spawn_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
         };
         let fc = &self.fault_counters;
         let faults = FaultStats {

@@ -96,21 +96,33 @@ impl MemPlaneStats {
 /// extracting operand matrices into tile-major arenas, and how often
 /// the extraction fanned out across pack workers
 /// (`ServeConfig::pack_workers` — see
-/// [`crate::coordinator::pool::TilePool::pack_with`]). `pack_time_s`
-/// is the wall time of the arena builds as observed on the scheduler
-/// thread — parallel fan-outs *shrink* it, so comparing it across
-/// `pack_workers` settings measures the fan-out win directly. A
-/// weight-cache hit skips the B build (only the request's A build is
-/// counted); fingerprint hashing and cache lookups are never charged
-/// here.
+/// [`crate::coordinator::pool::TilePool::pack_timed`]). Since PR 8 the
+/// time is split along the
+/// [`PackTiming`](crate::coordinator::pool::PackTiming) seam:
+/// `pack_time_s` is the extraction critical path (the busiest chunk of
+/// each arena build — parallel fan-outs *shrink* it, so comparing it
+/// across `pack_workers` settings measures the fan-out win directly),
+/// while `pack_spawn_s` is the fan-out orchestration overhead —
+/// task construction, dispatch, and join. The persistent
+/// [`WorkPool`](crate::coordinator::workpool::WorkPool)
+/// (`ServeConfig::pack_persistent`) attacks `pack_spawn_s`
+/// specifically: comparing it against the legacy per-call scoped
+/// threads (`pack_persistent = false`) is the A/B in
+/// `benches/e2e_serving.rs`. A weight-cache hit skips the B build
+/// (only the request's A build is counted); fingerprint hashing and
+/// cache lookups are never charged here.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PackStats {
     /// Operand matrices packed into arenas (A + uncached B per request).
     pub matrices_packed: u64,
     /// Packs that fanned out across more than one pack worker.
     pub parallel_packs: u64,
-    /// Wall time spent in arena builds on the scheduler thread, seconds.
+    /// Extraction-critical-path seconds spent in arena builds (serial
+    /// builds: the whole build).
     pub pack_time_s: f64,
+    /// Fan-out orchestration overhead, seconds: spawn/dispatch/join
+    /// around the extraction chunks (zero for serial builds).
+    pub pack_spawn_s: f64,
 }
 
 impl PackStats {
@@ -122,6 +134,7 @@ impl PackStats {
         self.matrices_packed += other.matrices_packed;
         self.parallel_packs += other.parallel_packs;
         self.pack_time_s += other.pack_time_s;
+        self.pack_spawn_s += other.pack_spawn_s;
     }
 }
 
@@ -652,10 +665,21 @@ mod tests {
         assert_eq!(m.weight_cache_hits, 5);
         assert_eq!(m.tile_buffers_free, 5);
 
-        let mut p = PackStats { matrices_packed: 2, pack_time_s: 0.5, ..Default::default() };
-        p.absorb(&PackStats { matrices_packed: 1, pack_time_s: 0.25, ..Default::default() });
+        let mut p = PackStats {
+            matrices_packed: 2,
+            pack_time_s: 0.5,
+            pack_spawn_s: 0.125,
+            ..Default::default()
+        };
+        p.absorb(&PackStats {
+            matrices_packed: 1,
+            pack_time_s: 0.25,
+            pack_spawn_s: 0.0625,
+            ..Default::default()
+        });
         assert_eq!(p.matrices_packed, 3);
         assert!((p.pack_time_s - 0.75).abs() < 1e-12);
+        assert!((p.pack_spawn_s - 0.1875).abs() < 1e-12);
 
         let mut f = FaultStats { retries: 2, injected_errors: 1, ..Default::default() };
         f.absorb(&FaultStats { retries: 3, injected_panics: 2, ..Default::default() });

@@ -1,0 +1,329 @@
+//! Persistent pack/compute worker pool — long-lived threads replacing
+//! the per-call scoped-thread spawn of parallel operand packing.
+//!
+//! # Why this layer exists
+//!
+//! Since PR 5, `TilePool::pack_with` fanned arena extraction out with
+//! `std::thread::scope`, spawning and joining `pack_workers − 1` OS
+//! threads *per packed matrix*. The spawn/join cost is pure overhead
+//! on the packing critical path (now measured separately as
+//! `PackStats.pack_spawn_s`), and it grows with request rate — the
+//! opposite of how a serving engine should amortize. A [`WorkPool`] is
+//! the fix: the scheduler owns one pool of long-lived workers per
+//! shard (threads named `maxeva-pack-{shard}-{index}`), packing tasks
+//! are fed over a channel, and a per-call latch preserves the scoped
+//! semantics callers rely on.
+//!
+//! # Scoped semantics over 'static workers
+//!
+//! [`WorkPool::run_scoped`] accepts non-`'static` closures — tasks
+//! borrow the operand source and disjoint `&mut` destination chunks of
+//! the arena being packed, exactly like the scoped-thread code it
+//! replaces. That is sound because the call **does not return until
+//! every task has arrived at its completion latch**: one task runs
+//! inline on the caller (so `pack_workers = 1` never touches a second
+//! thread), the rest are boxed, lifetime-erased, and dispatched to the
+//! workers. Each dispatched task arrives at the latch via an RAII
+//! guard that fires even if the task panics (workers run tasks under
+//! `catch_unwind`), and the caller waits on the latch even if *its*
+//! inline task unwinds — so the borrowed environment can never be
+//! freed while a worker still holds a reference into it. A dispatched
+//! panic is re-raised on the caller after the latch clears, matching
+//! `std::thread::scope`'s propagation; the pool itself survives and
+//! keeps serving later calls.
+//!
+//! # Lifecycle
+//!
+//! Dropping the pool closes the channel and joins every worker —
+//! [`crate::coordinator::scheduler`] owns its pool, so shard teardown
+//! (and `MatMulServer` drop) leaves no pack threads behind; pinned by
+//! the leak probe in `tests/pack_pool_leak.rs`. `ServeConfig` selects
+//! between this pool (`pack_persistent = true`, the default) and the
+//! legacy scoped-thread fan-out (`false`, kept as the A/B baseline for
+//! `benches/e2e_serving.rs`).
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased packing task (see the module docs for why the
+/// `'static` here is never actually relied on).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one `run_scoped` call: counts dispatched tasks
+/// down to zero and records whether any of them panicked.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch { remaining: Mutex::new(count), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn arrive(&self) {
+        let mut left = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
+        while *left > 0 {
+            left = self.cv.wait(left).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Arrives at the latch on drop — the task's completion signal fires
+/// whether it returned or unwound.
+struct ArriveGuard(Arc<Latch>);
+
+impl Drop for ArriveGuard {
+    fn drop(&mut self) {
+        self.0.arrive();
+    }
+}
+
+/// Blocks until the latch clears on drop — keeps the caller's stack
+/// frame (and every borrow the dispatched tasks hold into it) alive
+/// through an unwind of the caller's own inline task.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+struct Inner {
+    tx: Sender<Job>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// A pool of long-lived worker threads executing borrowed task batches
+/// with scoped-join semantics (module docs). `new(0, _)` builds a
+/// threadless pool whose `run_scoped` runs everything inline — the
+/// serial-packing configuration costs no threads at all.
+pub struct WorkPool {
+    inner: Option<Inner>,
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only around `recv` — tasks run unlocked so the
+        // pool actually executes in parallel.
+        let job = {
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            // Channel closed: the pool is being dropped.
+            Err(_) => return,
+        }
+    }
+}
+
+impl WorkPool {
+    /// Spawn `threads` long-lived workers (named
+    /// `maxeva-pack-{shard}-{index}`). Callers size this one *below*
+    /// their fan-out width: `run_scoped` runs one task inline, so a
+    /// fan-out of W needs W − 1 pool threads for full concurrency.
+    pub fn new(threads: usize, shard: usize) -> Self {
+        if threads == 0 {
+            return WorkPool { inner: None };
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("maxeva-pack-{shard}-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn pack worker thread")
+            })
+            .collect();
+        WorkPool { inner: Some(Inner { tx, handles }) }
+    }
+
+    /// Worker threads owned by the pool (`0` = everything inline).
+    pub fn threads(&self) -> usize {
+        self.inner.as_ref().map_or(0, |i| i.handles.len())
+    }
+
+    /// Run a batch of borrowing tasks to completion: the last task
+    /// inline on the caller, the rest on the pool workers. Returns
+    /// only after **all** tasks finished; panics (on the caller) if
+    /// any task panicked — the scoped-thread contract, without the
+    /// per-call spawn/join. With no pool threads, or a single task,
+    /// every task runs inline in order.
+    pub fn run_scoped<'env, F>(&self, mut tasks: Vec<F>)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let Some(last) = tasks.pop() else { return };
+        let inner = match &self.inner {
+            Some(inner) if !tasks.is_empty() => inner,
+            _ => {
+                for task in tasks {
+                    task();
+                }
+                last();
+                return;
+            }
+        };
+        let latch = Arc::new(Latch::new(tasks.len()));
+        for task in tasks {
+            let guard = ArriveGuard(Arc::clone(&latch));
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                if panic::catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    guard.0.panicked.store(true, Ordering::Relaxed);
+                }
+            });
+            // Safety: the job may borrow `'env` state (the operand
+            // source and a disjoint destination chunk). This call does
+            // not return before every job has arrived at the latch —
+            // arrival is an RAII drop that fires on completion *and*
+            // on unwind, and the caller waits through its own unwind
+            // via WaitGuard below — so no job can outlive the borrows
+            // it captured. The erased 'static is never relied on.
+            let job: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job) };
+            if let Err(mpsc::SendError(job)) = inner.tx.send(job) {
+                // Workers already gone (teardown race): run inline —
+                // the latch still gets its arrival from the guard.
+                job();
+            }
+        }
+        {
+            let wait = WaitGuard(&latch);
+            last();
+            drop(wait);
+        }
+        if latch.panicked.swap(false, Ordering::Relaxed) {
+            panic!("a task dispatched to the work pool panicked");
+        }
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            // Closing the channel ends every worker's recv loop.
+            drop(inner.tx);
+            for handle in inner.handles {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn zero_threads_runs_everything_inline() {
+        let pool = WorkPool::new(0, 0);
+        assert_eq!(pool.threads(), 0);
+        let mut hits = vec![false; 3];
+        let mut tasks = Vec::new();
+        for h in hits.iter_mut() {
+            tasks.push(move || *h = true);
+        }
+        pool.run_scoped(tasks);
+        assert!(hits.iter().all(|&h| h), "inline pool must run every task");
+        // An empty batch is a no-op, not a hang.
+        pool.run_scoped(Vec::<fn()>::new());
+        WorkPool::new(2, 0).run_scoped(Vec::<fn()>::new());
+    }
+
+    #[test]
+    fn scoped_borrows_fill_disjoint_chunks() {
+        // The pack_with shape: tasks borrow disjoint &mut chunks of a
+        // caller-owned buffer, run_scoped joins before they dangle.
+        let pool = WorkPool::new(3, 9);
+        let mut data = vec![0u32; 64];
+        let mut tasks = Vec::new();
+        for (idx, chunk) in data.chunks_mut(16).enumerate() {
+            tasks.push(move || {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (idx * 16 + j) as u32;
+                }
+            });
+        }
+        pool.run_scoped(tasks);
+        let want: Vec<u32> = (0..64).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn single_task_batches_never_need_the_pool() {
+        let pool = WorkPool::new(2, 1);
+        let ran = AtomicUsize::new(0);
+        pool.run_scoped(vec![|| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        }]);
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkPool::new(2, 7);
+        let hit = AtomicUsize::new(0);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut tasks = Vec::new();
+            for i in 0..4 {
+                let hit = &hit;
+                tasks.push(move || {
+                    if i == 1 {
+                        panic!("injected pack task failure");
+                    }
+                    hit.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.run_scoped(tasks);
+        }));
+        assert!(result.is_err(), "a dispatched panic must reach the caller");
+        // The panic is contained to that call: the pool keeps working.
+        let n = AtomicUsize::new(0);
+        let mut tasks = Vec::new();
+        for _ in 0..6 {
+            let n = &n;
+            tasks.push(move || {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.run_scoped(tasks);
+        assert_eq!(n.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        // Drop must close the channel and join; if it wedged, the test
+        // harness would hang — and the threads() accessor documents the
+        // pool actually had workers to join.
+        let pool = WorkPool::new(4, 3);
+        assert_eq!(pool.threads(), 4);
+        let total = AtomicUsize::new(0);
+        let mut tasks = Vec::new();
+        for _ in 0..16 {
+            let total = &total;
+            tasks.push(move || {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.run_scoped(tasks);
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+        drop(pool);
+    }
+}

@@ -12,7 +12,13 @@
 //! * `pack_workers` is a pure latency knob: outputs are bit-identical
 //!   across worker counts, and packing stats are populated;
 //! * the zero-allocation steady state (PR 4) survives the new kernels
-//!   and parallel packing.
+//!   and parallel packing;
+//! * (PR 8) the GotoBLAS-style blocked loop nest is bit-identical to
+//!   the flat kernel over exhaustive fringe shapes with panel bounds
+//!   that do not divide the problem; the persistent pack pool is
+//!   bit-identical to the legacy scoped-thread fan-out through the
+//!   whole server; and dropping a server leaves no pack worker
+//!   threads behind.
 
 // Closed-batch coverage here intentionally exercises the deprecated
 // `run_batch` replay wrappers (`coordinator::compat`).
@@ -21,7 +27,8 @@
 use maxeva::arch::precision::Precision;
 use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
 use maxeva::coordinator::microkernel::{
-    matmul_f32, matmul_i32, matmul_naive_f32_into, matmul_naive_i32_into, MR_F32, NR_F32,
+    matmul_blocked, matmul_f32, matmul_i32, matmul_mk, matmul_naive_f32_into,
+    matmul_naive_i32_into, PanelGeom, MR_F32, MR_I32, NR_F32, NR_I32,
 };
 use maxeva::coordinator::server::MatMulServer;
 use maxeva::coordinator::tiler::Tiler;
@@ -102,6 +109,49 @@ fn microkernel_bit_identical_to_naive_across_fringe_shapes() {
                 matmul_i32(&mut gi, &ai, &bi, m, k, n);
                 assert_eq!(gi, wi, "i32 {m}x{k}x{n}");
             }
+        }
+    }
+}
+
+#[test]
+fn blocked_nest_bit_identical_to_flat_over_fringe_panels() {
+    // The cache-blocked loop nest (packed MC×KC / KC×NC panels) is a
+    // pure scheduling change: for panel bounds that do NOT divide the
+    // problem — fringe panels on every loop level — both precisions
+    // must match the flat single-panel kernel bit-for-bit. fp32
+    // equality is exact (==): the pc-outermost nest preserves each
+    // output element's ascending-k accumulation order, so this is the
+    // reduction-order contract, not a tolerance check.
+    let mut rng = XorShift64::new(0xB10C);
+    let panel_geoms = [
+        PanelGeom { mc: 1, kc: 1, nc: 1 },   // degenerate: every loop fringes
+        PanelGeom { mc: 5, kc: 3, nc: 7 },   // coprime to everything below
+        PanelGeom { mc: 8, kc: 16, nc: 32 },
+    ];
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (4, 7, 9),
+        (11, 6, 33),
+        (13, 17, 40),
+        (21, 33, 35),
+    ];
+    for pg in panel_geoms {
+        for (m, k, n) in shapes {
+            let a = rand_f32(m * k, &mut rng);
+            let b = rand_f32(k * n, &mut rng);
+            let mut want = vec![f32::NAN; m * n];
+            let mut got = vec![f32::NAN; m * n];
+            matmul_mk::<f32, MR_F32, NR_F32>(&mut want, &a, &b, m, k, n);
+            matmul_blocked::<f32, MR_F32, NR_F32>(&mut got, &a, &b, m, k, n, pg);
+            assert_eq!(got, want, "fp32 {m}x{k}x{n} under {pg:?}");
+
+            let ai = rand_i32(m * k, &mut rng);
+            let bi = rand_i32(k * n, &mut rng);
+            let mut wi = vec![i32::MAX; m * n];
+            let mut gi = vec![i32::MIN; m * n];
+            matmul_mk::<i32, MR_I32, NR_I32>(&mut wi, &ai, &bi, m, k, n);
+            matmul_blocked::<i32, MR_I32, NR_I32>(&mut gi, &ai, &bi, m, k, n, pg);
+            assert_eq!(gi, wi, "i32 {m}x{k}x{n} under {pg:?}");
         }
     }
 }
@@ -192,6 +242,40 @@ fn outputs_bit_identical_across_pack_workers() {
         "same batch packs the same matrices"
     );
     assert!(pack1.pack_time_s > 0.0 && pack4.pack_time_s > 0.0);
+}
+
+#[test]
+fn persistent_pool_outputs_bit_identical_to_scoped_and_serial() {
+    // pack_persistent is a pure overhead knob: the same mixed batch
+    // served with the persistent WorkPool, the legacy scoped-thread
+    // fan-out, and serial packing must produce identical bytes — and
+    // both parallel legs must have genuinely fanned out.
+    let reqs: Vec<MatMulRequest> = vec![
+        MatMulRequest::f32(0, 40, 96, 40),
+        MatMulRequest::int8(1, 24, 128, 32),
+        MatMulRequest::f32(2, 7, 5, 3),
+        MatMulRequest::f32(3, 64, 160, 48),
+    ];
+    let batch = materialize_mixed(&reqs, 0xFA7E);
+    let serve = |pack_workers: usize, persistent: bool| {
+        let mut cfg = small_cfg(2, 4, pack_workers);
+        cfg.pack_persistent = persistent;
+        let mut server = MatMulServer::start(&cfg).unwrap();
+        let outs = server.run_batch_mixed(batch.clone()).unwrap();
+        let pack = server.stats().pack;
+        server.shutdown();
+        (outs, pack)
+    };
+    let (serial, _) = serve(1, true);
+    let (scoped, pack_scoped) = serve(4, false);
+    let (persistent, pack_persistent) = serve(4, true);
+    assert_eq!(serial, scoped, "scoped-thread fan-out must never change outputs");
+    assert_eq!(serial, persistent, "the persistent pool must never change outputs");
+    assert!(pack_scoped.parallel_packs > 0, "scoped leg must fan out: {pack_scoped:?}");
+    assert!(
+        pack_persistent.parallel_packs > 0,
+        "persistent leg must fan out: {pack_persistent:?}"
+    );
 }
 
 #[test]

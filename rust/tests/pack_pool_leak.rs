@@ -1,0 +1,68 @@
+//! Leak probe for the persistent pack pool (PR 8): dropping a
+//! `MatMulServer` must join every thread it spawned — scheduler,
+//! forwarder, device workers, and the per-shard `maxeva-pack-*`
+//! WorkPool threads the scheduler owns.
+//!
+//! The probe counts this process's live threads through
+//! `/proc/self/task`, so it is Linux-only (where CI runs) and lives in
+//! its **own** integration-test binary: the libtest harness runs tests
+//! of one binary concurrently on shared threads, which would make raw
+//! process-wide thread counts racy next to other server tests. Alone
+//! in its binary, the count is deterministic.
+
+#![cfg(target_os = "linux")]
+// Closed-batch submission goes through the deprecated `run_batch`
+// replay wrappers (`coordinator::compat`), like the other suites.
+#![allow(deprecated)]
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::server::MatMulServer;
+use maxeva::workloads::{materialize_mixed, MatMulRequest};
+
+fn live_threads() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+#[test]
+fn server_drop_leaves_no_pack_worker_threads() {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = 2;
+    cfg.pipeline_depth = 4;
+    cfg.pack_workers = 4;
+    cfg.pack_persistent = true;
+    cfg.shards = 2; // one WorkPool per shard — both must join
+
+    let baseline = live_threads();
+    assert!(baseline > 0, "/proc/self/task must be readable on Linux");
+    {
+        let mut server = MatMulServer::start(&cfg).unwrap();
+        assert!(
+            live_threads() > baseline,
+            "a running server must hold threads (probe sanity check)"
+        );
+        // Serve something large enough to fan packing out, so the pool
+        // threads have genuinely executed tasks before teardown.
+        let reqs = vec![MatMulRequest::f32(0, 40, 96, 40), MatMulRequest::int8(1, 24, 128, 32)];
+        let _ = server.run_batch_mixed(materialize_mixed(&reqs, 7)).unwrap();
+        server.shutdown();
+    }
+    // shutdown() joins synchronously, but give the kernel a moment to
+    // retire task entries before declaring a leak.
+    let mut now = live_threads();
+    for _ in 0..50 {
+        if now <= baseline {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        now = live_threads();
+    }
+    assert!(
+        now <= baseline,
+        "threads leaked past server shutdown: {now} live vs baseline {baseline}"
+    );
+}
