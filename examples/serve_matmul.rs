@@ -21,6 +21,7 @@
 //!
 //! (Without artifacts the reference backend serves the same stack.)
 
+use maxeva::coordinator::fault::{DeadlineExceeded, RequestShed};
 use maxeva::coordinator::tiler::{matmul_ref_f32, matmul_ref_i32};
 use maxeva::prelude::*;
 use maxeva::runtime::default_artifacts_dir;
@@ -28,6 +29,7 @@ use maxeva::util::stats::percentile;
 use maxeva::workloads::{
     materialize_batch, materialize_mixed, mixed_trace, random_trace, transformer_block_gemms,
 };
+use std::time::Duration;
 
 /// Replay a closed fp32 batch through the streaming API: submit
 /// everything (blocking admission), wait in request order. This is what
@@ -297,6 +299,83 @@ fn main() {
         pack_reqs.len(),
         walls[0] / walls[1].max(1e-12)
     );
+
+    // Workload 7: the request-level robustness plane (PR 9). A 2-shard
+    // server with the failover plane armed, a small admission queue and
+    // the brownout shedder at a 0.5 occupancy watermark serves a
+    // past-saturation burst: bulk class-3 traffic is shed with the
+    // typed `RequestShed` while class-0 requests only ever see plain
+    // queue backpressure. One request carries an impossible 5 ms
+    // deadline and resolves with the typed `DeadlineExceeded` — never
+    // partial output. `ServerStats::shed` and the per-shard breaker
+    // states report it all.
+    println!("\n[7] request deadlines + brownout shedding under overload");
+    let mut robust_cfg = cfg.clone();
+    robust_cfg.shards = 2;
+    robust_cfg.shard_failover = true;
+    robust_cfg.queue_depth = 3;
+    robust_cfg.shed_watermark = 0.5;
+    robust_cfg.admission = AdmissionPolicy::Reject;
+    let robust = MatMulServer::start(&robust_cfg).expect("robust server");
+
+    // An impossible deadline: ~26M MACs cannot retire in 5 ms.
+    let doomed =
+        [MatMulRequest::f32(1200, 128, 1600, 128).with_deadline(Duration::from_millis(5))];
+    let (req, ops) = materialize_mixed(&doomed, 700).remove(0);
+    let deadline_handle = robust.submit(req, ops).expect("deadline request admits");
+
+    // A burst past saturation: heavy bulk requests in class 3, latency
+    // requests in class 0, rejected (not blocked) at the gate.
+    let burst: Vec<MatMulRequest> = (0..12)
+        .map(|i| {
+            if i % 2 == 0 {
+                MatMulRequest::int8(1210 + i, 192, 768, 192).with_class(3)
+            } else {
+                MatMulRequest::f32(1210 + i, 64, 128, 64).with_class(0)
+            }
+        })
+        .collect();
+    let (mut served, mut shed, mut backpressured) = (Vec::new(), 0usize, 0usize);
+    for (req, ops) in materialize_mixed(&burst, 701) {
+        match robust.submit(req, ops) {
+            Ok(h) => served.push(h),
+            Err(e) if e.downcast_ref::<RequestShed>().is_some() => shed += 1,
+            Err(e) if e.downcast_ref::<QueueFull>().is_some() => backpressured += 1,
+            Err(e) => panic!("unexpected admission failure: {e:#}"),
+        }
+    }
+    match deadline_handle.wait() {
+        Err(e) if e.downcast_ref::<DeadlineExceeded>().is_some() => {
+            println!("    deadline request resolved with: {e}")
+        }
+        Err(e) => println!("    deadline request failed otherwise: {e}"),
+        Ok(_) => println!("    deadline request finished inside its budget"),
+    }
+    for h in served {
+        h.wait().expect("admitted burst request must retire");
+    }
+    let rstats = robust.stats();
+    println!(
+        "    burst of {}: {} served · {} shed (brownout) · {} backpressured (QueueFull)",
+        burst.len(),
+        rstats.requests,
+        shed,
+        backpressured
+    );
+    println!(
+        "    ShedStats: brownout {} · SLO {} · deadline expiries {} · \
+         failovers {}+{} bands · breaker trips/probes/recoveries {}/{}/{}",
+        rstats.shed.shed_brownout,
+        rstats.shed.shed_slo,
+        rstats.shed.deadline_expired,
+        rstats.shed.failovers,
+        rstats.shed.failover_bands,
+        rstats.shed.breaker_trips,
+        rstats.shed.breaker_probes,
+        rstats.shed.breaker_recoveries
+    );
+    println!("    breaker states: {:?} (healthy fleet — all closed)", rstats.breaker_states);
+    robust.shutdown();
 
     let stats = server.stats();
     println!("\n==== serving report ====");

@@ -15,7 +15,7 @@
 //!
 //!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] \
 //!         [--load-json PATH] [--weight-json PATH] [--chaos-json PATH] \
-//!         [--shard-json PATH]
+//!         [--shard-json PATH] [--overload-json PATH]
 //!
 //! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
 //! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
@@ -29,7 +29,11 @@
 //! `chaos-report` artifact by the `chaos` CI job); `--shard-json PATH`
 //! writes the shard-scaling report (1 vs 4 shards, weight-affinity
 //! routing on vs off, plus the M-split leg — uploaded as the
-//! `shard-scaling` artifact by the `bench-smoke` CI job).
+//! `shard-scaling` artifact by the `bench-smoke` CI job);
+//! `--overload-json PATH` writes the overload report (open-loop Poisson
+//! arrivals past saturation, brownout shedding off vs on: goodput, p99
+//! per class, shed/backpressure counts — uploaded as the `e2e-overload`
+//! artifact by the `bench-smoke` CI job).
 
 // The closed-batch A/B legs intentionally replay through the
 // deprecated `run_batch` wrapper (`coordinator::compat`).
@@ -39,10 +43,12 @@ mod common;
 
 use maxeva::arch::precision::Precision;
 use maxeva::config::json::Json;
-use maxeva::config::schema::{BackendKind, DesignConfig, PolicyKind, ServeConfig};
+use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, PolicyKind, ServeConfig};
+use maxeva::coordinator::fault::RequestShed;
 use maxeva::coordinator::pool::TilePool;
 use maxeva::coordinator::server::MatMulServer;
-use maxeva::coordinator::stats::ClassStats;
+use maxeva::coordinator::stats::{ClassStats, ShedStats};
+use maxeva::coordinator::QueueFull;
 use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::prng::XorShift64;
 use maxeva::workloads::{
@@ -166,6 +172,84 @@ fn run_open_loop(
     classes
 }
 
+/// One leg of the overload A/B.
+struct OverloadLeg {
+    completed: usize,
+    shed: usize,
+    queue_full: usize,
+    wall_s: f64,
+    classes: Vec<ClassStats>,
+    shed_stats: ShedStats,
+}
+
+/// Drive an open-loop arrival timeline **past saturation** against a
+/// Reject-admission server with the brownout shedder at
+/// `shed_watermark` (0.0 = off). Rejected submissions are counted by
+/// kind — typed [`RequestShed`] vs plain [`QueueFull`] backpressure —
+/// and every admitted request is drained to completion, so goodput is
+/// completions over the measured wall.
+fn run_overload(
+    shed_watermark: f64,
+    arrivals: &[(usize, f64)],
+    streams: [&[(MatMulRequest, maxeva::workloads::Operands)]; 2],
+) -> OverloadLeg {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (1, 1, 1);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = 1;
+    cfg.pipeline_depth = 1;
+    cfg.queue_depth = 4;
+    cfg.admission = AdmissionPolicy::Reject;
+    cfg.shed_watermark = shed_watermark;
+    let server = MatMulServer::start(&cfg).expect("overload server");
+    let t0 = Instant::now();
+    let (completed, shed, queue_full) = std::thread::scope(|s| {
+        let (handle_tx, handle_rx) = std::sync::mpsc::channel();
+        let server = &server;
+        let submitter = s.spawn(move || {
+            let mut cursors = [0usize; 2];
+            let (mut shed, mut queue_full) = (0usize, 0usize);
+            let t0 = Instant::now();
+            for &(stream, t) in arrivals {
+                pace_until(t0, t);
+                let (req, ops) = &streams[stream][cursors[stream]];
+                cursors[stream] += 1;
+                match server.submit(*req, ops.clone()) {
+                    Ok(h) => {
+                        if handle_tx.send(h).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.downcast_ref::<RequestShed>().is_some() => {
+                        assert_ne!(req.class, 0, "class 0 must never be shed");
+                        shed += 1;
+                    }
+                    Err(e) => {
+                        assert!(
+                            e.downcast_ref::<QueueFull>().is_some(),
+                            "unexpected overload rejection: {e:#}"
+                        );
+                        queue_full += 1;
+                    }
+                }
+            }
+            (shed, queue_full)
+        });
+        let mut completed = 0usize;
+        for h in handle_rx {
+            h.wait().expect("admitted overload request must resolve");
+            completed += 1;
+        }
+        let (shed, queue_full) = submitter.join().unwrap();
+        (completed, shed, queue_full)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    server.shutdown();
+    OverloadLeg { completed, shed, queue_full, wall_s, classes: stats.classes, shed_stats: stats.shed }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -192,6 +276,11 @@ fn main() {
     let shard_json_path = args
         .iter()
         .position(|a| a == "--shard-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let overload_json_path = args
+        .iter()
+        .position(|a| a == "--overload-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
 
@@ -968,6 +1057,86 @@ fn main() {
         o.insert("bit_identical".into(), Json::Bool(chaos_identical));
         match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
             Ok(()) => println!("\nwrote chaos report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
+
+    common::banner("overload: open-loop past saturation, brownout shedding off vs on");
+    // Bulk int8 offered at roughly twice the single-worker service rate
+    // (class 3 — first to shed), with a latency-sensitive fp32 trickle
+    // in class 0 (never shed). Reject admission so overload surfaces as
+    // typed rejections instead of blocked arrival pacing.
+    let (n_bulk, n_lat) = if quick { (10usize, 8) } else { (24, 16) };
+    let bulk_reqs: Vec<MatMulRequest> = (0..n_bulk)
+        .map(|i| MatMulRequest::int8(2000 + i as u64, 32, 1024, 32).with_class(3))
+        .collect();
+    let lat_reqs: Vec<MatMulRequest> = (0..n_lat)
+        .map(|i| MatMulRequest::f32(2100 + i as u64, 32, 32, 32).with_class(0))
+        .collect();
+    let bulk_batch = materialize_mixed(&bulk_reqs, 7003);
+    let lat_batch = materialize_mixed(&lat_reqs, 7004);
+    let overload_arrivals = merge_arrivals(&[
+        poisson_arrivals(n_bulk, 800.0, 73),
+        poisson_arrivals(n_lat, 900.0, 74),
+    ]);
+    let mut overload_runs: Vec<Json> = Vec::new();
+    let mut lat_p99_by_leg: Vec<f64> = Vec::new();
+    for wm in [0.0, 0.5] {
+        let leg = run_overload(wm, &overload_arrivals, [&bulk_batch, &lat_batch]);
+        let goodput = leg.completed as f64 / leg.wall_s.max(1e-12);
+        println!(
+            "  shed_watermark {wm}: {} completed · {} shed · {} backpressured · \
+             goodput {goodput:.1} req/s over {:.3} s",
+            leg.completed, leg.shed, leg.queue_full, leg.wall_s
+        );
+        for c in &leg.classes {
+            println!(
+                "    class {}: {} done · latency p50/p99 {:.2}/{:.2} ms",
+                c.class, c.count, c.latency_p50_ms, c.latency_p99_ms
+            );
+        }
+        lat_p99_by_leg.push(
+            leg.classes
+                .iter()
+                .find(|c| c.class == 0)
+                .map(|c| c.latency_p99_ms)
+                .unwrap_or(0.0),
+        );
+        assert_eq!(
+            leg.shed_stats.shed_brownout as usize, leg.shed,
+            "server-side shed count must match the typed rejections seen at submit"
+        );
+        if wm == 0.0 {
+            assert_eq!(leg.shed, 0, "shedding off must shed nothing");
+        } else {
+            assert!(
+                leg.shed >= 1,
+                "2x-saturation bulk traffic must trip the brownout shedder"
+            );
+        }
+        let mut o = BTreeMap::new();
+        o.insert("shed_watermark".into(), Json::Num(wm));
+        o.insert("completed".into(), Json::Num(leg.completed as f64));
+        o.insert("shed_brownout".into(), Json::Num(leg.shed as f64));
+        o.insert("queue_full".into(), Json::Num(leg.queue_full as f64));
+        o.insert("wall_s".into(), Json::Num(leg.wall_s));
+        o.insert("goodput_rps".into(), Json::Num(goodput));
+        o.insert("classes".into(), Json::Arr(leg.classes.iter().map(class_json).collect()));
+        overload_runs.push(Json::Obj(o));
+    }
+    println!(
+        "  fp32 (class 0) p99 past saturation: shed off {:.2} ms vs on {:.2} ms",
+        lat_p99_by_leg[0], lat_p99_by_leg[1]
+    );
+    if let Some(path) = overload_json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_overload".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("bulk_int8_requests".into(), Json::Num(n_bulk as f64));
+        o.insert("fp32_trickle_requests".into(), Json::Num(n_lat as f64));
+        o.insert("runs".into(), Json::Arr(overload_runs));
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote overload report to {path}"),
             Err(e) => println!("\nWARN: could not write {path}: {e}"),
         }
     }

@@ -415,6 +415,36 @@ pub struct ServeConfig {
     /// packed-weight cache stays warm. `false` routes every unsplit
     /// request least-loaded. Irrelevant while `shards = 1`.
     pub shard_affinity: bool,
+    /// SLO-aware admission: reject a deadline-carrying request
+    /// immediately (typed `SloUnattainable`) when the per-class
+    /// service-time p99 times the open-flight load says its deadline
+    /// cannot be met. `false` (the default) admits everything and lets
+    /// deadlines expire in flight. Requests without a deadline are
+    /// never SLO-rejected.
+    pub slo_admission: bool,
+    /// Brownout shedder watermark as a fraction of `queue_depth` in
+    /// `[0, 1]`: when a shard's open-request occupancy crosses it,
+    /// admission starts rejecting the lowest-priority classes (typed
+    /// `RequestShed`), shedding progressively more classes as occupancy
+    /// approaches 1.0 — class 0 is never shed. `0.0` (the default)
+    /// disables shedding; ignored while `queue_depth = 0`.
+    pub shed_watermark: f64,
+    /// Router-level shard failover: wrap every dispatched request so a
+    /// `SchedulerPanicked` resolution re-dispatches it (whole, or the
+    /// failed row-band of an M-split) to a healthy shard, and track a
+    /// per-shard circuit breaker (closed → open after
+    /// `breaker_threshold` consecutive failures, half-open probe after
+    /// `breaker_probe_ms`). `false` (the default) delivers shard
+    /// failures to the client directly, the historical behavior.
+    /// Irrelevant while `shards = 1` (there is nowhere to fail over).
+    pub shard_failover: bool,
+    /// Consecutive scheduler-level failures that trip a shard's circuit
+    /// breaker from closed to open (failover mode only).
+    pub breaker_threshold: u32,
+    /// How long an open breaker waits before letting one probe request
+    /// through (half-open), milliseconds. A successful probe closes the
+    /// breaker — a respawned shard rejoins the rotation.
+    pub breaker_probe_ms: u64,
 }
 
 impl ServeConfig {
@@ -443,6 +473,11 @@ impl ServeConfig {
             shards: 1,
             shard_split_tiles: 8,
             shard_affinity: true,
+            slo_admission: false,
+            shed_watermark: 0.0,
+            shard_failover: false,
+            breaker_threshold: 3,
+            breaker_probe_ms: 500,
         }
     }
 
@@ -490,6 +525,18 @@ impl ServeConfig {
                 self.tile_timeout_mult.to_string(),
             ));
         }
+        if !self.shed_watermark.is_finite() || !(0.0..=1.0).contains(&self.shed_watermark) {
+            return Err(ConfigError::Invalid(
+                "shed_watermark",
+                self.shed_watermark.to_string(),
+            ));
+        }
+        if self.shard_failover && self.breaker_threshold == 0 {
+            return Err(ConfigError::Invalid(
+                "breaker_threshold",
+                "0 (failover needs at least one failure to trip)".into(),
+            ));
+        }
         if let Some(plan) = &self.fault_plan {
             if !(0.0..=1.0).contains(&plan.rate) {
                 return Err(ConfigError::Invalid("fault_plan.rate", plan.rate.to_string()));
@@ -535,6 +582,11 @@ impl ServeConfig {
         o.insert("shards".into(), Json::Num(self.shards as f64));
         o.insert("shard_split_tiles".into(), Json::Num(self.shard_split_tiles as f64));
         o.insert("shard_affinity".into(), Json::Bool(self.shard_affinity));
+        o.insert("slo_admission".into(), Json::Bool(self.slo_admission));
+        o.insert("shed_watermark".into(), Json::Num(self.shed_watermark));
+        o.insert("shard_failover".into(), Json::Bool(self.shard_failover));
+        o.insert("breaker_threshold".into(), Json::Num(self.breaker_threshold as f64));
+        o.insert("breaker_probe_ms".into(), Json::Num(self.breaker_probe_ms as f64));
         Json::Obj(o)
     }
 
@@ -579,6 +631,10 @@ impl ServeConfig {
                 "tile_timeout_mult",
                 tile_timeout_mult.to_string(),
             ));
+        }
+        let shed_watermark = v.get("shed_watermark").and_then(Json::as_f64).unwrap_or(0.0);
+        if !shed_watermark.is_finite() || !(0.0..=1.0).contains(&shed_watermark) {
+            return Err(ConfigError::Invalid("shed_watermark", shed_watermark.to_string()));
         }
         Ok(ServeConfig {
             design,
@@ -638,6 +694,23 @@ impl ServeConfig {
                 .get("shard_affinity")
                 .and_then(Json::as_bool)
                 .unwrap_or(true),
+            slo_admission: v
+                .get("slo_admission")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            shed_watermark,
+            shard_failover: v
+                .get("shard_failover")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            breaker_threshold: v
+                .get("breaker_threshold")
+                .and_then(Json::as_u64)
+                .unwrap_or(3) as u32,
+            breaker_probe_ms: v
+                .get("breaker_probe_ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(500),
         })
     }
 
@@ -781,6 +854,31 @@ impl ServeConfigBuilder {
         self
     }
 
+    pub fn slo_admission(mut self, on: bool) -> Self {
+        self.cfg.slo_admission = on;
+        self
+    }
+
+    pub fn shed_watermark(mut self, watermark: f64) -> Self {
+        self.cfg.shed_watermark = watermark;
+        self
+    }
+
+    pub fn shard_failover(mut self, on: bool) -> Self {
+        self.cfg.shard_failover = on;
+        self
+    }
+
+    pub fn breaker_threshold(mut self, failures: u32) -> Self {
+        self.cfg.breaker_threshold = failures;
+        self
+    }
+
+    pub fn breaker_probe_ms(mut self, ms: u64) -> Self {
+        self.cfg.breaker_probe_ms = ms;
+        self
+    }
+
     /// Validate and produce the config ([`ServeConfig::validate`]).
     pub fn build(self) -> Result<ServeConfig, ConfigError> {
         self.cfg.validate()?;
@@ -876,6 +974,11 @@ mod tests {
         assert_eq!(c.shards, 1, "sharding defaults to the single engine");
         assert_eq!(c.shard_split_tiles, 8);
         assert!(c.shard_affinity, "weight-affinity routing defaults on");
+        assert!(!c.slo_admission, "SLO admission defaults off");
+        assert_eq!(c.shed_watermark, 0.0, "brownout shedding defaults off");
+        assert!(!c.shard_failover, "shard failover defaults off");
+        assert_eq!(c.breaker_threshold, 3);
+        assert_eq!(c.breaker_probe_ms, 500);
     }
 
     #[test]
@@ -924,6 +1027,11 @@ mod tests {
         c.shards = 5;
         c.shard_split_tiles = 3;
         c.shard_affinity = false;
+        c.slo_admission = true;
+        c.shed_watermark = 0.75;
+        c.shard_failover = true;
+        c.breaker_threshold = 9;
+        c.breaker_probe_ms = 250;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
         // And through a file, like the launcher loads it.
@@ -996,6 +1104,14 @@ mod tests {
             ServeConfig::from_json(&v),
             Err(ConfigError::Invalid("fault_plan.kinds", _))
         ));
+        let v = Json::parse(
+            r#"{"design":{"device":"VC1902","precision":"fp32","x":13,"y":4,"z":6,"pattern":"P1"},"shed_watermark":2.0}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            ServeConfig::from_json(&v),
+            Err(ConfigError::Invalid("shed_watermark", _))
+        ));
     }
 
     #[test]
@@ -1065,6 +1181,11 @@ mod tests {
             .shards(4)
             .shard_split_tiles(2)
             .shard_affinity(false)
+            .slo_admission(true)
+            .shed_watermark(0.8)
+            .shard_failover(true)
+            .breaker_threshold(2)
+            .breaker_probe_ms(100)
             .build()
             .unwrap();
         assert_eq!(cfg.workers, 4);
@@ -1072,6 +1193,11 @@ mod tests {
         assert_eq!(cfg.shard_split_tiles, 2);
         assert!(!cfg.shard_affinity);
         assert!(!cfg.pack_persistent);
+        assert!(cfg.slo_admission);
+        assert_eq!(cfg.shed_watermark, 0.8);
+        assert!(cfg.shard_failover);
+        assert_eq!(cfg.breaker_threshold, 2);
+        assert_eq!(cfg.breaker_probe_ms, 100);
         // Untouched knobs keep their ServeConfig::new defaults.
         assert_eq!(cfg.aging_threshold, 64);
         assert_eq!(cfg.drain_deadline_ms, 0);
@@ -1113,6 +1239,22 @@ mod tests {
             b().tile_timeout_mult(f64::NAN).build(),
             Err(ConfigError::Invalid("tile_timeout_mult", _))
         ));
+        // The shed watermark is a queue-occupancy fraction.
+        assert!(matches!(
+            b().shed_watermark(1.5).build(),
+            Err(ConfigError::Invalid("shed_watermark", _))
+        ));
+        assert!(matches!(
+            b().shed_watermark(f64::NAN).build(),
+            Err(ConfigError::Invalid("shed_watermark", _))
+        ));
+        // A zero breaker threshold can never trip; reject it when
+        // failover is actually on (it is inert otherwise).
+        assert!(matches!(
+            b().shard_failover(true).breaker_threshold(0).build(),
+            Err(ConfigError::Invalid("breaker_threshold", _))
+        ));
+        b().breaker_threshold(0).build().unwrap();
         let mut bad_plan = FaultPlan::new(1, 0.5, vec![]);
         bad_plan.rate = 2.0;
         assert!(matches!(

@@ -1,11 +1,14 @@
 //! The unified public error surface of the serving layer.
 //!
 //! Every typed error the coordinator can deliver — admission rejections
-//! ([`QueueFull`]), cancellations ([`Cancelled`]) and the fault-plane
-//! failures ([`TileRetriesExhausted`], [`TileTimedOut`],
+//! ([`QueueFull`], [`RequestShed`], [`SloUnattainable`]), cancellations
+//! ([`Cancelled`]), request deadlines ([`DeadlineExceeded`]) and the
+//! fault-plane failures ([`TileRetriesExhausted`], [`TileTimedOut`],
 //! [`TileCorrupted`], [`SchedulerPanicked`], [`DrainDeadlineExpired`])
 //! — is collected under one `#[non_exhaustive]` enum, [`ServeError`],
-//! re-exported from the crate root.
+//! re-exported from the crate root. Failures that happen after shard
+//! placement carry the originating shard index
+//! ([`ServeError::shard`]), so multi-shard incidents are attributable.
 //!
 //! The engine still transports errors through `anyhow::Error` with the
 //! concrete types attached (so existing
@@ -16,7 +19,8 @@
 
 use crate::coordinator::admission::QueueFull;
 use crate::coordinator::fault::{
-    DrainDeadlineExpired, SchedulerPanicked, TileCorrupted, TileRetriesExhausted, TileTimedOut,
+    DeadlineExceeded, DrainDeadlineExpired, RequestShed, SchedulerPanicked, SloUnattainable,
+    TileCorrupted, TileRetriesExhausted, TileTimedOut,
 };
 use crate::coordinator::handle::Cancelled;
 
@@ -52,6 +56,15 @@ pub enum ServeError {
     /// The shutdown drain deadline expired with the request still open.
     #[error(transparent)]
     DrainDeadlineExpired(#[from] DrainDeadlineExpired),
+    /// The request's own deadline expired before completion.
+    #[error(transparent)]
+    DeadlineExceeded(#[from] DeadlineExceeded),
+    /// The brownout shedder rejected the request at admission.
+    #[error(transparent)]
+    Shed(#[from] RequestShed),
+    /// SLO-aware admission judged the deadline unattainable.
+    #[error(transparent)]
+    SloUnattainable(#[from] SloUnattainable),
 }
 
 impl ServeError {
@@ -81,7 +94,33 @@ impl ServeError {
         if let Some(e) = err.downcast_ref::<DrainDeadlineExpired>() {
             return Some(ServeError::DrainDeadlineExpired(*e));
         }
+        if let Some(e) = err.downcast_ref::<DeadlineExceeded>() {
+            return Some(ServeError::DeadlineExceeded(*e));
+        }
+        if let Some(e) = err.downcast_ref::<RequestShed>() {
+            return Some(ServeError::Shed(*e));
+        }
+        if let Some(e) = err.downcast_ref::<SloUnattainable>() {
+            return Some(ServeError::SloUnattainable(*e));
+        }
         None
+    }
+
+    /// The shard index the failure originated on, when the variant
+    /// carries one (`None` for admission rejections and cancellations,
+    /// which happen before or independent of shard placement).
+    pub fn shard(&self) -> Option<usize> {
+        match self {
+            ServeError::TileRetriesExhausted(e) => Some(e.shard),
+            ServeError::TileTimedOut(e) => Some(e.shard),
+            ServeError::TileCorrupted(e) => Some(e.shard),
+            ServeError::SchedulerPanicked(e) => Some(e.shard),
+            ServeError::DrainDeadlineExpired(e) => Some(e.shard),
+            ServeError::DeadlineExceeded(e) => Some(e.shard),
+            ServeError::Shed(e) => Some(e.shard),
+            ServeError::SloUnattainable(e) => Some(e.shard),
+            _ => None,
+        }
     }
 }
 
@@ -95,21 +134,37 @@ mod tests {
             (QueueFull(4).into(), |e| matches!(e, ServeError::QueueFull(QueueFull(4)))),
             (Cancelled(7).into(), |e| matches!(e, ServeError::Cancelled(Cancelled(7)))),
             (
-                TileRetriesExhausted { id: 1, attempts: 3, last: "boom".into() }.into(),
+                TileRetriesExhausted { id: 1, attempts: 3, last: "boom".into(), shard: 2 }.into(),
                 |e| matches!(e, ServeError::TileRetriesExhausted(t) if t.attempts == 3),
             ),
             (
-                TileTimedOut { worker: 2, waited_ms: 80 }.into(),
+                TileTimedOut { worker: 2, waited_ms: 80, shard: 0 }.into(),
                 |e| matches!(e, ServeError::TileTimedOut(t) if t.worker == 2),
             ),
             (
-                TileCorrupted { worker: 1 }.into(),
+                TileCorrupted { worker: 1, shard: 0 }.into(),
                 |e| matches!(e, ServeError::TileCorrupted(_)),
             ),
-            (SchedulerPanicked.into(), |e| matches!(e, ServeError::SchedulerPanicked(_))),
             (
-                DrainDeadlineExpired(9).into(),
-                |e| matches!(e, ServeError::DrainDeadlineExpired(DrainDeadlineExpired(9))),
+                SchedulerPanicked { shard: 3 }.into(),
+                |e| matches!(e, ServeError::SchedulerPanicked(p) if p.shard == 3),
+            ),
+            (
+                DrainDeadlineExpired { id: 9, shard: 1 }.into(),
+                |e| matches!(e, ServeError::DrainDeadlineExpired(d) if d.id == 9 && d.shard == 1),
+            ),
+            (
+                DeadlineExceeded { id: 5, shard: 0, budget_ms: 100 }.into(),
+                |e| matches!(e, ServeError::DeadlineExceeded(d) if d.budget_ms == 100),
+            ),
+            (
+                RequestShed { id: 6, shard: 2, class: 3, open: 12 }.into(),
+                |e| matches!(e, ServeError::Shed(s) if s.class == 3 && s.shard == 2),
+            ),
+            (
+                SloUnattainable { id: 8, shard: 1, class: 0, estimated_ms: 90, deadline_ms: 40 }
+                    .into(),
+                |e| matches!(e, ServeError::SloUnattainable(s) if s.estimated_ms == 90),
             ),
         ];
         for (err, check) in cases {
@@ -135,7 +190,22 @@ mod tests {
         assert!(matches!(e, ServeError::QueueFull(_)));
         let e: ServeError = Cancelled(0).into();
         assert!(matches!(e, ServeError::Cancelled(_)));
-        let e: ServeError = SchedulerPanicked.into();
+        let e: ServeError = SchedulerPanicked { shard: 0 }.into();
         assert!(matches!(e, ServeError::SchedulerPanicked(_)));
+        let e: ServeError = DeadlineExceeded { id: 1, shard: 0, budget_ms: 5 }.into();
+        assert!(matches!(e, ServeError::DeadlineExceeded(_)));
+    }
+
+    #[test]
+    fn shard_attribution_is_exposed() {
+        let e: ServeError = SchedulerPanicked { shard: 2 }.into();
+        assert_eq!(e.shard(), Some(2));
+        let e: ServeError = TileTimedOut { worker: 0, waited_ms: 10, shard: 5 }.into();
+        assert_eq!(e.shard(), Some(5));
+        let e: ServeError = RequestShed { id: 0, shard: 1, class: 2, open: 8 }.into();
+        assert_eq!(e.shard(), Some(1));
+        // Pre-placement failures carry no shard.
+        assert_eq!(ServeError::from(QueueFull(4)).shard(), None);
+        assert_eq!(ServeError::from(Cancelled(1)).shard(), None);
     }
 }

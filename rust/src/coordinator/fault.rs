@@ -295,7 +295,7 @@ pub fn fnv1a_words(words: impl Iterator<Item = u32>) -> u64 {
 /// A tile failed all of its `1 + max_tile_retries` execution attempts;
 /// the flight is failed with this typed error wrapping the last cause.
 #[derive(Debug, Clone, thiserror::Error)]
-#[error("request {id}: tile failed all {attempts} attempts; last error: {last}")]
+#[error("request {id}: tile failed all {attempts} attempts on shard {shard}; last error: {last}")]
 pub struct TileRetriesExhausted {
     /// Failing request's id.
     pub id: u64,
@@ -303,35 +303,107 @@ pub struct TileRetriesExhausted {
     pub attempts: u32,
     /// Display of the last attempt's error.
     pub last: String,
+    /// Shard whose scheduler gave up on the tile.
+    pub shard: usize,
 }
 
 /// A tile's completion did not arrive within its deadline (lost,
 /// hung, or severely delayed worker).
 #[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("tile deadline expired after {waited_ms} ms (worker {worker})")]
+#[error("tile deadline expired after {waited_ms} ms (worker {worker}, shard {shard})")]
 pub struct TileTimedOut {
     pub worker: usize,
     pub waited_ms: u64,
+    /// Shard the worker belongs to (worker indices are shard-local).
+    pub shard: usize,
 }
 
 /// A completion's payload did not match the checksum computed by the
 /// worker (corruption between execution and reduction).
 #[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("tile output failed checksum verification (worker {worker})")]
+#[error("tile output failed checksum verification (worker {worker}, shard {shard})")]
 pub struct TileCorrupted {
     pub worker: usize,
+    /// Shard the worker belongs to.
+    pub shard: usize,
 }
 
 /// The scheduler thread panicked; every open flight is failed fast
-/// with this error so no client blocks on a dead server.
+/// with this error so no client blocks on a dead server. With router
+/// failover enabled (`ServeConfig::shard_failover`) the facade
+/// intercepts this error, records it against shard `shard`'s circuit
+/// breaker and re-dispatches the request to a healthy shard — clients
+/// only ever observe it once every shard is down (or failover is off).
 #[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("scheduler thread panicked; request failed fast")]
-pub struct SchedulerPanicked;
+#[error("scheduler thread on shard {shard} panicked; request failed fast")]
+pub struct SchedulerPanicked {
+    /// Shard whose scheduler died.
+    pub shard: usize,
+}
 
 /// Shutdown's drain deadline expired with this request still open.
 #[derive(Debug, Clone, Copy, thiserror::Error)]
-#[error("request {0} still in flight when the shutdown drain deadline expired")]
-pub struct DrainDeadlineExpired(pub u64);
+#[error("request {id} still in flight on shard {shard} when the shutdown drain deadline expired")]
+pub struct DrainDeadlineExpired {
+    /// Request still open at expiry.
+    pub id: u64,
+    /// Shard that was still draining it.
+    pub shard: usize,
+}
+
+/// The request's own deadline (`MatMulRequest::with_deadline`) expired
+/// before it completed. The flight is evicted through the cancellation
+/// path: tiles not yet dispatched are never issued, queue and window
+/// slots are reclaimed, and no partial output is ever delivered.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("request {id} exceeded its {budget_ms} ms deadline (shard {shard})")]
+pub struct DeadlineExceeded {
+    pub id: u64,
+    /// Shard that expired the request (the admitting shard; for an
+    /// M-split request, the shard owning the first band to expire).
+    pub shard: usize,
+    /// The request's configured deadline budget, milliseconds.
+    pub budget_ms: u64,
+}
+
+/// The brownout shedder rejected this request at admission: queue
+/// occupancy crossed `ServeConfig::shed_watermark` and the request's
+/// priority class fell below the current shed floor. Sheds are
+/// immediate (no queueing) so callers can retry elsewhere or back off.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error(
+    "request {id} (class {class}) shed by brownout on shard {shard}: \
+     {open} open requests over watermark"
+)]
+pub struct RequestShed {
+    pub id: u64,
+    /// Shard that shed the request.
+    pub shard: usize,
+    /// The request's priority class (higher = first to shed).
+    pub class: u8,
+    /// Open requests on the shard at the moment of the shed.
+    pub open: usize,
+}
+
+/// SLO-aware admission (`ServeConfig::slo_admission`) judged the
+/// request's deadline unattainable under current load and rejected it
+/// immediately instead of letting it queue and expire.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error(
+    "request {id} (class {class}) rejected at admission on shard {shard}: \
+     estimated completion {estimated_ms} ms exceeds the {deadline_ms} ms deadline"
+)]
+pub struct SloUnattainable {
+    pub id: u64,
+    /// Shard that rejected the request.
+    pub shard: usize,
+    /// The request's priority class.
+    pub class: u8,
+    /// Estimated attainable completion under current load, ms.
+    pub estimated_ms: u64,
+    /// The request's deadline budget, ms.
+    pub deadline_ms: u64,
+}
 
 #[cfg(test)]
 mod tests {

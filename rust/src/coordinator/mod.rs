@@ -106,7 +106,41 @@
 //!   client-side wait.
 //! * **Shutdown stragglers** — `ServeConfig::drain_deadline_ms` bounds
 //!   the shutdown drain; requests still open past it fail with
-//!   [`DrainDeadlineExpired`] instead of wedging teardown.
+//!   [`DrainDeadlineExpired`] instead of wedging teardown. The facade
+//!   stamps one absolute deadline and fans it out, so all shards drain
+//!   concurrently against the same instant: shutdown wall time is
+//!   bounded by the slowest shard, not the shard count.
+//!
+//! On top of the tile-level plane, PR 9 adds a **request-level
+//! taxonomy** — three distinct, typed ways a request can fail before or
+//! instead of completing, each attributable to its shard via
+//! [`ServeError::shard`](error::ServeError::shard):
+//!
+//! * **Deadline** — the client bounded the request
+//!   ([`MatMulRequest::with_deadline`]); the budget expired before
+//!   completion. The flight is evicted through the cancellation path
+//!   (queue and window slots reclaimed, straggling tiles dropped and
+//!   recycled) and the handle resolves with [`DeadlineExceeded`] —
+//!   never a partial output. A request that arrives at its scheduler
+//!   already past its budget is rejected before any tile is scheduled.
+//! * **Shed** — the server refused the request at admission to protect
+//!   the rest: the brownout shedder (`ServeConfig::shed_watermark`)
+//!   rejects the lowest-priority classes first as queue occupancy
+//!   climbs past the watermark ([`RequestShed`]; class 0 is never
+//!   shed), and SLO-aware admission (`ServeConfig::slo_admission`)
+//!   rejects a deadline the class's observed p99 service time says is
+//!   unattainable under the current open-request load
+//!   ([`SloUnattainable`]). Neither consumes a queue slot or device
+//!   time; both are counted in [`ShedStats`].
+//! * **Failover** — the request's shard failed underneath it
+//!   (`ServeConfig::shard_failover`): a per-shard circuit breaker trips
+//!   after `breaker_threshold` consecutive scheduler-level failures,
+//!   and open requests that resolved with [`SchedulerPanicked`] are
+//!   re-dispatched — whole requests and individual row-bands of
+//!   M-split requests alike — to healthy shards under fresh routes.
+//!   After `breaker_probe_ms` the breaker half-opens and the next
+//!   request probes the shard; a success closes it again (probing is
+//!   lazy, piggybacked on routing — no background thread).
 //!
 //! **Guarantees.** A recovered run is bit-identical to a fault-free
 //! run: retried tiles are rebuilt from the immutable packed arenas and
@@ -122,7 +156,16 @@
 //! first failing band, in band order, decides the error). Every typed
 //! failure is classifiable through the single
 //! [`ServeError`](error::ServeError) enum re-exported at the crate
-//! root.
+//! root. The request-level plane preserves both properties:
+//! **exactly-once resolution survives shard failover** — the reply
+//! travels between attempts behind a take-once slot, so a request that
+//! visited every shard still resolves exactly once — and a recovered
+//! request (whole, or split and re-dispatched band by band) re-enters
+//! the identical deterministic engine path on its new shard, so its
+//! output — including the band-concat merge — is **bit-identical to
+//! the fault-free run**. A deadline expiry never delivers partial
+//! output. With every PR 9 knob at its default, the served bits are
+//! identical to the pre-robustness server for both precisions.
 //!
 //! **Non-guarantees.** Supervision is driven by the scheduler's
 //! deadline ticks: with deadlines disabled (`tile_timeout_mult = 0`,
@@ -131,11 +174,29 @@
 //! the pre-PR 6 behavior. Fault *injection* (the [`fault`] layer) is
 //! deterministic per (seed, tag, worker) but the budget `max_faults` is
 //! claimed in completion order, which wall-clock timing may reorder.
+//! Request deadlines are enforced at scheduler wakeups, not
+//! preemptively — expiry cannot interrupt a tile already executing, so
+//! expiry latency is bounded by the longest outstanding tile (arm
+//! `tile_timeout_mult` to bound that too). Cancelling through a handle
+//! after its request failed over routes to the originally admitted
+//! shard only (best-effort; the recovered flight runs to completion
+//! and resolves the handle normally). Failed shards are not respawned:
+//! a shard whose scheduler died stays down — its half-open probes fail
+//! fast and traffic stays diverted — and once every shard has failed,
+//! requests resolve with the final [`SchedulerPanicked`] error rather
+//! than queue for a recovery that cannot come. SLO admission estimates
+//! from observed per-class service history; a class with no history
+//! admits optimistically.
 //!
 //! [`TileRetriesExhausted`]: fault::TileRetriesExhausted
 //! [`TileCorrupted`]: fault::TileCorrupted
 //! [`SchedulerPanicked`]: fault::SchedulerPanicked
 //! [`DrainDeadlineExpired`]: fault::DrainDeadlineExpired
+//! [`DeadlineExceeded`]: fault::DeadlineExceeded
+//! [`RequestShed`]: fault::RequestShed
+//! [`SloUnattainable`]: fault::SloUnattainable
+//! [`ShedStats`]: stats::ShedStats
+//! [`MatMulRequest::with_deadline`]: crate::workloads::MatMulRequest::with_deadline
 //! [`RequestHandle::wait_timeout`]: handle::RequestHandle::wait_timeout
 
 pub mod admission;
@@ -165,8 +226,8 @@ pub use device::{
 };
 pub use error::ServeError;
 pub use fault::{
-    DrainDeadlineExpired, FaultCounters, FaultKind, FaultPlan, SchedulerPanicked, TileCorrupted,
-    TileRetriesExhausted, TileTimedOut,
+    DeadlineExceeded, DrainDeadlineExpired, FaultCounters, FaultKind, FaultPlan, RequestShed,
+    SchedulerPanicked, SloUnattainable, TileCorrupted, TileRetriesExhausted, TileTimedOut,
 };
 pub use handle::{Cancelled, RequestHandle};
 pub use microkernel::{
@@ -180,7 +241,8 @@ pub use pool::{
 };
 pub use server::{MatMulServer, ServerStats};
 pub use stats::{
-    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, WorkerHealth,
+    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, ShedStats,
+    WorkerHealth,
 };
 pub use tiler::Tiler;
 pub use workpool::WorkPool;

@@ -69,8 +69,8 @@ use crate::coordinator::device::{
     output_crc, DeviceHandle, TileDone, TileJob, TileOutput, TilePayload,
 };
 use crate::coordinator::fault::{
-    DrainDeadlineExpired, FaultCounters, SchedulerPanicked, TileCorrupted, TileRetriesExhausted,
-    TileTimedOut,
+    DeadlineExceeded, DrainDeadlineExpired, FaultCounters, SchedulerPanicked, TileCorrupted,
+    TileRetriesExhausted, TileTimedOut,
 };
 use crate::coordinator::handle::{Cancelled, Reply};
 use crate::coordinator::policy::{self, FlightMeta, PolicyParams, SchedPolicy};
@@ -78,7 +78,7 @@ use crate::coordinator::pool::{
     pack_fanout, BufferPool, FreeList, PackCounters, PoolElem, TilePool, WeightCache,
     WeightIdent, WeightKey,
 };
-use crate::coordinator::stats::{Completion, StatsAgg, WindowOcc};
+use crate::coordinator::stats::{Completion, ShedCounters, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
 use crate::coordinator::workpool::WorkPool;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
@@ -100,10 +100,13 @@ pub(crate) enum Event {
     SetDepth(usize),
     SetPolicy(PolicyKind),
     ResetEpoch,
-    /// Stop admitting, serve what is open, then exit — within the
+    /// Stop admitting, serve what is open, then exit — by the absolute
     /// deadline when one is set (stragglers past it fail with
-    /// [`DrainDeadlineExpired`] instead of hanging shutdown).
-    Drain(Option<Duration>),
+    /// [`DrainDeadlineExpired`] instead of hanging shutdown). The
+    /// deadline is absolute so a multi-shard facade can stamp one
+    /// instant and fan it out: shards drain *concurrently* against the
+    /// same wall-clock budget instead of serially accumulating it.
+    Drain(Option<Instant>),
     /// Test hook (`MatMulServer::inject_scheduler_panic`): panic the
     /// scheduler loop to exercise the fail-fast path.
     ChaosPanic,
@@ -275,6 +278,10 @@ struct Flight {
     /// When the first tile was issued — splits wall latency into
     /// queueing delay and service time for the per-class stats.
     first_issue: Option<Instant>,
+    /// Absolute request deadline (`MatMulRequest::with_deadline`,
+    /// anchored at admission): past it the flight is evicted and
+    /// resolves with [`DeadlineExceeded`]. `None` = no deadline.
+    deadline: Option<Instant>,
     invocations: u64,
     reply: Reply,
 }
@@ -389,6 +396,12 @@ fn drain_accs<T: Elem>(
 
 /// The scheduler state machine (see module docs).
 pub(crate) struct Scheduler {
+    /// Index of the shard this scheduler serves — stamped into every
+    /// typed error so multi-shard failures are attributable.
+    pub(crate) shard: usize,
+    /// Request-level robustness counters shared with the shard's stats
+    /// snapshots (this thread bumps `deadline_expired`).
+    pub(crate) shed: Arc<ShedCounters>,
     pub(crate) device: DeviceHandle,
     pub(crate) tiler_f32: Tiler,
     pub(crate) tiler_i32: Tiler,
@@ -442,6 +455,8 @@ pub(crate) struct Scheduler {
 impl Scheduler {
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
+        shard: usize,
+        shed: Arc<ShedCounters>,
         device: DeviceHandle,
         tiler_f32: Tiler,
         tiler_i32: Tiler,
@@ -459,6 +474,8 @@ impl Scheduler {
         let bufs = device.buffer_pool();
         let counters = device.fault_counters();
         Scheduler {
+            shard,
+            shed,
             device,
             tiler_f32,
             tiler_i32,
@@ -555,26 +572,35 @@ impl Scheduler {
                 Event::ResetEpoch => {
                     *self.shared.last_window.lock().unwrap() = WindowOcc::default()
                 }
-                Event::Drain(deadline) => {
+                Event::Drain(by) => {
                     self.draining = true;
-                    self.drain_by = deadline.map(|d| Instant::now() + d);
+                    self.drain_by = by;
                 }
                 Event::ChaosPanic => panic!("injected scheduler panic (chaos test hook)"),
             }
         }
     }
 
-    /// Earliest armed deadline among outstanding tiles and the drain
-    /// budget (`None` = nothing armed, block indefinitely). The desc
-    /// map is bounded by the window depth, so the scan is cheap.
+    /// Earliest armed deadline among outstanding tiles, open flights'
+    /// request deadlines and the drain budget (`None` = nothing armed,
+    /// block indefinitely). The desc map is bounded by the window depth
+    /// and the flight map by the admission gate, so the scan is cheap.
     fn next_wakeup(&self) -> Option<Instant> {
         let mut when = self.drain_by;
+        let mut fold = |dl: Instant| {
+            when = Some(match when {
+                Some(w) if w <= dl => w,
+                _ => dl,
+            });
+        };
         for d in self.descs.values() {
             if let Some(dl) = d.deadline {
-                when = Some(match when {
-                    Some(w) if w <= dl => w,
-                    _ => dl,
-                });
+                fold(dl);
+            }
+        }
+        for f in self.flights.values() {
+            if let Some(dl) = f.deadline {
+                fold(dl);
             }
         }
         when
@@ -598,9 +624,31 @@ impl Scheduler {
             self.counters.timeouts.fetch_add(1, Ordering::Relaxed);
             self.device.record_fault(desc.worker, self.robust.quarantine_after);
             let waited_ms = now.saturating_duration_since(desc.issued).as_millis() as u64;
-            let err =
-                anyhow::Error::new(TileTimedOut { worker: desc.worker, waited_ms });
+            let err = anyhow::Error::new(TileTimedOut {
+                worker: desc.worker,
+                waited_ms,
+                shard: self.shard,
+            });
             self.retry_or_fail(desc, err);
+        }
+        // Request deadlines: evict every flight past its budget and
+        // resolve it typed. Exactly the cancellation path — tiles still
+        // in the window straggle into `handle_done`'s flight-missing
+        // arm, which frees their slots and recycles their buffers — so
+        // no partial output can ever be delivered.
+        let overdue: Vec<u64> = self
+            .flights
+            .iter()
+            .filter(|(_, f)| f.deadline.is_some_and(|dl| now >= dl))
+            .map(|(&fid, _)| fid)
+            .collect();
+        for fid in overdue {
+            if let Some(f) = self.evict(fid) {
+                self.shed.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                let budget_ms = f.req.deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
+                let err = DeadlineExceeded { id: f.req.id, shard: self.shard, budget_ms };
+                f.reply.send(f.req, Err(anyhow::Error::new(err)));
+            }
         }
         // Reap dead worker threads (cheap when everyone is alive). A
         // hung worker keeps its thread — repeated timeouts quarantine
@@ -615,7 +663,8 @@ impl Scheduler {
         let open: Vec<u64> = self.flights.keys().copied().collect();
         for fid in open {
             let id = self.flights[&fid].req.id;
-            self.fail_flight(fid, anyhow::Error::new(DrainDeadlineExpired(id)));
+            let err = DrainDeadlineExpired { id, shard: self.shard };
+            self.fail_flight(fid, anyhow::Error::new(err));
         }
     }
 
@@ -629,7 +678,8 @@ impl Scheduler {
         for fid in open {
             if let Some(f) = self.flights.remove(&fid) {
                 self.gate.release(f.req.class);
-                f.reply.send(f.req, Err(anyhow::Error::new(SchedulerPanicked)));
+                let err = SchedulerPanicked { shard: self.shard };
+                f.reply.send(f.req, Err(anyhow::Error::new(err)));
             }
         }
     }
@@ -688,6 +738,18 @@ impl Scheduler {
         let ops = adm.ops.take().expect("operands consumed once");
         let reply = adm.reply.take().expect("reply consumed once");
         let class = self.params.clamp_class(req.class);
+        // A request that arrives already past its deadline (it sat in
+        // the admission queue too long) resolves typed immediately —
+        // never scheduled, no partial work.
+        let deadline = req.deadline.map(|d| submitted + d);
+        if deadline.is_some_and(|dl| Instant::now() >= dl) {
+            self.shed.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            let budget_ms = req.deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
+            let err = DeadlineExceeded { id: req.id, shard: self.shard, budget_ms };
+            self.gate.release(req.class);
+            reply.send(req, Err(anyhow::Error::new(err)));
+            return;
+        }
         let (m, k, n) = (req.m as usize, req.k as usize, req.n as usize);
         let tiler = self.tiler_for(req.precision);
         let grid = tiler.grid(m, k, n);
@@ -735,6 +797,7 @@ impl Scheduler {
                 done_tiles: 0,
                 started: submitted,
                 first_issue: None,
+                deadline,
                 invocations: 0,
                 reply,
             },
@@ -838,6 +901,7 @@ impl Scheduler {
                 id: f.req.id,
                 attempts: desc.retries + 1,
                 last: format!("{err:#}"),
+                shard: self.shard,
             };
             self.counters.retries_exhausted.fetch_add(1, Ordering::Relaxed);
             self.fail_flight(fid, anyhow::Error::new(exhausted));
@@ -926,7 +990,7 @@ impl Scheduler {
             (Ok(out), Some(crc)) if output_crc(&out) != crc => {
                 self.counters.checksum_failures.fetch_add(1, Ordering::Relaxed);
                 self.recycle_output(out);
-                Err(anyhow::Error::new(TileCorrupted { worker: done.worker }))
+                Err(anyhow::Error::new(TileCorrupted { worker: done.worker, shard: self.shard }))
             }
             (r, _) => r,
         };

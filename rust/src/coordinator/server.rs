@@ -58,6 +58,22 @@
 //! dispatched — across every shard holding a band of it — see
 //! [`RequestHandle::cancel`] and the [`Cancelled`] error.
 //!
+//! # Request-level robustness
+//!
+//! Three opt-in planes harden the request path (all off by default, so
+//! the default build is bit-for-bit the pre-robustness server):
+//! per-request **deadlines** ([`MatMulRequest::with_deadline`] — expiry
+//! resolves the handle with a typed `DeadlineExceeded`, never a partial
+//! output), **admission-time shedding** (`ServeConfig::slo_admission`
+//! SLO estimates and the `ServeConfig::shed_watermark` brownout
+//! shedder, surfaced in [`ServerStats::shed`]), and **shard failover**
+//! (`ServeConfig::shard_failover`: per-shard circuit breakers plus
+//! re-dispatch of whole requests and individual split-request bands off
+//! a failed shard — see the crate-internal `FailoverPlane` and the
+//! failure-model taxonomy in [`crate::coordinator`]).
+//!
+//! [`MatMulRequest::with_deadline`]: crate::workloads::MatMulRequest::with_deadline
+//!
 //! # Per-request precision
 //!
 //! fp32 requests flow as f32 tiles, int8 requests as int8-range
@@ -80,21 +96,24 @@
 
 use crate::arch::precision::Precision;
 use crate::config::schema::{AdmissionPolicy, PolicyKind, ServeConfig};
+use crate::coordinator::admission::QueueFull;
 use crate::coordinator::device::PrecisionInfo;
+use crate::coordinator::fault::{DrainDeadlineExpired, SchedulerPanicked};
 use crate::coordinator::handle::{Reply, RequestHandle};
 use crate::coordinator::scheduler::Event;
 use crate::coordinator::shard::{
     band_operands, band_reply, band_request, plan_route, Band, Route, RouterCounters, Shard,
-    SplitAcc,
+    ShardClient, SplitAcc,
 };
 use crate::coordinator::stats::{
-    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, StatsAgg,
-    WindowOcc, WorkerHealth,
+    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, ShedStats,
+    StatsAgg, WindowOcc, WorkerHealth,
 };
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
-use std::sync::{mpsc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 /// Serving statistics snapshot: rolled-up totals over every shard, plus
 /// the per-shard breakdown in [`ServerStats::shards`]. With one shard
@@ -144,11 +163,309 @@ pub struct ServerStats {
     /// Per-worker health gauges, concatenated shard by shard (worker
     /// indices are shard-local).
     pub worker_health: Vec<WorkerHealth>,
+    /// Request-level robustness counters: brownout/SLO sheds and
+    /// deadline expiries summed over shards, merged with the facade's
+    /// failover-plane counters (re-dispatches, breaker
+    /// trips/probes/recoveries). All zero with the PR 9 knobs at their
+    /// defaults.
+    pub shed: ShedStats,
+    /// Per-shard circuit-breaker state (`"closed"`, `"open"` or
+    /// `"half-open"`); one entry per shard when
+    /// `ServeConfig::shard_failover` is on, empty otherwise.
+    pub breaker_states: Vec<&'static str>,
     /// Per-shard statistics, indexed by shard.
     pub shards: Vec<ShardStats>,
     /// Routing decisions taken by the shard router (all zero with one
     /// shard — the router short-circuits).
     pub router: RouterStats,
+}
+
+/// Circuit-breaker state for one shard (see [`FailoverPlane`]).
+enum BreakerState {
+    /// Healthy: traffic flows.
+    Closed,
+    /// Tripped: no traffic until the probe interval elapses.
+    Open { since: Instant },
+    /// Probing: the next requests through test whether the shard
+    /// recovered — a success closes the breaker, a failure reopens it.
+    HalfOpen,
+}
+
+struct Breaker {
+    state: BreakerState,
+    /// Consecutive scheduler-level failures (reset by any successful —
+    /// or merely alive — resolution).
+    failures: u32,
+}
+
+/// A reply shared between failover attempts: whichever attempt resolves
+/// first takes the reply out, so a request resolves exactly once no
+/// matter how many shards it visited.
+type ReplySlot = Arc<Mutex<Option<Reply>>>;
+
+fn send_slot(slot: &ReplySlot, req: MatMulRequest, out: Result<MatOutput>) {
+    if let Some(r) = slot.lock().unwrap_or_else(PoisonError::into_inner).take() {
+        r.send(req, out);
+    }
+}
+
+/// The router-side failover plane (`ServeConfig::shard_failover`): a
+/// per-shard circuit breaker plus the re-dispatch machinery that moves
+/// whole requests — and individual row-bands of split requests — off a
+/// failed shard onto healthy ones.
+///
+/// A breaker trips open after `breaker_threshold` consecutive
+/// scheduler-level failures ([`SchedulerPanicked`] resolutions, or
+/// submissions bounced off a dead event channel). An open breaker takes
+/// no traffic; after `breaker_probe_ms` it turns half-open and the next
+/// request through is the probe — probing is lazy (piggybacked on
+/// routing), so no background thread exists. A successful probe closes
+/// the breaker and the shard rejoins the rotation; a failed one reopens
+/// it.
+///
+/// Re-dispatch retains one clone of the operands per in-flight attempt
+/// (failover trades memory for availability) and re-enters the normal
+/// admission path on the target shard, so a recovered request's output
+/// is produced by the same deterministic engine path as any other —
+/// bit-identical to a fault-free run, including band-concat merges of
+/// split requests.
+pub(crate) struct FailoverPlane {
+    clients: Vec<ShardClient>,
+    breakers: Vec<Mutex<Breaker>>,
+    threshold: u32,
+    probe_after: Duration,
+    failovers: AtomicU64,
+    failover_bands: AtomicU64,
+    trips: AtomicU64,
+    probes: AtomicU64,
+    recoveries: AtomicU64,
+}
+
+impl FailoverPlane {
+    fn new(clients: Vec<ShardClient>, threshold: u32, probe_after: Duration) -> Arc<Self> {
+        let breakers = clients
+            .iter()
+            .map(|_| Mutex::new(Breaker { state: BreakerState::Closed, failures: 0 }))
+            .collect();
+        Arc::new(FailoverPlane {
+            clients,
+            breakers,
+            threshold: threshold.max(1),
+            probe_after,
+            failovers: AtomicU64::new(0),
+            failover_bands: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+        })
+    }
+
+    fn breaker(&self, shard: usize) -> std::sync::MutexGuard<'_, Breaker> {
+        self.breakers[shard].lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Route-time eligibility: closed and half-open breakers accept
+    /// traffic; an open one turns half-open once the probe interval
+    /// elapsed — the request that observed the transition is the probe.
+    fn eligible(&self, shard: usize) -> bool {
+        let mut b = self.breaker(shard);
+        match b.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open { since } => {
+                if since.elapsed() >= self.probe_after {
+                    b.state = BreakerState::HalfOpen;
+                    self.probes.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Any resolution proving the scheduler alive resets the breaker; a
+    /// half-open success is a recovery — the shard rejoins.
+    fn record_success(&self, shard: usize) {
+        let mut b = self.breaker(shard);
+        b.failures = 0;
+        if matches!(b.state, BreakerState::HalfOpen) {
+            self.recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+        b.state = BreakerState::Closed;
+    }
+
+    /// A scheduler-level failure: trip closed → open at the threshold;
+    /// a failed half-open probe reopens immediately.
+    fn record_failure(&self, shard: usize) {
+        let mut b = self.breaker(shard);
+        b.failures += 1;
+        match b.state {
+            BreakerState::Closed if b.failures >= self.threshold => {
+                b.state = BreakerState::Open { since: Instant::now() };
+                self.trips.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::HalfOpen => {
+                b.state = BreakerState::Open { since: Instant::now() };
+            }
+            _ => {}
+        }
+    }
+
+    /// The healthiest re-dispatch target: breaker-eligible, not yet
+    /// tried by this request, least loaded (ties to the lowest index).
+    fn pick(&self, tried: &[usize]) -> Option<usize> {
+        (0..self.clients.len())
+            .filter(|s| !tried.contains(s))
+            .filter(|&s| self.eligible(s))
+            .min_by_key(|&s| (self.clients[s].in_flight(), s))
+    }
+
+    /// Place one request (or one band of a split request) on `preferred`
+    /// — diverted up front if its breaker is open — wrapping `inner` so
+    /// a [`SchedulerPanicked`] resolution re-dispatches instead of
+    /// surfacing. Returns the shard actually admitted and its token; an
+    /// error means no shard admitted the request and the caller still
+    /// owns it (the reply never fired).
+    fn dispatch(
+        self: &Arc<Self>,
+        preferred: usize,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+        band: bool,
+        inner: Reply,
+    ) -> Result<(usize, u64)> {
+        let first = if self.eligible(preferred) {
+            preferred
+        } else {
+            self.pick(&[]).unwrap_or(preferred)
+        };
+        let slot: ReplySlot = Arc::new(Mutex::new(Some(inner)));
+        self.try_chain(first, req, ops, policy, Vec::new(), band, &slot)
+    }
+
+    /// Walk the failover chain starting at `shard`: submit with a
+    /// wrapped reply; on a synchronous dead-scheduler bounce, move to
+    /// the next eligible shard. [`QueueFull`] stops the walk — a full
+    /// queue is backpressure, not a fault. On exhaustion the last error
+    /// returns with the slot still holding the reply.
+    #[allow(clippy::too_many_arguments)]
+    fn try_chain(
+        self: &Arc<Self>,
+        shard: usize,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+        mut tried: Vec<usize>,
+        band: bool,
+        slot: &ReplySlot,
+    ) -> Result<(usize, u64)> {
+        let mut shard = shard;
+        let mut ops = ops;
+        loop {
+            tried.push(shard);
+            let plane = Arc::clone(self);
+            let retained = ops.clone();
+            let tried_next = tried.clone();
+            let slot_next = Arc::clone(slot);
+            let at = shard;
+            let wrapped = Reply::Callback(Box::new(move |rq, out| {
+                plane.resolve(at, rq, out, retained, policy, tried_next, band, slot_next);
+            }));
+            match self.clients[shard].try_submit(req, ops, policy, wrapped) {
+                Ok(token) => return Ok((shard, token)),
+                Err((e, _wrapped, ops_back)) => {
+                    if e.downcast_ref::<QueueFull>().is_some() {
+                        return Err(e);
+                    }
+                    self.record_failure(shard);
+                    match self.pick(&tried) {
+                        Some(next) => {
+                            shard = next;
+                            ops = ops_back;
+                        }
+                        None => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    /// One attempt resolved: success (or any proof-of-life error)
+    /// passes through to the caller's reply; a [`SchedulerPanicked`]
+    /// resolution re-dispatches to the next healthy shard — the
+    /// original error surfaces only when every shard was tried. Runs on
+    /// scheduler threads.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve(
+        self: &Arc<Self>,
+        shard: usize,
+        req: MatMulRequest,
+        out: Result<MatOutput>,
+        retained: Operands,
+        policy: AdmissionPolicy,
+        tried: Vec<usize>,
+        band: bool,
+        slot: ReplySlot,
+    ) {
+        match out {
+            Err(e) if e.downcast_ref::<SchedulerPanicked>().is_some() => {
+                self.record_failure(shard);
+                match self.pick(&tried) {
+                    Some(next) => {
+                        if band {
+                            self.failover_bands.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            self.failovers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if let Err(e2) =
+                            self.try_chain(next, req, retained, policy, tried, band, &slot)
+                        {
+                            send_slot(&slot, req, Err(e2));
+                        }
+                    }
+                    None => send_slot(&slot, req, Err(e)),
+                }
+            }
+            Err(e) if e.downcast_ref::<DrainDeadlineExpired>().is_some() => {
+                // Counts against the breaker but is never re-dispatched
+                // — the server is shutting down.
+                self.record_failure(shard);
+                send_slot(&slot, req, Err(e));
+            }
+            out => {
+                // The scheduler answered — even a typed failure proves
+                // it alive.
+                self.record_success(shard);
+                send_slot(&slot, req, out);
+            }
+        }
+    }
+
+    /// The failover/breaker half of [`ShedStats`] (the shed/deadline
+    /// half comes from the shards).
+    fn snapshot(&self) -> ShedStats {
+        ShedStats {
+            failovers: self.failovers.load(Ordering::Relaxed),
+            failover_bands: self.failover_bands.load(Ordering::Relaxed),
+            breaker_trips: self.trips.load(Ordering::Relaxed),
+            breaker_probes: self.probes.load(Ordering::Relaxed),
+            breaker_recoveries: self.recoveries.load(Ordering::Relaxed),
+            ..ShedStats::default()
+        }
+    }
+
+    /// Current breaker state per shard (a peek — does not transition
+    /// open breakers to half-open).
+    fn states(&self) -> Vec<&'static str> {
+        (0..self.clients.len())
+            .map(|s| match self.breaker(s).state {
+                BreakerState::Closed => "closed",
+                BreakerState::Open { .. } => "open",
+                BreakerState::HalfOpen => "half-open",
+            })
+            .collect()
+    }
 }
 
 /// The serving coordinator (client handle): a facade over
@@ -172,6 +489,9 @@ pub struct MatMulServer {
     /// Shutdown drain budget (`ServeConfig::drain_deadline_ms`;
     /// `None` = wait for every open request, the historical behavior).
     drain_deadline: Option<Duration>,
+    /// The failover plane (`ServeConfig::shard_failover`); `None` (the
+    /// default) keeps the pre-failover dispatch path untouched.
+    failover: Option<Arc<FailoverPlane>>,
 }
 
 impl MatMulServer {
@@ -189,6 +509,13 @@ impl MatMulServer {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         };
+        let failover = cfg.shard_failover.then(|| {
+            FailoverPlane::new(
+                shards.iter().map(Shard::client).collect(),
+                cfg.breaker_threshold,
+                Duration::from_millis(cfg.breaker_probe_ms),
+            )
+        });
         Ok(MatMulServer {
             shards,
             router: RouterCounters::default(),
@@ -201,6 +528,7 @@ impl MatMulServer {
             affinity: cfg.shard_affinity,
             wall_time_s: Mutex::new(0.0),
             drain_deadline,
+            failover,
         })
     }
 
@@ -382,10 +710,23 @@ impl MatMulServer {
         let acc = SplitAcc::new(req, bands.len(), sink);
         let mut routes = Vec::with_capacity(bands.len());
         for (j, band) in bands.iter().enumerate() {
-            let shard = &self.shards[band.shard];
             let sub_ops = band_operands(&ops, band, k);
-            match shard.submit(band_request(&req, band), sub_ops, policy, band_reply(&acc, j)) {
-                Ok(token) => routes.push((shard.events.clone(), token)),
+            let sub_req = band_request(&req, band);
+            let result = match &self.failover {
+                Some(plane) => self.shards[band.shard].check_admission(&sub_req).and_then(|()| {
+                    plane
+                        .dispatch(band.shard, sub_req, sub_ops, policy, true, band_reply(&acc, j))
+                        .map(|(s, token)| (self.shards[s].events.clone(), token))
+                }),
+                None => {
+                    let shard = &self.shards[band.shard];
+                    shard
+                        .submit(sub_req, sub_ops, policy, band_reply(&acc, j))
+                        .map(|token| (shard.events.clone(), token))
+                }
+            };
+            match result {
+                Ok(route) => routes.push(route),
                 Err(e) => {
                     // Roll back: cancel the admitted bands. Their
                     // band replies land in the accumulator but the
@@ -422,11 +763,19 @@ impl MatMulServer {
         Self::validate(&req, &ops)?;
         let (tx, rx) = mpsc::channel();
         let routes = match self.route(&req) {
-            Route::Whole(s) => {
-                let shard = &self.shards[s];
-                let token = shard.submit(req, ops, policy, Reply::Handle(tx))?;
-                vec![(shard.events.clone(), token)]
-            }
+            Route::Whole(s) => match &self.failover {
+                Some(plane) => {
+                    self.shards[s].check_admission(&req)?;
+                    let (at, token) =
+                        plane.dispatch(s, req, ops, policy, false, Reply::Handle(tx))?;
+                    vec![(self.shards[at].events.clone(), token)]
+                }
+                None => {
+                    let shard = &self.shards[s];
+                    let token = shard.submit(req, ops, policy, Reply::Handle(tx))?;
+                    vec![(shard.events.clone(), token)]
+                }
+            },
             Route::Split(bands) => self.submit_split(req, ops, policy, bands, Reply::Handle(tx))?,
         };
         Ok(RequestHandle::new(req.id, rx, routes))
@@ -444,9 +793,15 @@ impl MatMulServer {
         Self::validate(&req, &ops)?;
         let reply = Reply::Callback(Box::new(callback));
         match self.route(&req) {
-            Route::Whole(s) => {
-                self.shards[s].submit(req, ops, self.policy, reply)?;
-            }
+            Route::Whole(s) => match &self.failover {
+                Some(plane) => {
+                    self.shards[s].check_admission(&req)?;
+                    plane.dispatch(s, req, ops, self.policy, false, reply)?;
+                }
+                None => {
+                    self.shards[s].submit(req, ops, self.policy, reply)?;
+                }
+            },
             Route::Split(bands) => {
                 self.submit_split(req, ops, self.policy, bands, reply)?;
             }
@@ -467,11 +822,20 @@ impl MatMulServer {
         let mut mem = MemPlaneStats::default();
         let mut pack = PackStats::default();
         let mut faults = FaultStats::default();
+        let mut shed = ShedStats::default();
         for st in &shards {
             mem.absorb(&st.mem);
             pack.absorb(&st.pack);
             faults.absorb(&st.faults);
+            shed.absorb(&st.shed);
         }
+        let breaker_states = match &self.failover {
+            Some(plane) => {
+                shed.absorb(&plane.snapshot());
+                plane.states()
+            }
+            None => Vec::new(),
+        };
         ServerStats {
             requests: agg.count(),
             requests_fp32: agg.count_by(Precision::Fp32),
@@ -491,16 +855,22 @@ impl MatMulServer {
             pack,
             faults,
             worker_health: shards.iter().flat_map(|s| s.worker_health.clone()).collect(),
+            shed,
+            breaker_states,
             shards,
             router: self.router.snapshot(),
         }
     }
 
     fn stop(&mut self) {
-        // Drain every shard concurrently, then join — total shutdown
-        // time is bounded by the slowest shard, not the sum.
+        // One absolute deadline stamped up front and fanned out before
+        // any join: every shard drains concurrently against the same
+        // instant, so total shutdown wall time is bounded by the
+        // slowest shard — not the sum — even when one shard's workers
+        // are hung and it must run its budget to the end.
+        let by = self.drain_deadline.map(|d| Instant::now() + d);
         for s in &self.shards {
-            s.drain(self.drain_deadline);
+            s.drain(by);
         }
         for s in &mut self.shards {
             s.join();
@@ -518,8 +888,10 @@ impl MatMulServer {
     }
 
     /// [`MatMulServer::shutdown`] with an explicit drain budget,
-    /// overriding the configured `drain_deadline_ms`. The budget
-    /// applies per shard, concurrently.
+    /// overriding the configured `drain_deadline_ms`. The budget is one
+    /// absolute wall-clock deadline shared by every shard — shards
+    /// drain concurrently, so shutdown takes at most the budget (plus
+    /// join overhead) no matter how many shards are wedged.
     pub fn shutdown_with_deadline(mut self, deadline: Duration) {
         self.drain_deadline = Some(deadline);
         self.stop();
@@ -533,6 +905,16 @@ impl MatMulServer {
     #[doc(hidden)]
     pub fn inject_scheduler_panic(&self) {
         for s in &self.shards {
+            let _ = s.events.send(Event::ChaosPanic);
+        }
+    }
+
+    /// Chaos-test hook: panic a single shard's scheduler thread —
+    /// shard-granular chaos for the failover tests. Out-of-range
+    /// indices are a no-op.
+    #[doc(hidden)]
+    pub fn inject_scheduler_panic_on(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
             let _ = s.events.send(Event::ChaosPanic);
         }
     }

@@ -55,13 +55,14 @@ use crate::coordinator::admission::{Admitted, Gate};
 use crate::coordinator::device::{
     spawn_device_pool_with_faults, PoolHealth, PrecisionInfo, TileDone,
 };
-use crate::coordinator::fault::FaultCounters;
+use crate::coordinator::fault::{FaultCounters, RequestShed, SloUnattainable};
 use crate::coordinator::handle::Reply;
 use crate::coordinator::policy::{PolicyParams, TileCosts};
 use crate::coordinator::pool::{BufferPool, PackCounters, WeightCache, WeightCacheCounters};
 use crate::coordinator::scheduler::{Event, Robustness, Scheduler, Shared};
 use crate::coordinator::stats::{
-    FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, StatsAgg, WindowOcc,
+    FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, ShedCounters, StatsAgg,
+    WindowOcc,
 };
 use crate::coordinator::tiler::Tiler;
 use crate::coordinator::workpool::WorkPool;
@@ -95,9 +96,23 @@ pub(crate) struct Shard {
     bufs: Arc<BufferPool>,
     fault_counters: Arc<FaultCounters>,
     health: Arc<PoolHealth>,
+    /// Request-level robustness counters (sheds, deadline expiries),
+    /// shared with this shard's scheduler thread.
+    shed: Arc<ShedCounters>,
+    /// Brownout watermark (`ServeConfig::shed_watermark`; 0 = off).
+    shed_watermark: f64,
+    /// SLO-aware admission (`ServeConfig::slo_admission`).
+    slo_admission: bool,
+    /// Admission queue depth (the brownout occupancy denominator;
+    /// 0 = unbounded, brownout inert).
+    queue_depth: usize,
+    /// Configured priority-class count (≥ 1).
+    classes: usize,
     /// Admission-token mint (cancellation addresses are shard-local:
     /// a cancel route pairs this shard's event channel with a token).
-    next_token: AtomicU64,
+    /// `Arc` so a detached [`ShardClient`] can mint from the same
+    /// sequence.
+    next_token: Arc<AtomicU64>,
 }
 
 impl Shard {
@@ -190,7 +205,10 @@ impl Shard {
         // threads.
         let work_pool = (cfg.pack_persistent && cfg.pack_workers > 1)
             .then(|| WorkPool::new(cfg.pack_workers - 1, index));
+        let shed = Arc::new(ShedCounters::default());
         let sched = Scheduler::new(
+            index,
+            Arc::clone(&shed),
             device,
             Tiler::new(info_f32.native),
             Tiler::new(info_int8.native),
@@ -229,7 +247,12 @@ impl Shard {
             bufs,
             fault_counters,
             health,
-            next_token: AtomicU64::new(0),
+            shed,
+            shed_watermark: cfg.shed_watermark,
+            slo_admission: cfg.slo_admission,
+            queue_depth: cfg.queue_depth,
+            classes: cfg.class_weights.len().max(1),
+            next_token: Arc::new(AtomicU64::new(0)),
         })
     }
 
@@ -244,21 +267,89 @@ impl Shard {
         policy: AdmissionPolicy,
         reply: Reply,
     ) -> Result<u64> {
-        self.gate.admit(policy, req.class)?;
-        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
-        let adm = Box::new(Admitted {
-            req,
-            ops: Some(ops),
-            submitted: Instant::now(),
-            reply: Some(reply),
-            token,
-            gate: Arc::clone(&self.gate),
-        });
-        if self.events.send(Event::Admit(adm)).is_err() {
-            // The returned Admitted dropped: slot freed, reply errored.
-            return Err(anyhow!("server is shut down"));
+        self.check_admission(&req)?;
+        self.client().submit(req, ops, policy, reply)
+    }
+
+    /// Request-level admission control, ahead of the queue-slot gate:
+    /// the brownout shedder and SLO-aware admission, both off at the
+    /// default knobs. A rejection here is typed and never consumes a
+    /// queue slot. The failover plane's front-door dispatch calls this
+    /// against the preferred shard before entering the re-dispatch
+    /// machinery (re-submissions deliberately skip it — the request was
+    /// already admitted once).
+    pub(crate) fn check_admission(&self, req: &MatMulRequest) -> Result<()> {
+        let class = (req.class as usize).min(self.classes - 1);
+        // Brownout: past the occupancy watermark, shed the lowest
+        // classes first and more of them the deeper into the red zone
+        // — class 0 is never shed (with a single configured class
+        // nothing is: there is no lower-priority traffic to sacrifice).
+        if self.shed_watermark > 0.0 && self.queue_depth > 0 {
+            let open = self.gate.in_flight();
+            let occ = open as f64 / self.queue_depth as f64;
+            if occ >= self.shed_watermark {
+                let frac = if self.shed_watermark >= 1.0 {
+                    1.0
+                } else {
+                    ((occ - self.shed_watermark) / (1.0 - self.shed_watermark)).clamp(0.0, 1.0)
+                };
+                let cut = ((frac * (self.classes - 1) as f64).ceil() as usize).max(1);
+                let shed_floor = (self.classes - 1).saturating_sub(cut);
+                if class > shed_floor {
+                    self.shed.shed_brownout.fetch_add(1, Ordering::Relaxed);
+                    let err =
+                        RequestShed { id: req.id, shard: self.index, class: req.class, open };
+                    return Err(anyhow::Error::new(err));
+                }
+            }
         }
-        Ok(token)
+        // SLO-aware admission: estimate attainable completion from the
+        // class's observed p99 service time scaled by the open requests
+        // already ahead — a deadline the estimate cannot meet is
+        // rejected now instead of burning device time to miss it. No
+        // class history yet = admit optimistically.
+        if self.slo_admission {
+            if let Some(deadline) = req.deadline {
+                let p99 = self
+                    .shared
+                    .stats
+                    .lock()
+                    .unwrap()
+                    .class_stats()
+                    .iter()
+                    .find(|c| c.class == class)
+                    .map(|c| c.service_p99_ms)
+                    .unwrap_or(0.0);
+                if p99 > 0.0 {
+                    let open = self.gate.in_flight();
+                    let estimated_ms = (p99 * (open as f64 + 1.0)).ceil() as u64;
+                    let deadline_ms = deadline.as_millis() as u64;
+                    if estimated_ms > deadline_ms {
+                        self.shed.shed_slo.fetch_add(1, Ordering::Relaxed);
+                        let err = SloUnattainable {
+                            id: req.id,
+                            shard: self.index,
+                            class: req.class,
+                            estimated_ms,
+                            deadline_ms,
+                        };
+                        return Err(anyhow::Error::new(err));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A detached submission handle onto this shard (see
+    /// [`ShardClient`]).
+    pub(crate) fn client(&self) -> ShardClient {
+        ShardClient {
+            shard: self.index,
+            events: self.events.clone(),
+            gate: Arc::clone(&self.gate),
+            next_token: Arc::clone(&self.next_token),
+        }
     }
 
     /// Open requests on this shard (the router's least-loaded gauge).
@@ -266,9 +357,12 @@ impl Shard {
         self.gate.in_flight()
     }
 
-    /// Ask the scheduler to stop admitting, serve what is open and exit.
-    pub(crate) fn drain(&self, deadline: Option<Duration>) {
-        let _ = self.events.send(Event::Drain(deadline));
+    /// Ask the scheduler to stop admitting, serve what is open and exit
+    /// — by the absolute deadline when one is set. The facade stamps
+    /// one instant and fans it out, so all shards drain concurrently
+    /// against the same wall-clock budget.
+    pub(crate) fn drain(&self, by: Option<Instant>) {
+        let _ = self.events.send(Event::Drain(by));
     }
 
     /// Join the engine threads (after [`Shard::drain`]).
@@ -334,8 +428,85 @@ impl Shard {
             mem,
             pack,
             faults,
+            shed: self.shed.snapshot(),
             worker_health: self.health.snapshot(),
         }
+    }
+}
+
+/// A cloneable handle for submitting into a shard from off-facade
+/// contexts: the failover plane re-dispatches requests from scheduler
+/// callback threads, where no `&Shard` is reachable. It shares the
+/// shard's event channel, admission gate and token mint, so a failover
+/// submission is indistinguishable from a front-door one — except that
+/// it deliberately skips the brownout/SLO checks: the request was
+/// already admitted once, and recovery should not re-litigate it.
+#[derive(Clone)]
+pub(crate) struct ShardClient {
+    pub(crate) shard: usize,
+    events: mpsc::Sender<Event>,
+    gate: Arc<Gate>,
+    next_token: Arc<AtomicU64>,
+}
+
+impl ShardClient {
+    /// Admit into the gate and hand the request to the shard's
+    /// scheduler (the tail of [`Shard::submit`]). The reply is dropped
+    /// unfired on a synchronous failure — the error goes to the caller
+    /// instead.
+    pub(crate) fn submit(
+        &self,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+        reply: Reply,
+    ) -> Result<u64> {
+        self.try_submit(req, ops, policy, reply).map_err(|(e, _reply, _ops)| e)
+    }
+
+    /// Like [`submit`](ShardClient::submit), but a synchronous failure
+    /// hands the reply and operands back un-consumed instead of
+    /// dropping them — the failover plane re-routes them to another
+    /// shard.
+    pub(crate) fn try_submit(
+        &self,
+        req: MatMulRequest,
+        ops: Operands,
+        policy: AdmissionPolicy,
+        reply: Reply,
+    ) -> std::result::Result<u64, (anyhow::Error, Reply, Operands)> {
+        if let Err(e) = self.gate.admit(policy, req.class) {
+            return Err((e, reply, ops));
+        }
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let adm = Box::new(Admitted {
+            req,
+            ops: Some(ops),
+            submitted: Instant::now(),
+            reply: Some(reply),
+            token,
+            gate: Arc::clone(&self.gate),
+        });
+        match self.events.send(Event::Admit(adm)) {
+            Ok(()) => Ok(token),
+            Err(mpsc::SendError(ev)) => {
+                // Dead scheduler: recover the reply and operands from
+                // the bounced event. `Admitted::drop` only releases the
+                // slot when the reply is still inside, so release it
+                // here.
+                let Event::Admit(mut adm) = ev else {
+                    unreachable!("submit bounced a non-admit event")
+                };
+                let reply = adm.reply.take().expect("reply not yet consumed");
+                let ops = adm.ops.take().expect("operands not yet consumed");
+                self.gate.release(req.class);
+                Err((anyhow!("server is shut down"), reply, ops))
+            }
+        }
+    }
+
+    pub(crate) fn in_flight(&self) -> usize {
+        self.gate.in_flight()
     }
 }
 

@@ -6,6 +6,7 @@
 use crate::arch::precision::Precision;
 use crate::util::stats::{mean, percentile};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// In-flight window occupancy aggregate, sampled once per completion
@@ -193,6 +194,82 @@ impl FaultStats {
             + self.injected_delays
             + self.injected_hangs
             + self.injected_corruptions
+    }
+}
+
+/// Request-level robustness counters: deadline expiries, SLO/brownout
+/// sheds, and the router failover plane (circuit-breaker trips, probes,
+/// recoveries and re-dispatches). All lifetime counters; all zero with
+/// the PR 9 knobs at their defaults (`slo_admission` off,
+/// `shed_watermark = 0`, `shard_failover` off, no request deadlines).
+/// The shed/deadline counters are bumped shard-side and roll up through
+/// [`ShedStats::absorb`]; the failover/breaker counters are bumped by
+/// the facade's router and merged into the server-wide snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShedStats {
+    /// Requests rejected by the brownout shedder
+    /// (`ServeConfig::shed_watermark`).
+    pub shed_brownout: u64,
+    /// Requests rejected by SLO-aware admission
+    /// (`ServeConfig::slo_admission`).
+    pub shed_slo: u64,
+    /// Requests that expired in flight past their
+    /// `MatMulRequest::with_deadline` budget.
+    pub deadline_expired: u64,
+    /// Whole requests re-dispatched to another shard after a scheduler
+    /// failure (failover mode).
+    pub failovers: u64,
+    /// Individual row-bands of M-split requests re-dispatched after a
+    /// scheduler failure.
+    pub failover_bands: u64,
+    /// Circuit breakers tripped closed → open.
+    pub breaker_trips: u64,
+    /// Half-open probe requests let through an open breaker.
+    pub breaker_probes: u64,
+    /// Breakers recovered half-open → closed (shard rejoined).
+    pub breaker_recoveries: u64,
+}
+
+impl ShedStats {
+    /// Fold another snapshot into this roll-up (every field is a
+    /// lifetime counter, so they all sum).
+    pub fn absorb(&mut self, other: &ShedStats) {
+        self.shed_brownout += other.shed_brownout;
+        self.shed_slo += other.shed_slo;
+        self.deadline_expired += other.deadline_expired;
+        self.failovers += other.failovers;
+        self.failover_bands += other.failover_bands;
+        self.breaker_trips += other.breaker_trips;
+        self.breaker_probes += other.breaker_probes;
+        self.breaker_recoveries += other.breaker_recoveries;
+    }
+
+    /// Total requests rejected at admission (brownout + SLO).
+    pub fn shed(&self) -> u64 {
+        self.shed_brownout + self.shed_slo
+    }
+}
+
+/// Shard-side atomics behind the shed/deadline fields of [`ShedStats`]:
+/// the submit path bumps the shed counters, the scheduler thread bumps
+/// `deadline_expired`, and [`snapshot`](ShedCounters::snapshot) folds
+/// them into the per-shard stats (failover/breaker fields stay zero —
+/// those live at the facade).
+#[derive(Debug, Default)]
+pub(crate) struct ShedCounters {
+    pub(crate) shed_brownout: AtomicU64,
+    pub(crate) shed_slo: AtomicU64,
+    pub(crate) deadline_expired: AtomicU64,
+}
+
+impl ShedCounters {
+    pub(crate) fn snapshot(&self) -> ShedStats {
+        ShedStats {
+            shed_brownout: self.shed_brownout.load(Ordering::Relaxed),
+            shed_slo: self.shed_slo.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            ..ShedStats::default()
+        }
     }
 }
 
@@ -475,6 +552,10 @@ pub struct ShardStats {
     pub mem: MemPlaneStats,
     pub pack: PackStats,
     pub faults: FaultStats,
+    /// This shard's request-level robustness counters (sheds, deadline
+    /// expiries). The failover/breaker fields stay zero here — they are
+    /// router-side and only appear in the server-wide roll-up.
+    pub shed: ShedStats,
     /// This shard's device workers (indices are shard-local).
     pub worker_health: Vec<WorkerHealth>,
 }
@@ -685,6 +766,21 @@ mod tests {
         f.absorb(&FaultStats { retries: 3, injected_panics: 2, ..Default::default() });
         assert_eq!(f.retries, 5);
         assert_eq!(f.injected(), 3);
+
+        let mut sh = ShedStats { shed_brownout: 1, deadline_expired: 2, ..Default::default() };
+        sh.absorb(&ShedStats {
+            shed_brownout: 3,
+            shed_slo: 4,
+            failovers: 1,
+            breaker_trips: 1,
+            ..Default::default()
+        });
+        assert_eq!(sh.shed_brownout, 4);
+        assert_eq!(sh.shed(), 8);
+        assert_eq!(sh.deadline_expired, 2);
+        assert_eq!(sh.failovers, 1);
+        assert_eq!(sh.breaker_trips, 1);
+        assert_eq!(ShedStats::default(), ShedStats::default());
 
         let mut w = WindowOcc::default();
         w.record(2);

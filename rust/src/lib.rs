@@ -101,7 +101,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::{
         Cancelled, MatMulServer, QueueFull, RequestHandle, RouterStats, ServeError, ServerStats,
-        ShardStats,
+        ShardStats, ShedStats,
     };
     pub use crate::workloads::{MatMulRequest, MatOutput, Operands};
 }

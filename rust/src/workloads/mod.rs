@@ -5,6 +5,7 @@
 use crate::arch::precision::Precision;
 use crate::util::prng::XorShift64;
 use anyhow::{anyhow, Result};
+use std::time::Duration;
 
 /// A single MatMul request: `C (m×n) = A (m×k) · B (k×n)`, executed in
 /// `precision` (per-request dispatch — one server can interleave fp32
@@ -31,19 +32,46 @@ pub struct MatMulRequest {
     /// enabled (`ServeConfig::weight_cache_bytes > 0`); with the cache
     /// off the field is ignored entirely.
     pub weight_id: Option<u64>,
+    /// Optional completion deadline, measured from admission. A request
+    /// still open when the budget elapses resolves with a typed
+    /// `DeadlineExceeded` error, its unscheduled tiles are never issued
+    /// and its queue/window slots are reclaimed — partial output is
+    /// never delivered. `None` (the default) never expires. With
+    /// `ServeConfig::slo_admission` enabled the deadline is also
+    /// checked at admission against the per-class service-time
+    /// estimate, rejecting unattainable requests immediately.
+    pub deadline: Option<Duration>,
 }
 
 impl MatMulRequest {
     /// An fp32 request (the historical default), class 0.
     pub fn f32(id: u64, m: u64, k: u64, n: u64) -> Self {
-        MatMulRequest { id, m, k, n, precision: Precision::Fp32, class: 0, weight_id: None }
+        MatMulRequest {
+            id,
+            m,
+            k,
+            n,
+            precision: Precision::Fp32,
+            class: 0,
+            weight_id: None,
+            deadline: None,
+        }
     }
 
     /// An int8 request: operands are int8-range values carried as `i32`
     /// (matching [`crate::runtime::Executable::run_i32`]), results are
     /// exact i32 accumulations. Class 0.
     pub fn int8(id: u64, m: u64, k: u64, n: u64) -> Self {
-        MatMulRequest { id, m, k, n, precision: Precision::Int8, class: 0, weight_id: None }
+        MatMulRequest {
+            id,
+            m,
+            k,
+            n,
+            precision: Precision::Int8,
+            class: 0,
+            weight_id: None,
+            deadline: None,
+        }
     }
 
     /// The same request in priority class `class`.
@@ -57,6 +85,13 @@ impl MatMulRequest {
     /// [`MatMulRequest::weight_id`]).
     pub fn with_weight_id(mut self, weight_id: u64) -> Self {
         self.weight_id = Some(weight_id);
+        self
+    }
+
+    /// The same request with a completion deadline, measured from
+    /// admission (see [`MatMulRequest::deadline`]).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -356,11 +391,13 @@ mod tests {
         let r = MatMulRequest::f32(1, 8, 8, 8);
         assert_eq!(r.class, 0);
         assert_eq!(r.weight_id, None);
+        assert_eq!(r.deadline, None);
         let hi = r.with_class(3);
         assert_eq!(hi.class, 3);
         // Everything else is untouched.
         assert_eq!((hi.id, hi.m, hi.k, hi.n, hi.precision), (1, 8, 8, 8, Precision::Fp32));
         assert_eq!(hi.weight_id, None);
+        assert_eq!(hi.deadline, None);
         assert_eq!(MatMulRequest::int8(2, 4, 4, 4).class, 0);
     }
 
@@ -371,6 +408,17 @@ mod tests {
         // Builder order is irrelevant and nothing else moves.
         assert_eq!((r.id, r.m, r.k, r.n, r.class), (5, 8, 16, 8, 1));
         assert_eq!(r.precision, Precision::Int8);
+    }
+
+    #[test]
+    fn deadline_builder() {
+        let r = MatMulRequest::f32(9, 8, 8, 8).with_deadline(Duration::from_millis(250));
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        // Nothing else moves, and builder order is irrelevant.
+        assert_eq!((r.id, r.m, r.k, r.n, r.class), (9, 8, 8, 8, 0));
+        let r2 = r.with_class(2).with_weight_id(7);
+        assert_eq!(r2.deadline, Some(Duration::from_millis(250)));
+        assert_eq!((r2.class, r2.weight_id), (2, Some(7)));
     }
 
     #[test]

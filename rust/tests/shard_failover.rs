@@ -1,0 +1,487 @@
+//! Chaos and property tests for the request-level robustness plane
+//! (PR 9): per-request deadlines, brownout/SLO load shedding, and
+//! router-level shard failover with per-shard circuit breakers.
+//!
+//! The shard-granular chaos property: kill one shard's scheduler
+//! mid-load (the doc-hidden `inject_scheduler_panic_on` hook) and
+//! * with failover **off**, every request still resolves exactly once —
+//!   success or a typed [`SchedulerPanicked`] carrying the victim's
+//!   shard index — with no hangs;
+//! * with failover **on**, every request succeeds, re-dispatched whole
+//!   or band-by-band onto the healthy shards, and every output is
+//!   **bit-identical** to a fault-free oracle run.
+//!
+//! Also pinned here: the acceptance criterion that with every PR 9
+//! knob at its default the served bits and the robustness counters are
+//! untouched. No test may hang: every wait is bounded.
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{AdmissionPolicy, BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::admission::QueueFull;
+use maxeva::coordinator::fault::{
+    DeadlineExceeded, RequestShed, SchedulerPanicked, SloUnattainable,
+};
+use maxeva::coordinator::stats::ShedStats;
+use maxeva::coordinator::MatMulServer;
+use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
+use std::time::{Duration, Instant};
+
+/// Chaos seed, sweepable from CI (`MAXEVA_CHAOS_SEED`).
+fn chaos_seed() -> u64 {
+    std::env::var("MAXEVA_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Tiny design (native 8×16×8) so tile grids are large and cheap on
+/// the scalar reference backend.
+fn small_cfg(workers: usize, pipeline_depth: usize, queue_depth: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = pipeline_depth;
+    cfg.queue_depth = queue_depth;
+    cfg
+}
+
+/// A 3-shard fleet. `shard_split_tiles` is raised above every workload
+/// here so requests route whole unless a test lowers it deliberately.
+fn fleet_cfg(failover: bool) -> ServeConfig {
+    let mut cfg = small_cfg(1, 4, 0);
+    cfg.shards = 3;
+    cfg.shard_affinity = false; // least-loaded spreads load evenly
+    cfg.shard_split_tiles = 64;
+    cfg.shard_failover = failover;
+    cfg.breaker_threshold = 1;
+    cfg.breaker_probe_ms = 50;
+    cfg
+}
+
+/// Heavy whole-routed requests (7 M-tiles < the split threshold, fat K)
+/// so flights stay open for milliseconds — long enough to be mid-load
+/// when the chaos hook kills a shard.
+fn heavy_workload(seed: u64) -> Vec<(MatMulRequest, Operands)> {
+    let reqs: Vec<MatMulRequest> = (0..9)
+        .map(|i| match i % 3 {
+            0 => MatMulRequest::f32(i, 56, 512, 48),
+            1 => MatMulRequest::int8(i, 48, 384, 48),
+            _ => MatMulRequest::f32(i, 40, 448, 56),
+        })
+        .collect();
+    materialize_mixed(&reqs, seed)
+}
+
+/// Fault-free oracle outputs for a workload (single default shard —
+/// shard count cannot change a bit, see `shard_routing.rs`).
+fn oracle(batch: &[(MatMulRequest, Operands)]) -> Vec<MatOutput> {
+    let server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let outs = batch
+        .iter()
+        .map(|(req, ops)| {
+            server
+                .submit(*req, ops.clone())
+                .unwrap()
+                .wait_timeout(Duration::from_secs(60))
+                .expect("oracle request must resolve")
+                .expect("oracle run is fault-free")
+        })
+        .collect();
+    server.shutdown();
+    outs
+}
+
+fn assert_bits(i: usize, got: &MatOutput, want: &MatOutput) {
+    match (got, want) {
+        (MatOutput::F32(g), MatOutput::F32(w)) => {
+            assert_eq!(g.len(), w.len(), "request {i}: f32 length");
+            for (j, (x, y)) in g.iter().zip(w).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "request {i} elem {j}: {x} vs {y} (recovered run must be bit-identical)"
+                );
+            }
+        }
+        (MatOutput::I32(g), MatOutput::I32(w)) => {
+            assert_eq!(g, w, "request {i}: i32 outputs differ");
+        }
+        _ => panic!("request {i}: precision mismatch between runs"),
+    }
+}
+
+/// Wait until `shard` has at least one open request, bounded — the kill
+/// must land mid-load, not on an idle scheduler.
+fn await_open(server: &MatMulServer, shard: usize) {
+    let t0 = Instant::now();
+    while server.stats().shards[shard].open_requests == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "shard {shard} never saw an open request"
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// The shard with the most open requests right now — the most damaging
+/// victim for the chaos hook.
+fn busiest_shard(server: &MatMulServer) -> usize {
+    server
+        .stats()
+        .shards
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.open_requests)
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Failover **off**: killing one shard mid-load loses only that shard's
+/// flights — each resolves fast with a typed [`SchedulerPanicked`]
+/// naming the victim — while every other request completes
+/// bit-identical to the oracle. Nothing hangs.
+#[test]
+fn killed_shard_fails_typed_without_failover() {
+    let seed = chaos_seed();
+    let batch = heavy_workload(seed);
+    let want = oracle(&batch);
+
+    let server = MatMulServer::start(&fleet_cfg(false)).unwrap();
+    let handles: Vec<_> = batch
+        .into_iter()
+        .map(|(req, ops)| server.submit(req, ops).unwrap())
+        .collect();
+    let victim = busiest_shard(&server);
+    await_open(&server, victim);
+    server.inject_scheduler_panic_on(victim);
+
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for (i, h) in handles.into_iter().enumerate() {
+        match h
+            .wait_timeout(Duration::from_secs(60))
+            .expect("every request must resolve — success or typed error, never a hang")
+        {
+            Ok(out) => {
+                assert_bits(i, &out, &want[i]);
+                ok += 1;
+            }
+            Err(e) => {
+                let typed = e
+                    .downcast_ref::<SchedulerPanicked>()
+                    .unwrap_or_else(|| panic!("request {i}: want SchedulerPanicked, got {e:#}"));
+                assert_eq!(typed.shard, victim, "request {i}: wrong shard attribution");
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed >= 1, "the kill landed on a shard with open flights — some must fail");
+    assert!(
+        ok >= 9 - 9 / 3 - 1,
+        "only the victim's flights may fail (got {ok} ok / {failed} failed)"
+    );
+    let stats = server.stats();
+    assert_eq!(stats.shed, ShedStats::default(), "failover off: no robustness counters");
+    assert!(stats.breaker_states.is_empty(), "failover off: no breakers");
+    server.shutdown();
+}
+
+/// Failover **on**: the same mid-load kill is invisible to clients —
+/// the victim's flights re-dispatch to healthy shards, every request
+/// succeeds bit-identical to the oracle, the victim's breaker trips
+/// open, and late half-open probes keep failing fast without letting
+/// the dead shard eat traffic.
+#[test]
+fn killed_shard_fails_over_bit_identical() {
+    let seed = chaos_seed();
+    let batch = heavy_workload(seed);
+    let want = oracle(&batch);
+
+    let server = MatMulServer::start(&fleet_cfg(true)).unwrap();
+    let handles: Vec<_> = batch
+        .into_iter()
+        .map(|(req, ops)| server.submit(req, ops).unwrap())
+        .collect();
+    let victim = busiest_shard(&server);
+    await_open(&server, victim);
+    server.inject_scheduler_panic_on(victim);
+
+    for (i, h) in handles.into_iter().enumerate() {
+        let out = h
+            .wait_timeout(Duration::from_secs(60))
+            .expect("every request must resolve under failover")
+            .unwrap_or_else(|e| panic!("request {i}: failover must recover, got {e:#}"));
+        assert_bits(i, &out, &want[i]);
+    }
+    let stats = server.stats();
+    assert!(stats.shed.breaker_trips >= 1, "the victim's breaker must trip");
+    assert!(
+        stats.shed.failovers + stats.shed.failover_bands >= 1,
+        "at least one open flight must have been re-dispatched"
+    );
+    assert_eq!(stats.breaker_states.len(), 3);
+    assert_eq!(stats.breaker_states[victim], "open");
+
+    // Past the probe interval the breaker half-opens lazily at routing
+    // time. Three concurrent heavies force least-loaded routing onto
+    // the (idle-looking) dead shard: the probe bounces, the breaker
+    // reopens, and every request still succeeds on a healthy shard.
+    std::thread::sleep(Duration::from_millis(80));
+    let probe_reqs: Vec<MatMulRequest> =
+        (100..103).map(|i| MatMulRequest::f32(i, 40, 448, 56)).collect();
+    let probe_handles: Vec<_> = materialize_mixed(&probe_reqs, seed + 1)
+        .into_iter()
+        .map(|(req, ops)| server.submit(req, ops).unwrap())
+        .collect();
+    for (i, h) in probe_handles.into_iter().enumerate() {
+        let out = h
+            .wait_timeout(Duration::from_secs(60))
+            .expect("post-kill request must resolve")
+            .unwrap_or_else(|e| panic!("post-kill request {i} must succeed, got {e:#}"));
+        assert_eq!(out.len(), 40 * 56);
+    }
+    let stats = server.stats();
+    assert!(stats.shed.breaker_probes >= 1, "a half-open probe must have fired");
+    assert_eq!(stats.breaker_states[victim], "open", "a failed probe re-opens the breaker");
+    assert_eq!(stats.shed.breaker_recoveries, 0, "a dead shard cannot rejoin");
+    server.shutdown();
+}
+
+/// Band-granular failover: an M-split request loses the shard holding
+/// one of its row bands; the band re-dispatches and the concatenated
+/// output is bit-identical to the fault-free run.
+#[test]
+fn split_band_fails_over_bit_identical() {
+    let seed = chaos_seed();
+    // 12 M-tiles of 8 rows → three 4-tile bands across three shards.
+    let reqs = [MatMulRequest::f32(0, 96, 512, 64)];
+    let batch = materialize_mixed(&reqs, seed);
+    let want = oracle(&batch);
+
+    let mut cfg = fleet_cfg(true);
+    cfg.shard_split_tiles = 2;
+    let server = MatMulServer::start(&cfg).unwrap();
+    let (req, ops) = batch.into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    // Every shard holds one band of the only request; any victim works.
+    await_open(&server, 1);
+    server.inject_scheduler_panic_on(1);
+
+    let out = h
+        .wait_timeout(Duration::from_secs(60))
+        .expect("split request must resolve under failover")
+        .expect("band failover must recover the request");
+    assert_bits(0, &out, &want[0]);
+    let stats = server.stats();
+    assert!(stats.router.split_requests >= 1, "the request must actually have split");
+    assert!(stats.shed.failover_bands >= 1, "the lost band must have re-dispatched");
+    server.shutdown();
+}
+
+/// A per-request deadline that expires in flight resolves the handle
+/// with the typed [`DeadlineExceeded`] — never a partial output — and
+/// reclaims its queue slot for new admissions.
+#[test]
+fn deadline_expiry_is_typed_and_reclaims_slots() {
+    let server = MatMulServer::start(&small_cfg(1, 2, 2)).unwrap();
+    // ~26M MACs on the scalar backend: far slower than a 30 ms budget.
+    let reqs = [MatMulRequest::f32(0, 128, 1600, 128).with_deadline(Duration::from_millis(30))];
+    let (req, ops) = materialize_mixed(&reqs, 7).into_iter().next().unwrap();
+    let h = server.submit(req, ops).unwrap();
+    let err = h
+        .wait_timeout(Duration::from_secs(30))
+        .expect("an expired request must resolve, not hang")
+        .expect_err("a 30 ms budget cannot fit this request");
+    let typed = err
+        .downcast_ref::<DeadlineExceeded>()
+        .unwrap_or_else(|| panic!("want DeadlineExceeded, got: {err:#}"));
+    assert_eq!(typed.id, 0);
+    assert_eq!(typed.shard, 0);
+    assert_eq!(typed.budget_ms, 30);
+
+    // Both queue slots must be free again (the `cancellation.rs`
+    // slot-leak idiom): Reject-policy probes admit and complete.
+    let probes = materialize_mixed(
+        &[MatMulRequest::f32(10, 8, 16, 8), MatMulRequest::f32(11, 8, 16, 8)],
+        8,
+    );
+    for (req, ops) in probes {
+        let out = server
+            .submit_with_policy(req, ops, AdmissionPolicy::Reject)
+            .expect("deadline eviction must free its admission slot")
+            .wait_timeout(Duration::from_secs(30))
+            .expect("probe must resolve")
+            .expect("probe is fault-free");
+        assert_eq!(out.len(), 64);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.shed.deadline_expired, 1);
+    assert_eq!(stats.requests, 2, "the expired request must not count as served");
+    server.shutdown();
+}
+
+/// Brownout shedding past the occupancy watermark rejects the lowest
+/// classes first with the typed [`RequestShed`] — and never class 0,
+/// which at a full gate still gets the plain [`QueueFull`]
+/// backpressure error instead.
+#[test]
+fn brownout_sheds_low_classes_never_class_zero() {
+    let mut cfg = small_cfg(1, 1, 2);
+    cfg.shed_watermark = 0.5;
+    let server = MatMulServer::start(&cfg).unwrap();
+    // Fill both queue slots with heavy class-0 requests.
+    let fillers: Vec<_> = materialize_mixed(
+        &[MatMulRequest::f32(0, 64, 512, 64), MatMulRequest::f32(1, 64, 512, 64)],
+        3,
+    )
+    .into_iter()
+    .map(|(req, ops)| {
+        server.submit_with_policy(req, ops, AdmissionPolicy::Reject).expect("slot free")
+    })
+    .collect();
+
+    // Occupancy 2/2 = 1.0 ≥ watermark: a class-3 request is shed with
+    // the typed error (not QueueFull — shedding outranks backpressure).
+    let mut low = MatMulRequest::f32(2, 8, 16, 8);
+    low.class = 3;
+    let (req, ops) = materialize_mixed(&[low], 4).into_iter().next().unwrap();
+    let err = server.submit_with_policy(req, ops, AdmissionPolicy::Reject).unwrap_err();
+    let typed = err
+        .downcast_ref::<RequestShed>()
+        .unwrap_or_else(|| panic!("want RequestShed, got: {err:#}"));
+    assert_eq!(typed.class, 3);
+    assert_eq!(typed.shard, 0);
+    assert_eq!(typed.open, 2);
+
+    // Class 0 is never shed: at the same occupancy it passes the
+    // shedder and hits ordinary queue backpressure.
+    let (req, ops) = materialize_mixed(&[MatMulRequest::f32(3, 8, 16, 8)], 5)
+        .into_iter()
+        .next()
+        .unwrap();
+    let err = server.submit_with_policy(req, ops, AdmissionPolicy::Reject).unwrap_err();
+    assert!(
+        err.downcast_ref::<QueueFull>().is_some(),
+        "class 0 must see backpressure, not shedding: {err:#}"
+    );
+
+    let stats = server.stats();
+    assert_eq!(stats.shed.shed_brownout, 1);
+    assert_eq!(stats.shed.shed_slo, 0);
+    for h in fillers {
+        h.wait_timeout(Duration::from_secs(60)).expect("filler must resolve").unwrap();
+    }
+    server.shutdown();
+}
+
+/// SLO-aware admission: once a class has service history, a deadline
+/// the load estimate cannot meet is rejected up front with the typed
+/// [`SloUnattainable`] instead of burning device time to miss it.
+#[test]
+fn slo_admission_rejects_unattainable_deadlines() {
+    let mut cfg = small_cfg(1, 2, 0);
+    cfg.slo_admission = true;
+    let server = MatMulServer::start(&cfg).unwrap();
+
+    // Build class-0 service history with a few heavy requests.
+    let history = materialize_mixed(
+        &[
+            MatMulRequest::f32(0, 128, 256, 128),
+            MatMulRequest::f32(1, 128, 256, 128),
+            MatMulRequest::f32(2, 128, 256, 128),
+        ],
+        11,
+    );
+    for (req, ops) in history {
+        server
+            .submit(req, ops)
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("history request must resolve")
+            .unwrap();
+    }
+
+    // Hold one heavy request open, then ask for a 1 ms deadline: the
+    // estimate (p99 × open-ahead) cannot possibly fit.
+    let (req, ops) = materialize_mixed(&[MatMulRequest::f32(3, 128, 256, 128)], 12)
+        .into_iter()
+        .next()
+        .unwrap();
+    let open = server.submit(req, ops).unwrap();
+    let doomed =
+        [MatMulRequest::f32(4, 128, 256, 128).with_deadline(Duration::from_millis(1))];
+    let (req, ops) = materialize_mixed(&doomed, 13).into_iter().next().unwrap();
+    let err = server.submit(req, ops).unwrap_err();
+    let typed = err
+        .downcast_ref::<SloUnattainable>()
+        .unwrap_or_else(|| panic!("want SloUnattainable, got: {err:#}"));
+    assert_eq!(typed.id, 4);
+    assert_eq!(typed.deadline_ms, 1);
+    assert!(typed.estimated_ms > typed.deadline_ms);
+
+    open.wait_timeout(Duration::from_secs(60)).expect("open request must resolve").unwrap();
+    assert_eq!(server.stats().shed.shed_slo, 1);
+    server.shutdown();
+}
+
+/// The acceptance pin: with every PR 9 knob at its default the
+/// robustness plane is invisible — the counters stay zero, no breakers
+/// exist, and the served bits (both precisions, multi-shard) are
+/// identical to a run with the planes armed but inert.
+#[test]
+fn default_knobs_leave_serving_bit_identical() {
+    let cfg = fleet_cfg(false);
+    assert!(!cfg.slo_admission, "SLO admission must default off");
+    assert_eq!(cfg.shed_watermark, 0.0, "brownout must default off");
+    assert!(!ServeConfig::new(DesignConfig::flagship(Precision::Fp32)).shard_failover);
+
+    let seed = chaos_seed();
+    let reqs = [
+        MatMulRequest::f32(0, 32, 64, 32),
+        MatMulRequest::int8(1, 24, 48, 24),
+        MatMulRequest::f32(2, 16, 48, 40),
+        MatMulRequest::int8(3, 16, 32, 16),
+    ];
+    let batch = materialize_mixed(&reqs, seed);
+
+    // Baseline: knobs off.
+    let server = MatMulServer::start(&cfg).unwrap();
+    let base: Vec<MatOutput> = batch
+        .iter()
+        .map(|(req, ops)| {
+            server
+                .submit(*req, ops.clone())
+                .unwrap()
+                .wait_timeout(Duration::from_secs(60))
+                .expect("must resolve")
+                .unwrap()
+        })
+        .collect();
+    let stats = server.stats();
+    assert_eq!(stats.shed, ShedStats::default(), "default knobs: all counters zero");
+    assert!(stats.breaker_states.is_empty(), "default knobs: no failover plane");
+    server.shutdown();
+
+    // Armed but inert: failover on (healthy fleet), SLO admission on
+    // (every deadline generous), brownout watermark above reachable
+    // occupancy, deadlines that never expire. Bits must not move.
+    let mut armed = fleet_cfg(true);
+    armed.slo_admission = true;
+    armed.shed_watermark = 0.99;
+    armed.queue_depth = 64;
+    let server = MatMulServer::start(&armed).unwrap();
+    for (i, (req, ops)) in batch.iter().enumerate() {
+        let out = server
+            .submit(req.with_deadline(Duration::from_secs(120)), ops.clone())
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("must resolve")
+            .unwrap();
+        assert_bits(i, &out, &base[i]);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.shed.shed(), 0, "inert knobs must shed nothing");
+    assert_eq!(stats.shed.deadline_expired, 0);
+    assert_eq!(stats.shed.failovers + stats.shed.failover_bands, 0);
+    assert_eq!(stats.breaker_states, vec!["closed"; 3]);
+    server.shutdown();
+}
