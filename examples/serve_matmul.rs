@@ -377,6 +377,90 @@ fn main() {
     println!("    breaker states: {:?} (healthy fleet — all closed)", rstats.breaker_states);
     robust.shutdown();
 
+    // Workload 8: the self-healing plane (PR 10). A 3-shard fleet with
+    // failover, shard respawn and sampled cache verification armed
+    // serves a stream; mid-stream one shard's scheduler is chaos-killed.
+    // The failover plane masks the crash (every handle still resolves),
+    // the respawn supervisor rebuilds the shard from its config, and
+    // the victim's breaker walks Open → HalfOpen → Closed on probe
+    // traffic. `ServerStats::recovery` and the typed per-shard breaker
+    // snapshots report the whole arc.
+    println!("\n[8] self-healing: shard crash, respawn, breaker re-close");
+    let mut heal_cfg = cfg.clone();
+    heal_cfg.shards = 3;
+    heal_cfg.shard_failover = true;
+    heal_cfg.breaker_threshold = 1;
+    heal_cfg.breaker_probe_ms = 50;
+    heal_cfg.shard_respawn = true;
+    heal_cfg.respawn_max_attempts = 3;
+    heal_cfg.respawn_backoff_ms = 20;
+    heal_cfg.cache_verify_interval = 1;
+    let heal = MatMulServer::start(&heal_cfg).expect("self-healing server");
+    let heal_reqs: Vec<MatMulRequest> =
+        (0..9).map(|i| MatMulRequest::f32(1300 + i, 96, 256, 96)).collect();
+    let heal_handles: Vec<_> = materialize_mixed(&heal_reqs, 800)
+        .into_iter()
+        .map(|(req, ops)| heal.submit(req, ops).expect("admission"))
+        .collect();
+    let victim = {
+        let s = heal.stats();
+        s.shards.iter().enumerate().max_by_key(|(_, sh)| sh.requests).map_or(0, |(i, _)| i)
+    };
+    heal.inject_scheduler_panic_on(victim);
+    for h in heal_handles {
+        h.wait().expect("failover must mask the crash");
+    }
+    println!("    shard {victim} killed mid-stream — all 9 requests still resolved");
+    // Drive small concurrent probe batches until the respawned victim's
+    // breaker closes (concurrency pushes least-loaded routing onto the
+    // idle replacement, which is what lets the half-open probe through).
+    let t0 = std::time::Instant::now();
+    let mut probe_id = 1400u64;
+    loop {
+        let s = heal.stats();
+        if s.recovery.breaker_recoveries >= 1
+            && s.breaker_states.get(victim).copied() == Some("closed")
+        {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "breaker did not re-close");
+        let probes: Vec<MatMulRequest> =
+            (0..3).map(|j| MatMulRequest::f32(probe_id + j, 64, 128, 64)).collect();
+        probe_id += 3;
+        let probe_handles: Vec<_> = materialize_mixed(&probes, 801)
+            .into_iter()
+            .map(|(req, ops)| heal.submit(req, ops).expect("probe admission"))
+            .collect();
+        for h in probe_handles {
+            h.wait().expect("probe must succeed under failover");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let hstats = heal.stats();
+    println!(
+        "    RecoveryStats: respawns {} (failures {}) · rewarmed entries {} · cache \
+         verifications {} · poisoned evictions {} · breaker trips/probes/recoveries {}/{}/{}",
+        hstats.recovery.respawns,
+        hstats.recovery.respawn_failures,
+        hstats.recovery.rewarmed_entries,
+        hstats.recovery.cache_verifications,
+        hstats.recovery.poisoned_evictions,
+        hstats.recovery.breaker_trips,
+        hstats.recovery.breaker_probes,
+        hstats.recovery.breaker_recoveries
+    );
+    for (i, sh) in hstats.shards.iter().enumerate() {
+        if let Some(b) = sh.breaker {
+            println!(
+                "    shard {i}: breaker {} · consecutive failures {} · last failure {}",
+                b.state,
+                b.consecutive_failures,
+                b.last_failure.unwrap_or("none"),
+            );
+        }
+    }
+    heal.shutdown();
+
     let stats = server.stats();
     println!("\n==== serving report ====");
     println!("requests        : {}", stats.requests);

@@ -15,7 +15,7 @@
 //!
 //!     cargo bench --bench e2e_serving -- [--quick] [--json PATH] \
 //!         [--load-json PATH] [--weight-json PATH] [--chaos-json PATH] \
-//!         [--shard-json PATH] [--overload-json PATH]
+//!         [--shard-json PATH] [--overload-json PATH] [--recovery-json PATH]
 //!
 //! `--quick` shrinks sizes/repetitions to CI-smoke scale; `--json PATH`
 //! writes the depth-1 vs depth-N A/B numbers as a JSON report (uploaded
@@ -33,7 +33,12 @@
 //! `--overload-json PATH` writes the overload report (open-loop Poisson
 //! arrivals past saturation, brownout shedding off vs on: goodput, p99
 //! per class, shed/backpressure counts — uploaded as the `e2e-overload`
-//! artifact by the `bench-smoke` CI job).
+//! artifact by the `bench-smoke` CI job); `--recovery-json PATH` writes
+//! the availability-under-crash report (a shard chaos-killed mid-stream
+//! with failover + respawn off vs on: goodput dip depth/width around
+//! the kill, time from kill to the victim's breaker closing on the
+//! respawned shard — uploaded as the `e2e-recovery` artifact by the
+//! `bench-smoke` CI job).
 
 // The closed-batch A/B legs intentionally replay through the
 // deprecated `run_batch` wrapper (`coordinator::compat`).
@@ -53,7 +58,7 @@ use maxeva::runtime::default_artifacts_dir;
 use maxeva::util::prng::XorShift64;
 use maxeva::workloads::{
     materialize_batch, materialize_mixed, merge_arrivals, mixed_trace, poisson_arrivals,
-    MatMulRequest,
+    MatMulRequest, MatOutput,
 };
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -250,6 +255,203 @@ fn run_overload(
     OverloadLeg { completed, shed, queue_full, wall_s, classes: stats.classes, shed_stats: stats.shed }
 }
 
+/// One leg of the availability-under-crash A/B.
+struct RecoveryLeg {
+    completed: usize,
+    failed: usize,
+    wall_s: f64,
+    /// Seconds into the stream at which the victim was killed.
+    kill_at_s: f64,
+    victim: usize,
+    /// Completion timestamps (seconds since the stream started) of every
+    /// successful request, sorted — the goodput timeline.
+    done_s: Vec<f64>,
+    /// Outputs by request id, for cross-leg bit-identity checks.
+    outputs: BTreeMap<u64, MatOutput>,
+    /// Seconds from the kill to the victim's breaker closing on the
+    /// respawned shard (recovery leg only).
+    time_to_close_s: Option<f64>,
+    stats: maxeva::coordinator::ServerStats,
+}
+
+/// Replay a Poisson stream against a 3-shard fleet and chaos-kill the
+/// busiest shard's scheduler after `kill_idx` submissions. With
+/// `recover` off the crash is fail-stop: in-flight requests on the
+/// victim fail and the dead shard keeps attracting least-loaded
+/// routing. With `recover` on (failover + breaker + respawn) every
+/// request must still resolve, and after the stream drains the leg
+/// drives probe traffic until the victim's breaker closes on the
+/// respawned shard, timing availability restoration from the kill.
+///
+/// Each completion is timestamped on its own waiter thread so the
+/// goodput timeline is not distorted by in-order waiting.
+fn run_recovery(
+    recover: bool,
+    design: &DesignConfig,
+    arrivals: &[f64],
+    stream: &[(MatMulRequest, maxeva::workloads::Operands)],
+    kill_idx: usize,
+) -> RecoveryLeg {
+    let mut cfg = ServeConfig::new(design.clone());
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = 2;
+    cfg.pipeline_depth = 4;
+    cfg.queue_depth = 0;
+    cfg.shards = 3;
+    cfg.shard_affinity = false;
+    if recover {
+        cfg.shard_failover = true;
+        cfg.breaker_threshold = 1;
+        cfg.breaker_probe_ms = 40;
+        cfg.shard_respawn = true;
+        cfg.respawn_max_attempts = 3;
+        cfg.respawn_backoff_ms = 20;
+    }
+    let server = MatMulServer::start(&cfg).expect("recovery server");
+    let results: std::sync::Mutex<Vec<(u64, f64, Option<MatOutput>)>> =
+        std::sync::Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    let (victim, kill_at_s) = std::thread::scope(|s| {
+        let (handle_tx, handle_rx) = std::sync::mpsc::channel();
+        let (server, results) = (&server, &results);
+        let submitter = s.spawn(move || {
+            let mut victim = 0usize;
+            let mut kill_at_s = 0.0f64;
+            for (i, ((req, ops), &t)) in stream.iter().zip(arrivals).enumerate() {
+                pace_until(t0, t);
+                if i == kill_idx {
+                    // Kill the busiest shard: worst case for both the
+                    // in-flight work lost and the routing attraction a
+                    // dead (0 in-flight) shard exerts afterwards.
+                    let st = server.stats();
+                    victim = st
+                        .shards
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, sh)| sh.requests)
+                        .map_or(0, |(idx, _)| idx);
+                    server.inject_scheduler_panic_on(victim);
+                    kill_at_s = t0.elapsed().as_secs_f64();
+                }
+                match server.submit(*req, ops.clone()) {
+                    Ok(h) => {
+                        if handle_tx.send((req.id, h)).is_err() {
+                            break;
+                        }
+                    }
+                    // Without recovery, routing to the dead shard fails
+                    // at submit — counted against availability.
+                    Err(_) => {
+                        let now = t0.elapsed().as_secs_f64();
+                        results.lock().unwrap().push((req.id, now, None));
+                    }
+                }
+            }
+            (victim, kill_at_s)
+        });
+        for (id, h) in handle_rx {
+            s.spawn(move || {
+                let out = h.wait().ok();
+                let now = t0.elapsed().as_secs_f64();
+                results.lock().unwrap().push((id, now, out));
+            });
+        }
+        submitter.join().unwrap()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut done_s = Vec::new();
+    let mut outputs = BTreeMap::new();
+    let mut failed = 0usize;
+    for (id, t, out) in results.into_inner().unwrap() {
+        match out {
+            Some(o) => {
+                done_s.push(t);
+                outputs.insert(id, o);
+            }
+            None => failed += 1,
+        }
+    }
+    done_s.sort_by(f64::total_cmp);
+    let mut time_to_close_s = None;
+    if recover {
+        // Availability is restored when the victim's breaker closes on
+        // the respawned shard. The stream itself may already have done
+        // the half-open probe; otherwise drive small probe batches at
+        // the fleet until least-loaded routing lets one through.
+        let bound = Instant::now() + Duration::from_secs(30);
+        let mut pid = 8_000_000u64;
+        loop {
+            let st = server.stats();
+            if st.recovery.breaker_recoveries >= 1
+                && st.breaker_states.get(victim).copied() == Some("closed")
+            {
+                time_to_close_s = Some(t0.elapsed().as_secs_f64() - kill_at_s);
+                break;
+            }
+            assert!(
+                Instant::now() < bound,
+                "victim breaker must close after respawn (stuck at {:?})",
+                st.breaker_states
+            );
+            let probes: Vec<MatMulRequest> =
+                (0..3).map(|j| MatMulRequest::f32(pid + j, 24, 64, 24)).collect();
+            pid += 3;
+            let probe_batch = materialize_mixed(&probes, 2718);
+            let handles: Vec<_> = probe_batch
+                .iter()
+                .map(|(r, o)| server.submit(*r, o.clone()).expect("probe submit"))
+                .collect();
+            for h in handles {
+                h.wait().expect("probe must succeed under failover");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let stats = server.stats();
+    server.shutdown();
+    RecoveryLeg {
+        completed: outputs.len(),
+        failed,
+        wall_s,
+        kill_at_s,
+        victim,
+        done_s,
+        outputs,
+        time_to_close_s,
+        stats,
+    }
+}
+
+/// Windowed goodput around the kill. Returns `(pre_kill_rps,
+/// dip_floor_ratio, dip_width_s)`: the completion rate before the kill,
+/// the deepest post-kill 100 ms window as a fraction of it, and how
+/// long goodput stayed below half of it (contiguous from the kill).
+fn goodput_dip(done_s: &[f64], kill_at_s: f64, wall_s: f64) -> (f64, f64, f64) {
+    const WINDOW_S: f64 = 0.1;
+    let pre = done_s.iter().filter(|&&t| t < kill_at_s).count();
+    let pre_rate = pre as f64 / kill_at_s.max(1e-9);
+    let mut min_rate = f64::INFINITY;
+    let mut width_s = 0.0;
+    let mut in_dip = true;
+    let mut t = kill_at_s;
+    while t < wall_s {
+        let hi = t + WINDOW_S;
+        let c = done_s.iter().filter(|&&x| x >= t && x < hi).count();
+        let rate = c as f64 / WINDOW_S;
+        min_rate = min_rate.min(rate);
+        if in_dip && rate < 0.5 * pre_rate {
+            width_s += WINDOW_S;
+        } else {
+            in_dip = false;
+        }
+        t = hi;
+    }
+    if !min_rate.is_finite() {
+        min_rate = 0.0;
+    }
+    (pre_rate, min_rate / pre_rate.max(1e-9), width_s)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -281,6 +483,11 @@ fn main() {
     let overload_json_path = args
         .iter()
         .position(|a| a == "--overload-json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let recovery_json_path = args
+        .iter()
+        .position(|a| a == "--recovery-json")
         .and_then(|i| args.get(i + 1))
         .cloned();
 
@@ -1137,6 +1344,137 @@ fn main() {
         o.insert("runs".into(), Json::Arr(overload_runs));
         match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
             Ok(()) => println!("\nwrote overload report to {path}"),
+            Err(e) => println!("\nWARN: could not write {path}: {e}"),
+        }
+    }
+
+    common::banner("availability under crash: shard killed mid-stream, recovery off vs on");
+    // The same Poisson stream replays against a 3-shard fleet twice;
+    // a third of the way in, the busiest shard's scheduler is
+    // chaos-killed. The off leg (no failover, no respawn) shows the
+    // blast radius; the on leg (failover + breaker + respawn) must mask
+    // the crash — zero failures, bit-identical outputs — and the report
+    // captures the goodput dip's depth/width and how long the victim
+    // takes to rejoin (time from kill to its breaker closing on the
+    // respawned shard).
+    let n_avail = if quick { 48usize } else { 120 };
+    let avail_rate = if quick { 40.0 } else { 60.0 };
+    let kill_idx = n_avail / 3;
+    let avail_reqs: Vec<MatMulRequest> = (0..n_avail)
+        .map(|i| MatMulRequest::f32(4000 + i as u64, 24, 64, 24))
+        .collect();
+    let avail_stream = materialize_mixed(&avail_reqs, 6006);
+    let avail_arrivals = poisson_arrivals(n_avail, avail_rate, 75);
+    let mut recovery_legs: Vec<(RecoveryLeg, f64, f64, f64)> = Vec::new();
+    for recover in [false, true] {
+        let leg =
+            run_recovery(recover, &chaos_design, &avail_arrivals, &avail_stream, kill_idx);
+        let (pre_rate, dip_floor, dip_width) =
+            goodput_dip(&leg.done_s, leg.kill_at_s, leg.wall_s);
+        println!(
+            "  recovery {}: {} completed / {} failed · wall {:.3} s · shard {} killed at \
+             {:.3} s · pre-kill goodput {pre_rate:.1} req/s · dip floor {:.2}× for {:.2} s",
+            if recover { "on " } else { "off" },
+            leg.completed,
+            leg.failed,
+            leg.wall_s,
+            leg.victim,
+            leg.kill_at_s,
+            dip_floor,
+            dip_width,
+        );
+        if recover {
+            println!(
+                "    respawns {} · rewarmed entries {} · breaker trips {} / probes {} / \
+                 recoveries {} · breaker closed {:.3} s after kill",
+                leg.stats.recovery.respawns,
+                leg.stats.recovery.rewarmed_entries,
+                leg.stats.recovery.breaker_trips,
+                leg.stats.recovery.breaker_probes,
+                leg.stats.recovery.breaker_recoveries,
+                leg.time_to_close_s.unwrap_or(f64::NAN),
+            );
+        }
+        recovery_legs.push((leg, pre_rate, dip_floor, dip_width));
+    }
+    let (off_leg, on_leg) = (&recovery_legs[0].0, &recovery_legs[1].0);
+    assert!(
+        off_leg.failed >= 1,
+        "the mid-stream kill must be visible without recovery"
+    );
+    assert_eq!(
+        on_leg.failed, 0,
+        "failover + respawn must mask the crash completely"
+    );
+    assert_eq!(on_leg.completed, n_avail, "every streamed request must resolve");
+    assert!(on_leg.stats.recovery.respawns >= 1, "the victim must be respawned");
+    // Requests that survived the unrecovered leg must match the
+    // recovered leg's outputs bit-for-bit (same ids, same operands).
+    let recovery_identical =
+        off_leg.outputs.iter().all(|(id, o)| on_leg.outputs.get(id) == Some(o));
+    println!(
+        "  outputs bit-identical on the {} requests both legs completed: {recovery_identical}",
+        off_leg.completed,
+    );
+    assert!(
+        recovery_identical,
+        "recovery must never change the bits of surviving requests"
+    );
+    if let Some(path) = recovery_json_path {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("e2e_recovery".into()));
+        o.insert("quick".into(), Json::Bool(quick));
+        o.insert("requests".into(), Json::Num(n_avail as f64));
+        o.insert("offered_rps".into(), Json::Num(avail_rate));
+        o.insert("kill_after_requests".into(), Json::Num(kill_idx as f64));
+        let legs_json: Vec<Json> = recovery_legs
+            .iter()
+            .zip([false, true])
+            .map(|((leg, pre_rate, dip_floor, dip_width), recover)| {
+                let mut r = BTreeMap::new();
+                r.insert("recovery".into(), Json::Bool(recover));
+                r.insert("victim".into(), Json::Num(leg.victim as f64));
+                r.insert("completed".into(), Json::Num(leg.completed as f64));
+                r.insert("failed".into(), Json::Num(leg.failed as f64));
+                r.insert("wall_s".into(), Json::Num(leg.wall_s));
+                r.insert("kill_at_s".into(), Json::Num(leg.kill_at_s));
+                r.insert("pre_kill_goodput_rps".into(), Json::Num(*pre_rate));
+                r.insert("dip_floor_ratio".into(), Json::Num(*dip_floor));
+                r.insert("dip_width_s".into(), Json::Num(*dip_width));
+                r.insert(
+                    "respawns".into(),
+                    Json::Num(leg.stats.recovery.respawns as f64),
+                );
+                r.insert(
+                    "rewarmed_entries".into(),
+                    Json::Num(leg.stats.recovery.rewarmed_entries as f64),
+                );
+                r.insert(
+                    "breaker_trips".into(),
+                    Json::Num(leg.stats.recovery.breaker_trips as f64),
+                );
+                r.insert(
+                    "breaker_probes".into(),
+                    Json::Num(leg.stats.recovery.breaker_probes as f64),
+                );
+                r.insert(
+                    "breaker_recoveries".into(),
+                    Json::Num(leg.stats.recovery.breaker_recoveries as f64),
+                );
+                if let Some(t) = leg.time_to_close_s {
+                    r.insert("time_to_breaker_close_s".into(), Json::Num(t));
+                }
+                Json::Obj(r)
+            })
+            .collect();
+        o.insert("legs".into(), Json::Arr(legs_json));
+        o.insert(
+            "common_requests".into(),
+            Json::Num(off_leg.completed as f64),
+        );
+        o.insert("bit_identical_on_common".into(), Json::Bool(recovery_identical));
+        match std::fs::write(&path, Json::Obj(o).to_string_pretty()) {
+            Ok(()) => println!("\nwrote recovery report to {path}"),
             Err(e) => println!("\nWARN: could not write {path}: {e}"),
         }
     }

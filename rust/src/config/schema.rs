@@ -445,6 +445,39 @@ pub struct ServeConfig {
     /// through (half-open), milliseconds. A successful probe closes the
     /// breaker — a respawned shard rejoins the rotation.
     pub breaker_probe_ms: u64,
+    /// Supervised shard respawn (the recovery plane): when a shard's
+    /// scheduler dies and its breaker records the failure, a supervisor
+    /// rebuilds the shard from this config under the same index. No
+    /// in-flight work carries over (failover already re-dispatched it);
+    /// the rebuilt shard rejoins once a half-open probe succeeds.
+    /// `false` (the default) keeps dead shards permanently removed —
+    /// the PR 9 behavior. Requires `shard_failover`.
+    pub shard_respawn: bool,
+    /// Respawn attempts a shard gets over the server's lifetime before
+    /// it degrades to permanent removal (a crash-looping shard must not
+    /// flap forever). Only meaningful with `shard_respawn`.
+    pub respawn_max_attempts: u32,
+    /// Backoff before respawn attempt `n`, as `n × this` milliseconds
+    /// (linear), so repeated crashes space their rebuilds out.
+    pub respawn_backoff_ms: u64,
+    /// Rewarm budget: up to this many of the hottest cached packed
+    /// weights (by per-entry hit count) are rescued from a dead shard's
+    /// cache into its respawned successor, each CRC-verified on its
+    /// first hit. `0` (the default) starts every respawned shard cold.
+    pub respawn_rewarm_top_k: usize,
+    /// Release-mode memory-plane integrity: verify a cache hit's packed
+    /// pool against the FNV-1a checksum stamped at insert every this
+    /// many hits (plus the first hit on every rewarmed entry). A
+    /// mismatch quarantines the entry and the request re-packs from its
+    /// source operands — no client-visible error. `0` (the default)
+    /// disables sampled verification, the PR 9 behavior (debug builds
+    /// still byte-verify every hit).
+    pub cache_verify_interval: u64,
+    /// How long a poisoned cache key stays blacklisted after a
+    /// verification failure, milliseconds — re-inserts are refused for
+    /// the cooldown so a corrupting entry cannot immediately repoison
+    /// the cache.
+    pub cache_quarantine_ms: u64,
 }
 
 impl ServeConfig {
@@ -478,6 +511,12 @@ impl ServeConfig {
             shard_failover: false,
             breaker_threshold: 3,
             breaker_probe_ms: 500,
+            shard_respawn: false,
+            respawn_max_attempts: 3,
+            respawn_backoff_ms: 100,
+            respawn_rewarm_top_k: 0,
+            cache_verify_interval: 0,
+            cache_quarantine_ms: 5000,
         }
     }
 
@@ -537,6 +576,19 @@ impl ServeConfig {
                 "0 (failover needs at least one failure to trip)".into(),
             ));
         }
+        if self.shard_respawn && !self.shard_failover {
+            return Err(ConfigError::Invalid(
+                "shard_respawn",
+                "true without shard_failover (the supervisor is driven by the failover plane)"
+                    .into(),
+            ));
+        }
+        if self.shard_respawn && self.respawn_max_attempts == 0 {
+            return Err(ConfigError::Invalid(
+                "respawn_max_attempts",
+                "0 (respawn needs at least one attempt)".into(),
+            ));
+        }
         if let Some(plan) = &self.fault_plan {
             if !(0.0..=1.0).contains(&plan.rate) {
                 return Err(ConfigError::Invalid("fault_plan.rate", plan.rate.to_string()));
@@ -587,6 +639,21 @@ impl ServeConfig {
         o.insert("shard_failover".into(), Json::Bool(self.shard_failover));
         o.insert("breaker_threshold".into(), Json::Num(self.breaker_threshold as f64));
         o.insert("breaker_probe_ms".into(), Json::Num(self.breaker_probe_ms as f64));
+        o.insert("shard_respawn".into(), Json::Bool(self.shard_respawn));
+        o.insert(
+            "respawn_max_attempts".into(),
+            Json::Num(self.respawn_max_attempts as f64),
+        );
+        o.insert("respawn_backoff_ms".into(), Json::Num(self.respawn_backoff_ms as f64));
+        o.insert(
+            "respawn_rewarm_top_k".into(),
+            Json::Num(self.respawn_rewarm_top_k as f64),
+        );
+        o.insert(
+            "cache_verify_interval".into(),
+            Json::Num(self.cache_verify_interval as f64),
+        );
+        o.insert("cache_quarantine_ms".into(), Json::Num(self.cache_quarantine_ms as f64));
         Json::Obj(o)
     }
 
@@ -711,6 +778,30 @@ impl ServeConfig {
                 .get("breaker_probe_ms")
                 .and_then(Json::as_u64)
                 .unwrap_or(500),
+            shard_respawn: v
+                .get("shard_respawn")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            respawn_max_attempts: v
+                .get("respawn_max_attempts")
+                .and_then(Json::as_u64)
+                .unwrap_or(3) as u32,
+            respawn_backoff_ms: v
+                .get("respawn_backoff_ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(100),
+            respawn_rewarm_top_k: v
+                .get("respawn_rewarm_top_k")
+                .and_then(Json::as_u64)
+                .unwrap_or(0) as usize,
+            cache_verify_interval: v
+                .get("cache_verify_interval")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            cache_quarantine_ms: v
+                .get("cache_quarantine_ms")
+                .and_then(Json::as_u64)
+                .unwrap_or(5000),
         })
     }
 
@@ -879,6 +970,36 @@ impl ServeConfigBuilder {
         self
     }
 
+    pub fn shard_respawn(mut self, on: bool) -> Self {
+        self.cfg.shard_respawn = on;
+        self
+    }
+
+    pub fn respawn_max_attempts(mut self, attempts: u32) -> Self {
+        self.cfg.respawn_max_attempts = attempts;
+        self
+    }
+
+    pub fn respawn_backoff_ms(mut self, ms: u64) -> Self {
+        self.cfg.respawn_backoff_ms = ms;
+        self
+    }
+
+    pub fn respawn_rewarm_top_k(mut self, k: usize) -> Self {
+        self.cfg.respawn_rewarm_top_k = k;
+        self
+    }
+
+    pub fn cache_verify_interval(mut self, hits: u64) -> Self {
+        self.cfg.cache_verify_interval = hits;
+        self
+    }
+
+    pub fn cache_quarantine_ms(mut self, ms: u64) -> Self {
+        self.cfg.cache_quarantine_ms = ms;
+        self
+    }
+
     /// Validate and produce the config ([`ServeConfig::validate`]).
     pub fn build(self) -> Result<ServeConfig, ConfigError> {
         self.cfg.validate()?;
@@ -979,6 +1100,12 @@ mod tests {
         assert!(!c.shard_failover, "shard failover defaults off");
         assert_eq!(c.breaker_threshold, 3);
         assert_eq!(c.breaker_probe_ms, 500);
+        assert!(!c.shard_respawn, "shard respawn defaults off");
+        assert_eq!(c.respawn_max_attempts, 3);
+        assert_eq!(c.respawn_backoff_ms, 100);
+        assert_eq!(c.respawn_rewarm_top_k, 0, "rewarm defaults off");
+        assert_eq!(c.cache_verify_interval, 0, "sampled cache verification defaults off");
+        assert_eq!(c.cache_quarantine_ms, 5000);
     }
 
     #[test]
@@ -1032,6 +1159,12 @@ mod tests {
         c.shard_failover = true;
         c.breaker_threshold = 9;
         c.breaker_probe_ms = 250;
+        c.shard_respawn = true;
+        c.respawn_max_attempts = 5;
+        c.respawn_backoff_ms = 40;
+        c.respawn_rewarm_top_k = 12;
+        c.cache_verify_interval = 32;
+        c.cache_quarantine_ms = 900;
         let back = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
         // And through a file, like the launcher loads it.
@@ -1186,6 +1319,12 @@ mod tests {
             .shard_failover(true)
             .breaker_threshold(2)
             .breaker_probe_ms(100)
+            .shard_respawn(true)
+            .respawn_max_attempts(2)
+            .respawn_backoff_ms(25)
+            .respawn_rewarm_top_k(4)
+            .cache_verify_interval(16)
+            .cache_quarantine_ms(750)
             .build()
             .unwrap();
         assert_eq!(cfg.workers, 4);
@@ -1198,6 +1337,12 @@ mod tests {
         assert!(cfg.shard_failover);
         assert_eq!(cfg.breaker_threshold, 2);
         assert_eq!(cfg.breaker_probe_ms, 100);
+        assert!(cfg.shard_respawn);
+        assert_eq!(cfg.respawn_max_attempts, 2);
+        assert_eq!(cfg.respawn_backoff_ms, 25);
+        assert_eq!(cfg.respawn_rewarm_top_k, 4);
+        assert_eq!(cfg.cache_verify_interval, 16);
+        assert_eq!(cfg.cache_quarantine_ms, 750);
         // Untouched knobs keep their ServeConfig::new defaults.
         assert_eq!(cfg.aging_threshold, 64);
         assert_eq!(cfg.drain_deadline_ms, 0);
@@ -1255,6 +1400,19 @@ mod tests {
             Err(ConfigError::Invalid("breaker_threshold", _))
         ));
         b().breaker_threshold(0).build().unwrap();
+        // Respawn is driven by the failover plane — without it the
+        // supervisor would never hear about a death.
+        assert!(matches!(
+            b().shard_respawn(true).build(),
+            Err(ConfigError::Invalid("shard_respawn", _))
+        ));
+        assert!(matches!(
+            b().shard_failover(true).shard_respawn(true).respawn_max_attempts(0).build(),
+            Err(ConfigError::Invalid("respawn_max_attempts", _))
+        ));
+        b().shard_failover(true).shard_respawn(true).build().unwrap();
+        // Inert while respawn is off, whatever the attempt budget says.
+        b().respawn_max_attempts(0).build().unwrap();
         let mut bad_plan = FaultPlan::new(1, 0.5, vec![]);
         bad_plan.rate = 2.0;
         assert!(matches!(

@@ -43,10 +43,26 @@ pub enum FaultKind {
     /// so the scheduler's verify pass rejects the tile (a transport
     /// fault).
     Corrupt,
+    /// Flip one word of a cached packed-weight pool (the memory plane,
+    /// not a device worker): a silent-corruption fault the sampled
+    /// verify-on-hit path (`ServeConfig::cache_verify_interval`) must
+    /// detect, quarantine and transparently re-pack around. Driven at
+    /// the scheduler layer, never drawn by the device injector.
+    CacheCorrupt,
+    /// Kill a whole shard's scheduler thread (the recovery plane's
+    /// trigger): the breaker trips, failover re-dispatches open
+    /// flights, and — with `ServeConfig::shard_respawn` — the
+    /// supervisor rebuilds the shard. Driven at the facade layer,
+    /// never drawn by the device injector.
+    ShardCrash,
 }
 
 impl FaultKind {
-    /// Every injectable kind, in the order the seeded sweep walks them.
+    /// Every *device-injectable* kind, in the order the seeded sweep
+    /// walks them. The scheduler/facade-plane kinds
+    /// ([`FaultKind::CacheCorrupt`], [`FaultKind::ShardCrash`]) are
+    /// deliberately excluded so an empty-`kinds` plan keeps drawing the
+    /// exact per-tag sequence it drew before they existed.
     pub fn all() -> [FaultKind; 5] {
         [
             FaultKind::Error,
@@ -57,6 +73,27 @@ impl FaultKind {
         ]
     }
 
+    /// Every kind, including the non-device (memory/recovery plane)
+    /// ones — the parse/Display/JSON vocabulary.
+    pub fn every() -> [FaultKind; 7] {
+        [
+            FaultKind::Error,
+            FaultKind::Panic,
+            FaultKind::Delay,
+            FaultKind::Hang,
+            FaultKind::Corrupt,
+            FaultKind::CacheCorrupt,
+            FaultKind::ShardCrash,
+        ]
+    }
+
+    /// Whether a device worker can inject this kind on a tile job.
+    /// `CacheCorrupt` targets the packed-weight cache and `ShardCrash`
+    /// a scheduler thread; both are driven above the device plane.
+    pub fn device_injectable(self) -> bool {
+        !matches!(self, FaultKind::CacheCorrupt | FaultKind::ShardCrash)
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "error" => Some(FaultKind::Error),
@@ -64,6 +101,8 @@ impl FaultKind {
             "delay" => Some(FaultKind::Delay),
             "hang" => Some(FaultKind::Hang),
             "corrupt" => Some(FaultKind::Corrupt),
+            "cache_corrupt" => Some(FaultKind::CacheCorrupt),
+            "shard_crash" => Some(FaultKind::ShardCrash),
             _ => None,
         }
     }
@@ -77,6 +116,8 @@ impl std::fmt::Display for FaultKind {
             FaultKind::Delay => "delay",
             FaultKind::Hang => "hang",
             FaultKind::Corrupt => "corrupt",
+            FaultKind::CacheCorrupt => "cache_corrupt",
+            FaultKind::ShardCrash => "shard_crash",
         })
     }
 }
@@ -173,6 +214,12 @@ pub struct FaultCounters {
     pub injected_delays: AtomicU64,
     pub injected_hangs: AtomicU64,
     pub injected_corruptions: AtomicU64,
+    /// Cached packed-weight pools corrupted by the chaos layer
+    /// ([`FaultKind::CacheCorrupt`], injected at the scheduler).
+    pub injected_cache_corruptions: AtomicU64,
+    /// Scheduler threads killed by the chaos layer
+    /// ([`FaultKind::ShardCrash`], injected at the facade).
+    pub injected_shard_crashes: AtomicU64,
     /// Tiles whose deadline expired before their completion arrived.
     pub timeouts: AtomicU64,
     /// Tiles re-dispatched after a fault or timeout.
@@ -197,6 +244,8 @@ impl FaultCounters {
             + self.injected_delays.load(Ordering::Relaxed)
             + self.injected_hangs.load(Ordering::Relaxed)
             + self.injected_corruptions.load(Ordering::Relaxed)
+            + self.injected_cache_corruptions.load(Ordering::Relaxed)
+            + self.injected_shard_crashes.load(Ordering::Relaxed)
     }
 
     pub(crate) fn count_injected(&self, kind: FaultKind) {
@@ -206,6 +255,8 @@ impl FaultCounters {
             FaultKind::Delay => &self.injected_delays,
             FaultKind::Hang => &self.injected_hangs,
             FaultKind::Corrupt => &self.injected_corruptions,
+            FaultKind::CacheCorrupt => &self.injected_cache_corruptions,
+            FaultKind::ShardCrash => &self.injected_shard_crashes,
         };
         c.fetch_add(1, Ordering::Relaxed);
     }
@@ -246,10 +297,19 @@ impl FaultInjector {
         if rng.next_f64() >= self.plan.rate {
             return None;
         }
+        // Non-device kinds (CacheCorrupt, ShardCrash) are driven at the
+        // scheduler/facade layers; a worker never draws them. A plan
+        // listing only those kinds injects nothing here.
         let all = FaultKind::all();
-        let kinds: &[FaultKind] =
-            if self.plan.kinds.is_empty() { &all } else { &self.plan.kinds };
-        let kind = *rng.choose(kinds);
+        let kinds: Vec<FaultKind> = if self.plan.kinds.is_empty() {
+            all.to_vec()
+        } else {
+            self.plan.kinds.iter().copied().filter(|k| k.device_injectable()).collect()
+        };
+        if kinds.is_empty() {
+            return None;
+        }
+        let kind = *rng.choose(&kinds);
         if self.plan.max_faults > 0 {
             // Claim one unit of budget; back off once it is spent.
             let prev = self.granted.fetch_add(1, Ordering::Relaxed);
@@ -411,10 +471,46 @@ mod tests {
 
     #[test]
     fn kind_parse_display_roundtrip() {
-        for k in FaultKind::all() {
+        for k in FaultKind::every() {
             assert_eq!(FaultKind::parse(&k.to_string()), Some(k));
         }
         assert_eq!(FaultKind::parse("meltdown"), None);
+        // The device sweep stays the historical five: adding the
+        // memory/recovery-plane kinds to `all()` would shift every
+        // seeded draw of an empty-`kinds` plan.
+        assert_eq!(FaultKind::all().len(), 5);
+        assert!(FaultKind::all().iter().all(|k| k.device_injectable()));
+        assert!(!FaultKind::CacheCorrupt.device_injectable());
+        assert!(!FaultKind::ShardCrash.device_injectable());
+    }
+
+    #[test]
+    fn non_device_kinds_roundtrip_through_plan_json() {
+        let p = FaultPlan::new(5, 1.0, vec![FaultKind::CacheCorrupt, FaultKind::ShardCrash]);
+        let back = FaultPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn device_injector_never_draws_non_device_kinds() {
+        // A mixed plan only ever injects its device-injectable subset…
+        let mixed = FaultInjector::new(FaultPlan::new(
+            13,
+            1.0,
+            vec![FaultKind::CacheCorrupt, FaultKind::Error, FaultKind::ShardCrash],
+        ));
+        for tag in 0..128 {
+            assert_eq!(mixed.decide(tag, 0), Some(FaultKind::Error));
+        }
+        // …and a plan of only scheduler/facade kinds injects nothing.
+        let none = FaultInjector::new(FaultPlan::new(
+            13,
+            1.0,
+            vec![FaultKind::CacheCorrupt, FaultKind::ShardCrash],
+        ));
+        for tag in 0..128 {
+            assert_eq!(none.decide(tag, 0), None);
+        }
     }
 
     #[test]
@@ -509,7 +605,11 @@ mod tests {
         c.count_injected(FaultKind::Error);
         c.count_injected(FaultKind::Hang);
         c.count_injected(FaultKind::Hang);
-        assert_eq!(c.injected(), 3);
+        c.count_injected(FaultKind::CacheCorrupt);
+        c.count_injected(FaultKind::ShardCrash);
+        assert_eq!(c.injected(), 5);
         assert_eq!(c.injected_hangs.load(Ordering::Relaxed), 2);
+        assert_eq!(c.injected_cache_corruptions.load(Ordering::Relaxed), 1);
+        assert_eq!(c.injected_shard_crashes.load(Ordering::Relaxed), 1);
     }
 }

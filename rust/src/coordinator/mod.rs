@@ -141,6 +141,30 @@
 //!   After `breaker_probe_ms` the breaker half-opens and the next
 //!   request probes the shard; a success closes it again (probing is
 //!   lazy, piggybacked on routing — no background thread).
+//! * **Recovery** — beyond routing *around* a failure, two opt-in
+//!   planes repair it. **Shard respawn** (`ServeConfig::shard_respawn`):
+//!   a supervisor thread, woken by breaker failures, verifies the
+//!   shard's scheduler thread actually died (a drain-deadline trip on a
+//!   live shard needs no respawn), rebuilds the engine from the same
+//!   `ServeConfig` at the same index and swaps it atomically into the
+//!   shard table. State reconciliation is minimal by design: in-flight
+//!   requests were already re-dispatched by the failover plane, so
+//!   nothing carries over except an optional rewarm of the hottest
+//!   packed weights the dying scheduler exported
+//!   (`respawn_rewarm_top_k`), each keeping its pre-crash checksum and
+//!   fully verifying on first hit. The breaker then walks
+//!   Open → HalfOpen → Closed through the normal lazy probe. Attempts
+//!   per shard are bounded (`respawn_max_attempts`, linear
+//!   `respawn_backoff_ms` backoff); a shard that exhausts them is
+//!   permanently removed — exactly the respawn-off end state. **Memory-
+//!   plane integrity** (`ServeConfig::cache_verify_interval`): every
+//!   packed pool in the weight cache carries an FNV-1a checksum stamped
+//!   at insert, and every Nth cache hit re-derives and compares it. A
+//!   mismatch evicts and quarantines the entry
+//!   (`cache_quarantine_ms`) and the request transparently re-packs
+//!   from its own operands — a typed counter
+//!   (`RecoveryStats::poisoned_evictions`), never a client-visible
+//!   error.
 //!
 //! **Guarantees.** A recovered run is bit-identical to a fault-free
 //! run: retried tiles are rebuilt from the immutable packed arenas and
@@ -164,8 +188,16 @@
 //! the identical deterministic engine path on its new shard, so its
 //! output — including the band-concat merge — is **bit-identical to
 //! the fault-free run**. A deadline expiry never delivers partial
-//! output. With every PR 9 knob at its default, the served bits are
-//! identical to the pre-robustness server for both precisions.
+//! output. The recovery plane preserves both properties as well: a
+//! respawned shard runs the identical deterministic engine (same
+//! config, same index), and a quarantined cache entry's re-pack
+//! rebuilds the identical arena from the request's own operands — so
+//! outputs are **bit-identical across respawn and across cache
+//! re-pack**, and **exactly-once resolution survives quarantine** (the
+//! re-packed request resolves through its original reply path; the
+//! corruption is absorbed as a cache miss). With every robustness and
+//! recovery knob at its default, the served bits are identical to the
+//! pre-robustness server for both precisions.
 //!
 //! **Non-guarantees.** Supervision is driven by the scheduler's
 //! deadline ticks: with deadlines disabled (`tile_timeout_mult = 0`,
@@ -175,16 +207,33 @@
 //! deterministic per (seed, tag, worker) but the budget `max_faults` is
 //! claimed in completion order, which wall-clock timing may reorder.
 //! Request deadlines are enforced at scheduler wakeups, not
-//! preemptively — expiry cannot interrupt a tile already executing, so
-//! expiry latency is bounded by the longest outstanding tile (arm
-//! `tile_timeout_mult` to bound that too). Cancelling through a handle
+//! preemptively — but the scheduler's sleep is clamped to the earliest
+//! armed deadline among outstanding tiles, open requests' deadlines and
+//! the drain budget, so an otherwise-idle scheduler wakes at the
+//! deadline itself and expiry latency is wakeup overhead, not a polling
+//! interval (pinned by `deadline_expiry_is_prompt_when_idle` in
+//! `rust/tests/recovery_plane.rs`). Expiry still cannot interrupt a
+//! tile already executing, so under load it is bounded by the longest
+//! outstanding tile (arm `tile_timeout_mult` to bound that too).
+//! Cancelling through a handle
 //! after its request failed over routes to the originally admitted
 //! shard only (best-effort; the recovered flight runs to completion
-//! and resolves the handle normally). Failed shards are not respawned:
+//! and resolves the handle normally). With `shard_respawn` off (the
+//! default), failed shards are not respawned:
 //! a shard whose scheduler died stays down — its half-open probes fail
 //! fast and traffic stays diverted — and once every shard has failed,
 //! requests resolve with the final [`SchedulerPanicked`] error rather
-//! than queue for a recovery that cannot come. SLO admission estimates
+//! than queue for a recovery that cannot come; with respawn on, the
+//! same end state is reached only after a shard exhausts
+//! `respawn_max_attempts`. Respawn **rewarm is best-effort**: only what
+//! the dying scheduler managed to export before fail-fast is re-seeded,
+//! and a rescue lost to a hard crash costs cache misses, never
+//! correctness. A respawned shard starts with **fresh per-shard
+//! statistics** — its predecessor's counter history (requests served,
+//! cache hits, device time) dies with the old engine and is absent from
+//! later [`ShardStats`](stats::ShardStats) snapshots; the recovery
+//! plane's own counters ([`RecoveryStats`](stats::RecoveryStats)) live
+//! in the facade and survive. SLO admission estimates
 //! from observed per-class service history; a class with no history
 //! admits optimistically.
 //!
@@ -241,8 +290,8 @@ pub use pool::{
 };
 pub use server::{MatMulServer, ServerStats};
 pub use stats::{
-    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, ShedStats,
-    WorkerHealth,
+    BreakerSnapshot, BreakerState, ClassStats, FaultStats, MemPlaneStats, PackStats,
+    RecoveryStats, RouterStats, ShardStats, ShedStats, WorkerHealth,
 };
 pub use tiler::Tiler;
 pub use workpool::WorkPool;

@@ -30,7 +30,16 @@
 //!   and reproduces the uncached engine bit-for-bit; a cached pool is
 //!   byte-identical to a freshly packed one because
 //!   [`TilePool::pack`] is deterministic, so caching never changes
-//!   outputs either way.
+//!   outputs either way. Since PR 10 the cache is also the release-mode
+//!   **integrity boundary** of the memory plane: every insert stamps a
+//!   64-bit FNV-1a CRC over the packed element bits, hits are
+//!   re-verified against the stamp on a sampled cadence
+//!   (`ServeConfig::cache_verify_interval`, plus always on the first
+//!   hit after a rewarm), and a mismatch **quarantines** the entry —
+//!   evicted, key blacklisted for a cooldown
+//!   (`ServeConfig::cache_quarantine_ms`), lookup reported as a miss so
+//!   the caller transparently re-packs from the source operand. A
+//!   poisoned arena therefore costs one repack, never a wrong result.
 //! * [`FreeList`] / [`BufferPool`] — per-precision free-lists for the
 //!   native-tile-sized working buffers that cycle through the
 //!   completion loop (device output tiles, per-block accumulation
@@ -45,6 +54,7 @@
 //! allocated).
 
 use crate::arch::precision::Precision;
+use crate::coordinator::fault::fnv1a_words as fnv1a64;
 use crate::coordinator::tiler::Tiler;
 use crate::coordinator::workpool::WorkPool;
 use rustc_hash::FxHashMap;
@@ -525,6 +535,35 @@ pub enum CachedPool {
     I32(TilePool<i32>),
 }
 
+impl CachedPool {
+    /// Resident size of the wrapped arena in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            CachedPool::F32(p) => p.bytes(),
+            CachedPool::I32(p) => p.bytes(),
+        }
+    }
+
+    /// 64-bit FNV-1a over the arena's element bits — the integrity
+    /// stamp [`WeightCache`] records at insert and re-derives on
+    /// sampled hits. Same word hash as the device plane's
+    /// [`output_crc`](crate::coordinator::device::output_crc), so both
+    /// planes share one corruption-detection primitive.
+    pub fn crc64(&self) -> u64 {
+        match self {
+            CachedPool::F32(p) => fnv1a64(p.data.iter().map(|v| v.to_bits())),
+            CachedPool::I32(p) => fnv1a64(p.data.iter().map(|&v| v as u32)),
+        }
+    }
+}
+
+/// One entry of a respawn rewarm hand-off: key, packed pool, and the
+/// pool's **original** insert-time CRC stamp. Carrying the stamp (not
+/// re-deriving it at rewarm) is what makes the forced first-hit verify
+/// after a respawn meaningful: corruption picked up during the crash /
+/// export / transfer window still mismatches the pre-crash stamp.
+pub type RewarmEntry = (WeightKey, CachedPool, u64);
+
 /// Element types the weight cache can store — the dispatch point
 /// between the scheduler's precision-generic packing code and the
 /// type-erased cache entries.
@@ -533,6 +572,9 @@ pub trait PoolElem: Copy + Default + PartialEq + std::fmt::Debug {
     fn precision() -> Precision;
     /// Content fingerprint over the element bits (FNV-1a 128).
     fn fingerprint(data: &[Self]) -> u128;
+    /// The element's 32-bit word image — the unit both integrity
+    /// hashes (fingerprint and CRC stamp) consume.
+    fn to_word(self) -> u32;
     fn wrap(pool: TilePool<Self>) -> CachedPool;
     fn peek(cached: &CachedPool) -> Option<&TilePool<Self>>;
 }
@@ -586,6 +628,9 @@ impl PoolElem for f32 {
     fn fingerprint(data: &[f32]) -> u128 {
         fnv1a_words(data.len(), data.iter().map(|v| v.to_bits()))
     }
+    fn to_word(self) -> u32 {
+        self.to_bits()
+    }
     fn wrap(pool: TilePool<f32>) -> CachedPool {
         CachedPool::F32(pool)
     }
@@ -603,6 +648,9 @@ impl PoolElem for i32 {
     }
     fn fingerprint(data: &[i32]) -> u128 {
         fnv1a_words(data.len(), data.iter().map(|&v| v as u32))
+    }
+    fn to_word(self) -> u32 {
+        self as u32
     }
     fn wrap(pool: TilePool<i32>) -> CachedPool {
         CachedPool::I32(pool)
@@ -627,6 +675,17 @@ pub struct WeightCacheCounters {
     pub bytes: AtomicU64,
     /// Current entry count (gauge).
     pub entries: AtomicU64,
+    /// Hits whose pool was CRC-verified against its insert stamp
+    /// (sampled cadence plus forced first-hit-after-rewarm verifies).
+    pub verifications: AtomicU64,
+    /// Entries evicted **and quarantined** because a verify caught a
+    /// CRC mismatch — the memory-plane silent-corruption detector
+    /// firing. Not counted under `evictions` (those are budget
+    /// pressure).
+    pub poisoned_evictions: AtomicU64,
+    /// Entries re-seeded into a respawned shard's cache from the dead
+    /// scheduler's rescue export.
+    pub rewarmed: AtomicU64,
 }
 
 struct CacheEntry {
@@ -634,6 +693,16 @@ struct CacheEntry {
     bytes: usize,
     /// Recency stamp; also this entry's key in the LRU index.
     tick: u64,
+    /// FNV-1a CRC over the pool's element bits, stamped at insert —
+    /// what sampled verify-on-hit re-derives and compares.
+    crc: u64,
+    /// Lifetime hit count of this entry — the heat ranking
+    /// [`WeightCache::hottest`] uses to pick rewarm candidates.
+    hits: u64,
+    /// Force a CRC verify on the next hit regardless of the sampling
+    /// cadence — set on rewarmed entries so corruption picked up
+    /// across a crash/export window is caught before first use.
+    verify_on_next_hit: bool,
 }
 
 /// Byte-budgeted LRU of packed weight pools (see the module docs).
@@ -649,6 +718,19 @@ pub struct WeightCache {
     /// tick → key, ordered oldest-first: O(log n) touch and eviction.
     lru: BTreeMap<u64, WeightKey>,
     counters: Arc<WeightCacheCounters>,
+    /// Verify every Nth hit against the insert CRC stamp; `0` (the
+    /// default) samples nothing — bit-for-bit *and* work-for-work the
+    /// pre-integrity cache.
+    verify_interval: u64,
+    /// Monotone count of hits, the sampling clock for `verify_interval`.
+    hit_serial: u64,
+    /// How long a poisoned key stays blacklisted after quarantine.
+    quarantine_cooldown: Duration,
+    /// Poisoned keys → blacklist expiry. Inserts (and rewarms) of a
+    /// quarantined key are refused until the cooldown lapses, so a
+    /// corruption source upstream of the cache cannot immediately
+    /// re-poison the same slot.
+    quarantine: FxHashMap<WeightKey, Instant>,
 }
 
 impl WeightCache {
@@ -660,6 +742,32 @@ impl WeightCache {
             entries: FxHashMap::default(),
             lru: BTreeMap::new(),
             counters,
+            verify_interval: 0,
+            hit_serial: 0,
+            quarantine_cooldown: Duration::from_millis(5_000),
+            quarantine: FxHashMap::default(),
+        }
+    }
+
+    /// Set the integrity knobs (`ServeConfig::cache_verify_interval`,
+    /// `ServeConfig::cache_quarantine_ms`). Separate from `new` so the
+    /// constructor keeps its pre-PR 10 shape; the defaults (interval
+    /// `0`) perform no verification at all.
+    pub fn configure_integrity(&mut self, verify_interval: u64, quarantine_ms: u64) {
+        self.verify_interval = verify_interval;
+        self.quarantine_cooldown = Duration::from_millis(quarantine_ms);
+    }
+
+    /// Whether `key` is currently blacklisted; lazily drops lapsed
+    /// quarantine records.
+    fn quarantined(&mut self, key: &WeightKey) -> bool {
+        match self.quarantine.get(key) {
+            Some(&until) if Instant::now() < until => true,
+            Some(_) => {
+                self.quarantine.remove(key);
+                false
+            }
+            None => false,
         }
     }
 
@@ -690,6 +798,15 @@ impl WeightCache {
     /// Look up a packed pool; counts a hit (touching recency) or a miss.
     /// Always `None` when disabled — without counting, so budget `0`
     /// reports all-zero cache stats.
+    ///
+    /// With integrity sampling on ([`WeightCache::configure_integrity`])
+    /// every `verify_interval`-th hit — plus the first hit on any
+    /// rewarmed entry — re-derives the pool's CRC and compares it to
+    /// the insert stamp. A mismatch is the poisoned-arena path: the
+    /// entry is evicted, its key quarantined for the cooldown, and the
+    /// lookup reports a **miss**, so the caller falls through to its
+    /// existing repack arm and the request completes correctly with no
+    /// client-visible error.
     pub fn get<T: PoolElem>(&mut self, key: &WeightKey) -> Option<TilePool<T>> {
         if !self.enabled() {
             return None;
@@ -698,6 +815,25 @@ impl WeightCache {
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
             return None;
         };
+        self.hit_serial += 1;
+        e.hits += 1;
+        if e.verify_on_next_hit
+            || (self.verify_interval > 0 && self.hit_serial % self.verify_interval == 0)
+        {
+            self.counters.verifications.fetch_add(1, Ordering::Relaxed);
+            if e.pool.crc64() != e.crc {
+                let (tick, bytes) = (e.tick, e.bytes);
+                self.entries.remove(key);
+                self.lru.remove(&tick);
+                self.bytes -= bytes;
+                self.quarantine.insert(*key, Instant::now() + self.quarantine_cooldown);
+                self.counters.poisoned_evictions.fetch_add(1, Ordering::Relaxed);
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                self.publish_gauges();
+                return None;
+            }
+            e.verify_on_next_hit = false;
+        }
         self.lru.remove(&e.tick);
         self.tick += 1;
         e.tick = self.tick;
@@ -711,16 +847,41 @@ impl WeightCache {
     /// Insert a freshly packed pool, evicting least-recently-used
     /// entries until it fits. A pool larger than the whole budget is
     /// never cached (it would evict everything for a weight that cannot
-    /// stay resident anyway).
+    /// stay resident anyway), and a key still under quarantine is
+    /// refused until its cooldown lapses. Every accepted insert stamps
+    /// the pool's CRC for later verify-on-hit.
     pub fn insert<T: PoolElem>(&mut self, key: WeightKey, pool: &TilePool<T>) {
-        if !self.enabled() {
+        if !self.enabled() || self.quarantined(&key) {
             return;
         }
         let bytes = pool.bytes();
         if bytes > self.budget {
             return;
         }
-        if let Some(old) = self.entries.remove(&key) {
+        let crc = fnv1a64(pool.data.iter().map(|v| v.to_word()));
+        self.evict_to_fit(&key, bytes);
+        self.tick += 1;
+        self.entries.insert(
+            key,
+            CacheEntry {
+                pool: T::wrap(pool.clone()),
+                bytes,
+                tick: self.tick,
+                crc,
+                hits: 0,
+                verify_on_next_hit: false,
+            },
+        );
+        self.lru.insert(self.tick, key);
+        self.bytes += bytes;
+        self.publish_gauges();
+    }
+
+    /// Make room for `bytes` at `key`: drop any old entry under the
+    /// same key (replace-in-place), then evict LRU victims until the
+    /// new entry fits the budget.
+    fn evict_to_fit(&mut self, key: &WeightKey, bytes: usize) {
+        if let Some(old) = self.entries.remove(key) {
             self.lru.remove(&old.tick);
             self.bytes -= old.bytes;
         }
@@ -732,12 +893,75 @@ impl WeightCache {
                 self.counters.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
+    }
+
+    /// The `k` hottest resident entries (by lifetime hit count, ties to
+    /// the most recently used), with their original insert CRC stamps —
+    /// the rescue export a dying scheduler hands the respawn supervisor
+    /// so the replacement shard's cache starts warm. Deterministic
+    /// order: hit counts then unique recency ticks.
+    pub fn hottest(&self, k: usize) -> Vec<RewarmEntry> {
+        if k == 0 || self.entries.is_empty() {
+            return Vec::new();
+        }
+        let mut ranked: Vec<(&WeightKey, &CacheEntry)> = self.entries.iter().collect();
+        ranked.sort_by(|a, b| b.1.hits.cmp(&a.1.hits).then(b.1.tick.cmp(&a.1.tick)));
+        ranked.into_iter().take(k).map(|(key, e)| (*key, e.pool.clone(), e.crc)).collect()
+    }
+
+    /// Seed one rescued entry into this (freshly respawned) cache,
+    /// keeping the **pre-crash** CRC stamp and arming
+    /// `verify_on_next_hit`, so the first hit fully verifies the pool
+    /// survived the crash/export window intact. Subject to the same
+    /// budget, oversize, and quarantine rules as [`WeightCache::insert`].
+    /// Returns whether the entry was admitted.
+    pub fn rewarm(&mut self, key: WeightKey, pool: CachedPool, crc: u64) -> bool {
+        if !self.enabled() || self.quarantined(&key) {
+            return false;
+        }
+        let bytes = pool.bytes();
+        if bytes > self.budget {
+            return false;
+        }
+        self.evict_to_fit(&key, bytes);
         self.tick += 1;
-        self.entries
-            .insert(key, CacheEntry { pool: T::wrap(pool.clone()), bytes, tick: self.tick });
+        self.entries.insert(
+            key,
+            CacheEntry { pool, bytes, tick: self.tick, crc, hits: 0, verify_on_next_hit: true },
+        );
         self.lru.insert(self.tick, key);
         self.bytes += bytes;
+        self.counters.rewarmed.fetch_add(1, Ordering::Relaxed);
         self.publish_gauges();
+        true
+    }
+
+    /// Chaos hook behind `FaultKind::CacheCorrupt`: deterministically
+    /// flip one stored word (element 0 of the oldest-resident entry's
+    /// arena) **without** touching its insert stamp — exactly the
+    /// silent at-rest corruption sampled verify-on-hit exists to catch.
+    /// The flip rebuilds the arena allocation, so `TileRef`s already in
+    /// flight keep the clean bytes; only subsequent cache hits observe
+    /// the poison. Returns `false` when the cache holds nothing to
+    /// corrupt.
+    pub fn chaos_corrupt(&mut self) -> bool {
+        let Some((_, &key)) = self.lru.iter().next() else {
+            return false;
+        };
+        let e = self.entries.get_mut(&key).expect("lru index maps to a resident entry");
+        e.pool = match &e.pool {
+            CachedPool::F32(p) => {
+                let mut data: Vec<f32> = p.data.to_vec();
+                data[0] = f32::from_bits(data[0].to_bits() ^ 1);
+                CachedPool::F32(TilePool { data: data.into(), tile_len: p.tile_len })
+            }
+            CachedPool::I32(p) => {
+                let mut data: Vec<i32> = p.data.to_vec();
+                data[0] ^= 1;
+                CachedPool::I32(TilePool { data: data.into(), tile_len: p.tile_len })
+            }
+        };
+        true
     }
 }
 
@@ -1009,6 +1233,145 @@ mod tests {
             debug_assert_pool_matches(&pool, &forged, 8, 8, 4, 4)
         }));
         assert!(r.is_err(), "collision guard must panic on mismatched contents");
+    }
+
+    #[test]
+    fn verify_on_hit_detects_corruption_and_quarantines() {
+        // The release-mode integrity path end to end: a silently
+        // corrupted arena is caught by sampled verify-on-hit, the
+        // entry is evicted + quarantined (re-insert refused), the
+        // lookup reports a miss so callers repack — and once the
+        // cooldown lapses the key is admitted again.
+        let counters = Arc::new(WeightCacheCounters::default());
+        let src: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        let pool = TilePool::pack(&src, 8, 8, 4, 4);
+        let k = key_id(9, 8, 8);
+        let mut c = WeightCache::new(1 << 20, Arc::clone(&counters));
+        c.configure_integrity(1, 60_000); // verify every hit, long cooldown
+        c.insert(k, &pool);
+        // Clean entry: verify runs and passes, hit counts normally.
+        assert!(c.get::<f32>(&k).is_some());
+        assert_eq!(counters.verifications.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.poisoned_evictions.load(Ordering::Relaxed), 0);
+        // Corrupt at rest (stamp untouched) → next hit detects.
+        assert!(c.chaos_corrupt());
+        assert!(c.get::<f32>(&k).is_none(), "poisoned entry must read as a miss");
+        assert_eq!(counters.poisoned_evictions.load(Ordering::Relaxed), 1);
+        assert!(c.is_empty(), "poisoned entry is evicted");
+        // Quarantine: the same key is refused while the cooldown runs…
+        c.insert(k, &pool);
+        assert!(c.is_empty(), "quarantined key must not be re-admitted");
+        // …but an unrelated key is unaffected.
+        c.insert(key_id(10, 8, 8), &pool);
+        assert_eq!(c.len(), 1);
+        // Cooldown 0 = already lapsed: the key readmits immediately.
+        let mut fast = WeightCache::new(1 << 20, Arc::clone(&counters));
+        fast.configure_integrity(1, 0);
+        fast.insert(k, &pool);
+        assert!(fast.chaos_corrupt());
+        assert!(fast.get::<f32>(&k).is_none());
+        fast.insert(k, &pool);
+        assert!(fast.get::<f32>(&k).is_some(), "lapsed quarantine readmits the key");
+    }
+
+    #[test]
+    fn verify_interval_samples_every_nth_hit() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let src: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        let pool = TilePool::pack(&src, 8, 8, 4, 4);
+        let k = key_id(1, 8, 8);
+        let mut c = WeightCache::new(1 << 20, Arc::clone(&counters));
+        c.configure_integrity(3, 1_000);
+        c.insert(k, &pool);
+        for _ in 0..9 {
+            assert!(c.get::<f32>(&k).is_some());
+        }
+        // Hits 3, 6, 9 verified.
+        assert_eq!(counters.verifications.load(Ordering::Relaxed), 3);
+        assert_eq!(counters.hits.load(Ordering::Relaxed), 9);
+        // Interval 0 (the default) never verifies.
+        let quiet = Arc::new(WeightCacheCounters::default());
+        let mut off = WeightCache::new(1 << 20, Arc::clone(&quiet));
+        off.insert(k, &pool);
+        for _ in 0..5 {
+            assert!(off.get::<f32>(&k).is_some());
+        }
+        assert_eq!(quiet.verifications.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn hottest_ranks_by_hits_and_rewarm_forces_first_hit_verify() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let src: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        let pool = TilePool::pack(&src, 8, 8, 4, 4);
+        let mut c = WeightCache::new(1 << 20, Arc::clone(&counters));
+        for id in 1..=3 {
+            c.insert(key_id(id, 8, 8), &pool);
+        }
+        // Heat: id 2 twice, id 3 once, id 1 never.
+        assert!(c.get::<f32>(&key_id(2, 8, 8)).is_some());
+        assert!(c.get::<f32>(&key_id(2, 8, 8)).is_some());
+        assert!(c.get::<f32>(&key_id(3, 8, 8)).is_some());
+        let hot = c.hottest(2);
+        assert_eq!(hot.len(), 2);
+        assert_eq!(hot[0].0, key_id(2, 8, 8), "hottest first");
+        assert_eq!(hot[1].0, key_id(3, 8, 8));
+        assert_eq!(c.hottest(0).len(), 0);
+        assert!(c.hottest(10).len() == 3, "k beyond len returns all entries");
+
+        // Rewarm into a fresh cache: admitted entries count, the
+        // pre-crash stamp rides along, and the first hit verifies even
+        // with sampling off (interval 0).
+        let rc = Arc::new(WeightCacheCounters::default());
+        let mut fresh = WeightCache::new(1 << 20, Arc::clone(&rc));
+        for (key, pool, crc) in c.hottest(2) {
+            assert!(fresh.rewarm(key, pool, crc));
+        }
+        assert_eq!(rc.rewarmed.load(Ordering::Relaxed), 2);
+        assert!(fresh.get::<f32>(&key_id(2, 8, 8)).is_some());
+        assert_eq!(
+            rc.verifications.load(Ordering::Relaxed),
+            1,
+            "rewarmed entry verifies on first hit"
+        );
+        assert!(fresh.get::<f32>(&key_id(2, 8, 8)).is_some());
+        assert_eq!(rc.verifications.load(Ordering::Relaxed), 1, "…and only the first");
+
+        // A rewarmed pool that no longer matches its pre-crash stamp
+        // (corruption in the crash/export window) dies on first hit.
+        let mut torn = WeightCache::new(1 << 20, Arc::clone(&rc));
+        let (key, pool_ok, crc_ok) = c.hottest(1).remove(0);
+        assert!(torn.rewarm(key, pool_ok, crc_ok ^ 1));
+        assert!(torn.get::<f32>(&key).is_none(), "stamp mismatch caught before first use");
+        assert_eq!(rc.poisoned_evictions.load(Ordering::Relaxed), 1);
+
+        // Rewarm respects the disabled cache and the byte budget.
+        let (key, pool2, crc2) = c.hottest(1).remove(0);
+        let mut off = WeightCache::new(0, Arc::clone(&rc));
+        assert!(!off.rewarm(key, pool2.clone(), crc2));
+        let mut tiny = WeightCache::new(8, Arc::clone(&rc));
+        assert!(!tiny.rewarm(key, pool2, crc2));
+    }
+
+    #[test]
+    fn chaos_corrupt_targets_oldest_and_spares_inflight_refs() {
+        let counters = Arc::new(WeightCacheCounters::default());
+        let src: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        let pool = TilePool::pack(&src, 8, 8, 4, 4);
+        let mut c = WeightCache::new(1 << 20, Arc::clone(&counters));
+        assert!(!c.chaos_corrupt(), "empty cache has nothing to corrupt");
+        c.insert(key_id(1, 8, 8), &pool);
+        c.insert(key_id(2, 8, 8), &pool);
+        // Hand out a hit before corrupting: in-flight pools keep the
+        // clean bytes (the flip rebuilds the arena allocation).
+        c.configure_integrity(1, 1_000);
+        let inflight = c.get::<f32>(&key_id(1, 8, 8)).unwrap();
+        // After the touch, id 2 is the oldest resident — the victim.
+        assert!(c.chaos_corrupt());
+        assert_eq!(inflight.tile(0), pool.tile(0), "in-flight ref unaffected");
+        assert!(c.get::<f32>(&key_id(1, 8, 8)).is_some(), "untouched entry still verifies");
+        assert!(c.get::<f32>(&key_id(2, 8, 8)).is_none(), "victim caught on next hit");
+        assert_eq!(counters.poisoned_evictions.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -75,8 +75,8 @@ use crate::coordinator::fault::{
 use crate::coordinator::handle::{Cancelled, Reply};
 use crate::coordinator::policy::{self, FlightMeta, PolicyParams, SchedPolicy};
 use crate::coordinator::pool::{
-    pack_fanout, BufferPool, FreeList, PackCounters, PoolElem, TilePool, WeightCache,
-    WeightIdent, WeightKey,
+    pack_fanout, BufferPool, FreeList, PackCounters, PoolElem, RewarmEntry, TilePool,
+    WeightCache, WeightIdent, WeightKey,
 };
 use crate::coordinator::stats::{Completion, ShedCounters, StatsAgg, WindowOcc};
 use crate::coordinator::tiler::Tiler;
@@ -110,6 +110,15 @@ pub(crate) enum Event {
     /// Test hook (`MatMulServer::inject_scheduler_panic`): panic the
     /// scheduler loop to exercise the fail-fast path.
     ChaosPanic,
+    /// Chaos hook (`FaultKind::CacheCorrupt`): silently flip one word
+    /// in the oldest resident weight-cache entry, leaving its CRC
+    /// stamp untouched — the at-rest corruption sampled verify-on-hit
+    /// exists to catch.
+    ChaosCorruptCache,
+    /// Respawn hand-off: seed the (fresh) weight cache with entries
+    /// rescued from the dead scheduler's cache, each carrying its
+    /// pre-crash CRC stamp and armed to fully verify on first hit.
+    Rewarm(Vec<RewarmEntry>),
 }
 
 /// State shared between the scheduler thread and client-side snapshots.
@@ -436,6 +445,17 @@ pub(crate) struct Scheduler {
     pack_counters: Arc<PackCounters>,
     /// Tile-buffer free-lists shared with the device workers.
     bufs: Arc<BufferPool>,
+    /// Rescue slot shared with the owning [`Shard`]: if this scheduler
+    /// panics, it exports its `rewarm_top_k` hottest weight-cache
+    /// entries here on the way down so the respawn supervisor can seed
+    /// the replacement shard's cache (best-effort — an empty slot just
+    /// means a cold start).
+    ///
+    /// [`Shard`]: crate::coordinator::shard::Shard
+    rescue: Arc<Mutex<Option<Vec<RewarmEntry>>>>,
+    /// How many hottest entries to export on panic
+    /// (`ServeConfig::respawn_rewarm_top_k`; `0` = no rescue).
+    rewarm_top_k: usize,
     flights: FxHashMap<u64, Flight>,
     /// Admission token → flight id (the cancellation route).
     tokens: FxHashMap<u64, u64>,
@@ -470,6 +490,8 @@ impl Scheduler {
         work_pool: Option<WorkPool>,
         pack_counters: Arc<PackCounters>,
         robust: Robustness,
+        rescue: Arc<Mutex<Option<Vec<RewarmEntry>>>>,
+        rewarm_top_k: usize,
     ) -> Self {
         let bufs = device.buffer_pool();
         let counters = device.fault_counters();
@@ -493,6 +515,8 @@ impl Scheduler {
             work_pool,
             pack_counters,
             bufs,
+            rescue,
+            rewarm_top_k,
             flights: FxHashMap::default(),
             tokens: FxHashMap::default(),
             descs: FxHashMap::default(),
@@ -518,6 +542,19 @@ impl Scheduler {
         }))
         .is_err();
         if panicked {
+            // Best-effort rescue for the respawn supervisor: export the
+            // hottest cached weights (with their pre-crash CRC stamps)
+            // before resolving the open flights. The cache itself is
+            // plain scheduler-thread state — no mutex to be poisoned by
+            // the panic that brought us here.
+            if self.rewarm_top_k > 0 {
+                let hot = self.weight_cache.hottest(self.rewarm_top_k);
+                if !hot.is_empty() {
+                    if let Ok(mut slot) = self.rescue.lock() {
+                        *slot = Some(hot);
+                    }
+                }
+            }
             self.fail_all_open();
         }
         // `_gate_closer` closes the admission gate as it drops;
@@ -577,6 +614,18 @@ impl Scheduler {
                     self.drain_by = by;
                 }
                 Event::ChaosPanic => panic!("injected scheduler panic (chaos test hook)"),
+                Event::ChaosCorruptCache => {
+                    if self.weight_cache.chaos_corrupt() {
+                        self.counters
+                            .injected_cache_corruptions
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Event::Rewarm(entries) => {
+                    for (key, pool, crc) in entries {
+                        self.weight_cache.rewarm(key, pool, crc);
+                    }
+                }
             }
         }
     }

@@ -74,6 +74,21 @@
 //!
 //! [`MatMulRequest::with_deadline`]: crate::workloads::MatMulRequest::with_deadline
 //!
+//! # Self-healing (the recovery plane)
+//!
+//! Two further opt-in planes close the loop from failover (route
+//! *around* a failure) to recovery (repair it): **shard respawn**
+//! (`ServeConfig::shard_respawn` — a supervisor thread rebuilds a
+//! crashed shard's engine from the same `ServeConfig`, swaps it into
+//! the shard table, optionally rewarms the hottest packed weights the
+//! dying scheduler exported, and lets the breaker walk
+//! Open → HalfOpen → Closed through the normal probe path) and
+//! **memory-plane integrity** (`ServeConfig::cache_verify_interval` —
+//! every packed pool carries an FNV-1a checksum stamped at insert,
+//! sampled verify-on-hit quarantines a corrupted entry and the request
+//! transparently re-packs from its own operands). Both default off;
+//! counters surface in `ServerStats::recovery`.
+//!
 //! # Per-request precision
 //!
 //! fp32 requests flow as f32 tiles, int8 requests as int8-range
@@ -98,21 +113,22 @@ use crate::arch::precision::Precision;
 use crate::config::schema::{AdmissionPolicy, PolicyKind, ServeConfig};
 use crate::coordinator::admission::QueueFull;
 use crate::coordinator::device::PrecisionInfo;
-use crate::coordinator::fault::{DrainDeadlineExpired, SchedulerPanicked};
+use crate::coordinator::fault::{DrainDeadlineExpired, FaultKind, SchedulerPanicked};
 use crate::coordinator::handle::{Reply, RequestHandle};
 use crate::coordinator::scheduler::Event;
 use crate::coordinator::shard::{
     band_operands, band_reply, band_request, plan_route, Band, Route, RouterCounters, Shard,
-    ShardClient, SplitAcc,
+    ShardClient, ShardSlot, SplitAcc,
 };
 use crate::coordinator::stats::{
-    ClassStats, FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, ShedStats,
-    StatsAgg, WindowOcc, WorkerHealth,
+    BreakerSnapshot, BreakerState, ClassStats, FaultStats, MemPlaneStats, PackStats,
+    RecoveryStats, RouterStats, ShardStats, ShedStats, StatsAgg, WindowOcc, WorkerHealth,
 };
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError, RwLock};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Serving statistics snapshot: rolled-up totals over every shard, plus
@@ -171,8 +187,17 @@ pub struct ServerStats {
     pub shed: ShedStats,
     /// Per-shard circuit-breaker state (`"closed"`, `"open"` or
     /// `"half-open"`); one entry per shard when
-    /// `ServeConfig::shard_failover` is on, empty otherwise.
+    /// `ServeConfig::shard_failover` is on, empty otherwise. The typed
+    /// equivalent (plus consecutive failures and last failure reason)
+    /// lives in each shard's [`ShardStats::breaker`].
     pub breaker_states: Vec<&'static str>,
+    /// Recovery-plane counters: shard respawns and rewarms
+    /// (`ServeConfig::shard_respawn`), memory-plane integrity
+    /// verifications and quarantines
+    /// (`ServeConfig::cache_verify_interval`), and the breaker
+    /// trip/probe/recovery walk. All zero with the recovery knobs at
+    /// their defaults.
+    pub recovery: RecoveryStats,
     /// Per-shard statistics, indexed by shard.
     pub shards: Vec<ShardStats>,
     /// Routing decisions taken by the shard router (all zero with one
@@ -180,8 +205,10 @@ pub struct ServerStats {
     pub router: RouterStats,
 }
 
-/// Circuit-breaker state for one shard (see [`FailoverPlane`]).
-enum BreakerState {
+/// Circuit-breaker phase for one shard (see [`FailoverPlane`]). The
+/// private working state; the typed public projection is
+/// [`BreakerState`] in [`crate::coordinator::stats`].
+enum BreakerPhase {
     /// Healthy: traffic flows.
     Closed,
     /// Tripped: no traffic until the probe interval elapses.
@@ -192,10 +219,13 @@ enum BreakerState {
 }
 
 struct Breaker {
-    state: BreakerState,
+    state: BreakerPhase,
     /// Consecutive scheduler-level failures (reset by any successful —
     /// or merely alive — resolution).
     failures: u32,
+    /// Why this breaker last counted a failure (sticky across resets,
+    /// so a recovered shard still reports its last incident).
+    last_failure: Option<&'static str>,
 }
 
 /// A reply shared between failover attempts: whichever attempt resolves
@@ -230,7 +260,11 @@ fn send_slot(slot: &ReplySlot, req: MatMulRequest, out: Result<MatOutput>) {
 /// bit-identical to a fault-free run, including band-concat merges of
 /// split requests.
 pub(crate) struct FailoverPlane {
-    clients: Vec<ShardClient>,
+    /// One submission client per shard. Behind an `RwLock` so the
+    /// respawn supervisor can swap in the replacement engine's client;
+    /// submitters clone the client out under a short read guard and
+    /// never hold the lock across a (possibly blocking) admission.
+    clients: Vec<RwLock<ShardClient>>,
     breakers: Vec<Mutex<Breaker>>,
     threshold: u32,
     probe_after: Duration,
@@ -239,16 +273,30 @@ pub(crate) struct FailoverPlane {
     trips: AtomicU64,
     probes: AtomicU64,
     recoveries: AtomicU64,
+    /// Successful shard respawns / permanently failed respawn attempts
+    /// (`ServeConfig::shard_respawn`; counted by the supervisor).
+    respawns: AtomicU64,
+    respawn_failures: AtomicU64,
+    /// Wakes the respawn supervisor when a breaker counts a failure.
+    /// `None` with `shard_respawn` off — and cleared at the head of
+    /// shutdown so no respawn races the drain.
+    respawn_tx: Mutex<Option<mpsc::Sender<usize>>>,
 }
 
 impl FailoverPlane {
     fn new(clients: Vec<ShardClient>, threshold: u32, probe_after: Duration) -> Arc<Self> {
         let breakers = clients
             .iter()
-            .map(|_| Mutex::new(Breaker { state: BreakerState::Closed, failures: 0 }))
+            .map(|_| {
+                Mutex::new(Breaker {
+                    state: BreakerPhase::Closed,
+                    failures: 0,
+                    last_failure: None,
+                })
+            })
             .collect();
         Arc::new(FailoverPlane {
-            clients,
+            clients: clients.into_iter().map(RwLock::new).collect(),
             breakers,
             threshold: threshold.max(1),
             probe_after,
@@ -257,11 +305,47 @@ impl FailoverPlane {
             trips: AtomicU64::new(0),
             probes: AtomicU64::new(0),
             recoveries: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            respawn_failures: AtomicU64::new(0),
+            respawn_tx: Mutex::new(None),
         })
     }
 
     fn breaker(&self, shard: usize) -> std::sync::MutexGuard<'_, Breaker> {
         self.breakers[shard].lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The current submission client for `shard`, cloned out under a
+    /// short read guard (never held across a blocking admission).
+    fn client(&self, shard: usize) -> ShardClient {
+        self.clients[shard].read().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Point `shard`'s slot at a freshly respawned engine (supervisor
+    /// only). In-flight submissions that cloned the old client bounce
+    /// off its dead channel and re-enter through the failover chain.
+    fn refresh_client(&self, shard: usize, fresh: ShardClient) {
+        *self.clients[shard].write().unwrap_or_else(PoisonError::into_inner) = fresh;
+    }
+
+    /// Arm the respawn notification channel (facade start-up, with
+    /// `ServeConfig::shard_respawn` on).
+    fn set_respawn_tx(&self, tx: mpsc::Sender<usize>) {
+        *self.respawn_tx.lock().unwrap_or_else(PoisonError::into_inner) = Some(tx);
+    }
+
+    /// Disconnect the supervisor (head of shutdown): drops the sender,
+    /// so the supervisor's receive loop observes the disconnect.
+    fn detach_respawn(&self) {
+        self.respawn_tx.lock().unwrap_or_else(PoisonError::into_inner).take();
+    }
+
+    fn notify_respawn(&self, shard: usize) {
+        if let Some(tx) =
+            self.respawn_tx.lock().unwrap_or_else(PoisonError::into_inner).as_ref()
+        {
+            let _ = tx.send(shard);
+        }
     }
 
     /// Route-time eligibility: closed and half-open breakers accept
@@ -270,10 +354,10 @@ impl FailoverPlane {
     fn eligible(&self, shard: usize) -> bool {
         let mut b = self.breaker(shard);
         match b.state {
-            BreakerState::Closed | BreakerState::HalfOpen => true,
-            BreakerState::Open { since } => {
+            BreakerPhase::Closed | BreakerPhase::HalfOpen => true,
+            BreakerPhase::Open { since } => {
                 if since.elapsed() >= self.probe_after {
-                    b.state = BreakerState::HalfOpen;
+                    b.state = BreakerPhase::HalfOpen;
                     self.probes.fetch_add(1, Ordering::Relaxed);
                     true
                 } else {
@@ -284,31 +368,38 @@ impl FailoverPlane {
     }
 
     /// Any resolution proving the scheduler alive resets the breaker; a
-    /// half-open success is a recovery — the shard rejoins.
+    /// half-open success is a recovery — the shard rejoins. The last
+    /// failure reason is deliberately sticky.
     fn record_success(&self, shard: usize) {
         let mut b = self.breaker(shard);
         b.failures = 0;
-        if matches!(b.state, BreakerState::HalfOpen) {
+        if matches!(b.state, BreakerPhase::HalfOpen) {
             self.recoveries.fetch_add(1, Ordering::Relaxed);
         }
-        b.state = BreakerState::Closed;
+        b.state = BreakerPhase::Closed;
     }
 
     /// A scheduler-level failure: trip closed → open at the threshold;
-    /// a failed half-open probe reopens immediately.
-    fn record_failure(&self, shard: usize) {
+    /// a failed half-open probe reopens immediately. Every counted
+    /// failure also nudges the respawn supervisor (when armed) — the
+    /// supervisor dedups by checking whether the scheduler thread
+    /// actually died.
+    fn record_failure(&self, shard: usize, reason: &'static str) {
         let mut b = self.breaker(shard);
         b.failures += 1;
+        b.last_failure = Some(reason);
         match b.state {
-            BreakerState::Closed if b.failures >= self.threshold => {
-                b.state = BreakerState::Open { since: Instant::now() };
+            BreakerPhase::Closed if b.failures >= self.threshold => {
+                b.state = BreakerPhase::Open { since: Instant::now() };
                 self.trips.fetch_add(1, Ordering::Relaxed);
             }
-            BreakerState::HalfOpen => {
-                b.state = BreakerState::Open { since: Instant::now() };
+            BreakerPhase::HalfOpen => {
+                b.state = BreakerPhase::Open { since: Instant::now() };
             }
             _ => {}
         }
+        drop(b);
+        self.notify_respawn(shard);
     }
 
     /// The healthiest re-dispatch target: breaker-eligible, not yet
@@ -317,7 +408,13 @@ impl FailoverPlane {
         (0..self.clients.len())
             .filter(|s| !tried.contains(s))
             .filter(|&s| self.eligible(s))
-            .min_by_key(|&s| (self.clients[s].in_flight(), s))
+            .min_by_key(|&s| {
+                let open = self.clients[s]
+                    .read()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .in_flight();
+                (open, s)
+            })
     }
 
     /// Place one request (or one band of a split request) on `preferred`
@@ -372,13 +469,13 @@ impl FailoverPlane {
             let wrapped = Reply::Callback(Box::new(move |rq, out| {
                 plane.resolve(at, rq, out, retained, policy, tried_next, band, slot_next);
             }));
-            match self.clients[shard].try_submit(req, ops, policy, wrapped) {
+            match self.client(shard).try_submit(req, ops, policy, wrapped) {
                 Ok(token) => return Ok((shard, token)),
                 Err((e, _wrapped, ops_back)) => {
                     if e.downcast_ref::<QueueFull>().is_some() {
                         return Err(e);
                     }
-                    self.record_failure(shard);
+                    self.record_failure(shard, "dispatch_failed");
                     match self.pick(&tried) {
                         Some(next) => {
                             shard = next;
@@ -410,7 +507,7 @@ impl FailoverPlane {
     ) {
         match out {
             Err(e) if e.downcast_ref::<SchedulerPanicked>().is_some() => {
-                self.record_failure(shard);
+                self.record_failure(shard, "scheduler_panicked");
                 match self.pick(&tried) {
                     Some(next) => {
                         if band {
@@ -430,7 +527,7 @@ impl FailoverPlane {
             Err(e) if e.downcast_ref::<DrainDeadlineExpired>().is_some() => {
                 // Counts against the breaker but is never re-dispatched
                 // — the server is shutting down.
-                self.record_failure(shard);
+                self.record_failure(shard, "drain_deadline_expired");
                 send_slot(&slot, req, Err(e));
             }
             out => {
@@ -455,14 +552,21 @@ impl FailoverPlane {
         }
     }
 
-    /// Current breaker state per shard (a peek — does not transition
+    /// Typed breaker snapshot per shard (a peek — does not transition
     /// open breakers to half-open).
-    fn states(&self) -> Vec<&'static str> {
+    fn snapshot_breakers(&self) -> Vec<BreakerSnapshot> {
         (0..self.clients.len())
-            .map(|s| match self.breaker(s).state {
-                BreakerState::Closed => "closed",
-                BreakerState::Open { .. } => "open",
-                BreakerState::HalfOpen => "half-open",
+            .map(|s| {
+                let b = self.breaker(s);
+                BreakerSnapshot {
+                    state: match b.state {
+                        BreakerPhase::Closed => BreakerState::Closed,
+                        BreakerPhase::Open { .. } => BreakerState::Open,
+                        BreakerPhase::HalfOpen => BreakerState::HalfOpen,
+                    },
+                    consecutive_failures: b.failures,
+                    last_failure: b.last_failure,
+                }
             })
             .collect()
     }
@@ -472,7 +576,11 @@ impl FailoverPlane {
 /// `ServeConfig::shards` independent engines. Cheap to share across
 /// threads by reference: `submit*` take `&self`.
 pub struct MatMulServer {
-    shards: Vec<Shard>,
+    /// The shard table, shared with the respawn supervisor. Each slot
+    /// is a `Shard` behind an `RwLock`; with `shard_respawn` off (the
+    /// default) the lock is never write-acquired and every access is an
+    /// uncontended read.
+    shards: Arc<Vec<ShardSlot>>,
     router: RouterCounters,
     pipeline_depth: usize,
     policy: AdmissionPolicy,
@@ -492,6 +600,87 @@ pub struct MatMulServer {
     /// The failover plane (`ServeConfig::shard_failover`); `None` (the
     /// default) keeps the pre-failover dispatch path untouched.
     failover: Option<Arc<FailoverPlane>>,
+    /// The respawn supervisor thread (`ServeConfig::shard_respawn`):
+    /// rebuilds crashed shards from the `ServeConfig` and swaps them
+    /// into the shard table. `None` with respawn off.
+    supervisor: Option<JoinHandle<()>>,
+    /// Raised at the head of shutdown: stops the supervisor from
+    /// starting new respawns (including mid-backoff) before any shard
+    /// is drained.
+    shutting_down: Arc<AtomicBool>,
+}
+
+/// The respawn supervisor loop (`ServeConfig::shard_respawn`): woken by
+/// breaker failure notifications, it verifies the shard's scheduler
+/// thread actually died ([`Shard::sched_dead`] — a drain-deadline trip
+/// on a live shard needs no respawn), rebuilds the engine from the same
+/// `ServeConfig` at the same index, and atomically swaps it into the
+/// shard table. State reconciliation is deliberately minimal: in-flight
+/// requests were already re-dispatched by the failover plane (the old
+/// scheduler's fail-fast path resolved them), so the replacement starts
+/// empty except for an optional rewarm of the hottest packed weights
+/// the dying scheduler exported (`respawn_rewarm_top_k`) — each rewarmed
+/// entry keeps its pre-crash CRC stamp and fully verifies on first hit.
+/// Attempts per shard are bounded (`respawn_max_attempts`) with linear
+/// backoff (`respawn_backoff_ms`); a shard that exhausts its budget is
+/// permanently removed — its breaker stays open and routing avoids it,
+/// exactly as with respawn off.
+fn run_respawn_supervisor(
+    cfg: ServeConfig,
+    shards: Arc<Vec<ShardSlot>>,
+    plane: Arc<FailoverPlane>,
+    rx: mpsc::Receiver<usize>,
+    shutting_down: Arc<AtomicBool>,
+) {
+    let max_attempts = cfg.respawn_max_attempts.max(1);
+    let mut attempts = vec![0u32; shards.len()];
+    while !shutting_down.load(Ordering::SeqCst) {
+        let shard = match rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(s) => s,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        if shard >= shards.len() || !shards[shard].read().sched_dead() {
+            continue; // alive shard (e.g. drain-deadline trip), or a stale duplicate
+        }
+        if attempts[shard] >= max_attempts {
+            continue; // permanently removed: breaker stays open
+        }
+        attempts[shard] += 1;
+        // Linear backoff before the rebuild, interruptible by shutdown.
+        let mut wait_ms = cfg.respawn_backoff_ms.saturating_mul(u64::from(attempts[shard] - 1));
+        while wait_ms > 0 && !shutting_down.load(Ordering::SeqCst) {
+            let step = wait_ms.min(50);
+            std::thread::sleep(Duration::from_millis(step));
+            wait_ms -= step;
+        }
+        if shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        match Shard::start(&cfg, shard) {
+            Ok(fresh) => {
+                let client = fresh.client();
+                let old = shards[shard].replace(fresh);
+                let rescued = old.take_rescue();
+                // Tear the dead engine down outside the lock (the
+                // scheduler already exited; this joins the threads and
+                // drops the device pool).
+                drop(old);
+                if let Some(entries) = rescued {
+                    shards[shard].read().rewarm(entries);
+                }
+                plane.refresh_client(shard, client);
+                plane.respawns.fetch_add(1, Ordering::Relaxed);
+                // The breaker walks Open → HalfOpen → Closed through
+                // the existing lazy probe machinery: after
+                // `breaker_probe_ms` the next routed request probes the
+                // replacement, and its success closes the breaker.
+            }
+            Err(_) => {
+                plane.respawn_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 impl MatMulServer {
@@ -501,9 +690,9 @@ impl MatMulServer {
     /// validates the cross-field constraints this constructor clamps.
     pub fn start(cfg: &ServeConfig) -> Result<Self> {
         let n = cfg.shards.max(1);
-        let mut shards = Vec::with_capacity(n);
+        let mut engines = Vec::with_capacity(n);
         for index in 0..n {
-            shards.push(Shard::start(cfg, index)?);
+            engines.push(Shard::start(cfg, index)?);
         }
         let drain_deadline = match cfg.drain_deadline_ms {
             0 => None,
@@ -511,11 +700,30 @@ impl MatMulServer {
         };
         let failover = cfg.shard_failover.then(|| {
             FailoverPlane::new(
-                shards.iter().map(Shard::client).collect(),
+                engines.iter().map(Shard::client).collect(),
                 cfg.breaker_threshold,
                 Duration::from_millis(cfg.breaker_probe_ms),
             )
         });
+        let shards: Arc<Vec<ShardSlot>> =
+            Arc::new(engines.into_iter().map(ShardSlot::new).collect());
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let supervisor = match &failover {
+            Some(plane) if cfg.shard_respawn => {
+                let (tx, rx) = mpsc::channel();
+                plane.set_respawn_tx(tx);
+                let cfg = cfg.clone();
+                let shards = Arc::clone(&shards);
+                let plane = Arc::clone(plane);
+                let down = Arc::clone(&shutting_down);
+                Some(
+                    std::thread::Builder::new()
+                        .name("maxeva-respawn".into())
+                        .spawn(move || run_respawn_supervisor(cfg, shards, plane, rx, down))?,
+                )
+            }
+            _ => None,
+        };
         Ok(MatMulServer {
             shards,
             router: RouterCounters::default(),
@@ -529,21 +737,23 @@ impl MatMulServer {
             wall_time_s: Mutex::new(0.0),
             drain_deadline,
             failover,
+            supervisor,
+            shutting_down,
         })
     }
 
     /// Per-precision device facts — the server-side dispatch point.
     fn info_for(&self, p: Precision) -> Result<PrecisionInfo> {
         match p {
-            Precision::Fp32 => Ok(self.shards[0].info_f32),
-            Precision::Int8 => Ok(self.shards[0].info_int8),
+            Precision::Fp32 => Ok(self.shards[0].read().info_f32),
+            Precision::Int8 => Ok(self.shards[0].read().info_int8),
             other => Err(anyhow!("serving supports fp32 and int8, not {other}")),
         }
     }
 
     /// Native fp32 design size (nm, nk, nn).
     pub fn native(&self) -> (u64, u64, u64) {
-        self.shards[0].info_f32.native
+        self.shards[0].read().info_f32.native
     }
 
     /// Native design size for a serving precision.
@@ -553,7 +763,7 @@ impl MatMulServer {
 
     /// Steady-state fp32 iteration period of the design, in device cycles.
     pub fn period_cycles(&self) -> f64 {
-        self.shards[0].info_f32.period_cycles
+        self.shards[0].read().info_f32.period_cycles
     }
 
     /// Iteration period for a serving precision, in device cycles.
@@ -563,17 +773,17 @@ impl MatMulServer {
 
     /// Device clock frequency, Hz.
     pub fn freq_hz(&self) -> f64 {
-        self.shards[0].freq_hz
+        self.shards[0].read().freq_hz
     }
 
     /// Resolved tile-execution backend ("pjrt" or "reference").
     pub fn backend(&self) -> &'static str {
-        self.shards[0].backend
+        self.shards[0].read().backend
     }
 
     /// Device worker threads **per shard**.
     pub fn workers(&self) -> usize {
-        self.shards[0].workers
+        self.shards[0].read().workers
     }
 
     /// Serving shards (engines) behind this facade.
@@ -606,8 +816,8 @@ impl MatMulServer {
     /// `1` = synchronous).
     pub fn set_pipeline_depth(&mut self, depth: usize) {
         self.pipeline_depth = depth.max(1);
-        for s in &self.shards {
-            let _ = s.events.send(Event::SetDepth(depth));
+        for s in self.shards.iter() {
+            let _ = s.read().events.send(Event::SetDepth(depth));
         }
     }
 
@@ -616,8 +826,8 @@ impl MatMulServer {
     /// deterministically.
     pub fn set_sched_policy(&mut self, kind: PolicyKind) {
         self.sched_policy = kind;
-        for s in &self.shards {
-            let _ = s.events.send(Event::SetPolicy(kind));
+        for s in self.shards.iter() {
+            let _ = s.read().events.send(Event::SetPolicy(kind));
         }
     }
 
@@ -626,8 +836,9 @@ impl MatMulServer {
     /// diluted by earlier batches run at other depths.
     pub fn last_batch_occupancy(&self) -> (f64, usize) {
         let mut w = WindowOcc::default();
-        for s in &self.shards {
-            w.absorb(&s.shared.last_window.lock().unwrap());
+        for s in self.shards.iter() {
+            let g = s.read();
+            w.absorb(&g.shared.last_window.lock().unwrap());
         }
         (w.mean(), w.max())
     }
@@ -635,8 +846,8 @@ impl MatMulServer {
     /// Start a new occupancy-attribution epoch on every shard (used by
     /// the batch-replay wrappers in [`crate::coordinator::compat`]).
     pub(crate) fn reset_epoch(&self) {
-        for s in &self.shards {
-            let _ = s.events.send(Event::ResetEpoch);
+        for s in self.shards.iter() {
+            let _ = s.read().events.send(Event::ResetEpoch);
         }
     }
 
@@ -687,10 +898,10 @@ impl MatMulServer {
     /// inside [`plan_route`] without touching the router counters).
     fn route(&self, req: &MatMulRequest) -> Route {
         let nm = match req.precision {
-            Precision::Int8 => self.shards[0].info_int8.native.0,
-            _ => self.shards[0].info_f32.native.0,
+            Precision::Int8 => self.shards[0].read().info_int8.native.0,
+            _ => self.shards[0].read().info_f32.native.0,
         } as usize;
-        plan_route(&self.shards, req, nm, self.split_tiles, self.affinity, &self.router)
+        plan_route(&self.shards[..], req, nm, self.split_tiles, self.affinity, &self.router)
     }
 
     /// Submit every band of an M-split request to its shard, wiring the
@@ -713,13 +924,29 @@ impl MatMulServer {
             let sub_ops = band_operands(&ops, band, k);
             let sub_req = band_request(&req, band);
             let result = match &self.failover {
-                Some(plane) => self.shards[band.shard].check_admission(&sub_req).and_then(|()| {
-                    plane
-                        .dispatch(band.shard, sub_req, sub_ops, policy, true, band_reply(&acc, j))
-                        .map(|(s, token)| (self.shards[s].events.clone(), token))
-                }),
+                Some(plane) => {
+                    // The admission check is non-blocking (shed/SLO
+                    // gates); the guard drops before the dispatch so no
+                    // slot lock is held across a blocking admission.
+                    let checked = self.shards[band.shard].read().check_admission(&sub_req);
+                    checked.and_then(|()| {
+                        plane
+                            .dispatch(
+                                band.shard,
+                                sub_req,
+                                sub_ops,
+                                policy,
+                                true,
+                                band_reply(&acc, j),
+                            )
+                            .map(|(s, token)| (self.shards[s].read().events.clone(), token))
+                    })
+                }
                 None => {
-                    let shard = &self.shards[band.shard];
+                    // Without failover there is no supervisor and the
+                    // slot is never write-locked — holding the read
+                    // guard across a blocking admission is free.
+                    let shard = self.shards[band.shard].read();
                     shard
                         .submit(sub_req, sub_ops, policy, band_reply(&acc, j))
                         .map(|token| (shard.events.clone(), token))
@@ -765,13 +992,13 @@ impl MatMulServer {
         let routes = match self.route(&req) {
             Route::Whole(s) => match &self.failover {
                 Some(plane) => {
-                    self.shards[s].check_admission(&req)?;
+                    self.shards[s].read().check_admission(&req)?;
                     let (at, token) =
                         plane.dispatch(s, req, ops, policy, false, Reply::Handle(tx))?;
-                    vec![(self.shards[at].events.clone(), token)]
+                    vec![(self.shards[at].read().events.clone(), token)]
                 }
                 None => {
-                    let shard = &self.shards[s];
+                    let shard = self.shards[s].read();
                     let token = shard.submit(req, ops, policy, Reply::Handle(tx))?;
                     vec![(shard.events.clone(), token)]
                 }
@@ -795,11 +1022,11 @@ impl MatMulServer {
         match self.route(&req) {
             Route::Whole(s) => match &self.failover {
                 Some(plane) => {
-                    self.shards[s].check_admission(&req)?;
+                    self.shards[s].read().check_admission(&req)?;
                     plane.dispatch(s, req, ops, self.policy, false, reply)?;
                 }
                 None => {
-                    self.shards[s].submit(req, ops, self.policy, reply)?;
+                    self.shards[s].read().submit(req, ops, self.policy, reply)?;
                 }
             },
             Route::Split(bands) => {
@@ -812,12 +1039,14 @@ impl MatMulServer {
     /// Snapshot serving statistics: rolled-up totals plus the per-shard
     /// breakdown.
     pub fn stats(&self) -> ServerStats {
-        let shards: Vec<ShardStats> = self.shards.iter().map(Shard::stats).collect();
+        let mut shards: Vec<ShardStats> =
+            self.shards.iter().map(|s| s.read().stats()).collect();
         let mut agg = StatsAgg::default();
         let mut window = WindowOcc::default();
-        for s in &self.shards {
-            agg.absorb(&s.shared.stats.lock().unwrap());
-            window.absorb(&s.shared.window.lock().unwrap());
+        for s in self.shards.iter() {
+            let g = s.read();
+            agg.absorb(&g.shared.stats.lock().unwrap());
+            window.absorb(&g.shared.window.lock().unwrap());
         }
         let mut mem = MemPlaneStats::default();
         let mut pack = PackStats::default();
@@ -829,10 +1058,28 @@ impl MatMulServer {
             faults.absorb(&st.faults);
             shed.absorb(&st.shed);
         }
+        // The memory-plane integrity counters live in the shards; the
+        // respawn/breaker counters live in the failover plane. The
+        // recovery block unifies both views.
+        let mut recovery = RecoveryStats {
+            rewarmed_entries: mem.rewarmed_entries,
+            cache_verifications: mem.cache_verifications,
+            poisoned_evictions: mem.poisoned_evictions,
+            ..RecoveryStats::default()
+        };
         let breaker_states = match &self.failover {
             Some(plane) => {
                 shed.absorb(&plane.snapshot());
-                plane.states()
+                recovery.respawns = plane.respawns.load(Ordering::Relaxed);
+                recovery.respawn_failures = plane.respawn_failures.load(Ordering::Relaxed);
+                recovery.breaker_trips = plane.trips.load(Ordering::Relaxed);
+                recovery.breaker_probes = plane.probes.load(Ordering::Relaxed);
+                recovery.breaker_recoveries = plane.recoveries.load(Ordering::Relaxed);
+                let snaps = plane.snapshot_breakers();
+                for (st, snap) in shards.iter_mut().zip(&snaps) {
+                    st.breaker = Some(*snap);
+                }
+                snaps.iter().map(|b| b.state.as_str()).collect()
             }
             None => Vec::new(),
         };
@@ -857,23 +1104,37 @@ impl MatMulServer {
             worker_health: shards.iter().flat_map(|s| s.worker_health.clone()).collect(),
             shed,
             breaker_states,
+            recovery,
             shards,
             router: self.router.snapshot(),
         }
     }
 
     fn stop(&mut self) {
+        // Stop the recovery plane FIRST: a shard replaced after its
+        // drain stamp would never be drained or joined. Raising the
+        // flag interrupts a supervisor mid-backoff; detaching the
+        // notification channel wakes one blocked in receive. Joining
+        // the supervisor before any drain guarantees the shard table is
+        // frozen for the rest of shutdown.
+        self.shutting_down.store(true, Ordering::SeqCst);
+        if let Some(plane) = &self.failover {
+            plane.detach_respawn();
+        }
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
         // One absolute deadline stamped up front and fanned out before
         // any join: every shard drains concurrently against the same
         // instant, so total shutdown wall time is bounded by the
         // slowest shard — not the sum — even when one shard's workers
         // are hung and it must run its budget to the end.
         let by = self.drain_deadline.map(|d| Instant::now() + d);
-        for s in &self.shards {
-            s.drain(by);
+        for s in self.shards.iter() {
+            s.read().drain(by);
         }
-        for s in &mut self.shards {
-            s.join();
+        for s in self.shards.iter() {
+            s.write().join();
         }
     }
 
@@ -904,18 +1165,40 @@ impl MatMulServer {
     /// Kills the schedulers — the server serves nothing afterwards.
     #[doc(hidden)]
     pub fn inject_scheduler_panic(&self) {
-        for s in &self.shards {
-            let _ = s.events.send(Event::ChaosPanic);
+        for s in self.shards.iter() {
+            let g = s.read();
+            if g.events.send(Event::ChaosPanic).is_ok() {
+                g.count_injected(FaultKind::ShardCrash);
+            }
         }
     }
 
     /// Chaos-test hook: panic a single shard's scheduler thread —
-    /// shard-granular chaos for the failover tests. Out-of-range
-    /// indices are a no-op.
+    /// shard-granular chaos for the failover and respawn tests (counts
+    /// one injected [`FaultKind::ShardCrash`]). Out-of-range indices
+    /// are a no-op.
     #[doc(hidden)]
     pub fn inject_scheduler_panic_on(&self, shard: usize) {
         if let Some(s) = self.shards.get(shard) {
-            let _ = s.events.send(Event::ChaosPanic);
+            let g = s.read();
+            if g.events.send(Event::ChaosPanic).is_ok() {
+                g.count_injected(FaultKind::ShardCrash);
+            }
+        }
+    }
+
+    /// Chaos-test hook: flip one bit in the coldest packed-weight cache
+    /// entry on `shard` (counts one injected
+    /// [`FaultKind::CacheCorrupt`] when an entry existed to corrupt).
+    /// With `ServeConfig::cache_verify_interval` set, the sampled
+    /// verify-on-hit detects the mismatch, quarantines the entry and
+    /// transparently re-packs — see `ServerStats::recovery`. Only the
+    /// at-rest pool is corrupted; tiles already referencing it keep the
+    /// clean bytes.
+    #[doc(hidden)]
+    pub fn inject_cache_corrupt_on(&self, shard: usize) {
+        if let Some(s) = self.shards.get(shard) {
+            let _ = s.read().events.send(Event::ChaosCorruptCache);
         }
     }
 }

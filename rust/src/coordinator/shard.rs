@@ -55,10 +55,12 @@ use crate::coordinator::admission::{Admitted, Gate};
 use crate::coordinator::device::{
     spawn_device_pool_with_faults, PoolHealth, PrecisionInfo, TileDone,
 };
-use crate::coordinator::fault::{FaultCounters, RequestShed, SloUnattainable};
+use crate::coordinator::fault::{FaultCounters, FaultKind, RequestShed, SloUnattainable};
 use crate::coordinator::handle::Reply;
 use crate::coordinator::policy::{PolicyParams, TileCosts};
-use crate::coordinator::pool::{BufferPool, PackCounters, WeightCache, WeightCacheCounters};
+use crate::coordinator::pool::{
+    BufferPool, PackCounters, RewarmEntry, WeightCache, WeightCacheCounters,
+};
 use crate::coordinator::scheduler::{Event, Robustness, Scheduler, Shared};
 use crate::coordinator::stats::{
     FaultStats, MemPlaneStats, PackStats, RouterStats, ShardStats, ShedCounters, StatsAgg,
@@ -69,7 +71,7 @@ use crate::coordinator::workpool::WorkPool;
 use crate::workloads::{MatMulRequest, MatOutput, Operands};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -113,6 +115,11 @@ pub(crate) struct Shard {
     /// `Arc` so a detached [`ShardClient`] can mint from the same
     /// sequence.
     next_token: Arc<AtomicU64>,
+    /// Rescue slot shared with the scheduler thread: on a scheduler
+    /// panic it exports its hottest weight-cache entries here (see
+    /// `ServeConfig::respawn_rewarm_top_k`) for the respawn supervisor
+    /// to seed into the replacement shard.
+    rescue: Arc<Mutex<Option<Vec<RewarmEntry>>>>,
 }
 
 impl Shard {
@@ -176,8 +183,9 @@ impl Shard {
         );
         let params = PolicyParams::from_config(cfg, costs);
         let cache_counters = Arc::new(WeightCacheCounters::default());
-        let weight_cache =
+        let mut weight_cache =
             WeightCache::new(cfg.weight_cache_bytes, Arc::clone(&cache_counters));
+        weight_cache.configure_integrity(cfg.cache_verify_interval, cfg.cache_quarantine_ms);
         let pack_counters = Arc::new(PackCounters::default());
         let bufs = device.buffer_pool();
         // Resolve the per-tile deadline once per precision: multiplier ×
@@ -206,6 +214,7 @@ impl Shard {
         let work_pool = (cfg.pack_persistent && cfg.pack_workers > 1)
             .then(|| WorkPool::new(cfg.pack_workers - 1, index));
         let shed = Arc::new(ShedCounters::default());
+        let rescue: Arc<Mutex<Option<Vec<RewarmEntry>>>> = Arc::new(Mutex::new(None));
         let sched = Scheduler::new(
             index,
             Arc::clone(&shed),
@@ -222,6 +231,8 @@ impl Shard {
             work_pool,
             Arc::clone(&pack_counters),
             robust,
+            Arc::clone(&rescue),
+            cfg.respawn_rewarm_top_k,
         );
         let sched = std::thread::Builder::new()
             .name(format!("maxeva-sched-{index}"))
@@ -253,6 +264,7 @@ impl Shard {
             queue_depth: cfg.queue_depth,
             classes: cfg.class_weights.len().max(1),
             next_token: Arc::new(AtomicU64::new(0)),
+            rescue,
         })
     }
 
@@ -375,6 +387,34 @@ impl Shard {
         }
     }
 
+    /// Whether this shard's scheduler thread has exited (panicked or
+    /// otherwise). The respawn supervisor's liveness probe: a breaker
+    /// trip on a shard whose scheduler is still running (e.g. a drain
+    /// deadline expiry) needs no respawn.
+    pub(crate) fn sched_dead(&self) -> bool {
+        self.sched.as_ref().map(|j| j.is_finished()).unwrap_or(true)
+    }
+
+    /// Take the dead scheduler's rescue export, if it left one (set on
+    /// the panic path when `respawn_rewarm_top_k > 0`).
+    pub(crate) fn take_rescue(&self) -> Option<Vec<RewarmEntry>> {
+        self.rescue.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take()
+    }
+
+    /// Seed this (freshly started) shard's weight cache with entries
+    /// rescued from its predecessor — each keeps its pre-crash CRC
+    /// stamp and fully verifies on first hit.
+    pub(crate) fn rewarm(&self, entries: Vec<RewarmEntry>) {
+        let _ = self.events.send(Event::Rewarm(entries));
+    }
+
+    /// Charge one injected fault to this shard's fault counters (the
+    /// facade-level chaos hooks — `ShardCrash` — count here; device
+    /// and cache injections count at their injection sites).
+    pub(crate) fn count_injected(&self, kind: FaultKind) {
+        self.fault_counters.count_injected(kind);
+    }
+
     /// Snapshot this shard's serving statistics.
     pub(crate) fn stats(&self) -> ShardStats {
         let stats = self.shared.stats.lock().unwrap();
@@ -385,6 +425,9 @@ impl Shard {
             weight_cache_evictions: self.cache_counters.evictions.load(Ordering::Relaxed),
             weight_cache_bytes: self.cache_counters.bytes.load(Ordering::Relaxed),
             weight_cache_entries: self.cache_counters.entries.load(Ordering::Relaxed),
+            cache_verifications: self.cache_counters.verifications.load(Ordering::Relaxed),
+            poisoned_evictions: self.cache_counters.poisoned_evictions.load(Ordering::Relaxed),
+            rewarmed_entries: self.cache_counters.rewarmed.load(Ordering::Relaxed),
             tile_buffers_recycled: self.bufs.recycled(),
             tile_buffers_allocated: self.bufs.allocated(),
             tile_buffers_free: self.bufs.free(),
@@ -409,6 +452,8 @@ impl Shard {
             worker_deaths: fc.worker_deaths.load(Ordering::Relaxed),
             respawns: fc.respawns.load(Ordering::Relaxed),
             quarantined: fc.quarantined.load(Ordering::Relaxed),
+            injected_cache_corruptions: fc.injected_cache_corruptions.load(Ordering::Relaxed),
+            injected_shard_crashes: fc.injected_shard_crashes.load(Ordering::Relaxed),
         };
         ShardStats {
             shard: self.index,
@@ -430,7 +475,46 @@ impl Shard {
             faults,
             shed: self.shed.snapshot(),
             worker_health: self.health.snapshot(),
+            // The facade fills this in when a failover plane exists;
+            // a bare shard has no breaker.
+            breaker: None,
         }
+    }
+}
+
+/// One slot of the facade's shard table: a [`Shard`] behind an
+/// `RwLock` so the respawn supervisor can swap in a replacement engine
+/// while request threads keep routing. Reads (routing, submission,
+/// stats) are short and shared; the only writer is the supervisor's
+/// atomic [`ShardSlot::replace`] swap, so the lock is uncontended in
+/// steady state — and with `shard_respawn` off it is never written at
+/// all.
+pub(crate) struct ShardSlot {
+    inner: RwLock<Shard>,
+}
+
+impl ShardSlot {
+    pub(crate) fn new(shard: Shard) -> Self {
+        ShardSlot { inner: RwLock::new(shard) }
+    }
+
+    /// Shared read access to the resident shard. Poison is ignored: a
+    /// panic under a read guard cannot leave the `Shard` handle in a
+    /// torn state (all its fields are internally synchronized), and
+    /// serving must outlive any one panicking thread.
+    pub(crate) fn read(&self) -> RwLockReadGuard<'_, Shard> {
+        self.inner.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Exclusive access (shutdown joins the engine threads in place).
+    pub(crate) fn write(&self) -> RwLockWriteGuard<'_, Shard> {
+        self.inner.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Atomically swap in a replacement engine, returning the old one
+    /// so the caller can tear it down outside the lock.
+    pub(crate) fn replace(&self, fresh: Shard) -> Shard {
+        std::mem::replace(&mut *self.write(), fresh)
     }
 }
 
@@ -605,7 +689,7 @@ pub(crate) fn plan_bands(m: usize, nm: usize, shards: usize) -> Vec<Band> {
 /// Decide where one validated request runs. `nm` is the native M-tile
 /// height of the request's precision.
 pub(crate) fn plan_route(
-    shards: &[Shard],
+    shards: &[ShardSlot],
     req: &MatMulRequest,
     nm: usize,
     split_tiles: usize,
@@ -636,7 +720,7 @@ pub(crate) fn plan_route(
     let shard = shards
         .iter()
         .enumerate()
-        .min_by_key(|(i, s)| (s.in_flight(), *i))
+        .min_by_key(|(i, s)| (s.read().in_flight(), *i))
         .map(|(i, _)| i)
         .unwrap_or(0);
     Route::Whole(shard)

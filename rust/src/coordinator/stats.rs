@@ -75,6 +75,17 @@ pub struct MemPlaneStats {
     /// Buffers currently parked in the free-lists (gauge, bounded by
     /// [`crate::coordinator::pool::FREE_LIST_CAP`] per precision).
     pub tile_buffers_free: usize,
+    /// Cache hits whose pool was CRC-verified against the checksum
+    /// stamped at insert (sampled every
+    /// `ServeConfig::cache_verify_interval` hits, plus the first hit on
+    /// every rewarmed entry).
+    pub cache_verifications: u64,
+    /// Cached pools evicted because verification caught a CRC mismatch
+    /// (the entry is quarantined and the request re-packs from source).
+    pub poisoned_evictions: u64,
+    /// Entries rescued from a dead shard's cache and re-inserted into
+    /// its respawned successor's cache.
+    pub rewarmed_entries: u64,
 }
 
 impl MemPlaneStats {
@@ -90,6 +101,9 @@ impl MemPlaneStats {
         self.tile_buffers_recycled += other.tile_buffers_recycled;
         self.tile_buffers_allocated += other.tile_buffers_allocated;
         self.tile_buffers_free += other.tile_buffers_free;
+        self.cache_verifications += other.cache_verifications;
+        self.poisoned_evictions += other.poisoned_evictions;
+        self.rewarmed_entries += other.rewarmed_entries;
     }
 }
 
@@ -153,6 +167,12 @@ pub struct FaultStats {
     pub injected_delays: u64,
     pub injected_hangs: u64,
     pub injected_corruptions: u64,
+    /// Cached packed-weight pools corrupted by the chaos layer
+    /// (`FaultKind::CacheCorrupt`, injected at the scheduler).
+    pub injected_cache_corruptions: u64,
+    /// Scheduler threads killed by the chaos layer
+    /// (`FaultKind::ShardCrash`, injected at the facade).
+    pub injected_shard_crashes: u64,
     /// Tiles whose deadline expired before a completion arrived.
     pub timeouts: u64,
     /// Tiles re-dispatched after an error, timeout or checksum failure.
@@ -178,6 +198,8 @@ impl FaultStats {
         self.injected_delays += other.injected_delays;
         self.injected_hangs += other.injected_hangs;
         self.injected_corruptions += other.injected_corruptions;
+        self.injected_cache_corruptions += other.injected_cache_corruptions;
+        self.injected_shard_crashes += other.injected_shard_crashes;
         self.timeouts += other.timeouts;
         self.retries += other.retries;
         self.retries_exhausted += other.retries_exhausted;
@@ -194,6 +216,8 @@ impl FaultStats {
             + self.injected_delays
             + self.injected_hangs
             + self.injected_corruptions
+            + self.injected_cache_corruptions
+            + self.injected_shard_crashes
     }
 }
 
@@ -270,6 +294,96 @@ impl ShedCounters {
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             ..ShedStats::default()
         }
+    }
+}
+
+/// One circuit breaker's position in the Closed → Open → HalfOpen walk
+/// (failover mode; see `crate::coordinator::server::FailoverPlane`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests route normally.
+    #[default]
+    Closed,
+    /// Tripped after `breaker_threshold` consecutive failures: traffic
+    /// is diverted until the probe interval elapses.
+    Open,
+    /// One probe request has been let through; its outcome closes or
+    /// re-opens the breaker.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// The string form used by `ServerStats::breaker_states`
+    /// (`"closed"` / `"open"` / `"half-open"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+impl std::fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Typed per-shard breaker snapshot, surfaced in
+/// [`ShardStats::breaker`] when the failover plane exists
+/// (`ServeConfig::shard_failover` with `shards > 1`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BreakerSnapshot {
+    pub state: BreakerState,
+    /// Consecutive scheduler-level failures recorded against the shard
+    /// (reset to zero by any success).
+    pub consecutive_failures: u32,
+    /// What the last recorded failure was (`"scheduler_panicked"`,
+    /// `"drain_deadline_expired"`, `"dispatch_failed"`), `None` if the
+    /// shard has never failed.
+    pub last_failure: Option<&'static str>,
+}
+
+/// Recovery-plane counters (PR 10): shard respawns driven by the
+/// supervisor, cache rewarm volume, and memory-plane integrity
+/// verification outcomes, plus a mirror of the breaker transition
+/// counters so the whole recovery story reads from one block. All
+/// lifetime counters; all zero with the recovery knobs at their
+/// defaults (`shard_respawn` off, `cache_verify_interval = 0`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Shards rebuilt in place by the respawn supervisor.
+    pub respawns: u64,
+    /// Respawn attempts that failed, plus shards degraded to permanent
+    /// removal after exhausting `respawn_max_attempts`.
+    pub respawn_failures: u64,
+    /// Cache entries rescued from dead shards into their successors.
+    pub rewarmed_entries: u64,
+    /// Cache hits whose pool was CRC-verified against its insert stamp.
+    pub cache_verifications: u64,
+    /// Poisoned cache entries caught by verification and quarantined.
+    pub poisoned_evictions: u64,
+    /// Circuit breakers tripped closed → open.
+    pub breaker_trips: u64,
+    /// Half-open probe requests let through an open breaker.
+    pub breaker_probes: u64,
+    /// Breakers recovered half-open → closed (shard rejoined).
+    pub breaker_recoveries: u64,
+}
+
+impl RecoveryStats {
+    /// Fold another snapshot into this roll-up (every field is a
+    /// lifetime counter, so they all sum).
+    pub fn absorb(&mut self, other: &RecoveryStats) {
+        self.respawns += other.respawns;
+        self.respawn_failures += other.respawn_failures;
+        self.rewarmed_entries += other.rewarmed_entries;
+        self.cache_verifications += other.cache_verifications;
+        self.poisoned_evictions += other.poisoned_evictions;
+        self.breaker_trips += other.breaker_trips;
+        self.breaker_probes += other.breaker_probes;
+        self.breaker_recoveries += other.breaker_recoveries;
     }
 }
 
@@ -556,6 +670,9 @@ pub struct ShardStats {
     /// expiries). The failover/breaker fields stay zero here — they are
     /// router-side and only appear in the server-wide roll-up.
     pub shed: ShedStats,
+    /// This shard's circuit breaker, typed (`None` without a failover
+    /// plane — `shard_failover` off or a single shard).
+    pub breaker: Option<BreakerSnapshot>,
     /// This shard's device workers (indices are shard-local).
     pub worker_health: Vec<WorkerHealth>,
 }
@@ -790,6 +907,59 @@ mod tests {
         assert_eq!(w.samples(), 2);
         assert_eq!(w.max(), 6);
         assert!((w.mean() - 4.0).abs() < 1e-12);
+
+        let mut r = RecoveryStats { respawns: 1, cache_verifications: 10, ..Default::default() };
+        r.absorb(&RecoveryStats {
+            respawns: 2,
+            respawn_failures: 1,
+            rewarmed_entries: 4,
+            cache_verifications: 5,
+            poisoned_evictions: 1,
+            breaker_trips: 3,
+            breaker_probes: 2,
+            breaker_recoveries: 1,
+        });
+        assert_eq!(r.respawns, 3);
+        assert_eq!(r.respawn_failures, 1);
+        assert_eq!(r.rewarmed_entries, 4);
+        assert_eq!(r.cache_verifications, 15);
+        assert_eq!(r.poisoned_evictions, 1);
+        assert_eq!(r.breaker_trips, 3);
+        assert_eq!(r.breaker_probes, 2);
+        assert_eq!(r.breaker_recoveries, 1);
+        assert_eq!(RecoveryStats::default(), RecoveryStats::default());
+
+        // The integrity counters ride the memory-plane roll-up too.
+        let mut m = MemPlaneStats {
+            cache_verifications: 2,
+            poisoned_evictions: 1,
+            rewarmed_entries: 3,
+            ..Default::default()
+        };
+        m.absorb(&MemPlaneStats {
+            cache_verifications: 5,
+            poisoned_evictions: 2,
+            rewarmed_entries: 1,
+            ..Default::default()
+        });
+        assert_eq!(m.cache_verifications, 7);
+        assert_eq!(m.poisoned_evictions, 3);
+        assert_eq!(m.rewarmed_entries, 4);
+    }
+
+    #[test]
+    fn breaker_state_strings_match_server_stats_vocabulary() {
+        // `ServerStats::breaker_states` derives its strings from the
+        // typed enum; these exact values are pinned by the failover
+        // tests ("closed"/"open"/"half-open").
+        assert_eq!(BreakerState::Closed.as_str(), "closed");
+        assert_eq!(BreakerState::Open.as_str(), "open");
+        assert_eq!(BreakerState::HalfOpen.as_str(), "half-open");
+        assert_eq!(BreakerState::default(), BreakerState::Closed);
+        let snap = BreakerSnapshot::default();
+        assert_eq!(snap.state, BreakerState::Closed);
+        assert_eq!(snap.consecutive_failures, 0);
+        assert_eq!(snap.last_failure, None);
     }
 
     #[test]

@@ -100,8 +100,8 @@ pub mod prelude {
         AdmissionPolicy, BackendKind, DesignConfig, PolicyKind, ServeConfig, ServeConfigBuilder,
     };
     pub use crate::coordinator::{
-        Cancelled, MatMulServer, QueueFull, RequestHandle, RouterStats, ServeError, ServerStats,
-        ShardStats, ShedStats,
+        BreakerSnapshot, BreakerState, Cancelled, MatMulServer, QueueFull, RecoveryStats,
+        RequestHandle, RouterStats, ServeError, ServerStats, ShardStats, ShedStats,
     };
     pub use crate::workloads::{MatMulRequest, MatOutput, Operands};
 }

@@ -1,0 +1,522 @@
+//! Chaos and property tests for the self-healing recovery plane
+//! (shard respawn + memory-plane integrity verification).
+//!
+//! The acceptance properties pinned here:
+//!
+//! * **Respawn** — with `shard_respawn` on, killing shard k mid-stream
+//!   ends with shard k *serving again*: the supervisor rebuilds the
+//!   engine, the breaker walks Open → HalfOpen → Closed through the
+//!   normal probe path, the respawn is counted in
+//!   `ServerStats::recovery`, and every output is bit-identical to a
+//!   fault-free oracle.
+//! * **Integrity** — a seeded `CacheCorrupt` injection into the packed
+//!   weight cache is detected by sampled verify-on-hit, the poisoned
+//!   entry is quarantined, and the victim request completes
+//!   transparently via a re-pack from its own operands — a typed
+//!   counter, never a client-visible error, and bit-identical output.
+//! * **Prompt expiry** — the scheduler's sleep is clamped to the
+//!   earliest open request deadline, so expiry latency on an
+//!   otherwise-idle scheduler is wakeup overhead, not an event wait.
+//! * **Defaults** — with every recovery knob at its default the plane
+//!   is invisible: counters zero, no supervisor, bits unchanged.
+//!
+//! An env-gated chaos soak (`MAXEVA_CHAOS_SOAK=1`) drives repeated
+//! crash → respawn → probe cycles plus cache-corruption injections and
+//! can emit a JSON report (`MAXEVA_SOAK_REPORT=<path>`) for CI
+//! artifacts. No test may hang: every wait is bounded.
+
+use maxeva::arch::precision::Precision;
+use maxeva::config::schema::{BackendKind, DesignConfig, ServeConfig};
+use maxeva::coordinator::fault::{DeadlineExceeded, DrainDeadlineExpired, FaultKind, FaultPlan};
+use maxeva::coordinator::stats::BreakerState;
+use maxeva::coordinator::MatMulServer;
+use maxeva::workloads::{materialize_mixed, MatMulRequest, MatOutput, Operands};
+use std::time::{Duration, Instant};
+
+/// Chaos seed, sweepable from CI (`MAXEVA_CHAOS_SEED`).
+fn chaos_seed() -> u64 {
+    std::env::var("MAXEVA_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Tiny design (native 8×16×8) so tile grids are large and cheap on
+/// the scalar reference backend.
+fn small_cfg(workers: usize, pipeline_depth: usize, queue_depth: usize) -> ServeConfig {
+    let mut design = DesignConfig::flagship(Precision::Fp32);
+    (design.x, design.y, design.z) = (2, 4, 2);
+    (design.m, design.k, design.n) = (4, 4, 4);
+    let mut cfg = ServeConfig::new(design);
+    cfg.backend = BackendKind::Reference;
+    cfg.workers = workers;
+    cfg.pipeline_depth = pipeline_depth;
+    cfg.queue_depth = queue_depth;
+    cfg
+}
+
+/// A 3-shard fleet with failover + respawn armed: single-failure
+/// breaker, fast probe, immediate first respawn attempt.
+fn recovery_cfg() -> ServeConfig {
+    let mut cfg = small_cfg(1, 4, 0);
+    cfg.shards = 3;
+    cfg.shard_affinity = false; // least-loaded routes probes onto the idle respawn
+    cfg.shard_split_tiles = 64;
+    cfg.shard_failover = true;
+    cfg.breaker_threshold = 1;
+    cfg.breaker_probe_ms = 30;
+    cfg.shard_respawn = true;
+    cfg.respawn_max_attempts = 3;
+    cfg.respawn_backoff_ms = 20;
+    cfg.respawn_rewarm_top_k = 4;
+    cfg
+}
+
+/// Heavy whole-routed requests so flights stay open for milliseconds —
+/// long enough to be mid-load when the chaos hook kills a shard.
+fn heavy_workload(seed: u64) -> Vec<(MatMulRequest, Operands)> {
+    let reqs: Vec<MatMulRequest> = (0..9)
+        .map(|i| match i % 3 {
+            0 => MatMulRequest::f32(i, 56, 512, 48),
+            1 => MatMulRequest::int8(i, 48, 384, 48),
+            _ => MatMulRequest::f32(i, 40, 448, 56),
+        })
+        .collect();
+    materialize_mixed(&reqs, seed)
+}
+
+/// Fault-free oracle outputs (single default shard — shard count and
+/// recovery cannot change a bit).
+fn oracle(batch: &[(MatMulRequest, Operands)]) -> Vec<MatOutput> {
+    let server = MatMulServer::start(&small_cfg(2, 4, 0)).unwrap();
+    let outs = batch
+        .iter()
+        .map(|(req, ops)| {
+            server
+                .submit(*req, ops.clone())
+                .unwrap()
+                .wait_timeout(Duration::from_secs(60))
+                .expect("oracle request must resolve")
+                .expect("oracle run is fault-free")
+        })
+        .collect();
+    server.shutdown();
+    outs
+}
+
+fn assert_bits(i: usize, got: &MatOutput, want: &MatOutput) {
+    match (got, want) {
+        (MatOutput::F32(g), MatOutput::F32(w)) => {
+            assert_eq!(g.len(), w.len(), "request {i}: f32 length");
+            for (j, (x, y)) in g.iter().zip(w).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "request {i} elem {j}: {x} vs {y} (recovered run must be bit-identical)"
+                );
+            }
+        }
+        (MatOutput::I32(g), MatOutput::I32(w)) => {
+            assert_eq!(g, w, "request {i}: i32 outputs differ");
+        }
+        _ => panic!("request {i}: precision mismatch between runs"),
+    }
+}
+
+/// Wait until `shard` has at least one open request, bounded.
+fn await_open(server: &MatMulServer, shard: usize) {
+    let t0 = Instant::now();
+    while server.stats().shards[shard].open_requests == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "shard {shard} never saw an open request"
+        );
+        std::thread::yield_now();
+    }
+}
+
+/// The shard with the most open requests right now.
+fn busiest_shard(server: &MatMulServer) -> usize {
+    server
+        .stats()
+        .shards
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.open_requests)
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Poll `server.stats()` until `pred` holds, bounded by `budget`.
+fn await_stats(
+    server: &MatMulServer,
+    budget: Duration,
+    what: &str,
+    pred: impl Fn(&maxeva::coordinator::ServerStats) -> bool,
+) {
+    let t0 = Instant::now();
+    loop {
+        if pred(&server.stats()) {
+            return;
+        }
+        assert!(t0.elapsed() < budget, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Drive small probe requests until the victim's breaker closes (the
+/// breaker walk is lazy — piggybacked on routing — so traffic is what
+/// moves it Open → HalfOpen → Closed). Returns the probe outputs
+/// served, for bit-checks against an oracle.
+fn probe_until_closed(server: &MatMulServer, victim: usize, seed: u64) -> Vec<MatOutput> {
+    let t0 = Instant::now();
+    let mut outs = Vec::new();
+    let mut id = 1000u64;
+    loop {
+        // Three concurrent requests force least-loaded routing onto the
+        // (idle) victim even while the other shards are busy.
+        let reqs: Vec<MatMulRequest> =
+            (0..3).map(|j| MatMulRequest::f32(id + j, 40, 448, 56)).collect();
+        id += 3;
+        let handles: Vec<_> = materialize_mixed(&reqs, seed)
+            .into_iter()
+            .map(|(req, ops)| server.submit(req, ops).unwrap())
+            .collect();
+        for h in handles {
+            outs.push(
+                h.wait_timeout(Duration::from_secs(60))
+                    .expect("probe must resolve")
+                    .expect("probes ride the failover plane — they must succeed"),
+            );
+        }
+        if server.stats().breaker_states[victim] == "closed" {
+            return outs;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "the victim's breaker never closed after respawn"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The headline acceptance test: kill shard k mid-stream with respawn
+/// armed. Every in-flight request recovers bit-identical (failover);
+/// the supervisor rebuilds shard k; subsequent traffic probes it and
+/// the breaker closes — shard k is *serving again*, counted in
+/// `ServerStats::recovery`.
+#[test]
+fn killed_shard_respawns_and_serves_again() {
+    let seed = chaos_seed();
+    let batch = heavy_workload(seed);
+    let want = oracle(&batch);
+
+    let server = MatMulServer::start(&recovery_cfg()).unwrap();
+    let handles: Vec<_> = batch
+        .into_iter()
+        .map(|(req, ops)| server.submit(req, ops).unwrap())
+        .collect();
+    let victim = busiest_shard(&server);
+    await_open(&server, victim);
+    server.inject_scheduler_panic_on(victim);
+
+    // Failover keeps the kill invisible to the in-flight requests.
+    for (i, h) in handles.into_iter().enumerate() {
+        let out = h
+            .wait_timeout(Duration::from_secs(60))
+            .expect("every request must resolve under failover")
+            .unwrap_or_else(|e| panic!("request {i}: failover must recover, got {e:#}"));
+        assert_bits(i, &out, &want[i]);
+    }
+
+    // The supervisor notices the dead scheduler and swaps in a fresh
+    // engine (first attempt has zero backoff).
+    await_stats(&server, Duration::from_secs(20), "the respawn to land", |s| {
+        s.recovery.respawns >= 1
+    });
+
+    // Probe traffic walks the breaker closed on the replacement.
+    let probe_want = oracle(&materialize_mixed(
+        &(0..3).map(|j| MatMulRequest::f32(1000 + j, 40, 448, 56)).collect::<Vec<_>>(),
+        seed,
+    ));
+    let outs = probe_until_closed(&server, victim, seed);
+    for (i, out) in outs.iter().take(3).enumerate() {
+        assert_bits(i, out, &probe_want[i]);
+    }
+
+    let stats = server.stats();
+    assert!(stats.recovery.respawns >= 1, "the respawn must be counted");
+    assert_eq!(stats.recovery.respawn_failures, 0);
+    assert!(stats.recovery.breaker_probes >= 1, "the replacement must have been probed");
+    assert!(
+        stats.recovery.breaker_recoveries >= 1,
+        "a successful probe on the replacement closes the breaker"
+    );
+    assert_eq!(stats.breaker_states[victim], "closed");
+    // The ShardCrash injection was charged to the ORIGINAL engine's
+    // counters, which died with it (the documented non-guarantee that a
+    // respawn loses per-shard history) — so after a successful respawn
+    // the summed count may be 0 or 1, never more.
+    assert!(stats.faults.injected_shard_crashes <= 1);
+
+    // The typed per-shard snapshot agrees, and keeps the (sticky)
+    // last-failure attribution.
+    let snap = stats.shards[victim].breaker.expect("failover on: every shard has a breaker");
+    assert_eq!(snap.state, BreakerState::Closed);
+    assert_eq!(snap.consecutive_failures, 0);
+    assert_eq!(snap.last_failure, Some("scheduler_panicked"));
+
+    // The replacement engine actually served: fresh per-shard counters,
+    // some requests on the victim index.
+    assert!(
+        stats.shards[victim].requests >= 1,
+        "shard {victim} must be serving again after respawn"
+    );
+    server.shutdown();
+}
+
+/// Memory-plane integrity: a seeded corruption of an at-rest packed
+/// pool is caught by verify-on-hit, the entry is quarantined, and the
+/// request completes transparently through a re-pack — bit-identical,
+/// no client-visible error, typed counters only.
+#[test]
+fn cache_corruption_detected_quarantined_and_repacked() {
+    let seed = chaos_seed();
+    let mut cfg = small_cfg(2, 4, 0);
+    cfg.weight_cache_bytes = 16 << 20;
+    cfg.cache_verify_interval = 1; // verify every hit
+    cfg.cache_quarantine_ms = 5000;
+    let server = MatMulServer::start(&cfg).unwrap();
+
+    // One weight, reused across requests — the cached-B serving shape.
+    let reqs: Vec<MatMulRequest> =
+        (0..3).map(|i| MatMulRequest::f32(i, 32, 96, 40).with_weight_id(7)).collect();
+    let batch = materialize_mixed(&reqs, seed);
+    let want = oracle(&batch);
+
+    // Request 0 packs and caches the weight.
+    let (req, ops) = &batch[0];
+    let out = server
+        .submit(*req, ops.clone())
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .expect("must resolve")
+        .expect("fault-free");
+    assert_bits(0, &out, &want[0]);
+    await_stats(&server, Duration::from_secs(10), "the weight to be cached", |s| {
+        s.mem.weight_cache_entries >= 1
+    });
+
+    // Flip one bit in the at-rest pool, then hit it: the sampled
+    // verify catches the mismatch, poisons the entry, and the request
+    // re-packs from its own operands — transparently.
+    server.inject_cache_corrupt_on(0);
+    await_stats(&server, Duration::from_secs(10), "the corruption to be injected", |s| {
+        s.faults.injected_cache_corruptions >= 1
+    });
+    let (req, ops) = batch[1];
+    let out = server
+        .submit(req, ops.clone())
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .expect("must resolve")
+        .expect("corruption must be absorbed, never surfaced to the client");
+    assert_bits(1, &out, &want[1]);
+
+    let stats = server.stats();
+    assert!(stats.recovery.cache_verifications >= 1, "verify-on-hit must have run");
+    assert_eq!(stats.recovery.poisoned_evictions, 1, "the poisoned entry must be evicted");
+    assert_eq!(stats.faults.injected_cache_corruptions, 1);
+    assert_eq!(stats.requests, 2, "both requests served");
+
+    // While quarantined the fingerprint is blacklisted: the re-pack was
+    // NOT re-cached, so a third request misses again and still serves
+    // bit-identical.
+    let (req, ops) = batch[2];
+    let out = server
+        .submit(req, ops.clone())
+        .unwrap()
+        .wait_timeout(Duration::from_secs(60))
+        .expect("must resolve")
+        .expect("fault-free");
+    assert_bits(2, &out, &want[2]);
+    let stats = server.stats();
+    assert_eq!(
+        stats.recovery.poisoned_evictions, 1,
+        "quarantine refuses readmission — no second poisoning is possible"
+    );
+    assert!(
+        stats.mem.weight_cache_misses >= 3,
+        "initial pack + post-quarantine re-packs are all misses"
+    );
+    server.shutdown();
+}
+
+/// Satellite regression: deadline expiry is prompt on an otherwise-idle
+/// scheduler. A chaos hang wedges the only window slot (no completions
+/// will ever arrive), so the only thing that can wake the scheduler for
+/// the queued request's deadline is the deadline itself being folded
+/// into its sleep. Without that fold this test times out.
+#[test]
+fn deadline_expiry_is_prompt_when_idle() {
+    let mut cfg = small_cfg(1, 1, 0);
+    let mut plan = FaultPlan::new(chaos_seed(), 1.0, vec![FaultKind::Hang]);
+    plan.max_faults = 1; // wedge exactly the first tile
+    cfg.fault_plan = Some(plan);
+    cfg.drain_deadline_ms = 1000; // shutdown must not hang on the wedge
+    let server = MatMulServer::start(&cfg).unwrap();
+
+    // The wedge: its first tile hangs forever (no tile timeouts armed),
+    // holding the 1-deep window. The scheduler goes fully idle.
+    let (req, ops) = materialize_mixed(&[MatMulRequest::f32(0, 8, 16, 8)], 3)
+        .into_iter()
+        .next()
+        .unwrap();
+    let wedged = server.submit(req, ops).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // let the tile wedge
+
+    // The deadlined request: admitted, zero tiles issuable. Expiry must
+    // fire at ~80 ms — scheduler wakeup overhead, not an event wait.
+    let reqs = [MatMulRequest::f32(1, 8, 16, 8).with_deadline(Duration::from_millis(80))];
+    let (req, ops) = materialize_mixed(&reqs, 4).into_iter().next().unwrap();
+    let t0 = Instant::now();
+    let err = server
+        .submit(req, ops)
+        .unwrap()
+        .wait_timeout(Duration::from_secs(10))
+        .expect("expiry must fire from the deadline fold alone — no event will arrive")
+        .expect_err("the wedged window cannot serve this request inside 80 ms");
+    let waited = t0.elapsed();
+    assert!(
+        err.downcast_ref::<DeadlineExceeded>().is_some(),
+        "want DeadlineExceeded, got: {err:#}"
+    );
+    assert!(waited >= Duration::from_millis(80), "expiry cannot fire early: {waited:?}");
+    assert!(
+        waited < Duration::from_millis(2000),
+        "expiry latency on an idle scheduler must be wakeup overhead, got {waited:?}"
+    );
+
+    // Teardown: the wedged request fails at the drain deadline.
+    let shut = std::thread::spawn(move || server.shutdown());
+    let err = wedged
+        .wait_timeout(Duration::from_secs(10))
+        .expect("the wedged request must fail at the drain deadline, not hang")
+        .expect_err("a wedged request cannot complete");
+    assert!(err.downcast_ref::<DrainDeadlineExpired>().is_some(), "got: {err:#}");
+    shut.join().unwrap();
+}
+
+/// The defaults pin: every recovery knob defaults off, the JSON schema
+/// round-trips them, and a default-config run shows zero recovery
+/// activity — bit-for-bit the pre-recovery server (the bits themselves
+/// are pinned across the robustness suite; here the counters and the
+/// absence of the supervisor).
+#[test]
+fn default_recovery_knobs_are_invisible() {
+    let cfg = small_cfg(2, 4, 0);
+    assert!(!cfg.shard_respawn, "respawn must default off");
+    assert_eq!(cfg.cache_verify_interval, 0, "verification must default off");
+    assert_eq!(cfg.respawn_rewarm_top_k, 0, "rewarm must default off");
+
+    let server = MatMulServer::start(&cfg).unwrap();
+    let batch = materialize_mixed(
+        &[MatMulRequest::f32(0, 32, 64, 32), MatMulRequest::int8(1, 24, 48, 24)],
+        chaos_seed(),
+    );
+    for (req, ops) in batch {
+        server
+            .submit(req, ops)
+            .unwrap()
+            .wait_timeout(Duration::from_secs(60))
+            .expect("must resolve")
+            .expect("fault-free");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.recovery, Default::default(), "default knobs: recovery plane untouched");
+    server.shutdown();
+}
+
+/// Env-gated chaos soak (`MAXEVA_CHAOS_SOAK=1`): repeated
+/// crash → respawn → probe cycles interleaved with cache-corruption
+/// injections, asserting end-state bit-identity each cycle. Cycle count
+/// via `MAXEVA_SOAK_CYCLES` (default 3); an optional JSON report of the
+/// recovery counters lands at `MAXEVA_SOAK_REPORT` for CI artifacts.
+#[test]
+fn chaos_soak_crash_respawn_cycles() {
+    if std::env::var("MAXEVA_CHAOS_SOAK").map(|v| v != "1").unwrap_or(true) {
+        eprintln!("skipping: set MAXEVA_CHAOS_SOAK=1 to run the soak");
+        return;
+    }
+    let cycles: u32 = std::env::var("MAXEVA_SOAK_CYCLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let seed = chaos_seed();
+
+    let mut cfg = recovery_cfg();
+    cfg.weight_cache_bytes = 16 << 20;
+    cfg.cache_verify_interval = 1;
+    cfg.respawn_max_attempts = 2 * cycles.max(1); // every cycle's kill may respawn
+    let server = MatMulServer::start(&cfg).unwrap();
+
+    let batch = heavy_workload(seed);
+    let want = oracle(&batch);
+
+    for cycle in 0..cycles {
+        let handles: Vec<_> = batch
+            .iter()
+            .map(|(req, ops)| server.submit(*req, ops.clone()).unwrap())
+            .collect();
+        let victim = busiest_shard(&server);
+        await_open(&server, victim);
+        server.inject_scheduler_panic_on(victim);
+        if cycle % 2 == 1 {
+            // Interleave at-rest corruption on a surviving shard.
+            server.inject_cache_corrupt_on((victim + 1) % 3);
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h
+                .wait_timeout(Duration::from_secs(60))
+                .expect("soak request must resolve")
+                .unwrap_or_else(|e| panic!("cycle {cycle} request {i}: {e:#}"));
+            assert_bits(i, &out, &want[i]);
+        }
+        let floor = u64::from(cycle) + 1;
+        await_stats(&server, Duration::from_secs(30), "cycle respawn", move |s| {
+            s.recovery.respawns >= floor
+        });
+        probe_until_closed(&server, victim, seed + u64::from(cycle));
+    }
+
+    let stats = server.stats();
+    assert!(stats.recovery.respawns >= u64::from(cycles));
+    if let Ok(path) = std::env::var("MAXEVA_SOAK_REPORT") {
+        let r = &stats.recovery;
+        let json = format!(
+            concat!(
+                "{{\"seed\":{},\"cycles\":{},\"respawns\":{},",
+                "\"respawn_failures\":{},\"rewarmed_entries\":{},",
+                "\"cache_verifications\":{},\"poisoned_evictions\":{},",
+                "\"breaker_trips\":{},\"breaker_probes\":{},",
+                "\"breaker_recoveries\":{},\"injected_shard_crashes\":{},",
+                "\"injected_cache_corruptions\":{},\"bit_identical\":{}}}"
+            ),
+            seed,
+            cycles,
+            r.respawns,
+            r.respawn_failures,
+            r.rewarmed_entries,
+            r.cache_verifications,
+            r.poisoned_evictions,
+            r.breaker_trips,
+            r.breaker_probes,
+            r.breaker_recoveries,
+            stats.faults.injected_shard_crashes,
+            stats.faults.injected_cache_corruptions,
+            // assert_bits would have panicked on any mismatch.
+            true,
+        );
+        std::fs::write(&path, json).expect("soak report must be writable");
+        eprintln!("soak report written to {path}");
+    }
+    server.shutdown();
+}

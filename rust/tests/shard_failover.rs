@@ -182,6 +182,10 @@ fn killed_shard_fails_typed_without_failover() {
     let stats = server.stats();
     assert_eq!(stats.shed, ShedStats::default(), "failover off: no robustness counters");
     assert!(stats.breaker_states.is_empty(), "failover off: no breakers");
+    assert_eq!(
+        stats.faults.injected_shard_crashes, 1,
+        "the chaos kill is a typed, counted injection"
+    );
     server.shutdown();
 }
 
@@ -275,6 +279,61 @@ fn split_band_fails_over_bit_identical() {
     assert!(stats.router.split_requests >= 1, "the request must actually have split");
     assert!(stats.shed.failover_bands >= 1, "the lost band must have re-dispatched");
     server.shutdown();
+}
+
+/// Shutdown racing recovery: `shutdown_with_deadline` lands while the
+/// failover plane is still re-dispatching the victim's flights AND the
+/// respawn supervisor is rebuilding the victim. Required: shutdown
+/// returns promptly (the supervisor is stopped and joined before any
+/// drain, so a respawned shard can never miss the drain stamp), every
+/// handle resolves exactly once — success or a typed error, never a
+/// hang — and the process exits with no leaked engine threads.
+#[test]
+fn shutdown_races_failover_and_respawn_cleanly() {
+    let seed = chaos_seed();
+    let mut cfg = fleet_cfg(true);
+    cfg.shard_respawn = true;
+    cfg.respawn_max_attempts = 3;
+    cfg.respawn_backoff_ms = 0; // respawn immediately: maximize the race window
+    let server = MatMulServer::start(&cfg).unwrap();
+    let handles: Vec<_> = heavy_workload(seed)
+        .into_iter()
+        .map(|(req, ops)| server.submit(req, ops).unwrap())
+        .collect();
+    let victim = busiest_shard(&server);
+    await_open(&server, victim);
+    server.inject_scheduler_panic_on(victim);
+
+    // No settling: shutdown lands while re-dispatch callbacks run on
+    // scheduler threads and the supervisor may be mid-rebuild.
+    let t0 = Instant::now();
+    let shut =
+        std::thread::spawn(move || server.shutdown_with_deadline(Duration::from_secs(20)));
+    for (i, h) in handles.into_iter().enumerate() {
+        // Exactly-once under the race: each handle resolves — with its
+        // output, or a typed error from the kill/drain — never a hang
+        // and never twice (a second resolution would panic the take-once
+        // reply slot).
+        match h
+            .wait_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|| panic!("request {i} must resolve under the shutdown race"))
+        {
+            Ok(_) => {}
+            Err(e) => {
+                let typed = e.downcast_ref::<SchedulerPanicked>().is_some()
+                    || e.downcast_ref::<maxeva::coordinator::fault::DrainDeadlineExpired>()
+                        .is_some()
+                    || e.to_string().contains("shut down");
+                assert!(typed, "request {i}: unexpected failure under the race: {e:#}");
+            }
+        }
+    }
+    shut.join().expect("shutdown must not panic while racing recovery");
+    assert!(
+        t0.elapsed() < Duration::from_secs(40),
+        "shutdown racing respawn must stay bounded, took {:?}",
+        t0.elapsed()
+    );
 }
 
 /// A per-request deadline that expires in flight resolves the handle
